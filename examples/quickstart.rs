@@ -1,0 +1,51 @@
+//! Quickstart: simulate a Montage workflow under each execution model and
+//! compare makespan/utilization — the paper's core experiment in miniature.
+//!
+//!   cargo run --release --example quickstart
+
+use hyperflow_k8s::engine::clustering::ClusteringConfig;
+use hyperflow_k8s::models::{driver, ExecModel};
+use hyperflow_k8s::util::ascii_plot;
+use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
+
+fn main() {
+    // a ~1.3k-task Montage on a 17-node cluster (fast to simulate)
+    let wf = MontageConfig {
+        grid_w: 16,
+        grid_h: 16,
+        diagonals: true,
+        seed: 42,
+    };
+    println!(
+        "workflow: montage {}x{} = {} tasks\n",
+        wf.grid_w,
+        wf.grid_h,
+        MontageConfig::total_tasks_for_grid(wf.grid_w, wf.grid_h, true)
+    );
+
+    for model in [
+        ExecModel::JobBased,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ExecModel::paper_hybrid_pools(),
+    ] {
+        let name = model.name();
+        let res = driver::run(generate(&wf), model, driver::SimConfig::default());
+        println!(
+            "{name:>14}: makespan {:>6.0} s   pods {:>5}   avg parallel tasks {:>5.1}   cpu util {:>4.1}%",
+            res.makespan.as_secs_f64(),
+            res.pods_created,
+            res.avg_running_tasks,
+            res.avg_cpu_utilization * 100.0
+        );
+        println!(
+            "{}",
+            ascii_plot::area_chart(
+                &format!("  {name} – tasks running"),
+                &res.running_series(),
+                90,
+                7
+            )
+        );
+    }
+    println!("(see examples/montage_e2e.rs for the real-compute PJRT run)");
+}

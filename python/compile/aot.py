@@ -1,0 +1,153 @@
+"""AOT export: lower each Montage task type to HLO text for the Rust runtime.
+
+Emits HLO *text* (NOT lowered.compiler_ir().as_hlo_module() protos nor
+``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published `xla` 0.1.6 crate
+links) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Artifacts (for grid g, tile T=128, overlap V=32, N=g*g, E=2g(g-1),
+C=(g-1)*(T-V)+T):
+
+  mproject.hlo.txt     (img[T,T] f32, params[6] f32) -> (proj[T,T], weight[T,T])
+  mdifffit.hlo.txt     (p1[T,V], p2[T,V], w[T,V])    -> (coeffs[3],)
+  mbgmodel_g{g}.hlo.txt(src[E] i32, dst[E] i32, d[E] f32, ew[E] f32) -> (off[N],)
+  mbackground.hlo.txt  (img[T,T], w[T,T], offset[1]) -> (corrected[T,T],)
+  madd_g{g}.hlo.txt    (imgs[N,T,T], ws[N,T,T], oy[N] i32, ox[N] i32)
+                       -> (acc[C,C], wacc[C,C], mosaic[C,C])
+  mshrink_g{g}.hlo.txt (mosaic[C,C]) -> (small[C/4,C/4],)
+
+plus manifest.json describing every artifact's shapes (read by
+rust/src/runtime/manifest.rs).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--grid 4 [--grid 3]]
+"""
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _tupled(fn):
+    """Ensure the lowered function returns a tuple (rust side expects it)."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def build_artifacts(out_dir: str, grids: list[int]) -> dict:
+    T, V = model.TILE, model.OVERLAP
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "tile": T,
+        "overlap": V,
+        "grids": grids,
+        "artifacts": {},
+    }
+
+    def emit(name, fn, specs, outputs):
+        lowered = jax.jit(_tupled(fn)).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "outputs": outputs,
+        }
+        print(f"  {name}: {len(text)} chars")
+
+    # Grid-independent task types
+    emit(
+        "mproject",
+        model.mproject,
+        [spec((T, T)), spec((6,))],
+        [{"shape": [T, T], "dtype": "float32"}] * 2,
+    )
+    emit(
+        "mdifffit",
+        model.mdifffit,
+        [spec((T, V)), spec((T, V)), spec((T, V))],
+        [{"shape": [3], "dtype": "float32"}],
+    )
+    emit(
+        "mbackground",
+        model.mbackground,
+        [spec((T, T)), spec((T, T)), spec((1,))],
+        [{"shape": [T, T], "dtype": "float32"}],
+    )
+
+    # Grid-dependent task types
+    for g in grids:
+        n = g * g
+        e = 2 * g * (g - 1)
+        c = model.canvas_size(g)
+        emit(
+            f"mbgmodel_g{g}",
+            partial(model.mbgmodel, n_images=n),
+            [spec((e,), I32), spec((e,), I32), spec((e,)), spec((e,))],
+            [{"shape": [n], "dtype": "float32"}],
+        )
+        emit(
+            f"madd_g{g}",
+            partial(model.madd, canvas_hw=(c, c)),
+            [spec((n, T, T)), spec((n, T, T)), spec((n,), I32), spec((n,), I32)],
+            [{"shape": [c, c], "dtype": "float32"}] * 3,
+        )
+        emit(
+            f"mshrink_g{g}",
+            model.mshrink,
+            [spec((c, c))],
+            [{"shape": [c // 4, c // 4], "dtype": "float32"}],
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--grid", type=int, action="append", default=None,
+        help="tile-grid sizes to build grid-dependent artifacts for",
+    )
+    args = ap.parse_args()
+    grids = args.grid or [4]
+    print(f"AOT-lowering Montage task types (grids={grids}) -> {args.out_dir}")
+    build_artifacts(args.out_dir, grids)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: weighted coaddition normalize step (mAdd hot loop).
+
+mAdd coadds the background-corrected tiles into the mosaic canvas:
+accumulation happens at L2 via dynamic_update_slice (origins are runtime
+inputs); the per-pixel hot loop — normalizing the accumulated flux by the
+accumulated weight with a zero-weight guard — is this kernel.
+
+TPU mapping: purely element-wise VPU work, tiled over row blocks of the
+(typically larger-than-tile) canvas. interpret=True for CPU PJRT.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 32
+
+
+def _coadd_norm_kernel(acc_ref, wacc_ref, out_ref):
+    acc = acc_ref[...]
+    wacc = wacc_ref[...]
+    safe = jnp.maximum(wacc, 1.0)
+    out_ref[...] = jnp.where(wacc > 0.0, acc / safe, 0.0)
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def coadd_normalize(acc, wacc, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Normalize accumulated flux by accumulated weight.
+
+    acc, wacc: (H, W) float32 accumulators. Returns (H, W) float32 mosaic
+    with pixels of zero weight set to 0.
+    """
+    h, w = acc.shape
+    br = block_rows if h % block_rows == 0 else h
+    grid = (h // br,)
+    return pl.pallas_call(
+        _coadd_norm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(acc.astype(jnp.float32), wacc.astype(jnp.float32))

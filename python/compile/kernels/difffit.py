@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: overlap-difference moment accumulation (mDiffFit hot loop).
+
+Montage's mDiffFit fits a plane a + b*x + c*y to the difference of two
+reprojected images over their overlap region, by least squares. The hot
+loop is a single pass over the overlap pixels accumulating the 9 moments
+of the normal equations:
+
+    n   = sum(w)          sx  = sum(w*x)        sy  = sum(w*y)
+    sxx = sum(w*x*x)      sxy = sum(w*x*y)      syy = sum(w*y*y)
+    sd  = sum(w*d)        sdx = sum(w*d*x)      sdy = sum(w*d*y)
+
+with d = p1 - p2 and w the joint validity mask. The 3x3 solve happens at
+L2 (model.mdifffit) — the kernel is the O(H*W) part.
+
+TPU mapping: a reduction kernel tiled over row blocks; each program
+instance reduces its (BLOCK_ROWS, W) tile to a 9-vector in VMEM scratch
+and accumulates into the (9,) output across sequential grid steps
+(Pallas grids execute sequentially on a TPU core, so the read-modify-write
+accumulation is race-free). interpret=True for CPU PJRT.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 32
+
+
+def _difffit_kernel(p1_ref, p2_ref, w_ref, out_ref, *, block_rows: int):
+    p1 = p1_ref[...]
+    p2 = p2_ref[...]
+    w = w_ref[...]
+    h = block_rows
+    _, wd = p1.shape
+
+    row0 = pl.program_id(0) * block_rows
+    yy = row0 + jax.lax.broadcasted_iota(jnp.float32, (h, wd), 0)
+    xx = jax.lax.broadcasted_iota(jnp.float32, (h, wd), 1)
+
+    d = p1 - p2
+    moments = jnp.stack(
+        [
+            jnp.sum(w),
+            jnp.sum(w * xx),
+            jnp.sum(w * yy),
+            jnp.sum(w * xx * xx),
+            jnp.sum(w * xx * yy),
+            jnp.sum(w * yy * yy),
+            jnp.sum(w * d),
+            jnp.sum(w * d * xx),
+            jnp.sum(w * d * yy),
+        ]
+    )
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += moments
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def difffit_moments(p1, p2, w, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Accumulate the 9 plane-fit moments over an overlap patch.
+
+    p1, p2: (H, W) overlap patches of the two projected images.
+    w: (H, W) joint validity mask (0/1).
+    Returns moments (9,) float32 in the order documented above.
+    """
+    h, wd = p1.shape
+    if h % block_rows != 0:
+        raise ValueError(f"H={h} not divisible by block_rows={block_rows}")
+    grid = (h // block_rows,)
+    return pl.pallas_call(
+        partial(_difffit_kernel, block_rows=block_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, wd), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, wd), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, wd), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((9,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((9,), jnp.float32),
+        interpret=True,
+    )(p1.astype(jnp.float32), p2.astype(jnp.float32), w.astype(jnp.float32))

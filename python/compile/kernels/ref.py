@@ -1,0 +1,92 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks the kernels against
+(assert_allclose). They are deliberately written in the most obvious
+vectorized-numpy style, independent of the kernels' tiling.
+"""
+
+import jax.numpy as jnp
+
+
+def reproject_ref(img, params):
+    """Reference bilinear inverse-warp. Mirrors kernels.reproject."""
+    img = img.astype(jnp.float32)
+    p = params.astype(jnp.float32)
+    h, w = img.shape
+    ii, jj = jnp.meshgrid(
+        jnp.arange(h, dtype=jnp.float32),
+        jnp.arange(w, dtype=jnp.float32),
+        indexing="ij",
+    )
+    xs = p[0] * jj + p[1] * ii + p[4]
+    ys = p[2] * jj + p[3] * ii + p[5]
+    x0 = jnp.floor(xs)
+    y0 = jnp.floor(ys)
+    fx = xs - x0
+    fy = ys - y0
+    x0i = x0.astype(jnp.int32)
+    y0i = y0.astype(jnp.int32)
+    valid = (x0i >= 0) & (x0i + 1 <= w - 1) & (y0i >= 0) & (y0i + 1 <= h - 1)
+    x0c = jnp.clip(x0i, 0, w - 2)
+    y0c = jnp.clip(y0i, 0, h - 2)
+    v00 = img[y0c, x0c]
+    v01 = img[y0c, x0c + 1]
+    v10 = img[y0c + 1, x0c]
+    v11 = img[y0c + 1, x0c + 1]
+    top = v00 * (1.0 - fx) + v01 * fx
+    bot = v10 * (1.0 - fx) + v11 * fx
+    val = top * (1.0 - fy) + bot * fy
+    wgt = valid.astype(jnp.float32)
+    return val * wgt, wgt
+
+
+def difffit_moments_ref(p1, p2, w):
+    """Reference 9-moment accumulation. Mirrors kernels.difffit."""
+    p1 = p1.astype(jnp.float32)
+    p2 = p2.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    h, wd = p1.shape
+    yy, xx = jnp.meshgrid(
+        jnp.arange(h, dtype=jnp.float32),
+        jnp.arange(wd, dtype=jnp.float32),
+        indexing="ij",
+    )
+    d = p1 - p2
+    return jnp.stack(
+        [
+            jnp.sum(w),
+            jnp.sum(w * xx),
+            jnp.sum(w * yy),
+            jnp.sum(w * xx * xx),
+            jnp.sum(w * xx * yy),
+            jnp.sum(w * yy * yy),
+            jnp.sum(w * d),
+            jnp.sum(w * d * xx),
+            jnp.sum(w * d * yy),
+        ]
+    )
+
+
+def coadd_normalize_ref(acc, wacc):
+    """Reference weighted-coadd normalization. Mirrors kernels.coadd."""
+    acc = acc.astype(jnp.float32)
+    wacc = wacc.astype(jnp.float32)
+    return jnp.where(wacc > 0.0, acc / jnp.maximum(wacc, 1.0), 0.0)
+
+
+def plane_fit_ref(p1, p2, w):
+    """End-to-end plane fit a + b*x + c*y to (p1 - p2) by lstsq (oracle for
+    model.mdifffit: moments kernel + 3x3 solve)."""
+    h, wd = p1.shape
+    yy, xx = jnp.meshgrid(
+        jnp.arange(h, dtype=jnp.float32),
+        jnp.arange(wd, dtype=jnp.float32),
+        indexing="ij",
+    )
+    mask = (w.reshape(-1) > 0).astype(jnp.float32)
+    A = jnp.stack([jnp.ones(h * wd), xx.reshape(-1), yy.reshape(-1)], axis=1)
+    d = (p1 - p2).astype(jnp.float32).reshape(-1)
+    Aw = A * mask[:, None]
+    dw = d * mask
+    coeffs, *_ = jnp.linalg.lstsq(Aw, dw, rcond=None)
+    return coeffs

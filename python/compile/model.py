@@ -1,0 +1,225 @@
+"""L2: JAX compute graphs for the Montage task types (build-time only).
+
+Each public function here is the *numeric payload* of one Montage task
+type. They call the L1 Pallas kernels (kernels/*.py) so that everything
+lowers into a single HLO module per task type; `aot.py` exports them as
+HLO text which the Rust runtime (rust/src/runtime) loads and executes via
+PJRT. Python never runs on the request path.
+
+Geometry convention (shared with rust/src/compute/, see manifest.json):
+  * every input tile is TILE x TILE pixels (default 128);
+  * tiles sit on a g x g grid with OVERLAP-pixel overlap between
+    4-neighbours;
+  * the per-image background error is a constant offset per tile
+    (Montage fits planes; we fit the full plane in mDiffFit but correct
+    the constant term — the simplification is documented in DESIGN.md).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.coadd import coadd_normalize
+from compile.kernels.difffit import difffit_moments
+from compile.kernels.reproject import reproject
+
+TILE = 128
+OVERLAP = 32
+
+
+# ---------------------------------------------------------------------------
+# mProject: reproject one raw tile onto the canonical grid.
+# ---------------------------------------------------------------------------
+def mproject(img, params):
+    """(TILE,TILE) raw image + affine params (6,) -> (projected, weight)."""
+    return reproject(img, params)
+
+
+# ---------------------------------------------------------------------------
+# mDiffFit: plane fit to the difference of two projected tiles over their
+# overlap patch. Kernel accumulates moments; 3x3 normal-equation solve here.
+# ---------------------------------------------------------------------------
+def mdifffit(p1, p2, w):
+    """Overlap patches (H,W) -> plane coefficients (a, b, c) as (3,)."""
+    m = difffit_moments(p1, p2, w)
+    n, sx, sy, sxx, sxy, syy, sd, sdx, sdy = (m[i] for i in range(9))
+    # Normal equations for d ~ a + b*x + c*y, Tikhonov-regularized so the
+    # solve stays well-posed for degenerate masks (e.g. all-zero overlap).
+    eps = 1e-6
+    a00, a01, a02 = n + eps, sx, sy
+    a10, a11, a12 = sx, sxx + eps, sxy
+    a20, a21, a22 = sy, sxy, syy + eps
+    det = (
+        a00 * (a11 * a22 - a12 * a21)
+        - a01 * (a10 * a22 - a12 * a20)
+        + a02 * (a10 * a21 - a11 * a20)
+    )
+    det = jnp.where(jnp.abs(det) < 1e-12, 1e-12, det)
+    # 3x3 solve by explicit adjugate (avoids LAPACK custom-calls in HLO).
+    inv = (
+        jnp.array(
+            [
+                [a11 * a22 - a12 * a21, a02 * a21 - a01 * a22, a01 * a12 - a02 * a11],
+                [a12 * a20 - a10 * a22, a00 * a22 - a02 * a20, a02 * a10 - a00 * a12],
+                [a10 * a21 - a11 * a20, a01 * a20 - a00 * a21, a00 * a11 - a01 * a10],
+            ]
+        )
+        / det
+    )
+    rhs = jnp.stack([sd, sdx, sdy])
+    return inv @ rhs
+
+
+# ---------------------------------------------------------------------------
+# mBgModel: global background correction. Solve the graph least-squares
+#   min_x sum_e ew_e * (x[src_e] - x[dst_e] - d_e)^2 + lam * ||x||^2
+# by conjugate gradient with a fixed iteration count (pure HLO: no LAPACK).
+# ---------------------------------------------------------------------------
+def mbgmodel(src, dst, d, ew, *, n_images: int, iters: int | None = None):
+    """Edge list -> per-image offsets (n_images,), mean-free."""
+    lam = jnp.float32(1e-4)
+    iters = iters if iters is not None else 4 * n_images
+
+    def matvec(x):
+        t = ew * (x[src] - x[dst])
+        y = jnp.zeros(n_images, jnp.float32).at[src].add(t).at[dst].add(-t)
+        return y + lam * x
+
+    b = jnp.zeros(n_images, jnp.float32).at[src].add(ew * d).at[dst].add(-ew * d)
+
+    def cg_step(state, _):
+        x, r, p, rs = state
+        Ap = matvec(p)
+        denom = jnp.dot(p, Ap)
+        alpha = rs / jnp.where(jnp.abs(denom) < 1e-20, 1e-20, denom)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        rs_new = jnp.dot(r, r)
+        beta = rs_new / jnp.where(rs < 1e-20, 1e-20, rs)
+        p = r + beta * p
+        return (x, r, p, rs_new), None
+
+    x0 = jnp.zeros(n_images, jnp.float32)
+    state = (x0, b, b, jnp.dot(b, b))
+    (x, _, _, _), _ = jax.lax.scan(cg_step, state, None, length=iters)
+    return x - jnp.mean(x)
+
+
+# ---------------------------------------------------------------------------
+# mBackground: subtract the fitted constant background from one tile.
+# ---------------------------------------------------------------------------
+def mbackground(img, w, offset):
+    """Corrected tile: img - offset wherever the tile has data."""
+    return img - offset[0] * (w > 0.0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mAdd: coadd corrected tiles into the mosaic canvas, then normalize
+# (normalization is the L1 coadd kernel).
+# ---------------------------------------------------------------------------
+def madd(imgs, ws, oy, ox, *, canvas_hw):
+    """Stack (N,TILE,TILE) + weights + per-tile origins -> mosaic triple.
+
+    Returns (flux_acc, weight_acc, normalized_mosaic), each canvas-sized.
+    Origins are runtime inputs (dynamic_update_slice), so one artifact
+    serves any placement of N tiles.
+    """
+    n, th, tw = imgs.shape
+    H, W = canvas_hw
+
+    def body(i, accs):
+        acc, wacc = accs
+        o = (oy[i], ox[i])
+        cur = jax.lax.dynamic_slice(acc, o, (th, tw))
+        curw = jax.lax.dynamic_slice(wacc, o, (th, tw))
+        acc = jax.lax.dynamic_update_slice(acc, cur + imgs[i] * ws[i], o)
+        wacc = jax.lax.dynamic_update_slice(wacc, curw + ws[i], o)
+        return (acc, wacc)
+
+    acc = jnp.zeros((H, W), jnp.float32)
+    wacc = jnp.zeros((H, W), jnp.float32)
+    acc, wacc = jax.lax.fori_loop(0, n, body, (acc, wacc))
+    norm = coadd_normalize(acc, wacc)
+    return acc, wacc, norm
+
+
+# ---------------------------------------------------------------------------
+# mShrink: block-average downsample of the mosaic (for preview/mJPEG).
+# ---------------------------------------------------------------------------
+def mshrink(mosaic, *, factor: int = 4):
+    h, w = mosaic.shape
+    hh, ww = h // factor, w // factor
+    m = mosaic[: hh * factor, : ww * factor]
+    return m.reshape(hh, factor, ww, factor).mean(axis=(1, 3))
+
+
+# ---------------------------------------------------------------------------
+# Grid geometry helpers shared by aot.py, the tests, and (by convention)
+# rust/src/compute/.
+# ---------------------------------------------------------------------------
+def grid_edges(g: int):
+    """4-neighbourhood edges of a g x g tile grid (right + down)."""
+    edges = []
+    for r in range(g):
+        for c in range(g):
+            i = r * g + c
+            if c + 1 < g:
+                edges.append((i, r * g + c + 1))
+            if r + 1 < g:
+                edges.append((i, (r + 1) * g + c))
+    return edges
+
+
+def canvas_size(g: int, tile: int = TILE, overlap: int = OVERLAP):
+    step = tile - overlap
+    return (g - 1) * step + tile
+
+
+def pipeline_reference(raws, params, g: int):
+    """Run mProject -> mDiffFit -> mBgModel -> mBackground -> mAdd in pure
+    JAX over a g x g grid of raw tiles. Returns the normalized mosaic and
+    the recovered offsets. Used by the python tests and mirrored by the
+    Rust e2e example."""
+    n = g * g
+    projs, wgts = [], []
+    for i in range(n):
+        p, w = mproject(raws[i], params[i])
+        projs.append(p)
+        wgts.append(w)
+
+    step = TILE - OVERLAP
+    edges = grid_edges(g)
+    ds = []
+    for (i, j) in edges:
+        ri, ci = divmod(i, g)
+        rj, cj = divmod(j, g)
+        if cj == ci + 1:  # horizontal neighbour: right OVERLAP strip of i
+            p1 = projs[i][:, step:]
+            p2 = projs[j][:, :OVERLAP]
+            w12 = wgts[i][:, step:] * wgts[j][:, :OVERLAP]
+        else:  # vertical neighbour: bottom strip of i vs top of j, transposed
+            p1 = projs[i][step:, :].T
+            p2 = projs[j][:OVERLAP, :].T
+            w12 = (wgts[i][step:, :] * wgts[j][:OVERLAP, :]).T
+        coeffs = mdifffit(p1, p2, w12)
+        ds.append(coeffs[0])  # constant term drives the bg model
+
+    src = jnp.array([e[0] for e in edges], jnp.int32)
+    dst = jnp.array([e[1] for e in edges], jnp.int32)
+    d = jnp.stack(ds)
+    ew = jnp.ones(len(edges), jnp.float32)
+    offsets = mbgmodel(src, dst, d, ew, n_images=n)
+
+    corrected = [
+        mbackground(projs[i], wgts[i], offsets[i : i + 1]) for i in range(n)
+    ]
+    cs = canvas_size(g)
+    oy = jnp.array([divmod(i, g)[0] * step for i in range(n)], jnp.int32)
+    ox = jnp.array([divmod(i, g)[1] * step for i in range(n)], jnp.int32)
+    _, _, norm = madd(
+        jnp.stack(corrected),
+        jnp.stack(wgts),
+        oy,
+        ox,
+        canvas_hw=(cs, cs),
+    )
+    return norm, offsets

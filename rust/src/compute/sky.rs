@@ -1,0 +1,32 @@
+//! The synthetic sky: a deterministic smooth function over global mosaic
+//! coordinates. Matches the function used by the python test-suite
+//! (python/tests/test_model.py::sky) so both sides validate the same
+//! ground truth.
+
+/// Sky surface brightness at global pixel (y, x).
+pub fn sky(y: f64, x: f64) -> f32 {
+    ((x / 37.0).sin() + (y / 29.0).cos() + 0.002 * x + 0.001 * y) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_smooth() {
+        assert_eq!(sky(10.0, 20.0), sky(10.0, 20.0));
+        // smooth: neighbouring pixels differ by < 0.1
+        for y in 0..50 {
+            for x in 0..50 {
+                let d = (sky(y as f64, x as f64 + 1.0) - sky(y as f64, x as f64)).abs();
+                assert!(d < 0.1, "gradient too steep at ({y},{x})");
+            }
+        }
+    }
+
+    #[test]
+    fn known_value_at_origin() {
+        // sin(0) + cos(0) + 0 + 0 = 1
+        assert!((sky(0.0, 0.0) - 1.0).abs() < 1e-6);
+    }
+}

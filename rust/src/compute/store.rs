@@ -1,0 +1,99 @@
+//! Shared data store: the in-memory stand-in for the cluster's shared
+//! filesystem (the paper's setup stages Montage files on a shared volume).
+//! Thread-safe: worker-pod threads read inputs and publish outputs here.
+
+use crate::runtime::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Default)]
+pub struct Store {
+    inner: Mutex<HashMap<String, Arc<Tensor>>>,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Store::default()
+    }
+
+    pub fn put(&self, key: &str, t: Tensor) {
+        self.inner
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), Arc::new(t));
+    }
+
+    /// Fetch a tensor; error mentions the key (missing data = dependency
+    /// bug, the tests rely on the message).
+    pub fn get(&self, key: &str) -> Result<Arc<Tensor>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("store: key '{key}' not present"))
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate resident bytes (for the e2e report).
+    pub fn bytes(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .map(|t| t.data.len() * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_cycle() {
+        let s = Store::new();
+        s.put("a", Tensor::new(vec![1.0, 2.0], &[2]));
+        let t = s.get("a").unwrap();
+        assert_eq!(t.data, vec![1.0, 2.0]);
+        assert!(s.contains("a"));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.bytes(), 8);
+    }
+
+    #[test]
+    fn missing_key_names_it() {
+        let s = Store::new();
+        let e = s.get("proj/3").unwrap_err();
+        assert!(format!("{e}").contains("proj/3"));
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let s = Arc::new(Store::new());
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                s.put(&format!("k{i}"), Tensor::new(vec![i as f32], &[1]));
+                s.get(&format!("k{i}")).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 8);
+    }
+}

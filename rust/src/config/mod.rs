@@ -1,0 +1,318 @@
+//! Experiment configuration: typed, JSON-loadable descriptions of a full
+//! run (workflow + execution model + cluster/sim parameters), so every
+//! experiment in EXPERIMENTS.md is a shippable config file (see
+//! `configs/*.json`).
+
+use crate::engine::clustering::ClusteringConfig;
+use crate::models::{driver::SimConfig, ExecModel};
+use crate::util::json::{Json, JsonError};
+use crate::workflow::dag::Dag;
+use crate::workflow::montage::{generate, MontageConfig};
+use anyhow::{anyhow, Result};
+
+/// Which workflow to run.
+#[derive(Debug, Clone)]
+pub enum WorkflowSpec {
+    /// Montage on a g x g grid.
+    MontageGrid {
+        grid: usize,
+        diagonals: bool,
+        seed: u64,
+    },
+    /// Montage sized to approximately `total` tasks.
+    MontageTotal { total: usize, seed: u64 },
+    /// Load a DAG from a workflow JSON file.
+    File { path: String },
+}
+
+impl WorkflowSpec {
+    pub fn build(&self) -> Result<Dag> {
+        match self {
+            WorkflowSpec::MontageGrid {
+                grid,
+                diagonals,
+                seed,
+            } => Ok(generate(&MontageConfig {
+                grid_w: *grid,
+                grid_h: *grid,
+                diagonals: *diagonals,
+                seed: *seed,
+            })),
+            WorkflowSpec::MontageTotal { total, seed } => {
+                Ok(generate(&MontageConfig::with_total_tasks(*total, *seed)))
+            }
+            WorkflowSpec::File { path } => crate::workflow::wfjson::load(path),
+        }
+    }
+}
+
+/// A complete experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub workflow: WorkflowSpec,
+    pub model: ExecModel,
+    pub sim: SimConfig,
+}
+
+fn parse_workflow(j: &Json) -> Result<WorkflowSpec> {
+    let ty = j.get("type").map_err(je)?.as_str().map_err(je)?;
+    Ok(match ty {
+        "montage" => {
+            if let Some(total) = j.opt("total_tasks") {
+                WorkflowSpec::MontageTotal {
+                    total: total.as_usize().map_err(je)?,
+                    seed: j.opt("seed").map(|s| s.as_u64()).transpose().map_err(je)?.unwrap_or(42),
+                }
+            } else {
+                WorkflowSpec::MontageGrid {
+                    grid: j.get("grid").map_err(je)?.as_usize().map_err(je)?,
+                    diagonals: j
+                        .opt("diagonals")
+                        .map(|d| d.as_bool())
+                        .transpose()
+                        .map_err(je)?
+                        .unwrap_or(true),
+                    seed: j.opt("seed").map(|s| s.as_u64()).transpose().map_err(je)?.unwrap_or(42),
+                }
+            }
+        }
+        "file" => WorkflowSpec::File {
+            path: j.get("path").map_err(je)?.as_str().map_err(je)?.to_string(),
+        },
+        other => return Err(anyhow!("unknown workflow type '{other}'")),
+    })
+}
+
+fn parse_model(j: &Json) -> Result<ExecModel> {
+    let ty = j.get("type").map_err(je)?.as_str().map_err(je)?;
+    Ok(match ty {
+        "job" | "job-based" => ExecModel::JobBased,
+        "clustered" => {
+            let rules = match j.opt("rules") {
+                Some(r) => ClusteringConfig::from_json(r).map_err(je)?,
+                None => ClusteringConfig::paper_default(),
+            };
+            ExecModel::Clustered(rules)
+        }
+        "pools" | "worker-pools" => {
+            let pooled = match j.opt("pooled") {
+                Some(p) => p
+                    .as_arr()
+                    .map_err(je)?
+                    .iter()
+                    .map(|s| s.as_str().map(str::to_string))
+                    .collect::<std::result::Result<Vec<_>, _>>()
+                    .map_err(je)?,
+                None => vec![
+                    "mProject".to_string(),
+                    "mDiffFit".to_string(),
+                    "mBackground".to_string(),
+                ],
+            };
+            ExecModel::WorkerPools {
+                pooled_types: pooled,
+            }
+        }
+        "generic-pool" => ExecModel::GenericPool,
+        other => return Err(anyhow!("unknown model type '{other}'")),
+    })
+}
+
+fn parse_sim(j: Option<&Json>, nodes_default: usize) -> Result<SimConfig> {
+    let mut sim = SimConfig::with_nodes(nodes_default);
+    let Some(j) = j else { return Ok(sim) };
+    let u = |key: &str, d: u64| -> Result<u64> {
+        Ok(j.opt(key).map(|v| v.as_u64()).transpose().map_err(je)?.unwrap_or(d))
+    };
+    if let Some(n) = j.opt("nodes") {
+        sim = SimConfig::with_nodes(n.as_usize().map_err(je)?);
+    }
+    sim.pod_start_ms = u("pod_start_ms", sim.pod_start_ms)?;
+    sim.exec_overhead_ms = u("exec_overhead_ms", sim.exec_overhead_ms)?;
+    sim.job_controller_ms = u("job_controller_ms", sim.job_controller_ms)?;
+    sim.sched.backoff_initial_ms = u("backoff_initial_ms", sim.sched.backoff_initial_ms)?;
+    sim.sched.backoff_max_ms = u("backoff_max_ms", sim.sched.backoff_max_ms)?;
+    sim.autoscale.poll_ms = u("autoscale_poll_ms", sim.autoscale.poll_ms)?;
+    sim.autoscale.stabilization_ms = u("stabilization_ms", sim.autoscale.stabilization_ms)?;
+    sim.autoscale.min_replicas = u("min_replicas", sim.autoscale.min_replicas as u64)? as usize;
+    sim.seed = u("seed", sim.seed)?;
+    if let Some(p) = j.opt("pod_failure_prob") {
+        sim.pod_failure_prob = p.as_f64().map_err(je)?;
+    }
+    if let Some(cap) = j.opt("max_pending_pods") {
+        sim.max_pending_pods = Some(cap.as_usize().map_err(je)?);
+    }
+    if let Some(evs) = j.opt("node_events") {
+        for e in evs.as_arr().map_err(je)? {
+            let a = e.as_arr().map_err(je)?;
+            if a.len() != 3 {
+                return Err(anyhow!("node_events entries are [ms, node, up]"));
+            }
+            sim.node_events.push((
+                a[0].as_u64().map_err(je)?,
+                a[1].as_usize().map_err(je)?,
+                a[2].as_bool().map_err(je)?,
+            ));
+        }
+    }
+    Ok(sim)
+}
+
+fn je(e: JsonError) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+impl ExperimentConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let name = j
+            .opt("name")
+            .map(|n| n.as_str())
+            .transpose()
+            .map_err(je)?
+            .unwrap_or("experiment")
+            .to_string();
+        let workflow = parse_workflow(j.get("workflow").map_err(je)?)?;
+        let model = parse_model(j.get("model").map_err(je)?)?;
+        let sim = parse_sim(j.opt("sim"), 17)?;
+        let cfg = ExperimentConfig {
+            name,
+            workflow,
+            model,
+            sim,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.sim.nodes == 0 {
+            return Err(anyhow!("cluster must have at least one node"));
+        }
+        if !(0.0..=1.0).contains(&self.sim.pod_failure_prob) {
+            return Err(anyhow!("pod_failure_prob must be in [0,1]"));
+        }
+        for &(_, node, _) in &self.sim.node_events {
+            if node >= self.sim.nodes {
+                return Err(anyhow!(
+                    "node event references node {node} but cluster has {}",
+                    self.sim.nodes
+                ));
+            }
+        }
+        if let ExecModel::Clustered(c) = &self.model {
+            for r in &c.rules {
+                if r.size == 0 {
+                    return Err(anyhow!("clustering size must be >= 1"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the workflow and run the experiment.
+    pub fn run(&self) -> Result<crate::report::SimResult> {
+        let dag = self.workflow.build()?;
+        if let ExecModel::WorkerPools { pooled_types } = &self.model {
+            for p in pooled_types {
+                if dag.type_id(p).is_none() {
+                    return Err(anyhow!("pooled type '{p}' not present in workflow"));
+                }
+            }
+        }
+        Ok(crate::models::driver::run(
+            dag,
+            self.model.clone(),
+            self.sim.clone(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let src = r#"{
+            "name": "fig4-repro",
+            "workflow": {"type": "montage", "grid": 5, "seed": 7},
+            "model": {"type": "clustered", "rules": [
+                {"matchTask": ["mProject"], "size": 5, "timeoutMs": 3000}
+            ]},
+            "sim": {"nodes": 4, "pod_start_ms": 1500, "max_pending_pods": 16,
+                    "node_events": [[30000, 1, false]]}
+        }"#;
+        let cfg = ExperimentConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.name, "fig4-repro");
+        assert_eq!(cfg.sim.nodes, 4);
+        assert_eq!(cfg.sim.pod_start_ms, 1500);
+        assert_eq!(cfg.sim.max_pending_pods, Some(16));
+        assert_eq!(cfg.sim.node_events, vec![(30000, 1, false)]);
+        assert!(matches!(cfg.model, ExecModel::Clustered(_)));
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let src = r#"{
+            "workflow": {"type": "montage", "grid": 3},
+            "model": {"type": "pools"}
+        }"#;
+        let cfg = ExperimentConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sim.nodes, 17);
+        if let ExecModel::WorkerPools { pooled_types } = &cfg.model {
+            assert_eq!(pooled_types.len(), 3);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        for bad in [
+            r#"{"workflow": {"type": "unknown"}, "model": {"type": "job"}}"#,
+            r#"{"workflow": {"type": "montage", "grid": 3},
+                "model": {"type": "nope"}}"#,
+            r#"{"workflow": {"type": "montage", "grid": 3},
+                "model": {"type": "job"}, "sim": {"pod_failure_prob": 2.0}}"#,
+            r#"{"workflow": {"type": "montage", "grid": 3},
+                "model": {"type": "job"},
+                "sim": {"nodes": 2, "node_events": [[1000, 5, false]]}}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn config_runs_end_to_end() {
+        let src = r#"{
+            "workflow": {"type": "montage", "grid": 3, "seed": 1},
+            "model": {"type": "job"},
+            "sim": {"nodes": 3}
+        }"#;
+        let cfg = ExperimentConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        let res = cfg.run().unwrap();
+        assert!(res.makespan.as_secs_f64() > 0.0);
+    }
+
+    #[test]
+    fn total_tasks_variant() {
+        let src = r#"{
+            "workflow": {"type": "montage", "total_tasks": 500, "seed": 3},
+            "model": {"type": "generic-pool"}
+        }"#;
+        let cfg = ExperimentConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        let dag = cfg.workflow.build().unwrap();
+        assert!((300..800).contains(&dag.len()), "{}", dag.len());
+    }
+}

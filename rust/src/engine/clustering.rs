@@ -1,0 +1,378 @@
+//! HyperFlow task clustering (agglomeration), §3.5.
+//!
+//! Tasks of matching types are buffered into batches of `size`; if a full
+//! batch does not form within `timeout_ms`, the partial batch is flushed.
+//! Clustering is *horizontal* (§3.2): only same-type tasks cluster, and the
+//! batch executes sequentially in one pod so the pod's resource requests
+//! stay valid.
+//!
+//! The paper's example configuration:
+//! ```json
+//! [{"matchTask": ["mProject"],  "size": 5,  "timeoutMs": 3000},
+//!  {"matchTask": ["mDiffFit"],  "size": 20, "timeoutMs": 3000}]
+//! ```
+
+use crate::sim::SimTime;
+use crate::util::json::{Json, JsonError};
+use crate::workflow::task::TaskId;
+use std::collections::BTreeMap;
+
+/// One clustering rule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterRule {
+    pub match_task: Vec<String>,
+    pub size: usize,
+    pub timeout_ms: u64,
+}
+
+/// The clustering configuration: an ordered rule list; first match wins.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClusteringConfig {
+    pub rules: Vec<ClusterRule>,
+}
+
+impl ClusteringConfig {
+    /// No clustering: every task is its own batch (the plain job model).
+    pub fn none() -> Self {
+        ClusteringConfig::default()
+    }
+
+    /// The configuration shown in the paper (§3.5), extended with the
+    /// mBackground rule the experiments imply (Fig. 4 discusses batched
+    /// mBackground execution).
+    pub fn paper_default() -> Self {
+        ClusteringConfig {
+            rules: vec![
+                ClusterRule {
+                    match_task: vec!["mProject".into()],
+                    size: 5,
+                    timeout_ms: 3000,
+                },
+                ClusterRule {
+                    match_task: vec!["mDiffFit".into()],
+                    size: 20,
+                    timeout_ms: 3000,
+                },
+                ClusterRule {
+                    match_task: vec!["mBackground".into()],
+                    size: 20,
+                    timeout_ms: 3000,
+                },
+            ],
+        }
+    }
+
+    /// Uniform clustering of the three parallel stages (for the Fig. 5
+    /// parameter sweep).
+    pub fn uniform(size: usize, timeout_ms: u64) -> Self {
+        ClusteringConfig {
+            rules: ["mProject", "mDiffFit", "mBackground"]
+                .iter()
+                .map(|t| ClusterRule {
+                    match_task: vec![t.to_string()],
+                    size,
+                    timeout_ms,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn rule_for(&self, type_name: &str) -> Option<&ClusterRule> {
+        self.rules
+            .iter()
+            .find(|r| r.match_task.iter().any(|m| m == type_name))
+    }
+
+    /// Parse the HyperFlow JSON rule format shown in §3.5.
+    pub fn from_json(j: &Json) -> Result<Self, JsonError> {
+        let mut rules = Vec::new();
+        for r in j.as_arr()? {
+            rules.push(ClusterRule {
+                match_task: r
+                    .get("matchTask")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_str().map(str::to_string))
+                    .collect::<Result<_, _>>()?,
+                size: r.get("size")?.as_usize()?,
+                timeout_ms: r.get("timeoutMs")?.as_u64()?,
+            });
+        }
+        Ok(ClusteringConfig { rules })
+    }
+}
+
+/// What the batcher wants done after a push/flush.
+#[derive(Debug, PartialEq)]
+pub enum BatchAction {
+    /// Dispatch this batch now.
+    Flush(Vec<TaskId>),
+    /// Batch incomplete: arm a flush timer for this deadline (only emitted
+    /// when the buffer transitions empty -> non-empty).
+    ArmTimer(SimTime),
+    /// Task buffered; a timer is already armed.
+    Buffered,
+}
+
+/// Per-type batch buffers with deadline bookkeeping.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: ClusteringConfig,
+    buffers: BTreeMap<String, Buffer>,
+    pub batches_emitted: u64,
+    pub partial_flushes: u64,
+}
+
+#[derive(Debug, Default)]
+struct Buffer {
+    tasks: Vec<TaskId>,
+    deadline: Option<SimTime>,
+}
+
+impl Batcher {
+    pub fn new(cfg: ClusteringConfig) -> Self {
+        Batcher {
+            cfg,
+            buffers: BTreeMap::new(),
+            batches_emitted: 0,
+            partial_flushes: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &ClusteringConfig {
+        &self.cfg
+    }
+
+    /// Offer a ready task. Tasks of types without a rule flush immediately
+    /// as singleton batches.
+    pub fn push(&mut self, now: SimTime, type_name: &str, task: TaskId) -> BatchAction {
+        let rule = match self.cfg.rule_for(type_name) {
+            None => {
+                self.batches_emitted += 1;
+                return BatchAction::Flush(vec![task]);
+            }
+            Some(r) => r.clone(),
+        };
+        if rule.size <= 1 {
+            self.batches_emitted += 1;
+            return BatchAction::Flush(vec![task]);
+        }
+        let buf = self.buffers.entry(type_name.to_string()).or_default();
+        buf.tasks.push(task);
+        if buf.tasks.len() >= rule.size {
+            buf.deadline = None;
+            self.batches_emitted += 1;
+            return BatchAction::Flush(std::mem::take(&mut buf.tasks));
+        }
+        if buf.deadline.is_none() {
+            let dl = now + SimTime::from_millis(rule.timeout_ms);
+            buf.deadline = Some(dl);
+            BatchAction::ArmTimer(dl)
+        } else {
+            BatchAction::Buffered
+        }
+    }
+
+    /// Timer fired for `type_name` with deadline `dl`. Returns the partial
+    /// batch if the deadline is still current (it is cleared when a full
+    /// batch flushed in the meantime).
+    pub fn timer_fired(&mut self, type_name: &str, dl: SimTime) -> Option<Vec<TaskId>> {
+        let buf = self.buffers.get_mut(type_name)?;
+        if buf.deadline != Some(dl) || buf.tasks.is_empty() {
+            return None;
+        }
+        buf.deadline = None;
+        self.batches_emitted += 1;
+        self.partial_flushes += 1;
+        Some(std::mem::take(&mut buf.tasks))
+    }
+
+    /// Flush everything (end-of-workflow drain).
+    pub fn drain(&mut self) -> Vec<(String, Vec<TaskId>)> {
+        let mut out = Vec::new();
+        for (name, buf) in self.buffers.iter_mut() {
+            if !buf.tasks.is_empty() {
+                buf.deadline = None;
+                self.batches_emitted += 1;
+                out.push((name.clone(), std::mem::take(&mut buf.tasks)));
+            }
+        }
+        out
+    }
+
+    pub fn buffered(&self, type_name: &str) -> usize {
+        self.buffers.get(type_name).map(|b| b.tasks.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(i: u32) -> TaskId {
+        TaskId(i)
+    }
+
+    #[test]
+    fn paper_config_rules() {
+        let c = ClusteringConfig::paper_default();
+        assert_eq!(c.rule_for("mProject").unwrap().size, 5);
+        assert_eq!(c.rule_for("mDiffFit").unwrap().size, 20);
+        assert!(c.rule_for("mAdd").is_none());
+    }
+
+    #[test]
+    fn json_round_trip_of_paper_listing() {
+        let src = r#"[
+            {"matchTask": ["mProject"], "size": 5, "timeoutMs": 3000},
+            {"matchTask": ["mDiffFit"], "size": 20, "timeoutMs": 3000}
+        ]"#;
+        let cfg = ClusteringConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.rules.len(), 2);
+        assert_eq!(cfg.rule_for("mDiffFit").unwrap().timeout_ms, 3000);
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut b = Batcher::new(ClusteringConfig {
+            rules: vec![ClusterRule {
+                match_task: vec!["X".into()],
+                size: 3,
+                timeout_ms: 1000,
+            }],
+        });
+        assert_eq!(
+            b.push(SimTime(0), "X", t(0)),
+            BatchAction::ArmTimer(SimTime(1000))
+        );
+        assert_eq!(b.push(SimTime(10), "X", t(1)), BatchAction::Buffered);
+        assert_eq!(
+            b.push(SimTime(20), "X", t(2)),
+            BatchAction::Flush(vec![t(0), t(1), t(2)])
+        );
+        assert_eq!(b.buffered("X"), 0);
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_timeout() {
+        let mut b = Batcher::new(ClusteringConfig {
+            rules: vec![ClusterRule {
+                match_task: vec!["X".into()],
+                size: 5,
+                timeout_ms: 3000,
+            }],
+        });
+        let dl = match b.push(SimTime(0), "X", t(0)) {
+            BatchAction::ArmTimer(dl) => dl,
+            o => panic!("{o:?}"),
+        };
+        b.push(SimTime(100), "X", t(1));
+        assert_eq!(b.timer_fired("X", dl), Some(vec![t(0), t(1)]));
+        assert_eq!(b.partial_flushes, 1);
+    }
+
+    #[test]
+    fn stale_timer_ignored_after_full_flush() {
+        let mut b = Batcher::new(ClusteringConfig {
+            rules: vec![ClusterRule {
+                match_task: vec!["X".into()],
+                size: 2,
+                timeout_ms: 3000,
+            }],
+        });
+        let dl = match b.push(SimTime(0), "X", t(0)) {
+            BatchAction::ArmTimer(dl) => dl,
+            o => panic!("{o:?}"),
+        };
+        b.push(SimTime(1), "X", t(1)); // full flush
+        assert_eq!(b.timer_fired("X", dl), None);
+    }
+
+    #[test]
+    fn new_batch_rearms_timer() {
+        let mut b = Batcher::new(ClusteringConfig {
+            rules: vec![ClusterRule {
+                match_task: vec!["X".into()],
+                size: 2,
+                timeout_ms: 1000,
+            }],
+        });
+        b.push(SimTime(0), "X", t(0));
+        b.push(SimTime(5), "X", t(1)); // flush
+        match b.push(SimTime(50), "X", t(2)) {
+            BatchAction::ArmTimer(dl) => assert_eq!(dl, SimTime(1050)),
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn unmatched_type_is_singleton() {
+        let mut b = Batcher::new(ClusteringConfig::paper_default());
+        assert_eq!(
+            b.push(SimTime(0), "mAdd", t(7)),
+            BatchAction::Flush(vec![t(7)])
+        );
+    }
+
+    #[test]
+    fn size_one_rule_is_singleton() {
+        let mut b = Batcher::new(ClusteringConfig::uniform(1, 3000));
+        assert_eq!(
+            b.push(SimTime(0), "mProject", t(1)),
+            BatchAction::Flush(vec![t(1)])
+        );
+    }
+
+    #[test]
+    fn drain_flushes_all_buffers() {
+        let mut b = Batcher::new(ClusteringConfig::paper_default());
+        b.push(SimTime(0), "mProject", t(0));
+        b.push(SimTime(0), "mDiffFit", t(1));
+        let drained = b.drain();
+        assert_eq!(drained.len(), 2);
+        let total: usize = drained.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn no_task_lost_property() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        for _ in 0..30 {
+            let size = 2 + rng.below(10) as usize;
+            let mut b = Batcher::new(ClusteringConfig {
+                rules: vec![ClusterRule {
+                    match_task: vec!["X".into()],
+                    size,
+                    timeout_ms: 500,
+                }],
+            });
+            let n = 1 + rng.below(100);
+            let mut out = 0usize;
+            let mut timers: Vec<SimTime> = Vec::new();
+            for i in 0..n {
+                let now = SimTime(i * 10);
+                // fire due timers first
+                timers.retain(|&dl| {
+                    if dl <= now {
+                        if let Some(batch) = b.timer_fired("X", dl) {
+                            out += batch.len();
+                        }
+                        false
+                    } else {
+                        true
+                    }
+                });
+                match b.push(now, "X", t(i as u32)) {
+                    BatchAction::Flush(v) => out += v.len(),
+                    BatchAction::ArmTimer(dl) => timers.push(dl),
+                    BatchAction::Buffered => {}
+                }
+            }
+            for (_, v) in b.drain() {
+                out += v.len();
+            }
+            assert_eq!(out as u64, n, "tasks lost or duplicated");
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! The HyperFlow workflow engine: signal-counting readiness propagation.
+//!
+//! HyperFlow's model of computation fires a task when all of its input
+//! signals have arrived [Balis 2016]. For DAG workflows this reduces to
+//! predecessor counting: `complete(t)` decrements the remaining-dependency
+//! counter of every successor and returns the tasks that just became ready.
+//! The engine is execution-model agnostic — the driver decides whether a
+//! ready task becomes a Kubernetes Job, joins a clustered batch, or is
+//! published to a worker-pool queue.
+
+pub mod clustering;
+
+use crate::workflow::dag::Dag;
+use crate::workflow::task::TaskId;
+
+#[derive(Debug)]
+pub struct Engine {
+    dag: Dag,
+    remaining: Vec<u32>,
+    state: Vec<TaskState>,
+    n_done: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Dependencies outstanding.
+    Waiting,
+    /// Ready, handed to the execution model.
+    Dispatched,
+    /// Completed.
+    Done,
+}
+
+impl Engine {
+    /// Build the engine; returns it plus the initially-ready tasks.
+    pub fn new(dag: Dag) -> (Self, Vec<TaskId>) {
+        let remaining: Vec<u32> = (0..dag.len())
+            .map(|i| dag.preds_count(TaskId(i as u32)))
+            .collect();
+        let state = vec![TaskState::Waiting; dag.len()];
+        let mut eng = Engine {
+            dag,
+            remaining,
+            state,
+            n_done: 0,
+        };
+        let roots = eng.dag.roots();
+        for &r in &roots {
+            eng.state[r.0 as usize] = TaskState::Dispatched;
+        }
+        (eng, roots)
+    }
+
+    pub fn dag(&self) -> &Dag {
+        &self.dag
+    }
+
+    /// Record completion of `t`; returns newly-ready tasks (marked
+    /// Dispatched). Panics on double-completion — the paper's executor
+    /// protocol guarantees exactly-once completion signals.
+    pub fn complete(&mut self, t: TaskId) -> Vec<TaskId> {
+        let i = t.0 as usize;
+        assert_eq!(
+            self.state[i],
+            TaskState::Dispatched,
+            "task {t:?} completed in state {:?}",
+            self.state[i]
+        );
+        self.state[i] = TaskState::Done;
+        self.n_done += 1;
+        let mut ready = Vec::new();
+        for &s in self.dag.successors(t) {
+            let j = s.0 as usize;
+            debug_assert!(self.remaining[j] > 0);
+            self.remaining[j] -= 1;
+            if self.remaining[j] == 0 {
+                debug_assert_eq!(self.state[j], TaskState::Waiting);
+                self.state[j] = TaskState::Dispatched;
+                ready.push(s);
+            }
+        }
+        ready
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.n_done == self.dag.len()
+    }
+
+    pub fn n_done(&self) -> usize {
+        self.n_done
+    }
+
+    pub fn n_outstanding(&self) -> usize {
+        self.dag.len() - self.n_done
+    }
+
+    pub fn state(&self, t: TaskId) -> TaskState {
+        self.state[t.0 as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::k8s::resources::Resources;
+    use crate::sim::SimTime;
+    use crate::workflow::montage::{generate, MontageConfig};
+    use crate::workflow::task::TaskType;
+
+    fn diamond() -> Dag {
+        // 0 -> {1, 2} -> 3
+        let mut d = Dag::new("diamond");
+        let ty = d.add_type(TaskType::new("T", Resources::ZERO, 1.0, 0.0));
+        let t0 = d.add_task(ty, SimTime(1), &[]);
+        let t1 = d.add_task(ty, SimTime(1), &[t0]);
+        let t2 = d.add_task(ty, SimTime(1), &[t0]);
+        let _ = d.add_task(ty, SimTime(1), &[t1, t2]);
+        d
+    }
+
+    #[test]
+    fn roots_dispatch_first() {
+        let (eng, ready) = Engine::new(diamond());
+        assert_eq!(ready, vec![TaskId(0)]);
+        assert_eq!(eng.state(TaskId(0)), TaskState::Dispatched);
+        assert_eq!(eng.state(TaskId(1)), TaskState::Waiting);
+    }
+
+    #[test]
+    fn diamond_readiness_order() {
+        let (mut eng, _) = Engine::new(diamond());
+        let r = eng.complete(TaskId(0));
+        assert_eq!(r, vec![TaskId(1), TaskId(2)]);
+        assert!(eng.complete(TaskId(1)).is_empty()); // join not ready yet
+        let r = eng.complete(TaskId(2));
+        assert_eq!(r, vec![TaskId(3)]);
+        assert!(!eng.is_done());
+        eng.complete(TaskId(3));
+        assert!(eng.is_done());
+        assert_eq!(eng.n_done(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "completed in state")]
+    fn double_complete_panics() {
+        let (mut eng, _) = Engine::new(diamond());
+        eng.complete(TaskId(0));
+        eng.complete(TaskId(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "completed in state")]
+    fn complete_waiting_panics() {
+        let (mut eng, _) = Engine::new(diamond());
+        eng.complete(TaskId(3));
+    }
+
+    #[test]
+    fn full_montage_drains() {
+        // property: completing tasks in any ready order drains the DAG
+        let dag = generate(&MontageConfig {
+            grid_w: 4,
+            grid_h: 4,
+            diagonals: true,
+            seed: 3,
+        });
+        let total = dag.len();
+        let (mut eng, mut ready) = Engine::new(dag);
+        let mut processed = 0;
+        while let Some(t) = ready.pop() {
+            processed += 1;
+            let mut newly = eng.complete(t);
+            ready.append(&mut newly);
+        }
+        assert_eq!(processed, total);
+        assert!(eng.is_done());
+    }
+
+    #[test]
+    fn readiness_never_exceeds_dependencies() {
+        // each task becomes ready exactly once
+        let dag = generate(&MontageConfig {
+            grid_w: 3,
+            grid_h: 3,
+            diagonals: true,
+            seed: 8,
+        });
+        let (mut eng, ready) = Engine::new(dag);
+        let mut seen = std::collections::BTreeSet::new();
+        let mut stack = ready;
+        for t in &stack {
+            assert!(seen.insert(*t));
+        }
+        while let Some(t) = stack.pop() {
+            for n in eng.complete(t) {
+                assert!(seen.insert(n), "task {n:?} became ready twice");
+                stack.push(n);
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Control-plane (API server) load model.
+//!
+//! The paper attributes the job model's collapse to "the Kubernetes control
+//! plane [being] overwhelmed with an excessive number of Pods being
+//! requested" (§4.2). We model the API server as a single-server queue:
+//! every mutating request (create Job, create Pod, delete Pod, status
+//! update) occupies the server for `service_ms`; requests admitted while
+//! the server is busy queue up FIFO. Under a 10k-job parallel stage this
+//! produces exactly the creation-latency inflation the paper describes,
+//! while staying negligible for the worker-pools model (few requests).
+
+use crate::sim::SimTime;
+
+#[derive(Debug, Clone)]
+pub struct ApiServerConfig {
+    /// Service time per mutating request.
+    pub service_ms: u64,
+    /// Base round-trip latency added to every request (network + admission).
+    pub base_latency_ms: u64,
+}
+
+impl Default for ApiServerConfig {
+    fn default() -> Self {
+        ApiServerConfig {
+            service_ms: 8,
+            base_latency_ms: 20,
+        }
+    }
+}
+
+/// The API server queue.
+#[derive(Debug)]
+pub struct ApiServer {
+    pub cfg: ApiServerConfig,
+    busy_until: SimTime,
+    pub requests_total: u64,
+    /// Peak backlog observed (for reports).
+    pub max_backlog_ms: u64,
+}
+
+impl ApiServer {
+    pub fn new(cfg: ApiServerConfig) -> Self {
+        ApiServer {
+            cfg,
+            busy_until: SimTime::ZERO,
+            requests_total: 0,
+            max_backlog_ms: 0,
+        }
+    }
+
+    /// Admit a mutating request at `now`; returns the time its effect is
+    /// applied (the caller schedules the follow-up event at that time).
+    pub fn admit(&mut self, now: SimTime) -> SimTime {
+        self.requests_total += 1;
+        let start = self.busy_until.max(now);
+        let backlog = start.saturating_sub(now).as_millis();
+        self.max_backlog_ms = self.max_backlog_ms.max(backlog);
+        self.busy_until = start + SimTime::from_millis(self.cfg.service_ms);
+        self.busy_until + SimTime::from_millis(self.cfg.base_latency_ms)
+    }
+
+    /// Current queueing delay a new request would see.
+    pub fn current_backlog(&self, now: SimTime) -> SimTime {
+        self.busy_until.saturating_sub(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_server_adds_base_latency_only() {
+        let mut api = ApiServer::new(ApiServerConfig {
+            service_ms: 10,
+            base_latency_ms: 20,
+        });
+        let done = api.admit(SimTime(1000));
+        assert_eq!(done, SimTime(1030));
+    }
+
+    #[test]
+    fn burst_queues_fifo() {
+        let mut api = ApiServer::new(ApiServerConfig {
+            service_ms: 10,
+            base_latency_ms: 0,
+        });
+        let d1 = api.admit(SimTime::ZERO);
+        let d2 = api.admit(SimTime::ZERO);
+        let d3 = api.admit(SimTime::ZERO);
+        assert_eq!(
+            (d1, d2, d3),
+            (SimTime(10), SimTime(20), SimTime(30))
+        );
+        assert_eq!(api.requests_total, 3);
+    }
+
+    #[test]
+    fn server_drains_when_idle() {
+        let mut api = ApiServer::new(ApiServerConfig {
+            service_ms: 10,
+            base_latency_ms: 0,
+        });
+        api.admit(SimTime::ZERO);
+        // long gap: server idle again
+        let done = api.admit(SimTime(1_000));
+        assert_eq!(done, SimTime(1_010));
+        assert_eq!(api.current_backlog(SimTime(1_010)), SimTime::ZERO);
+    }
+
+    #[test]
+    fn backlog_tracks_peak() {
+        let mut api = ApiServer::new(ApiServerConfig {
+            service_ms: 100,
+            base_latency_ms: 0,
+        });
+        for _ in 0..10 {
+            api.admit(SimTime::ZERO);
+        }
+        // 10th request waited 900ms
+        assert_eq!(api.max_backlog_ms, 900);
+    }
+
+    #[test]
+    fn thousands_of_creations_inflate_latency() {
+        // the paper's 16k-job collapse mechanism: API queueing grows linearly
+        let mut api = ApiServer::new(ApiServerConfig::default());
+        let mut last = SimTime::ZERO;
+        for _ in 0..10_000 {
+            last = api.admit(SimTime::ZERO);
+        }
+        assert!(last.as_secs_f64() > 60.0, "10k requests should take >1min");
+    }
+}

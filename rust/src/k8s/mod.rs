@@ -1,0 +1,15 @@
+//! The Kubernetes substrate: nodes, pods, the scheduler (with back-off),
+//! and the API-server load model. Built from scratch per DESIGN.md §1 —
+//! the paper's findings are control-plane phenomena, so these mechanisms
+//! are modeled explicitly.
+
+pub mod api_server;
+pub mod node;
+pub mod pod;
+pub mod resources;
+pub mod scheduler;
+
+pub use node::{Node, NodeId};
+pub use pod::{Payload, Pod, PodId, PodPhase};
+pub use resources::Resources;
+pub use scheduler::{Scheduler, SchedulerConfig};

@@ -1,0 +1,123 @@
+//! Cluster nodes: capacity accounting for the scheduler.
+
+use super::resources::Resources;
+
+/// Index of a node in the cluster's node list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+/// A worker node. `allocated` tracks the sum of requests of pods bound to
+/// this node; Kubernetes' max-pods-per-node (default 110) is enforced too.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub capacity: Resources,
+    pub allocated: Resources,
+    pub pods: usize,
+    pub max_pods: usize,
+    /// Failure injection: a failed node schedules nothing until recovery.
+    pub failed: bool,
+}
+
+impl Node {
+    pub fn new(id: NodeId, capacity: Resources) -> Self {
+        Node {
+            id,
+            capacity,
+            allocated: Resources::ZERO,
+            pods: 0,
+            max_pods: 110,
+            failed: false,
+        }
+    }
+
+    pub fn free(&self) -> Resources {
+        self.capacity.saturating_sub(self.allocated)
+    }
+
+    pub fn fits(&self, req: &Resources) -> bool {
+        !self.failed && self.pods < self.max_pods && self.free().covers(req)
+    }
+
+    /// Bind a pod's requests to this node. Panics in debug builds if the
+    /// pod does not fit — the scheduler must check `fits` first.
+    pub fn alloc(&mut self, req: Resources) {
+        debug_assert!(self.fits(&req), "alloc without fits check");
+        self.allocated += req;
+        self.pods += 1;
+    }
+
+    pub fn release(&mut self, req: Resources) {
+        debug_assert!(self.pods > 0);
+        self.allocated = self.allocated.saturating_sub(req);
+        self.pods -= 1;
+    }
+
+    /// Fraction of CPU capacity currently allocated (for utilization plots).
+    pub fn cpu_utilization(&self) -> f64 {
+        if self.capacity.cpu_m == 0 {
+            return 0.0;
+        }
+        self.allocated.cpu_m as f64 / self.capacity.cpu_m as f64
+    }
+}
+
+/// Build the paper's cluster: `n` worker nodes of 4 vCPU / 16 GiB (§4.1).
+pub fn paper_cluster(n: usize) -> Vec<Node> {
+    (0..n)
+        .map(|i| Node::new(NodeId(i), Resources::paper_node()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut n = Node::new(NodeId(0), Resources::new(4000, 16384));
+        let req = Resources::new(1000, 2048);
+        assert!(n.fits(&req));
+        n.alloc(req);
+        assert_eq!(n.free(), Resources::new(3000, 14336));
+        assert_eq!(n.pods, 1);
+        n.release(req);
+        assert_eq!(n.free(), Resources::new(4000, 16384));
+        assert_eq!(n.pods, 0);
+    }
+
+    #[test]
+    fn fits_respects_cpu_exhaustion() {
+        let mut n = Node::new(NodeId(0), Resources::new(4000, 16384));
+        for _ in 0..4 {
+            n.alloc(Resources::new(1000, 1024));
+        }
+        assert!(!n.fits(&Resources::new(1000, 1024)));
+        assert!(n.fits(&Resources::new(0, 1024)) == false || n.free().cpu_m == 0);
+    }
+
+    #[test]
+    fn fits_respects_max_pods() {
+        let mut n = Node::new(NodeId(0), Resources::new(400_000, 400_000));
+        n.max_pods = 3;
+        for _ in 0..3 {
+            n.alloc(Resources::new(1, 1));
+        }
+        assert!(!n.fits(&Resources::new(1, 1)));
+    }
+
+    #[test]
+    fn cpu_utilization_fraction() {
+        let mut n = Node::new(NodeId(0), Resources::new(4000, 16384));
+        n.alloc(Resources::new(1000, 1024));
+        assert!((n.cpu_utilization() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_cluster_shape() {
+        let c = paper_cluster(17);
+        assert_eq!(c.len(), 17);
+        let total_cores: u64 = c.iter().map(|n| n.capacity.cpu_m).sum::<u64>() / 1000;
+        assert_eq!(total_cores, 68); // "up to 68 cores" (§4.1)
+    }
+}

@@ -1,0 +1,136 @@
+//! Pods: the unit of scheduling. A pod either runs a (possibly clustered)
+//! batch of workflow tasks to completion (job-based models) or is a
+//! long-lived worker in a pool (worker-pools model).
+
+use super::node::NodeId;
+use super::resources::Resources;
+use crate::sim::SimTime;
+use crate::workflow::task::TaskId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PodId(pub u64);
+
+/// What runs inside the pod.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Payload {
+    /// Job-based execution: run these workflow tasks sequentially, then the
+    /// pod terminates (task clustering = len > 1; plain job model = len 1).
+    JobBatch { tasks: Vec<TaskId> },
+    /// Worker-pools execution: long-running worker consuming from the
+    /// pool's queue.
+    Worker { pool: String },
+}
+
+/// Pod lifecycle. The paper's job-model pathologies live in
+/// Pending (scheduler back-off) and Starting (the ~2 s creation overhead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    /// Created, waiting for the scheduler.
+    Pending,
+    /// Bound to a node; container starting (image pull/sandbox ≈ 2 s).
+    Starting,
+    /// Executing payload.
+    Running,
+    /// Worker asked to terminate after current task (scale-down).
+    Draining,
+    /// Batch finished / worker terminated. Resources released.
+    Succeeded,
+    /// Deleted by the deployment controller (scale-down of an idle worker).
+    Deleted,
+}
+
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: PodId,
+    pub payload: Payload,
+    pub requests: Resources,
+    pub phase: PodPhase,
+    pub node: Option<NodeId>,
+    /// Scheduling back-off bookkeeping (attempt count).
+    pub sched_attempts: u32,
+    /// When the pod may next be retried by the scheduler.
+    pub backoff_until: SimTime,
+    // -- trace timestamps ------------------------------------------------
+    pub created_at: SimTime,
+    pub scheduled_at: Option<SimTime>,
+    pub running_at: Option<SimTime>,
+    pub finished_at: Option<SimTime>,
+    /// Tasks executed in this pod (for trace/pod-churn accounting).
+    pub executed: u32,
+}
+
+impl Pod {
+    pub fn new(id: PodId, payload: Payload, requests: Resources, now: SimTime) -> Self {
+        Pod {
+            id,
+            payload,
+            requests,
+            phase: PodPhase::Pending,
+            node: None,
+            sched_attempts: 0,
+            backoff_until: SimTime::ZERO,
+            created_at: now,
+            scheduled_at: None,
+            running_at: None,
+            finished_at: None,
+            executed: 0,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.phase, PodPhase::Succeeded | PodPhase::Deleted)
+    }
+
+    pub fn pool_name(&self) -> Option<&str> {
+        match &self.payload {
+            Payload::Worker { pool } => Some(pool),
+            Payload::JobBatch { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_pod_is_pending() {
+        let p = Pod::new(
+            PodId(1),
+            Payload::JobBatch { tasks: vec![TaskId(0)] },
+            Resources::new(500, 512),
+            SimTime(10),
+        );
+        assert_eq!(p.phase, PodPhase::Pending);
+        assert_eq!(p.created_at, SimTime(10));
+        assert!(!p.is_terminal());
+        assert_eq!(p.pool_name(), None);
+    }
+
+    #[test]
+    fn worker_pool_name() {
+        let p = Pod::new(
+            PodId(2),
+            Payload::Worker { pool: "mProject".into() },
+            Resources::new(1000, 1024),
+            SimTime::ZERO,
+        );
+        assert_eq!(p.pool_name(), Some("mProject"));
+    }
+
+    #[test]
+    fn terminal_phases() {
+        let mut p = Pod::new(
+            PodId(3),
+            Payload::JobBatch { tasks: vec![] },
+            Resources::ZERO,
+            SimTime::ZERO,
+        );
+        p.phase = PodPhase::Succeeded;
+        assert!(p.is_terminal());
+        p.phase = PodPhase::Deleted;
+        assert!(p.is_terminal());
+        p.phase = PodPhase::Draining;
+        assert!(!p.is_terminal());
+    }
+}

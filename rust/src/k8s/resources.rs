@@ -1,0 +1,119 @@
+//! Resource requests/capacity in Kubernetes units: CPU millicores and
+//! memory MiB. Scheduling is driven entirely by *requests* (§3.1 of the
+//! paper): a pod fits a node iff the node's unallocated capacity covers the
+//! pod's requests.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// A resource vector (requests or capacity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default, Hash)]
+pub struct Resources {
+    /// CPU in millicores (1000 = 1 vCPU).
+    pub cpu_m: u64,
+    /// Memory in MiB.
+    pub mem_mb: u64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { cpu_m: 0, mem_mb: 0 };
+
+    pub fn new(cpu_m: u64, mem_mb: u64) -> Self {
+        Resources { cpu_m, mem_mb }
+    }
+
+    /// 4 vCPU / 16 GiB — the paper's worker node shape (§4.1).
+    pub fn paper_node() -> Self {
+        Resources::new(4000, 16384)
+    }
+
+    /// Does `self` (free capacity) cover `req`?
+    pub fn covers(&self, req: &Resources) -> bool {
+        self.cpu_m >= req.cpu_m && self.mem_mb >= req.mem_mb
+    }
+
+    pub fn saturating_sub(self, rhs: Resources) -> Resources {
+        Resources {
+            cpu_m: self.cpu_m.saturating_sub(rhs.cpu_m),
+            mem_mb: self.mem_mb.saturating_sub(rhs.mem_mb),
+        }
+    }
+
+    pub fn checked_mul(self, n: u64) -> Resources {
+        Resources {
+            cpu_m: self.cpu_m * n,
+            mem_mb: self.mem_mb * n,
+        }
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, rhs: Resources) -> Resources {
+        Resources {
+            cpu_m: self.cpu_m + rhs.cpu_m,
+            mem_mb: self.mem_mb + rhs.mem_mb,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, rhs: Resources) {
+        self.cpu_m += rhs.cpu_m;
+        self.mem_mb += rhs.mem_mb;
+    }
+}
+
+impl Sub for Resources {
+    type Output = Resources;
+    fn sub(self, rhs: Resources) -> Resources {
+        Resources {
+            cpu_m: self.cpu_m - rhs.cpu_m,
+            mem_mb: self.mem_mb - rhs.mem_mb,
+        }
+    }
+}
+
+impl SubAssign for Resources {
+    fn sub_assign(&mut self, rhs: Resources) {
+        self.cpu_m -= rhs.cpu_m;
+        self.mem_mb -= rhs.mem_mb;
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}m/{}Mi", self.cpu_m, self.mem_mb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_requires_both_dimensions() {
+        let cap = Resources::new(1000, 1000);
+        assert!(cap.covers(&Resources::new(1000, 1000)));
+        assert!(cap.covers(&Resources::new(500, 999)));
+        assert!(!cap.covers(&Resources::new(1001, 10)));
+        assert!(!cap.covers(&Resources::new(10, 1001)));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::new(1000, 2048);
+        let b = Resources::new(250, 512);
+        assert_eq!(a + b, Resources::new(1250, 2560));
+        assert_eq!(a - b, Resources::new(750, 1536));
+        assert_eq!(b.saturating_sub(a), Resources::ZERO);
+        assert_eq!(b.checked_mul(3), Resources::new(750, 1536));
+    }
+
+    #[test]
+    fn paper_node_shape() {
+        let n = Resources::paper_node();
+        assert_eq!(n.cpu_m, 4000);
+        assert_eq!(n.mem_mb, 16384);
+    }
+}

@@ -1,0 +1,344 @@
+//! The Kubernetes scheduler model: bin-packing by resource requests, a
+//! pending queue, and per-pod exponential back-off for unschedulable pods.
+//!
+//! This component produces the paper's central job-model pathology (§4.2):
+//! when far more pods are requested than the cluster fits, unschedulable
+//! pods are retried "with increasingly longer exponential back-off delay
+//! (up to several minutes)". Even after resources free up, pods sleep out
+//! their back-off, leaving the cluster idle (the ~100 s gap in Fig. 4),
+//! and then wake in synchronized batches.
+
+use super::node::{Node, NodeId};
+use super::pod::{Pod, PodId, PodPhase};
+use crate::sim::SimTime;
+use std::collections::VecDeque;
+
+/// Scheduler tuning; defaults follow kube-scheduler semantics scaled to the
+/// paper's observations.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Time to process one pod through a scheduling cycle (filter/score/
+    /// bind). Real kube-scheduler sustains ~100 pods/s => ~10 ms each.
+    pub bind_ms: u64,
+    /// Initial back-off after a failed scheduling attempt.
+    pub backoff_initial_ms: u64,
+    /// Back-off cap. The paper observed "up to several minutes".
+    pub backoff_max_ms: u64,
+    /// Multiplier per failed attempt.
+    pub backoff_factor: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            bind_ms: 10,
+            backoff_initial_ms: 1_000,
+            backoff_max_ms: 100_000, // the ~100 s gap scale observed in Fig. 4
+            backoff_factor: 2.0,
+        }
+    }
+}
+
+/// Result of one scheduling pass.
+#[derive(Debug, Default, PartialEq)]
+pub struct SchedulePass {
+    /// (pod, node, bind-completion time) for pods that were placed.
+    pub bound: Vec<(PodId, NodeId, SimTime)>,
+    /// Pods that failed to fit, with the time their back-off expires.
+    pub backed_off: Vec<(PodId, SimTime)>,
+}
+
+/// The scheduler: an active queue plus the back-off bookkeeping.
+///
+/// Pod membership flags are dense vectors indexed by PodId — set-based
+/// bookkeeping (`BTreeSet` + `VecDeque::contains`) was ~13% of the 16k
+/// job-model simulation (EXPERIMENTS.md §Perf).
+#[derive(Debug)]
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    /// Pods awaiting a scheduling attempt, FIFO.
+    active: VecDeque<PodId>,
+    /// Dense flag: pod is in the active queue.
+    in_active: Vec<bool>,
+    /// Dense flag: pod is sleeping in back-off (woken by `BackoffExpire`).
+    sleeping: Vec<bool>,
+    sleeping_count: usize,
+    active_count: usize,
+    /// Serialization of the scheduling pipeline: the next bind may not
+    /// complete before this time (throughput model).
+    busy_until: SimTime,
+    // -- counters for reports/metrics -------------------------------------
+    pub binds_total: u64,
+    pub backoffs_total: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Scheduler {
+            cfg,
+            active: VecDeque::new(),
+            in_active: Vec::new(),
+            sleeping: Vec::new(),
+            sleeping_count: 0,
+            active_count: 0,
+            busy_until: SimTime::ZERO,
+            binds_total: 0,
+            backoffs_total: 0,
+        }
+    }
+
+    fn ensure(&mut self, pod: PodId) {
+        let i = pod.0 as usize;
+        if i >= self.in_active.len() {
+            self.in_active.resize(i + 1, false);
+            self.sleeping.resize(i + 1, false);
+        }
+    }
+
+    /// Enqueue a newly-created (or woken-from-back-off) pod.
+    pub fn enqueue(&mut self, pod: PodId) {
+        self.ensure(pod);
+        let i = pod.0 as usize;
+        if self.sleeping[i] {
+            self.sleeping[i] = false;
+            self.sleeping_count -= 1;
+        }
+        if !self.in_active[i] {
+            self.in_active[i] = true;
+            self.active_count += 1;
+            self.active.push_back(pod);
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.active_count
+    }
+
+    pub fn sleeping_len(&self) -> usize {
+        self.sleeping_count
+    }
+
+    pub fn is_sleeping(&self, pod: PodId) -> bool {
+        self.sleeping.get(pod.0 as usize).copied().unwrap_or(false)
+    }
+
+    /// Run scheduling attempts for every pod in the active queue against
+    /// the current node state. Successfully placed pods get resources
+    /// allocated immediately (bind) and a bind-completion timestamp spaced
+    /// by `bind_ms` (throughput limit). Unschedulable pods go to sleep with
+    /// exponential back-off.
+    pub fn pass(&mut self, now: SimTime, pods: &mut [Pod], nodes: &mut [Node]) -> SchedulePass {
+        let mut out = SchedulePass::default();
+        let n_attempts = self.active.len();
+        for _ in 0..n_attempts {
+            let pid = match self.active.pop_front() {
+                Some(p) => p,
+                None => break,
+            };
+            if !self.in_active[pid.0 as usize] {
+                continue; // forgotten while queued
+            }
+            self.in_active[pid.0 as usize] = false;
+            self.active_count -= 1;
+            let pod = &mut pods[pid.0 as usize];
+            if pod.phase != PodPhase::Pending {
+                continue; // deleted while queued
+            }
+            // Filter + score: best-fit on CPU (tightest remaining capacity
+            // that still fits) — keeps large pods schedulable longer than
+            // spread-scoring would, matching kube-scheduler's default
+            // bin-packing behaviour under pressure well enough.
+            let fit = nodes
+                .iter()
+                .filter(|n| n.fits(&pod.requests))
+                .min_by_key(|n| n.free().cpu_m)
+                .map(|n| n.id);
+            match fit {
+                Some(nid) => {
+                    nodes[nid.0].alloc(pod.requests);
+                    pod.phase = PodPhase::Starting;
+                    pod.node = Some(nid);
+                    pod.scheduled_at = Some(now);
+                    // pipeline the binds to model scheduler throughput
+                    self.busy_until =
+                        self.busy_until.max(now) + SimTime::from_millis(self.cfg.bind_ms);
+                    self.binds_total += 1;
+                    out.bound.push((pid, nid, self.busy_until));
+                }
+                None => {
+                    let exp = (self.cfg.backoff_initial_ms as f64
+                        * self.cfg.backoff_factor.powi(pod.sched_attempts as i32))
+                        as u64;
+                    let delay = exp.min(self.cfg.backoff_max_ms);
+                    pod.sched_attempts += 1;
+                    pod.backoff_until = now + SimTime::from_millis(delay);
+                    if !self.sleeping[pid.0 as usize] {
+                        self.sleeping[pid.0 as usize] = true;
+                        self.sleeping_count += 1;
+                    }
+                    self.backoffs_total += 1;
+                    out.backed_off.push((pid, pod.backoff_until));
+                }
+            }
+        }
+        out
+    }
+
+    /// Remove a pod from all scheduler queues (pod deleted). The active
+    /// deque entry is left in place and skipped lazily on pop.
+    pub fn forget(&mut self, pod: PodId) {
+        self.ensure(pod);
+        let i = pod.0 as usize;
+        if self.sleeping[i] {
+            self.sleeping[i] = false;
+            self.sleeping_count -= 1;
+        }
+        if self.in_active[i] {
+            self.in_active[i] = false;
+            self.active_count -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::k8s::node::paper_cluster;
+    use crate::k8s::pod::Payload;
+    use crate::k8s::resources::Resources;
+    use crate::workflow::task::TaskId;
+
+    fn mkpod(id: u64, cpu: u64) -> Pod {
+        Pod::new(
+            PodId(id),
+            Payload::JobBatch { tasks: vec![TaskId(0)] },
+            Resources::new(cpu, 512),
+            SimTime::ZERO,
+        )
+    }
+
+    fn run_pass(
+        sched: &mut Scheduler,
+        now: SimTime,
+        pods: &mut Vec<Pod>,
+        nodes: &mut Vec<Node>,
+    ) -> SchedulePass {
+        sched.pass(now, pods, nodes)
+    }
+
+    #[test]
+    fn binds_until_cluster_full_then_backs_off() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(1); // 4000m
+        let mut pods: Vec<Pod> = (0..6).map(|i| mkpod(i, 1000)).collect();
+        for i in 0..6 {
+            sched.enqueue(PodId(i));
+        }
+        let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
+        assert_eq!(pass.bound.len(), 4);
+        assert_eq!(pass.backed_off.len(), 2);
+        assert_eq!(sched.sleeping_len(), 2);
+        // first back-off is the initial delay
+        assert_eq!(pass.backed_off[0].1, SimTime(1_000));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let mut sched = Scheduler::new(SchedulerConfig {
+            backoff_initial_ms: 1_000,
+            backoff_max_ms: 8_000,
+            ..Default::default()
+        });
+        let mut nodes = vec![Node::new(NodeId(0), Resources::new(100, 100))];
+        let mut pods = vec![mkpod(0, 1000)]; // never fits
+        let mut now = SimTime::ZERO;
+        let mut delays = Vec::new();
+        for _ in 0..6 {
+            sched.enqueue(PodId(0));
+            let pass = run_pass(&mut sched, now, &mut pods, &mut nodes);
+            let until = pass.backed_off[0].1;
+            delays.push((until - now).as_millis());
+            now = until;
+        }
+        assert_eq!(delays, vec![1_000, 2_000, 4_000, 8_000, 8_000, 8_000]);
+    }
+
+    #[test]
+    fn bind_pipeline_spaces_completions() {
+        let mut sched = Scheduler::new(SchedulerConfig {
+            bind_ms: 10,
+            ..Default::default()
+        });
+        let mut nodes = paper_cluster(2);
+        let mut pods: Vec<Pod> = (0..3).map(|i| mkpod(i, 1000)).collect();
+        for i in 0..3 {
+            sched.enqueue(PodId(i));
+        }
+        let pass = run_pass(&mut sched, SimTime(100), &mut pods, &mut nodes);
+        let times: Vec<u64> = pass.bound.iter().map(|b| b.2.as_millis()).collect();
+        assert_eq!(times, vec![110, 120, 130]);
+    }
+
+    #[test]
+    fn best_fit_packs_tight_node_first() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(2);
+        nodes[0].alloc(Resources::new(3000, 1024)); // node 0 has 1000m free
+        let mut pods = vec![mkpod(0, 1000)];
+        sched.enqueue(PodId(0));
+        let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
+        assert_eq!(pass.bound[0].1, NodeId(0)); // tighter fit preferred
+    }
+
+    #[test]
+    fn deleted_pod_skipped() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(1);
+        let mut pods = vec![mkpod(0, 1000)];
+        pods[0].phase = PodPhase::Deleted;
+        sched.enqueue(PodId(0));
+        let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
+        assert!(pass.bound.is_empty());
+        assert!(pass.backed_off.is_empty());
+    }
+
+    #[test]
+    fn forget_removes_everywhere() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        sched.enqueue(PodId(0));
+        sched.enqueue(PodId(1));
+        sched.forget(PodId(0));
+        assert_eq!(sched.queue_len(), 1);
+    }
+
+    #[test]
+    fn enqueue_dedups() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        sched.enqueue(PodId(0));
+        sched.enqueue(PodId(0));
+        assert_eq!(sched.queue_len(), 1);
+    }
+
+    #[test]
+    fn never_overallocates_nodes() {
+        // property-style: random pods, after every pass allocation <= capacity
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        for _ in 0..20 {
+            let mut sched = Scheduler::new(SchedulerConfig::default());
+            let mut nodes = paper_cluster(3);
+            let n = 30 + rng.below(40);
+            let mut pods: Vec<Pod> = (0..n)
+                .map(|i| mkpod(i, 250 + rng.below(16) * 250))
+                .collect();
+            for i in 0..n {
+                sched.enqueue(PodId(i));
+            }
+            run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
+            for node in &nodes {
+                assert!(node.allocated.cpu_m <= node.capacity.cpu_m);
+                assert!(node.allocated.mem_mb <= node.capacity.mem_mb);
+            }
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! # hyperflow-k8s
+//!
+//! Reproduction of **"Towards cloud-native scientific workflow management"**
+//! (Orzechowski, Baliś, Janecki, 2024): alternative execution models for
+//! scientific workflows on Kubernetes, evaluated with a 16k-task Montage
+//! workflow.
+//!
+//! The crate provides:
+//! * a discrete-event **Kubernetes cluster simulator** ([`k8s`], [`sim`]) —
+//!   scheduler with exponential back-off, API-server queueing, pod
+//!   lifecycle latencies;
+//! * the **HyperFlow engine** ([`engine`]) with task clustering;
+//! * the three **execution models** ([`models`]): job-based, job-based with
+//!   clustering, and auto-scalable worker pools (KEDA-style autoscaler with
+//!   proportional quota allocation, [`autoscale`], over an AMQP-like
+//!   [`broker`]);
+//! * the **Montage workflow generator** ([`workflow`]);
+//! * a **PJRT runtime** ([`runtime`]) executing the real Montage numerics
+//!   (JAX + Pallas, AOT-compiled to HLO) inside worker pods ([`compute`],
+//!   [`realtime`]);
+//! * reports and figure regeneration ([`report`], [`metrics`]).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod autoscale;
+pub mod broker;
+pub mod compute;
+pub mod config;
+pub mod engine;
+pub mod k8s;
+pub mod metrics;
+pub mod models;
+pub mod realtime;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workflow;

@@ -1,0 +1,169 @@
+//! `hyperflow` CLI: run simulated experiments from the command line.
+
+use hyperflow_k8s::engine::clustering::ClusteringConfig;
+use hyperflow_k8s::models::{driver, ExecModel};
+use hyperflow_k8s::util::cli::Args;
+use hyperflow_k8s::util::{ascii_plot, logger};
+use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: hyperflow <command> [flags]\n\
+         commands:\n\
+           run        --model job|clustered|pools|generic-pool [--tasks N] [--nodes N] [--seed S]\n\
+           run        --config configs/<name>.json   (full experiment description)\n\
+           generate   --tasks N --out wf.json\n\
+           info       --tasks N\n\
+         flags for run:\n\
+           --cluster-size N --cluster-timeout MS   (clustered model)\n\
+           --max-pending N                          (throttled job model, §5)\n\
+           --json                                   print result as JSON\n\
+           --html FILE                              write an HTML report\n"
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    logger::init();
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_run(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("info") => cmd_info(&args),
+        Some("trace") => cmd_trace(&args),
+        _ => usage(),
+    }
+}
+
+/// `hyperflow trace --model pools --tasks 2000 --out trace.json` — export a
+/// Chrome trace-event file (open in chrome://tracing or Perfetto).
+fn cmd_trace(args: &Args) {
+    let cfg = montage_cfg(args);
+    let dag = generate(&cfg);
+    let model = match args.get_or("model", "pools") {
+        "job" => ExecModel::JobBased,
+        "clustered" => ExecModel::Clustered(ClusteringConfig::paper_default()),
+        _ => ExecModel::paper_hybrid_pools(),
+    };
+    let res = driver::run(
+        dag,
+        model,
+        driver::SimConfig::with_nodes(args.get_usize("nodes", 17)),
+    );
+    let out = args.get_or("out", "trace.json");
+    std::fs::write(out, hyperflow_k8s::report::chrome::to_chrome_trace(&res).to_string())
+        .expect("write trace");
+    eprintln!(
+        "wrote {out} ({} tasks, makespan {:.0}s) — open in chrome://tracing",
+        res.trace.records.len(),
+        res.makespan.as_secs_f64()
+    );
+}
+
+fn montage_cfg(args: &Args) -> MontageConfig {
+    let tasks = args.get_usize("tasks", 16_000);
+    let seed = args.get_u64("seed", 42);
+    MontageConfig::with_total_tasks(tasks, seed)
+}
+
+fn cmd_run(args: &Args) {
+    // config-file mode: the whole experiment comes from JSON
+    let res = if let Some(path) = args.get("config") {
+        let exp = hyperflow_k8s::config::ExperimentConfig::load(path)
+            .unwrap_or_else(|e| {
+                eprintln!("config error: {e:#}");
+                std::process::exit(1)
+            });
+        eprintln!("running experiment '{}' ({})", exp.name, exp.model.name());
+        exp.run().unwrap_or_else(|e| {
+            eprintln!("run error: {e:#}");
+            std::process::exit(1)
+        })
+    } else {
+        let cfg = montage_cfg(args);
+        let dag = generate(&cfg);
+        let model = match args.get_or("model", "pools") {
+            "job" | "job-based" => ExecModel::JobBased,
+            "clustered" => {
+                let size = args.get_usize("cluster-size", 0);
+                let c = if size > 0 {
+                    ClusteringConfig::uniform(size, args.get_u64("cluster-timeout", 3000))
+                } else {
+                    ClusteringConfig::paper_default()
+                };
+                ExecModel::Clustered(c)
+            }
+            "pools" | "worker-pools" => ExecModel::paper_hybrid_pools(),
+            "generic-pool" | "generic" => ExecModel::GenericPool,
+            m => {
+                eprintln!("unknown model '{m}'");
+                usage()
+            }
+        };
+        let mut sim = driver::SimConfig::with_nodes(args.get_usize("nodes", 17));
+        if args.has("max-pending") {
+            sim.max_pending_pods = Some(args.get_usize("max-pending", 64));
+        }
+        let n_tasks = dag.len();
+        eprintln!(
+            "running {} on montage {}x{} ({} tasks), {} nodes",
+            model.name(),
+            cfg.grid_w,
+            cfg.grid_h,
+            n_tasks,
+            sim.nodes
+        );
+        driver::run(dag, model, sim)
+    };
+    if let Some(path) = args.get("html") {
+        let html = hyperflow_k8s::report::html::render(&res);
+        std::fs::write(path, html).expect("write html report");
+        eprintln!("wrote {path}");
+    }
+    if args.has("json") {
+        println!("{}", res.to_json());
+    } else {
+        println!(
+            "makespan: {:.0}s  pods: {}  api-requests: {}  backoffs: {}",
+            res.makespan.as_secs_f64(),
+            res.pods_created,
+            res.api_requests,
+            res.sched_backoffs
+        );
+        println!(
+            "avg running tasks: {:.1}   avg cpu utilization: {:.1}%",
+            res.avg_running_tasks,
+            res.avg_cpu_utilization * 100.0
+        );
+        println!(
+            "{}",
+            ascii_plot::area_chart(
+                "cluster utilization (running tasks)",
+                &res.running_series(),
+                100,
+                12
+            )
+        );
+    }
+}
+
+fn cmd_generate(args: &Args) {
+    let cfg = montage_cfg(args);
+    let dag = generate(&cfg);
+    let out = args.get_or("out", "wf.json");
+    hyperflow_k8s::workflow::wfjson::save(&dag, out).expect("write workflow");
+    eprintln!("wrote {} tasks to {out}", dag.len());
+}
+
+fn cmd_info(args: &Args) {
+    let cfg = montage_cfg(args);
+    let dag = generate(&cfg);
+    println!("workflow: {}", dag.name());
+    println!("tasks: {}", dag.len());
+    for (ty, n) in dag.count_by_type() {
+        println!("  {ty:>12}: {n}");
+    }
+    println!("critical path: {:.0}s", dag.critical_path_secs());
+    let total_work: f64 = dag.work_by_type().values().sum();
+    println!("total work: {total_work:.0} core-seconds");
+}

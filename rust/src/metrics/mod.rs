@@ -1,0 +1,209 @@
+//! Prometheus-like metrics: counters, gauges, and step time series.
+//!
+//! The worker-pools architecture uses a metrics pipeline (Prometheus +
+//! Metrics Server in the paper, §3.5) to feed queue lengths to the
+//! autoscaler and to record the utilization series plotted in Figs. 3-6.
+
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// A step time series: (t, value) change points; value holds until next
+/// point.
+#[derive(Debug, Default, Clone)]
+pub struct Series {
+    points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// Record `value` at time `t` (seconds). Consecutive duplicates are
+    /// collapsed.
+    pub fn record(&mut self, t: f64, value: f64) {
+        if let Some(&(lt, lv)) = self.points.last() {
+            if lv == value {
+                return;
+            }
+            debug_assert!(t >= lt, "series time went backwards");
+        }
+        self.points.push((t, value));
+    }
+
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    pub fn last_value(&self) -> f64 {
+        self.points.last().map(|&(_, v)| v).unwrap_or(0.0)
+    }
+
+    pub fn max_value(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Time average over [t0, t1] (see util::stats::time_average).
+    pub fn time_average(&self, t0: f64, t1: f64) -> f64 {
+        crate::util::stats::time_average(&self.points, t0, t1)
+    }
+
+    /// Resample onto a uniform grid with `dt` seconds (for CSV export).
+    pub fn resample(&self, t_end: f64, dt: f64) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut idx = 0;
+        let mut cur = 0.0;
+        let mut t = 0.0;
+        while t <= t_end + 1e-9 {
+            while idx < self.points.len() && self.points[idx].0 <= t {
+                cur = self.points[idx].1;
+                idx += 1;
+            }
+            out.push((t, cur));
+            t += dt;
+        }
+        out
+    }
+}
+
+/// Pre-resolved handle to a gauge: hot paths resolve the name once and
+/// then update by index (string-keyed lookups were ~15% of the 16k sim,
+/// see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Metrics registry: named counters and gauges (with history).
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: Vec<Series>,
+    names: BTreeMap<String, usize>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Resolve (or create) a gauge handle.
+    pub fn gauge_id(&mut self, name: &str) -> GaugeId {
+        if let Some(&i) = self.names.get(name) {
+            return GaugeId(i);
+        }
+        self.gauges.push(Series::default());
+        let i = self.gauges.len() - 1;
+        self.names.insert(name.to_string(), i);
+        GaugeId(i)
+    }
+
+    /// Set a gauge by handle (hot path).
+    pub fn set_id(&mut self, id: GaugeId, now: SimTime, value: f64) {
+        self.gauges[id.0].record(now.as_secs_f64(), value);
+    }
+
+    /// Add a delta to a gauge by handle (hot path).
+    pub fn add_id(&mut self, id: GaugeId, now: SimTime, delta: f64) {
+        let cur = self.gauges[id.0].last_value();
+        self.gauges[id.0].record(now.as_secs_f64(), cur + delta);
+    }
+
+    pub fn gauge_by_id(&self, id: GaugeId) -> &Series {
+        &self.gauges[id.0]
+    }
+
+    /// Set a gauge at simulated time `now` (name-resolving convenience).
+    pub fn set(&mut self, name: &str, now: SimTime, value: f64) {
+        let id = self.gauge_id(name);
+        self.set_id(id, now, value);
+    }
+
+    /// Add a delta to a gauge at time `now`.
+    pub fn add(&mut self, name: &str, now: SimTime, delta: f64) {
+        let id = self.gauge_id(name);
+        self.add_id(id, now, delta);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<&Series> {
+        self.names.get(name).map(|&i| &self.gauges[i])
+    }
+
+    pub fn gauge_value(&self, name: &str) -> f64 {
+        self.gauge(name).map(|s| s.last_value()).unwrap_or(0.0)
+    }
+
+    pub fn gauge_names(&self) -> impl Iterator<Item = &str> {
+        self.names.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut r = Registry::new();
+        r.inc("pods_created", 1);
+        r.inc("pods_created", 2);
+        assert_eq!(r.counter("pods_created"), 3);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_record_history() {
+        let mut r = Registry::new();
+        r.set("queue", SimTime(0), 5.0);
+        r.set("queue", SimTime(1000), 8.0);
+        r.set("queue", SimTime(2000), 8.0); // dedup
+        let s = r.gauge("queue").unwrap();
+        assert_eq!(s.points().len(), 2);
+        assert_eq!(s.last_value(), 8.0);
+        assert_eq!(s.max_value(), 8.0);
+    }
+
+    #[test]
+    fn gauge_add_deltas() {
+        let mut r = Registry::new();
+        r.add("running", SimTime(0), 1.0);
+        r.add("running", SimTime(500), 1.0);
+        r.add("running", SimTime(1000), -2.0);
+        assert_eq!(r.gauge_value("running"), 0.0);
+        assert_eq!(r.gauge("running").unwrap().max_value(), 2.0);
+    }
+
+    #[test]
+    fn series_time_average() {
+        let mut s = Series::default();
+        s.record(0.0, 0.0);
+        s.record(10.0, 4.0);
+        s.record(20.0, 2.0);
+        assert!((s.time_average(0.0, 30.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_resample_uniform() {
+        let mut s = Series::default();
+        s.record(0.0, 1.0);
+        s.record(2.5, 3.0);
+        let r = s.resample(5.0, 1.0);
+        assert_eq!(r.len(), 6);
+        assert_eq!(r[0], (0.0, 1.0));
+        assert_eq!(r[2], (2.0, 1.0));
+        assert_eq!(r[3], (3.0, 3.0));
+    }
+
+    #[test]
+    fn monotone_guard_allows_equal_times() {
+        let mut s = Series::default();
+        s.record(1.0, 1.0);
+        s.record(1.0, 2.0); // same instant, new value — allowed
+        assert_eq!(s.points().len(), 2);
+    }
+}

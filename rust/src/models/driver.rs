@@ -1,0 +1,1203 @@
+//! The discrete-event simulation driver: binds an [`ExecModel`] to the
+//! Kubernetes substrate and the HyperFlow engine and runs a workflow to
+//! completion, producing a [`SimResult`] trace.
+//!
+//! Event flow (job path):          Event flow (pool path):
+//!   task ready                       task ready
+//!   -> batcher (maybe buffer)        -> publish to type queue
+//!   -> API: create Job               -> wake idle worker / autoscaler
+//!   -> API: create Pod               ...
+//!   -> scheduler (may back off!)     autoscale tick: desired replicas
+//!   -> pod start (~2 s)              -> API: create/delete worker pods
+//!   -> execute batch sequentially    -> scheduler -> pod start
+//!   -> pod terminates, free node     -> worker loop: fetch/execute/ack
+
+use super::ExecModel;
+use crate::autoscale::{Autoscaler, AutoscalerConfig, PoolSpec};
+use crate::broker::Broker;
+use crate::engine::clustering::{BatchAction, Batcher, ClusteringConfig};
+use crate::engine::Engine;
+use crate::k8s::api_server::{ApiServer, ApiServerConfig};
+use crate::k8s::node::{paper_cluster, Node};
+use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
+use crate::k8s::scheduler::{Scheduler, SchedulerConfig};
+use crate::metrics::Registry;
+use crate::report::{SimResult, Trace};
+use crate::sim::{EventQueue, SimTime};
+use crate::workflow::dag::Dag;
+use crate::workflow::task::TaskId;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Cluster / runtime parameters (defaults follow DESIGN.md §5).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Number of worker nodes (paper: up to 17).
+    pub nodes: usize,
+    /// Pod container startup latency (paper: "typically about 2s").
+    pub pod_start_ms: u64,
+    /// Per-task executor overhead inside a pod (HyperFlow job-executor
+    /// fetch + spawn).
+    pub exec_overhead_ms: u64,
+    /// Job-controller reconcile delay (Job object -> Pod object).
+    pub job_controller_ms: u64,
+    /// Message fetch latency from a pool queue.
+    pub fetch_ms: u64,
+    pub sched: SchedulerConfig,
+    pub api: ApiServerConfig,
+    pub autoscale: AutoscalerConfig,
+    /// Hard wall-clock cap on the simulation (guards against livelock in
+    /// pathological configurations). Simulated seconds.
+    pub max_sim_s: f64,
+    /// Failure injection: probability that a pod crashes at container
+    /// start (image pull error, OOM on start, node flake). Job pods are
+    /// recreated by the job controller; worker pods are replaced by the
+    /// deployment controller on the next autoscale tick.
+    pub pod_failure_prob: f64,
+    /// Seed for the failure-injection RNG.
+    pub seed: u64,
+    /// Future-work (§5): throttled job submission — cap on pods that may
+    /// sit in the Pending/creation pipeline at once; further batches wait
+    /// in the engine. `None` reproduces the paper's unthrottled behaviour.
+    pub max_pending_pods: Option<usize>,
+    /// Failure injection: scheduled node up/down events (ms, node index,
+    /// up?). Down kills all pods on the node (jobs recreated, worker tasks
+    /// requeued); up restores capacity.
+    pub node_events: Vec<(u64, usize, bool)>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        let nodes = 17;
+        SimConfig {
+            nodes,
+            pod_start_ms: 2_000,
+            exec_overhead_ms: 100,
+            job_controller_ms: 500,
+            fetch_ms: 10,
+            sched: SchedulerConfig::default(),
+            api: ApiServerConfig::default(),
+            autoscale: AutoscalerConfig {
+                quota_cpu_m: nodes as u64 * 4_000,
+                ..Default::default()
+            },
+            max_sim_s: 6.0 * 3600.0,
+            pod_failure_prob: 0.0,
+            seed: 42,
+            max_pending_pods: None,
+            node_events: Vec::new(),
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn with_nodes(nodes: usize) -> Self {
+        SimConfig {
+            nodes,
+            autoscale: AutoscalerConfig {
+                quota_cpu_m: nodes as u64 * 4_000,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+}
+
+/// Simulation events.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// API processed the Job creation; the Job controller will now create
+    /// the pod object.
+    JobAdmitted { pod: PodId },
+    /// Pod object exists; enters the scheduler.
+    PodCreated { pod: PodId },
+    /// Container started; payload begins.
+    PodStarted { pod: PodId },
+    /// Current task inside the pod finished.
+    TaskDone { pod: PodId, task: TaskId },
+    /// A pod's scheduling back-off expired; retry.
+    BackoffExpire { pod: PodId },
+    /// Clustering partial-batch timeout.
+    FlushTimer { type_idx: u16, deadline: SimTime },
+    /// Autoscaler poll.
+    AutoscaleTick,
+    /// A worker finished fetching a message from its queue.
+    WorkerFetched { pod: PodId, task: TaskId },
+    /// Failure injection: a node goes down (kills its pods) or comes back.
+    NodeEvent { node: usize, up: bool },
+}
+
+struct World {
+    cfg: SimConfig,
+    model: ExecModel,
+    q: EventQueue<Ev>,
+    pods: Vec<Pod>,
+    nodes: Vec<Node>,
+    sched: Scheduler,
+    api: ApiServer,
+    engine: Engine,
+    batcher: Batcher,
+    broker: Broker,
+    scaler: Option<Autoscaler>,
+    /// Worker deployment state per pool: live pod set.
+    deployments: BTreeMap<String, BTreeSet<PodId>>,
+    /// Idle running workers per pool (FIFO).
+    idle_workers: BTreeMap<String, VecDeque<PodId>>,
+    /// Remaining batch tasks per pod (job path), front = current.
+    batch_queue: Vec<VecDeque<TaskId>>,
+    /// Task currently executing in each pod (for node-failure recovery).
+    current_task: Vec<Option<TaskId>>,
+    /// Job batches deferred by the pending-pod throttle (§5 future work).
+    throttle_wait: VecDeque<Vec<TaskId>>,
+    /// Pods created but not yet bound (throttle accounting).
+    jobs_in_flight: usize,
+    /// Pod template for the generic-pool model (max over all types).
+    generic_requests: crate::k8s::resources::Resources,
+    metrics: Registry,
+    trace: Trace,
+    running_tasks: i64,
+    /// Incremental count of pods in the Pending phase (perf: a full scan
+    /// here was 70% of the 16k job-model sim, see EXPERIMENTS.md §Perf).
+    pending_count: usize,
+    /// Completed tasks per TypeId (feeds the VPA usage estimator).
+    completed_by_type: Vec<u64>,
+    // pre-resolved gauge handles (string-keyed lookups were hot; §Perf)
+    g_running: crate::metrics::GaugeId,
+    g_cpu: crate::metrics::GaugeId,
+    g_pending: crate::metrics::GaugeId,
+    /// running::<type> gauge per TypeId.
+    g_by_type: Vec<crate::metrics::GaugeId>,
+    /// queue::<type> gauge per TypeId (pooled types only).
+    g_queue_by_type: Vec<Option<crate::metrics::GaugeId>>,
+    g_queue_generic: Option<crate::metrics::GaugeId>,
+    rng: crate::util::rng::Rng,
+}
+
+/// Queue name of the single pool in the generic-pool model.
+const GENERIC_POOL: &str = "__generic__";
+
+impl World {
+    fn now(&self) -> SimTime {
+        self.q.now()
+    }
+
+    // ---------------------------------------------------------------
+    // helpers
+    // ---------------------------------------------------------------
+    fn new_pod(&mut self, payload: Payload) -> PodId {
+        let requests = match &payload {
+            Payload::Worker { pool } if pool == GENERIC_POOL => self.generic_requests,
+            Payload::Worker { pool } => {
+                let dag = self.engine.dag();
+                let ty = dag.type_id(pool).expect("pool type exists");
+                let t = &dag.types[ty.0 as usize];
+                // §5 VPA: once enough of this type has run, right-size new
+                // workers to the observed CPU usage
+                if self.cfg.autoscale.vpa
+                    && self.completed_by_type[ty.0 as usize]
+                        >= self.cfg.autoscale.vpa_min_samples
+                {
+                    crate::k8s::resources::Resources::new(t.cpu_used_m, t.requests.mem_mb)
+                } else {
+                    t.requests
+                }
+            }
+            Payload::JobBatch { tasks } => self.engine.dag().type_of(tasks[0]).requests,
+        };
+        let id = PodId(self.pods.len() as u64);
+        let pod = Pod::new(id, payload, requests, self.now());
+        self.pods.push(pod);
+        self.batch_queue.push(VecDeque::new());
+        self.current_task.push(None);
+        self.pending_count += 1;
+        self.metrics.inc("pods_created", 1);
+        id
+    }
+
+    /// Job path: create a Job for a batch of same-type tasks, honouring the
+    /// pending-pod throttle (§5 future work) when configured.
+    fn create_job(&mut self, tasks: Vec<TaskId>) {
+        debug_assert!(!tasks.is_empty());
+        if let Some(cap) = self.cfg.max_pending_pods {
+            if self.jobs_in_flight >= cap {
+                self.throttle_wait.push_back(tasks);
+                self.metrics.inc("throttled_batches", 1);
+                return;
+            }
+        }
+        self.create_job_now(tasks);
+    }
+
+    fn create_job_now(&mut self, tasks: Vec<TaskId>) {
+        let pid = self.new_pod(Payload::JobBatch { tasks });
+        self.jobs_in_flight += 1;
+        self.metrics.inc("jobs_created", 1);
+        // API round-trip for the Job object
+        let done = self.api.admit(self.now());
+        self.q.schedule_at(done, Ev::JobAdmitted { pod: pid });
+    }
+
+    /// A job pod left the pending pipeline: admit deferred batches.
+    fn job_unblocked(&mut self) {
+        debug_assert!(self.jobs_in_flight > 0);
+        self.jobs_in_flight -= 1;
+        if let Some(cap) = self.cfg.max_pending_pods {
+            while self.jobs_in_flight < cap {
+                match self.throttle_wait.pop_front() {
+                    Some(batch) => self.create_job_now(batch),
+                    None => break,
+                }
+            }
+        }
+    }
+
+    /// Pool path: create worker pods for a deployment scale-up.
+    fn create_worker(&mut self, pool: &str) {
+        let pid = self.new_pod(Payload::Worker {
+            pool: pool.to_string(),
+        });
+        self.deployments
+            .get_mut(pool)
+            .expect("deployment declared")
+            .insert(pid);
+        let done = self.api.admit(self.now());
+        self.q.schedule_at(done, Ev::PodCreated { pod: pid });
+    }
+
+    fn run_scheduler(&mut self) {
+        let now = self.now();
+        let pass = self.sched.pass(now, &mut self.pods, &mut self.nodes);
+        if !pass.bound.is_empty() {
+            self.record_cpu();
+        }
+        for (pid, _node, bind_done) in pass.bound {
+            self.pending_count -= 1;
+            if matches!(self.pods[pid.0 as usize].payload, Payload::JobBatch { .. }) {
+                self.job_unblocked();
+            }
+            self.q.schedule_at(
+                bind_done + SimTime::from_millis(self.cfg.pod_start_ms),
+                Ev::PodStarted { pod: pid },
+            );
+        }
+        for (pid, until) in pass.backed_off {
+            self.q.schedule_at(until, Ev::BackoffExpire { pod: pid });
+        }
+        self.metrics
+            .set_id(self.g_pending, now, self.pending_count as f64);
+    }
+
+    fn record_cpu(&mut self) {
+        let now = self.now();
+        let alloc: u64 = self.nodes.iter().map(|n| n.allocated.cpu_m).sum();
+        self.metrics.set_id(self.g_cpu, now, alloc as f64);
+    }
+
+    fn record_running(&mut self, ttype: crate::workflow::task::TypeId, delta: i64) {
+        let now = self.now();
+        self.running_tasks += delta;
+        self.metrics
+            .set_id(self.g_running, now, self.running_tasks as f64);
+        self.metrics
+            .add_id(self.g_by_type[ttype.0 as usize], now, delta as f64);
+    }
+
+    /// Record the current depth of the queue feeding `ttype`'s pool.
+    fn record_queue_depth(&mut self, ttype: crate::workflow::task::TypeId, qname: &str) {
+        let id = match &self.model {
+            ExecModel::GenericPool => self.g_queue_generic,
+            _ => self.g_queue_by_type[ttype.0 as usize],
+        };
+        if let Some(id) = id {
+            let now = self.now();
+            let depth = self.broker.queue(qname).map(|q| q.depth()).unwrap_or(0);
+            self.metrics.set_id(id, now, depth as f64);
+        }
+    }
+
+    /// Start executing `task` inside `pod` at the current time.
+    fn start_task(&mut self, pod: PodId, task: TaskId) {
+        let now = self.now();
+        let dur = self.engine.dag().tasks[task.0 as usize].duration;
+        let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
+        self.trace.started(task, pod.0, now);
+        self.record_running(ttype, 1);
+        self.pods[pod.0 as usize].executed += 1;
+        self.current_task[pod.0 as usize] = Some(task);
+        self.q.schedule_at(
+            now + SimTime::from_millis(self.cfg.exec_overhead_ms) + dur,
+            Ev::TaskDone { pod, task },
+        );
+    }
+
+    /// Node failure: kill every pod on the node; recover their work.
+    /// Job batches are recreated by the job controller; a worker's
+    /// in-flight task is redelivered to its queue (the broker's unacked
+    /// window, like a RabbitMQ consumer dying).
+    fn fail_node(&mut self, node: usize) {
+        self.nodes[node].failed = true;
+        self.metrics.inc("node_failures", 1);
+        let victims: Vec<PodId> = self
+            .pods
+            .iter()
+            .filter(|p| p.node == Some(crate::k8s::node::NodeId(node)) && !p.is_terminal())
+            .map(|p| p.id)
+            .collect();
+        for pid in victims {
+            let payload = self.pods[pid.0 as usize].payload.clone();
+            // roll back the running-task accounting for the in-flight task
+            let in_flight = self.current_task[pid.0 as usize].take();
+            if let Some(task) = in_flight {
+                let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
+                self.record_running(ttype, -1);
+            }
+            match &payload {
+                Payload::JobBatch { tasks } => {
+                    // job controller recreates the pod with the unfinished
+                    // remainder of the batch (current task included)
+                    let remaining: Vec<TaskId> =
+                        if self.batch_queue[pid.0 as usize].is_empty() {
+                            tasks.clone() // killed while Starting
+                        } else {
+                            self.batch_queue[pid.0 as usize].iter().copied().collect()
+                        };
+                    self.terminate_pod(pid, PodPhase::Deleted);
+                    if !remaining.is_empty() {
+                        self.create_job(remaining);
+                    }
+                }
+                Payload::Worker { pool } => {
+                    // the unacked delivery is redelivered to the queue
+                    let pool = pool.clone();
+                    self.terminate_pod(pid, PodPhase::Deleted);
+                    if let Some(task) = in_flight {
+                        self.broker.nack_requeue(&pool, task);
+                        self.wake_idle_worker(&pool);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Route newly-ready tasks to the execution model.
+    fn dispatch_ready(&mut self, ready: Vec<TaskId>) {
+        let now = self.now();
+        for t in ready {
+            let ttype = self.engine.dag().tasks[t.0 as usize].ttype;
+            let tname = self.engine.dag().type_name(t).to_string();
+            self.trace.ready(t, &tname, now);
+            // which queue (if any) does this task go to?
+            let queue = match &self.model {
+                ExecModel::GenericPool => Some(GENERIC_POOL.to_string()),
+                ExecModel::WorkerPools { pooled_types }
+                    if pooled_types.iter().any(|p| p == &tname) =>
+                {
+                    Some(tname.clone())
+                }
+                _ => None,
+            };
+            if let Some(qname) = queue {
+                self.broker.publish(&qname, t);
+                self.record_queue_depth(ttype, &qname);
+                self.wake_idle_worker(&qname);
+            } else {
+                // job path (with or without clustering)
+                let ty = self.engine.dag().tasks[t.0 as usize].ttype;
+                match self.batcher.push(now, &tname, t) {
+                    BatchAction::Flush(batch) => self.create_job(batch),
+                    BatchAction::ArmTimer(deadline) => self.q.schedule_at(
+                        deadline,
+                        Ev::FlushTimer {
+                            type_idx: ty.0,
+                            deadline,
+                        },
+                    ),
+                    BatchAction::Buffered => {}
+                }
+            }
+        }
+    }
+
+    /// Give an idle worker of `pool` a task, if any is queued.
+    fn wake_idle_worker(&mut self, pool: &str) {
+        let Some(idle) = self.idle_workers.get_mut(pool) else {
+            return;
+        };
+        while let Some(&pid) = idle.front() {
+            // skip workers that were deleted while idle
+            if self.pods[pid.0 as usize].phase != PodPhase::Running {
+                idle.pop_front();
+                continue;
+            }
+            if let Some(task) = self.broker.fetch(pool) {
+                idle.pop_front();
+                let now = self.now();
+                self.q.schedule_at(
+                    now + SimTime::from_millis(self.cfg.fetch_ms),
+                    Ev::WorkerFetched { pod: pid, task },
+                );
+            }
+            return;
+        }
+    }
+
+    /// Terminate a pod and free its node resources.
+    fn terminate_pod(&mut self, pid: PodId, phase: PodPhase) {
+        let now = self.now();
+        if self.pods[pid.0 as usize].phase == PodPhase::Pending {
+            self.pending_count -= 1;
+        }
+        let pod = &mut self.pods[pid.0 as usize];
+        debug_assert!(!pod.is_terminal());
+        let had_node = pod.node;
+        pod.phase = phase;
+        pod.finished_at = Some(now);
+        if let Some(nid) = had_node {
+            let req = pod.requests;
+            self.nodes[nid.0].release(req);
+            self.record_cpu();
+        }
+        if let Some(pool) = self.pods[pid.0 as usize].pool_name().map(str::to_string) {
+            if let Some(dep) = self.deployments.get_mut(&pool) {
+                dep.remove(&pid);
+            }
+        }
+        self.sched.forget(pid);
+        // pod deletion is an API request too
+        self.api.admit(now);
+        // freed resources: pods in the *active* queue can retry now; pods in
+        // back-off keep sleeping (the paper's §4.2/4.3 pathology).
+        self.run_scheduler();
+    }
+
+    // ---------------------------------------------------------------
+    // autoscaler reconciliation
+    // ---------------------------------------------------------------
+    fn autoscale(&mut self) {
+        let now = self.now();
+        // VPA: publish right-sized pod templates to the scaler once a
+        // type's usage estimate is trustworthy
+        if self.cfg.autoscale.vpa {
+            let updates: Vec<(String, crate::k8s::resources::Resources)> = self
+                .engine
+                .dag()
+                .types
+                .iter()
+                .enumerate()
+                .filter(|(i, t)| {
+                    self.completed_by_type[*i] >= self.cfg.autoscale.vpa_min_samples
+                        && t.cpu_used_m != t.requests.cpu_m
+                })
+                .map(|(_, t)| {
+                    (
+                        t.name.clone(),
+                        crate::k8s::resources::Resources::new(t.cpu_used_m, t.requests.mem_mb),
+                    )
+                })
+                .collect();
+            if let Some(s) = &mut self.scaler {
+                for (name, req) in updates {
+                    s.update_pool_requests(&name, req);
+                }
+            }
+        }
+        let Some(scaler) = &mut self.scaler else {
+            return;
+        };
+        let mut backlogs = BTreeMap::new();
+        let mut current = BTreeMap::new();
+        for spec in scaler.pools().to_vec() {
+            let b = self
+                .broker
+                .queue(&spec.name)
+                .map(|q| q.backlog())
+                .unwrap_or(0);
+            backlogs.insert(spec.name.clone(), b);
+            current.insert(
+                spec.name.clone(),
+                self.deployments
+                    .get(&spec.name)
+                    .map(|d| d.len())
+                    .unwrap_or(0),
+            );
+            self.metrics
+                .set(&format!("replicas::{}", spec.name), now, 0.0_f64.max(
+                    self.deployments
+                        .get(&spec.name)
+                        .map(|d| d.len())
+                        .unwrap_or(0) as f64,
+                ));
+        }
+        let desired = self.scaler.as_mut().unwrap().poll(now, &backlogs, &current);
+        for (pool, want) in desired {
+            let have = self
+                .deployments
+                .get(&pool)
+                .map(|d| d.len())
+                .unwrap_or(0);
+            if want > have {
+                for _ in 0..(want - have) {
+                    self.create_worker(&pool);
+                }
+            } else if want < have {
+                self.scale_down(&pool, have - want);
+            }
+        }
+        self.run_scheduler();
+    }
+
+    /// Remove `n` workers from a pool: pending pods first, then idle
+    /// running workers, then mark busy workers Draining.
+    fn scale_down(&mut self, pool: &str, n: usize) {
+        let mut remaining = n;
+        let members: Vec<PodId> = self
+            .deployments
+            .get(pool)
+            .map(|d| d.iter().copied().collect())
+            .unwrap_or_default();
+        // 1. pending (never scheduled) pods
+        for &pid in &members {
+            if remaining == 0 {
+                return;
+            }
+            if self.pods[pid.0 as usize].phase == PodPhase::Pending {
+                self.terminate_pod(pid, PodPhase::Deleted);
+                remaining -= 1;
+            }
+        }
+        // also starting pods that haven't begun work
+        for &pid in &members {
+            if remaining == 0 {
+                return;
+            }
+            if self.pods[pid.0 as usize].phase == PodPhase::Starting {
+                self.terminate_pod(pid, PodPhase::Deleted);
+                remaining -= 1;
+            }
+        }
+        // 2. idle running workers
+        let idle: Vec<PodId> = self
+            .idle_workers
+            .get(pool)
+            .map(|d| d.iter().copied().collect())
+            .unwrap_or_default();
+        for pid in idle {
+            if remaining == 0 {
+                return;
+            }
+            if self.pods[pid.0 as usize].phase == PodPhase::Running {
+                self.idle_workers
+                    .get_mut(pool)
+                    .unwrap()
+                    .retain(|&p| p != pid);
+                self.terminate_pod(pid, PodPhase::Deleted);
+                remaining -= 1;
+            }
+        }
+        // 3. drain busy workers (terminate after current task)
+        for &pid in &members {
+            if remaining == 0 {
+                return;
+            }
+            let pod = &mut self.pods[pid.0 as usize];
+            if pod.phase == PodPhase::Running {
+                pod.phase = PodPhase::Draining;
+                remaining -= 1;
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // event handlers
+    // ---------------------------------------------------------------
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::JobAdmitted { pod } => {
+                // job controller creates the pod object after its reconcile
+                let done = self.api.admit(self.now())
+                    + SimTime::from_millis(self.cfg.job_controller_ms);
+                self.q.schedule_at(done, Ev::PodCreated { pod });
+            }
+            Ev::PodCreated { pod } => {
+                if self.pods[pod.0 as usize].phase == PodPhase::Pending {
+                    self.sched.enqueue(pod);
+                    self.run_scheduler();
+                }
+            }
+            Ev::BackoffExpire { pod } => {
+                if self.pods[pod.0 as usize].phase == PodPhase::Pending
+                    && self.sched.is_sleeping(pod)
+                {
+                    self.sched.enqueue(pod);
+                    self.run_scheduler();
+                }
+            }
+            Ev::PodStarted { pod } => {
+                let now = self.now();
+                if self.pods[pod.0 as usize].is_terminal() {
+                    return; // deleted while starting
+                }
+                // failure injection: crash at container start
+                if self.cfg.pod_failure_prob > 0.0
+                    && self.rng.f64() < self.cfg.pod_failure_prob
+                {
+                    self.metrics.inc("pod_failures", 1);
+                    let payload = self.pods[pod.0 as usize].payload.clone();
+                    self.terminate_pod(pod, PodPhase::Deleted);
+                    match payload {
+                        Payload::JobBatch { tasks } => {
+                            // job controller recreates the pod for the batch
+                            self.create_job(tasks);
+                        }
+                        Payload::Worker { .. } => {
+                            // deployment controller replaces the worker on
+                            // the next autoscale tick (replica count short)
+                        }
+                    }
+                    return;
+                }
+                let p = &mut self.pods[pod.0 as usize];
+                p.phase = PodPhase::Running;
+                p.running_at = Some(now);
+                match p.payload.clone() {
+                    Payload::JobBatch { tasks } => {
+                        self.batch_queue[pod.0 as usize] = tasks.into_iter().collect();
+                        let first = self.batch_queue[pod.0 as usize]
+                            .front()
+                            .copied()
+                            .expect("non-empty batch");
+                        self.start_task(pod, first);
+                    }
+                    Payload::Worker { pool } => {
+                        if let Some(task) = self.broker.fetch(&pool) {
+                            let now = self.now();
+                            self.q.schedule_at(
+                                now + SimTime::from_millis(self.cfg.fetch_ms),
+                                Ev::WorkerFetched { pod, task },
+                            );
+                        } else {
+                            self.idle_workers
+                                .entry(pool)
+                                .or_default()
+                                .push_back(pod);
+                        }
+                    }
+                }
+            }
+            Ev::WorkerFetched { pod, task } => {
+                if self.pods[pod.0 as usize].is_terminal() {
+                    // worker deleted between fetch and start: requeue
+                    let pool = self.engine.dag().type_name(task).to_string();
+                    self.broker.nack_requeue(&pool, task);
+                    self.wake_idle_worker(&pool);
+                    return;
+                }
+                self.start_task(pod, task);
+            }
+            Ev::TaskDone { pod, task } => {
+                if self.pods[pod.0 as usize].is_terminal()
+                    || self.current_task[pod.0 as usize] != Some(task)
+                {
+                    return; // pod was killed; the task was requeued/recreated
+                }
+                self.current_task[pod.0 as usize] = None;
+                let now = self.now();
+                let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
+                self.trace.finished(task, now);
+                self.record_running(ttype, -1);
+                self.completed_by_type[ttype.0 as usize] += 1;
+                let ready = self.engine.complete(task);
+                self.dispatch_ready(ready);
+                // advance the pod
+                match self.pods[pod.0 as usize].payload.clone() {
+                    Payload::JobBatch { .. } => {
+                        self.batch_queue[pod.0 as usize].pop_front();
+                        if let Some(&next) = self.batch_queue[pod.0 as usize].front() {
+                            self.start_task(pod, next);
+                        } else {
+                            self.terminate_pod(pod, PodPhase::Succeeded);
+                        }
+                    }
+                    Payload::Worker { pool } => {
+                        self.broker.ack(&pool);
+                        self.record_queue_depth(ttype, &pool);
+                        if self.pods[pod.0 as usize].phase == PodPhase::Draining {
+                            self.terminate_pod(pod, PodPhase::Succeeded);
+                        } else if let Some(next) = self.broker.fetch(&pool) {
+                            self.q.schedule_at(
+                                now + SimTime::from_millis(self.cfg.fetch_ms),
+                                Ev::WorkerFetched { pod, task: next },
+                            );
+                        } else {
+                            self.idle_workers
+                                .entry(pool)
+                                .or_default()
+                                .push_back(pod);
+                        }
+                    }
+                }
+            }
+            Ev::FlushTimer { type_idx, deadline } => {
+                let tname = self.engine.dag().types[type_idx as usize].name.clone();
+                if let Some(batch) = self.batcher.timer_fired(&tname, deadline) {
+                    self.create_job(batch);
+                }
+            }
+            Ev::NodeEvent { node, up } => {
+                if up {
+                    self.nodes[node].failed = false;
+                    self.run_scheduler(); // capacity restored
+                } else {
+                    self.fail_node(node);
+                }
+            }
+            Ev::AutoscaleTick => {
+                self.autoscale();
+                if !self.engine.is_done() {
+                    let poll = self
+                        .scaler
+                        .as_ref()
+                        .map(|s| s.cfg.poll_ms)
+                        .unwrap_or(15_000);
+                    self.q
+                        .schedule_in(SimTime::from_millis(poll), Ev::AutoscaleTick);
+                }
+            }
+        }
+    }
+}
+
+/// Run a workflow under an execution model on the simulated cluster.
+pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
+    let model_name = model.name().to_string();
+    let (engine, initial_ready) = Engine::new(dag);
+
+    let batcher = match &model {
+        ExecModel::Clustered(c) => Batcher::new(c.clone()),
+        _ => Batcher::new(ClusteringConfig::none()),
+    };
+
+    let mut broker = Broker::new();
+    let mut deployments = BTreeMap::new();
+    let mut idle_workers = BTreeMap::new();
+    // generic-pool pod template: max requests over every task type (§3.3's
+    // "universal image" problem, resource-wise)
+    let generic_requests = engine.dag().types.iter().fold(
+        crate::k8s::resources::Resources::ZERO,
+        |acc, t| crate::k8s::resources::Resources {
+            cpu_m: acc.cpu_m.max(t.requests.cpu_m),
+            mem_mb: acc.mem_mb.max(t.requests.mem_mb),
+        },
+    );
+    let scaler = match &model {
+        ExecModel::WorkerPools { pooled_types } => {
+            let mut specs = Vec::new();
+            for t in pooled_types {
+                broker.declare(t);
+                deployments.insert(t.clone(), BTreeSet::new());
+                idle_workers.insert(t.clone(), VecDeque::new());
+                let ty = engine
+                    .dag()
+                    .type_id(t)
+                    .unwrap_or_else(|| panic!("pooled type '{t}' not in workflow"));
+                specs.push(PoolSpec {
+                    name: t.clone(),
+                    requests: engine.dag().types[ty.0 as usize].requests,
+                });
+            }
+            Some(Autoscaler::new(cfg.autoscale.clone(), specs))
+        }
+        ExecModel::GenericPool => {
+            broker.declare(GENERIC_POOL);
+            deployments.insert(GENERIC_POOL.to_string(), BTreeSet::new());
+            idle_workers.insert(GENERIC_POOL.to_string(), VecDeque::new());
+            Some(Autoscaler::new(
+                cfg.autoscale.clone(),
+                vec![PoolSpec {
+                    name: GENERIC_POOL.to_string(),
+                    requests: generic_requests,
+                }],
+            ))
+        }
+        _ => None,
+    };
+
+    // pre-resolve the hot gauges (see §Perf)
+    let mut metrics = Registry::new();
+    let g_running = metrics.gauge_id("running_tasks");
+    let g_cpu = metrics.gauge_id("cpu_allocated_m");
+    let g_pending = metrics.gauge_id("pending_pods");
+    let g_by_type: Vec<crate::metrics::GaugeId> = engine
+        .dag()
+        .types
+        .iter()
+        .map(|t| metrics.gauge_id(&format!("running::{}", t.name)))
+        .collect();
+    let g_queue_by_type: Vec<Option<crate::metrics::GaugeId>> = engine
+        .dag()
+        .types
+        .iter()
+        .map(|t| match &model {
+            ExecModel::WorkerPools { pooled_types }
+                if pooled_types.iter().any(|p| p == &t.name) =>
+            {
+                Some(metrics.gauge_id(&format!("queue::{}", t.name)))
+            }
+            _ => None,
+        })
+        .collect();
+    let g_queue_generic = matches!(model, ExecModel::GenericPool)
+        .then(|| metrics.gauge_id(&format!("queue::{GENERIC_POOL}")));
+    let n_types = engine.dag().types.len();
+
+    let mut world = World {
+        rng: crate::util::rng::Rng::new(cfg.seed ^ 0xFA11),
+        nodes: paper_cluster(cfg.nodes),
+        sched: Scheduler::new(cfg.sched.clone()),
+        api: ApiServer::new(cfg.api.clone()),
+        engine,
+        batcher,
+        broker,
+        scaler,
+        deployments,
+        idle_workers,
+        batch_queue: Vec::new(),
+        current_task: Vec::new(),
+        throttle_wait: VecDeque::new(),
+        jobs_in_flight: 0,
+        generic_requests,
+        metrics,
+        trace: Trace::new(),
+        running_tasks: 0,
+        pending_count: 0,
+        completed_by_type: vec![0; n_types],
+        g_running,
+        g_cpu,
+        g_pending,
+        g_by_type,
+        g_queue_by_type,
+        g_queue_generic,
+        q: EventQueue::new(),
+        pods: Vec::new(),
+        cfg,
+        model,
+    };
+
+    world.metrics.set("running_tasks", SimTime::ZERO, 0.0);
+    for &(at_ms, node, up) in &world.cfg.node_events.clone() {
+        assert!(node < world.nodes.len(), "node event for unknown node {node}");
+        world
+            .q
+            .schedule_at(SimTime::from_millis(at_ms), Ev::NodeEvent { node, up });
+    }
+    world.dispatch_ready(initial_ready);
+    if world.scaler.is_some() {
+        // first poll fires quickly so pools can start warming up
+        world
+            .q
+            .schedule_in(SimTime::from_millis(1_000), Ev::AutoscaleTick);
+    }
+
+    let max_ms = (world.cfg.max_sim_s * 1000.0) as u64;
+    let mut makespan = SimTime::ZERO;
+    while let Some((t, ev)) = world.q.pop() {
+        if t.as_millis() > max_ms {
+            log::warn!(
+                "simulation wall cap hit at {t} with {} tasks outstanding",
+                world.engine.n_outstanding()
+            );
+            break;
+        }
+        world.handle(ev);
+        if world.engine.is_done() {
+            makespan = world.q.now();
+            break;
+        }
+    }
+    assert!(
+        world.engine.is_done(),
+        "simulation ended with {} of {} tasks incomplete (deadlock?)",
+        world.engine.n_outstanding(),
+        world.engine.dag().len()
+    );
+
+    // summary metrics
+    let t_end = makespan.as_secs_f64();
+    let avg_running = world
+        .metrics
+        .gauge("running_tasks")
+        .map(|s| s.time_average(0.0, t_end))
+        .unwrap_or(0.0);
+    let total_cpu = world.cfg.nodes as f64 * 4_000.0;
+    let avg_cpu = world
+        .metrics
+        .gauge("cpu_allocated_m")
+        .map(|s| s.time_average(0.0, t_end) / total_cpu)
+        .unwrap_or(0.0);
+
+    SimResult {
+        model_name,
+        makespan,
+        pods_created: world.metrics.counter("pods_created"),
+        api_requests: world.api.requests_total,
+        sched_backoffs: world.sched.backoffs_total,
+        avg_running_tasks: avg_running,
+        avg_cpu_utilization: avg_cpu,
+        trace: world.trace,
+        metrics: world.metrics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::montage::{generate, MontageConfig};
+
+    fn small_dag() -> Dag {
+        generate(&MontageConfig {
+            grid_w: 3,
+            grid_h: 3,
+            diagonals: true,
+            seed: 1,
+        })
+    }
+
+    #[test]
+    fn job_based_completes_small_workflow() {
+        let res = run(small_dag(), ExecModel::JobBased, SimConfig::with_nodes(4));
+        assert!(res.makespan > SimTime::ZERO);
+        // every task got its own pod
+        assert_eq!(res.pods_created as usize, small_dag().len());
+        assert!(res.avg_running_tasks > 0.0);
+    }
+
+    #[test]
+    fn clustered_uses_fewer_pods() {
+        let dag = small_dag();
+        let n = dag.len();
+        let res = run(
+            dag,
+            ExecModel::Clustered(ClusteringConfig::paper_default()),
+            SimConfig::with_nodes(4),
+        );
+        assert!(
+            (res.pods_created as usize) < n,
+            "clustering must reduce pod count: {} vs {n}",
+            res.pods_created
+        );
+    }
+
+    #[test]
+    fn worker_pools_completes() {
+        let res = run(
+            small_dag(),
+            ExecModel::paper_hybrid_pools(),
+            SimConfig::with_nodes(4),
+        );
+        assert!(res.makespan > SimTime::ZERO);
+        assert!(res.avg_running_tasks > 0.0);
+    }
+
+    #[test]
+    fn all_tasks_traced_exactly_once() {
+        for model in [
+            ExecModel::JobBased,
+            ExecModel::Clustered(ClusteringConfig::paper_default()),
+            ExecModel::paper_hybrid_pools(),
+        ] {
+            let dag = small_dag();
+            let n = dag.len();
+            let res = run(dag, model, SimConfig::with_nodes(4));
+            assert_eq!(res.trace.records.len(), n);
+            for r in &res.trace.records {
+                assert!(r.started_at.is_some(), "{:?} never started", r.task);
+                assert!(r.finished_at.is_some(), "{:?} never finished", r.task);
+                assert!(r.started_at.unwrap() >= r.ready_at);
+                assert!(r.finished_at.unwrap() > r.started_at.unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn dependencies_respected_in_trace() {
+        let dag = small_dag();
+        let succs: Vec<(TaskId, Vec<TaskId>)> = (0..dag.len())
+            .map(|i| {
+                let t = TaskId(i as u32);
+                (t, dag.successors(t).to_vec())
+            })
+            .collect();
+        let res = run(dag, ExecModel::JobBased, SimConfig::with_nodes(4));
+        for (t, ss) in succs {
+            let t_fin = res.trace.record(t).unwrap().finished_at.unwrap();
+            for s in ss {
+                let s_start = res.trace.record(s).unwrap().started_at.unwrap();
+                assert!(
+                    s_start >= t_fin,
+                    "dependency violated: {s:?} started before {t:?} finished"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pools_beat_plain_jobs_on_parallel_stage_heavy_workflow() {
+        let mk = || {
+            generate(&MontageConfig {
+                grid_w: 6,
+                grid_h: 6,
+                diagonals: true,
+                seed: 2,
+            })
+        };
+        let jobs = run(mk(), ExecModel::JobBased, SimConfig::with_nodes(4));
+        let pools = run(mk(), ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4));
+        assert!(
+            pools.makespan < jobs.makespan,
+            "pools {} vs jobs {}",
+            pools.makespan,
+            jobs.makespan
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(small_dag(), ExecModel::JobBased, SimConfig::with_nodes(4));
+        let b = run(small_dag(), ExecModel::JobBased, SimConfig::with_nodes(4));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.pods_created, b.pods_created);
+        assert_eq!(a.api_requests, b.api_requests);
+    }
+
+    #[test]
+    fn generic_pool_completes_but_wastes_resources() {
+        // wide parallel stages: the generic pod template (max requests over
+        // all types = mAdd's 2000m) halves the worker slots (§3.3)
+        let mk = || {
+            generate(&MontageConfig {
+                grid_w: 10,
+                grid_h: 10,
+                diagonals: true,
+                seed: 4,
+            })
+        };
+        let dag = mk();
+        let n = dag.len();
+        let generic = run(dag, ExecModel::GenericPool, SimConfig::with_nodes(4));
+        assert_eq!(generic.trace.records.len(), n);
+        let typed = run(
+            mk(),
+            ExecModel::WorkerPools {
+                pooled_types: crate::workflow::montage::TYPE_NAMES
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+            },
+            SimConfig::with_nodes(4),
+        );
+        assert!(
+            typed.makespan < generic.makespan,
+            "typed {} vs generic {}",
+            typed.makespan,
+            generic.makespan
+        );
+    }
+
+    #[test]
+    fn job_throttle_cuts_backoffs_and_makespan() {
+        // §5 future work: "improvement of the job queuing mechanism in the
+        // job-based model to reduce the number of requested Pods, thus
+        // mitigating the main flaw of the model" — confirmed.
+        let mk = || {
+            generate(&MontageConfig {
+                grid_w: 8,
+                grid_h: 8,
+                diagonals: true,
+                seed: 4,
+            })
+        };
+        let mut throttled_cfg = SimConfig::with_nodes(4);
+        throttled_cfg.max_pending_pods = Some(8);
+        let throttled = run(mk(), ExecModel::JobBased, throttled_cfg);
+        let unthrottled = run(mk(), ExecModel::JobBased, SimConfig::with_nodes(4));
+        assert_eq!(throttled.trace.records.len(), mk().len());
+        assert!(
+            throttled.sched_backoffs < unthrottled.sched_backoffs / 2,
+            "throttle should slash back-offs: {} vs {}",
+            throttled.sched_backoffs,
+            unthrottled.sched_backoffs
+        );
+        assert!(
+            throttled.makespan <= unthrottled.makespan,
+            "throttle should not slow the run: {} vs {}",
+            throttled.makespan,
+            unthrottled.makespan
+        );
+        assert!(throttled.metrics.counter("throttled_batches") > 0);
+    }
+
+    #[test]
+    fn vpa_rightsizing_speeds_up_pools() {
+        // §5 future work: with VPA, workers request observed usage
+        // (mDiffFit 300m vs 500m requested) -> more fit per node
+        let mk = || {
+            generate(&MontageConfig {
+                grid_w: 14,
+                grid_h: 14,
+                diagonals: true,
+                seed: 6,
+            })
+        };
+        let mut vpa_cfg = SimConfig::with_nodes(4);
+        vpa_cfg.autoscale.vpa = true;
+        let with_vpa = run(mk(), ExecModel::paper_hybrid_pools(), vpa_cfg);
+        let without = run(mk(), ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4));
+        assert_eq!(with_vpa.trace.records.len(), mk().len());
+        assert!(
+            with_vpa.makespan < without.makespan,
+            "VPA {} vs {}",
+            with_vpa.makespan,
+            without.makespan
+        );
+        // capacity still never exceeded
+        let cap = 4.0 * 4000.0;
+        for &(_, v) in with_vpa.metrics.gauge("cpu_allocated_m").unwrap().points() {
+            assert!(v <= cap + 1e-9);
+        }
+    }
+
+    #[test]
+    fn node_failure_recovers_all_tasks() {
+        for model in [
+            ExecModel::JobBased,
+            ExecModel::Clustered(ClusteringConfig::paper_default()),
+            ExecModel::paper_hybrid_pools(),
+        ] {
+            let dag = small_dag();
+            let n = dag.len();
+            let mut cfg = SimConfig::with_nodes(4);
+            // node 0 dies mid-run, comes back much later
+            cfg.node_events = vec![(30_000, 0, false), (200_000, 0, true)];
+            let res = run(dag, model.clone(), cfg);
+            assert_eq!(res.trace.records.len(), n, "{}", model.name());
+            assert!(res.metrics.counter("node_failures") == 1);
+            for r in &res.trace.records {
+                assert!(r.finished_at.is_some(), "{:?} lost", r.task);
+            }
+        }
+    }
+
+    #[test]
+    fn nodes_never_overcommitted() {
+        // run and assert the cpu_allocated series never exceeds capacity
+        let res = run(
+            small_dag(),
+            ExecModel::paper_hybrid_pools(),
+            SimConfig::with_nodes(3),
+        );
+        let cap = 3.0 * 4000.0;
+        let s = res.metrics.gauge("cpu_allocated_m").unwrap();
+        for &(_, v) in s.points() {
+            assert!(v <= cap + 1e-9, "allocated {v} exceeds capacity {cap}");
+        }
+    }
+}

@@ -1,0 +1,569 @@
+//! Multi-cloud execution (§5 future work): "evaluating the execution
+//! models in a multi-cloud setting involving multiple Kubernetes clusters".
+//!
+//! A compact DES over K independent clusters, each with its own node pool,
+//! scheduler and API server (separate control planes), executing one
+//! workflow cooperatively:
+//!
+//! * **worker-pools mode**: per-type queues are *global* (the engine's
+//!   broker spans clouds); every cluster runs its own per-type pools whose
+//!   autoscaler sees the global backlog scaled by the cluster's share of
+//!   total capacity (the paper's proportional rule, federated).
+//! * **job mode**: each job is placed on the cluster with the fewest
+//!   pending pods (least-loaded dispatch).
+//!
+//! Cross-cloud data movement is the first-order cost: a task whose
+//! dependency outputs live on a different cluster pays
+//! `transfer_ms_per_dep` per remote input before executing. The bench
+//! (`fig_multicloud` section of `makespan_table`? no — `multicloud` rows in
+//! EXPERIMENTS.md §Extensions) sweeps 1x17 vs 2x9 vs 4x4+1 node splits.
+
+use crate::engine::Engine;
+use crate::k8s::api_server::{ApiServer, ApiServerConfig};
+use crate::k8s::node::{paper_cluster, Node};
+use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
+use crate::k8s::scheduler::{Scheduler, SchedulerConfig};
+use crate::sim::{EventQueue, SimTime};
+use crate::workflow::dag::Dag;
+use crate::workflow::task::TaskId;
+use std::collections::{BTreeMap, VecDeque};
+
+/// One cloud: nodes + control plane.
+struct Cloud {
+    nodes: Vec<Node>,
+    sched: Scheduler,
+    api: ApiServer,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum McMode {
+    /// One Kubernetes Job per task, least-loaded cluster placement.
+    Jobs,
+    /// Global queues + per-cloud worker pools (federated §3.3).
+    Pools,
+}
+
+#[derive(Debug, Clone)]
+pub struct McConfig {
+    /// Nodes per cluster, e.g. [17] or [9, 8] or [5, 4, 4, 4].
+    pub clusters: Vec<usize>,
+    pub mode: McMode,
+    /// Latency to move one dependency's outputs across clouds.
+    pub transfer_ms_per_dep: u64,
+    pub pod_start_ms: u64,
+    pub exec_overhead_ms: u64,
+    /// Autoscaler poll (pools mode).
+    pub poll_ms: u64,
+}
+
+impl Default for McConfig {
+    fn default() -> Self {
+        McConfig {
+            clusters: vec![9, 8],
+            mode: McMode::Pools,
+            transfer_ms_per_dep: 500,
+            pod_start_ms: 2_000,
+            exec_overhead_ms: 100,
+            poll_ms: 15_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    PodCreated { pod: PodId },
+    BackoffExpire { cloud: usize, pod: PodId },
+    PodStarted { pod: PodId },
+    TaskDone { pod: PodId, task: TaskId },
+    ScaleTick,
+}
+
+/// Result of a multi-cloud run.
+#[derive(Debug)]
+pub struct McResult {
+    pub makespan: SimTime,
+    pub pods_created: u64,
+    /// Total cross-cloud dependency transfers paid.
+    pub transfers: u64,
+    /// Tasks executed per cloud.
+    pub tasks_per_cloud: Vec<usize>,
+}
+
+struct McWorld {
+    cfg: McConfig,
+    q: EventQueue<Ev>,
+    clouds: Vec<Cloud>,
+    pods: Vec<Pod>,
+    pod_cloud: Vec<usize>,
+    engine: Engine,
+    /// Global per-type ready queues (pools mode).
+    queues: BTreeMap<String, VecDeque<TaskId>>,
+    /// Idle workers per (cloud, type).
+    idle: BTreeMap<(usize, String), VecDeque<PodId>>,
+    /// Cloud on which each completed task ran (for transfer costs).
+    task_cloud: Vec<Option<usize>>,
+    current_task: Vec<Option<TaskId>>,
+    /// Live worker count per (cloud, type).
+    workers: BTreeMap<(usize, String), usize>,
+    pods_created: u64,
+    transfers: u64,
+    tasks_per_cloud: Vec<usize>,
+    pooled_types: Vec<String>,
+}
+
+impl McWorld {
+    fn now(&self) -> SimTime {
+        self.q.now()
+    }
+
+    fn new_pod(&mut self, cloud: usize, payload: Payload) -> PodId {
+        let requests = match &payload {
+            Payload::Worker { pool } => {
+                let ty = self.engine.dag().type_id(pool).unwrap();
+                self.engine.dag().types[ty.0 as usize].requests
+            }
+            Payload::JobBatch { tasks } => self.engine.dag().type_of(tasks[0]).requests,
+        };
+        let id = PodId(self.pods.len() as u64);
+        self.pods.push(Pod::new(id, payload, requests, self.now()));
+        self.pod_cloud.push(cloud);
+        self.current_task.push(None);
+        self.pods_created += 1;
+        let now = self.now();
+        let done = self.clouds[cloud].api.admit(now);
+        self.q.schedule_at(done, Ev::PodCreated { pod: id });
+        id
+    }
+
+    fn run_scheduler(&mut self, cloud: usize) {
+        let now = self.now();
+        let c = &mut self.clouds[cloud];
+        let pass = c.sched.pass(now, &mut self.pods, &mut c.nodes);
+        for (pid, _n, bind_done) in pass.bound {
+            self.q.schedule_at(
+                bind_done + SimTime::from_millis(self.cfg.pod_start_ms),
+                Ev::PodStarted { pod: pid },
+            );
+        }
+        for (pid, until) in pass.backed_off {
+            self.q
+                .schedule_at(until, Ev::BackoffExpire { cloud, pod: pid });
+        }
+    }
+
+    /// Cross-cloud input transfer cost for running `task` on `cloud`.
+    fn transfer_cost(&mut self, task: TaskId, cloud: usize) -> SimTime {
+        let dag = self.engine.dag();
+        // dependencies = predecessors: walk successor lists is wrong way;
+        // count remote parents via task_cloud of *predecessors*. The DAG
+        // stores forward edges, so predecessors were recorded at dispatch.
+        let mut remote = 0u64;
+        for p in 0..task.0 {
+            // cheap check: only tasks whose successor list contains `task`
+            // — bounded work because montage succs lists are short except
+            // the join nodes, where the cost is genuinely real.
+            if dag.successors(TaskId(p)).contains(&task) {
+                if let Some(pc) = self.task_cloud[p as usize] {
+                    if pc != cloud {
+                        remote += 1;
+                    }
+                }
+            }
+        }
+        self.transfers += remote;
+        SimTime::from_millis(remote * self.cfg.transfer_ms_per_dep)
+    }
+
+    fn start_task(&mut self, pod: PodId, task: TaskId) {
+        let cloud = self.pod_cloud[pod.0 as usize];
+        let dur = self.engine.dag().tasks[task.0 as usize].duration;
+        let xfer = self.transfer_cost(task, cloud);
+        self.current_task[pod.0 as usize] = Some(task);
+        let at = self.now()
+            + xfer
+            + SimTime::from_millis(self.cfg.exec_overhead_ms)
+            + dur;
+        self.q.schedule_at(at, Ev::TaskDone { pod, task });
+    }
+
+    fn least_loaded_cloud(&self) -> usize {
+        (0..self.clouds.len())
+            .min_by_key(|&c| self.clouds[c].sched.queue_len() + self.clouds[c].sched.sleeping_len())
+            .unwrap()
+    }
+
+    fn dispatch(&mut self, ready: Vec<TaskId>) {
+        for t in ready {
+            let tname = self.engine.dag().type_name(t).to_string();
+            let pooled =
+                self.cfg.mode == McMode::Pools && self.pooled_types.contains(&tname);
+            if pooled {
+                self.queues.get_mut(&tname).unwrap().push_back(t);
+                self.wake_idle(&tname);
+            } else {
+                let cloud = self.least_loaded_cloud();
+                self.new_pod(cloud, Payload::JobBatch { tasks: vec![t] });
+            }
+        }
+    }
+
+    fn wake_idle(&mut self, tname: &str) {
+        for c in 0..self.clouds.len() {
+            let key = (c, tname.to_string());
+            while let Some(&pid) = self.idle.get(&key).and_then(|d| d.front()) {
+                if self.pods[pid.0 as usize].phase != PodPhase::Running {
+                    self.idle.get_mut(&key).unwrap().pop_front();
+                    continue;
+                }
+                if let Some(t) = self.queues.get_mut(tname).and_then(|q| q.pop_front()) {
+                    self.idle.get_mut(&key).unwrap().pop_front();
+                    self.start_task(pid, t);
+                } else {
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Federated autoscale: each cloud's desired worker count per type is
+    /// the global backlog split proportionally to cluster capacity.
+    fn scale(&mut self) {
+        let total_cpu: u64 = self
+            .clouds
+            .iter()
+            .map(|c| c.nodes.iter().map(|n| n.capacity.cpu_m).sum::<u64>())
+            .sum();
+        for ty in self.pooled_types.clone() {
+            let backlog = self.queues[&ty].len();
+            let req = {
+                let tid = self.engine.dag().type_id(&ty).unwrap();
+                self.engine.dag().types[tid.0 as usize].requests.cpu_m
+            };
+            for c in 0..self.clouds.len() {
+                let cloud_cpu: u64 =
+                    self.clouds[c].nodes.iter().map(|n| n.capacity.cpu_m).sum();
+                let mut share =
+                    ((backlog as u64 * cloud_cpu) / total_cpu.max(1)) as usize;
+                // never strand a non-empty queue: cloud 0 guarantees one
+                if backlog > 0 && c == 0 {
+                    share = share.max(1);
+                }
+                let cap = (cloud_cpu / req.max(1)) as usize;
+                let want = share.min(cap.max(1));
+                let key = (c, ty.clone());
+                let have = *self.workers.get(&key).unwrap_or(&0);
+                if want > have {
+                    for _ in 0..(want - have) {
+                        self.new_pod(c, Payload::Worker { pool: ty.clone() });
+                    }
+                    *self.workers.get_mut(&key).unwrap() += want - have;
+                } else if want < have {
+                    // scale down: terminate idle workers (and pending ones)
+                    // so other pools can claim the capacity
+                    let mut to_kill = have - want;
+                    let idle: Vec<PodId> = self
+                        .idle
+                        .get(&key)
+                        .map(|d| d.iter().copied().collect())
+                        .unwrap_or_default();
+                    for pid in idle {
+                        if to_kill == 0 {
+                            break;
+                        }
+                        if self.pods[pid.0 as usize].phase == PodPhase::Running {
+                            self.idle.get_mut(&key).unwrap().retain(|&p| p != pid);
+                            self.terminate(pid);
+                            *self.workers.get_mut(&key).unwrap() -= 1;
+                            to_kill -= 1;
+                        }
+                    }
+                    // pending workers of this pool can also be deleted
+                    if to_kill > 0 {
+                        let pending: Vec<PodId> = self
+                            .pods
+                            .iter()
+                            .filter(|p| {
+                                p.phase == PodPhase::Pending
+                                    && self.pod_cloud[p.id.0 as usize] == c
+                                    && p.pool_name() == Some(&ty)
+                            })
+                            .map(|p| p.id)
+                            .collect();
+                        for pid in pending {
+                            if to_kill == 0 {
+                                break;
+                            }
+                            self.pods[pid.0 as usize].phase = PodPhase::Deleted;
+                            self.clouds[c].sched.forget(pid);
+                            *self.workers.get_mut(&key).unwrap() -= 1;
+                            to_kill -= 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn terminate(&mut self, pid: PodId) {
+        let cloud = self.pod_cloud[pid.0 as usize];
+        let req = self.pods[pid.0 as usize].requests;
+        if let Some(n) = self.pods[pid.0 as usize].node {
+            self.clouds[cloud].nodes[n.0].release(req);
+        }
+        self.pods[pid.0 as usize].phase = PodPhase::Succeeded;
+        self.clouds[cloud].sched.forget(pid);
+        self.run_scheduler(cloud);
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::PodCreated { pod } => {
+                let cloud = self.pod_cloud[pod.0 as usize];
+                self.clouds[cloud].sched.enqueue(pod);
+                self.run_scheduler(cloud);
+            }
+            Ev::BackoffExpire { cloud, pod } => {
+                if self.pods[pod.0 as usize].phase == PodPhase::Pending {
+                    self.clouds[cloud].sched.enqueue(pod);
+                    self.run_scheduler(cloud);
+                }
+            }
+            Ev::PodStarted { pod } => {
+                if self.pods[pod.0 as usize].is_terminal() {
+                    return;
+                }
+                self.pods[pod.0 as usize].phase = PodPhase::Running;
+                match self.pods[pod.0 as usize].payload.clone() {
+                    Payload::JobBatch { tasks } => self.start_task(pod, tasks[0]),
+                    Payload::Worker { pool } => {
+                        if let Some(t) =
+                            self.queues.get_mut(&pool).and_then(|q| q.pop_front())
+                        {
+                            self.start_task(pod, t);
+                        } else {
+                            let c = self.pod_cloud[pod.0 as usize];
+                            self.idle.entry((c, pool)).or_default().push_back(pod);
+                        }
+                    }
+                }
+            }
+            Ev::TaskDone { pod, task } => {
+                let cloud = self.pod_cloud[pod.0 as usize];
+                self.current_task[pod.0 as usize] = None;
+                self.task_cloud[task.0 as usize] = Some(cloud);
+                self.tasks_per_cloud[cloud] += 1;
+                let ready = self.engine.complete(task);
+                self.dispatch(ready);
+                match self.pods[pod.0 as usize].payload.clone() {
+                    Payload::JobBatch { .. } => self.terminate(pod),
+                    Payload::Worker { pool } => {
+                        if let Some(t) =
+                            self.queues.get_mut(&pool).and_then(|q| q.pop_front())
+                        {
+                            self.start_task(pod, t);
+                        } else {
+                            self.idle.entry((cloud, pool)).or_default().push_back(pod);
+                        }
+                    }
+                }
+            }
+            Ev::ScaleTick => {
+                self.scale();
+                if !self.engine.is_done() {
+                    self.q
+                        .schedule_in(SimTime::from_millis(self.cfg.poll_ms), Ev::ScaleTick);
+                }
+            }
+        }
+    }
+}
+
+/// Run a workflow across multiple clouds.
+pub fn run(dag: Dag, cfg: McConfig) -> McResult {
+    let n_tasks = dag.len();
+    let (engine, initial) = Engine::new(dag);
+    let pooled_types: Vec<String> = ["mProject", "mDiffFit", "mBackground"]
+        .iter()
+        .filter(|t| engine.dag().type_id(t).is_some())
+        .map(|s| s.to_string())
+        .collect();
+    let clouds: Vec<Cloud> = cfg
+        .clusters
+        .iter()
+        .map(|&n| Cloud {
+            nodes: paper_cluster(n),
+            sched: Scheduler::new(SchedulerConfig::default()),
+            api: ApiServer::new(ApiServerConfig::default()),
+        })
+        .collect();
+    let n_clouds = clouds.len();
+    let mut queues = BTreeMap::new();
+    let mut workers = BTreeMap::new();
+    for t in &pooled_types {
+        queues.insert(t.clone(), VecDeque::new());
+        for c in 0..n_clouds {
+            workers.insert((c, t.clone()), 0usize);
+        }
+    }
+    let mut w = McWorld {
+        q: EventQueue::new(),
+        clouds,
+        pods: Vec::new(),
+        pod_cloud: Vec::new(),
+        engine: w_engine_hack(engine),
+        queues,
+        idle: BTreeMap::new(),
+        task_cloud: vec![None; n_tasks],
+        current_task: Vec::new(),
+        workers,
+        pods_created: 0,
+        transfers: 0,
+        tasks_per_cloud: vec![0; n_clouds],
+        pooled_types,
+        cfg,
+    };
+    if w.cfg.mode == McMode::Pools {
+        w.q.schedule_in(SimTime::from_millis(1000), Ev::ScaleTick);
+    }
+    w.dispatch(initial);
+    let mut makespan = SimTime::ZERO;
+    let cap = SimTime::from_secs_f64(24.0 * 3600.0); // livelock guard
+    while let Some((t, ev)) = w.q.pop() {
+        assert!(
+            t <= cap,
+            "multicloud run exceeded 24h simulated with {} tasks outstanding",
+            w.engine.n_outstanding()
+        );
+        w.handle(ev);
+        if w.engine.is_done() {
+            makespan = w.q.now();
+            break;
+        }
+    }
+    assert!(
+        w.engine.is_done(),
+        "multicloud run deadlocked with {} outstanding",
+        w.engine.n_outstanding()
+    );
+    McResult {
+        makespan,
+        pods_created: w.pods_created,
+        transfers: w.transfers,
+        tasks_per_cloud: w.tasks_per_cloud,
+    }
+}
+
+// identity helper to keep field-init ordering readable above
+fn w_engine_hack(e: Engine) -> Engine {
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::montage::{generate, MontageConfig};
+
+    fn wf(g: usize) -> Dag {
+        generate(&MontageConfig {
+            grid_w: g,
+            grid_h: g,
+            diagonals: true,
+            seed: 5,
+        })
+    }
+
+    #[test]
+    fn single_cloud_completes() {
+        let r = run(
+            wf(5),
+            McConfig {
+                clusters: vec![4],
+                mode: McMode::Pools,
+                ..Default::default()
+            },
+        );
+        assert!(r.makespan > SimTime::ZERO);
+        assert_eq!(r.transfers, 0, "no cross-cloud transfers with one cloud");
+        assert_eq!(r.tasks_per_cloud.iter().sum::<usize>(), wf(5).len());
+    }
+
+    #[test]
+    fn split_cloud_pays_transfers() {
+        let r = run(
+            wf(5),
+            McConfig {
+                clusters: vec![2, 2],
+                mode: McMode::Pools,
+                ..Default::default()
+            },
+        );
+        assert!(r.transfers > 0, "expected cross-cloud dependency traffic");
+        assert!(r.tasks_per_cloud.iter().all(|&n| n > 0), "both clouds used");
+    }
+
+    #[test]
+    fn same_capacity_split_is_slower_with_transfer_cost() {
+        let single = run(
+            wf(6),
+            McConfig {
+                clusters: vec![4],
+                mode: McMode::Pools,
+                transfer_ms_per_dep: 2_000,
+                ..Default::default()
+            },
+        );
+        let split = run(
+            wf(6),
+            McConfig {
+                clusters: vec![2, 2],
+                mode: McMode::Pools,
+                transfer_ms_per_dep: 2_000,
+                ..Default::default()
+            },
+        );
+        assert!(
+            split.makespan > single.makespan,
+            "split {} vs single {}",
+            split.makespan,
+            single.makespan
+        );
+    }
+
+    #[test]
+    fn free_transfers_make_split_competitive() {
+        let single = run(
+            wf(6),
+            McConfig {
+                clusters: vec![4],
+                mode: McMode::Pools,
+                transfer_ms_per_dep: 0,
+                ..Default::default()
+            },
+        );
+        let split = run(
+            wf(6),
+            McConfig {
+                clusters: vec![2, 2],
+                mode: McMode::Pools,
+                transfer_ms_per_dep: 0,
+                ..Default::default()
+            },
+        );
+        let ratio = split.makespan.as_secs_f64() / single.makespan.as_secs_f64();
+        assert!(ratio < 1.4, "free-transfer split should be close: {ratio}");
+    }
+
+    #[test]
+    fn jobs_mode_works_across_clouds() {
+        let r = run(
+            wf(4),
+            McConfig {
+                clusters: vec![2, 1, 1],
+                mode: McMode::Jobs,
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.tasks_per_cloud.iter().sum::<usize>(), wf(4).len());
+        assert!(r.tasks_per_cloud.iter().filter(|&&n| n > 0).count() >= 2);
+    }
+}

@@ -1,0 +1,426 @@
+//! Real-time execution: the workflow runs on wall-clock time with worker
+//! "pods" as OS threads executing the *actual* Montage numerics through the
+//! PJRT runtime. This is the end-to-end path exercised by
+//! `examples/montage_e2e.rs`.
+//!
+//! Fidelity mapping (scaled-down constants, configurable):
+//!   pod creation        -> thread spawn + `pod_start_ms` sleep + artifact
+//!                          compile (the real container-start cost!)
+//!   worker pool         -> threads consuming a per-type queue (Condvar)
+//!   KEDA autoscaler     -> scaler thread polling backlogs every `poll_ms`,
+//!                          proportional allocation under a worker quota,
+//!                          scale-to-zero via idle timeout
+//!   job model           -> one thread per task, paying the full pod
+//!                          start + artifact load each time
+//!
+//! Python never runs here: the artifacts were AOT-compiled by
+//! `make artifacts`.
+
+use crate::compute::{MontageCompute, VerifyReport};
+use crate::engine::Engine;
+use crate::runtime::Runtime;
+use crate::util::stats::Summary;
+use crate::workflow::dag::Dag;
+use crate::workflow::montage::{generate, MontageConfig};
+use crate::workflow::task::TaskId;
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which execution model the real-time runner uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RealModel {
+    /// Hybrid worker pools (pools for the parallel stages, job threads for
+    /// the serial tail) — the paper's §4.4 configuration.
+    WorkerPools,
+    /// One pod (thread) per task.
+    Jobs,
+}
+
+#[derive(Debug, Clone)]
+pub struct RealtimeConfig {
+    pub grid: usize,
+    pub artifacts_dir: PathBuf,
+    /// Simulated container-start latency per pod (the paper's ~2 s, scaled
+    /// down by default so the example finishes quickly).
+    pub pod_start_ms: u64,
+    /// Autoscaler poll interval.
+    pub poll_ms: u64,
+    /// Worker idle timeout (scale-to-zero).
+    pub idle_timeout_ms: u64,
+    /// Total worker quota across pools (the "cluster size").
+    pub max_workers: usize,
+    pub model: RealModel,
+    pub seed: u64,
+    /// Apply sub-pixel pointing offsets (exercises bilinear reprojection).
+    pub warp: bool,
+}
+
+impl Default for RealtimeConfig {
+    fn default() -> Self {
+        RealtimeConfig {
+            grid: 4,
+            artifacts_dir: PathBuf::from("artifacts"),
+            pod_start_ms: 250,
+            poll_ms: 100,
+            idle_timeout_ms: 600,
+            max_workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            model: RealModel::WorkerPools,
+            seed: 42,
+            warp: true,
+        }
+    }
+}
+
+/// Per-task wall-clock record.
+#[derive(Debug, Clone)]
+pub struct RtTaskRecord {
+    pub type_name: String,
+    pub ready_ms: u64,
+    pub started_ms: u64,
+    pub finished_ms: u64,
+}
+
+/// Outcome of a real-time run.
+#[derive(Debug)]
+pub struct RealtimeReport {
+    pub model: RealModel,
+    pub makespan_ms: u64,
+    pub tasks: usize,
+    pub pods: usize,
+    pub verify: VerifyReport,
+    pub records: Vec<RtTaskRecord>,
+}
+
+impl RealtimeReport {
+    /// (wait, exec) latency summaries per task type.
+    pub fn latency_by_type(&self) -> BTreeMap<String, (Summary, Summary)> {
+        let mut m: BTreeMap<String, (Summary, Summary)> = BTreeMap::new();
+        for r in &self.records {
+            let e = m.entry(r.type_name.clone()).or_default();
+            e.0.add((r.started_ms - r.ready_ms) as f64);
+            e.1.add((r.finished_ms - r.started_ms) as f64);
+        }
+        m
+    }
+
+    pub fn throughput_tasks_per_s(&self) -> f64 {
+        self.tasks as f64 / (self.makespan_ms.max(1) as f64 / 1000.0)
+    }
+}
+
+const POOLED: [&str; 3] = ["mProject", "mDiffFit", "mBackground"];
+
+struct Shared {
+    queues: Mutex<HashMap<String, VecDeque<TaskId>>>,
+    cv: Condvar,
+    compute: MontageCompute,
+    dag: Dag,
+    shutdown: AtomicBool,
+    pods: AtomicUsize,
+    live_workers: Mutex<HashMap<String, usize>>,
+    epoch: Instant,
+}
+
+impl Shared {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+}
+
+type DoneMsg = (TaskId, u64, u64); // task, started_ms, finished_ms
+
+fn worker_loop(
+    shared: &Arc<Shared>,
+    cfg: &RealtimeConfig,
+    pool: &str,
+    done: mpsc::Sender<DoneMsg>,
+) -> Result<()> {
+    // container start + image load: sleep + compile this pool's artifacts
+    std::thread::sleep(Duration::from_millis(cfg.pod_start_ms));
+    let names = shared.compute.artifacts_for(pool);
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let rt = Runtime::load_subset(&cfg.artifacts_dir, &name_refs)?;
+    let mut idle_since = Instant::now();
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let task = {
+            let mut qs = shared.queues.lock().unwrap();
+            loop {
+                if let Some(t) = qs.get_mut(pool).and_then(|q| q.pop_front()) {
+                    break Some(t);
+                }
+                if shared.shutdown.load(Ordering::Relaxed)
+                    || idle_since.elapsed().as_millis() as u64 > cfg.idle_timeout_ms
+                {
+                    break None;
+                }
+                let (g, _to) = shared
+                    .cv
+                    .wait_timeout(qs, Duration::from_millis(50))
+                    .unwrap();
+                qs = g;
+            }
+        };
+        let Some(task) = task else {
+            break; // scale-to-zero: idle timeout
+        };
+        let started = shared.now_ms();
+        let role = shared.compute.index.role(task);
+        shared.compute.execute(&rt, role)?;
+        let finished = shared.now_ms();
+        done.send((task, started, finished)).ok();
+        idle_since = Instant::now();
+    }
+    let mut live = shared.live_workers.lock().unwrap();
+    *live.get_mut(pool).unwrap() -= 1;
+    Ok(())
+}
+
+/// One-shot job pod: start, load, run a single task, exit.
+fn job_pod(
+    shared: Arc<Shared>,
+    cfg: RealtimeConfig,
+    task: TaskId,
+    done: mpsc::Sender<DoneMsg>,
+) {
+    std::thread::spawn(move || -> () {
+        std::thread::sleep(Duration::from_millis(cfg.pod_start_ms));
+        let tname = shared.dag.type_name(task).to_string();
+        let names = shared.compute.artifacts_for(&tname);
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let rt = match Runtime::load_subset(&cfg.artifacts_dir, &name_refs) {
+            Ok(rt) => rt,
+            Err(e) => {
+                log::error!("job pod for {task:?} failed to load runtime: {e:#}");
+                return;
+            }
+        };
+        let started = shared.now_ms();
+        let role = shared.compute.index.role(task);
+        if let Err(e) = shared.compute.execute(&rt, role) {
+            log::error!("task {task:?} failed: {e:#}");
+            return;
+        }
+        let finished = shared.now_ms();
+        done.send((task, started, finished)).ok();
+    });
+}
+
+/// Proportional allocation of the worker quota across pools (the same rule
+/// as the simulated autoscaler, one replica per queued task target).
+fn desired_workers(
+    backlogs: &BTreeMap<String, usize>,
+    quota: usize,
+) -> BTreeMap<String, usize> {
+    let total: usize = backlogs.values().sum();
+    let mut out = BTreeMap::new();
+    if total == 0 {
+        for k in backlogs.keys() {
+            out.insert(k.clone(), 0);
+        }
+        return out;
+    }
+    if total <= quota {
+        for (k, &b) in backlogs {
+            out.insert(k.clone(), b);
+        }
+        return out;
+    }
+    let mut used = 0usize;
+    for (k, &b) in backlogs {
+        let share = (quota * b) / total;
+        let share = share.min(b).max(usize::from(b > 0));
+        used += share;
+        out.insert(k.clone(), share);
+    }
+    // trim if the +1 minimums overflowed the quota
+    while used > quota {
+        if let Some((_, v)) = out.iter_mut().max_by_key(|(_, v)| **v) {
+            if *v > 1 {
+                *v -= 1;
+                used -= 1;
+                continue;
+            }
+        }
+        break;
+    }
+    out
+}
+
+/// Run the Montage workflow for real: full three-layer stack.
+pub fn run(cfg: RealtimeConfig) -> Result<RealtimeReport> {
+    let wf_cfg = MontageConfig {
+        grid_w: cfg.grid,
+        grid_h: cfg.grid,
+        diagonals: false, // matches the mbgmodel/madd artifact shapes
+        seed: cfg.seed,
+    };
+    let dag = generate(&wf_cfg);
+    let n_tasks = dag.len();
+    let compute = MontageCompute::prepare(cfg.grid, 128, 32, cfg.seed, cfg.warp);
+    let (engine, initial) = Engine::new(generate(&wf_cfg));
+
+    let shared = Arc::new(Shared {
+        queues: Mutex::new(
+            POOLED
+                .iter()
+                .map(|p| (p.to_string(), VecDeque::new()))
+                .collect(),
+        ),
+        cv: Condvar::new(),
+        compute,
+        dag,
+        shutdown: AtomicBool::new(false),
+        pods: AtomicUsize::new(0),
+        live_workers: Mutex::new(POOLED.iter().map(|p| (p.to_string(), 0)).collect()),
+        epoch: Instant::now(),
+    });
+
+    let (done_tx, done_rx) = mpsc::channel::<DoneMsg>();
+    let mut engine = engine;
+    let mut ready_ms: HashMap<u32, u64> = HashMap::new();
+    let mut records: Vec<Option<RtTaskRecord>> = vec![None; n_tasks];
+
+    // dispatch: pooled types go to queues; everything else is a job pod
+    let dispatch = |tasks: Vec<TaskId>,
+                    shared: &Arc<Shared>,
+                    ready_ms: &mut HashMap<u32, u64>,
+                    done_tx: &mpsc::Sender<DoneMsg>| {
+        for t in tasks {
+            ready_ms.insert(t.0, shared.now_ms());
+            let tname = shared.dag.type_name(t).to_string();
+            let pooled =
+                cfg.model == RealModel::WorkerPools && POOLED.contains(&tname.as_str());
+            if pooled {
+                let mut qs = shared.queues.lock().unwrap();
+                qs.get_mut(&tname).unwrap().push_back(t);
+                shared.cv.notify_all();
+            } else {
+                shared.pods.fetch_add(1, Ordering::Relaxed);
+                job_pod(shared.clone(), cfg.clone(), t, done_tx.clone());
+            }
+        }
+    };
+
+    // scaler thread (worker-pools model only)
+    let scaler_handle = if cfg.model == RealModel::WorkerPools {
+        let shared2 = shared.clone();
+        let cfg2 = cfg.clone();
+        let done2 = done_tx.clone();
+        Some(std::thread::spawn(move || {
+            while !shared2.shutdown.load(Ordering::Relaxed) {
+                let backlogs: BTreeMap<String, usize> = {
+                    let qs = shared2.queues.lock().unwrap();
+                    qs.iter().map(|(k, v)| (k.clone(), v.len())).collect()
+                };
+                let desired = desired_workers(&backlogs, cfg2.max_workers);
+                {
+                    let mut live = shared2.live_workers.lock().unwrap();
+                    for (pool, want) in &desired {
+                        let have = live.get_mut(pool).unwrap();
+                        while *have < *want {
+                            *have += 1;
+                            shared2.pods.fetch_add(1, Ordering::Relaxed);
+                            let s3 = shared2.clone();
+                            let c3 = cfg2.clone();
+                            let d3 = done2.clone();
+                            let pool3 = pool.clone();
+                            std::thread::spawn(move || {
+                                if let Err(e) = worker_loop(&s3, &c3, &pool3, d3) {
+                                    log::error!("worker for {pool3} died: {e:#}");
+                                    let mut live = s3.live_workers.lock().unwrap();
+                                    if let Some(n) = live.get_mut(&pool3) {
+                                        *n = n.saturating_sub(1);
+                                    }
+                                }
+                            });
+                        }
+                        // scale-down happens via idle timeout (scale-to-zero)
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(cfg2.poll_ms));
+            }
+        }))
+    } else {
+        None
+    };
+
+    dispatch(initial, &shared, &mut ready_ms, &done_tx);
+
+    // engine loop: consume completions until the DAG drains
+    while !engine.is_done() {
+        let (task, started, finished) = done_rx
+            .recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow!("real-time run stalled (deadlock or worker crash)"))?;
+        let tname = shared.dag.type_name(task).to_string();
+        records[task.0 as usize] = Some(RtTaskRecord {
+            type_name: tname,
+            ready_ms: ready_ms[&task.0],
+            started_ms: started,
+            finished_ms: finished,
+        });
+        let newly = engine.complete(task);
+        dispatch(newly, &shared, &mut ready_ms, &done_tx);
+    }
+    let makespan_ms = shared.now_ms();
+    shared.shutdown.store(true, Ordering::Relaxed);
+    shared.cv.notify_all();
+    if let Some(h) = scaler_handle {
+        h.join().ok();
+    }
+
+    let verify = shared.compute.verify()?;
+    Ok(RealtimeReport {
+        model: cfg.model,
+        makespan_ms,
+        tasks: n_tasks,
+        pods: shared.pods.load(Ordering::Relaxed),
+        verify,
+        records: records.into_iter().map(Option::unwrap).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn desired_workers_proportional() {
+        let mut b = BTreeMap::new();
+        b.insert("a".to_string(), 30usize);
+        b.insert("b".to_string(), 10usize);
+        let d = desired_workers(&b, 8);
+        assert_eq!(d["a"] + d["b"], 8);
+        assert!(d["a"] >= 5, "{d:?}");
+        assert!(d["b"] >= 1, "{d:?}");
+    }
+
+    #[test]
+    fn desired_workers_uncontended() {
+        let mut b = BTreeMap::new();
+        b.insert("a".to_string(), 2usize);
+        b.insert("b".to_string(), 0usize);
+        let d = desired_workers(&b, 8);
+        assert_eq!(d["a"], 2);
+        assert_eq!(d["b"], 0);
+    }
+
+    #[test]
+    fn desired_workers_zero() {
+        let mut b = BTreeMap::new();
+        b.insert("a".to_string(), 0usize);
+        let d = desired_workers(&b, 8);
+        assert_eq!(d["a"], 0);
+    }
+
+    // Full real-time runs live in rust/tests/realtime_e2e.rs (they need
+    // `make artifacts`).
+}

@@ -1,0 +1,77 @@
+//! Chrome trace-event export: open the trace in `chrome://tracing` /
+//! Perfetto to see the per-pod Gantt chart of a run. Each pod is a "thread"
+//! and each task a complete event (`ph: "X"`).
+
+use super::SimResult;
+use crate::util::json::Json;
+
+/// Build the trace-event JSON for a run.
+pub fn to_chrome_trace(res: &SimResult) -> Json {
+    let mut events = Vec::new();
+    // process metadata
+    events.push(Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", 1u64.into()),
+        (
+            "args",
+            Json::obj(vec![(
+                "name",
+                Json::str(format!("hyperflow-k8s ({})", res.model_name)),
+            )]),
+        ),
+    ]));
+    for r in &res.trace.records {
+        let (Some(start), Some(end), Some(pod)) = (r.started_at, r.finished_at, r.pod)
+        else {
+            continue;
+        };
+        events.push(Json::obj(vec![
+            ("name", Json::str(&r.type_name)),
+            ("cat", Json::str("task")),
+            ("ph", Json::str("X")),
+            ("pid", 1u64.into()),
+            ("tid", pod.into()),
+            // chrome traces are in microseconds
+            ("ts", (start.as_millis() * 1000).into()),
+            ("dur", ((end - start).as_millis() * 1000).into()),
+            (
+                "args",
+                Json::obj(vec![
+                    ("task", (r.task.0 as u64).into()),
+                    ("ready_at_ms", r.ready_at.as_millis().into()),
+                ]),
+            ),
+        ]));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{driver, ExecModel};
+    use crate::workflow::montage::{generate, MontageConfig};
+
+    #[test]
+    fn trace_has_event_per_task() {
+        let dag = generate(&MontageConfig {
+            grid_w: 3,
+            grid_h: 3,
+            diagonals: false,
+            seed: 2,
+        });
+        let n = dag.len();
+        let res = driver::run(dag, ExecModel::JobBased, driver::SimConfig::with_nodes(3));
+        let j = to_chrome_trace(&res);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 metadata + n task events
+        assert_eq!(events.len(), n + 1);
+        let task_ev = &events[1];
+        assert_eq!(task_ev.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!(task_ev.get("dur").unwrap().as_u64().unwrap() > 0);
+        // serializes to parseable JSON
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,200 @@
+//! Execution traces and report generation (the data behind Figs. 3-6).
+
+pub mod chrome;
+pub mod figures;
+pub mod html;
+
+use crate::metrics::Registry;
+use crate::sim::SimTime;
+use crate::util::json::Json;
+use crate::workflow::dag::Dag;
+use crate::workflow::task::TaskId;
+use std::collections::BTreeMap;
+
+/// Per-task lifecycle record.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub task: TaskId,
+    pub type_name: String,
+    /// Dependencies satisfied; handed to the execution model.
+    pub ready_at: SimTime,
+    /// Execution began in a pod.
+    pub started_at: Option<SimTime>,
+    pub finished_at: Option<SimTime>,
+    /// Pod that executed the task.
+    pub pod: Option<u64>,
+}
+
+/// The full execution trace of one simulated run.
+///
+/// Indexed directly by TaskId (a dense u32) — a BTreeMap index here showed
+/// up in the 16k-sim profile (EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub records: Vec<TaskRecord>,
+    index: Vec<u32>,
+}
+
+const NO_RECORD: u32 = u32::MAX;
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace::default()
+    }
+
+    pub fn ready(&mut self, task: TaskId, type_name: &str, now: SimTime) {
+        let slot = task.0 as usize;
+        if slot >= self.index.len() {
+            self.index.resize(slot + 1, NO_RECORD);
+        }
+        self.index[slot] = self.records.len() as u32;
+        self.records.push(TaskRecord {
+            task,
+            type_name: type_name.to_string(),
+            ready_at: now,
+            started_at: None,
+            finished_at: None,
+            pod: None,
+        });
+    }
+
+    pub fn started(&mut self, task: TaskId, pod: u64, now: SimTime) {
+        let i = self.index[task.0 as usize] as usize;
+        self.records[i].started_at = Some(now);
+        self.records[i].pod = Some(pod);
+    }
+
+    pub fn finished(&mut self, task: TaskId, now: SimTime) {
+        let i = self.index[task.0 as usize] as usize;
+        self.records[i].finished_at = Some(now);
+    }
+
+    pub fn record(&self, task: TaskId) -> Option<&TaskRecord> {
+        let slot = task.0 as usize;
+        if slot >= self.index.len() || self.index[slot] == NO_RECORD {
+            return None;
+        }
+        Some(&self.records[self.index[slot] as usize])
+    }
+
+    /// Queueing delay (ready -> started) summary per type.
+    pub fn wait_times_by_type(&self) -> BTreeMap<String, crate::util::stats::Summary> {
+        let mut m: BTreeMap<String, crate::util::stats::Summary> = BTreeMap::new();
+        for r in &self.records {
+            if let Some(s) = r.started_at {
+                m.entry(r.type_name.clone())
+                    .or_default()
+                    .add((s - r.ready_at).as_secs_f64());
+            }
+        }
+        m
+    }
+}
+
+/// Result of one simulated workflow execution.
+#[derive(Debug)]
+pub struct SimResult {
+    pub model_name: String,
+    pub makespan: SimTime,
+    pub trace: Trace,
+    pub metrics: Registry,
+    pub pods_created: u64,
+    pub api_requests: u64,
+    pub sched_backoffs: u64,
+    /// Average number of concurrently running tasks over the makespan —
+    /// the paper's cluster-utilization subplot metric.
+    pub avg_running_tasks: f64,
+    /// Average allocated CPU fraction of the cluster over the makespan.
+    pub avg_cpu_utilization: f64,
+}
+
+impl SimResult {
+    /// The utilization series plotted in the paper's subplots:
+    /// "the number of workflow tasks executing in parallel at any time".
+    pub fn running_series(&self) -> Vec<(f64, f64)> {
+        self.metrics
+            .gauge("running_tasks")
+            .map(|s| s.points().to_vec())
+            .unwrap_or_default()
+    }
+
+    /// Per-stage running-task series (for the Gantt-like strips).
+    pub fn stage_series(&self, dag: &Dag) -> Vec<(String, Vec<(f64, f64)>)> {
+        let mut out = Vec::new();
+        for ty in &dag.types {
+            if let Some(s) = self.metrics.gauge(&format!("running::{}", ty.name)) {
+                out.push((ty.name.clone(), s.points().to_vec()));
+            }
+        }
+        out
+    }
+
+    /// Export the run as JSON (consumed by the figure benches and by
+    /// downstream analysis).
+    pub fn to_json(&self) -> Json {
+        let series: Vec<Json> = self
+            .running_series()
+            .iter()
+            .map(|&(t, v)| Json::Arr(vec![t.into(), v.into()]))
+            .collect();
+        Json::obj(vec![
+            ("model", Json::str(&self.model_name)),
+            ("makespan_s", self.makespan.as_secs_f64().into()),
+            ("pods_created", self.pods_created.into()),
+            ("api_requests", self.api_requests.into()),
+            ("sched_backoffs", self.sched_backoffs.into()),
+            ("avg_running_tasks", self.avg_running_tasks.into()),
+            ("avg_cpu_utilization", self.avg_cpu_utilization.into()),
+            ("running_tasks_series", Json::Arr(series)),
+        ])
+    }
+
+    /// CSV of the resampled utilization series (1 s grid).
+    pub fn utilization_csv(&self) -> String {
+        let mut out = String::from("t_s,running_tasks\n");
+        if let Some(s) = self.metrics.gauge("running_tasks") {
+            for (t, v) in s.resample(self.makespan.as_secs_f64(), 1.0) {
+                out.push_str(&format!("{t:.0},{v:.0}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Write a report file under `bench_out/`, creating the directory.
+pub fn write_output(name: &str, content: &str) -> std::io::Result<String> {
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path.to_string_lossy().into_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_lifecycle() {
+        let mut tr = Trace::new();
+        tr.ready(TaskId(0), "mProject", SimTime(100));
+        tr.started(TaskId(0), 7, SimTime(2_000));
+        tr.finished(TaskId(0), SimTime(14_000));
+        let r = tr.record(TaskId(0)).unwrap();
+        assert_eq!(r.ready_at, SimTime(100));
+        assert_eq!(r.pod, Some(7));
+        assert_eq!(r.finished_at, Some(SimTime(14_000)));
+    }
+
+    #[test]
+    fn wait_times_grouped_by_type() {
+        let mut tr = Trace::new();
+        tr.ready(TaskId(0), "A", SimTime(0));
+        tr.started(TaskId(0), 1, SimTime(1_000));
+        tr.ready(TaskId(1), "A", SimTime(0));
+        tr.started(TaskId(1), 2, SimTime(3_000));
+        let w = tr.wait_times_by_type();
+        assert_eq!(w["A"].len(), 2);
+        assert!((w["A"].mean() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,182 @@
+//! Parse `artifacts/manifest.json` written by `python/compile/aot.py`:
+//! the shape/dtype contract between the AOT-compiled HLO artifacts and the
+//! Rust runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub tile: usize,
+    pub overlap: usize,
+    pub grids: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    let shape = j
+        .get("shape")
+        .map_err(|e| anyhow!("{e}"))?
+        .as_arr()
+        .map_err(|e| anyhow!("{e}"))?
+        .iter()
+        .map(|v| v.as_usize().map_err(|e| anyhow!("{e}")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(|d| d.as_str())
+        .map_err(|e| anyhow!("{e}"))?
+        .to_string();
+    Ok(IoSpec { shape, dtype })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts").map_err(|e| anyhow!("{e}"))?.as_obj().map_err(|e| anyhow!("{e}"))? {
+            let file = dir.join(
+                a.get("file")
+                    .and_then(|f| f.as_str())
+                    .map_err(|e| anyhow!("{e}"))?,
+            );
+            let inputs = a
+                .get("inputs")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .map_err(|e| anyhow!("{e}"))?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .map_err(|e| anyhow!("{e}"))?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest {
+            tile: j.get("tile").and_then(|v| v.as_u64()).map_err(|e| anyhow!("{e}"))? as usize,
+            overlap: j.get("overlap").and_then(|v| v.as_u64()).map_err(|e| anyhow!("{e}"))?
+                as usize,
+            grids: j
+                .get("grids")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .map_err(|e| anyhow!("{e}"))?
+                .iter()
+                .map(|v| v.as_usize().map_err(|e| anyhow!("{e}")))
+                .collect::<Result<Vec<_>>>()?,
+            artifacts,
+            dir,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Canvas edge length for grid `g` (matches python model.canvas_size).
+    pub fn canvas_size(&self, g: usize) -> usize {
+        (g - 1) * (self.tile - self.overlap) + self.tile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"tile":128,"overlap":32,"grids":[4],"artifacts":{
+                "mproject":{"file":"mproject.hlo.txt",
+                  "inputs":[{"shape":[128,128],"dtype":"float32"},
+                            {"shape":[6],"dtype":"float32"}],
+                  "outputs":[{"shape":[128,128],"dtype":"float32"},
+                             {"shape":[128,128],"dtype":"float32"}]}}}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_fixture() {
+        let dir = std::env::temp_dir().join("hfk8s_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.tile, 128);
+        assert_eq!(m.canvas_size(4), 416);
+        let a = m.get("mproject").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].elements(), 128 * 128);
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // integration-lite: if `make artifacts` has run, the real manifest
+        // must satisfy the contract the runtime relies on.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["mproject", "mdifffit", "mbackground"] {
+            let a = m.get(name).unwrap();
+            assert!(a.file.exists(), "{:?} missing", a.file);
+            assert!(!a.outputs.is_empty());
+        }
+        assert_eq!(m.tile, 128);
+        assert_eq!(m.overlap, 32);
+    }
+}

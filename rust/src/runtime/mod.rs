@@ -1,0 +1,265 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them.
+//!
+//! The interchange format is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, so jax >= 0.5 modules load cleanly into the
+//! xla_extension 0.5.1 that the published `xla` crate links.
+//!
+//! `PjRtClient` is `Rc`-based and not `Send`: each worker-pod thread in the
+//! real-time runner owns its own `Runtime` (which also models the real
+//! system, where every pod has its own process + loaded binaries).
+
+pub mod manifest;
+
+use anyhow::{anyhow, Context, Result};
+use manifest::{ArtifactSpec, Manifest};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A loaded set of executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("artifacts", &self.execs.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+/// Host-side tensor: f32 data + shape (the only runtime dtype besides the
+/// i32 index inputs, which use [`Tensor::from_i32`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+    /// True if this tensor should be fed as i32 (index inputs).
+    pub is_i32: bool,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor {
+            data,
+            shape: shape.to_vec(),
+            is_i32: false,
+        }
+    }
+
+    pub fn from_i32(data: &[i32], shape: &[usize]) -> Self {
+        Tensor {
+            data: data.iter().map(|&v| v as f32).collect(),
+            shape: shape.to_vec(),
+            is_i32: true,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::new(vec![0.0; shape.iter().product()], shape)
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = if self.is_i32 {
+            let ints: Vec<i32> = self.data.iter().map(|&v| v as i32).collect();
+            xla::Literal::vec1(&ints)
+        } else {
+            xla::Literal::vec1(&self.data)
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+impl Runtime {
+    /// Load + compile every artifact in the manifest.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let names: Vec<String> = manifest.artifacts.keys().cloned().collect();
+        Self::load_subset_of(manifest, &names)
+    }
+
+    /// Load only the named artifacts (worker pods for one task type only
+    /// need that type's executable — the "separate container image per
+    /// pool" of §3.3).
+    pub fn load_subset(dir: impl AsRef<Path>, names: &[&str]) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let names: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+        Self::load_subset_of(manifest, &names)
+    }
+
+    fn load_subset_of(manifest: Manifest, names: &[String]) -> Result<Runtime> {
+        // silence the xla_extension client lifecycle chatter
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut execs = BTreeMap::new();
+        for name in names {
+            let spec = manifest.get(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .with_context(|| format!("loading {:?}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            execs.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            execs,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Execute `name` with the given inputs; returns one Tensor per output
+    /// (the artifacts are lowered with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.spec(name)?.clone();
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded in this runtime"))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, s)) in inputs.iter().zip(spec.inputs.iter()).enumerate() {
+            if t.shape != s.shape {
+                return Err(anyhow!(
+                    "{name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape,
+                    s.shape
+                ));
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, os) in parts.into_iter().zip(spec.outputs.iter()) {
+            let data: Vec<f32> = lit.to_vec()?;
+            out.push(Tensor::new(data, &os.shape));
+        }
+        Ok(out)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.data.len(), 6);
+        let i = Tensor::from_i32(&[1, 2], &[2]);
+        assert!(i.is_i32);
+    }
+
+    // The following tests need `make artifacts` to have run; they are the
+    // core AOT round-trip checks (python lowers, rust executes).
+
+    #[test]
+    fn mproject_identity_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_subset(&dir, &["mproject"]).unwrap();
+        let t = rt.manifest().tile;
+        let img: Vec<f32> = (0..t * t).map(|i| (i % 97) as f32 * 0.1).collect();
+        let params = Tensor::new(vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0], &[6]);
+        let out = rt
+            .execute("mproject", &[Tensor::new(img.clone(), &[t, t]), params])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        // identity warp: interior pixels match exactly, border weight 0
+        let (proj, w) = (&out[0], &out[1]);
+        for r in 0..t - 1 {
+            for c in 0..t - 1 {
+                assert_eq!(proj.data[r * t + c], img[r * t + c]);
+                assert_eq!(w.data[r * t + c], 1.0);
+            }
+        }
+        assert_eq!(w.data[t * t - 1], 0.0);
+    }
+
+    #[test]
+    fn mdifffit_recovers_constant_offset() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_subset(&dir, &["mdifffit"]).unwrap();
+        let (t, v) = (rt.manifest().tile, rt.manifest().overlap);
+        let p2: Vec<f32> = (0..t * v).map(|i| (i % 13) as f32).collect();
+        let p1: Vec<f32> = p2.iter().map(|x| x + 2.5).collect();
+        let w = vec![1.0f32; t * v];
+        let out = rt
+            .execute(
+                "mdifffit",
+                &[
+                    Tensor::new(p1, &[t, v]),
+                    Tensor::new(p2, &[t, v]),
+                    Tensor::new(w, &[t, v]),
+                ],
+            )
+            .unwrap();
+        let coeffs = &out[0];
+        assert!((coeffs.data[0] - 2.5).abs() < 1e-2, "a = {}", coeffs.data[0]);
+        assert!(coeffs.data[1].abs() < 1e-3);
+        assert!(coeffs.data[2].abs() < 1e-3);
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_subset(&dir, &["mbackground"]).unwrap();
+        let bad = Tensor::zeros(&[2, 2]);
+        let err = rt
+            .execute("mbackground", &[bad.clone(), bad.clone(), bad])
+            .unwrap_err();
+        assert!(format!("{err}").contains("shape"));
+    }
+
+    #[test]
+    fn unloaded_artifact_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_subset(&dir, &["mproject"]).unwrap();
+        assert!(rt.has("mproject"));
+        assert!(!rt.has("mdifffit"));
+    }
+}

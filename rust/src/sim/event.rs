@@ -1,0 +1,144 @@
+//! Generic discrete-event queue: a binary heap of (time, seq, event) with a
+//! monotone sequence number so same-time events pop in scheduling order
+//! (deterministic runs).
+
+use super::time::SimTime;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Entry<E: Ord> {
+    at: SimTime,
+    seq: u64,
+    event: E,
+}
+
+/// Priority queue of scheduled events.
+#[derive(Debug)]
+pub struct EventQueue<E: Ord> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    seq: u64,
+    now: SimTime,
+}
+
+impl<E: Ord> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E: Ord> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+        }
+    }
+
+    /// Current simulated time (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at`. Events scheduled in the past
+    /// are clamped to `now` (fire next).
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        let at = at.max(self.now);
+        self.seq += 1;
+        self.heap.push(Reverse(Entry {
+            at,
+            seq: self.seq,
+            event,
+        }));
+    }
+
+    /// Schedule `event` after a delay from now.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Pop the next event, advancing `now`.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|Reverse(e)| {
+            debug_assert!(e.at >= self.now, "time went backwards");
+            self.now = e.at;
+            (e.at, e.event)
+        })
+    }
+
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(e)| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule_at(SimTime(30), 3);
+        q.schedule_at(SimTime(10), 1);
+        q.schedule_at(SimTime(20), 2);
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn same_time_fifo() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..10 {
+            q.schedule_at(SimTime(5), i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn now_advances() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule_at(SimTime(100), 1);
+        assert_eq!(q.now(), SimTime::ZERO);
+        q.pop();
+        assert_eq!(q.now(), SimTime(100));
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule_at(SimTime(50), 1);
+        q.pop();
+        q.schedule_in(SimTime(25), 2);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (SimTime(75), 2));
+    }
+
+    #[test]
+    fn past_events_clamped_to_now() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule_at(SimTime(100), 1);
+        q.pop();
+        q.schedule_at(SimTime(10), 2); // in the past
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime(100));
+    }
+
+    #[test]
+    fn peek_and_len() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule_at(SimTime(5), 1);
+        assert_eq!(q.peek_time(), Some(SimTime(5)));
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event simulation core: simulated time and the event queue.
+
+pub mod event;
+pub mod time;
+
+pub use event::EventQueue;
+pub use time::SimTime;

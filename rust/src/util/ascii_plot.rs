@@ -1,0 +1,174 @@
+//! Terminal renderings of the paper's figures: utilization time series and
+//! per-stage Gantt strips. The benches print these alongside CSV/JSON dumps
+//! so "cargo bench" visually regenerates Figs. 3-6.
+
+/// Render a single time series as an ASCII area chart.
+///
+/// `series` is (seconds, value) samples; the chart resamples onto `width`
+/// columns and `height` rows.
+pub fn area_chart(title: &str, series: &[(f64, f64)], width: usize, height: usize) -> String {
+    if series.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let t_max = series.last().unwrap().0.max(1e-9);
+    let v_max = series
+        .iter()
+        .map(|&(_, v)| v)
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(1e-9);
+
+    // Resample: for each column take the max value in its time bucket
+    // (max, not mean, so short spikes stay visible like in the paper plots).
+    let mut cols = vec![0.0f64; width];
+    let mut idx = 0;
+    for c in 0..width {
+        let t_lo = t_max * c as f64 / width as f64;
+        let t_hi = t_max * (c + 1) as f64 / width as f64;
+        let mut v = f64::NEG_INFINITY;
+        while idx < series.len() && series[idx].0 < t_lo {
+            idx += 1;
+        }
+        let mut j = idx;
+        while j < series.len() && series[j].0 <= t_hi {
+            v = v.max(series[j].1);
+            j += 1;
+        }
+        if v == f64::NEG_INFINITY {
+            // carry the previous sample forward
+            v = if idx > 0 { series[idx - 1].1 } else { series[0].1 };
+        }
+        cols[c] = v;
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}  (max={v_max:.0})\n"));
+    for r in (0..height).rev() {
+        let thresh = v_max * (r as f64 + 0.5) / height as f64;
+        let label = if r == height - 1 {
+            format!("{v_max:>6.0} |")
+        } else if r == 0 {
+            format!("{:>6.0} |", 0.0)
+        } else {
+            "       |".to_string()
+        };
+        out.push_str(&label);
+        for &v in &cols {
+            out.push(if v >= thresh { '█' } else { ' ' });
+        }
+        out.push('\n');
+    }
+    out.push_str("       +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "        0{:>width$.0}s\n",
+        t_max,
+        width = width.saturating_sub(1)
+    ));
+    out
+}
+
+/// Render per-stage activity strips (a compact Gantt): one row per stage,
+/// darkness ~ number of concurrently running tasks of that stage.
+pub fn stage_strips(
+    title: &str,
+    stages: &[(String, Vec<(f64, f64)>)],
+    t_max: f64,
+    width: usize,
+) -> String {
+    let shades = [' ', '░', '▒', '▓', '█'];
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    let name_w = stages.iter().map(|(n, _)| n.len()).max().unwrap_or(4).max(4);
+    for (name, series) in stages {
+        let v_max = series
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max)
+            .max(1.0);
+        let mut row = String::new();
+        for c in 0..width {
+            let t_lo = t_max * c as f64 / width as f64;
+            let t_hi = t_max * (c + 1) as f64 / width as f64;
+            let mut v: f64 = 0.0;
+            let mut any = false;
+            for &(t, val) in series.iter() {
+                if t >= t_lo && t <= t_hi {
+                    v = v.max(val);
+                    any = true;
+                }
+                if t > t_hi {
+                    break;
+                }
+            }
+            if !any {
+                // carry-forward
+                let mut last = 0.0;
+                for &(t, val) in series.iter() {
+                    if t <= t_lo {
+                        last = val;
+                    } else {
+                        break;
+                    }
+                }
+                v = last;
+            }
+            let shade = if v <= 0.0 {
+                0
+            } else {
+                (1 + ((v / v_max) * 3.99) as usize).min(4)
+            };
+            row.push(shades[shade]);
+        }
+        out.push_str(&format!("{name:>name_w$} |{row}|\n"));
+    }
+    out.push_str(&format!(
+        "{:>name_w$} +0{:>w$.0}s\n",
+        "",
+        t_max,
+        name_w = name_w,
+        w = width - 1
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_contains_title_and_axis() {
+        let s: Vec<(f64, f64)> = (0..100).map(|i| (i as f64, (i % 10) as f64)).collect();
+        let out = area_chart("util", &s, 40, 8);
+        assert!(out.contains("util"));
+        assert!(out.lines().count() >= 10);
+        assert!(out.contains('█'));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let out = area_chart("x", &[], 10, 4);
+        assert!(out.contains("no data"));
+    }
+
+    #[test]
+    fn strip_rows_match_stages() {
+        let stages = vec![
+            ("mProject".to_string(), vec![(0.0, 2.0), (5.0, 0.0)]),
+            ("mDiffFit".to_string(), vec![(3.0, 4.0), (8.0, 0.0)]),
+        ];
+        let out = stage_strips("stages", &stages, 10.0, 30);
+        assert!(out.contains("mProject"));
+        assert!(out.contains("mDiffFit"));
+        assert_eq!(out.lines().count(), 4); // title + 2 rows + axis
+    }
+
+    #[test]
+    fn chart_peak_column_is_full_height() {
+        // constant max value -> top row should contain blocks
+        let s: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, 10.0)).collect();
+        let out = area_chart("flat", &s, 20, 5);
+        let top_row = out.lines().nth(1).unwrap();
+        assert!(top_row.contains('█'));
+    }
+}

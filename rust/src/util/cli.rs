@@ -1,0 +1,128 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) | None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["run", "--model", "worker-pools", "--seed=7", "--verbose"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("model"), Some("worker-pools"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.has("verbose"));
+        assert!(a.get_bool("verbose", false));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("model", "job"), "job");
+        assert_eq!(a.get_u64("seed", 42), 42);
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+        assert!(!a.get_bool("flag", false));
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse(&["--n", "3", "cmd"]);
+        assert_eq!(a.get_usize("n", 0), 3);
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+
+    #[test]
+    fn bare_flag_at_end() {
+        let a = parse(&["--dry-run"]);
+        assert!(a.has("dry-run"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // numbers starting with '-' (not '--') are consumed as values
+        let a = parse(&["--dx", "-3.5"]);
+        assert_eq!(a.get_f64("dx", 0.0), -3.5);
+    }
+}

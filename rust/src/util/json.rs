@@ -1,0 +1,471 @@
+//! Minimal JSON parser/writer (no serde in the offline crate set).
+//!
+//! Used for: experiment configs, the AOT `artifacts/manifest.json`, workflow
+//! (de)serialization, and trace/report output. Supports the full JSON value
+//! model; numbers are kept as f64 (sufficient for every schema we read).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Objects use `BTreeMap` for deterministic serialization.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum JsonError {
+    #[error("unexpected end of input at byte {0}")]
+    Eof(usize),
+    #[error("unexpected character '{0}' at byte {1}")]
+    Unexpected(char, usize),
+    #[error("invalid number at byte {0}")]
+    BadNumber(usize),
+    #[error("invalid \\u escape at byte {0}")]
+    BadEscape(usize),
+    #[error("trailing garbage at byte {0}")]
+    Trailing(usize),
+    #[error("json type error: expected {0}")]
+    Type(&'static str),
+    #[error("missing key '{0}'")]
+    MissingKey(String),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
+        let b = s.as_bytes();
+        let mut p = Parser { b, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != b.len() {
+            return Err(JsonError::Trailing(p.i));
+        }
+        Ok(v)
+    }
+
+    // -- typed accessors -------------------------------------------------
+    pub fn as_f64(&self) -> Result<f64, JsonError> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => Err(JsonError::Type("number")),
+        }
+    }
+    pub fn as_u64(&self) -> Result<u64, JsonError> {
+        Ok(self.as_f64()? as u64)
+    }
+    pub fn as_usize(&self) -> Result<usize, JsonError> {
+        Ok(self.as_f64()? as usize)
+    }
+    pub fn as_str(&self) -> Result<&str, JsonError> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(JsonError::Type("string")),
+        }
+    }
+    pub fn as_bool(&self) -> Result<bool, JsonError> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(JsonError::Type("bool")),
+        }
+    }
+    pub fn as_arr(&self) -> Result<&[Json], JsonError> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => Err(JsonError::Type("array")),
+        }
+    }
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>, JsonError> {
+        match self {
+            Json::Obj(o) => Ok(o),
+            _ => Err(JsonError::Type("object")),
+        }
+    }
+    /// Object field access: `j.get("key")?`.
+    pub fn get(&self, key: &str) -> Result<&Json, JsonError> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| JsonError::MissingKey(key.to_string()))
+    }
+    /// Optional field access: `None` if the key is absent or null.
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self.as_obj().ok()?.get(key) {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v),
+        }
+    }
+
+    // -- builders ---------------------------------------------------------
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+    pub fn num(n: impl Into<f64>) -> Json {
+        Json::Num(n.into())
+    }
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+impl From<f64> for Json {
+    fn from(n: f64) -> Self {
+        Json::Num(n)
+    }
+}
+impl From<u64> for Json {
+    fn from(n: u64) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(n: usize) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+    fn peek(&self) -> Result<u8, JsonError> {
+        self.b.get(self.i).copied().ok_or(JsonError::Eof(self.i))
+    }
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(JsonError::Unexpected(c as char, self.i)),
+        }
+    }
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, JsonError> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(JsonError::Unexpected(self.b[self.i] as char, self.i))
+        }
+    }
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or(JsonError::BadNumber(start))
+    }
+    fn string(&mut self) -> Result<String, JsonError> {
+        debug_assert_eq!(self.b[self.i], b'"');
+        self.i += 1;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(JsonError::BadEscape(self.i));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| JsonError::BadEscape(self.i))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| JsonError::BadEscape(self.i))?;
+                            self.i += 4;
+                            // Surrogate pairs: only BMP needed for our schemas,
+                            // but handle pairs for completeness.
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                if self.b.get(self.i) == Some(&b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u')
+                                {
+                                    let hex2 =
+                                        std::str::from_utf8(&self.b[self.i + 2..self.i + 6])
+                                            .map_err(|_| JsonError::BadEscape(self.i))?;
+                                    let lo = u32::from_str_radix(hex2, 16)
+                                        .map_err(|_| JsonError::BadEscape(self.i))?;
+                                    self.i += 6;
+                                    0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    return Err(JsonError::BadEscape(self.i));
+                                }
+                            } else {
+                                cp
+                            };
+                            out.push(char::from_u32(ch).ok_or(JsonError::BadEscape(self.i))?);
+                        }
+                        _ => return Err(JsonError::BadEscape(self.i)),
+                    }
+                }
+                _ => {
+                    // Collect the full UTF-8 sequence starting at c.
+                    let len = utf8_len(c);
+                    let start = self.i - 1;
+                    self.i = start + len;
+                    if self.i > self.b.len() {
+                        return Err(JsonError::Eof(start));
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .map_err(|_| JsonError::BadEscape(start))?,
+                    );
+                }
+            }
+        }
+    }
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.i += 1; // '['
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => return Err(JsonError::Unexpected(c as char, self.i)),
+            }
+        }
+    }
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.i += 1; // '{'
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.ws();
+            if self.peek()? != b'"' {
+                return Err(JsonError::Unexpected(self.peek()? as char, self.i));
+            }
+            let key = self.string()?;
+            self.ws();
+            if self.peek()? != b':' {
+                return Err(JsonError::Unexpected(self.peek()? as char, self.i));
+            }
+            self.i += 1;
+            self.ws();
+            let v = self.value()?;
+            map.insert(key, v);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(map));
+                }
+                c => return Err(JsonError::Unexpected(c as char, self.i)),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => write!(f, "null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Json::Obj(o) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "c"}], "d": null}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert!(j.opt("d").is_none());
+        assert_eq!(
+            j.get("a").unwrap().as_arr().unwrap()[2]
+                .get("b")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "c"
+        );
+    }
+
+    #[test]
+    fn parses_escapes() {
+        let j = Json::parse(r#""a\n\t\"\\Aé""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "a\n\t\"\\Aé");
+    }
+
+    #[test]
+    fn parses_surrogate_pair() {
+        let j = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "😀");
+    }
+
+    #[test]
+    fn parses_unicode_passthrough() {
+        let j = Json::parse("\"żółć\"").unwrap();
+        assert_eq!(j.as_str().unwrap(), "żółć");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn round_trips() {
+        let src = r#"{"arr":[1,2.5,true,null,"x\"y"],"num":-7,"obj":{"k":"v"}}"#;
+        let j = Json::parse(src).unwrap();
+        let out = j.to_string();
+        assert_eq!(Json::parse(&out).unwrap(), j);
+    }
+
+    #[test]
+    fn display_is_deterministic() {
+        let j = Json::obj(vec![("b", 1u64.into()), ("a", 2u64.into())]);
+        assert_eq!(j.to_string(), r#"{"a":2,"b":1}"#);
+    }
+
+    #[test]
+    fn real_manifest_parses() {
+        // shape mirrors python/compile/aot.py manifest
+        let src = r#"{"tile":128,"overlap":32,"grids":[4],
+            "artifacts":{"mproject":{"file":"mproject.hlo.txt",
+            "inputs":[{"shape":[128,128],"dtype":"float32"}],
+            "outputs":[{"shape":[128,128],"dtype":"float32"}]}}}"#;
+        let j = Json::parse(src).unwrap();
+        assert_eq!(j.get("tile").unwrap().as_u64().unwrap(), 128);
+        let a = j.get("artifacts").unwrap().get("mproject").unwrap();
+        assert_eq!(
+            a.get("inputs").unwrap().as_arr().unwrap()[0]
+                .get("shape")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            2
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! Zero-dependency substrates: JSON, RNG, stats, plots, CLI, logging,
+//! property testing. The offline crate set has no serde/clap/rand/proptest,
+//! so these are built from scratch (see DESIGN.md §1).
+
+pub mod ascii_plot;
+pub mod cli;
+pub mod svg;
+pub mod json;
+pub mod logger;
+pub mod ptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,123 @@
+//! Mini property-testing harness (proptest is not in the offline crate set).
+//!
+//! `check` runs a property over `n` generated cases from a seeded [`Rng`];
+//! on failure it reports the failing case's seed so the case can be replayed
+//! deterministically (`replay`). Shrinking is by seed bisection over the
+//! generator's "size" parameter: generators receive (rng, size) and should
+//! produce smaller cases for smaller sizes.
+
+use super::rng::Rng;
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `n` cases produced by `gen` at sizes ramping from 1 to
+/// `max_size`. Panics with the failing seed/size and message on failure,
+/// after trying smaller sizes with the same seed to find a smaller
+/// counterexample.
+pub fn check<T, G, P>(name: &str, seed: u64, n: usize, max_size: usize, gen: G, prop: P)
+where
+    G: Fn(&mut Rng, usize) -> T,
+    P: Fn(&T) -> PropResult,
+    T: std::fmt::Debug,
+{
+    for i in 0..n {
+        let case_seed = seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 1 + (i * max_size) / n.max(1);
+        let mut rng = Rng::new(case_seed);
+        let case = gen(&mut rng, size);
+        if let Err(msg) = prop(&case) {
+            // try to shrink: same seed, smaller sizes
+            let mut smallest = (size, msg.clone(), format!("{case:?}"));
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(case_seed);
+                let c = gen(&mut rng, s);
+                match prop(&c) {
+                    Err(m) => {
+                        smallest = (s, m, format!("{c:?}"));
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (replay: seed={case_seed}, size={}):\n  {}\n  case: {}",
+                smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn replay<T, G, P>(seed: u64, size: usize, gen: G, prop: P) -> PropResult
+where
+    G: Fn(&mut Rng, usize) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    prop(&gen(&mut rng, size))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::cell::Cell::new(0usize);
+        check(
+            "sum-commutes",
+            1,
+            50,
+            100,
+            |rng, size| {
+                (
+                    (0..size).map(|_| rng.below(100) as i64).collect::<Vec<_>>(),
+                )
+            },
+            |case| {
+                count.set(count.get() + 1);
+                let fwd: i64 = case.0.iter().sum();
+                let rev: i64 = case.0.iter().rev().sum();
+                if fwd == rev {
+                    Ok(())
+                } else {
+                    Err("sum not commutative".into())
+                }
+            },
+        );
+        assert_eq!(count.get_mut(), &50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            2,
+            10,
+            10,
+            |rng, size| (rng.below(10), size),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let gen = |rng: &mut Rng, size: usize| (rng.below(1000), size);
+        let mut r1 = Rng::new(99);
+        let v1 = gen(&mut r1, 5);
+        let ok = replay(99, 5, gen, |case| {
+            if *case == v1 {
+                Ok(())
+            } else {
+                Err(format!("{case:?} != {v1:?}"))
+            }
+        });
+        assert!(ok.is_ok());
+    }
+}

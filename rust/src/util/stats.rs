@@ -1,0 +1,172 @@
+//! Small statistics helpers used by reports and benches.
+
+/// Running summary of a set of samples.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|v| (v - m) * (v - m))
+            .sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Percentile in [0, 100] by linear interpolation on the sorted samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            let frac = rank - lo as f64;
+            s[lo] * (1.0 - frac) + s[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+}
+
+/// Integrate a step function given as (time, value) change points over
+/// [t0, t1], returning the time average. Used for average cluster
+/// utilization (the paper's headline metric for Figs. 3-6).
+pub fn time_average(points: &[(f64, f64)], t0: f64, t1: f64) -> f64 {
+    if t1 <= t0 || points.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    let mut cur_v = 0.0;
+    let mut cur_t = t0;
+    for &(t, v) in points {
+        if t <= t0 {
+            cur_v = v;
+            continue;
+        }
+        if t >= t1 {
+            break;
+        }
+        acc += cur_v * (t - cur_t);
+        cur_t = t;
+        cur_v = v;
+    }
+    acc += cur_v * (t1 - cur_t);
+    acc / (t1 - t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled() -> Summary {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(v);
+        }
+        s
+    }
+
+    #[test]
+    fn mean_min_max() {
+        let s = filled();
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.sum(), 15.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = filled();
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let s = filled();
+        assert!((s.stddev() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn time_average_step_function() {
+        // value 0 until t=10, then 4 until t=20, then 2
+        let pts = vec![(0.0, 0.0), (10.0, 4.0), (20.0, 2.0)];
+        let avg = time_average(&pts, 0.0, 30.0);
+        // (0*10 + 4*10 + 2*10)/30 = 2
+        assert!((avg - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_average_window() {
+        let pts = vec![(0.0, 1.0), (10.0, 3.0)];
+        assert!((time_average(&pts, 5.0, 15.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_average_degenerate() {
+        assert_eq!(time_average(&[], 0.0, 1.0), 0.0);
+        assert_eq!(time_average(&[(0.0, 5.0)], 1.0, 1.0), 0.0);
+    }
+}

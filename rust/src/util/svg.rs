@@ -1,0 +1,162 @@
+//! Minimal SVG chart builder (no plotting deps offline). Renders step time
+//! series as filled area charts — the visual style of the paper's
+//! utilization subplots — for the HTML reports.
+
+/// Build an SVG area chart from a step series [(t, v)].
+pub struct AreaChart {
+    pub width: u32,
+    pub height: u32,
+    pub title: String,
+    pub color: String,
+    pub x_label: String,
+}
+
+impl Default for AreaChart {
+    fn default() -> Self {
+        AreaChart {
+            width: 860,
+            height: 220,
+            title: String::new(),
+            color: "#4878a8".to_string(),
+            x_label: "time (s)".to_string(),
+        }
+    }
+}
+
+const MARGIN_L: f64 = 52.0;
+const MARGIN_R: f64 = 12.0;
+const MARGIN_T: f64 = 26.0;
+const MARGIN_B: f64 = 30.0;
+
+impl AreaChart {
+    /// Render the chart. The series is treated as a step function.
+    pub fn render(&self, series: &[(f64, f64)], t_end: f64) -> String {
+        let w = self.width as f64;
+        let h = self.height as f64;
+        let plot_w = w - MARGIN_L - MARGIN_R;
+        let plot_h = h - MARGIN_T - MARGIN_B;
+        let t_end = t_end.max(1e-9);
+        let v_max = series
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(1e-9f64, f64::max);
+
+        let x = |t: f64| MARGIN_L + (t / t_end) * plot_w;
+        let y = |v: f64| MARGIN_T + plot_h - (v / v_max) * plot_h;
+
+        // step-function path
+        let mut d = format!("M {:.1} {:.1}", x(0.0), y(0.0));
+        let mut cur = 0.0f64;
+        for &(t, v) in series {
+            let t = t.min(t_end);
+            d.push_str(&format!(" L {:.1} {:.1}", x(t), y(cur)));
+            d.push_str(&format!(" L {:.1} {:.1}", x(t), y(v)));
+            cur = v;
+        }
+        d.push_str(&format!(" L {:.1} {:.1}", x(t_end), y(cur)));
+        d.push_str(&format!(
+            " L {:.1} {:.1} Z",
+            x(t_end),
+            y(0.0)
+        ));
+
+        let mut s = String::new();
+        s.push_str(&format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{}" height="{}" viewBox="0 0 {} {}" font-family="sans-serif">"#,
+            self.width, self.height, self.width, self.height
+        ));
+        s.push_str(&format!(
+            r#"<text x="{}" y="16" font-size="13" font-weight="bold">{}</text>"#,
+            MARGIN_L,
+            esc(&self.title)
+        ));
+        // axes
+        s.push_str(&format!(
+            r##"<line x1="{l}" y1="{t}" x2="{l}" y2="{b}" stroke="#333"/>
+               <line x1="{l}" y1="{b}" x2="{r}" y2="{b}" stroke="#333"/>"##,
+            l = MARGIN_L,
+            t = MARGIN_T,
+            b = MARGIN_T + plot_h,
+            r = MARGIN_L + plot_w
+        ));
+        // y ticks: 0, half, max
+        for (frac, label) in [(0.0, 0.0), (0.5, v_max / 2.0), (1.0, v_max)] {
+            let yy = MARGIN_T + plot_h - frac * plot_h;
+            s.push_str(&format!(
+                r##"<text x="{:.0}" y="{:.0}" font-size="10" text-anchor="end">{:.0}</text>
+                   <line x1="{:.0}" y1="{:.0}" x2="{:.0}" y2="{:.0}" stroke="#ccc" stroke-dasharray="3"/>"##,
+                MARGIN_L - 6.0,
+                yy + 3.0,
+                label,
+                MARGIN_L,
+                yy,
+                MARGIN_L + plot_w,
+                yy
+            ));
+        }
+        // x ticks: quarters
+        for i in 0..=4 {
+            let t = t_end * i as f64 / 4.0;
+            s.push_str(&format!(
+                r#"<text x="{:.0}" y="{:.0}" font-size="10" text-anchor="middle">{:.0}</text>"#,
+                x(t),
+                MARGIN_T + plot_h + 14.0,
+                t
+            ));
+        }
+        s.push_str(&format!(
+            r#"<text x="{:.0}" y="{:.0}" font-size="10" text-anchor="middle">{}</text>"#,
+            MARGIN_L + plot_w / 2.0,
+            h - 4.0,
+            esc(&self.x_label)
+        ));
+        // the series
+        s.push_str(&format!(
+            r#"<path d="{d}" fill="{c}" fill-opacity="0.55" stroke="{c}" stroke-width="1"/>"#,
+            c = self.color
+        ));
+        s.push_str("</svg>");
+        s
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_valid_svg() {
+        let series = vec![(0.0, 0.0), (10.0, 5.0), (20.0, 2.0)];
+        let svg = AreaChart {
+            title: "util".into(),
+            ..Default::default()
+        }
+        .render(&series, 30.0);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert!(svg.contains("util"));
+        assert!(svg.contains("<path"));
+        // balanced tags
+        assert_eq!(svg.matches("<svg").count(), svg.matches("</svg>").count());
+    }
+
+    #[test]
+    fn escapes_title() {
+        let svg = AreaChart {
+            title: "a<b&c".into(),
+            ..Default::default()
+        }
+        .render(&[(0.0, 1.0)], 1.0);
+        assert!(svg.contains("a&lt;b&amp;c"));
+    }
+
+    #[test]
+    fn empty_series_is_safe() {
+        let svg = AreaChart::default().render(&[], 10.0);
+        assert!(svg.contains("<path"));
+    }
+}

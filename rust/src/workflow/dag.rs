@@ -1,0 +1,239 @@
+//! The workflow DAG: tasks, dependencies, and structural queries.
+//!
+//! Construction is append-only (dependencies must reference existing tasks),
+//! which makes the graph acyclic by construction. The HyperFlow engine
+//! (crate::engine) consumes the DAG through `preds_count` / `successors`.
+
+use super::task::{Task, TaskId, TaskType, TypeId};
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Dag {
+    pub types: Vec<TaskType>,
+    pub tasks: Vec<Task>,
+    /// Forward edges: successors of each task.
+    succs: Vec<Vec<TaskId>>,
+    /// Number of predecessors of each task.
+    preds: Vec<u32>,
+    name: String,
+}
+
+impl Dag {
+    pub fn new(name: &str) -> Self {
+        Dag {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Register a task type; returns its id. Reuses an existing entry with
+    /// the same name.
+    pub fn add_type(&mut self, t: TaskType) -> TypeId {
+        if let Some(i) = self.types.iter().position(|x| x.name == t.name) {
+            return TypeId(i as u16);
+        }
+        self.types.push(t);
+        TypeId((self.types.len() - 1) as u16)
+    }
+
+    pub fn type_id(&self, name: &str) -> Option<TypeId> {
+        self.types
+            .iter()
+            .position(|t| t.name == name)
+            .map(|i| TypeId(i as u16))
+    }
+
+    pub fn type_of(&self, t: TaskId) -> &TaskType {
+        &self.types[self.tasks[t.0 as usize].ttype.0 as usize]
+    }
+
+    pub fn type_name(&self, t: TaskId) -> &str {
+        &self.type_of(t).name
+    }
+
+    /// Append a task with the given dependencies. Panics if a dependency
+    /// does not exist yet (enforcing acyclicity by construction).
+    pub fn add_task(&mut self, ttype: TypeId, duration: SimTime, deps: &[TaskId]) -> TaskId {
+        let id = TaskId(self.tasks.len() as u32);
+        for &d in deps {
+            assert!(
+                (d.0 as usize) < self.tasks.len(),
+                "dependency {:?} of task {:?} does not exist",
+                d,
+                id
+            );
+            self.succs[d.0 as usize].push(id);
+        }
+        self.tasks.push(Task {
+            id,
+            ttype,
+            duration,
+        });
+        self.succs.push(Vec::new());
+        self.preds.push(deps.len() as u32);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn successors(&self, t: TaskId) -> &[TaskId] {
+        &self.succs[t.0 as usize]
+    }
+
+    pub fn preds_count(&self, t: TaskId) -> u32 {
+        self.preds[t.0 as usize]
+    }
+
+    /// Tasks with no dependencies (the workflow's entry tasks).
+    pub fn roots(&self) -> Vec<TaskId> {
+        (0..self.tasks.len())
+            .filter(|&i| self.preds[i] == 0)
+            .map(|i| TaskId(i as u32))
+            .collect()
+    }
+
+    /// Count of tasks per type name (the paper quotes stage sizes this way).
+    pub fn count_by_type(&self) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for t in &self.tasks {
+            *m.entry(self.types[t.ttype.0 as usize].name.clone())
+                .or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Total work (sum of durations) per type, in seconds.
+    pub fn work_by_type(&self) -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        for t in &self.tasks {
+            *m.entry(self.types[t.ttype.0 as usize].name.clone())
+                .or_insert(0.0) += t.duration.as_secs_f64();
+        }
+        m
+    }
+
+    /// Critical-path length in seconds (longest dependency chain by
+    /// duration) — the theoretical lower bound on makespan with infinite
+    /// resources.
+    pub fn critical_path_secs(&self) -> f64 {
+        let mut finish = vec![0.0f64; self.tasks.len()];
+        // tasks are topologically ordered by construction
+        for (i, t) in self.tasks.iter().enumerate() {
+            finish[i] += t.duration.as_secs_f64();
+        }
+        let mut best: f64 = 0.0;
+        let mut start = vec![0.0f64; self.tasks.len()];
+        for i in 0..self.tasks.len() {
+            let f = start[i] + self.tasks[i].duration.as_secs_f64();
+            best = best.max(f);
+            for s in &self.succs[i] {
+                let j = s.0 as usize;
+                if f > start[j] {
+                    start[j] = f;
+                }
+            }
+        }
+        best
+    }
+
+    /// Validate structural invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.succs.len() != self.tasks.len() || self.preds.len() != self.tasks.len() {
+            return Err("internal arrays out of sync".into());
+        }
+        let mut pred_check = vec![0u32; self.tasks.len()];
+        for (i, ss) in self.succs.iter().enumerate() {
+            for s in ss {
+                if s.0 as usize <= i {
+                    return Err(format!("edge {i} -> {} not forward", s.0));
+                }
+                pred_check[s.0 as usize] += 1;
+            }
+        }
+        if pred_check != self.preds {
+            return Err("preds count mismatch".into());
+        }
+        for t in &self.tasks {
+            if t.ttype.0 as usize >= self.types.len() {
+                return Err("task references unknown type".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::k8s::resources::Resources;
+
+    fn tiny() -> Dag {
+        let mut d = Dag::new("t");
+        let a = d.add_type(TaskType::new("A", Resources::new(500, 512), 1.0, 0.0));
+        let b = d.add_type(TaskType::new("B", Resources::new(500, 512), 2.0, 0.0));
+        let t0 = d.add_task(a, SimTime(1000), &[]);
+        let t1 = d.add_task(a, SimTime(1000), &[]);
+        let t2 = d.add_task(b, SimTime(2000), &[t0, t1]);
+        let _t3 = d.add_task(b, SimTime(2000), &[t2]);
+        d
+    }
+
+    #[test]
+    fn roots_and_successors() {
+        let d = tiny();
+        assert_eq!(d.roots(), vec![TaskId(0), TaskId(1)]);
+        assert_eq!(d.successors(TaskId(0)), &[TaskId(2)]);
+        assert_eq!(d.preds_count(TaskId(2)), 2);
+        assert_eq!(d.preds_count(TaskId(0)), 0);
+    }
+
+    #[test]
+    fn type_reuse() {
+        let mut d = Dag::new("t");
+        let a1 = d.add_type(TaskType::new("A", Resources::ZERO, 1.0, 0.0));
+        let a2 = d.add_type(TaskType::new("A", Resources::ZERO, 9.0, 0.0));
+        assert_eq!(a1, a2);
+        assert_eq!(d.types.len(), 1);
+    }
+
+    #[test]
+    fn counts_and_work() {
+        let d = tiny();
+        let c = d.count_by_type();
+        assert_eq!(c["A"], 2);
+        assert_eq!(c["B"], 2);
+        let w = d.work_by_type();
+        assert!((w["B"] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn critical_path() {
+        let d = tiny();
+        // A(1) -> B(2) -> B(2) = 5 seconds
+        assert!((d.critical_path_secs() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not exist")]
+    fn forward_only_edges() {
+        let mut d = Dag::new("t");
+        let a = d.add_type(TaskType::new("A", Resources::ZERO, 1.0, 0.0));
+        d.add_task(a, SimTime(1), &[TaskId(5)]);
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(tiny().validate().is_ok());
+    }
+}

@@ -1,0 +1,10 @@
+//! Workflow model: tasks, the DAG, the Montage generator, and JSON I/O.
+
+pub mod dag;
+pub mod montage;
+pub mod patterns;
+pub mod task;
+pub mod wfjson;
+
+pub use dag::Dag;
+pub use task::{Task, TaskId, TaskType, TypeId};

@@ -1,0 +1,415 @@
+//! Montage workflow generator.
+//!
+//! Reproduces the structure of the astronomy mosaicking workflow the paper
+//! evaluates with (§4.1): a grid of input images processed by
+//!
+//!   mProject (reproject every image)                — parallel stage 1
+//!   mDiffFit (fit planes to overlapping pairs)      — parallel stage 2
+//!   mConcatFit -> mBgModel (global background fit)  — serial bottleneck
+//!   mBackground (correct every image)               — parallel stage 3
+//!   mImgtbl -> mAdd -> mShrink -> mJPEG             — serial assembly
+//!
+//! mDiffFit becomes ready per-pair as soon as both mProjects finish, so
+//! stages 1 and 2 *intertwine* — exactly the proportional-allocation
+//! challenge of Table 1. With the default grid (52x52) the workflow has
+//! 15,919 tasks ("a large Montage workflow with 16k tasks"), of which
+//! 10,506 are 2-second mDiffFit tasks — the paper's "very short, most
+//! numerous" stage.
+
+use super::dag::Dag;
+use super::task::{TaskId, TaskType};
+use crate::k8s::resources::Resources;
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// Generator parameters. Durations are medians of lognormal distributions
+/// (seconds); resource requests follow §3.3 (types differ in requests).
+#[derive(Debug, Clone)]
+pub struct MontageConfig {
+    pub grid_w: usize,
+    pub grid_h: usize,
+    /// Include diagonal overlaps in mDiffFit (Montage computes every
+    /// overlapping pair; diagonal corner overlaps exist with 25% tile
+    /// overlap).
+    pub diagonals: bool,
+    pub seed: u64,
+}
+
+impl MontageConfig {
+    /// The paper's large workflow: ~16k tasks.
+    pub fn paper_16k() -> Self {
+        MontageConfig {
+            grid_w: 52,
+            grid_h: 52,
+            diagonals: true,
+            seed: 42,
+        }
+    }
+
+    /// The "smaller workflow" used for the job-model trace in Fig. 3.
+    pub fn paper_small() -> Self {
+        MontageConfig {
+            grid_w: 28,
+            grid_h: 28,
+            diagonals: true,
+            seed: 42,
+        }
+    }
+
+    /// Grid with the closest total task count to `total`.
+    pub fn with_total_tasks(total: usize, seed: u64) -> Self {
+        let mut best = (usize::MAX, 2usize);
+        for g in 2..300 {
+            let t = Self::total_tasks_for_grid(g, g, true);
+            let d = t.abs_diff(total);
+            if d < best.0 {
+                best = (d, g);
+            }
+        }
+        MontageConfig {
+            grid_w: best.1,
+            grid_h: best.1,
+            diagonals: true,
+            seed,
+        }
+    }
+
+    pub fn total_tasks_for_grid(w: usize, h: usize, diagonals: bool) -> usize {
+        let n = w * h;
+        let mut e = w * (h - 1) + h * (w - 1);
+        if diagonals {
+            e += 2 * (w - 1) * (h - 1);
+        }
+        2 * n + e + 6 // six serial tasks: concat/bgmodel/imgtbl/add/shrink/jpeg
+    }
+
+    pub fn n_images(&self) -> usize {
+        self.grid_w * self.grid_h
+    }
+}
+
+/// Montage task-type names in pipeline order.
+pub const TYPE_NAMES: [&str; 9] = [
+    "mProject",
+    "mDiffFit",
+    "mConcatFit",
+    "mBgModel",
+    "mBackground",
+    "mImgtbl",
+    "mAdd",
+    "mShrink",
+    "mJPEG",
+];
+
+/// Default pod templates + duration distributions, calibrated to the
+/// paper's narrative (§4.1-4.2: mDiffFit ≈ 2 s mean; mProject and
+/// mBackground short-but-longer; assembly stages serial and chunky).
+pub fn default_types() -> Vec<TaskType> {
+    vec![
+        // cpu_used reflects typical over-provisioned requests (the VPA
+        // ablation's head-room; ignored unless `AutoscalerConfig.vpa`)
+        TaskType::new("mProject", Resources::new(1000, 1024), 12.0, 0.25)
+            .with_cpu_used(800),
+        TaskType::new("mDiffFit", Resources::new(500, 512), 2.0, 0.40)
+            .with_cpu_used(300),
+        TaskType::new("mConcatFit", Resources::new(1000, 2048), 40.0, 0.10),
+        TaskType::new("mBgModel", Resources::new(1000, 4096), 100.0, 0.10),
+        TaskType::new("mBackground", Resources::new(500, 512), 3.0, 0.30)
+            .with_cpu_used(350),
+        TaskType::new("mImgtbl", Resources::new(1000, 2048), 20.0, 0.10),
+        TaskType::new("mAdd", Resources::new(2000, 8192), 150.0, 0.10),
+        TaskType::new("mShrink", Resources::new(1000, 2048), 40.0, 0.10),
+        TaskType::new("mJPEG", Resources::new(500, 1024), 15.0, 0.10),
+    ]
+}
+
+/// Overlapping image pairs on the grid (right/down, plus diagonals).
+pub fn overlap_pairs(w: usize, h: usize, diagonals: bool) -> Vec<(usize, usize)> {
+    let idx = |r: usize, c: usize| r * w + c;
+    let mut pairs = Vec::new();
+    for r in 0..h {
+        for c in 0..w {
+            if c + 1 < w {
+                pairs.push((idx(r, c), idx(r, c + 1)));
+            }
+            if r + 1 < h {
+                pairs.push((idx(r, c), idx(r + 1, c)));
+                if diagonals {
+                    if c + 1 < w {
+                        pairs.push((idx(r, c), idx(r + 1, c + 1)));
+                    }
+                    if c > 0 {
+                        pairs.push((idx(r, c), idx(r + 1, c - 1)));
+                    }
+                }
+            }
+        }
+    }
+    pairs
+}
+
+/// Generate the Montage DAG.
+pub fn generate(cfg: &MontageConfig) -> Dag {
+    let mut dag = Dag::new(&format!("montage-{}x{}", cfg.grid_w, cfg.grid_h));
+    let mut rng = Rng::new(cfg.seed);
+    let type_ids: Vec<_> = default_types()
+        .into_iter()
+        .map(|t| dag.add_type(t))
+        .collect();
+    let [proj, diff, concat, bgmodel, backgr, imgtbl, madd, shrink, jpeg] =
+        [0, 1, 2, 3, 4, 5, 6, 7, 8].map(|i| type_ids[i]);
+
+    let sample = |dag: &Dag, idx: usize, rng: &mut Rng| {
+        let t = &dag.types[idx];
+        SimTime::from_secs_f64(rng.lognormal(t.median_secs, t.sigma))
+    };
+
+    // Stage 1: mProject per image.
+    let n = cfg.n_images();
+    let mut projects = Vec::with_capacity(n);
+    for _ in 0..n {
+        let d = sample(&dag, 0, &mut rng);
+        projects.push(dag.add_task(proj, d, &[]));
+    }
+
+    // Stage 2: mDiffFit per overlapping pair (intertwines with stage 1).
+    let pairs = overlap_pairs(cfg.grid_w, cfg.grid_h, cfg.diagonals);
+    let mut diffs = Vec::with_capacity(pairs.len());
+    for &(i, j) in &pairs {
+        let d = sample(&dag, 1, &mut rng);
+        diffs.push(dag.add_task(diff, d, &[projects[i], projects[j]]));
+    }
+
+    // Serial: mConcatFit <- all diffs; mBgModel <- concat.
+    let d = sample(&dag, 2, &mut rng);
+    let concat_t = dag.add_task(concat, d, &diffs);
+    let d = sample(&dag, 3, &mut rng);
+    let bg_t = dag.add_task(bgmodel, d, &[concat_t]);
+
+    // Stage 3: mBackground per image.
+    let mut bgs = Vec::with_capacity(n);
+    for &p in &projects {
+        let d = sample(&dag, 4, &mut rng);
+        bgs.push(dag.add_task(backgr, d, &[bg_t, p]));
+    }
+
+    // Assembly: mImgtbl -> mAdd -> mShrink -> mJPEG.
+    let d = sample(&dag, 5, &mut rng);
+    let imgtbl_t = dag.add_task(imgtbl, d, &bgs);
+    let d = sample(&dag, 6, &mut rng);
+    let madd_t = dag.add_task(madd, d, &[imgtbl_t]);
+    let d = sample(&dag, 7, &mut rng);
+    let shrink_t = dag.add_task(shrink, d, &[madd_t]);
+    let d = sample(&dag, 8, &mut rng);
+    let _jpeg_t: TaskId = dag.add_task(jpeg, d, &[shrink_t]);
+
+    dag
+}
+
+/// Semantic role of a task in the Montage DAG — used by the real-compute
+/// executor (rust/src/compute) to map TaskIds to artifact invocations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// mProject of image `i`.
+    Project(usize),
+    /// mDiffFit of overlap pair `e` between images `(i, j)`.
+    DiffFit(usize, (usize, usize)),
+    ConcatFit,
+    BgModel,
+    /// mBackground of image `i`.
+    Background(usize),
+    Imgtbl,
+    Add,
+    Shrink,
+    Jpeg,
+}
+
+/// TaskId -> Role mapping for a DAG produced by [`generate`] (tasks are
+/// appended in a fixed order).
+#[derive(Debug, Clone)]
+pub struct MontageIndex {
+    n: usize,
+    pairs: Vec<(usize, usize)>,
+}
+
+impl MontageIndex {
+    pub fn new(cfg: &MontageConfig) -> Self {
+        MontageIndex {
+            n: cfg.n_images(),
+            pairs: overlap_pairs(cfg.grid_w, cfg.grid_h, cfg.diagonals),
+        }
+    }
+
+    pub fn n_images(&self) -> usize {
+        self.n
+    }
+
+    pub fn pairs(&self) -> &[(usize, usize)] {
+        &self.pairs
+    }
+
+    pub fn role(&self, t: TaskId) -> Role {
+        let i = t.0 as usize;
+        let e = self.pairs.len();
+        if i < self.n {
+            Role::Project(i)
+        } else if i < self.n + e {
+            let k = i - self.n;
+            Role::DiffFit(k, self.pairs[k])
+        } else {
+            match i - self.n - e {
+                0 => Role::ConcatFit,
+                1 => Role::BgModel,
+                k if k >= 2 && k < 2 + self.n => Role::Background(k - 2),
+                k if k == 2 + self.n => Role::Imgtbl,
+                k if k == 3 + self.n => Role::Add,
+                k if k == 4 + self.n => Role::Shrink,
+                k if k == 5 + self.n => Role::Jpeg,
+                k => panic!("task index {k} out of range for montage DAG"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roles_match_types() {
+        let cfg = MontageConfig {
+            grid_w: 3,
+            grid_h: 2,
+            diagonals: true,
+            seed: 4,
+        };
+        let dag = generate(&cfg);
+        let idx = MontageIndex::new(&cfg);
+        for t in &dag.tasks {
+            let role = idx.role(t.id);
+            let tname = dag.type_name(t.id);
+            let ok = match role {
+                Role::Project(_) => tname == "mProject",
+                Role::DiffFit(..) => tname == "mDiffFit",
+                Role::ConcatFit => tname == "mConcatFit",
+                Role::BgModel => tname == "mBgModel",
+                Role::Background(_) => tname == "mBackground",
+                Role::Imgtbl => tname == "mImgtbl",
+                Role::Add => tname == "mAdd",
+                Role::Shrink => tname == "mShrink",
+                Role::Jpeg => tname == "mJPEG",
+            };
+            assert!(ok, "task {:?} type {tname} got role {role:?}", t.id);
+        }
+        // diff pairs map to valid image indices
+        for &(a, b) in idx.pairs() {
+            assert!(a < idx.n_images() && b < idx.n_images());
+        }
+    }
+
+    #[test]
+    fn paper_16k_size() {
+        let cfg = MontageConfig::paper_16k();
+        let total = MontageConfig::total_tasks_for_grid(52, 52, true);
+        assert_eq!(total, 15_920); // "a large Montage workflow with 16k tasks"
+        let dag = generate(&cfg);
+        assert_eq!(dag.len(), total);
+        assert!(dag.validate().is_ok());
+    }
+
+    #[test]
+    fn stage_counts() {
+        let cfg = MontageConfig {
+            grid_w: 4,
+            grid_h: 4,
+            diagonals: true,
+            seed: 1,
+        };
+        let dag = generate(&cfg);
+        let c = dag.count_by_type();
+        assert_eq!(c["mProject"], 16);
+        // E = 4*3*2 + 2*9 = 24 + 18 = 42
+        assert_eq!(c["mDiffFit"], 42);
+        assert_eq!(c["mBackground"], 16);
+        for serial in ["mConcatFit", "mBgModel", "mImgtbl", "mAdd", "mShrink", "mJPEG"] {
+            assert_eq!(c[serial], 1, "{serial}");
+        }
+    }
+
+    #[test]
+    fn mdifffit_is_most_numerous_and_short() {
+        let dag = generate(&MontageConfig::paper_16k());
+        let c = dag.count_by_type();
+        let max_type = c.iter().max_by_key(|(_, &v)| v).unwrap();
+        assert_eq!(max_type.0, "mDiffFit");
+        // average ~2s (§4.1: "very short (2s on average)")
+        let w = dag.work_by_type();
+        let avg = w["mDiffFit"] / c["mDiffFit"] as f64;
+        assert!((1.5..3.0).contains(&avg), "avg mDiffFit duration {avg}");
+    }
+
+    #[test]
+    fn dependencies_encode_intertwining() {
+        let cfg = MontageConfig {
+            grid_w: 3,
+            grid_h: 3,
+            diagonals: false,
+            seed: 2,
+        };
+        let dag = generate(&cfg);
+        // every mDiffFit depends on exactly 2 mProjects
+        for t in &dag.tasks {
+            if dag.types[t.ttype.0 as usize].name == "mDiffFit" {
+                assert_eq!(dag.preds_count(t.id), 2);
+            }
+        }
+        // first mDiffFit (images 0,1) can start before mProject of image 8
+        // completes: it only depends on projects 0 and 1.
+        let diffs: Vec<_> = dag
+            .tasks
+            .iter()
+            .filter(|t| dag.types[t.ttype.0 as usize].name == "mDiffFit")
+            .collect();
+        assert!(!diffs.is_empty());
+    }
+
+    #[test]
+    fn overlap_pair_count() {
+        // 3x3 grid: h-pairs 6, v-pairs 6, diag 2*4=8
+        assert_eq!(overlap_pairs(3, 3, false).len(), 12);
+        assert_eq!(overlap_pairs(3, 3, true).len(), 20);
+    }
+
+    #[test]
+    fn with_total_tasks_close() {
+        let cfg = MontageConfig::with_total_tasks(16_000, 7);
+        let total =
+            MontageConfig::total_tasks_for_grid(cfg.grid_w, cfg.grid_h, cfg.diagonals);
+        assert!((15_000..17_000).contains(&total), "total {total}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = generate(&MontageConfig::paper_small());
+        let b = generate(&MontageConfig::paper_small());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.tasks.iter().zip(b.tasks.iter()) {
+            assert_eq!(x.duration, y.duration);
+        }
+    }
+
+    #[test]
+    fn roots_are_projects_only() {
+        let dag = generate(&MontageConfig {
+            grid_w: 3,
+            grid_h: 2,
+            diagonals: true,
+            seed: 3,
+        });
+        let roots = dag.roots();
+        assert_eq!(roots.len(), 6);
+        for r in roots {
+            assert_eq!(dag.type_name(r), "mProject");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Generic workflow-pattern generators beyond Montage: the structural
+//! archetypes of scientific workflows (chains, fan-out/fan-in, ensembles,
+//! multi-stage pipelines). Used to check that the execution models are not
+//! over-fitted to Montage's shape, and by the property tests.
+
+use super::dag::Dag;
+use super::task::{TaskId, TaskType};
+use crate::k8s::resources::Resources;
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+fn dur(rng: &mut Rng, median: f64, sigma: f64) -> SimTime {
+    SimTime::from_secs_f64(rng.lognormal(median, sigma))
+}
+
+/// A linear chain of `n` tasks (no parallelism at all).
+pub fn chain(n: usize, seed: u64) -> Dag {
+    let mut dag = Dag::new(&format!("chain-{n}"));
+    let mut rng = Rng::new(seed);
+    let ty = dag.add_type(TaskType::new("stage", Resources::new(1000, 1024), 5.0, 0.3));
+    let mut prev: Option<TaskId> = None;
+    for _ in 0..n {
+        let deps: Vec<TaskId> = prev.into_iter().collect();
+        prev = Some(dag.add_task(ty, dur(&mut rng, 5.0, 0.3), &deps));
+    }
+    dag
+}
+
+/// Fan-out/fan-in ("bag of tasks" with a reduce): 1 -> n -> 1.
+pub fn fan(n: usize, seed: u64) -> Dag {
+    let mut dag = Dag::new(&format!("fan-{n}"));
+    let mut rng = Rng::new(seed);
+    let prep = dag.add_type(TaskType::new("prepare", Resources::new(1000, 2048), 10.0, 0.1));
+    let work = dag.add_type(TaskType::new("work", Resources::new(500, 512), 3.0, 0.4));
+    let reduce = dag.add_type(TaskType::new("reduce", Resources::new(2000, 4096), 30.0, 0.1));
+    let p = dag.add_task(prep, dur(&mut rng, 10.0, 0.1), &[]);
+    let workers: Vec<TaskId> = (0..n)
+        .map(|_| dag.add_task(work, dur(&mut rng, 3.0, 0.4), &[p]))
+        .collect();
+    dag.add_task(reduce, dur(&mut rng, 30.0, 0.1), &workers);
+    dag
+}
+
+/// An ensemble of `m` independent chains of length `k` (e.g. parameter
+/// sweeps); stresses fairness across identical sub-workflows.
+pub fn ensemble(m: usize, k: usize, seed: u64) -> Dag {
+    let mut dag = Dag::new(&format!("ensemble-{m}x{k}"));
+    let mut rng = Rng::new(seed);
+    let ty = dag.add_type(TaskType::new("member", Resources::new(500, 1024), 4.0, 0.3));
+    for _ in 0..m {
+        let mut prev: Option<TaskId> = None;
+        for _ in 0..k {
+            let deps: Vec<TaskId> = prev.into_iter().collect();
+            prev = Some(dag.add_task(ty, dur(&mut rng, 4.0, 0.3), &deps));
+        }
+    }
+    dag
+}
+
+/// An Epigenomics-like multi-lane pipeline: `lanes` parallel chains of the
+/// same staged types, merging into a final global stage — a second
+/// real-workflow archetype with *typed* stages (unlike [`ensemble`]).
+pub fn pipeline(lanes: usize, seed: u64) -> Dag {
+    let mut dag = Dag::new(&format!("pipeline-{lanes}"));
+    let mut rng = Rng::new(seed);
+    let stages = [
+        ("fastqSplit", 1000, 8.0),
+        ("filterContams", 500, 3.0),
+        ("sol2sanger", 500, 2.0),
+        ("fastq2bfq", 500, 2.0),
+        ("map", 2000, 20.0),
+    ];
+    let tys: Vec<_> = stages
+        .iter()
+        .map(|(n, cpu, med)| {
+            dag.add_type(TaskType::new(n, Resources::new(*cpu, 1024), *med, 0.3))
+        })
+        .collect();
+    let merge = dag.add_type(TaskType::new("mapMerge", Resources::new(2000, 8192), 60.0, 0.1));
+    let mut lane_ends = Vec::new();
+    for _ in 0..lanes {
+        let mut prev: Option<TaskId> = None;
+        for (i, ty) in tys.iter().enumerate() {
+            let deps: Vec<TaskId> = prev.into_iter().collect();
+            prev = Some(dag.add_task(*ty, dur(&mut rng, stages[i].2, 0.3), &deps));
+        }
+        lane_ends.push(prev.unwrap());
+    }
+    dag.add_task(merge, dur(&mut rng, 60.0, 0.1), &lane_ends);
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::clustering::ClusteringConfig;
+    use crate::models::{driver, ExecModel};
+
+    #[test]
+    fn shapes() {
+        assert_eq!(chain(10, 1).len(), 10);
+        assert_eq!(fan(50, 1).len(), 52);
+        assert_eq!(ensemble(5, 4, 1).len(), 20);
+        assert_eq!(pipeline(8, 1).len(), 8 * 5 + 1);
+        for d in [chain(10, 1), fan(50, 1), ensemble(5, 4, 1), pipeline(8, 1)] {
+            assert!(d.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn chain_critical_path_equals_total_work() {
+        let d = chain(6, 2);
+        let total: f64 = d.work_by_type().values().sum();
+        assert!((d.critical_path_secs() - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_models_run_all_patterns() {
+        let mk: Vec<fn() -> Dag> = vec![
+            || chain(8, 3),
+            || fan(40, 3),
+            || ensemble(6, 3, 3),
+            || pipeline(6, 3),
+        ];
+        for f in &mk {
+            for model in [
+                ExecModel::JobBased,
+                ExecModel::GenericPool,
+                ExecModel::Clustered(ClusteringConfig::uniform(5, 2000)),
+            ] {
+                let dag = f();
+                let n = dag.len();
+                let res = driver::run(dag, model, driver::SimConfig::with_nodes(4));
+                assert_eq!(res.trace.records.len(), n);
+            }
+        }
+    }
+
+    #[test]
+    fn fan_parallelism_bounded_by_cluster() {
+        let res = driver::run(
+            fan(200, 4),
+            ExecModel::GenericPool,
+            driver::SimConfig::with_nodes(2),
+        );
+        // generic workers request max(cpu)=2000m -> 4 fit on 2 nodes
+        let peak = res
+            .running_series()
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(0.0f64, f64::max);
+        assert!(peak <= 4.0 + 1e-9, "peak {peak}");
+    }
+
+    #[test]
+    fn typed_pools_work_on_pipeline() {
+        let res = driver::run(
+            pipeline(10, 5),
+            ExecModel::WorkerPools {
+                pooled_types: vec!["map".into(), "filterContams".into()],
+            },
+            driver::SimConfig::with_nodes(4),
+        );
+        assert_eq!(res.trace.records.len(), 51);
+    }
+}

@@ -1,0 +1,76 @@
+//! Workflow tasks and task types.
+
+use crate::k8s::resources::Resources;
+use crate::sim::SimTime;
+
+/// Index of a task in its workflow DAG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskId(pub u32);
+
+/// Index into the workflow's task-type table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TypeId(pub u16);
+
+/// Per-type metadata: the pod template for this task type.
+///
+/// Separate worker pools per task type exist precisely because types differ
+/// in resource requests and container image (§3.3).
+#[derive(Debug, Clone)]
+pub struct TaskType {
+    pub name: String,
+    /// CPU/memory requests of a pod executing this type. Users typically
+    /// over-provision these (the safety margin VPA reclaims, §5).
+    pub requests: Resources,
+    /// CPU this type *actually* uses (millicores). Defaults to the
+    /// request; the vertical-pod-autoscaler ablation sets it lower.
+    pub cpu_used_m: u64,
+    /// Median duration (seconds) of the type's tasks.
+    pub median_secs: f64,
+    /// Lognormal sigma of the duration distribution.
+    pub sigma: f64,
+}
+
+impl TaskType {
+    pub fn new(name: &str, requests: Resources, median_secs: f64, sigma: f64) -> Self {
+        TaskType {
+            name: name.to_string(),
+            requests,
+            cpu_used_m: requests.cpu_m,
+            median_secs,
+            sigma,
+        }
+    }
+
+    /// Declare the type's true CPU usage (for the VPA ablation).
+    pub fn with_cpu_used(mut self, cpu_used_m: u64) -> Self {
+        self.cpu_used_m = cpu_used_m;
+        self
+    }
+}
+
+/// One workflow task: a type, a sampled duration, and its dependencies
+/// (stored in the DAG).
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub ttype: TypeId,
+    pub duration: SimTime,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_type_carries_pod_template() {
+        let t = TaskType::new("mProject", Resources::new(1000, 1024), 15.0, 0.3);
+        assert_eq!(t.name, "mProject");
+        assert_eq!(t.requests.cpu_m, 1000);
+    }
+
+    #[test]
+    fn ids_are_ordered() {
+        assert!(TaskId(1) < TaskId(2));
+        assert!(TypeId(0) < TypeId(3));
+    }
+}

@@ -1,0 +1,153 @@
+//! Workflow (de)serialization in a HyperFlow-like JSON format.
+//!
+//! ```json
+//! {
+//!   "name": "montage-4x4",
+//!   "types": [{"name": "mProject", "cpu_m": 1000, "mem_mb": 1024,
+//!              "median_secs": 12.0, "sigma": 0.25}],
+//!   "tasks": [{"type": 0, "duration_ms": 11500, "deps": [0, 1]}]
+//! }
+//! ```
+
+use super::dag::Dag;
+use super::task::{TaskId, TaskType, TypeId};
+use crate::k8s::resources::Resources;
+use crate::sim::SimTime;
+use crate::util::json::{Json, JsonError};
+
+/// Serialize a DAG to the workflow JSON format.
+pub fn to_json(dag: &Dag) -> Json {
+    let types: Vec<Json> = dag
+        .types
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("name", Json::str(&t.name)),
+                ("cpu_m", t.requests.cpu_m.into()),
+                ("mem_mb", t.requests.mem_mb.into()),
+                ("median_secs", t.median_secs.into()),
+                ("sigma", t.sigma.into()),
+            ])
+        })
+        .collect();
+    let tasks: Vec<Json> = dag
+        .tasks
+        .iter()
+        .map(|t| {
+            // reconstruct deps from the forward edge lists
+            Json::obj(vec![
+                ("type", (t.ttype.0 as u64).into()),
+                ("duration_ms", t.duration.as_millis().into()),
+            ])
+        })
+        .collect();
+    // deps stored as reverse adjacency: for compactness serialize successor
+    // lists once
+    let succs: Vec<Json> = (0..dag.len())
+        .map(|i| {
+            Json::Arr(
+                dag.successors(TaskId(i as u32))
+                    .iter()
+                    .map(|s| (s.0 as u64).into())
+                    .collect(),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(dag.name())),
+        ("types", Json::Arr(types)),
+        ("tasks", Json::Arr(tasks)),
+        ("succs", Json::Arr(succs)),
+    ])
+}
+
+/// Parse a DAG from the workflow JSON format.
+pub fn from_json(j: &Json) -> Result<Dag, JsonError> {
+    let name = j.get("name")?.as_str()?;
+    let mut dag = Dag::new(name);
+    for t in j.get("types")?.as_arr()? {
+        dag.add_type(TaskType::new(
+            t.get("name")?.as_str()?,
+            Resources::new(t.get("cpu_m")?.as_u64()?, t.get("mem_mb")?.as_u64()?),
+            t.get("median_secs")?.as_f64()?,
+            t.get("sigma")?.as_f64()?,
+        ));
+    }
+    let tasks = j.get("tasks")?.as_arr()?;
+    let succs = j.get("succs")?.as_arr()?;
+    // invert successor lists into dependency lists
+    let mut deps: Vec<Vec<TaskId>> = vec![Vec::new(); tasks.len()];
+    for (i, ss) in succs.iter().enumerate() {
+        for s in ss.as_arr()? {
+            let si = s.as_usize()?;
+            deps[si].push(TaskId(i as u32));
+        }
+    }
+    for (i, t) in tasks.iter().enumerate() {
+        dag.add_task(
+            TypeId(t.get("type")?.as_u64()? as u16),
+            SimTime::from_millis(t.get("duration_ms")?.as_u64()?),
+            &deps[i],
+        );
+    }
+    Ok(dag)
+}
+
+pub fn save(dag: &Dag, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, to_json(dag).to_string())
+}
+
+pub fn load(path: &str) -> anyhow::Result<Dag> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    Ok(from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::montage::{generate, MontageConfig};
+
+    #[test]
+    fn round_trip_preserves_structure() {
+        let dag = generate(&MontageConfig {
+            grid_w: 3,
+            grid_h: 3,
+            diagonals: true,
+            seed: 5,
+        });
+        let j = to_json(&dag);
+        let back = from_json(&j).unwrap();
+        assert_eq!(back.len(), dag.len());
+        assert_eq!(back.count_by_type(), dag.count_by_type());
+        assert!(back.validate().is_ok());
+        for i in 0..dag.len() {
+            let t = TaskId(i as u32);
+            assert_eq!(back.successors(t), dag.successors(t));
+            assert_eq!(back.preds_count(t), dag.preds_count(t));
+            assert_eq!(back.tasks[i].duration, dag.tasks[i].duration);
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dag = generate(&MontageConfig {
+            grid_w: 2,
+            grid_h: 2,
+            diagonals: false,
+            seed: 9,
+        });
+        let path = std::env::temp_dir().join("hfk8s_wf_test.json");
+        let path = path.to_str().unwrap();
+        save(&dag, path).unwrap();
+        let back = load(path).unwrap();
+        assert_eq!(back.len(), dag.len());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let j = Json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Integration tests for the real-compute path: PJRT artifact round-trips
+//! beyond the unit level, and full wall-clock runs of the three-layer
+//! stack. All tests no-op gracefully when `make artifacts` has not run.
+
+use hyperflow_k8s::compute::MontageCompute;
+use hyperflow_k8s::realtime::{run, RealModel, RealtimeConfig};
+use hyperflow_k8s::runtime::{Runtime, Tensor};
+use hyperflow_k8s::workflow::montage::Role;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn sequential_full_pipeline_matches_ground_truth() {
+    // run every task of a 2x2 montage sequentially through PJRT and verify
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let mc = MontageCompute::prepare(2, 128, 32, 99, false);
+    let n = 4;
+    let e = mc.index.pairs().len();
+    for i in 0..n {
+        mc.execute(&rt, Role::Project(i)).unwrap();
+    }
+    for k in 0..e {
+        let pair = mc.index.pairs()[k];
+        mc.execute(&rt, Role::DiffFit(k, pair)).unwrap();
+    }
+    mc.execute(&rt, Role::ConcatFit).unwrap();
+    mc.execute(&rt, Role::BgModel).unwrap();
+    for i in 0..n {
+        mc.execute(&rt, Role::Background(i)).unwrap();
+    }
+    mc.execute(&rt, Role::Imgtbl).unwrap();
+    mc.execute(&rt, Role::Add).unwrap();
+    mc.execute(&rt, Role::Shrink).unwrap();
+    mc.execute(&rt, Role::Jpeg).unwrap();
+
+    let v = mc.verify().unwrap();
+    assert!(
+        v.max_mosaic_residual < 0.01,
+        "mosaic residual {} too large",
+        v.max_mosaic_residual
+    );
+    assert!(
+        v.max_offset_error < 0.01,
+        "offset error {}",
+        v.max_offset_error
+    );
+    // preview produced by the mJPEG stage
+    assert!(mc.store.contains("preview"));
+}
+
+#[test]
+fn warped_pipeline_still_converges() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let mc = MontageCompute::prepare(2, 128, 32, 5, true);
+    let n = 4;
+    for i in 0..n {
+        mc.execute(&rt, Role::Project(i)).unwrap();
+    }
+    for k in 0..mc.index.pairs().len() {
+        let pair = mc.index.pairs()[k];
+        mc.execute(&rt, Role::DiffFit(k, pair)).unwrap();
+    }
+    mc.execute(&rt, Role::ConcatFit).unwrap();
+    mc.execute(&rt, Role::BgModel).unwrap();
+    for i in 0..n {
+        mc.execute(&rt, Role::Background(i)).unwrap();
+    }
+    mc.execute(&rt, Role::Imgtbl).unwrap();
+    mc.execute(&rt, Role::Add).unwrap();
+    let v = mc.verify().unwrap();
+    assert!(v.max_mosaic_residual < 0.15, "residual {}", v.max_mosaic_residual);
+    assert!(v.max_offset_error < 0.1, "offset err {}", v.max_offset_error);
+}
+
+#[test]
+fn mbgmodel_artifact_solves_known_system() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_subset(&dir, &["mbgmodel_g2"]).unwrap();
+    // 2x2 grid: edges (0,1),(0,2),(1,3),(2,3); true offsets [1,-1,2,-2]
+    let offs = [1.0f32, -1.0, 2.0, -2.0];
+    let pairs = [(0usize, 1usize), (0, 2), (1, 3), (2, 3)];
+    let src: Vec<i32> = pairs.iter().map(|&(a, _)| a as i32).collect();
+    let dst: Vec<i32> = pairs.iter().map(|&(_, b)| b as i32).collect();
+    let d: Vec<f32> = pairs.iter().map(|&(a, b)| offs[a] - offs[b]).collect();
+    let out = rt
+        .execute(
+            "mbgmodel_g2",
+            &[
+                Tensor::from_i32(&src, &[4]),
+                Tensor::from_i32(&dst, &[4]),
+                Tensor::new(d, &[4]),
+                Tensor::new(vec![1.0; 4], &[4]),
+            ],
+        )
+        .unwrap();
+    let got = &out[0].data;
+    for (g, w) in got.iter().zip(offs.iter()) {
+        assert!((g - w).abs() < 5e-3, "got {got:?} want {offs:?}");
+    }
+}
+
+#[test]
+fn madd_artifact_coadds_with_weights() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_subset(&dir, &["madd_g2"]).unwrap();
+    let t = 128;
+    let n = 4;
+    let step = 96;
+    let c = step + t; // 224 canvas for g=2
+    let imgs = vec![3.0f32; n * t * t];
+    let ws = vec![1.0f32; n * t * t];
+    let oy: Vec<i32> = (0..n).map(|i| ((i / 2) * step) as i32).collect();
+    let ox: Vec<i32> = (0..n).map(|i| ((i % 2) * step) as i32).collect();
+    let out = rt
+        .execute(
+            "madd_g2",
+            &[
+                Tensor::new(imgs, &[n, t, t]),
+                Tensor::new(ws, &[n, t, t]),
+                Tensor::from_i32(&oy, &[n]),
+                Tensor::from_i32(&ox, &[n]),
+            ],
+        )
+        .unwrap();
+    let mosaic = &out[2];
+    assert_eq!(mosaic.shape, vec![c, c]);
+    // constant tiles with weight 1 -> mosaic is 3 everywhere covered
+    for &v in &mosaic.data {
+        assert!((v - 3.0).abs() < 1e-5, "mosaic value {v}");
+    }
+    // weight map: overlap strips accumulate to 2 and 4
+    let wmap = &out[1];
+    assert_eq!(wmap.data[0], 1.0); // corner: single tile
+    assert_eq!(wmap.data[(c / 2) * c + c / 2], 4.0); // center: all four tiles
+}
+
+#[test]
+fn realtime_pools_run_verifies() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = RealtimeConfig {
+        grid: 2,
+        artifacts_dir: dir,
+        pod_start_ms: 30,
+        poll_ms: 25,
+        idle_timeout_ms: 250,
+        max_workers: 2,
+        model: RealModel::WorkerPools,
+        seed: 3,
+        warp: false,
+    };
+    let report = run(cfg).unwrap();
+    assert_eq!(report.tasks, 18); // 2x2: 4 mProject + 4 mDiffFit + 4 mBackground + 6 serial
+    assert!(report.verify.ok(0.02), "verify failed: {:?}", report.verify);
+    assert!(report.makespan_ms > 0);
+    assert!(report.pods > 0);
+    // every record consistent
+    for r in &report.records {
+        assert!(r.finished_ms >= r.started_ms);
+        assert!(r.started_ms >= r.ready_ms);
+    }
+}
+
+#[test]
+fn realtime_jobs_run_verifies_and_churns_pods() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = RealtimeConfig {
+        grid: 2,
+        artifacts_dir: dir,
+        pod_start_ms: 10,
+        poll_ms: 25,
+        idle_timeout_ms: 250,
+        max_workers: 2,
+        model: RealModel::Jobs,
+        seed: 3,
+        warp: false,
+    };
+    let report = run(cfg).unwrap();
+    assert!(report.verify.ok(0.02));
+    // job model: one pod per task (the paper's churn pathology, for real)
+    assert_eq!(report.pods, report.tasks);
+}
