@@ -1,21 +1,69 @@
 //! L3 hot-path microbenchmarks (criterion is not in the offline crate set;
 //! this is a plain harness with warmup + repeated timed runs).
 //!
-//! Measures the coordinator's three hot paths:
-//!   1. full 16k-task simulation wall time (events/sec) per model
+//! Measures the coordinator's hot paths (DAG generation is timed first
+//! and subtracted, so per-model rates denominate simulation time only):
+//!   1. full 16k-task simulation wall time per model, reported as
+//!      tasks/sec simulated, events/sec, and allocations/task (a counting
+//!      global allocator wraps `System`)
 //!   2. engine readiness propagation throughput
 //!   3. PJRT artifact execution latency (if artifacts are built)
 //!
+//! Results are also written to `BENCH_driver.json` (crate root) so the
+//! perf trajectory is tracked across PRs — see EXPERIMENTS.md
+//! §"Performance methodology" for the schema and the recorded baselines.
+//!
 //!   cargo bench --bench coordinator_hotpath
+//!
+//! CI runs a reduced smoke config: `HF_BENCH_GRID=4 HF_BENCH_ITERS=1`.
 
 use hyperflow_k8s::engine::clustering::ClusteringConfig;
 use hyperflow_k8s::engine::Engine;
 use hyperflow_k8s::models::{driver, ExecModel};
 use hyperflow_k8s::runtime::{Runtime, Tensor};
+use hyperflow_k8s::util::json::Json;
 use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+/// Counts heap allocations so the bench can report allocations/task — the
+/// zero-alloc claim for the steady-state event loop is checked here, not
+/// guessed (EXPERIMENTS.md §Perf).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
 fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    let iters = iters.max(1); // guard HF_BENCH_ITERS=0 -> division by zero
     // warmup
     f();
     let t0 = Instant::now();
@@ -27,52 +75,114 @@ fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 fn main() {
     println!("== coordinator hot paths ==\n");
 
+    // reduced grid for CI smoke runs: HF_BENCH_GRID=4
+    let grid = env_usize("HF_BENCH_GRID", 52);
+    let wf = MontageConfig {
+        grid_w: grid,
+        grid_h: grid,
+        diagonals: true,
+        seed: 42,
+    };
+    let n = generate(&wf).len();
+    println!("montage {grid}x{grid}: {n} tasks\n");
+
+    // DAG generation is measured first so the per-model rates below can
+    // subtract it — the timed closures must regenerate the DAG each
+    // iteration (driver::run consumes it), but BENCH_driver.json tracks
+    // the *simulator* trajectory, not the generator's.
+    let per_gen = timed("montage generation", 10, || {
+        std::hint::black_box(generate(&wf).len());
+    });
+
     // 1. full simulation runs
-    let wf16k = MontageConfig::paper_16k();
-    let n = generate(&wf16k).len();
+    let mut model_rows: Vec<Json> = Vec::new();
     for (label, model) in [
-        ("sim 16k job-based", ExecModel::JobBased),
+        ("sim job-based", ExecModel::JobBased),
         (
-            "sim 16k clustered",
+            "sim clustered",
             ExecModel::Clustered(ClusteringConfig::paper_default()),
         ),
-        ("sim 16k worker-pools", ExecModel::paper_hybrid_pools()),
+        ("sim worker-pools", ExecModel::paper_hybrid_pools()),
+        ("sim generic-pool", ExecModel::GenericPool),
     ] {
         let m2 = model.clone();
-        let iters = if matches!(m2, ExecModel::JobBased) { 3 } else { 10 };
-        let per = timed(label, iters, || {
+        let default_iters = if matches!(m2, ExecModel::JobBased) { 3 } else { 10 };
+        let iters = env_usize("HF_BENCH_ITERS", default_iters);
+        // one instrumented run for events + allocation counts
+        let dag = generate(&wf);
+        let a0 = allocs_now();
+        let res = driver::run(dag, m2.clone(), driver::SimConfig::with_nodes(17));
+        let allocs_per_task = (allocs_now() - a0) as f64 / n as f64;
+        let sim_events = res.sim_events;
+        std::hint::black_box(res.makespan);
+        // timed runs; subtract the known generation cost so the recorded
+        // rates denominate simulation time only (matching allocs_per_task,
+        // which is also measured around driver::run alone)
+        let per_total = timed(label, iters, || {
             let res = driver::run(
-                generate(&wf16k),
+                generate(&wf),
                 m2.clone(),
                 driver::SimConfig::with_nodes(17),
             );
             std::hint::black_box(res.makespan);
         });
+        let per = (per_total - per_gen).max(1e-9);
+        let tasks_per_sec = n as f64 / per;
+        let events_per_sec = sim_events as f64 / per;
         println!(
-            "{:>44}  -> {:.0} tasks/sec simulated",
-            "", n as f64 / per
+            "{:>44}  -> {:.0} tasks/sec, {:.0} events/sec, {:.1} allocs/task",
+            "", tasks_per_sec, events_per_sec, allocs_per_task
         );
+        model_rows.push(Json::obj(vec![
+            ("model", Json::str(model.name())),
+            ("ms_per_iter", (per * 1000.0).into()),
+            ("tasks_per_sec", tasks_per_sec.into()),
+            ("events_per_sec", events_per_sec.into()),
+            ("sim_events", sim_events.into()),
+            ("allocs_per_task", allocs_per_task.into()),
+        ]));
     }
 
-    // 2. engine readiness propagation
-    timed("engine drain 16k (readiness only)", 10, || {
-        let (mut eng, mut ready) = Engine::new(generate(&wf16k));
+    // 2. engine readiness propagation (generation cost subtracted, as for
+    // the model rates — the closure must rebuild the consumed DAG)
+    let per_engine = (timed("engine drain (readiness only)", 10, || {
+        let (mut eng, mut ready) = Engine::new(generate(&wf));
+        let mut buf: Vec<_> = Vec::new();
         while let Some(t) = ready.pop() {
-            let mut newly = eng.complete(t);
-            ready.append(&mut newly);
+            buf.clear();
+            eng.complete_into(t, &mut buf);
+            ready.append(&mut buf);
         }
         assert!(eng.is_done());
-    });
+    }) - per_gen)
+        .max(1e-9);
 
-    // 3. DAG generation
-    timed("montage 16k generation", 10, || {
-        std::hint::black_box(generate(&wf16k).len());
-    });
+    // persist the trajectory (read by humans and future-PR comparisons)
+    let out = Json::obj(vec![
+        ("bench", Json::str("coordinator_hotpath")),
+        ("grid", grid.into()),
+        ("tasks", n.into()),
+        ("models", Json::Arr(model_rows)),
+        ("engine_drain_ms", (per_engine * 1000.0).into()),
+        ("dag_generation_ms", (per_gen * 1000.0).into()),
+    ]);
+    let path = "BENCH_driver.json";
+    match std::fs::write(path, out.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
 
-    // 4. PJRT execution latency (needs `make artifacts`)
+    // 3. PJRT execution latency (needs `make artifacts`)
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let rt = Runtime::load_subset("artifacts", &["mproject", "mdifffit"]).unwrap();
         let t = rt.manifest().tile;

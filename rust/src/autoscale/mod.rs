@@ -14,10 +14,14 @@
 //!
 //! Scale-up applies immediately; scale-down goes through a stabilization
 //! window (HPA semantics) so transient dips don't thrash the pools.
+//!
+//! Pools are identified by dense index, aligned with the driver's interned
+//! [`crate::broker::PoolId`] space: `backlogs`/`current`/desired are plain
+//! slices indexed by pool, so the per-tick reconciliation allocates no
+//! string-keyed maps (EXPERIMENTS.md §Perf).
 
 use crate::k8s::resources::Resources;
 use crate::sim::SimTime;
-use std::collections::BTreeMap;
 
 /// Static description of one worker pool.
 #[derive(Debug, Clone)]
@@ -73,17 +77,18 @@ pub struct Autoscaler {
     pub cfg: AutoscalerConfig,
     pools: Vec<PoolSpec>,
     /// Last time each pool's desired count was >= its current count
-    /// (drives the stabilization window).
-    last_not_below: BTreeMap<String, SimTime>,
+    /// (drives the stabilization window); `None` until first polled.
+    last_not_below: Vec<Option<SimTime>>,
     pub scale_events: u64,
 }
 
 impl Autoscaler {
     pub fn new(cfg: AutoscalerConfig, pools: Vec<PoolSpec>) -> Self {
+        let n = pools.len();
         Autoscaler {
             cfg,
             pools,
-            last_not_below: BTreeMap::new(),
+            last_not_below: vec![None; n],
             scale_events: 0,
         }
     }
@@ -94,6 +99,11 @@ impl Autoscaler {
 
     /// VPA hook: replace a pool's pod-template requests (right-sizing),
     /// so quota allocation budgets with the observed usage.
+    pub fn set_pool_requests(&mut self, pool: usize, requests: Resources) {
+        self.pools[pool].requests = requests;
+    }
+
+    /// Name-keyed variant of [`Autoscaler::set_pool_requests`] (cold path).
     pub fn update_pool_requests(&mut self, name: &str, requests: Resources) {
         if let Some(p) = self.pools.iter_mut().find(|p| p.name == name) {
             p.requests = requests;
@@ -101,43 +111,44 @@ impl Autoscaler {
     }
 
     /// Pure allocation rule: backlog per pool -> desired replicas, under
-    /// the CPU quota, proportional when contended.
-    pub fn allocate(&self, backlogs: &BTreeMap<String, usize>) -> BTreeMap<String, usize> {
-        let mut desired = BTreeMap::new();
+    /// the CPU quota, proportional when contended. `backlogs` is indexed
+    /// by pool; `desired` is cleared and refilled to the same length.
+    pub fn allocate_into(&self, backlogs: &[usize], desired: &mut Vec<usize>) {
+        debug_assert_eq!(backlogs.len(), self.pools.len());
+        desired.clear();
         // raw demand: one replica per `target_backlog_per_replica` tasks
         let mut demand_cpu: f64 = 0.0;
-        let mut raw: Vec<(usize, f64)> = Vec::with_capacity(self.pools.len());
+        let mut raw: Vec<f64> = Vec::with_capacity(self.pools.len());
         for (i, p) in self.pools.iter().enumerate() {
-            let backlog = *backlogs.get(&p.name).unwrap_or(&0) as f64;
+            let backlog = backlogs[i] as f64;
             let replicas = (backlog / self.cfg.target_backlog_per_replica)
                 .ceil()
                 .max(self.cfg.min_replicas as f64);
-            raw.push((i, replicas));
+            raw.push(replicas);
             demand_cpu += replicas * p.requests.cpu_m as f64;
         }
         let quota = self.cfg.quota_cpu_m as f64;
         if demand_cpu <= quota {
-            for (i, replicas) in raw {
-                desired.insert(self.pools[i].name.clone(), replicas as usize);
-            }
-            return desired;
+            desired.extend(raw.iter().map(|&r| r as usize));
+            return;
         }
         // Contended: proportional CPU shares, largest-remainder rounding.
         let mut fracs: Vec<(usize, f64, f64)> = Vec::new(); // (pool, floor, frac)
         let mut used = 0.0;
-        for (i, replicas) in &raw {
-            let p = &self.pools[*i];
-            let cpu_share = quota * (*replicas * p.requests.cpu_m as f64) / demand_cpu;
+        for (i, &replicas) in raw.iter().enumerate() {
+            let p = &self.pools[i];
+            let cpu_share = quota * (replicas * p.requests.cpu_m as f64) / demand_cpu;
             let ideal = cpu_share / p.requests.cpu_m as f64;
             // never allocate more than the raw demand
-            let ideal = ideal.min(*replicas);
+            let ideal = ideal.min(replicas);
             let fl = ideal.floor();
             used += fl * p.requests.cpu_m as f64;
-            fracs.push((*i, fl, ideal - fl));
+            fracs.push((i, fl, ideal - fl));
         }
-        // hand out remaining quota by largest fractional part
+        let mut counts: Vec<f64> = fracs.iter().map(|&(_, fl, _)| fl).collect();
+        // hand out remaining quota by largest fractional part (stable sort:
+        // equal fractions resolve in pool-declaration order)
         fracs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
-        let mut counts: Vec<(usize, f64)> = fracs.iter().map(|&(i, fl, _)| (i, fl)).collect();
         for &(i, _, frac) in &fracs {
             if frac <= 0.0 {
                 continue;
@@ -145,56 +156,62 @@ impl Autoscaler {
             let c = self.pools[i].requests.cpu_m as f64;
             if used + c <= quota {
                 used += c;
-                if let Some(e) = counts.iter_mut().find(|(j, _)| *j == i) {
-                    e.1 += 1.0;
-                }
+                counts[i] += 1.0;
             }
         }
-        for (i, n) in counts {
+        for (i, n) in counts.into_iter().enumerate() {
             // a pool with backlog always gets at least one replica if any
             // quota remains — otherwise short queues starve forever
-            let backlog = *backlogs.get(&self.pools[i].name).unwrap_or(&0);
-            let n = if backlog > 0 { n.max(1.0) } else { n };
+            let n = if backlogs[i] > 0 { n.max(1.0) } else { n };
             let n = n.max(self.cfg.min_replicas as f64);
-            desired.insert(self.pools[i].name.clone(), n as usize);
+            desired.push(n as usize);
         }
-        desired
+    }
+
+    /// Allocating convenience wrapper around [`Autoscaler::allocate_into`].
+    pub fn allocate(&self, backlogs: &[usize]) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.pools.len());
+        self.allocate_into(backlogs, &mut out);
+        out
     }
 
     /// Stateful poll: applies the stabilization window to scale-downs.
-    /// `current` is the present replica count per pool.
-    pub fn poll(
+    /// `current` is the present replica count per pool; `out` is cleared
+    /// and refilled with the desired count per pool.
+    pub fn poll_into(
         &mut self,
         now: SimTime,
-        backlogs: &BTreeMap<String, usize>,
-        current: &BTreeMap<String, usize>,
-    ) -> BTreeMap<String, usize> {
-        let desired = self.allocate(backlogs);
-        let mut out = BTreeMap::new();
-        for p in &self.pools {
-            let want = *desired.get(&p.name).unwrap_or(&0);
-            let cur = *current.get(&p.name).unwrap_or(&0);
-            let entry = self
-                .last_not_below
-                .entry(p.name.clone())
-                .or_insert(now);
+        backlogs: &[usize],
+        current: &[usize],
+        out: &mut Vec<usize>,
+    ) {
+        debug_assert_eq!(current.len(), self.pools.len());
+        self.allocate_into(backlogs, out);
+        for i in 0..self.pools.len() {
+            let want = out[i];
+            let cur = current[i];
+            let entry = self.last_not_below[i].get_or_insert(now);
             if want >= cur {
                 *entry = now;
                 if want != cur {
                     self.scale_events += 1;
                 }
-                out.insert(p.name.clone(), want);
             } else {
                 // scale-down only after the stabilization window
                 let since = now.saturating_sub(*entry);
                 if since.as_millis() >= self.cfg.stabilization_ms {
                     self.scale_events += 1;
-                    out.insert(p.name.clone(), want);
                 } else {
-                    out.insert(p.name.clone(), cur);
+                    out[i] = cur;
                 }
             }
         }
+    }
+
+    /// Allocating convenience wrapper around [`Autoscaler::poll_into`].
+    pub fn poll(&mut self, now: SimTime, backlogs: &[usize], current: &[usize]) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.pools.len());
+        self.poll_into(now, backlogs, current, &mut out);
         out
     }
 }
@@ -203,6 +220,7 @@ impl Autoscaler {
 mod tests {
     use super::*;
 
+    // pool 0 = mProject (1000m), pool 1 = mDiffFit (500m)
     fn pools() -> Vec<PoolSpec> {
         vec![
             PoolSpec {
@@ -216,13 +234,6 @@ mod tests {
         ]
     }
 
-    fn backlogs(p: usize, d: usize) -> BTreeMap<String, usize> {
-        let mut m = BTreeMap::new();
-        m.insert("mProject".to_string(), p);
-        m.insert("mDiffFit".to_string(), d);
-        m
-    }
-
     #[test]
     fn uncontended_gives_one_replica_per_task() {
         let a = Autoscaler::new(
@@ -232,17 +243,14 @@ mod tests {
             },
             pools(),
         );
-        let d = a.allocate(&backlogs(10, 20));
-        assert_eq!(d["mProject"], 10);
-        assert_eq!(d["mDiffFit"], 20);
+        let d = a.allocate(&[10, 20]);
+        assert_eq!(d, vec![10, 20]);
     }
 
     #[test]
     fn zero_backlog_scales_to_zero() {
         let a = Autoscaler::new(AutoscalerConfig::default(), pools());
-        let d = a.allocate(&backlogs(0, 0));
-        assert_eq!(d["mProject"], 0);
-        assert_eq!(d["mDiffFit"], 0);
+        assert_eq!(a.allocate(&[0, 0]), vec![0, 0]);
     }
 
     #[test]
@@ -255,9 +263,7 @@ mod tests {
             },
             pools(),
         );
-        let d = a.allocate(&backlogs(0, 0));
-        assert_eq!(d["mProject"], 1);
-        assert_eq!(d["mDiffFit"], 1);
+        assert_eq!(a.allocate(&[0, 0]), vec![1, 1]);
         // floor also survives the contended path
         let a2 = Autoscaler::new(
             AutoscalerConfig {
@@ -267,8 +273,8 @@ mod tests {
             },
             pools(),
         );
-        let d2 = a2.allocate(&backlogs(100, 0));
-        assert!(d2["mDiffFit"] >= 1);
+        let d2 = a2.allocate(&[100, 0]);
+        assert!(d2[1] >= 1);
     }
 
     #[test]
@@ -283,12 +289,12 @@ mod tests {
             },
             pools(),
         );
-        let d = a.allocate(&backlogs(100, 100));
-        let cpu = d["mProject"] * 1000 + d["mDiffFit"] * 500;
+        let d = a.allocate(&[100, 100]);
+        let cpu = d[0] * 1000 + d[1] * 500;
         assert!(cpu <= 10_000, "quota violated: {cpu}");
         assert!(cpu >= 9_000, "quota wasted: {cpu}");
         // proportional: mProject gets ~2x the cpu of mDiffFit
-        let ratio = (d["mProject"] as f64 * 1000.0) / (d["mDiffFit"] as f64 * 500.0);
+        let ratio = (d[0] as f64 * 1000.0) / (d[1] as f64 * 500.0);
         assert!((1.5..3.0).contains(&ratio), "ratio {ratio}");
     }
 
@@ -306,10 +312,8 @@ mod tests {
             },
             ps,
         );
-        let mut b = backlogs(1000, 1000);
-        b.insert("mBackground".to_string(), 1);
-        let d = a.allocate(&b);
-        assert!(d["mBackground"] >= 1);
+        let d = a.allocate(&[1000, 1000, 1]);
+        assert!(d[2] >= 1);
     }
 
     #[test]
@@ -321,17 +325,14 @@ mod tests {
             },
             pools(),
         );
-        let d = a.allocate(&backlogs(3, 0));
-        assert_eq!(d["mProject"], 3);
-        assert_eq!(d["mDiffFit"], 0);
+        assert_eq!(a.allocate(&[3, 0]), vec![3, 0]);
     }
 
     #[test]
     fn scale_up_is_immediate() {
         let mut a = Autoscaler::new(AutoscalerConfig::default(), pools());
-        let cur = backlogs(0, 0);
-        let d = a.poll(SimTime(0), &backlogs(5, 0), &cur);
-        assert_eq!(d["mProject"], 5);
+        let d = a.poll(SimTime(0), &[5, 0], &[0, 0]);
+        assert_eq!(d[0], 5);
     }
 
     #[test]
@@ -343,17 +344,16 @@ mod tests {
             },
             pools(),
         );
-        let mut cur = backlogs(0, 0);
-        cur.insert("mProject".to_string(), 10);
+        let cur = [10, 0];
         // backlog dropped to zero at t=0: hold replicas
-        let d = a.poll(SimTime(0), &backlogs(0, 0), &cur);
-        assert_eq!(d["mProject"], 10);
+        let d = a.poll(SimTime(0), &[0, 0], &cur);
+        assert_eq!(d[0], 10);
         // still inside window at t=15s
-        let d = a.poll(SimTime(15_000), &backlogs(0, 0), &cur);
-        assert_eq!(d["mProject"], 10);
+        let d = a.poll(SimTime(15_000), &[0, 0], &cur);
+        assert_eq!(d[0], 10);
         // window elapsed at t=30s: scale to zero
-        let d = a.poll(SimTime(30_000), &backlogs(0, 0), &cur);
-        assert_eq!(d["mProject"], 0);
+        let d = a.poll(SimTime(30_000), &[0, 0], &cur);
+        assert_eq!(d[0], 0);
     }
 
     #[test]
@@ -365,17 +365,42 @@ mod tests {
             },
             pools(),
         );
-        let mut cur = backlogs(0, 0);
-        cur.insert("mProject".to_string(), 10);
-        a.poll(SimTime(0), &backlogs(0, 0), &cur);
+        let cur = [10, 0];
+        a.poll(SimTime(0), &[0, 0], &cur);
         // backlog returns at t=15s -> desired >= current resets the window
-        let d = a.poll(SimTime(15_000), &backlogs(10, 0), &cur);
-        assert_eq!(d["mProject"], 10);
+        let d = a.poll(SimTime(15_000), &[10, 0], &cur);
+        assert_eq!(d[0], 10);
         // drops again; need 30 more seconds from t=15s... at t=40s: not yet
-        let d = a.poll(SimTime(40_000), &backlogs(0, 0), &cur);
-        assert_eq!(d["mProject"], 10);
-        let d = a.poll(SimTime(45_000), &backlogs(0, 0), &cur);
-        assert_eq!(d["mProject"], 0);
+        let d = a.poll(SimTime(40_000), &[0, 0], &cur);
+        assert_eq!(d[0], 10);
+        let d = a.poll(SimTime(45_000), &[0, 0], &cur);
+        assert_eq!(d[0], 0);
+    }
+
+    #[test]
+    fn poll_into_reuses_buffer() {
+        let mut a = Autoscaler::new(AutoscalerConfig::default(), pools());
+        let mut buf = vec![123, 456, 789]; // stale content is discarded
+        a.poll_into(SimTime(0), &[4, 2], &[0, 0], &mut buf);
+        assert_eq!(buf, vec![4, 2]);
+    }
+
+    #[test]
+    fn vpa_request_update_changes_allocation() {
+        let mut a = Autoscaler::new(
+            AutoscalerConfig {
+                quota_cpu_m: 2_000,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let before = a.allocate(&[0, 100]);
+        a.set_pool_requests(1, Resources::new(250, 512));
+        let after = a.allocate(&[0, 100]);
+        assert!(after[1] > before[1], "{after:?} vs {before:?}");
+        // name-keyed variant hits the same pool
+        a.update_pool_requests("mDiffFit", Resources::new(500, 512));
+        assert_eq!(a.allocate(&[0, 100]), before);
     }
 
     #[test]
@@ -398,18 +423,17 @@ mod tests {
                 },
                 ps.clone(),
             );
-            let mut b = BTreeMap::new();
-            for p in &ps {
-                b.insert(p.name.clone(), rng.below(2000) as usize);
-            }
+            let b: Vec<usize> = (0..n_pools).map(|_| rng.below(2000) as usize).collect();
             let d = a.allocate(&b);
             let used: u64 = ps
                 .iter()
-                .map(|p| d[&p.name] as u64 * p.requests.cpu_m)
+                .enumerate()
+                .map(|(i, p)| d[i] as u64 * p.requests.cpu_m)
                 .sum();
             let demand: u64 = ps
                 .iter()
-                .map(|p| b[&p.name] as u64 * p.requests.cpu_m)
+                .enumerate()
+                .map(|(i, p)| b[i] as u64 * p.requests.cpu_m)
                 .sum();
             if demand > quota {
                 // at most one extra minimum replica per pool beyond quota

@@ -5,9 +5,29 @@
 //! completion. Queue *lengths* are the autoscaler's primary metric, exactly
 //! as in the paper ("The length of these queues is the main metric used to
 //! make decision about scaling the worker pools").
+//!
+//! Queue names are interned at declaration into dense [`PoolId`] indices:
+//! the simulation hot path (publish/fetch/ack per task, backlog reads per
+//! autoscale tick) indexes a `Vec` instead of hashing/cloning `String`
+//! keys, which together with the driver's pool tables removed every
+//! per-event string allocation (EXPERIMENTS.md §Perf). Names remain
+//! available through [`Broker::name`] for metrics labels and reports.
 
 use crate::workflow::task::TaskId;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
+
+/// Dense handle for a declared pool/queue. Shared vocabulary between the
+/// [`Broker`], the autoscaler's pool specs, worker-pod payloads, and the
+/// driver's deployment/idle tables — all of which index `Vec`s by it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PoolId(pub u16);
+
+impl PoolId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
 
 /// One named work queue.
 #[derive(Debug, Default)]
@@ -36,10 +56,11 @@ impl Queue {
     }
 }
 
-/// The broker: a set of named queues.
+/// The broker: a set of queues, dense-indexed by [`PoolId`].
 #[derive(Debug, Default)]
 pub struct Broker {
-    queues: BTreeMap<String, Queue>,
+    queues: Vec<Queue>,
+    names: Vec<String>,
 }
 
 impl Broker {
@@ -47,63 +68,91 @@ impl Broker {
         Broker::default()
     }
 
-    /// Declare a queue (idempotent).
-    pub fn declare(&mut self, name: &str) {
-        self.queues.entry(name.to_string()).or_default();
+    /// Declare a queue, interning its name (idempotent: re-declaring an
+    /// existing name returns the original id).
+    pub fn declare(&mut self, name: &str) -> PoolId {
+        if let Some(i) = self.names.iter().position(|n| n == name) {
+            return PoolId(i as u16);
+        }
+        assert!(self.names.len() < u16::MAX as usize, "pool id space exhausted");
+        self.names.push(name.to_string());
+        self.queues.push(Queue::default());
+        PoolId((self.queues.len() - 1) as u16)
     }
 
-    pub fn queue(&self, name: &str) -> Option<&Queue> {
-        self.queues.get(name)
+    /// Look up a declared queue by name (cold path: config/reports only).
+    pub fn resolve(&self, name: &str) -> Option<PoolId> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| PoolId(i as u16))
+    }
+
+    /// The interned name of a queue.
+    pub fn name(&self, id: PoolId) -> &str {
+        &self.names[id.idx()]
+    }
+
+    /// Number of declared queues (valid `PoolId`s are `0..len`).
+    pub fn len(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.is_empty()
+    }
+
+    pub fn queue(&self, id: PoolId) -> &Queue {
+        &self.queues[id.idx()]
     }
 
     pub fn queue_names(&self) -> impl Iterator<Item = &str> {
-        self.queues.keys().map(|s| s.as_str())
+        self.names.iter().map(|s| s.as_str())
     }
 
-    /// Publish a task to a queue. The queue must have been declared.
-    pub fn publish(&mut self, name: &str, task: TaskId) {
-        let q = self
-            .queues
-            .get_mut(name)
-            .unwrap_or_else(|| panic!("publish to undeclared queue '{name}'"));
+    /// Publish a task to a queue.
+    pub fn publish(&mut self, id: PoolId, task: TaskId) {
+        let q = &mut self.queues[id.idx()];
         q.ready.push_back(task);
         q.published_total += 1;
     }
 
     /// Deliver one message to a consumer (prefetch 1): moves it to the
     /// unacked window.
-    pub fn fetch(&mut self, name: &str) -> Option<TaskId> {
-        let q = self.queues.get_mut(name)?;
+    pub fn fetch(&mut self, id: PoolId) -> Option<TaskId> {
+        let q = &mut self.queues[id.idx()];
         let t = q.ready.pop_front()?;
         q.unacked += 1;
         Some(t)
     }
 
     /// Ack a previously fetched message.
-    pub fn ack(&mut self, name: &str) {
-        let q = self
-            .queues
-            .get_mut(name)
-            .unwrap_or_else(|| panic!("ack on undeclared queue '{name}'"));
-        assert!(q.unacked > 0, "ack without outstanding delivery on '{name}'");
+    pub fn ack(&mut self, id: PoolId) {
+        let q = &mut self.queues[id.idx()];
+        assert!(
+            q.unacked > 0,
+            "ack without outstanding delivery on '{}'",
+            self.names[id.idx()]
+        );
         q.unacked -= 1;
         q.acked_total += 1;
     }
 
     /// Requeue an unacked message (consumer died — failure injection).
-    pub fn nack_requeue(&mut self, name: &str, task: TaskId) {
-        let q = self
-            .queues
-            .get_mut(name)
-            .unwrap_or_else(|| panic!("nack on undeclared queue '{name}'"));
-        assert!(q.unacked > 0);
+    pub fn nack_requeue(&mut self, id: PoolId, task: TaskId) {
+        let q = &mut self.queues[id.idx()];
+        assert!(
+            q.unacked > 0,
+            "nack without outstanding delivery on '{}'",
+            self.names[id.idx()]
+        );
         q.unacked -= 1;
         q.ready.push_front(task);
     }
 
     /// Total backlog across all queues (for reports).
     pub fn total_backlog(&self) -> usize {
-        self.queues.values().map(|q| q.backlog()).sum()
+        self.queues.iter().map(|q| q.backlog()).sum()
     }
 }
 
@@ -114,55 +163,69 @@ mod tests {
     #[test]
     fn publish_fetch_ack_cycle() {
         let mut b = Broker::new();
-        b.declare("mProject");
-        b.publish("mProject", TaskId(1));
-        b.publish("mProject", TaskId(2));
-        assert_eq!(b.queue("mProject").unwrap().depth(), 2);
+        let q = b.declare("mProject");
+        b.publish(q, TaskId(1));
+        b.publish(q, TaskId(2));
+        assert_eq!(b.queue(q).depth(), 2);
 
-        let t = b.fetch("mProject").unwrap();
+        let t = b.fetch(q).unwrap();
         assert_eq!(t, TaskId(1)); // FIFO
-        assert_eq!(b.queue("mProject").unwrap().depth(), 1);
-        assert_eq!(b.queue("mProject").unwrap().backlog(), 2); // 1 ready + 1 unacked
+        assert_eq!(b.queue(q).depth(), 1);
+        assert_eq!(b.queue(q).backlog(), 2); // 1 ready + 1 unacked
 
-        b.ack("mProject");
-        assert_eq!(b.queue("mProject").unwrap().backlog(), 1);
-        assert_eq!(b.queue("mProject").unwrap().acked_total, 1);
+        b.ack(q);
+        assert_eq!(b.queue(q).backlog(), 1);
+        assert_eq!(b.queue(q).acked_total, 1);
+    }
+
+    #[test]
+    fn declare_interns_and_is_idempotent() {
+        let mut b = Broker::new();
+        let a = b.declare("a");
+        let c = b.declare("b");
+        assert_eq!(b.declare("a"), a);
+        assert_ne!(a, c);
+        assert_eq!(b.name(a), "a");
+        assert_eq!(b.resolve("b"), Some(c));
+        assert_eq!(b.resolve("missing"), None);
+        assert_eq!(b.len(), 2);
+        let names: Vec<&str> = b.queue_names().collect();
+        assert_eq!(names, vec!["a", "b"]);
     }
 
     #[test]
     fn fetch_empty_returns_none() {
         let mut b = Broker::new();
-        b.declare("q");
-        assert_eq!(b.fetch("q"), None);
-        assert_eq!(b.fetch("missing"), None);
+        let q = b.declare("q");
+        assert_eq!(b.fetch(q), None);
     }
 
     #[test]
-    #[should_panic(expected = "undeclared queue")]
-    fn publish_undeclared_panics() {
+    #[should_panic(expected = "index out of bounds")]
+    fn undeclared_id_panics() {
         let mut b = Broker::new();
-        b.publish("nope", TaskId(0));
+        b.publish(PoolId(0), TaskId(0));
     }
 
     #[test]
     fn nack_requeues_at_front() {
         let mut b = Broker::new();
-        b.declare("q");
-        b.publish("q", TaskId(1));
-        b.publish("q", TaskId(2));
-        let t = b.fetch("q").unwrap();
-        b.nack_requeue("q", t);
-        assert_eq!(b.fetch("q"), Some(TaskId(1))); // redelivered first
+        let q = b.declare("q");
+        b.publish(q, TaskId(1));
+        b.publish(q, TaskId(2));
+        let t = b.fetch(q).unwrap();
+        b.nack_requeue(q, t);
+        assert_eq!(b.fetch(q), Some(TaskId(1))); // redelivered first
     }
 
     #[test]
     fn queues_are_independent() {
         let mut b = Broker::new();
-        b.declare("a");
-        b.declare("b");
-        b.publish("a", TaskId(1));
-        assert_eq!(b.queue("a").unwrap().depth(), 1);
-        assert_eq!(b.queue("b").unwrap().depth(), 0);
+        let a = b.declare("a");
+        let c = b.declare("b");
+        b.publish(a, TaskId(1));
+        assert_eq!(b.queue(a).depth(), 1);
+        assert_eq!(b.queue(c).depth(), 0);
         assert_eq!(b.total_backlog(), 1);
     }
 
@@ -170,10 +233,10 @@ mod tests {
     #[should_panic(expected = "ack without outstanding")]
     fn double_ack_panics() {
         let mut b = Broker::new();
-        b.declare("q");
-        b.publish("q", TaskId(1));
-        b.fetch("q");
-        b.ack("q");
-        b.ack("q");
+        let q = b.declare("q");
+        b.publish(q, TaskId(1));
+        b.fetch(q);
+        b.ack(q);
+        b.ack(q);
     }
 }

@@ -4,6 +4,7 @@
 
 use super::node::NodeId;
 use super::resources::Resources;
+use crate::broker::PoolId;
 use crate::sim::SimTime;
 use crate::workflow::task::TaskId;
 
@@ -17,8 +18,9 @@ pub enum Payload {
     /// pod terminates (task clustering = len > 1; plain job model = len 1).
     JobBatch { tasks: Vec<TaskId> },
     /// Worker-pools execution: long-running worker consuming from the
-    /// pool's queue.
-    Worker { pool: String },
+    /// pool's queue. The pool is an interned [`PoolId`] so routing a pod
+    /// event never touches (or clones) a string (EXPERIMENTS.md §Perf).
+    Worker { pool: PoolId },
 }
 
 /// Pod lifecycle. The paper's job-model pathologies live in
@@ -81,9 +83,10 @@ impl Pod {
         matches!(self.phase, PodPhase::Succeeded | PodPhase::Deleted)
     }
 
-    pub fn pool_name(&self) -> Option<&str> {
+    /// The pool a worker pod belongs to (`None` for job pods).
+    pub fn pool_id(&self) -> Option<PoolId> {
         match &self.payload {
-            Payload::Worker { pool } => Some(pool),
+            Payload::Worker { pool } => Some(*pool),
             Payload::JobBatch { .. } => None,
         }
     }
@@ -104,18 +107,18 @@ mod tests {
         assert_eq!(p.phase, PodPhase::Pending);
         assert_eq!(p.created_at, SimTime(10));
         assert!(!p.is_terminal());
-        assert_eq!(p.pool_name(), None);
+        assert_eq!(p.pool_id(), None);
     }
 
     #[test]
-    fn worker_pool_name() {
+    fn worker_pool_id() {
         let p = Pod::new(
             PodId(2),
-            Payload::Worker { pool: "mProject".into() },
+            Payload::Worker { pool: PoolId(3) },
             Resources::new(1000, 1024),
             SimTime::ZERO,
         );
-        assert_eq!(p.pool_name(), Some("mProject"));
+        assert_eq!(p.pool_id(), Some(PoolId(3)));
     }
 
     #[test]

@@ -129,6 +129,22 @@ impl Scheduler {
     /// exponential back-off.
     pub fn pass(&mut self, now: SimTime, pods: &mut [Pod], nodes: &mut [Node]) -> SchedulePass {
         let mut out = SchedulePass::default();
+        self.pass_into(now, pods, nodes, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Scheduler::pass`]: clears and refills
+    /// `out`, so the driver can reuse one `SchedulePass` across the many
+    /// passes a run performs (EXPERIMENTS.md §Perf).
+    pub fn pass_into(
+        &mut self,
+        now: SimTime,
+        pods: &mut [Pod],
+        nodes: &mut [Node],
+        out: &mut SchedulePass,
+    ) {
+        out.bound.clear();
+        out.backed_off.clear();
         let n_attempts = self.active.len();
         for _ in 0..n_attempts {
             let pid = match self.active.pop_front() {
@@ -181,7 +197,6 @@ impl Scheduler {
                 }
             }
         }
-        out
     }
 
     /// Remove a pod from all scheduler queues (pod deleted). The active
@@ -317,6 +332,109 @@ mod tests {
         sched.enqueue(PodId(0));
         sched.enqueue(PodId(0));
         assert_eq!(sched.queue_len(), 1);
+    }
+
+    #[test]
+    fn pass_into_reuses_buffer() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(1);
+        let mut pods: Vec<Pod> = (0..2).map(|i| mkpod(i, 1000)).collect();
+        sched.enqueue(PodId(0));
+        let mut out = SchedulePass::default();
+        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out);
+        assert_eq!(out.bound.len(), 1);
+        // second pass through the same buffer: stale results are cleared
+        sched.enqueue(PodId(1));
+        sched.pass_into(SimTime(50), &mut pods, &mut nodes, &mut out);
+        assert_eq!(out.bound.len(), 1);
+        assert_eq!(out.bound[0].0, PodId(1));
+        assert!(out.backed_off.is_empty());
+    }
+
+    // -- back-off bookkeeping at the dense-vector boundary ----------------
+
+    #[test]
+    fn out_of_order_pod_ids_grow_the_tables() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(2);
+        // ids arrive out of order and far apart: `ensure` must grow the
+        // dense flag vectors without disturbing earlier entries
+        let n = 70;
+        let mut pods: Vec<Pod> = (0..n).map(|i| mkpod(i, 500)).collect();
+        sched.enqueue(PodId(65)); // crosses the first 64-slot growth
+        sched.enqueue(PodId(3));
+        sched.enqueue(PodId(64));
+        assert_eq!(sched.queue_len(), 3);
+        let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
+        // FIFO order of the active queue is enqueue order, not id order
+        let bound: Vec<PodId> = pass.bound.iter().map(|b| b.0).collect();
+        assert_eq!(bound, vec![PodId(65), PodId(3), PodId(64)]);
+        assert_eq!(sched.queue_len(), 0);
+    }
+
+    #[test]
+    fn reenqueue_after_backoff_expire_clears_sleeping() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(1); // 4000m
+        let mut pods: Vec<Pod> = (0..5).map(|i| mkpod(i, 1000)).collect();
+        for i in 0..5 {
+            sched.enqueue(PodId(i));
+        }
+        let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
+        assert_eq!(pass.backed_off.len(), 1);
+        let (pid, until) = pass.backed_off[0];
+        assert!(sched.is_sleeping(pid));
+        assert_eq!(sched.sleeping_len(), 1);
+        // free a slot, then deliver the BackoffExpire: re-enqueue must move
+        // the pod from sleeping back to active exactly once
+        pods[0].phase = PodPhase::Deleted;
+        nodes[0].release(pods[0].requests);
+        sched.forget(PodId(0));
+        sched.enqueue(pid);
+        assert!(!sched.is_sleeping(pid));
+        assert_eq!(sched.sleeping_len(), 0);
+        assert_eq!(sched.queue_len(), 1);
+        let pass2 = run_pass(&mut sched, until, &mut pods, &mut nodes);
+        assert_eq!(pass2.bound.len(), 1);
+        assert_eq!(pass2.bound[0].0, pid);
+    }
+
+    #[test]
+    fn repeated_backoff_keeps_single_sleeping_entry() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = vec![Node::new(NodeId(0), Resources::new(100, 100))];
+        let mut pods = vec![mkpod(0, 1000)]; // never fits
+        let mut now = SimTime::ZERO;
+        for _ in 0..4 {
+            sched.enqueue(PodId(0));
+            let pass = run_pass(&mut sched, now, &mut pods, &mut nodes);
+            now = pass.backed_off[0].1;
+            assert_eq!(sched.sleeping_len(), 1, "sleeping count must not drift");
+            assert_eq!(sched.queue_len(), 0);
+        }
+        assert_eq!(pods[0].sched_attempts, 4);
+    }
+
+    #[test]
+    fn forget_unknown_and_sleeping_pods() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        // forgetting a pod the scheduler has never seen grows the tables
+        // and is a no-op on the counters
+        sched.forget(PodId(129));
+        assert_eq!(sched.queue_len(), 0);
+        assert_eq!(sched.sleeping_len(), 0);
+        // a sleeping pod that gets deleted is fully forgotten
+        let mut nodes = vec![Node::new(NodeId(0), Resources::new(100, 100))];
+        let mut pods = vec![mkpod(0, 1000)];
+        sched.enqueue(PodId(0));
+        run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
+        assert!(sched.is_sleeping(PodId(0)));
+        sched.forget(PodId(0));
+        assert!(!sched.is_sleeping(PodId(0)));
+        assert_eq!(sched.sleeping_len(), 0);
+        // a later (stale) wake enqueue re-adds it to active — the driver
+        // guards this with `is_sleeping` before enqueueing
+        assert!(!sched.is_sleeping(PodId(0)));
     }
 
     #[test]

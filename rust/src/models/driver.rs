@@ -11,22 +11,30 @@
 //!   -> pod start (~2 s)              -> API: create/delete worker pods
 //!   -> execute batch sequentially    -> scheduler -> pod start
 //!   -> pod terminates, free node     -> worker loop: fetch/execute/ack
+//!
+//! Hot-path design (EXPERIMENTS.md §Perf): pools are interned to dense
+//! [`PoolId`] indices at startup, so deployments, idle-worker queues,
+//! queue-depth gauges and per-type routing are all `Vec` lookups; the
+//! steady-state event loop performs no string hashing, no map walks and no
+//! per-event heap allocation (readiness, scheduler passes and batch
+//! hand-offs reuse scratch buffers or move payloads instead of cloning).
 
 use super::ExecModel;
 use crate::autoscale::{Autoscaler, AutoscalerConfig, PoolSpec};
-use crate::broker::Broker;
+use crate::broker::{Broker, PoolId};
 use crate::engine::clustering::{BatchAction, Batcher, ClusteringConfig};
 use crate::engine::Engine;
 use crate::k8s::api_server::{ApiServer, ApiServerConfig};
-use crate::k8s::node::{paper_cluster, Node};
+use crate::k8s::node::{paper_cluster, Node, NodeId};
 use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
-use crate::k8s::scheduler::{Scheduler, SchedulerConfig};
-use crate::metrics::Registry;
+use crate::k8s::resources::Resources;
+use crate::k8s::scheduler::{SchedulePass, Scheduler, SchedulerConfig};
+use crate::metrics::{GaugeId, Registry};
 use crate::report::{SimResult, Trace};
 use crate::sim::{EventQueue, SimTime};
 use crate::workflow::dag::Dag;
-use crate::workflow::task::TaskId;
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use crate::workflow::task::{TaskId, TypeId};
+use std::collections::VecDeque;
 
 /// Cluster / runtime parameters (defaults follow DESIGN.md §5).
 #[derive(Debug, Clone)]
@@ -103,7 +111,7 @@ impl SimConfig {
 }
 
 /// Simulation events.
-#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 enum Ev {
     /// API processed the Job creation; the Job controller will now create
     /// the pod object.
@@ -126,9 +134,15 @@ enum Ev {
     NodeEvent { node: usize, up: bool },
 }
 
+/// What a pod will do next, extracted from its payload without cloning it
+/// (the owned `Vec<TaskId>` is *moved* out of job payloads).
+enum PodWork {
+    Batch(Vec<TaskId>),
+    Pool(PoolId),
+}
+
 struct World {
     cfg: SimConfig,
-    model: ExecModel,
     q: EventQueue<Ev>,
     pods: Vec<Pod>,
     nodes: Vec<Node>,
@@ -138,10 +152,21 @@ struct World {
     batcher: Batcher,
     broker: Broker,
     scaler: Option<Autoscaler>,
-    /// Worker deployment state per pool: live pod set.
-    deployments: BTreeMap<String, BTreeSet<PodId>>,
+    /// Worker deployment state per pool: live pod set, kept sorted by
+    /// `PodId` (ids are assigned monotonically, so insertion is a push;
+    /// this preserves the old `BTreeSet` iteration order for scale-down).
+    deployments: Vec<Vec<PodId>>,
     /// Idle running workers per pool (FIFO).
-    idle_workers: BTreeMap<String, VecDeque<PodId>>,
+    idle_workers: Vec<VecDeque<PodId>>,
+    /// The task type backing each pool (`None` for the generic pool).
+    pool_type: Vec<Option<TypeId>>,
+    /// Routing table: which pool (if any) a ready task of each type goes
+    /// to. Replaces per-task string compares/clones in dispatch.
+    pool_of_type: Vec<Option<PoolId>>,
+    /// Pools in name order — the autoscale reconciliation applies desired
+    /// counts in this order to stay bit-identical with the pre-interning
+    /// code, which iterated a `BTreeMap<String, usize>`.
+    pools_by_name: Vec<PoolId>,
     /// Remaining batch tasks per pod (job path), front = current.
     batch_queue: Vec<VecDeque<TaskId>>,
     /// Task currently executing in each pod (for node-failure recovery).
@@ -151,7 +176,7 @@ struct World {
     /// Pods created but not yet bound (throttle accounting).
     jobs_in_flight: usize,
     /// Pod template for the generic-pool model (max over all types).
-    generic_requests: crate::k8s::resources::Resources,
+    generic_requests: Resources,
     metrics: Registry,
     trace: Trace,
     running_tasks: i64,
@@ -161,15 +186,29 @@ struct World {
     /// Completed tasks per TypeId (feeds the VPA usage estimator).
     completed_by_type: Vec<u64>,
     // pre-resolved gauge handles (string-keyed lookups were hot; §Perf)
-    g_running: crate::metrics::GaugeId,
-    g_cpu: crate::metrics::GaugeId,
-    g_pending: crate::metrics::GaugeId,
+    g_running: GaugeId,
+    g_cpu: GaugeId,
+    g_pending: GaugeId,
     /// running::<type> gauge per TypeId.
-    g_by_type: Vec<crate::metrics::GaugeId>,
-    /// queue::<type> gauge per TypeId (pooled types only).
-    g_queue_by_type: Vec<Option<crate::metrics::GaugeId>>,
-    g_queue_generic: Option<crate::metrics::GaugeId>,
+    g_by_type: Vec<GaugeId>,
+    /// queue::<pool> gauge per PoolId.
+    g_queue: Vec<GaugeId>,
+    /// replicas::<pool> gauge per PoolId.
+    g_replicas: Vec<GaugeId>,
     rng: crate::util::rng::Rng,
+    // -- reusable scratch buffers (zero steady-state allocation, §Perf) --
+    /// Newly-ready tasks from `Engine::complete_into`.
+    ready_buf: Vec<TaskId>,
+    /// Scheduler pass output.
+    pass_buf: SchedulePass,
+    /// Pod-id snapshots (scale-down members, node-failure victims).
+    members_buf: Vec<PodId>,
+    /// Idle-worker snapshot for scale-down.
+    idle_buf: Vec<PodId>,
+    /// Autoscale tick: backlog / current / desired per pool.
+    backlog_buf: Vec<usize>,
+    current_buf: Vec<usize>,
+    desired_buf: Vec<usize>,
 }
 
 /// Queue name of the single pool in the generic-pool model.
@@ -185,22 +224,22 @@ impl World {
     // ---------------------------------------------------------------
     fn new_pod(&mut self, payload: Payload) -> PodId {
         let requests = match &payload {
-            Payload::Worker { pool } if pool == GENERIC_POOL => self.generic_requests,
-            Payload::Worker { pool } => {
-                let dag = self.engine.dag();
-                let ty = dag.type_id(pool).expect("pool type exists");
-                let t = &dag.types[ty.0 as usize];
-                // §5 VPA: once enough of this type has run, right-size new
-                // workers to the observed CPU usage
-                if self.cfg.autoscale.vpa
-                    && self.completed_by_type[ty.0 as usize]
-                        >= self.cfg.autoscale.vpa_min_samples
-                {
-                    crate::k8s::resources::Resources::new(t.cpu_used_m, t.requests.mem_mb)
-                } else {
-                    t.requests
+            Payload::Worker { pool } => match self.pool_type[pool.idx()] {
+                None => self.generic_requests,
+                Some(ty) => {
+                    let t = &self.engine.dag().types[ty.0 as usize];
+                    // §5 VPA: once enough of this type has run, right-size
+                    // new workers to the observed CPU usage
+                    if self.cfg.autoscale.vpa
+                        && self.completed_by_type[ty.0 as usize]
+                            >= self.cfg.autoscale.vpa_min_samples
+                    {
+                        Resources::new(t.cpu_used_m, t.requests.mem_mb)
+                    } else {
+                        t.requests
+                    }
                 }
-            }
+            },
             Payload::JobBatch { tasks } => self.engine.dag().type_of(tasks[0]).requests,
         };
         let id = PodId(self.pods.len() as u64);
@@ -250,26 +289,27 @@ impl World {
         }
     }
 
-    /// Pool path: create worker pods for a deployment scale-up.
-    fn create_worker(&mut self, pool: &str) {
-        let pid = self.new_pod(Payload::Worker {
-            pool: pool.to_string(),
-        });
-        self.deployments
-            .get_mut(pool)
-            .expect("deployment declared")
-            .insert(pid);
+    /// Pool path: create a worker pod for a deployment scale-up.
+    fn create_worker(&mut self, pool: PoolId) {
+        let pid = self.new_pod(Payload::Worker { pool });
+        let dep = &mut self.deployments[pool.idx()];
+        if let Some(&last) = dep.last() {
+            debug_assert!(last < pid, "pod ids must be monotone");
+        }
+        dep.push(pid);
         let done = self.api.admit(self.now());
         self.q.schedule_at(done, Ev::PodCreated { pod: pid });
     }
 
     fn run_scheduler(&mut self) {
         let now = self.now();
-        let pass = self.sched.pass(now, &mut self.pods, &mut self.nodes);
+        let mut pass = std::mem::take(&mut self.pass_buf);
+        self.sched
+            .pass_into(now, &mut self.pods, &mut self.nodes, &mut pass);
         if !pass.bound.is_empty() {
             self.record_cpu();
         }
-        for (pid, _node, bind_done) in pass.bound {
+        for &(pid, _node, bind_done) in &pass.bound {
             self.pending_count -= 1;
             if matches!(self.pods[pid.0 as usize].payload, Payload::JobBatch { .. }) {
                 self.job_unblocked();
@@ -279,9 +319,10 @@ impl World {
                 Ev::PodStarted { pod: pid },
             );
         }
-        for (pid, until) in pass.backed_off {
+        for &(pid, until) in &pass.backed_off {
             self.q.schedule_at(until, Ev::BackoffExpire { pod: pid });
         }
+        self.pass_buf = pass;
         self.metrics
             .set_id(self.g_pending, now, self.pending_count as f64);
     }
@@ -292,7 +333,7 @@ impl World {
         self.metrics.set_id(self.g_cpu, now, alloc as f64);
     }
 
-    fn record_running(&mut self, ttype: crate::workflow::task::TypeId, delta: i64) {
+    fn record_running(&mut self, ttype: TypeId, delta: i64) {
         let now = self.now();
         self.running_tasks += delta;
         self.metrics
@@ -301,17 +342,12 @@ impl World {
             .add_id(self.g_by_type[ttype.0 as usize], now, delta as f64);
     }
 
-    /// Record the current depth of the queue feeding `ttype`'s pool.
-    fn record_queue_depth(&mut self, ttype: crate::workflow::task::TypeId, qname: &str) {
-        let id = match &self.model {
-            ExecModel::GenericPool => self.g_queue_generic,
-            _ => self.g_queue_by_type[ttype.0 as usize],
-        };
-        if let Some(id) = id {
-            let now = self.now();
-            let depth = self.broker.queue(qname).map(|q| q.depth()).unwrap_or(0);
-            self.metrics.set_id(id, now, depth as f64);
-        }
+    /// Record the current depth of a pool's queue.
+    fn record_queue_depth(&mut self, pool: PoolId) {
+        let now = self.now();
+        let depth = self.broker.queue(pool).depth();
+        self.metrics
+            .set_id(self.g_queue[pool.idx()], now, depth as f64);
     }
 
     /// Start executing `task` inside `pod` at the current time.
@@ -336,100 +372,98 @@ impl World {
     fn fail_node(&mut self, node: usize) {
         self.nodes[node].failed = true;
         self.metrics.inc("node_failures", 1);
-        let victims: Vec<PodId> = self
-            .pods
-            .iter()
-            .filter(|p| p.node == Some(crate::k8s::node::NodeId(node)) && !p.is_terminal())
-            .map(|p| p.id)
-            .collect();
-        for pid in victims {
-            let payload = self.pods[pid.0 as usize].payload.clone();
+        let mut victims = std::mem::take(&mut self.members_buf);
+        victims.clear();
+        victims.extend(
+            self.pods
+                .iter()
+                .filter(|p| p.node == Some(NodeId(node)) && !p.is_terminal())
+                .map(|p| p.id),
+        );
+        for &pid in &victims {
             // roll back the running-task accounting for the in-flight task
             let in_flight = self.current_task[pid.0 as usize].take();
             if let Some(task) = in_flight {
                 let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
                 self.record_running(ttype, -1);
             }
-            match &payload {
+            let work = match &self.pods[pid.0 as usize].payload {
                 Payload::JobBatch { tasks } => {
                     // job controller recreates the pod with the unfinished
                     // remainder of the batch (current task included)
-                    let remaining: Vec<TaskId> =
-                        if self.batch_queue[pid.0 as usize].is_empty() {
-                            tasks.clone() // killed while Starting
-                        } else {
-                            self.batch_queue[pid.0 as usize].iter().copied().collect()
-                        };
-                    self.terminate_pod(pid, PodPhase::Deleted);
+                    let remaining: Vec<TaskId> = if self.batch_queue[pid.0 as usize].is_empty() {
+                        tasks.clone() // killed while Pending/Starting
+                    } else {
+                        self.batch_queue[pid.0 as usize].iter().copied().collect()
+                    };
+                    PodWork::Batch(remaining)
+                }
+                Payload::Worker { pool } => PodWork::Pool(*pool),
+            };
+            self.terminate_pod(pid, PodPhase::Deleted);
+            match work {
+                PodWork::Batch(remaining) => {
                     if !remaining.is_empty() {
                         self.create_job(remaining);
                     }
                 }
-                Payload::Worker { pool } => {
+                PodWork::Pool(pool) => {
                     // the unacked delivery is redelivered to the queue
-                    let pool = pool.clone();
-                    self.terminate_pod(pid, PodPhase::Deleted);
                     if let Some(task) = in_flight {
-                        self.broker.nack_requeue(&pool, task);
-                        self.wake_idle_worker(&pool);
+                        self.broker.nack_requeue(pool, task);
+                        self.wake_idle_worker(pool);
                     }
                 }
             }
         }
+        self.members_buf = victims;
     }
 
     /// Route newly-ready tasks to the execution model.
-    fn dispatch_ready(&mut self, ready: Vec<TaskId>) {
+    fn dispatch_ready(&mut self, ready: &[TaskId]) {
         let now = self.now();
-        for t in ready {
+        for &t in ready {
             let ttype = self.engine.dag().tasks[t.0 as usize].ttype;
-            let tname = self.engine.dag().type_name(t).to_string();
-            self.trace.ready(t, &tname, now);
-            // which queue (if any) does this task go to?
-            let queue = match &self.model {
-                ExecModel::GenericPool => Some(GENERIC_POOL.to_string()),
-                ExecModel::WorkerPools { pooled_types }
-                    if pooled_types.iter().any(|p| p == &tname) =>
-                {
-                    Some(tname.clone())
+            self.trace.ready(t, self.engine.dag().type_name(t), now);
+            match self.pool_of_type[ttype.0 as usize] {
+                Some(pool) => {
+                    self.broker.publish(pool, t);
+                    self.record_queue_depth(pool);
+                    self.wake_idle_worker(pool);
                 }
-                _ => None,
-            };
-            if let Some(qname) = queue {
-                self.broker.publish(&qname, t);
-                self.record_queue_depth(ttype, &qname);
-                self.wake_idle_worker(&qname);
-            } else {
-                // job path (with or without clustering)
-                let ty = self.engine.dag().tasks[t.0 as usize].ttype;
-                match self.batcher.push(now, &tname, t) {
-                    BatchAction::Flush(batch) => self.create_job(batch),
-                    BatchAction::ArmTimer(deadline) => self.q.schedule_at(
-                        deadline,
-                        Ev::FlushTimer {
-                            type_idx: ty.0,
+                None => {
+                    // job path (with or without clustering)
+                    let action = self.batcher.push(
+                        now,
+                        &self.engine.dag().types[ttype.0 as usize].name,
+                        t,
+                    );
+                    match action {
+                        BatchAction::Flush(batch) => self.create_job(batch),
+                        BatchAction::ArmTimer(deadline) => self.q.schedule_at(
                             deadline,
-                        },
-                    ),
-                    BatchAction::Buffered => {}
+                            Ev::FlushTimer {
+                                type_idx: ttype.0,
+                                deadline,
+                            },
+                        ),
+                        BatchAction::Buffered => {}
+                    }
                 }
             }
         }
     }
 
     /// Give an idle worker of `pool` a task, if any is queued.
-    fn wake_idle_worker(&mut self, pool: &str) {
-        let Some(idle) = self.idle_workers.get_mut(pool) else {
-            return;
-        };
-        while let Some(&pid) = idle.front() {
+    fn wake_idle_worker(&mut self, pool: PoolId) {
+        while let Some(&pid) = self.idle_workers[pool.idx()].front() {
             // skip workers that were deleted while idle
             if self.pods[pid.0 as usize].phase != PodPhase::Running {
-                idle.pop_front();
+                self.idle_workers[pool.idx()].pop_front();
                 continue;
             }
             if let Some(task) = self.broker.fetch(pool) {
-                idle.pop_front();
+                self.idle_workers[pool.idx()].pop_front();
                 let now = self.now();
                 self.q.schedule_at(
                     now + SimTime::from_millis(self.cfg.fetch_ms),
@@ -456,9 +490,10 @@ impl World {
             self.nodes[nid.0].release(req);
             self.record_cpu();
         }
-        if let Some(pool) = self.pods[pid.0 as usize].pool_name().map(str::to_string) {
-            if let Some(dep) = self.deployments.get_mut(&pool) {
-                dep.remove(&pid);
+        if let Some(pool) = self.pods[pid.0 as usize].pool_id() {
+            let dep = &mut self.deployments[pool.idx()];
+            if let Ok(i) = dep.binary_search(&pid) {
+                dep.remove(i);
             }
         }
         self.sched.forget(pid);
@@ -477,85 +512,74 @@ impl World {
         // VPA: publish right-sized pod templates to the scaler once a
         // type's usage estimate is trustworthy
         if self.cfg.autoscale.vpa {
-            let updates: Vec<(String, crate::k8s::resources::Resources)> = self
-                .engine
-                .dag()
-                .types
-                .iter()
-                .enumerate()
-                .filter(|(i, t)| {
-                    self.completed_by_type[*i] >= self.cfg.autoscale.vpa_min_samples
-                        && t.cpu_used_m != t.requests.cpu_m
-                })
-                .map(|(_, t)| {
-                    (
-                        t.name.clone(),
-                        crate::k8s::resources::Resources::new(t.cpu_used_m, t.requests.mem_mb),
-                    )
-                })
-                .collect();
             if let Some(s) = &mut self.scaler {
-                for (name, req) in updates {
-                    s.update_pool_requests(&name, req);
+                for pool in 0..self.pool_type.len() {
+                    let Some(ty) = self.pool_type[pool] else { continue };
+                    let t = &self.engine.dag().types[ty.0 as usize];
+                    if self.completed_by_type[ty.0 as usize] >= self.cfg.autoscale.vpa_min_samples
+                        && t.cpu_used_m != t.requests.cpu_m
+                    {
+                        s.set_pool_requests(pool, Resources::new(t.cpu_used_m, t.requests.mem_mb));
+                    }
                 }
             }
         }
-        let Some(scaler) = &mut self.scaler else {
+        if self.scaler.is_none() {
             return;
-        };
-        let mut backlogs = BTreeMap::new();
-        let mut current = BTreeMap::new();
-        for spec in scaler.pools().to_vec() {
-            let b = self
-                .broker
-                .queue(&spec.name)
-                .map(|q| q.backlog())
-                .unwrap_or(0);
-            backlogs.insert(spec.name.clone(), b);
-            current.insert(
-                spec.name.clone(),
-                self.deployments
-                    .get(&spec.name)
-                    .map(|d| d.len())
-                    .unwrap_or(0),
-            );
-            self.metrics
-                .set(&format!("replicas::{}", spec.name), now, 0.0_f64.max(
-                    self.deployments
-                        .get(&spec.name)
-                        .map(|d| d.len())
-                        .unwrap_or(0) as f64,
-                ));
         }
-        let desired = self.scaler.as_mut().unwrap().poll(now, &backlogs, &current);
-        for (pool, want) in desired {
-            let have = self
-                .deployments
-                .get(&pool)
-                .map(|d| d.len())
-                .unwrap_or(0);
+        let n_pools = self.deployments.len();
+        let mut backlogs = std::mem::take(&mut self.backlog_buf);
+        let mut current = std::mem::take(&mut self.current_buf);
+        let mut desired = std::mem::take(&mut self.desired_buf);
+        backlogs.clear();
+        current.clear();
+        for pool in 0..n_pools {
+            backlogs.push(self.broker.queue(PoolId(pool as u16)).backlog());
+            let have = self.deployments[pool].len();
+            current.push(have);
+            self.metrics.set_id(self.g_replicas[pool], now, have as f64);
+        }
+        self.scaler
+            .as_mut()
+            .unwrap()
+            .poll_into(now, &backlogs, &current, &mut desired);
+        let pools_by_name = std::mem::take(&mut self.pools_by_name);
+        for &pool in &pools_by_name {
+            let want = desired[pool.idx()];
+            let have = self.deployments[pool.idx()].len();
             if want > have {
                 for _ in 0..(want - have) {
-                    self.create_worker(&pool);
+                    self.create_worker(pool);
                 }
             } else if want < have {
-                self.scale_down(&pool, have - want);
+                self.scale_down(pool, have - want);
             }
         }
+        self.pools_by_name = pools_by_name;
+        self.backlog_buf = backlogs;
+        self.current_buf = current;
+        self.desired_buf = desired;
         self.run_scheduler();
     }
 
     /// Remove `n` workers from a pool: pending pods first, then idle
     /// running workers, then mark busy workers Draining.
-    fn scale_down(&mut self, pool: &str, n: usize) {
+    fn scale_down(&mut self, pool: PoolId, n: usize) {
+        let mut members = std::mem::take(&mut self.members_buf);
+        members.clear();
+        members.extend_from_slice(&self.deployments[pool.idx()]);
+        let mut idle = std::mem::take(&mut self.idle_buf);
+        idle.clear();
+        idle.extend(self.idle_workers[pool.idx()].iter().copied());
+        self.scale_down_phases(pool, n, &members, &idle);
+        self.members_buf = members;
+        self.idle_buf = idle;
+    }
+
+    fn scale_down_phases(&mut self, pool: PoolId, n: usize, members: &[PodId], idle: &[PodId]) {
         let mut remaining = n;
-        let members: Vec<PodId> = self
-            .deployments
-            .get(pool)
-            .map(|d| d.iter().copied().collect())
-            .unwrap_or_default();
         // 1. pending (never scheduled) pods
-        for &pid in &members {
+        for &pid in members {
             if remaining == 0 {
                 return;
             }
@@ -565,7 +589,7 @@ impl World {
             }
         }
         // also starting pods that haven't begun work
-        for &pid in &members {
+        for &pid in members {
             if remaining == 0 {
                 return;
             }
@@ -575,26 +599,18 @@ impl World {
             }
         }
         // 2. idle running workers
-        let idle: Vec<PodId> = self
-            .idle_workers
-            .get(pool)
-            .map(|d| d.iter().copied().collect())
-            .unwrap_or_default();
-        for pid in idle {
+        for &pid in idle {
             if remaining == 0 {
                 return;
             }
             if self.pods[pid.0 as usize].phase == PodPhase::Running {
-                self.idle_workers
-                    .get_mut(pool)
-                    .unwrap()
-                    .retain(|&p| p != pid);
+                self.idle_workers[pool.idx()].retain(|&p| p != pid);
                 self.terminate_pod(pid, PodPhase::Deleted);
                 remaining -= 1;
             }
         }
         // 3. drain busy workers (terminate after current task)
-        for &pid in &members {
+        for &pid in members {
             if remaining == 0 {
                 return;
             }
@@ -637,58 +653,63 @@ impl World {
                     return; // deleted while starting
                 }
                 // failure injection: crash at container start
-                if self.cfg.pod_failure_prob > 0.0
-                    && self.rng.f64() < self.cfg.pod_failure_prob
+                if self.cfg.pod_failure_prob > 0.0 && self.rng.f64() < self.cfg.pod_failure_prob
                 {
                     self.metrics.inc("pod_failures", 1);
-                    let payload = self.pods[pod.0 as usize].payload.clone();
+                    let retry = match &mut self.pods[pod.0 as usize].payload {
+                        // job controller recreates the pod for the batch
+                        // (moving the batch out: the pod is dead anyway)
+                        Payload::JobBatch { tasks } => Some(std::mem::take(tasks)),
+                        // deployment controller replaces the worker on the
+                        // next autoscale tick (replica count short)
+                        Payload::Worker { .. } => None,
+                    };
                     self.terminate_pod(pod, PodPhase::Deleted);
-                    match payload {
-                        Payload::JobBatch { tasks } => {
-                            // job controller recreates the pod for the batch
-                            self.create_job(tasks);
-                        }
-                        Payload::Worker { .. } => {
-                            // deployment controller replaces the worker on
-                            // the next autoscale tick (replica count short)
-                        }
+                    if let Some(tasks) = retry {
+                        self.create_job(tasks);
                     }
                     return;
                 }
-                let p = &mut self.pods[pod.0 as usize];
-                p.phase = PodPhase::Running;
-                p.running_at = Some(now);
-                match p.payload.clone() {
-                    Payload::JobBatch { tasks } => {
-                        self.batch_queue[pod.0 as usize] = tasks.into_iter().collect();
+                let work = {
+                    let p = &mut self.pods[pod.0 as usize];
+                    p.phase = PodPhase::Running;
+                    p.running_at = Some(now);
+                    match &mut p.payload {
+                        // move the batch into the execution queue — the
+                        // remainder lives in `batch_queue` from here on
+                        Payload::JobBatch { tasks } => PodWork::Batch(std::mem::take(tasks)),
+                        Payload::Worker { pool } => PodWork::Pool(*pool),
+                    }
+                };
+                match work {
+                    PodWork::Batch(tasks) => {
+                        self.batch_queue[pod.0 as usize] = tasks.into();
                         let first = self.batch_queue[pod.0 as usize]
                             .front()
                             .copied()
                             .expect("non-empty batch");
                         self.start_task(pod, first);
                     }
-                    Payload::Worker { pool } => {
-                        if let Some(task) = self.broker.fetch(&pool) {
-                            let now = self.now();
+                    PodWork::Pool(pool) => {
+                        if let Some(task) = self.broker.fetch(pool) {
                             self.q.schedule_at(
                                 now + SimTime::from_millis(self.cfg.fetch_ms),
                                 Ev::WorkerFetched { pod, task },
                             );
                         } else {
-                            self.idle_workers
-                                .entry(pool)
-                                .or_default()
-                                .push_back(pod);
+                            self.idle_workers[pool.idx()].push_back(pod);
                         }
                     }
                 }
             }
             Ev::WorkerFetched { pod, task } => {
                 if self.pods[pod.0 as usize].is_terminal() {
-                    // worker deleted between fetch and start: requeue
-                    let pool = self.engine.dag().type_name(task).to_string();
-                    self.broker.nack_requeue(&pool, task);
-                    self.wake_idle_worker(&pool);
+                    // worker deleted between fetch and start: requeue on
+                    // the pod's own pool (its payload outlives deletion)
+                    if let Some(pool) = self.pods[pod.0 as usize].pool_id() {
+                        self.broker.nack_requeue(pool, task);
+                        self.wake_idle_worker(pool);
+                    }
                     return;
                 }
                 self.start_task(pod, task);
@@ -705,11 +726,15 @@ impl World {
                 self.trace.finished(task, now);
                 self.record_running(ttype, -1);
                 self.completed_by_type[ttype.0 as usize] += 1;
-                let ready = self.engine.complete(task);
-                self.dispatch_ready(ready);
+                // readiness propagation through the reusable scratch buffer
+                let mut ready = std::mem::take(&mut self.ready_buf);
+                ready.clear();
+                self.engine.complete_into(task, &mut ready);
+                self.dispatch_ready(&ready);
+                self.ready_buf = ready;
                 // advance the pod
-                match self.pods[pod.0 as usize].payload.clone() {
-                    Payload::JobBatch { .. } => {
+                match self.pods[pod.0 as usize].pool_id() {
+                    None => {
                         self.batch_queue[pod.0 as usize].pop_front();
                         if let Some(&next) = self.batch_queue[pod.0 as usize].front() {
                             self.start_task(pod, next);
@@ -717,28 +742,27 @@ impl World {
                             self.terminate_pod(pod, PodPhase::Succeeded);
                         }
                     }
-                    Payload::Worker { pool } => {
-                        self.broker.ack(&pool);
-                        self.record_queue_depth(ttype, &pool);
+                    Some(pool) => {
+                        self.broker.ack(pool);
+                        self.record_queue_depth(pool);
                         if self.pods[pod.0 as usize].phase == PodPhase::Draining {
                             self.terminate_pod(pod, PodPhase::Succeeded);
-                        } else if let Some(next) = self.broker.fetch(&pool) {
+                        } else if let Some(next) = self.broker.fetch(pool) {
                             self.q.schedule_at(
                                 now + SimTime::from_millis(self.cfg.fetch_ms),
                                 Ev::WorkerFetched { pod, task: next },
                             );
                         } else {
-                            self.idle_workers
-                                .entry(pool)
-                                .or_default()
-                                .push_back(pod);
+                            self.idle_workers[pool.idx()].push_back(pod);
                         }
                     }
                 }
             }
             Ev::FlushTimer { type_idx, deadline } => {
-                let tname = self.engine.dag().types[type_idx as usize].name.clone();
-                if let Some(batch) = self.batcher.timer_fired(&tname, deadline) {
+                let batch = self
+                    .batcher
+                    .timer_fired(&self.engine.dag().types[type_idx as usize].name, deadline);
+                if let Some(batch) = batch {
                     self.create_job(batch);
                 }
             }
@@ -776,78 +800,77 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
         _ => Batcher::new(ClusteringConfig::none()),
     };
 
-    let mut broker = Broker::new();
-    let mut deployments = BTreeMap::new();
-    let mut idle_workers = BTreeMap::new();
+    let n_types = engine.dag().types.len();
     // generic-pool pod template: max requests over every task type (§3.3's
     // "universal image" problem, resource-wise)
-    let generic_requests = engine.dag().types.iter().fold(
-        crate::k8s::resources::Resources::ZERO,
-        |acc, t| crate::k8s::resources::Resources {
+    let generic_requests = engine
+        .dag()
+        .types
+        .iter()
+        .fold(Resources::ZERO, |acc, t| Resources {
             cpu_m: acc.cpu_m.max(t.requests.cpu_m),
             mem_mb: acc.mem_mb.max(t.requests.mem_mb),
-        },
-    );
-    let scaler = match &model {
+        });
+
+    // Intern every pool up front: PoolId = declaration order, aligned with
+    // the autoscaler's spec indices and the broker's queue indices.
+    let mut broker = Broker::new();
+    let mut pool_type: Vec<Option<TypeId>> = Vec::new();
+    let mut pool_of_type: Vec<Option<PoolId>> = vec![None; n_types];
+    let mut specs: Vec<PoolSpec> = Vec::new();
+    match &model {
         ExecModel::WorkerPools { pooled_types } => {
-            let mut specs = Vec::new();
             for t in pooled_types {
-                broker.declare(t);
-                deployments.insert(t.clone(), BTreeSet::new());
-                idle_workers.insert(t.clone(), VecDeque::new());
                 let ty = engine
                     .dag()
                     .type_id(t)
                     .unwrap_or_else(|| panic!("pooled type '{t}' not in workflow"));
+                let id = broker.declare(t);
+                assert_eq!(id.idx(), pool_type.len(), "duplicate pooled type '{t}'");
+                pool_type.push(Some(ty));
+                pool_of_type[ty.0 as usize] = Some(id);
                 specs.push(PoolSpec {
                     name: t.clone(),
                     requests: engine.dag().types[ty.0 as usize].requests,
                 });
             }
-            Some(Autoscaler::new(cfg.autoscale.clone(), specs))
         }
         ExecModel::GenericPool => {
-            broker.declare(GENERIC_POOL);
-            deployments.insert(GENERIC_POOL.to_string(), BTreeSet::new());
-            idle_workers.insert(GENERIC_POOL.to_string(), VecDeque::new());
-            Some(Autoscaler::new(
-                cfg.autoscale.clone(),
-                vec![PoolSpec {
-                    name: GENERIC_POOL.to_string(),
-                    requests: generic_requests,
-                }],
-            ))
+            let id = broker.declare(GENERIC_POOL);
+            pool_type.push(None);
+            for slot in pool_of_type.iter_mut() {
+                *slot = Some(id);
+            }
+            specs.push(PoolSpec {
+                name: GENERIC_POOL.to_string(),
+                requests: generic_requests,
+            });
         }
-        _ => None,
-    };
+        _ => {}
+    }
+    let n_pools = pool_type.len();
+    let scaler = (n_pools > 0).then(|| Autoscaler::new(cfg.autoscale.clone(), specs));
+
+    let mut pools_by_name: Vec<PoolId> = (0..n_pools).map(|i| PoolId(i as u16)).collect();
+    pools_by_name.sort_by(|a, b| broker.name(*a).cmp(broker.name(*b)));
 
     // pre-resolve the hot gauges (see §Perf)
     let mut metrics = Registry::new();
     let g_running = metrics.gauge_id("running_tasks");
     let g_cpu = metrics.gauge_id("cpu_allocated_m");
     let g_pending = metrics.gauge_id("pending_pods");
-    let g_by_type: Vec<crate::metrics::GaugeId> = engine
+    let g_by_type: Vec<GaugeId> = engine
         .dag()
         .types
         .iter()
         .map(|t| metrics.gauge_id(&format!("running::{}", t.name)))
         .collect();
-    let g_queue_by_type: Vec<Option<crate::metrics::GaugeId>> = engine
-        .dag()
-        .types
-        .iter()
-        .map(|t| match &model {
-            ExecModel::WorkerPools { pooled_types }
-                if pooled_types.iter().any(|p| p == &t.name) =>
-            {
-                Some(metrics.gauge_id(&format!("queue::{}", t.name)))
-            }
-            _ => None,
-        })
+    let g_queue: Vec<GaugeId> = (0..n_pools)
+        .map(|i| metrics.gauge_id(&format!("queue::{}", broker.name(PoolId(i as u16)))))
         .collect();
-    let g_queue_generic = matches!(model, ExecModel::GenericPool)
-        .then(|| metrics.gauge_id(&format!("queue::{GENERIC_POOL}")));
-    let n_types = engine.dag().types.len();
+    let g_replicas: Vec<GaugeId> = (0..n_pools)
+        .map(|i| metrics.gauge_id(&format!("replicas::{}", broker.name(PoolId(i as u16)))))
+        .collect();
 
     let mut world = World {
         rng: crate::util::rng::Rng::new(cfg.seed ^ 0xFA11),
@@ -858,8 +881,11 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
         batcher,
         broker,
         scaler,
-        deployments,
-        idle_workers,
+        deployments: vec![Vec::new(); n_pools],
+        idle_workers: vec![VecDeque::new(); n_pools],
+        pool_type,
+        pool_of_type,
+        pools_by_name,
         batch_queue: Vec::new(),
         current_task: Vec::new(),
         throttle_wait: VecDeque::new(),
@@ -874,22 +900,32 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
         g_cpu,
         g_pending,
         g_by_type,
-        g_queue_by_type,
-        g_queue_generic,
+        g_queue,
+        g_replicas,
         q: EventQueue::new(),
         pods: Vec::new(),
+        ready_buf: Vec::new(),
+        pass_buf: SchedulePass::default(),
+        members_buf: Vec::new(),
+        idle_buf: Vec::new(),
+        backlog_buf: Vec::new(),
+        current_buf: Vec::new(),
+        desired_buf: Vec::new(),
         cfg,
-        model,
     };
 
-    world.metrics.set("running_tasks", SimTime::ZERO, 0.0);
-    for &(at_ms, node, up) in &world.cfg.node_events.clone() {
+    world.metrics.set_id(world.g_running, SimTime::ZERO, 0.0);
+    // schedule the configured node failures (moved out and back rather
+    // than cloning the whole Vec per run)
+    let node_events = std::mem::take(&mut world.cfg.node_events);
+    for &(at_ms, node, up) in &node_events {
         assert!(node < world.nodes.len(), "node event for unknown node {node}");
         world
             .q
             .schedule_at(SimTime::from_millis(at_ms), Ev::NodeEvent { node, up });
     }
-    world.dispatch_ready(initial_ready);
+    world.cfg.node_events = node_events;
+    world.dispatch_ready(&initial_ready);
     if world.scaler.is_some() {
         // first poll fires quickly so pools can start warming up
         world
@@ -899,6 +935,7 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
 
     let max_ms = (world.cfg.max_sim_s * 1000.0) as u64;
     let mut makespan = SimTime::ZERO;
+    let mut sim_events: u64 = 0;
     while let Some((t, ev)) = world.q.pop() {
         if t.as_millis() > max_ms {
             log::warn!(
@@ -907,6 +944,7 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
             );
             break;
         }
+        sim_events += 1;
         world.handle(ev);
         if world.engine.is_done() {
             makespan = world.q.now();
@@ -940,6 +978,8 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
         pods_created: world.metrics.counter("pods_created"),
         api_requests: world.api.requests_total,
         sched_backoffs: world.sched.backoffs_total,
+        sched_binds: world.sched.binds_total,
+        sim_events,
         avg_running_tasks: avg_running,
         avg_cpu_utilization: avg_cpu,
         trace: world.trace,
@@ -968,6 +1008,7 @@ mod tests {
         // every task got its own pod
         assert_eq!(res.pods_created as usize, small_dag().len());
         assert!(res.avg_running_tasks > 0.0);
+        assert!(res.sim_events > 0);
     }
 
     #[test]

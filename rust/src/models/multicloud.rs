@@ -14,10 +14,15 @@
 //!
 //! Cross-cloud data movement is the first-order cost: a task whose
 //! dependency outputs live on a different cluster pays
-//! `transfer_ms_per_dep` per remote input before executing. The bench
-//! (`fig_multicloud` section of `makespan_table`? no — `multicloud` rows in
-//! EXPERIMENTS.md §Extensions) sweeps 1x17 vs 2x9 vs 4x4+1 node splits.
+//! `transfer_ms_per_dep` per remote input before executing. The
+//! `multicloud` rows in EXPERIMENTS.md §Extensions sweep 1x17 vs 2x9 vs
+//! 4x4+1 node splits.
+//!
+//! Pools here are the same interned [`PoolId`] space the single-cluster
+//! driver uses: an index into `pooled_types`, shared by the global queues,
+//! the per-(cloud, pool) idle/worker tables, and worker payloads.
 
+use crate::broker::PoolId;
 use crate::engine::Engine;
 use crate::k8s::api_server::{ApiServer, ApiServerConfig};
 use crate::k8s::node::{paper_cluster, Node};
@@ -26,7 +31,7 @@ use crate::k8s::scheduler::{Scheduler, SchedulerConfig};
 use crate::sim::{EventQueue, SimTime};
 use crate::workflow::dag::Dag;
 use crate::workflow::task::TaskId;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 
 /// One cloud: nodes + control plane.
 struct Cloud {
@@ -69,13 +74,20 @@ impl Default for McConfig {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 enum Ev {
     PodCreated { pod: PodId },
     BackoffExpire { cloud: usize, pod: PodId },
     PodStarted { pod: PodId },
     TaskDone { pod: PodId, task: TaskId },
     ScaleTick,
+}
+
+/// What a started pod runs next, extracted without cloning the payload
+/// (mirrors the driver's `PodWork`; job pods here are always singletons).
+enum PodWork {
+    Job(TaskId),
+    Worker(PoolId),
 }
 
 /// Result of a multi-cloud run.
@@ -96,19 +108,25 @@ struct McWorld {
     pods: Vec<Pod>,
     pod_cloud: Vec<usize>,
     engine: Engine,
-    /// Global per-type ready queues (pools mode).
-    queues: BTreeMap<String, VecDeque<TaskId>>,
-    /// Idle workers per (cloud, type).
-    idle: BTreeMap<(usize, String), VecDeque<PodId>>,
+    /// Global ready queue per pool (pools mode), indexed by PoolId.
+    queues: Vec<VecDeque<TaskId>>,
+    /// Idle workers per (cloud, pool), indexed `cloud * n_pools + pool`.
+    idle: Vec<VecDeque<PodId>>,
     /// Cloud on which each completed task ran (for transfer costs).
     task_cloud: Vec<Option<usize>>,
     current_task: Vec<Option<TaskId>>,
-    /// Live worker count per (cloud, type).
-    workers: BTreeMap<(usize, String), usize>,
+    /// Live worker count per (cloud, pool), same indexing as `idle`.
+    workers: Vec<usize>,
     pods_created: u64,
     transfers: u64,
     tasks_per_cloud: Vec<usize>,
+    /// Pool names (PoolId = index) and per-pool pod-template requests.
     pooled_types: Vec<String>,
+    pool_requests: Vec<crate::k8s::resources::Resources>,
+    /// Per-type routing: which pool a ready task joins (pools mode).
+    pool_of_type: Vec<Option<PoolId>>,
+    /// Scratch buffer for readiness propagation (reused across events).
+    ready_buf: Vec<TaskId>,
 }
 
 impl McWorld {
@@ -116,12 +134,13 @@ impl McWorld {
         self.q.now()
     }
 
+    fn slot(&self, cloud: usize, pool: PoolId) -> usize {
+        cloud * self.pooled_types.len() + pool.idx()
+    }
+
     fn new_pod(&mut self, cloud: usize, payload: Payload) -> PodId {
         let requests = match &payload {
-            Payload::Worker { pool } => {
-                let ty = self.engine.dag().type_id(pool).unwrap();
-                self.engine.dag().types[ty.0 as usize].requests
-            }
+            Payload::Worker { pool } => self.pool_requests[pool.idx()],
             Payload::JobBatch { tasks } => self.engine.dag().type_of(tasks[0]).requests,
         };
         let id = PodId(self.pods.len() as u64);
@@ -192,14 +211,17 @@ impl McWorld {
             .unwrap()
     }
 
-    fn dispatch(&mut self, ready: Vec<TaskId>) {
-        for t in ready {
-            let tname = self.engine.dag().type_name(t).to_string();
-            let pooled =
-                self.cfg.mode == McMode::Pools && self.pooled_types.contains(&tname);
-            if pooled {
-                self.queues.get_mut(&tname).unwrap().push_back(t);
-                self.wake_idle(&tname);
+    fn dispatch(&mut self, ready: &[TaskId]) {
+        for &t in ready {
+            let ttype = self.engine.dag().tasks[t.0 as usize].ttype;
+            let pooled = if self.cfg.mode == McMode::Pools {
+                self.pool_of_type[ttype.0 as usize]
+            } else {
+                None
+            };
+            if let Some(pool) = pooled {
+                self.queues[pool.idx()].push_back(t);
+                self.wake_idle(pool);
             } else {
                 let cloud = self.least_loaded_cloud();
                 self.new_pod(cloud, Payload::JobBatch { tasks: vec![t] });
@@ -207,16 +229,16 @@ impl McWorld {
         }
     }
 
-    fn wake_idle(&mut self, tname: &str) {
+    fn wake_idle(&mut self, pool: PoolId) {
         for c in 0..self.clouds.len() {
-            let key = (c, tname.to_string());
-            while let Some(&pid) = self.idle.get(&key).and_then(|d| d.front()) {
+            let key = self.slot(c, pool);
+            while let Some(&pid) = self.idle[key].front() {
                 if self.pods[pid.0 as usize].phase != PodPhase::Running {
-                    self.idle.get_mut(&key).unwrap().pop_front();
+                    self.idle[key].pop_front();
                     continue;
                 }
-                if let Some(t) = self.queues.get_mut(tname).and_then(|q| q.pop_front()) {
-                    self.idle.get_mut(&key).unwrap().pop_front();
+                if let Some(t) = self.queues[pool.idx()].pop_front() {
+                    self.idle[key].pop_front();
                     self.start_task(pid, t);
                 } else {
                     return;
@@ -233,12 +255,10 @@ impl McWorld {
             .iter()
             .map(|c| c.nodes.iter().map(|n| n.capacity.cpu_m).sum::<u64>())
             .sum();
-        for ty in self.pooled_types.clone() {
-            let backlog = self.queues[&ty].len();
-            let req = {
-                let tid = self.engine.dag().type_id(&ty).unwrap();
-                self.engine.dag().types[tid.0 as usize].requests.cpu_m
-            };
+        for pi in 0..self.pooled_types.len() {
+            let pool = PoolId(pi as u16);
+            let backlog = self.queues[pi].len();
+            let req = self.pool_requests[pi].cpu_m;
             for c in 0..self.clouds.len() {
                 let cloud_cpu: u64 =
                     self.clouds[c].nodes.iter().map(|n| n.capacity.cpu_m).sum();
@@ -250,30 +270,26 @@ impl McWorld {
                 }
                 let cap = (cloud_cpu / req.max(1)) as usize;
                 let want = share.min(cap.max(1));
-                let key = (c, ty.clone());
-                let have = *self.workers.get(&key).unwrap_or(&0);
+                let key = self.slot(c, pool);
+                let have = self.workers[key];
                 if want > have {
                     for _ in 0..(want - have) {
-                        self.new_pod(c, Payload::Worker { pool: ty.clone() });
+                        self.new_pod(c, Payload::Worker { pool });
                     }
-                    *self.workers.get_mut(&key).unwrap() += want - have;
+                    self.workers[key] += want - have;
                 } else if want < have {
                     // scale down: terminate idle workers (and pending ones)
                     // so other pools can claim the capacity
                     let mut to_kill = have - want;
-                    let idle: Vec<PodId> = self
-                        .idle
-                        .get(&key)
-                        .map(|d| d.iter().copied().collect())
-                        .unwrap_or_default();
+                    let idle: Vec<PodId> = self.idle[key].iter().copied().collect();
                     for pid in idle {
                         if to_kill == 0 {
                             break;
                         }
                         if self.pods[pid.0 as usize].phase == PodPhase::Running {
-                            self.idle.get_mut(&key).unwrap().retain(|&p| p != pid);
+                            self.idle[key].retain(|&p| p != pid);
                             self.terminate(pid);
-                            *self.workers.get_mut(&key).unwrap() -= 1;
+                            self.workers[key] -= 1;
                             to_kill -= 1;
                         }
                     }
@@ -285,7 +301,7 @@ impl McWorld {
                             .filter(|p| {
                                 p.phase == PodPhase::Pending
                                     && self.pod_cloud[p.id.0 as usize] == c
-                                    && p.pool_name() == Some(&ty)
+                                    && p.pool_id() == Some(pool)
                             })
                             .map(|p| p.id)
                             .collect();
@@ -295,7 +311,7 @@ impl McWorld {
                             }
                             self.pods[pid.0 as usize].phase = PodPhase::Deleted;
                             self.clouds[c].sched.forget(pid);
-                            *self.workers.get_mut(&key).unwrap() -= 1;
+                            self.workers[key] -= 1;
                             to_kill -= 1;
                         }
                     }
@@ -333,16 +349,19 @@ impl McWorld {
                     return;
                 }
                 self.pods[pod.0 as usize].phase = PodPhase::Running;
-                match self.pods[pod.0 as usize].payload.clone() {
-                    Payload::JobBatch { tasks } => self.start_task(pod, tasks[0]),
-                    Payload::Worker { pool } => {
-                        if let Some(t) =
-                            self.queues.get_mut(&pool).and_then(|q| q.pop_front())
-                        {
+                let work = match &self.pods[pod.0 as usize].payload {
+                    Payload::JobBatch { tasks } => PodWork::Job(tasks[0]),
+                    Payload::Worker { pool } => PodWork::Worker(*pool),
+                };
+                match work {
+                    PodWork::Job(task) => self.start_task(pod, task),
+                    PodWork::Worker(pool) => {
+                        if let Some(t) = self.queues[pool.idx()].pop_front() {
                             self.start_task(pod, t);
                         } else {
                             let c = self.pod_cloud[pod.0 as usize];
-                            self.idle.entry((c, pool)).or_default().push_back(pod);
+                            let key = self.slot(c, pool);
+                            self.idle[key].push_back(pod);
                         }
                     }
                 }
@@ -352,17 +371,19 @@ impl McWorld {
                 self.current_task[pod.0 as usize] = None;
                 self.task_cloud[task.0 as usize] = Some(cloud);
                 self.tasks_per_cloud[cloud] += 1;
-                let ready = self.engine.complete(task);
-                self.dispatch(ready);
-                match self.pods[pod.0 as usize].payload.clone() {
-                    Payload::JobBatch { .. } => self.terminate(pod),
-                    Payload::Worker { pool } => {
-                        if let Some(t) =
-                            self.queues.get_mut(&pool).and_then(|q| q.pop_front())
-                        {
+                let mut ready = std::mem::take(&mut self.ready_buf);
+                ready.clear();
+                self.engine.complete_into(task, &mut ready);
+                self.dispatch(&ready);
+                self.ready_buf = ready;
+                match self.pods[pod.0 as usize].pool_id() {
+                    None => self.terminate(pod),
+                    Some(pool) => {
+                        if let Some(t) = self.queues[pool.idx()].pop_front() {
                             self.start_task(pod, t);
                         } else {
-                            self.idle.entry((cloud, pool)).or_default().push_back(pod);
+                            let key = self.slot(cloud, pool);
+                            self.idle[key].push_back(pod);
                         }
                     }
                 }
@@ -381,12 +402,20 @@ impl McWorld {
 /// Run a workflow across multiple clouds.
 pub fn run(dag: Dag, cfg: McConfig) -> McResult {
     let n_tasks = dag.len();
+    let n_types = dag.types.len();
     let (engine, initial) = Engine::new(dag);
     let pooled_types: Vec<String> = ["mProject", "mDiffFit", "mBackground"]
         .iter()
         .filter(|t| engine.dag().type_id(t).is_some())
         .map(|s| s.to_string())
         .collect();
+    let mut pool_of_type: Vec<Option<PoolId>> = vec![None; n_types];
+    let mut pool_requests = Vec::with_capacity(pooled_types.len());
+    for (pi, name) in pooled_types.iter().enumerate() {
+        let ty = engine.dag().type_id(name).unwrap();
+        pool_of_type[ty.0 as usize] = Some(PoolId(pi as u16));
+        pool_requests.push(engine.dag().types[ty.0 as usize].requests);
+    }
     let clouds: Vec<Cloud> = cfg
         .clusters
         .iter()
@@ -397,35 +426,31 @@ pub fn run(dag: Dag, cfg: McConfig) -> McResult {
         })
         .collect();
     let n_clouds = clouds.len();
-    let mut queues = BTreeMap::new();
-    let mut workers = BTreeMap::new();
-    for t in &pooled_types {
-        queues.insert(t.clone(), VecDeque::new());
-        for c in 0..n_clouds {
-            workers.insert((c, t.clone()), 0usize);
-        }
-    }
+    let n_pools = pooled_types.len();
     let mut w = McWorld {
         q: EventQueue::new(),
         clouds,
         pods: Vec::new(),
         pod_cloud: Vec::new(),
-        engine: w_engine_hack(engine),
-        queues,
-        idle: BTreeMap::new(),
+        engine,
+        queues: (0..n_pools).map(|_| VecDeque::new()).collect(),
+        idle: (0..n_clouds * n_pools).map(|_| VecDeque::new()).collect(),
         task_cloud: vec![None; n_tasks],
         current_task: Vec::new(),
-        workers,
+        workers: vec![0; n_clouds * n_pools],
         pods_created: 0,
         transfers: 0,
         tasks_per_cloud: vec![0; n_clouds],
         pooled_types,
+        pool_requests,
+        pool_of_type,
+        ready_buf: Vec::new(),
         cfg,
     };
     if w.cfg.mode == McMode::Pools {
         w.q.schedule_in(SimTime::from_millis(1000), Ev::ScaleTick);
     }
-    w.dispatch(initial);
+    w.dispatch(&initial);
     let mut makespan = SimTime::ZERO;
     let cap = SimTime::from_secs_f64(24.0 * 3600.0); // livelock guard
     while let Some((t, ev)) = w.q.pop() {
@@ -451,11 +476,6 @@ pub fn run(dag: Dag, cfg: McConfig) -> McResult {
         transfers: w.transfers,
         tasks_per_cloud: w.tasks_per_cloud,
     }
-}
-
-// identity helper to keep field-init ordering readable above
-fn w_engine_hack(e: Engine) -> Engine {
-    e
 }
 
 #[cfg(test)]

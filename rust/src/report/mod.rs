@@ -101,6 +101,12 @@ pub struct SimResult {
     pub pods_created: u64,
     pub api_requests: u64,
     pub sched_backoffs: u64,
+    /// Successful scheduler binds (determinism fingerprint alongside
+    /// `sched_backoffs`: sensitive to any event-ordering change).
+    pub sched_binds: u64,
+    /// Discrete events processed by the driver loop — the denominator for
+    /// the events/sec throughput reported by `coordinator_hotpath`.
+    pub sim_events: u64,
     /// Average number of concurrently running tasks over the makespan —
     /// the paper's cluster-utilization subplot metric.
     pub avg_running_tasks: f64,
@@ -143,6 +149,8 @@ impl SimResult {
             ("pods_created", self.pods_created.into()),
             ("api_requests", self.api_requests.into()),
             ("sched_backoffs", self.sched_backoffs.into()),
+            ("sched_binds", self.sched_binds.into()),
+            ("sim_events", self.sim_events.into()),
             ("avg_running_tasks", self.avg_running_tasks.into()),
             ("avg_cpu_utilization", self.avg_cpu_utilization.into()),
             ("running_tasks_series", Json::Arr(series)),

@@ -1,37 +1,83 @@
-//! Generic discrete-event queue: a binary heap of (time, seq, event) with a
-//! monotone sequence number so same-time events pop in scheduling order
-//! (deterministic runs).
+//! Generic discrete-event queue.
+//!
+//! Implemented as a **hierarchical calendar (bucket) queue** rather than a
+//! binary heap: simulated time is integer milliseconds, so events within a
+//! ~65 s horizon live in one-millisecond buckets indexed directly by time,
+//! with a three-level occupancy bitmap (64² × 16 bits) locating the next
+//! non-empty bucket in a handful of `trailing_zeros` instructions. Events
+//! beyond the horizon wait in a sorted overflow map and are swept into the
+//! wheel in one batch when the wheel drains — each event pays at most one
+//! overflow insert over its lifetime, so push/pop are amortized O(1) for
+//! the dense event streams the 16k-task models generate (the heap's
+//! O(log n) per operation was the top simulator cost after the allocation
+//! fixes; EXPERIMENTS.md §Perf).
+//!
+//! Determinism contract (unchanged from the heap version, which used a
+//! monotone sequence number): events pop in (time, schedule order). Every
+//! bucket holds exactly one timestamp, past events clamp to `now`, and
+//! overflow sweeps preserve per-timestamp deque order — so plain FIFO
+//! insertion order within a bucket IS schedule order, and runs are
+//! bit-reproducible without storing a per-event counter.
 
 use super::time::SimTime;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, VecDeque};
 
-#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
-struct Entry<E: Ord> {
-    at: SimTime,
-    seq: u64,
-    event: E,
+/// log2 of the wheel size: 2^16 one-millisecond buckets ≈ 65 s horizon.
+const WHEEL_BITS: u32 = 16;
+const WHEEL: usize = 1 << WHEEL_BITS;
+const L0_WORDS: usize = WHEEL / 64;
+const L1_WORDS: usize = L0_WORDS / 64;
+
+/// `word` with all bits below `bit` cleared (0 when `bit >= 64`).
+#[inline]
+fn bits_from(word: u64, bit: u32) -> u64 {
+    if bit >= 64 {
+        0
+    } else {
+        word & (u64::MAX << bit)
+    }
 }
 
-/// Priority queue of scheduled events.
+/// Priority queue of scheduled events (calendar queue).
 #[derive(Debug)]
-pub struct EventQueue<E: Ord> {
-    heap: BinaryHeap<Reverse<Entry<E>>>,
-    seq: u64,
+pub struct EventQueue<E> {
+    /// One-ms buckets covering `[base_ms, base_ms + WHEEL)`; each holds
+    /// its events in schedule (FIFO) order — one timestamp per bucket.
+    wheel: Vec<VecDeque<E>>,
+    /// Occupancy bitmaps: one bit per bucket / per l0 word / per l1 word.
+    occ_l0: Vec<u64>,
+    occ_l1: Vec<u64>,
+    occ_l2: u64,
+    /// Absolute time (ms) of bucket 0.
+    base_ms: u64,
+    /// Lowest bucket index that may still be occupied.
+    cursor: usize,
+    /// Events beyond the wheel horizon, keyed by absolute ms; per-key
+    /// deques preserve schedule order for the FIFO tie-break.
+    overflow: BTreeMap<u64, VecDeque<E>>,
+    len: usize,
     now: SimTime,
 }
 
-impl<E: Ord> Default for EventQueue<E> {
+impl<E> Default for EventQueue<E> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<E: Ord> EventQueue<E> {
+impl<E> EventQueue<E> {
     pub fn new() -> Self {
+        let mut wheel = Vec::with_capacity(WHEEL);
+        wheel.resize_with(WHEEL, VecDeque::new);
         EventQueue {
-            heap: BinaryHeap::new(),
-            seq: 0,
+            wheel,
+            occ_l0: vec![0; L0_WORDS],
+            occ_l1: vec![0; L1_WORDS],
+            occ_l2: 0,
+            base_ms: 0,
+            cursor: 0,
+            overflow: BTreeMap::new(),
+            len: 0,
             now: SimTime::ZERO,
         }
     }
@@ -41,16 +87,85 @@ impl<E: Ord> EventQueue<E> {
         self.now
     }
 
+    #[inline]
+    fn mark(&mut self, idx: usize) {
+        self.occ_l0[idx >> 6] |= 1 << (idx & 63);
+        self.occ_l1[idx >> 12] |= 1 << ((idx >> 6) & 63);
+        self.occ_l2 |= 1 << (idx >> 12);
+    }
+
+    #[inline]
+    fn unmark(&mut self, idx: usize) {
+        let w0 = idx >> 6;
+        self.occ_l0[w0] &= !(1 << (idx & 63));
+        if self.occ_l0[w0] == 0 {
+            let w1 = w0 >> 6;
+            self.occ_l1[w1] &= !(1 << (w0 & 63));
+            if self.occ_l1[w1] == 0 {
+                self.occ_l2 &= !(1 << w1);
+            }
+        }
+    }
+
+    /// Lowest occupied bucket index `>= from`, via the bitmap hierarchy.
+    fn next_occupied(&self, from: usize) -> Option<usize> {
+        if from >= WHEEL {
+            return None;
+        }
+        let w0 = from >> 6;
+        let b0 = bits_from(self.occ_l0[w0], (from & 63) as u32);
+        if b0 != 0 {
+            return Some((w0 << 6) | b0.trailing_zeros() as usize);
+        }
+        let w1 = w0 >> 6;
+        let b1 = bits_from(self.occ_l1[w1], (w0 & 63) as u32 + 1);
+        if b1 != 0 {
+            let w0n = (w1 << 6) | b1.trailing_zeros() as usize;
+            return Some((w0n << 6) | self.occ_l0[w0n].trailing_zeros() as usize);
+        }
+        let b2 = bits_from(self.occ_l2, w1 as u32 + 1);
+        if b2 != 0 {
+            let w1n = b2.trailing_zeros() as usize;
+            let w0n = (w1n << 6) | self.occ_l1[w1n].trailing_zeros() as usize;
+            return Some((w0n << 6) | self.occ_l0[w0n].trailing_zeros() as usize);
+        }
+        None
+    }
+
+    /// The wheel drained: slide the window to the earliest overflow event
+    /// and sweep everything inside the new horizon into buckets.
+    fn rebase(&mut self) {
+        let &new_base = self
+            .overflow
+            .keys()
+            .next()
+            .expect("rebase with empty overflow");
+        let beyond = self.overflow.split_off(&(new_base + WHEEL as u64));
+        let window = std::mem::replace(&mut self.overflow, beyond);
+        self.base_ms = new_base;
+        self.cursor = 0;
+        for (ms, entries) in window {
+            let idx = (ms - new_base) as usize;
+            debug_assert!(self.wheel[idx].is_empty());
+            self.wheel[idx] = entries;
+            self.mark(idx);
+        }
+    }
+
     /// Schedule `event` at absolute time `at`. Events scheduled in the past
     /// are clamped to `now` (fire next).
     pub fn schedule_at(&mut self, at: SimTime, event: E) {
         let at = at.max(self.now);
-        self.seq += 1;
-        self.heap.push(Reverse(Entry {
-            at,
-            seq: self.seq,
-            event,
-        }));
+        self.len += 1;
+        let ms = at.as_millis();
+        debug_assert!(ms >= self.base_ms);
+        if ms - self.base_ms < WHEEL as u64 {
+            let idx = (ms - self.base_ms) as usize;
+            self.wheel[idx].push_back(event);
+            self.mark(idx);
+        } else {
+            self.overflow.entry(ms).or_default().push_back(event);
+        }
     }
 
     /// Schedule `event` after a delay from now.
@@ -60,23 +175,46 @@ impl<E: Ord> EventQueue<E> {
 
     /// Pop the next event, advancing `now`.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        self.heap.pop().map(|Reverse(e)| {
-            debug_assert!(e.at >= self.now, "time went backwards");
-            self.now = e.at;
-            (e.at, e.event)
-        })
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            if let Some(idx) = self.next_occupied(self.cursor) {
+                self.cursor = idx;
+                let bucket = &mut self.wheel[idx];
+                let event = bucket.pop_front().expect("occupied bucket is empty");
+                if bucket.is_empty() {
+                    self.unmark(idx);
+                }
+                self.len -= 1;
+                let at = SimTime::from_millis(self.base_ms + idx as u64);
+                debug_assert!(at >= self.now, "time went backwards");
+                self.now = at;
+                return Some((at, event));
+            }
+            self.rebase();
+        }
     }
 
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|Reverse(e)| e.at)
+        if self.len == 0 {
+            return None;
+        }
+        if let Some(idx) = self.next_occupied(self.cursor) {
+            return Some(SimTime::from_millis(self.base_ms + idx as u64));
+        }
+        self.overflow
+            .keys()
+            .next()
+            .map(|&ms| SimTime::from_millis(ms))
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 }
 
@@ -140,5 +278,113 @@ mod tests {
         q.schedule_at(SimTime(5), 1);
         assert_eq!(q.peek_time(), Some(SimTime(5)));
         assert_eq!(q.len(), 1);
+    }
+
+    // -- calendar-specific coverage (horizon crossing, rebase, FIFO) ------
+
+    const HORIZON: u64 = super::WHEEL as u64;
+
+    #[test]
+    fn events_beyond_horizon_pop_in_order() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        // in-wheel, overflow, and far-overflow events, scheduled shuffled
+        q.schedule_at(SimTime(3 * HORIZON + 7), 4);
+        q.schedule_at(SimTime(5), 1);
+        q.schedule_at(SimTime(HORIZON + 2), 3);
+        q.schedule_at(SimTime(HORIZON - 1), 2);
+        let popped: Vec<(u64, u32)> = std::iter::from_fn(|| q.pop())
+            .map(|(t, e)| (t.as_millis(), e))
+            .collect();
+        assert_eq!(
+            popped,
+            vec![
+                (5, 1),
+                (HORIZON - 1, 2),
+                (HORIZON + 2, 3),
+                (3 * HORIZON + 7, 4)
+            ]
+        );
+    }
+
+    #[test]
+    fn peek_sees_overflow_when_wheel_empty() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule_at(SimTime(2 * HORIZON), 9);
+        assert_eq!(q.peek_time(), Some(SimTime(2 * HORIZON)));
+        assert_eq!(q.pop(), Some((SimTime(2 * HORIZON), 9)));
+        assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn same_time_fifo_across_rebase() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let t = SimTime(HORIZON + 500);
+        for i in 0..8 {
+            q.schedule_at(t, i);
+        }
+        // draining an earlier event forces the later ones through a rebase
+        q.schedule_at(SimTime(1), 100);
+        assert_eq!(q.pop(), Some((SimTime(1), 100)));
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_keeps_window_sliding() {
+        // march far past several horizons with short relative delays
+        let mut q: EventQueue<u64> = EventQueue::new();
+        q.schedule_at(SimTime(0), 0);
+        let mut last = SimTime::ZERO;
+        for i in 1..5_000u64 {
+            let (t, _) = q.pop().unwrap();
+            assert!(t >= last, "time went backwards");
+            last = t;
+            // delays straddle the horizon boundary
+            let delay = if i % 7 == 0 { HORIZON + 13 } else { 40 * i % 900 };
+            q.schedule_in(SimTime(delay), i);
+        }
+    }
+
+    #[test]
+    fn matches_reference_heap_on_random_workload() {
+        use crate::util::rng::Rng;
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let mut rng = Rng::new(0xE7E47);
+        for _ in 0..20 {
+            let mut q: EventQueue<u32> = EventQueue::new();
+            let mut reference: BinaryHeap<Reverse<(u64, u64, u32)>> = BinaryHeap::new();
+            let mut ref_now = 0u64;
+            let mut seq = 0u64;
+            let mut pending = 0usize;
+            for step in 0..2_000u32 {
+                if pending == 0 || rng.below(3) > 0 {
+                    // schedule: mostly near-term, sometimes past-horizon
+                    let delay = match rng.below(10) {
+                        0 => HORIZON + rng.below(3 * HORIZON),
+                        1..=3 => rng.below(30_000),
+                        _ => rng.below(400),
+                    };
+                    let at = ref_now + delay;
+                    q.schedule_at(SimTime(at), step);
+                    seq += 1;
+                    reference.push(Reverse((at.max(ref_now), seq, step)));
+                    pending += 1;
+                } else {
+                    let got = q.pop().unwrap();
+                    let Reverse((t, _, e)) = reference.pop().unwrap();
+                    ref_now = t;
+                    assert_eq!(got, (SimTime(t), e));
+                    pending -= 1;
+                }
+            }
+            // drain both completely
+            while let Some(got) = q.pop() {
+                let Reverse((t, _, e)) = reference.pop().unwrap();
+                assert_eq!(got, (SimTime(t), e));
+            }
+            assert!(reference.is_empty());
+        }
     }
 }

@@ -1,0 +1,85 @@
+//! Determinism regression tests: the calendar event queue replaced the
+//! binary heap (see rust/src/sim/event.rs), and the whole figure pipeline
+//! depends on the (time, schedule-order) pop contract surviving that swap.
+//! Running the same configuration twice must produce *identical* results —
+//! makespan, bind and back-off counts, pod/API counters, and event totals
+//! — for every execution model.
+
+use hyperflow_k8s::engine::clustering::ClusteringConfig;
+use hyperflow_k8s::models::{driver, ExecModel};
+use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
+
+fn montage(g: usize, seed: u64) -> hyperflow_k8s::workflow::dag::Dag {
+    generate(&MontageConfig {
+        grid_w: g,
+        grid_h: g,
+        diagonals: true,
+        seed,
+    })
+}
+
+fn all_models() -> Vec<ExecModel> {
+    vec![
+        ExecModel::JobBased,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ExecModel::paper_hybrid_pools(),
+        ExecModel::GenericPool,
+    ]
+}
+
+/// Same seed + model twice => identical fingerprint. `sched_binds` and
+/// `sched_backoffs` are the most ordering-sensitive counters: a single
+/// same-timestamp FIFO violation in the event queue reorders a bind and
+/// shifts both.
+#[test]
+fn rerun_is_bit_identical_for_every_model() {
+    for model in all_models() {
+        let a = driver::run(montage(8, 42), model.clone(), driver::SimConfig::with_nodes(5));
+        let b = driver::run(montage(8, 42), model.clone(), driver::SimConfig::with_nodes(5));
+        let name = model.name();
+        assert_eq!(a.makespan, b.makespan, "{name}: makespan");
+        assert_eq!(a.sched_binds, b.sched_binds, "{name}: binds_total");
+        assert_eq!(a.sched_backoffs, b.sched_backoffs, "{name}: backoffs_total");
+        assert_eq!(a.pods_created, b.pods_created, "{name}: pods");
+        assert_eq!(a.api_requests, b.api_requests, "{name}: api requests");
+        assert_eq!(a.sim_events, b.sim_events, "{name}: event count");
+        assert_eq!(
+            a.avg_running_tasks, b.avg_running_tasks,
+            "{name}: running-task series diverged"
+        );
+    }
+}
+
+/// Determinism must also hold with the failure-injection RNG and node
+/// up/down events active (both feed extra events through the queue).
+#[test]
+fn rerun_is_bit_identical_under_failure_injection() {
+    for model in all_models() {
+        let mk_cfg = || {
+            let mut cfg = driver::SimConfig::with_nodes(4);
+            cfg.pod_failure_prob = 0.05;
+            cfg.seed = 7;
+            cfg.node_events = vec![(40_000, 1, false), (180_000, 1, true)];
+            cfg
+        };
+        let a = driver::run(montage(6, 3), model.clone(), mk_cfg());
+        let b = driver::run(montage(6, 3), model.clone(), mk_cfg());
+        let name = model.name();
+        assert_eq!(a.makespan, b.makespan, "{name}: makespan under failures");
+        assert_eq!(a.sched_binds, b.sched_binds, "{name}: binds under failures");
+        assert_eq!(
+            a.sched_backoffs, b.sched_backoffs,
+            "{name}: backoffs under failures"
+        );
+        assert_eq!(a.sim_events, b.sim_events, "{name}: events under failures");
+    }
+}
+
+/// Different seeds must (generically) diverge — guards against the
+/// fingerprint accidentally ignoring the inputs.
+#[test]
+fn different_seed_changes_the_run() {
+    let a = driver::run(montage(8, 42), ExecModel::JobBased, driver::SimConfig::with_nodes(5));
+    let b = driver::run(montage(8, 43), ExecModel::JobBased, driver::SimConfig::with_nodes(5));
+    assert_ne!(a.makespan, b.makespan, "distinct workloads, same makespan?");
+}

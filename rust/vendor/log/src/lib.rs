@@ -1,0 +1,207 @@
+//! Offline shim for the `log` logging facade.
+//!
+//! Implements exactly the API subset this workspace uses: the five level
+//! macros, the [`Log`] trait, [`set_logger`]/[`set_max_level`], and the
+//! `Level`/`LevelFilter` pair (including cross-type comparison). The build
+//! environment has no crates.io access, so the facade is vendored; the
+//! published `log` crate is a drop-in replacement.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity of a single log record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Maximum-verbosity filter (adds `Off` below `Error`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata attached to a record (level + target module path).
+#[derive(Debug, Clone, Copy)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record, borrowed for the duration of the `Log::log` call.
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A log sink.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+/// Returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the maximum level that reaches the logger.
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// The currently configured maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if let Some(logger) = LOGGER.get() {
+        let record = Record {
+            metadata: Metadata { level, target },
+            args,
+        };
+        logger.log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {{
+        let lvl = $lvl;
+        if lvl <= $crate::max_level() {
+            $crate::__log(lvl, module_path!(), format_args!($($arg)+));
+        }
+    }};
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_vs_filter_ordering() {
+        assert!(Level::Error <= LevelFilter::Warn);
+        assert!(Level::Warn <= LevelFilter::Warn);
+        assert!(!(Level::Info <= LevelFilter::Warn));
+        assert!(Level::Trace <= LevelFilter::Trace);
+        assert!(!(Level::Error <= LevelFilter::Off));
+    }
+
+    #[test]
+    fn max_level_round_trips() {
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        set_max_level(LevelFilter::Warn);
+        assert_eq!(max_level(), LevelFilter::Warn);
+    }
+}
