@@ -1,64 +1,45 @@
 //! Multiple workflow instances sharing one cluster ("multiple instances of
 //! different workflows can intertwine", §3.4): two Montage instances are
-//! merged into one DAG and executed under each model. Worker pools handle
-//! the type-level aggregation naturally — both instances feed the same
-//! queues.
+//! merged with [`Dag::disjoint_union`] and executed under each model.
+//! Worker pools handle the type-level aggregation naturally — both
+//! instances feed the same queues. For an *open-loop* arrival process with
+//! tenancy and fair-share scheduling, see `hyperflow serve` and the
+//! `fleet` module.
 //!
 //!   cargo run --release --example multi_workflow
 
 use hyperflow_k8s::engine::clustering::ClusteringConfig;
 use hyperflow_k8s::models::{driver, ExecModel};
-use hyperflow_k8s::sim::SimTime;
 use hyperflow_k8s::workflow::dag::Dag;
-use hyperflow_k8s::workflow::montage::{default_types, generate, MontageConfig};
-use hyperflow_k8s::workflow::task::TaskId;
+use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
 
-/// Merge independent workflow instances into one DAG (disjoint union).
-fn merge(instances: &[Dag]) -> Dag {
-    let mut out = Dag::new("multi-montage");
-    let type_ids: Vec<_> = default_types().into_iter().map(|t| out.add_type(t)).collect();
-    for inst in instances {
-        let base = out.len() as u32;
-        // invert successor lists into dependency lists in one pass
-        let mut deps: Vec<Vec<TaskId>> = vec![Vec::new(); inst.len()];
-        for p in 0..inst.len() as u32 {
-            for s in inst.successors(TaskId(p)) {
-                deps[s.0 as usize].push(TaskId(p + base));
-            }
-        }
-        for t in &inst.tasks {
-            let name = &inst.types[t.ttype.0 as usize].name;
-            let ty = type_ids
-                .iter()
-                .find(|ti| out.types[ti.0 as usize].name == *name)
-                .copied()
-                .unwrap();
-            out.add_task(ty, t.duration, &deps[t.id.0 as usize]);
-        }
-    }
-    out
+fn instances() -> Vec<Dag> {
+    vec![
+        generate(&MontageConfig {
+            grid_w: 14,
+            grid_h: 14,
+            diagonals: true,
+            seed: 1,
+        }),
+        generate(&MontageConfig {
+            grid_w: 10,
+            grid_h: 10,
+            diagonals: true,
+            seed: 2,
+        }),
+    ]
 }
 
 fn main() {
-    let a = generate(&MontageConfig {
-        grid_w: 14,
-        grid_h: 14,
-        diagonals: true,
-        seed: 1,
-    });
-    let b = generate(&MontageConfig {
-        grid_w: 10,
-        grid_h: 10,
-        diagonals: true,
-        seed: 2,
-    });
+    let parts = instances();
     println!(
         "two Montage instances: {} + {} tasks, shared 17-node cluster\n",
-        a.len(),
-        b.len()
+        parts[0].len(),
+        parts[1].len()
     );
-    let merged = merge(&[a, b]);
+    let merged = Dag::disjoint_union(&parts);
     assert!(merged.validate().is_ok());
+    assert_eq!(merged.len(), parts[0].len() + parts[1].len());
 
     for model in [
         ExecModel::JobBased,
@@ -66,22 +47,8 @@ fn main() {
         ExecModel::paper_hybrid_pools(),
     ] {
         let name = model.name();
-        let dag = merge(&[
-            generate(&MontageConfig {
-                grid_w: 14,
-                grid_h: 14,
-                diagonals: true,
-                seed: 1,
-            }),
-            generate(&MontageConfig {
-                grid_w: 10,
-                grid_h: 10,
-                diagonals: true,
-                seed: 2,
-            }),
-        ]);
+        let dag = Dag::disjoint_union(&instances());
         let res = driver::run(dag, model, driver::SimConfig::default());
-        // per-instance makespans: first instance tasks end where?
         println!(
             "{name:>14}: joint makespan {:>6.0}s   pods {:>6}   cpu util {:>5.1}%",
             res.makespan.as_secs_f64(),
@@ -95,5 +62,4 @@ fn main() {
         "\nmerged stage sizes: mProject {}  mDiffFit {}  mBackground {}",
         c["mProject"], c["mDiffFit"], c["mBackground"]
     );
-    let _ = SimTime::ZERO;
 }

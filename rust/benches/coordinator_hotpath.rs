@@ -21,6 +21,7 @@ use hyperflow_k8s::engine::clustering::ClusteringConfig;
 use hyperflow_k8s::engine::Engine;
 use hyperflow_k8s::models::{driver, ExecModel};
 use hyperflow_k8s::runtime::{Runtime, Tensor};
+use hyperflow_k8s::util::env::env_usize;
 use hyperflow_k8s::util::json::Json;
 use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -73,13 +74,6 @@ fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     let per = t0.elapsed().as_secs_f64() / iters as f64;
     println!("{name:>44}: {:>10.3} ms/iter  ({iters} iters)", per * 1000.0);
     per
-}
-
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
 }
 
 fn main() {

@@ -1,0 +1,91 @@
+//! Fleet saturation sweep: drive the open-loop multi-tenant service past
+//! its saturation knee and record, per arrival rate, the completed
+//! throughput (instances/hour), mean/p99 slowdown, queueing delay and
+//! cluster utilization. Below the knee utilization grows linearly with
+//! offered load while slowdown stays near its floor; past it, utilization
+//! plateaus at capacity and slowdown diverges — see EXPERIMENTS.md
+//! §"Fleet / multi-tenant service" for how to read the output.
+//!
+//! Results are written to `BENCH_fleet.json` (crate root, next to
+//! `BENCH_driver.json`) so the service-capacity trajectory is tracked
+//! across PRs.
+//!
+//!   cargo bench --bench fleet_saturation
+//!
+//! CI runs a reduced sweep: `HF_FLEET_DURATION=400 HF_FLEET_NODES=4`.
+//! `HF_FLEET_RATES=20,60,...` overrides the swept arrival rates.
+
+use hyperflow_k8s::fleet::{self, ArrivalProcess, FleetConfig};
+use hyperflow_k8s::models::{driver, ExecModel};
+use hyperflow_k8s::util::env::{env_f64, env_usize};
+use hyperflow_k8s::util::json::Json;
+
+fn main() {
+    let nodes = env_usize("HF_FLEET_NODES", 4);
+    let duration = env_f64("HF_FLEET_DURATION", 1800.0);
+    let tenants = env_usize("HF_FLEET_TENANTS", 4);
+    let rates: Vec<f64> = std::env::var("HF_FLEET_RATES")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|r| r.trim().parse().expect("HF_FLEET_RATES: numbers"))
+                .collect()
+        })
+        .unwrap_or_else(|| vec![15.0, 30.0, 60.0, 90.0, 120.0]);
+
+    println!(
+        "== fleet saturation sweep == ({nodes} nodes, {duration:.0}s arrival window, \
+         {tenants} tenants, worker-pools)\n"
+    );
+    let mut points: Vec<Json> = Vec::new();
+    for &rate in &rates {
+        let cfg = FleetConfig {
+            arrival: ArrivalProcess::Poisson { per_hour: rate },
+            duration_s: duration,
+            tenants: fleet::default_tenants(tenants, &[4, 5]),
+            seed: 42,
+            max_in_flight: None,
+        };
+        let res = fleet::run(
+            ExecModel::paper_hybrid_pools(),
+            driver::SimConfig::with_nodes(nodes),
+            &cfg,
+        );
+        let agg = fleet::report::aggregate(&res);
+        println!(
+            "rate {rate:>6.1}/h: {:>4} instances  throughput {:>6.1}/h  util {:>5.1}%  \
+             slowdown mean {:>7.2} p99 {:>8.2}  qdelay {:>6.1}s",
+            agg.instances,
+            agg.completed_per_hour,
+            agg.utilization * 100.0,
+            agg.mean_slowdown,
+            agg.slowdown_p99,
+            agg.mean_queue_delay_s,
+        );
+        points.push(Json::obj(vec![
+            ("arrival_rate_per_hour", rate.into()),
+            ("instances", agg.instances.into()),
+            ("instances_per_hour", agg.completed_per_hour.into()),
+            ("mean_slowdown", agg.mean_slowdown.into()),
+            ("slowdown_p99", agg.slowdown_p99.into()),
+            ("mean_queue_delay_s", agg.mean_queue_delay_s.into()),
+            ("utilization", agg.utilization.into()),
+            ("span_s", agg.span_s.into()),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fleet_saturation")),
+        ("model", Json::str("worker-pools")),
+        ("nodes", nodes.into()),
+        ("duration_s", duration.into()),
+        ("tenants", tenants.into()),
+        ("seed", 42u64.into()),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = "BENCH_fleet.json";
+    match std::fs::write(path, out.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

@@ -12,6 +12,18 @@
 //! keys, which together with the driver's pool tables removed every
 //! per-event string allocation (EXPERIMENTS.md §Perf). Names remain
 //! available through [`Broker::name`] for metrics labels and reports.
+//!
+//! ## Multi-tenancy (fleet service)
+//!
+//! Every queue is internally a set of per-[`TenantId`] FIFO *lanes* served
+//! by weighted fair-share (stride) scheduling: each lane carries a virtual
+//! "pass" that advances by `STRIDE_SCALE / weight` per delivery, and
+//! [`Broker::fetch`] always serves the non-empty lane with the lowest
+//! pass. A lane that was idle re-enters at the queue's current virtual
+//! time, so a bursty tenant can neither bank credit while idle nor starve
+//! steady tenants. With a single tenant (the default — every classic
+//! single-workflow simulation) there is exactly one lane and the queue
+//! degenerates to the original plain FIFO, bit for bit.
 
 use crate::workflow::task::TaskId;
 use std::collections::VecDeque;
@@ -29,10 +41,39 @@ impl PoolId {
     }
 }
 
-/// One named work queue.
-#[derive(Debug, Default)]
+/// Dense tenant handle for multi-tenant fleet runs. Tenant 0 is the
+/// default lane used by every single-workflow simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct TenantId(pub u16);
+
+impl TenantId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Stride-scheduling scale: a lane of weight `w` advances its pass by
+/// `STRIDE_SCALE / w` per delivery, so relative service rates are
+/// proportional to weights.
+const STRIDE_SCALE: u64 = 1 << 32;
+
+/// Upper bound on tenant weights: keeps every stride >= 2^12, so a lane's
+/// pass always advances and proportionality stays exact (a weight large
+/// enough to truncate its stride to 0 would turn fair share into absolute
+/// priority).
+const MAX_WEIGHT: u64 = 1 << 20;
+
+/// One named work queue: per-tenant FIFO lanes + fair-share dequeue state.
+#[derive(Debug)]
 pub struct Queue {
-    ready: VecDeque<TaskId>,
+    /// Ready messages per tenant lane.
+    lanes: Vec<VecDeque<TaskId>>,
+    /// Stride pass per lane (virtual service time consumed).
+    pass: Vec<u64>,
+    /// Virtual time of the queue: pass of the most recently served lane.
+    /// Idle lanes re-enter at this value (no banked credit).
+    vtime: u64,
     /// Delivered but not yet acked (prefetch window).
     unacked: usize,
     // counters
@@ -41,14 +82,32 @@ pub struct Queue {
 }
 
 impl Queue {
-    /// Messages waiting for a consumer.
-    pub fn depth(&self) -> usize {
-        self.ready.len()
+    fn with_tenants(n: usize) -> Self {
+        Queue {
+            lanes: (0..n).map(|_| VecDeque::new()).collect(),
+            pass: vec![0; n],
+            vtime: 0,
+            unacked: 0,
+            published_total: 0,
+            acked_total: 0,
+        }
     }
 
-    /// Depth + unacked: the autoscaler's "workload" for this queue.
+    /// Messages waiting for a consumer (all lanes).
+    pub fn depth(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    /// Messages a given tenant has waiting.
+    pub fn depth_for(&self, tenant: TenantId) -> usize {
+        self.lanes[tenant.idx()].len()
+    }
+
+    /// Depth + unacked: the autoscaler's "workload" for this queue. This
+    /// is the *aggregate* over all tenant lanes — the autoscaler sizes the
+    /// shared pool, while fairness is enforced at dequeue time.
     pub fn backlog(&self) -> usize {
-        self.ready.len() + self.unacked
+        self.depth() + self.unacked
     }
 
     pub fn unacked(&self) -> usize {
@@ -56,16 +115,59 @@ impl Queue {
     }
 }
 
+impl Default for Queue {
+    fn default() -> Self {
+        Queue::with_tenants(1)
+    }
+}
+
 /// The broker: a set of queues, dense-indexed by [`PoolId`].
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Broker {
     queues: Vec<Queue>,
     names: Vec<String>,
+    /// Per-tenant stride (`STRIDE_SCALE / weight`); length = tenant count.
+    strides: Vec<u64>,
+}
+
+impl Default for Broker {
+    fn default() -> Self {
+        Broker {
+            queues: Vec::new(),
+            names: Vec::new(),
+            strides: vec![STRIDE_SCALE],
+        }
+    }
 }
 
 impl Broker {
     pub fn new() -> Self {
         Broker::default()
+    }
+
+    /// Configure the tenant lanes and their fair-share weights (a weight-2
+    /// tenant is served twice as often as a weight-1 tenant when both have
+    /// backlog). Must be called before any message is published; existing
+    /// declared queues are re-laned.
+    pub fn set_tenant_weights(&mut self, weights: &[u64]) {
+        assert!(!weights.is_empty(), "at least one tenant is required");
+        assert!(
+            weights.iter().all(|&w| (1..=MAX_WEIGHT).contains(&w)),
+            "tenant weights must be in 1..={MAX_WEIGHT}"
+        );
+        self.strides = weights.iter().map(|&w| STRIDE_SCALE / w).collect();
+        for q in &mut self.queues {
+            assert!(
+                q.backlog() == 0,
+                "tenant weights must be set before publishing"
+            );
+            *q = Queue::with_tenants(self.strides.len());
+        }
+    }
+
+    /// Number of configured tenant lanes.
+    pub fn n_tenants(&self) -> usize {
+        self.strides.len()
     }
 
     /// Declare a queue, interning its name (idempotent: re-declaring an
@@ -76,7 +178,7 @@ impl Broker {
         }
         assert!(self.names.len() < u16::MAX as usize, "pool id space exhausted");
         self.names.push(name.to_string());
-        self.queues.push(Queue::default());
+        self.queues.push(Queue::with_tenants(self.strides.len()));
         PoolId((self.queues.len() - 1) as u16)
     }
 
@@ -110,18 +212,49 @@ impl Broker {
         self.names.iter().map(|s| s.as_str())
     }
 
-    /// Publish a task to a queue.
+    /// Publish a task on the default tenant lane (single-workflow runs).
     pub fn publish(&mut self, id: PoolId, task: TaskId) {
+        self.publish_for(id, task, TenantId(0));
+    }
+
+    /// Publish a task on a tenant's lane of a queue.
+    pub fn publish_for(&mut self, id: PoolId, task: TaskId, tenant: TenantId) {
         let q = &mut self.queues[id.idx()];
-        q.ready.push_back(task);
+        let lane = tenant.idx();
+        assert!(
+            lane < q.lanes.len(),
+            "tenant {lane} beyond the configured lane count {}",
+            q.lanes.len()
+        );
+        if q.lanes[lane].is_empty() {
+            // lane (re)activation: join at the queue's virtual time so an
+            // idle tenant cannot burst ahead of continuously-active ones
+            q.pass[lane] = q.pass[lane].max(q.vtime);
+        }
+        q.lanes[lane].push_back(task);
         q.published_total += 1;
     }
 
-    /// Deliver one message to a consumer (prefetch 1): moves it to the
-    /// unacked window.
+    /// Deliver one message to a consumer (prefetch 1): weighted fair-share
+    /// pick across tenant lanes, then FIFO within the lane; moves the
+    /// message to the unacked window. Ties resolve to the lowest tenant id
+    /// (deterministic).
     pub fn fetch(&mut self, id: PoolId) -> Option<TaskId> {
         let q = &mut self.queues[id.idx()];
-        let t = q.ready.pop_front()?;
+        let mut best: Option<usize> = None;
+        for (lane, dq) in q.lanes.iter().enumerate() {
+            if dq.is_empty() {
+                continue;
+            }
+            match best {
+                Some(b) if q.pass[lane] >= q.pass[b] => {}
+                _ => best = Some(lane),
+            }
+        }
+        let lane = best?;
+        let t = q.lanes[lane].pop_front().expect("non-empty lane");
+        q.vtime = q.pass[lane];
+        q.pass[lane] = q.pass[lane].wrapping_add(self.strides[lane]);
         q.unacked += 1;
         Some(t)
     }
@@ -138,8 +271,9 @@ impl Broker {
         q.acked_total += 1;
     }
 
-    /// Requeue an unacked message (consumer died — failure injection).
-    pub fn nack_requeue(&mut self, id: PoolId, task: TaskId) {
+    /// Requeue an unacked message (consumer died — failure injection) at
+    /// the front of its tenant's lane, so it is redelivered first.
+    pub fn nack_requeue(&mut self, id: PoolId, task: TaskId, tenant: TenantId) {
         let q = &mut self.queues[id.idx()];
         assert!(
             q.unacked > 0,
@@ -147,7 +281,14 @@ impl Broker {
             self.names[id.idx()]
         );
         q.unacked -= 1;
-        q.ready.push_front(task);
+        let lane = tenant.idx();
+        if q.lanes[lane].is_empty() {
+            // same reactivation rule as publish: while the lane sat empty
+            // (its only message was in flight) other lanes advanced vtime,
+            // and a stale pass would let this tenant bank credit
+            q.pass[lane] = q.pass[lane].max(q.vtime);
+        }
+        q.lanes[lane].push_front(task);
     }
 
     /// Total backlog across all queues (for reports).
@@ -214,7 +355,7 @@ mod tests {
         b.publish(q, TaskId(1));
         b.publish(q, TaskId(2));
         let t = b.fetch(q).unwrap();
-        b.nack_requeue(q, t);
+        b.nack_requeue(q, t, TenantId(0));
         assert_eq!(b.fetch(q), Some(TaskId(1))); // redelivered first
     }
 
@@ -238,5 +379,143 @@ mod tests {
         b.fetch(q);
         b.ack(q);
         b.ack(q);
+    }
+
+    // -- multi-tenant fair-share coverage --------------------------------
+
+    #[test]
+    fn equal_weights_round_robin() {
+        let mut b = Broker::new();
+        b.set_tenant_weights(&[1, 1]);
+        let q = b.declare("q");
+        for i in 0..3 {
+            b.publish_for(q, TaskId(i), TenantId(0));
+        }
+        for i in 10..13 {
+            b.publish_for(q, TaskId(i), TenantId(1));
+        }
+        let order: Vec<u32> = (0..6).map(|_| b.fetch(q).unwrap().0).collect();
+        assert_eq!(order, vec![0, 10, 1, 11, 2, 12]);
+    }
+
+    #[test]
+    fn weighted_fair_share_serves_proportionally() {
+        let mut b = Broker::new();
+        b.set_tenant_weights(&[2, 1]);
+        let q = b.declare("q");
+        for i in 0..6 {
+            b.publish_for(q, TaskId(i), TenantId(0));
+        }
+        for i in 10..16 {
+            b.publish_for(q, TaskId(i), TenantId(1));
+        }
+        // 2:1 service ratio — tenant 0's six tasks all leave within the
+        // first nine deliveries
+        let first9: Vec<u32> = (0..9).map(|_| b.fetch(q).unwrap().0).collect();
+        assert_eq!(first9.iter().filter(|&&t| t < 10).count(), 6, "{first9:?}");
+        assert_eq!(first9.iter().filter(|&&t| t >= 10).count(), 3);
+        // remainder drains tenant 1 FIFO
+        let rest: Vec<u32> = (0..3).map(|_| b.fetch(q).unwrap().0).collect();
+        assert_eq!(rest, vec![13, 14, 15]);
+    }
+
+    #[test]
+    fn idle_tenant_cannot_burst_ahead() {
+        let mut b = Broker::new();
+        b.set_tenant_weights(&[1, 1]);
+        let q = b.declare("q");
+        for i in 0..4 {
+            b.publish_for(q, TaskId(i), TenantId(0));
+        }
+        // tenant 0 served twice while tenant 1 is idle
+        assert_eq!(b.fetch(q), Some(TaskId(0)));
+        assert_eq!(b.fetch(q), Some(TaskId(1)));
+        // tenant 1 activates late: joins at the current virtual time and
+        // service alternates — it does not drain first to "catch up"
+        for i in 10..14 {
+            b.publish_for(q, TaskId(i), TenantId(1));
+        }
+        let next: Vec<u32> = (0..4).map(|_| b.fetch(q).unwrap().0).collect();
+        assert_eq!(next, vec![10, 2, 11, 3]);
+    }
+
+    #[test]
+    fn per_tenant_depth_and_aggregate_backlog() {
+        let mut b = Broker::new();
+        b.set_tenant_weights(&[1, 1, 1]);
+        let q = b.declare("q");
+        b.publish_for(q, TaskId(1), TenantId(0));
+        b.publish_for(q, TaskId(2), TenantId(2));
+        b.publish_for(q, TaskId(3), TenantId(2));
+        assert_eq!(b.queue(q).depth(), 3);
+        assert_eq!(b.queue(q).depth_for(TenantId(0)), 1);
+        assert_eq!(b.queue(q).depth_for(TenantId(1)), 0);
+        assert_eq!(b.queue(q).depth_for(TenantId(2)), 2);
+        b.fetch(q);
+        assert_eq!(b.queue(q).backlog(), 3, "unacked still counts");
+    }
+
+    #[test]
+    fn tenant_nack_redelivers_on_same_lane_first() {
+        let mut b = Broker::new();
+        b.set_tenant_weights(&[1, 1]);
+        let q = b.declare("q");
+        b.publish_for(q, TaskId(1), TenantId(1));
+        b.publish_for(q, TaskId(2), TenantId(1));
+        let t = b.fetch(q).unwrap();
+        assert_eq!(t, TaskId(1));
+        b.nack_requeue(q, t, TenantId(1));
+        assert_eq!(b.fetch(q), Some(TaskId(1)));
+        assert_eq!(b.fetch(q), Some(TaskId(2)));
+    }
+
+    #[test]
+    fn nack_on_empty_lane_cannot_bank_credit() {
+        let mut b = Broker::new();
+        b.set_tenant_weights(&[1, 1]);
+        let q = b.declare("q");
+        // tenant 1's only task goes in flight; its lane sits empty while
+        // tenant 0 is served four times (vtime advances without it)
+        b.publish_for(q, TaskId(20), TenantId(1));
+        let inflight = b.fetch(q).unwrap();
+        assert_eq!(inflight, TaskId(20));
+        for i in 0..4 {
+            b.publish_for(q, TaskId(i), TenantId(0));
+        }
+        for i in 0..4 {
+            assert_eq!(b.fetch(q), Some(TaskId(i)));
+        }
+        // the consumer dies: redelivery must re-enter at current vtime,
+        // not at tenant 1's stale pass
+        b.nack_requeue(q, inflight, TenantId(1));
+        b.publish_for(q, TaskId(4), TenantId(0));
+        b.publish_for(q, TaskId(21), TenantId(1));
+        let order: Vec<u32> = (0..3).map(|_| b.fetch(q).unwrap().0).collect();
+        // alternating service, not [20, 21, 4] (banked credit)
+        assert_eq!(order, vec![20, 4, 21]);
+    }
+
+    #[test]
+    #[should_panic(expected = "tenant weights must be in")]
+    fn oversized_weight_is_rejected() {
+        let mut b = Broker::new();
+        b.set_tenant_weights(&[1 << 21, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond the configured lane count")]
+    fn publish_for_unconfigured_tenant_panics() {
+        let mut b = Broker::new();
+        let q = b.declare("q");
+        b.publish_for(q, TaskId(0), TenantId(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "before publishing")]
+    fn late_weight_change_panics() {
+        let mut b = Broker::new();
+        let q = b.declare("q");
+        b.publish(q, TaskId(0));
+        b.set_tenant_weights(&[1, 1]);
     }
 }

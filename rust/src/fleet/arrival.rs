@@ -1,0 +1,141 @@
+//! Open-loop arrival processes for the fleet service.
+//!
+//! "Open-loop" means arrivals do not wait for the system: instances keep
+//! coming at the configured rate whether or not the cluster keeps up —
+//! exactly the regime that exposes a service's saturation knee (once
+//! offered load exceeds capacity, queues and slowdown grow without bound).
+//! All processes are generated from a caller-supplied
+//! [`crate::util::rng::Rng`], so a fleet run is reproducible from its seed.
+
+use crate::util::rng::Rng;
+
+/// How workflow instances arrive over the window `[0, duration_s)`.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `per_hour` instances/hour (exponential
+    /// interarrival times) — the classic open-loop workload model.
+    Poisson { per_hour: f64 },
+    /// Periodic bursts: `size` simultaneous arrivals every `every_s`
+    /// seconds, first burst at t=0. A deterministic stand-in for
+    /// trace-style on/off submission patterns (nightly pipelines, course
+    /// deadlines).
+    Burst { every_s: f64, size: usize },
+    /// Explicit arrival times in milliseconds (trace-driven replay).
+    /// Times at or beyond the window are dropped.
+    Trace { times_ms: Vec<u64> },
+}
+
+impl ArrivalProcess {
+    /// Materialize the arrival times (ms, sorted ascending) within
+    /// `[0, duration_s)`.
+    pub fn schedule(&self, duration_s: f64, rng: &mut Rng) -> Vec<u64> {
+        let horizon_ms = (duration_s * 1000.0).round() as u64;
+        match self {
+            ArrivalProcess::Poisson { per_hour } => {
+                assert!(*per_hour > 0.0, "arrival rate must be positive");
+                let mean_s = 3600.0 / per_hour;
+                let mut out = Vec::new();
+                let mut t_s = 0.0f64;
+                loop {
+                    t_s += rng.exponential(mean_s);
+                    let ms = (t_s * 1000.0).round() as u64;
+                    if ms >= horizon_ms {
+                        break;
+                    }
+                    out.push(ms);
+                }
+                out
+            }
+            ArrivalProcess::Burst { every_s, size } => {
+                let step_ms = (every_s * 1000.0).round() as u64;
+                assert!(step_ms > 0, "burst period must be positive");
+                assert!(*size > 0, "burst size must be positive");
+                let mut out = Vec::new();
+                let mut t = 0u64;
+                while t < horizon_ms {
+                    for _ in 0..*size {
+                        out.push(t);
+                    }
+                    t += step_ms;
+                }
+                out
+            }
+            ArrivalProcess::Trace { times_ms } => {
+                let mut v: Vec<u64> = times_ms
+                    .iter()
+                    .copied()
+                    .filter(|&ms| ms < horizon_ms)
+                    .collect();
+                v.sort_unstable();
+                v
+            }
+        }
+    }
+
+    /// Human-readable label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalProcess::Poisson { per_hour } => format!("poisson({per_hour}/h)"),
+            ArrivalProcess::Burst { every_s, size } => {
+                format!("burst({size} every {every_s}s)")
+            }
+            ArrivalProcess::Trace { times_ms } => format!("trace({} arrivals)", times_ms.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_matches_rate_and_is_deterministic() {
+        let p = ArrivalProcess::Poisson { per_hour: 3600.0 }; // 1/s mean
+        let a = p.schedule(10_000.0, &mut Rng::new(7));
+        let b = p.schedule(10_000.0, &mut Rng::new(7));
+        assert_eq!(a, b, "same seed, same schedule");
+        // ~10_000 expected arrivals; 10 sigma tolerance
+        assert!((9_000..11_000).contains(&a.len()), "got {}", a.len());
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        assert!(a.iter().all(|&ms| ms < 10_000_000), "inside the window");
+        // a different seed shifts the schedule
+        let c = p.schedule(10_000.0, &mut Rng::new(8));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn burst_is_periodic_and_exact() {
+        let t = ArrivalProcess::Burst {
+            every_s: 100.0,
+            size: 2,
+        }
+        .schedule(350.0, &mut Rng::new(1));
+        assert_eq!(
+            t,
+            vec![0, 0, 100_000, 100_000, 200_000, 200_000, 300_000, 300_000]
+        );
+    }
+
+    #[test]
+    fn trace_filters_and_sorts() {
+        let t = ArrivalProcess::Trace {
+            times_ms: vec![5_000, 1_000, 99_000, 10_000],
+        }
+        .schedule(50.0, &mut Rng::new(1));
+        assert_eq!(t, vec![1_000, 5_000, 10_000]);
+    }
+
+    #[test]
+    fn labels_are_descriptive() {
+        assert_eq!(
+            ArrivalProcess::Poisson { per_hour: 6.0 }.label(),
+            "poisson(6/h)"
+        );
+        assert!(ArrivalProcess::Burst {
+            every_s: 60.0,
+            size: 3
+        }
+        .label()
+        .contains("burst"));
+    }
+}

@@ -1,0 +1,275 @@
+//! Fleet service: open-loop multi-tenant workflow arrivals on one shared
+//! cluster.
+//!
+//! The paper evaluates one workflow at a time, but its worker-pools model
+//! exists precisely because "multiple instances of different workflows can
+//! intertwine" (§3.4) — and a production deployment is a long-running
+//! *service* absorbing a stream of submissions, not a one-shot experiment
+//! harness (cf. KubeAdaptor's containerized workflow injection,
+//! arXiv:2207.01222, and multi-tenant resource sharing in Mao et al.,
+//! arXiv:2010.10350). This module provides that service layer on top of
+//! the simulator:
+//!
+//! * [`arrival`] — open-loop arrival processes (Poisson, periodic bursts,
+//!   explicit traces), seeded via [`crate::util::rng`];
+//! * [`workload`] — turns a [`FleetConfig`] into a concrete [`FleetPlan`]:
+//!   per-arrival Montage instances with per-tenant size mixes, merged into
+//!   one task space with [`crate::workflow::dag::Dag::disjoint_union`];
+//! * [`crate::models::driver::run_fleet`] — the multi-instance engine:
+//!   instances are admitted (optionally under a concurrency cap), their
+//!   tasks flow through tenant-aware broker lanes with weighted fair-share
+//!   dequeue, and the autoscaler sees the aggregate backlog;
+//! * [`report`] — per-tenant SLO statistics: queueing delay, makespan and
+//!   slowdown percentiles (p50/p95/p99) from [`crate::util::stats::Summary`].
+//!
+//! The CLI front-end is `hyperflow serve`; the saturation sweep lives in
+//! `benches/fleet_saturation.rs` (writes `BENCH_fleet.json`).
+
+pub mod arrival;
+pub mod report;
+pub mod workload;
+
+pub use arrival::ArrivalProcess;
+pub use workload::InstanceMeta;
+
+use crate::models::driver::{self, SimConfig};
+use crate::models::ExecModel;
+use crate::report::SimResult;
+use crate::sim::SimTime;
+
+/// One workflow instance inside a fleet plan: a contiguous task range
+/// `[first_task, first_task + n_tasks)` of the disjoint-union DAG, owned
+/// by a tenant, arriving at `arrival_ms`.
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    pub tenant: u16,
+    pub arrival_ms: u64,
+    pub first_task: u32,
+    pub n_tasks: u32,
+}
+
+/// A fully-resolved fleet workload, ready for
+/// [`crate::models::driver::run_fleet`].
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Instances in arrival order; task ranges are contiguous and cover
+    /// the union DAG.
+    pub instances: Vec<InstanceSpec>,
+    /// Fair-share weight per tenant (broker dequeue shares).
+    pub tenant_weights: Vec<u64>,
+    /// Admission-control cap: max concurrently running instances
+    /// (`None` = admit on arrival).
+    pub max_in_flight: Option<usize>,
+}
+
+/// Lifecycle of one instance after the run: arrival (open-loop),
+/// admission (possibly delayed by the cap), completion.
+#[derive(Debug, Clone)]
+pub struct InstanceOutcome {
+    pub tenant: u16,
+    pub arrival: SimTime,
+    pub admitted: SimTime,
+    pub finished: SimTime,
+    pub n_tasks: u32,
+}
+
+/// One tenant's workload profile: fair-share weight and the Montage grid
+/// sizes it submits (drawn uniformly per arrival).
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub weight: u64,
+    pub grids: Vec<usize>,
+}
+
+/// Default tenant profiles: equal weights, with each tenant drawing from
+/// a two-size slice of the global grid mix (rotated by tenant index), so
+/// tenants submit genuinely different size distributions.
+pub fn default_tenants(n: usize, grids: &[usize]) -> Vec<TenantSpec> {
+    assert!(n > 0, "at least one tenant");
+    assert!(!grids.is_empty(), "at least one grid size");
+    (0..n)
+        .map(|k| TenantSpec {
+            weight: 1,
+            grids: vec![grids[k % grids.len()], grids[(k + 1) % grids.len()]],
+        })
+        .collect()
+}
+
+/// Parameters of a fleet simulation.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Aggregate arrival process over the whole tenant population; each
+    /// arrival is assigned a tenant uniformly at random (thinning), so
+    /// every tenant receives an open-loop stream of rate `R / K`.
+    pub arrival: ArrivalProcess,
+    /// Length of the arrival window in simulated seconds. The run itself
+    /// continues until the backlog drains.
+    pub duration_s: f64,
+    pub tenants: Vec<TenantSpec>,
+    /// Master seed: arrival times, tenant assignment, instance sizes and
+    /// task durations all derive from it deterministically.
+    pub seed: u64,
+    /// Admission-control cap (see [`FleetPlan::max_in_flight`]).
+    pub max_in_flight: Option<usize>,
+}
+
+/// Everything a fleet run produced: the aggregate simulation result plus
+/// per-instance lifecycles and workload metadata (index-aligned with
+/// `outcomes`).
+#[derive(Debug)]
+pub struct FleetResult {
+    pub sim: SimResult,
+    pub outcomes: Vec<InstanceOutcome>,
+    pub metas: Vec<InstanceMeta>,
+    pub duration_s: f64,
+    pub n_tenants: usize,
+}
+
+/// Generate the workload for `cfg` and run it under `model` on the
+/// simulated cluster. Deterministic: the same `(cfg, model, sim_cfg)`
+/// produces an identical result, per-tenant slowdown table included.
+pub fn run(model: ExecModel, mut sim_cfg: SimConfig, cfg: &FleetConfig) -> FleetResult {
+    let (dag, plan, metas) = workload::build_plan(cfg);
+    // A sweep point whose arrival process yields nothing (rate far below
+    // 1/duration) is a legitimate empty measurement, not an error — the
+    // pooled-model driver cannot run an empty DAG, so report it directly.
+    if plan.instances.is_empty() {
+        return FleetResult {
+            sim: SimResult {
+                model_name: format!("fleet/{}", model.name()),
+                makespan: crate::sim::SimTime::ZERO,
+                trace: crate::report::Trace::new(),
+                metrics: crate::metrics::Registry::new(),
+                pods_created: 0,
+                api_requests: 0,
+                sched_backoffs: 0,
+                sched_binds: 0,
+                sim_events: 0,
+                avg_running_tasks: 0.0,
+                avg_cpu_utilization: 0.0,
+            },
+            outcomes: Vec::new(),
+            metas,
+            duration_s: cfg.duration_s,
+            n_tenants: cfg.tenants.len(),
+        };
+    }
+    // The open-loop backlog must drain after arrivals stop: widen the
+    // livelock guard past the *offered work*, not just the arrival
+    // window — an over-saturated sweep point legitimately drains for far
+    // longer than the window, and must finish rather than trip the
+    // driver's deadlock assertion. Fully-serial execution of every task
+    // is the worst case; 4x that plus a day covers per-task overheads
+    // and scheduler back-off pathologies.
+    let total_task_s: f64 = dag.tasks.iter().map(|t| t.duration.as_secs_f64()).sum();
+    sim_cfg.max_sim_s = sim_cfg
+        .max_sim_s
+        .max(cfg.duration_s * 50.0 + 86_400.0)
+        .max(cfg.duration_s + total_task_s * 4.0 + 86_400.0);
+    let (sim, outcomes) = driver::run_fleet(dag, model, sim_cfg, &plan);
+    FleetResult {
+        sim,
+        outcomes,
+        metas,
+        duration_s: cfg.duration_s,
+        n_tenants: cfg.tenants.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(seed: u64) -> FleetConfig {
+        FleetConfig {
+            arrival: ArrivalProcess::Poisson { per_hour: 90.0 },
+            duration_s: 400.0,
+            tenants: default_tenants(2, &[3, 4]),
+            seed,
+            max_in_flight: None,
+        }
+    }
+
+    #[test]
+    fn fleet_run_completes_and_is_consistent() {
+        let res = run(
+            ExecModel::paper_hybrid_pools(),
+            SimConfig::with_nodes(4),
+            &small_cfg(1),
+        );
+        assert!(!res.outcomes.is_empty());
+        assert_eq!(res.outcomes.len(), res.metas.len());
+        let traced = res.sim.trace.records.len() as u32;
+        let total: u32 = res.metas.iter().map(|m| m.n_tasks).sum();
+        assert_eq!(traced, total, "every task of every instance traced");
+        for (o, m) in res.outcomes.iter().zip(&res.metas) {
+            assert_eq!(o.tenant, m.tenant);
+            assert!(o.finished > o.admitted);
+            assert!(o.admitted >= o.arrival);
+            // response time can never beat the critical path
+            assert!((o.finished - o.arrival).as_secs_f64() > m.ideal_s);
+        }
+    }
+
+    #[test]
+    fn fleet_run_is_deterministic_for_seed() {
+        let mk = || {
+            run(
+                ExecModel::paper_hybrid_pools(),
+                SimConfig::with_nodes(4),
+                &small_cfg(7),
+            )
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.sim.makespan, b.sim.makespan);
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.admitted, y.admitted);
+            assert_eq!(x.finished, y.finished);
+        }
+        assert_eq!(report::render_table(&a), report::render_table(&b));
+    }
+
+    #[test]
+    fn admission_cap_defers_but_completes() {
+        let mut cfg = small_cfg(3);
+        cfg.max_in_flight = Some(1);
+        let res = run(ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4), &cfg);
+        // serialized: no two instances overlap
+        let mut sorted: Vec<_> = res.outcomes.iter().collect();
+        sorted.sort_by_key(|o| o.admitted);
+        for w in sorted.windows(2) {
+            assert!(w[1].admitted >= w[0].finished, "cap 1 must serialize");
+        }
+    }
+
+    #[test]
+    fn zero_arrivals_yield_an_empty_result_not_a_panic() {
+        let mut cfg = small_cfg(1);
+        // an empty trace: guaranteed zero arrivals in the window
+        cfg.arrival = ArrivalProcess::Trace { times_ms: vec![] };
+        let res = run(
+            ExecModel::paper_hybrid_pools(),
+            SimConfig::with_nodes(4),
+            &cfg,
+        );
+        assert!(res.outcomes.is_empty());
+        assert_eq!(res.sim.makespan, crate::sim::SimTime::ZERO);
+        let agg = report::aggregate(&res);
+        assert_eq!(agg.instances, 0);
+        assert_eq!(agg.completed_per_hour, 0.0);
+        assert_eq!(report::per_tenant(&res).len(), 2);
+    }
+
+    #[test]
+    fn default_tenants_rotate_grid_mixes() {
+        let t = default_tenants(3, &[4, 5, 6]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].grids, vec![4, 5]);
+        assert_eq!(t[1].grids, vec![5, 6]);
+        assert_eq!(t[2].grids, vec![6, 4]);
+        assert!(t.iter().all(|s| s.weight == 1));
+    }
+}

@@ -1,0 +1,259 @@
+//! Per-tenant SLO reporting for fleet runs.
+//!
+//! Definitions (all per instance, aggregated per tenant):
+//!
+//! * **queueing delay** — `admitted - arrival`: time spent waiting for an
+//!   admission slot under the cap (0 without a cap);
+//! * **makespan** — `finished - admitted`: execution span on the shared
+//!   cluster;
+//! * **slowdown** — `(finished - arrival) / ideal`, where `ideal` is the
+//!   instance's critical-path length in isolation. Slowdown is the
+//!   standard open-loop service metric: 1.0 is the physical optimum, and
+//!   it diverges as the arrival rate crosses the saturation knee.
+//!
+//! Percentiles come from [`crate::util::stats::Summary`] (p50/p95/p99 —
+//! the p99 column is what an operator would put an SLO on).
+
+use super::FleetResult;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Aggregated statistics for one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantRow {
+    pub tenant: u16,
+    pub instances: usize,
+    pub queue_delay_mean_s: f64,
+    pub makespan_mean_s: f64,
+    pub slowdown_mean: f64,
+    pub slowdown_p50: f64,
+    pub slowdown_p95: f64,
+    pub slowdown_p99: f64,
+}
+
+/// Fleet-wide headline numbers (one saturation-sweep point).
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    pub instances: usize,
+    /// End of the run: last instance completion (seconds).
+    pub span_s: f64,
+    /// Completed-instance throughput over the whole run.
+    pub completed_per_hour: f64,
+    pub mean_queue_delay_s: f64,
+    pub mean_slowdown: f64,
+    pub slowdown_p99: f64,
+    /// Average allocated-CPU fraction of the cluster over the run.
+    pub utilization: f64,
+}
+
+/// Per-tenant accumulators over the outcome/meta pairs.
+fn tenant_summaries(res: &FleetResult) -> Vec<(Summary, Summary, Summary)> {
+    let mut acc: Vec<(Summary, Summary, Summary)> = (0..res.n_tenants)
+        .map(|_| (Summary::new(), Summary::new(), Summary::new()))
+        .collect();
+    for (o, m) in res.outcomes.iter().zip(&res.metas) {
+        let (delay, makespan, slowdown) = &mut acc[o.tenant as usize];
+        delay.add((o.admitted - o.arrival).as_secs_f64());
+        makespan.add((o.finished - o.admitted).as_secs_f64());
+        slowdown.add((o.finished - o.arrival).as_secs_f64() / m.ideal_s.max(1e-9));
+    }
+    acc
+}
+
+/// Per-tenant SLO rows (every tenant, including ones with no arrivals).
+pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
+    tenant_summaries(res)
+        .into_iter()
+        .enumerate()
+        .map(|(t, (delay, makespan, slowdown))| TenantRow {
+            tenant: t as u16,
+            instances: slowdown.len(),
+            queue_delay_mean_s: delay.mean(),
+            makespan_mean_s: makespan.mean(),
+            slowdown_mean: slowdown.mean(),
+            slowdown_p50: slowdown.percentile(50.0),
+            slowdown_p95: slowdown.percentile(95.0),
+            slowdown_p99: slowdown.percentile(99.0),
+        })
+        .collect()
+}
+
+/// Fleet-wide aggregate (the numbers `BENCH_fleet.json` tracks per
+/// arrival-rate point).
+pub fn aggregate(res: &FleetResult) -> FleetSummary {
+    let mut delay = Summary::new();
+    let mut slowdown = Summary::new();
+    for (o, m) in res.outcomes.iter().zip(&res.metas) {
+        delay.add((o.admitted - o.arrival).as_secs_f64());
+        slowdown.add((o.finished - o.arrival).as_secs_f64() / m.ideal_s.max(1e-9));
+    }
+    let span_s = res.sim.makespan.as_secs_f64();
+    let completed_per_hour = if span_s > 0.0 {
+        res.outcomes.len() as f64 * 3600.0 / span_s
+    } else {
+        0.0
+    };
+    FleetSummary {
+        instances: res.outcomes.len(),
+        span_s,
+        completed_per_hour,
+        mean_queue_delay_s: delay.mean(),
+        mean_slowdown: slowdown.mean(),
+        slowdown_p99: slowdown.percentile(99.0),
+        utilization: res.sim.avg_cpu_utilization,
+    }
+}
+
+/// Deterministic fixed-width text table (the `hyperflow serve` output).
+pub fn render_table(res: &FleetResult) -> String {
+    let mut out = String::from(
+        "tenant  instances  qdelay-mean-s  makespan-mean-s  \
+         slowdown-mean  slowdown-p50  slowdown-p95  slowdown-p99\n",
+    );
+    for r in per_tenant(res) {
+        out.push_str(&format!(
+            "{:>6}  {:>9}  {:>13.1}  {:>15.1}  {:>13.2}  {:>12.2}  {:>12.2}  {:>12.2}\n",
+            r.tenant,
+            r.instances,
+            r.queue_delay_mean_s,
+            r.makespan_mean_s,
+            r.slowdown_mean,
+            r.slowdown_p50,
+            r.slowdown_p95,
+            r.slowdown_p99,
+        ));
+    }
+    out
+}
+
+/// JSON export of the fleet report (`hyperflow serve --json`).
+pub fn to_json(res: &FleetResult) -> Json {
+    let agg = aggregate(res);
+    let tenants: Vec<Json> = per_tenant(res)
+        .into_iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("tenant", (r.tenant as u64).into()),
+                ("instances", r.instances.into()),
+                ("queue_delay_mean_s", r.queue_delay_mean_s.into()),
+                ("makespan_mean_s", r.makespan_mean_s.into()),
+                ("slowdown_mean", r.slowdown_mean.into()),
+                ("slowdown_p50", r.slowdown_p50.into()),
+                ("slowdown_p95", r.slowdown_p95.into()),
+                ("slowdown_p99", r.slowdown_p99.into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("model", Json::str(&res.sim.model_name)),
+        ("duration_s", res.duration_s.into()),
+        ("instances", agg.instances.into()),
+        ("span_s", agg.span_s.into()),
+        ("instances_per_hour", agg.completed_per_hour.into()),
+        ("mean_queue_delay_s", agg.mean_queue_delay_s.into()),
+        ("mean_slowdown", agg.mean_slowdown.into()),
+        ("slowdown_p99", agg.slowdown_p99.into()),
+        ("utilization", agg.utilization.into()),
+        ("tenants", Json::Arr(tenants)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{InstanceMeta, InstanceOutcome};
+    use crate::metrics::Registry;
+    use crate::report::{SimResult, Trace};
+    use crate::sim::SimTime;
+
+    fn fake_result() -> FleetResult {
+        let sim = SimResult {
+            model_name: "fleet/worker-pools".into(),
+            makespan: SimTime(200_000),
+            trace: Trace::new(),
+            metrics: Registry::new(),
+            pods_created: 0,
+            api_requests: 0,
+            sched_backoffs: 0,
+            sched_binds: 0,
+            sim_events: 0,
+            avg_running_tasks: 0.0,
+            avg_cpu_utilization: 0.5,
+        };
+        let outcomes = vec![
+            InstanceOutcome {
+                tenant: 0,
+                arrival: SimTime(0),
+                admitted: SimTime(10_000),
+                finished: SimTime(110_000),
+                n_tasks: 10,
+            },
+            InstanceOutcome {
+                tenant: 1,
+                arrival: SimTime(0),
+                admitted: SimTime(0),
+                finished: SimTime(50_000),
+                n_tasks: 10,
+            },
+        ];
+        let metas = vec![
+            InstanceMeta {
+                tenant: 0,
+                grid: 3,
+                n_tasks: 10,
+                ideal_s: 50.0,
+            },
+            InstanceMeta {
+                tenant: 1,
+                grid: 3,
+                n_tasks: 10,
+                ideal_s: 50.0,
+            },
+        ];
+        FleetResult {
+            sim,
+            outcomes,
+            metas,
+            duration_s: 100.0,
+            n_tenants: 2,
+        }
+    }
+
+    #[test]
+    fn per_tenant_rows_compute_the_defined_metrics() {
+        let rows = per_tenant(&fake_result());
+        assert_eq!(rows.len(), 2);
+        // tenant 0: response 110 s over ideal 50 s => slowdown 2.2
+        assert!((rows[0].slowdown_mean - 2.2).abs() < 1e-9);
+        assert!((rows[0].queue_delay_mean_s - 10.0).abs() < 1e-9);
+        assert!((rows[0].makespan_mean_s - 100.0).abs() < 1e-9);
+        // tenant 1: response == ideal => slowdown 1.0, no queueing
+        assert!((rows[1].slowdown_mean - 1.0).abs() < 1e-9);
+        assert_eq!(rows[1].queue_delay_mean_s, 0.0);
+        // single sample: every percentile equals it
+        assert_eq!(rows[0].slowdown_p50, rows[0].slowdown_p99);
+    }
+
+    #[test]
+    fn aggregate_throughput_over_span() {
+        let a = aggregate(&fake_result());
+        assert_eq!(a.instances, 2);
+        // span 200 s => 2 instances = 36/h
+        assert!((a.completed_per_hour - 36.0).abs() < 1e-9);
+        assert!((a.mean_slowdown - 1.6).abs() < 1e-9);
+        assert!((a.mean_queue_delay_s - 5.0).abs() < 1e-9);
+        assert_eq!(a.utilization, 0.5);
+    }
+
+    #[test]
+    fn table_and_json_are_deterministic_and_complete() {
+        let r = fake_result();
+        assert_eq!(render_table(&r), render_table(&r));
+        let t = render_table(&r);
+        assert!(t.contains("slowdown-p99"));
+        assert_eq!(t.lines().count(), 3, "header + one row per tenant");
+        let j = to_json(&r).to_string();
+        assert!(j.contains("instances_per_hour"));
+        assert!(j.contains("slowdown_p99"));
+    }
+}

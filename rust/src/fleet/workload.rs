@@ -1,0 +1,159 @@
+//! Workload generation for the fleet service: turn a [`FleetConfig`] into
+//! a concrete, fully deterministic [`FleetPlan`].
+//!
+//! The pipeline is: sample the aggregate arrival times, assign each
+//! arrival a tenant (uniform thinning, so each tenant sees an open-loop
+//! stream), draw the instance's Montage grid size from that tenant's mix,
+//! generate the instance DAG with a derived seed, and merge everything
+//! with [`Dag::disjoint_union`] — instance `i` occupies the contiguous
+//! task range starting at the sum of earlier instance lengths, which is
+//! how the driver maps tasks back to instances and tenants.
+
+use super::{FleetConfig, FleetPlan, InstanceSpec};
+use crate::util::rng::Rng;
+use crate::workflow::dag::Dag;
+use crate::workflow::montage::{generate, MontageConfig};
+
+/// Static description of one generated instance (index-aligned with
+/// [`FleetPlan::instances`] and, after the run, with the outcomes).
+#[derive(Debug, Clone)]
+pub struct InstanceMeta {
+    pub tenant: u16,
+    /// Montage grid size (the instance is `grid x grid`).
+    pub grid: usize,
+    pub n_tasks: u32,
+    /// Critical-path seconds of the instance in isolation — the lower
+    /// bound on its response time, and the denominator of its slowdown.
+    pub ideal_s: f64,
+}
+
+/// Build the union DAG, the fleet plan, and the per-instance metadata for
+/// a fleet configuration. Fully deterministic in `cfg.seed`.
+pub fn build_plan(cfg: &FleetConfig) -> (Dag, FleetPlan, Vec<InstanceMeta>) {
+    assert!(!cfg.tenants.is_empty(), "at least one tenant");
+    let n_tenants = cfg.tenants.len();
+    let mut master = Rng::new(cfg.seed ^ 0xF1EE7);
+    let mut arr_rng = master.fork(1);
+    let mut tenant_rng = master.fork(2);
+    let mut gen_rng = master.fork(3);
+
+    let times = cfg.arrival.schedule(cfg.duration_s, &mut arr_rng);
+    let mut dags: Vec<Dag> = Vec::with_capacity(times.len());
+    let mut metas: Vec<InstanceMeta> = Vec::with_capacity(times.len());
+    let mut instances: Vec<InstanceSpec> = Vec::with_capacity(times.len());
+    let mut first_task = 0u32;
+    for &arrival_ms in &times {
+        let tenant = tenant_rng.below(n_tenants as u64) as u16;
+        let grids = &cfg.tenants[tenant as usize].grids;
+        let grid = grids[gen_rng.below(grids.len() as u64) as usize];
+        let dag = generate(&MontageConfig {
+            grid_w: grid,
+            grid_h: grid,
+            diagonals: true,
+            seed: gen_rng.next_u64(),
+        });
+        let n_tasks = dag.len() as u32;
+        metas.push(InstanceMeta {
+            tenant,
+            grid,
+            n_tasks,
+            ideal_s: dag.critical_path_secs(),
+        });
+        instances.push(InstanceSpec {
+            tenant,
+            arrival_ms,
+            first_task,
+            n_tasks,
+        });
+        first_task += n_tasks;
+        dags.push(dag);
+    }
+    let union = Dag::disjoint_union(&dags);
+    let plan = FleetPlan {
+        instances,
+        tenant_weights: cfg.tenants.iter().map(|t| t.weight).collect(),
+        max_in_flight: cfg.max_in_flight,
+    };
+    (union, plan, metas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{default_tenants, ArrivalProcess};
+
+    fn cfg() -> FleetConfig {
+        FleetConfig {
+            arrival: ArrivalProcess::Burst {
+                every_s: 120.0,
+                size: 2,
+            },
+            duration_s: 600.0,
+            tenants: default_tenants(3, &[3, 4, 5]),
+            seed: 9,
+            max_in_flight: None,
+        }
+    }
+
+    #[test]
+    fn plan_covers_the_union_dag_contiguously() {
+        let (dag, plan, metas) = build_plan(&cfg());
+        assert_eq!(plan.instances.len(), 10); // 5 bursts x 2
+        assert_eq!(plan.instances.len(), metas.len());
+        let mut expect = 0u32;
+        for (s, m) in plan.instances.iter().zip(&metas) {
+            assert_eq!(s.first_task, expect);
+            assert_eq!(s.n_tasks, m.n_tasks);
+            assert_eq!(s.tenant, m.tenant);
+            assert!((s.tenant as usize) < plan.tenant_weights.len());
+            assert!(m.ideal_s > 0.0);
+            expect += s.n_tasks;
+        }
+        assert_eq!(expect as usize, dag.len());
+        assert!(dag.validate().is_ok());
+        // arrivals are sorted (burst schedule)
+        assert!(plan
+            .instances
+            .windows(2)
+            .all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+    }
+
+    #[test]
+    fn same_seed_same_plan_different_seed_differs() {
+        let (_, p1, m1) = build_plan(&cfg());
+        let (_, p2, m2) = build_plan(&cfg());
+        assert_eq!(p1.instances.len(), p2.instances.len());
+        for (a, b) in p1.instances.iter().zip(&p2.instances) {
+            assert_eq!(a.arrival_ms, b.arrival_ms);
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.n_tasks, b.n_tasks);
+        }
+        for (a, b) in m1.iter().zip(&m2) {
+            assert_eq!(a.grid, b.grid);
+            assert_eq!(a.ideal_s, b.ideal_s);
+        }
+        let mut other = cfg();
+        other.seed = 10;
+        let (_, _, m3) = build_plan(&other);
+        assert!(
+            m1.iter().zip(&m3).any(|(a, b)| a.grid != b.grid
+                || a.tenant != b.tenant
+                || a.ideal_s != b.ideal_s),
+            "different seed should reshuffle the workload"
+        );
+    }
+
+    #[test]
+    fn tenant_sizes_come_from_their_mix() {
+        let (_, plan, metas) = build_plan(&cfg());
+        let tenants = default_tenants(3, &[3, 4, 5]);
+        for (s, m) in plan.instances.iter().zip(&metas) {
+            assert!(
+                tenants[s.tenant as usize].grids.contains(&m.grid),
+                "tenant {} drew grid {} outside its mix",
+                s.tenant,
+                m.grid
+            );
+        }
+    }
+}

@@ -14,6 +14,10 @@
 //!   clustering, and auto-scalable worker pools (KEDA-style autoscaler with
 //!   proportional quota allocation, [`autoscale`], over an AMQP-like
 //!   [`broker`]);
+//! * the **fleet service** ([`fleet`]): open-loop multi-tenant workflow
+//!   arrivals on one shared cluster, with weighted fair-share dequeue,
+//!   admission control, and per-tenant slowdown/SLO reporting
+//!   (`hyperflow serve`);
 //! * the **Montage workflow generator** ([`workflow`]);
 //! * a **PJRT runtime** ([`runtime`]) executing the real Montage numerics
 //!   (JAX + Pallas, AOT-compiled to HLO) inside worker pods ([`compute`],
@@ -28,6 +32,7 @@ pub mod broker;
 pub mod compute;
 pub mod config;
 pub mod engine;
+pub mod fleet;
 pub mod k8s;
 pub mod metrics;
 pub mod models;

@@ -12,13 +12,28 @@ fn usage() -> ! {
          commands:\n\
            run        --model job|clustered|pools|generic-pool [--tasks N] [--nodes N] [--seed S]\n\
            run        --config configs/<name>.json   (full experiment description)\n\
+           serve      --arrival-rate R --duration S --tenants K --model ... [--seed S]\n\
            generate   --tasks N --out wf.json\n\
            info       --tasks N\n\
+           trace      --model job|clustered|pools --tasks N --out trace.json\n\
+                      (Chrome trace-event export for chrome://tracing / Perfetto)\n\
          flags for run:\n\
            --cluster-size N --cluster-timeout MS   (clustered model)\n\
            --max-pending N                          (throttled job model, §5)\n\
            --json                                   print result as JSON\n\
-           --html FILE                              write an HTML report\n"
+           --html FILE                              write an HTML report\n\
+         flags for serve (open-loop multi-tenant fleet):\n\
+           --arrival-rate R    aggregate arrivals in instances/hour (default 6)\n\
+           --duration S        arrival window in seconds (default 3600)\n\
+           --tenants K         tenant count (default 2)\n\
+           --model M           job|clustered|pools|generic-pool (default pools)\n\
+           --nodes N           cluster size (default 17)\n\
+           --seed S            master seed: arrivals, sizes, durations (default 42)\n\
+           --process poisson|burst [--burst-every S] [--burst-size N]\n\
+           --grids 4,5,6       Montage grid-size mix spread across tenants\n\
+           --weights 2,1       fair-share dequeue weight per tenant\n\
+           --cap N             admission cap: max concurrent instances (0 = off)\n\
+           --json              print the fleet report as JSON\n"
     );
     std::process::exit(2)
 }
@@ -28,10 +43,35 @@ fn main() {
     let args = Args::from_env();
     match args.positional.first().map(String::as_str) {
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("generate") => cmd_generate(&args),
         Some("info") => cmd_info(&args),
         Some("trace") => cmd_trace(&args),
         _ => usage(),
+    }
+}
+
+/// Shared `--model` parsing for `run` / `serve` / `trace`.
+fn parse_model(args: &Args) -> ExecModel {
+    match args.get_or("model", "pools") {
+        "job" | "job-based" => ExecModel::JobBased,
+        "clustered" => {
+            let size = args.get_usize("cluster-size", 0);
+            if size > 0 {
+                ExecModel::Clustered(ClusteringConfig::uniform(
+                    size,
+                    args.get_u64("cluster-timeout", 3000),
+                ))
+            } else {
+                ExecModel::Clustered(ClusteringConfig::paper_default())
+            }
+        }
+        "pools" | "worker-pools" => ExecModel::paper_hybrid_pools(),
+        "generic-pool" | "generic" => ExecModel::GenericPool,
+        m => {
+            eprintln!("unknown model '{m}'");
+            usage()
+        }
     }
 }
 
@@ -40,11 +80,7 @@ fn main() {
 fn cmd_trace(args: &Args) {
     let cfg = montage_cfg(args);
     let dag = generate(&cfg);
-    let model = match args.get_or("model", "pools") {
-        "job" => ExecModel::JobBased,
-        "clustered" => ExecModel::Clustered(ClusteringConfig::paper_default()),
-        _ => ExecModel::paper_hybrid_pools(),
-    };
+    let model = parse_model(args);
     let res = driver::run(
         dag,
         model,
@@ -82,24 +118,7 @@ fn cmd_run(args: &Args) {
     } else {
         let cfg = montage_cfg(args);
         let dag = generate(&cfg);
-        let model = match args.get_or("model", "pools") {
-            "job" | "job-based" => ExecModel::JobBased,
-            "clustered" => {
-                let size = args.get_usize("cluster-size", 0);
-                let c = if size > 0 {
-                    ClusteringConfig::uniform(size, args.get_u64("cluster-timeout", 3000))
-                } else {
-                    ClusteringConfig::paper_default()
-                };
-                ExecModel::Clustered(c)
-            }
-            "pools" | "worker-pools" => ExecModel::paper_hybrid_pools(),
-            "generic-pool" | "generic" => ExecModel::GenericPool,
-            m => {
-                eprintln!("unknown model '{m}'");
-                usage()
-            }
-        };
+        let model = parse_model(args);
         let mut sim = driver::SimConfig::with_nodes(args.get_usize("nodes", 17));
         if args.has("max-pending") {
             sim.max_pending_pods = Some(args.get_usize("max-pending", 64));
@@ -144,6 +163,130 @@ fn cmd_run(args: &Args) {
                 12
             )
         );
+    }
+}
+
+/// Parse a comma-separated numeric flag value.
+fn parse_list<T: std::str::FromStr>(raw: &str, flag: &str) -> Vec<T> {
+    raw.split(',')
+        .map(|v| {
+            v.trim().parse().unwrap_or_else(|_| {
+                eprintln!("--{flag}: '{v}' is not a number");
+                usage()
+            })
+        })
+        .collect()
+}
+
+/// `hyperflow serve` — the fleet service: open-loop multi-tenant workflow
+/// arrivals executed concurrently on one shared simulated cluster, with
+/// weighted fair-share scheduling and a per-tenant SLO report.
+fn cmd_serve(args: &Args) {
+    use hyperflow_k8s::fleet::{self, ArrivalProcess, FleetConfig};
+
+    let rate = args.get_f64("arrival-rate", 6.0);
+    let duration = args.get_f64("duration", 3600.0);
+    let n_tenants = args.get_usize("tenants", 2);
+    if n_tenants == 0 {
+        eprintln!("--tenants must be at least 1");
+        usage()
+    }
+    let nodes = args.get_usize("nodes", 17);
+    let seed = args.get_u64("seed", 42);
+    let model = parse_model(args);
+    let grids: Vec<usize> = args
+        .get("grids")
+        .map(|s| parse_list(s, "grids"))
+        .unwrap_or_else(|| vec![4, 5, 6]);
+    let mut tenants = fleet::default_tenants(n_tenants, &grids);
+    if let Some(w) = args.get("weights") {
+        let ws: Vec<u64> = parse_list(w, "weights");
+        if ws.len() != n_tenants {
+            eprintln!("--weights must list exactly one weight per tenant");
+            usage()
+        }
+        if ws.iter().any(|&w| w == 0 || w > (1 << 20)) {
+            eprintln!("--weights entries must be in 1..={}", 1u64 << 20);
+            usage()
+        }
+        for (t, w) in tenants.iter_mut().zip(ws) {
+            t.weight = w;
+        }
+        // fair-share lives in the worker-pool queue lanes: warn when the
+        // chosen model routes tasks where the weights cannot act
+        let uniform = tenants.iter().all(|t| t.weight == tenants[0].weight);
+        if !uniform {
+            match &model {
+                ExecModel::JobBased | ExecModel::Clustered(_) => eprintln!(
+                    "warning: --weights has no effect under the {} model \
+                     (fair-share applies only to worker-pool queues)",
+                    model.name()
+                ),
+                ExecModel::WorkerPools { .. } => eprintln!(
+                    "note: fair-share weights govern the pooled parallel stages; \
+                     serial stages run as jobs outside fair-share"
+                ),
+                ExecModel::GenericPool => {}
+            }
+        }
+    }
+    let arrival = match args.get_or("process", "poisson") {
+        "poisson" => {
+            if rate <= 0.0 {
+                eprintln!("--arrival-rate must be positive");
+                usage()
+            }
+            ArrivalProcess::Poisson { per_hour: rate }
+        }
+        "burst" => ArrivalProcess::Burst {
+            every_s: args.get_f64("burst-every", 600.0),
+            size: args.get_usize("burst-size", 4),
+        },
+        p => {
+            eprintln!("unknown arrival process '{p}'");
+            usage()
+        }
+    };
+    let cap = args.get_usize("cap", 0);
+    let fleet_cfg = FleetConfig {
+        arrival,
+        duration_s: duration,
+        tenants,
+        seed,
+        max_in_flight: (cap > 0).then_some(cap),
+    };
+    let sim = driver::SimConfig {
+        seed,
+        ..driver::SimConfig::with_nodes(nodes)
+    };
+    eprintln!(
+        "fleet: {} arrivals over {duration:.0}s, {n_tenants} tenants, {} on {nodes} nodes (seed {seed})",
+        fleet_cfg.arrival.label(),
+        model.name(),
+    );
+    let res = fleet::run(model, sim, &fleet_cfg);
+    if res.outcomes.is_empty() {
+        eprintln!(
+            "note: the arrival process produced no instances in the window — \
+             raise --arrival-rate or --duration"
+        );
+    }
+    if args.has("json") {
+        println!("{}", fleet::report::to_json(&res));
+    } else {
+        let agg = fleet::report::aggregate(&res);
+        println!(
+            "instances: {}   span: {:.0}s   throughput: {:.1}/h   utilization: {:.1}%",
+            agg.instances,
+            agg.span_s,
+            agg.completed_per_hour,
+            agg.utilization * 100.0
+        );
+        println!(
+            "queueing delay (mean): {:.1}s   slowdown mean: {:.2}   slowdown p99: {:.2}\n",
+            agg.mean_queue_delay_s, agg.mean_slowdown, agg.slowdown_p99
+        );
+        print!("{}", fleet::report::render_table(&res));
     }
 }
 

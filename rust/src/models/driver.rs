@@ -2,6 +2,20 @@
 //! Kubernetes substrate and the HyperFlow engine and runs a workflow to
 //! completion, producing a [`SimResult`] trace.
 //!
+//! Two entry points share the same event machinery:
+//!
+//! * [`run`] — the paper's experiment harness: one workflow, dispatched at
+//!   t=0, simulated to completion.
+//! * [`run_fleet`] — the fleet service: many workflow *instances* (one
+//!   [`Dag::disjoint_union`] task space, each instance a contiguous id
+//!   range) arriving over simulated time, tagged with tenants, admitted
+//!   under an optional concurrency cap, and executed concurrently on the
+//!   shared cluster. Instance roots are held back until admission;
+//!   readiness propagation, pools, autoscaling and scheduling are exactly
+//!   the single-run code paths — the autoscaler simply sees the aggregate
+//!   backlog of all in-flight instances, and the broker's per-tenant lanes
+//!   enforce weighted fair-share at dequeue time.
+//!
 //! Event flow (job path):          Event flow (pool path):
 //!   task ready                       task ready
 //!   -> batcher (maybe buffer)        -> publish to type queue
@@ -21,9 +35,10 @@
 
 use super::ExecModel;
 use crate::autoscale::{Autoscaler, AutoscalerConfig, PoolSpec};
-use crate::broker::{Broker, PoolId};
+use crate::broker::{Broker, PoolId, TenantId};
 use crate::engine::clustering::{BatchAction, Batcher, ClusteringConfig};
 use crate::engine::Engine;
+use crate::fleet::{FleetPlan, InstanceOutcome};
 use crate::k8s::api_server::{ApiServer, ApiServerConfig};
 use crate::k8s::node::{paper_cluster, Node, NodeId};
 use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
@@ -132,6 +147,8 @@ enum Ev {
     WorkerFetched { pod: PodId, task: TaskId },
     /// Failure injection: a node goes down (kills its pods) or comes back.
     NodeEvent { node: usize, up: bool },
+    /// Fleet service: workflow instance `inst` arrives (open-loop).
+    InstanceArrive { inst: u32 },
 }
 
 /// What a pod will do next, extracted from its payload without cloning it
@@ -139,6 +156,24 @@ enum Ev {
 enum PodWork {
     Batch(Vec<TaskId>),
     Pool(PoolId),
+}
+
+/// Runtime state of a fleet run (see [`run_fleet`]): per-instance
+/// admission and completion tracking over the disjoint-union task space.
+struct FleetState {
+    /// Unfinished task count per instance; 0 = the instance completed.
+    outstanding: Vec<u32>,
+    /// Each instance's initially-ready tasks, dispatched at admission
+    /// (taken out once — an instance is admitted exactly once).
+    roots: Vec<Vec<TaskId>>,
+    admitted_at: Vec<Option<SimTime>>,
+    finished_at: Vec<Option<SimTime>>,
+    /// Arrived instances waiting for an admission slot (FIFO).
+    waiting: VecDeque<u32>,
+    /// Instances admitted but not yet finished.
+    in_flight: usize,
+    /// Admission-control cap on concurrently running instances.
+    max_in_flight: Option<usize>,
 }
 
 struct World {
@@ -196,6 +231,12 @@ struct World {
     /// replicas::<pool> gauge per PoolId.
     g_replicas: Vec<GaugeId>,
     rng: crate::util::rng::Rng,
+    // -- fleet service (None for classic single-workflow runs) ----------
+    fleet: Option<FleetState>,
+    /// Instance index of each task (fleet runs; empty otherwise).
+    task_instance: Vec<u32>,
+    /// Tenant lane of each task (fleet runs; empty = all tenant 0).
+    task_tenant: Vec<u16>,
     // -- reusable scratch buffers (zero steady-state allocation, §Perf) --
     /// Newly-ready tasks from `Engine::complete_into`.
     ready_buf: Vec<TaskId>,
@@ -410,13 +451,19 @@ impl World {
                 PodWork::Pool(pool) => {
                     // the unacked delivery is redelivered to the queue
                     if let Some(task) = in_flight {
-                        self.broker.nack_requeue(pool, task);
+                        self.broker.nack_requeue(pool, task, self.tenant_of(task));
                         self.wake_idle_worker(pool);
                     }
                 }
             }
         }
         self.members_buf = victims;
+    }
+
+    /// Tenant lane of a task: its instance's tenant in fleet runs, the
+    /// default lane otherwise.
+    fn tenant_of(&self, t: TaskId) -> TenantId {
+        TenantId(self.task_tenant.get(t.0 as usize).copied().unwrap_or(0))
     }
 
     /// Route newly-ready tasks to the execution model.
@@ -427,7 +474,7 @@ impl World {
             self.trace.ready(t, self.engine.dag().type_name(t), now);
             match self.pool_of_type[ttype.0 as usize] {
                 Some(pool) => {
-                    self.broker.publish(pool, t);
+                    self.broker.publish_for(pool, t, self.tenant_of(t));
                     self.record_queue_depth(pool);
                     self.wake_idle_worker(pool);
                 }
@@ -502,6 +549,65 @@ impl World {
         // freed resources: pods in the *active* queue can retry now; pods in
         // back-off keep sleeping (the paper's §4.2/4.3 pathology).
         self.run_scheduler();
+    }
+
+    // ---------------------------------------------------------------
+    // fleet service: instance arrival / admission / completion
+    // ---------------------------------------------------------------
+
+    /// An instance arrives (open-loop): admit immediately if a slot is
+    /// free, otherwise join the admission queue (FIFO).
+    fn instance_arrive(&mut self, inst: usize) {
+        let admit = {
+            let fs = self.fleet.as_mut().expect("fleet mode");
+            match fs.max_in_flight {
+                Some(cap) if fs.in_flight >= cap => {
+                    fs.waiting.push_back(inst as u32);
+                    false
+                }
+                _ => true,
+            }
+        };
+        if admit {
+            self.admit_instance(inst);
+        }
+    }
+
+    /// Admit an instance: dispatch its root tasks into the shared cluster.
+    fn admit_instance(&mut self, inst: usize) {
+        let now = self.now();
+        let roots = {
+            let fs = self.fleet.as_mut().expect("fleet mode");
+            fs.in_flight += 1;
+            debug_assert!(fs.admitted_at[inst].is_none(), "double admission");
+            fs.admitted_at[inst] = Some(now);
+            std::mem::take(&mut fs.roots[inst])
+        };
+        self.metrics.inc("instances_admitted", 1);
+        self.dispatch_ready(&roots);
+    }
+
+    /// Per-instance completion bookkeeping after a task finished; frees an
+    /// admission slot (and admits the next waiting instance) when the
+    /// task was its instance's last.
+    fn instance_task_done(&mut self, task: TaskId) {
+        let now = self.now();
+        let inst = self.task_instance[task.0 as usize] as usize;
+        let next = {
+            let fs = self.fleet.as_mut().expect("fleet mode");
+            debug_assert!(fs.outstanding[inst] > 0);
+            fs.outstanding[inst] -= 1;
+            if fs.outstanding[inst] > 0 {
+                return;
+            }
+            fs.finished_at[inst] = Some(now);
+            fs.in_flight -= 1;
+            fs.waiting.pop_front()
+        };
+        self.metrics.inc("instances_completed", 1);
+        if let Some(next) = next {
+            self.admit_instance(next as usize);
+        }
     }
 
     // ---------------------------------------------------------------
@@ -707,7 +813,7 @@ impl World {
                     // worker deleted between fetch and start: requeue on
                     // the pod's own pool (its payload outlives deletion)
                     if let Some(pool) = self.pods[pod.0 as usize].pool_id() {
-                        self.broker.nack_requeue(pool, task);
+                        self.broker.nack_requeue(pool, task, self.tenant_of(task));
                         self.wake_idle_worker(pool);
                     }
                     return;
@@ -732,6 +838,10 @@ impl World {
                 self.engine.complete_into(task, &mut ready);
                 self.dispatch_ready(&ready);
                 self.ready_buf = ready;
+                // fleet: per-instance completion + admission-slot release
+                if self.fleet.is_some() {
+                    self.instance_task_done(task);
+                }
                 // advance the pod
                 match self.pods[pod.0 as usize].pool_id() {
                     None => {
@@ -774,6 +884,9 @@ impl World {
                     self.fail_node(node);
                 }
             }
+            Ev::InstanceArrive { inst } => {
+                self.instance_arrive(inst as usize);
+            }
             Ev::AutoscaleTick => {
                 self.autoscale();
                 if !self.engine.is_done() {
@@ -790,12 +903,14 @@ impl World {
     }
 }
 
-/// Run a workflow under an execution model on the simulated cluster.
-pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
-    let model_name = model.name().to_string();
+/// Construct the simulated world (cluster, control plane, pools, gauges)
+/// for a workflow + execution model, returning the initially-ready tasks
+/// for the caller to dispatch — at t=0 ([`run`]) or per instance arrival
+/// ([`run_fleet`]).
+fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
     let (engine, initial_ready) = Engine::new(dag);
 
-    let batcher = match &model {
+    let batcher = match model {
         ExecModel::Clustered(c) => Batcher::new(c.clone()),
         _ => Batcher::new(ClusteringConfig::none()),
     };
@@ -818,7 +933,7 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
     let mut pool_type: Vec<Option<TypeId>> = Vec::new();
     let mut pool_of_type: Vec<Option<PoolId>> = vec![None; n_types];
     let mut specs: Vec<PoolSpec> = Vec::new();
-    match &model {
+    match model {
         ExecModel::WorkerPools { pooled_types } => {
             for t in pooled_types {
                 let ty = engine
@@ -896,6 +1011,9 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
         running_tasks: 0,
         pending_count: 0,
         completed_by_type: vec![0; n_types],
+        fleet: None,
+        task_instance: Vec::new(),
+        task_tenant: Vec::new(),
         g_running,
         g_cpu,
         g_pending,
@@ -925,14 +1043,12 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
             .schedule_at(SimTime::from_millis(at_ms), Ev::NodeEvent { node, up });
     }
     world.cfg.node_events = node_events;
-    world.dispatch_ready(&initial_ready);
-    if world.scaler.is_some() {
-        // first poll fires quickly so pools can start warming up
-        world
-            .q
-            .schedule_in(SimTime::from_millis(1_000), Ev::AutoscaleTick);
-    }
+    (world, initial_ready)
+}
 
+/// Pump the event loop until every workflow task completed (or the wall
+/// cap fires); returns the makespan and the processed event count.
+fn drive(world: &mut World) -> (SimTime, u64) {
     let max_ms = (world.cfg.max_sim_s * 1000.0) as u64;
     let mut makespan = SimTime::ZERO;
     let mut sim_events: u64 = 0;
@@ -957,8 +1073,11 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
         world.engine.n_outstanding(),
         world.engine.dag().len()
     );
+    (makespan, sim_events)
+}
 
-    // summary metrics
+/// Fold the finished world into a [`SimResult`].
+fn summarize(world: World, model_name: String, makespan: SimTime, sim_events: u64) -> SimResult {
     let t_end = makespan.as_secs_f64();
     let avg_running = world
         .metrics
@@ -985,6 +1104,118 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
         trace: world.trace,
         metrics: world.metrics,
     }
+}
+
+/// Run a workflow under an execution model on the simulated cluster.
+pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
+    let model_name = model.name().to_string();
+    let (mut world, initial_ready) = build(dag, &model, cfg);
+    world.dispatch_ready(&initial_ready);
+    if world.scaler.is_some() {
+        // first poll fires quickly so pools can start warming up
+        world
+            .q
+            .schedule_in(SimTime::from_millis(1_000), Ev::AutoscaleTick);
+    }
+    let (makespan, sim_events) = drive(&mut world);
+    summarize(world, model_name, makespan, sim_events)
+}
+
+/// Run an open-loop fleet of workflow instances on one shared cluster.
+///
+/// `dag` is the [`Dag::disjoint_union`] of every instance; `plan` maps
+/// each instance to its contiguous task range, tenant, and arrival time,
+/// and carries the tenant fair-share weights plus the admission cap. Each
+/// instance's root tasks are dispatched when the instance is *admitted*
+/// (at arrival, or when a slot frees under the cap); everything downstream
+/// — readiness, batching, pools, autoscaling — is the single-run
+/// machinery operating on the aggregate workload. Returns the overall
+/// [`SimResult`] plus one [`InstanceOutcome`] per instance (same order as
+/// `plan.instances`), from which per-tenant SLO statistics are derived by
+/// [`crate::fleet::report`].
+pub fn run_fleet(
+    dag: Dag,
+    model: ExecModel,
+    cfg: SimConfig,
+    plan: &FleetPlan,
+) -> (SimResult, Vec<InstanceOutcome>) {
+    let model_name = format!("fleet/{}", model.name());
+    let n_tasks = dag.len();
+    // validate the plan: contiguous instance ranges covering the union DAG
+    assert!(!plan.tenant_weights.is_empty(), "at least one tenant");
+    assert!(
+        plan.max_in_flight != Some(0),
+        "admission cap of 0 would never admit an instance"
+    );
+    let mut expect = 0u32;
+    for s in &plan.instances {
+        assert_eq!(s.first_task, expect, "instance ranges must be contiguous");
+        assert!(s.n_tasks > 0, "empty workflow instance");
+        assert!(
+            (s.tenant as usize) < plan.tenant_weights.len(),
+            "instance tenant {} has no weight entry",
+            s.tenant
+        );
+        expect += s.n_tasks;
+    }
+    assert_eq!(expect as usize, n_tasks, "instance ranges must cover the DAG");
+
+    let (mut world, initial_ready) = build(dag, &model, cfg);
+    world.broker.set_tenant_weights(&plan.tenant_weights);
+
+    // per-task instance/tenant tables (the disjoint-union offset scheme)
+    let mut task_instance = vec![0u32; n_tasks];
+    let mut task_tenant = vec![0u16; n_tasks];
+    for (i, s) in plan.instances.iter().enumerate() {
+        let range = s.first_task as usize..(s.first_task + s.n_tasks) as usize;
+        task_instance[range.clone()].fill(i as u32);
+        task_tenant[range].fill(s.tenant);
+    }
+    // hold each instance's roots back until it is admitted
+    let mut roots: Vec<Vec<TaskId>> = vec![Vec::new(); plan.instances.len()];
+    for &t in &initial_ready {
+        roots[task_instance[t.0 as usize] as usize].push(t);
+    }
+    world.task_instance = task_instance;
+    world.task_tenant = task_tenant;
+    world.fleet = Some(FleetState {
+        outstanding: plan.instances.iter().map(|s| s.n_tasks).collect(),
+        roots,
+        admitted_at: vec![None; plan.instances.len()],
+        finished_at: vec![None; plan.instances.len()],
+        waiting: VecDeque::new(),
+        in_flight: 0,
+        max_in_flight: plan.max_in_flight,
+    });
+    for (i, s) in plan.instances.iter().enumerate() {
+        world.q.schedule_at(
+            SimTime::from_millis(s.arrival_ms),
+            Ev::InstanceArrive { inst: i as u32 },
+        );
+    }
+    if world.scaler.is_some() {
+        world
+            .q
+            .schedule_in(SimTime::from_millis(1_000), Ev::AutoscaleTick);
+    }
+
+    let (makespan, sim_events) = drive(&mut world);
+
+    let fs = world.fleet.take().expect("fleet state");
+    debug_assert!(fs.waiting.is_empty() && fs.in_flight == 0);
+    let outcomes = plan
+        .instances
+        .iter()
+        .enumerate()
+        .map(|(i, s)| InstanceOutcome {
+            tenant: s.tenant,
+            arrival: SimTime::from_millis(s.arrival_ms),
+            admitted: fs.admitted_at[i].expect("instance never admitted"),
+            finished: fs.finished_at[i].expect("instance never finished"),
+            n_tasks: s.n_tasks,
+        })
+        .collect();
+    (summarize(world, model_name, makespan, sim_events), outcomes)
 }
 
 #[cfg(test)]
@@ -1224,6 +1455,96 @@ mod tests {
             for r in &res.trace.records {
                 assert!(r.finished_at.is_some(), "{:?} lost", r.task);
             }
+        }
+    }
+
+    fn two_instance_plan(n_a: u32, n_b: u32, arrival_b_ms: u64, cap: Option<usize>) -> FleetPlan {
+        FleetPlan {
+            instances: vec![
+                crate::fleet::InstanceSpec {
+                    tenant: 0,
+                    arrival_ms: 0,
+                    first_task: 0,
+                    n_tasks: n_a,
+                },
+                crate::fleet::InstanceSpec {
+                    tenant: 1,
+                    arrival_ms: arrival_b_ms,
+                    first_task: n_a,
+                    n_tasks: n_b,
+                },
+            ],
+            tenant_weights: vec![1, 1],
+            max_in_flight: cap,
+        }
+    }
+
+    #[test]
+    fn fleet_two_instances_complete_concurrently() {
+        let (a, b) = (small_dag(), small_dag());
+        let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+        let union = Dag::disjoint_union(&[a, b]);
+        let plan = two_instance_plan(n_a, n_b, 30_000, None);
+        let (res, outcomes) = run_fleet(
+            union,
+            ExecModel::paper_hybrid_pools(),
+            SimConfig::with_nodes(4),
+            &plan,
+        );
+        assert_eq!(res.trace.records.len(), (n_a + n_b) as usize);
+        assert_eq!(outcomes.len(), 2);
+        for o in &outcomes {
+            assert!(o.admitted >= o.arrival, "admitted before arrival");
+            assert!(o.finished > o.admitted, "finished before admitted");
+        }
+        // no cap: admission is immediate at arrival
+        assert_eq!(outcomes[0].admitted, SimTime::ZERO);
+        assert_eq!(outcomes[1].admitted, SimTime::from_millis(30_000));
+        // the second instance overlaps the first (shared cluster, not serial)
+        assert!(outcomes[1].admitted < outcomes[0].finished);
+    }
+
+    #[test]
+    fn fleet_admission_cap_serializes_instances() {
+        let (a, b) = (small_dag(), small_dag());
+        let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+        let union = Dag::disjoint_union(&[a, b]);
+        let plan = two_instance_plan(n_a, n_b, 30_000, Some(1));
+        let (res, outcomes) = run_fleet(
+            union,
+            ExecModel::paper_hybrid_pools(),
+            SimConfig::with_nodes(4),
+            &plan,
+        );
+        assert_eq!(res.trace.records.len(), (n_a + n_b) as usize);
+        // cap 1: the second instance waits for the first to finish
+        assert!(outcomes[1].admitted >= outcomes[0].finished);
+        assert!(outcomes[1].admitted > outcomes[1].arrival, "queued at the cap");
+        assert_eq!(res.metrics.counter("instances_admitted"), 2);
+        assert_eq!(res.metrics.counter("instances_completed"), 2);
+    }
+
+    #[test]
+    fn fleet_works_under_every_model() {
+        for model in [
+            ExecModel::JobBased,
+            ExecModel::Clustered(ClusteringConfig::paper_default()),
+            ExecModel::paper_hybrid_pools(),
+            ExecModel::GenericPool,
+        ] {
+            let (a, b) = (small_dag(), small_dag());
+            let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+            let union = Dag::disjoint_union(&[a, b]);
+            let plan = two_instance_plan(n_a, n_b, 10_000, None);
+            let (res, outcomes) =
+                run_fleet(union, model.clone(), SimConfig::with_nodes(4), &plan);
+            assert_eq!(
+                res.trace.records.len(),
+                (n_a + n_b) as usize,
+                "{}",
+                model.name()
+            );
+            assert!(outcomes.iter().all(|o| o.finished > o.admitted));
         }
     }
 

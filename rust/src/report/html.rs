@@ -74,15 +74,16 @@ pub fn render(res: &SimResult) -> String {
     body.push_str(
         "<h2>task wait times (ready &rarr; started)</h2>\
          <table class='data'><tr><th>type</th><th>n</th><th>mean s</th>\
-         <th>p50 s</th><th>p95 s</th><th>max s</th></tr>",
+         <th>p50 s</th><th>p95 s</th><th>p99 s</th><th>max s</th></tr>",
     );
     for (ty, s) in res.trace.wait_times_by_type() {
         body.push_str(&format!(
-            "<tr><td>{ty}</td><td>{}</td><td>{:.1}</td><td>{:.1}</td><td>{:.1}</td><td>{:.1}</td></tr>",
+            "<tr><td>{ty}</td><td>{}</td><td>{:.1}</td><td>{:.1}</td><td>{:.1}</td><td>{:.1}</td><td>{:.1}</td></tr>",
             s.len(),
             s.mean(),
             s.median(),
             s.percentile(95.0),
+            s.percentile(99.0),
             s.max()
         ));
     }
@@ -124,5 +125,6 @@ mod tests {
         assert!(html.contains("<svg"));
         assert!(html.contains("queue depth — mProject"));
         assert!(html.contains("task wait times"));
+        assert!(html.contains("<th>p99 s</th>"), "tail-latency column");
     }
 }

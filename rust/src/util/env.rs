@@ -1,0 +1,40 @@
+//! Environment-variable knobs for the bench harnesses (criterion is not
+//! in the offline crate set, so benches are plain mains configured via
+//! `HF_*` variables — see `.github/workflows/ci.yml` for the reduced CI
+//! configurations). Malformed values fall back to the default, matching
+//! `util::cli::Args` semantics.
+
+/// Read `key` as a usize, falling back to `default` when unset/malformed.
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Read `key` as an f64, falling back to `default` when unset/malformed.
+pub fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_unset_or_malformed() {
+        assert_eq!(env_usize("HF_TEST_SURELY_UNSET_USIZE", 7), 7);
+        assert_eq!(env_f64("HF_TEST_SURELY_UNSET_F64", 1.5), 1.5);
+        std::env::set_var("HF_TEST_MALFORMED", "not-a-number");
+        assert_eq!(env_usize("HF_TEST_MALFORMED", 3), 3);
+        assert_eq!(env_f64("HF_TEST_MALFORMED", 2.5), 2.5);
+        std::env::set_var("HF_TEST_SET", "12");
+        assert_eq!(env_usize("HF_TEST_SET", 0), 12);
+        assert_eq!(env_f64("HF_TEST_SET", 0.0), 12.0);
+        std::env::remove_var("HF_TEST_MALFORMED");
+        std::env::remove_var("HF_TEST_SET");
+    }
+}

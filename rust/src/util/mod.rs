@@ -4,6 +4,7 @@
 
 pub mod ascii_plot;
 pub mod cli;
+pub mod env;
 pub mod svg;
 pub mod json;
 pub mod logger;

@@ -136,6 +136,27 @@ mod tests {
     }
 
     #[test]
+    fn percentile_99_on_known_distribution() {
+        // 101 samples 0..=100: pN lands exactly on sample index N (rank =
+        // N/100 * 100), so every percentile equals its own value — the
+        // reference case for the p99 column in the HTML report and the
+        // fleet SLO tables.
+        let mut s = Summary::new();
+        for v in 0..=100 {
+            s.add(v as f64);
+        }
+        assert!((s.percentile(99.0) - 99.0).abs() < 1e-9);
+        assert!((s.percentile(95.0) - 95.0).abs() < 1e-9);
+        assert!((s.percentile(50.0) - 50.0).abs() < 1e-9);
+        // between-sample interpolation: p99 of 0..=9 sits between 8 and 9
+        let mut t = Summary::new();
+        for v in 0..=9 {
+            t.add(v as f64);
+        }
+        assert!((t.percentile(99.0) - 8.91).abs() < 1e-9);
+    }
+
+    #[test]
     fn stddev_known() {
         let s = filled();
         assert!((s.stddev() - (2.5f64).sqrt()).abs() < 1e-12);

@@ -147,6 +147,67 @@ impl Dag {
         best
     }
 
+    /// Disjoint union of independent workflow instances: tasks of instance
+    /// `i` are appended after all tasks of instances `0..i`, with edges
+    /// offset accordingly, so the result is one DAG whose connected
+    /// components are the inputs ("multiple instances of different
+    /// workflows can intertwine", §3.4). Task types are merged **by name**
+    /// through a map built once per instance — not the per-task linear
+    /// scan over `types` that [`Dag::add_type`] would repeat — so unioning
+    /// a fleet of hundreds of instances stays linear in total task count.
+    ///
+    /// The instance occupying tasks `[base, base + inst.len())` keeps its
+    /// internal ids shifted by `base` (= sum of earlier instance lengths),
+    /// which is the offset scheme the fleet service uses to map a task
+    /// back to its workflow instance and tenant.
+    pub fn disjoint_union(instances: &[Dag]) -> Dag {
+        let mut out = Dag::new(&format!("union-{}", instances.len()));
+        let mut by_name: BTreeMap<String, TypeId> = BTreeMap::new();
+        let mut deps: Vec<Vec<TaskId>> = Vec::new();
+        for inst in instances {
+            // local type index -> TypeId in the union, resolved by name;
+            // a name collision must carry the same definition, or the
+            // simulation would silently run later instances with the first
+            // instance's resources/durations
+            let tmap: Vec<TypeId> = inst
+                .types
+                .iter()
+                .map(|t| match by_name.get(&t.name) {
+                    Some(&id) => {
+                        let seen = &out.types[id.0 as usize];
+                        assert!(
+                            seen.requests == t.requests
+                                && seen.cpu_used_m == t.cpu_used_m
+                                && seen.median_secs == t.median_secs
+                                && seen.sigma == t.sigma,
+                            "disjoint_union: conflicting definitions of task type '{}'",
+                            t.name
+                        );
+                        id
+                    }
+                    None => {
+                        let id = out.add_type(t.clone());
+                        by_name.insert(t.name.clone(), id);
+                        id
+                    }
+                })
+                .collect();
+            let base = out.len() as u32;
+            // invert successor lists into (offset) dependency lists
+            deps.clear();
+            deps.resize(inst.len(), Vec::new());
+            for p in 0..inst.len() as u32 {
+                for s in inst.successors(TaskId(p)) {
+                    deps[s.0 as usize].push(TaskId(p + base));
+                }
+            }
+            for t in &inst.tasks {
+                out.add_task(tmap[t.ttype.0 as usize], t.duration, &deps[t.id.0 as usize]);
+            }
+        }
+        out
+    }
+
     /// Validate structural invariants (used by property tests).
     pub fn validate(&self) -> Result<(), String> {
         if self.succs.len() != self.tasks.len() || self.preds.len() != self.tasks.len() {
@@ -235,5 +296,83 @@ mod tests {
     #[test]
     fn validate_ok() {
         assert!(tiny().validate().is_ok());
+    }
+
+    fn diamond() -> Dag {
+        // a -> {b, c} -> d
+        let mut d = Dag::new("diamond");
+        let ty = d.add_type(TaskType::new("T", Resources::ZERO, 1.0, 0.0));
+        let a = d.add_task(ty, SimTime(1), &[]);
+        let b = d.add_task(ty, SimTime(2), &[a]);
+        let c = d.add_task(ty, SimTime(3), &[a]);
+        let _d = d.add_task(ty, SimTime(4), &[b, c]);
+        d
+    }
+
+    #[test]
+    fn disjoint_union_inverts_edges_on_diamond() {
+        let u = Dag::disjoint_union(&[diamond(), diamond()]);
+        assert_eq!(u.len(), 8);
+        assert!(u.validate().is_ok());
+        // both copies keep the diamond shape at their offset
+        for base in [0u32, 4u32] {
+            assert_eq!(
+                u.successors(TaskId(base)),
+                &[TaskId(base + 1), TaskId(base + 2)]
+            );
+            assert_eq!(u.successors(TaskId(base + 1)), &[TaskId(base + 3)]);
+            assert_eq!(u.successors(TaskId(base + 2)), &[TaskId(base + 3)]);
+            assert_eq!(u.preds_count(TaskId(base)), 0);
+            assert_eq!(u.preds_count(TaskId(base + 3)), 2);
+        }
+        // no cross-instance edges: exactly the two roots
+        assert_eq!(u.roots(), vec![TaskId(0), TaskId(4)]);
+        // same-named types merged into one table entry
+        assert_eq!(u.types.len(), 1);
+        // durations carried over per copy
+        assert_eq!(u.tasks[3].duration, SimTime(4));
+        assert_eq!(u.tasks[7].duration, SimTime(4));
+    }
+
+    #[test]
+    fn disjoint_union_merges_type_tables_by_name() {
+        let mut x = Dag::new("x");
+        let a = x.add_type(TaskType::new("A", Resources::ZERO, 1.0, 0.0));
+        x.add_task(a, SimTime(1), &[]);
+        let mut y = Dag::new("y");
+        let b = y.add_type(TaskType::new("B", Resources::ZERO, 1.0, 0.0));
+        let a2 = y.add_type(TaskType::new("A", Resources::ZERO, 1.0, 0.0));
+        let t0 = y.add_task(b, SimTime(1), &[]);
+        y.add_task(a2, SimTime(1), &[t0]);
+        let u = Dag::disjoint_union(&[x, y]);
+        assert_eq!(u.types.len(), 2, "A is shared, B is new");
+        assert_eq!(u.type_name(TaskId(0)), "A");
+        assert_eq!(u.type_name(TaskId(1)), "B");
+        assert_eq!(u.type_name(TaskId(2)), "A");
+        assert_eq!(u.successors(TaskId(1)), &[TaskId(2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "conflicting definitions of task type 'A'")]
+    fn disjoint_union_rejects_conflicting_type_definitions() {
+        let mut x = Dag::new("x");
+        let a = x.add_type(TaskType::new("A", Resources::new(1000, 1024), 1.0, 0.0));
+        x.add_task(a, SimTime(1), &[]);
+        let mut y = Dag::new("y");
+        let a2 = y.add_type(TaskType::new("A", Resources::new(4000, 1024), 1.0, 0.0));
+        y.add_task(a2, SimTime(1), &[]);
+        Dag::disjoint_union(&[x, y]);
+    }
+
+    #[test]
+    fn disjoint_union_of_one_is_a_copy() {
+        let u = Dag::disjoint_union(&[tiny()]);
+        let t = tiny();
+        assert_eq!(u.len(), t.len());
+        for i in 0..t.len() as u32 {
+            assert_eq!(u.successors(TaskId(i)), t.successors(TaskId(i)));
+            assert_eq!(u.preds_count(TaskId(i)), t.preds_count(TaskId(i)));
+        }
+        assert!(Dag::disjoint_union(&[]).is_empty());
     }
 }

@@ -6,6 +6,8 @@
 //! — for every execution model.
 
 use hyperflow_k8s::engine::clustering::ClusteringConfig;
+use hyperflow_k8s::fleet::{self, ArrivalProcess, FleetConfig};
+use hyperflow_k8s::models::multicloud::{self, McConfig, McMode};
 use hyperflow_k8s::models::{driver, ExecModel};
 use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
 
@@ -82,4 +84,59 @@ fn different_seed_changes_the_run() {
     let a = driver::run(montage(8, 42), ExecModel::JobBased, driver::SimConfig::with_nodes(5));
     let b = driver::run(montage(8, 43), ExecModel::JobBased, driver::SimConfig::with_nodes(5));
     assert_ne!(a.makespan, b.makespan, "distinct workloads, same makespan?");
+}
+
+/// The multicloud model must be deterministic too: a fixed-seed 2-cluster
+/// pools run reproduces its makespan, transfer count and per-cloud task
+/// placement bit-identically. (Cross-cloud transfer accounting depends on
+/// event order even more tightly than the single-cluster counters.)
+#[test]
+fn multicloud_pools_rerun_is_bit_identical() {
+    let mk = || {
+        multicloud::run(
+            montage(6, 11),
+            McConfig {
+                clusters: vec![3, 2],
+                mode: McMode::Pools,
+                ..Default::default()
+            },
+        )
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.makespan, b.makespan, "multicloud makespan");
+    assert_eq!(a.transfers, b.transfers, "cross-cloud transfer count");
+    assert_eq!(a.pods_created, b.pods_created, "multicloud pods");
+    assert_eq!(a.tasks_per_cloud, b.tasks_per_cloud, "task placement");
+    assert!(a.transfers > 0, "2-cluster split must pay transfers");
+}
+
+/// Fleet runs (open-loop arrivals, tenancy, fair-share lanes, admission
+/// control) must reproduce the per-tenant slowdown table from the seed —
+/// the acceptance contract of `hyperflow serve`.
+#[test]
+fn fleet_rerun_reproduces_the_slowdown_table() {
+    let mk = || {
+        let cfg = FleetConfig {
+            arrival: ArrivalProcess::Poisson { per_hour: 90.0 },
+            duration_s: 400.0,
+            tenants: fleet::default_tenants(2, &[3, 4]),
+            seed: 42,
+            max_in_flight: Some(3),
+        };
+        fleet::run(
+            ExecModel::paper_hybrid_pools(),
+            driver::SimConfig::with_nodes(4),
+            &cfg,
+        )
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.sim.makespan, b.sim.makespan, "fleet makespan");
+    assert_eq!(a.sim.sim_events, b.sim.sim_events, "fleet event count");
+    assert_eq!(
+        fleet::report::render_table(&a),
+        fleet::report::render_table(&b),
+        "per-tenant slowdown table diverged across reruns"
+    );
 }
