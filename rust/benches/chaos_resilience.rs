@@ -1,0 +1,137 @@
+//! Chaos resilience sweep: re-run the paper's model comparison under
+//! increasing spot-reclaim churn and record, per model per reclaim rate,
+//! the makespan inflation over the healthy baseline, the wasted-work
+//! fraction, goodput, and the recovery counters. This answers the question
+//! the paper leaves open: *which execution model degrades gracefully* when
+//! the cluster is preemptible (see EXPERIMENTS.md §"Resilience / chaos"
+//! for how to read the curves).
+//!
+//! Each sweep point runs with the chaos spec
+//! `spot:<R>,crash:<R/2>,pod:0.03,straggler:0.25` — the reclaim rate R is
+//! the swept variable; the fixed low-grade crash/pod/straggler background
+//! keeps the wasted-work accounting exercised even at reclaim rates whose
+//! two-minute drain warning lets most in-flight tasks finish.
+//!
+//! Results are written to `BENCH_chaos.json` (crate root, next to
+//! `BENCH_driver.json` and `BENCH_fleet.json`).
+//!
+//!   cargo bench --bench chaos_resilience
+//!
+//! CI runs a reduced grid: `HF_CHAOS_GRID=4 HF_CHAOS_RATES=2,4,8`.
+
+use hyperflow_k8s::chaos::ChaosConfig;
+use hyperflow_k8s::engine::clustering::ClusteringConfig;
+use hyperflow_k8s::models::{driver, ExecModel};
+use hyperflow_k8s::util::env::env_usize;
+use hyperflow_k8s::util::json::Json;
+use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
+
+fn main() {
+    let nodes = env_usize("HF_CHAOS_NODES", 4);
+    let grid = env_usize("HF_CHAOS_GRID", 6);
+    let seed: u64 = 42;
+    let rates: Vec<f64> = std::env::var("HF_CHAOS_RATES")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|r| r.trim().parse().expect("HF_CHAOS_RATES: numbers"))
+                .collect()
+        })
+        .unwrap_or_else(|| vec![1.0, 2.0, 4.0, 8.0]);
+
+    let models: Vec<(&str, ExecModel)> = vec![
+        ("job-based", ExecModel::JobBased),
+        (
+            "job-clustered",
+            ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ),
+        ("worker-pools", ExecModel::paper_hybrid_pools()),
+        ("generic-pool", ExecModel::GenericPool),
+    ];
+
+    let mk_dag = || {
+        generate(&MontageConfig {
+            grid_w: grid,
+            grid_h: grid,
+            diagonals: true,
+            seed,
+        })
+    };
+    let mk_cfg = |spec: Option<&str>| {
+        let mut cfg = driver::SimConfig::with_nodes(nodes);
+        cfg.seed = seed;
+        cfg.max_sim_s = 24.0 * 3600.0; // heavy churn can stretch far past 6h
+        if let Some(spec) = spec {
+            cfg.chaos = ChaosConfig::parse_spec(spec).expect("bench chaos spec");
+        }
+        cfg
+    };
+
+    println!(
+        "== chaos resilience sweep == ({nodes} nodes, montage {grid}x{grid}, \
+         reclaim rates {rates:?}/node/h, seed {seed})\n"
+    );
+    let mut model_rows: Vec<Json> = Vec::new();
+    for (name, model) in &models {
+        let baseline = driver::run(mk_dag(), model.clone(), mk_cfg(None));
+        let base_s = baseline.makespan.as_secs_f64();
+        println!("{name}: healthy makespan {base_s:.0}s");
+        let mut points: Vec<Json> = Vec::new();
+        for &rate in &rates {
+            let spec = format!("spot:{rate},crash:{},pod:0.03,straggler:0.25", rate / 2.0);
+            let res = driver::run(mk_dag(), model.clone(), mk_cfg(Some(&spec)));
+            let makespan_s = res.makespan.as_secs_f64();
+            let inflation = makespan_s / base_s;
+            let c = &res.chaos;
+            println!(
+                "  reclaim {rate:>5.1}/h: makespan {makespan_s:>7.0}s (x{inflation:>5.2})  \
+                 wasted {:>6.1}% goodput {:>5.1}%  faults {:>4} retries {:>4} spec {:>3}",
+                c.wasted_frac() * 100.0,
+                c.goodput() * 100.0,
+                c.faults_total(),
+                c.retries,
+                c.speculations,
+            );
+            points.push(Json::obj(vec![
+                ("reclaim_rate_per_node_per_hour", rate.into()),
+                ("chaos_spec", Json::str(&spec)),
+                ("makespan_s", makespan_s.into()),
+                ("makespan_inflation", inflation.into()),
+                ("wasted_work_frac", c.wasted_frac().into()),
+                ("goodput", c.goodput().into()),
+                ("wasted_ms", c.wasted_ms.into()),
+                ("useful_ms", c.useful_ms.into()),
+                ("faults_total", c.faults_total().into()),
+                ("spot_reclaims", c.spot_reclaims.into()),
+                ("node_crashes", c.node_crashes.into()),
+                ("pod_failures", c.pod_failures.into()),
+                ("retries", c.retries.into()),
+                ("speculations", c.speculations.into()),
+                ("recovery_p95_s", c.recovery_p95_s.into()),
+            ]));
+        }
+        println!();
+        model_rows.push(Json::obj(vec![
+            ("model", Json::str(name)),
+            ("baseline_makespan_s", base_s.into()),
+            ("points", Json::Arr(points)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("chaos_resilience")),
+        ("nodes", nodes.into()),
+        ("grid", grid.into()),
+        ("seed", seed.into()),
+        (
+            "reclaim_rates_per_node_per_hour",
+            Json::Arr(rates.iter().map(|&r| r.into()).collect()),
+        ),
+        ("models", Json::Arr(model_rows)),
+    ]);
+    let path = "BENCH_chaos.json";
+    match std::fs::write(path, out.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -103,6 +103,15 @@ impl Autoscaler {
         self.pools[pool].requests = requests;
     }
 
+    /// Chaos hook: re-budget the CPU quota to the cluster's *surviving*
+    /// capacity. When a spot node is reclaimed or crashes, the driver
+    /// shrinks the quota so the pools stop requesting replicas the
+    /// scheduler could never place (back-off storms on a shrunken
+    /// cluster); when replacement capacity arrives, the quota is restored.
+    pub fn set_quota(&mut self, quota_cpu_m: u64) {
+        self.cfg.quota_cpu_m = quota_cpu_m;
+    }
+
     /// Name-keyed variant of [`Autoscaler::set_pool_requests`] (cold path).
     pub fn update_pool_requests(&mut self, name: &str, requests: Resources) {
         if let Some(p) = self.pools.iter_mut().find(|p| p.name == name) {
@@ -401,6 +410,28 @@ mod tests {
         // name-keyed variant hits the same pool
         a.update_pool_requests("mDiffFit", Resources::new(500, 512));
         assert_eq!(a.allocate(&[0, 100]), before);
+    }
+
+    #[test]
+    fn quota_shrinks_and_restores_with_node_churn() {
+        // chaos: a reclaimed node takes its share of quota with it
+        let mut a = Autoscaler::new(
+            AutoscalerConfig {
+                quota_cpu_m: 8_000,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let healthy = a.allocate(&[100, 0]);
+        a.set_quota(4_000); // half the cluster reclaimed
+        let degraded = a.allocate(&[100, 0]);
+        assert!(
+            degraded[0] < healthy[0],
+            "degraded {degraded:?} vs healthy {healthy:?}"
+        );
+        assert!(degraded[0] * 1000 <= 4_000 + 1000, "respects the new quota");
+        a.set_quota(8_000); // replacement capacity arrived
+        assert_eq!(a.allocate(&[100, 0]), healthy);
     }
 
     #[test]

@@ -291,6 +291,20 @@ impl Broker {
         q.lanes[lane].push_front(task);
     }
 
+    /// Drop an unacked delivery without redelivering it (chaos recovery:
+    /// the consumer died and the *recovery policy* owns the message now —
+    /// it will be re-published after its retry back-off, so the broker
+    /// must not also requeue it).
+    pub fn nack_drop(&mut self, id: PoolId) {
+        let q = &mut self.queues[id.idx()];
+        assert!(
+            q.unacked > 0,
+            "nack_drop without outstanding delivery on '{}'",
+            self.names[id.idx()]
+        );
+        q.unacked -= 1;
+    }
+
     /// Total backlog across all queues (for reports).
     pub fn total_backlog(&self) -> usize {
         self.queues.iter().map(|q| q.backlog()).sum()
@@ -379,6 +393,34 @@ mod tests {
         b.fetch(q);
         b.ack(q);
         b.ack(q);
+    }
+
+    #[test]
+    fn nack_drop_consumes_the_delivery() {
+        let mut b = Broker::new();
+        let q = b.declare("q");
+        b.publish(q, TaskId(1));
+        b.publish(q, TaskId(2));
+        let t = b.fetch(q).unwrap();
+        assert_eq!(t, TaskId(1));
+        assert_eq!(b.queue(q).backlog(), 2);
+        b.nack_drop(q);
+        // the message is gone from the broker (the recovery policy will
+        // re-publish it later); only task 2 remains
+        assert_eq!(b.queue(q).backlog(), 1);
+        assert_eq!(b.queue(q).unacked(), 0);
+        assert_eq!(b.fetch(q), Some(TaskId(2)));
+        // re-publication is an ordinary publish
+        b.publish(q, TaskId(1));
+        assert_eq!(b.queue(q).depth(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "nack_drop without outstanding")]
+    fn nack_drop_without_delivery_panics() {
+        let mut b = Broker::new();
+        let q = b.declare("q");
+        b.nack_drop(q);
     }
 
     // -- multi-tenant fair-share coverage --------------------------------

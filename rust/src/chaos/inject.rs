@@ -1,0 +1,185 @@
+//! Fault injectors: seeded processes that decide *when* and *where*
+//! failures strike.
+//!
+//! Timed injectors (spot reclaim, node crash) are Poisson processes over
+//! the node population: the aggregate cluster rate is `per_node_per_hour x
+//! n_nodes`, inter-fault gaps are exponential, and the victim node is
+//! drawn uniformly. Each injector owns a forked [`Rng`] stream and samples
+//! lazily — the driver schedules the next fault event only when the
+//! previous one fires, so draws happen in deterministic event order and
+//! identical seed + spec reproduces the exact fault timeline.
+//!
+//! [`Injector::PodFailure`] and [`Injector::Straggler`] are not timed:
+//! pod failures are sampled at each container start, and straggler
+//! slowness is a per-node duration multiplier sampled at cluster build
+//! (and re-sampled when a reclaimed node's replacement arrives).
+
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// Spot reclaim warning: the cloud's "2-minute notice" (ISSUE/tentpole).
+pub const SPOT_WARNING_MS: u64 = 120_000;
+/// Time until replacement capacity for a reclaimed node is provisioned.
+pub const SPOT_REPLACE_MS: u64 = 180_000;
+/// Repair time for a crashed node.
+pub const CRASH_REPAIR_MS: u64 = 300_000;
+/// Default duration multiplier for straggler nodes.
+pub const STRAGGLER_FACTOR: f64 = 3.0;
+
+/// One fault source.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Injector {
+    /// A pod crashes at container start with probability `prob` (image
+    /// pull error, OOM on start, node flake). Generalizes the legacy
+    /// `sim.pod_failure_prob` knob.
+    PodFailure { prob: f64 },
+    /// Spot/preemptible reclaim: each node is reclaimed at
+    /// `per_node_per_hour` (Poisson). The node is cordoned and drained for
+    /// `warning_ms`, then goes down; replacement capacity arrives after
+    /// `replace_ms`.
+    SpotReclaim {
+        per_node_per_hour: f64,
+        warning_ms: u64,
+        replace_ms: u64,
+    },
+    /// Hard node crash: no warning; everything on the node dies. The node
+    /// is repaired after `repair_ms`.
+    NodeCrash {
+        per_node_per_hour: f64,
+        repair_ms: u64,
+    },
+    /// Straggler slowdown: `frac_nodes` of the cluster runs every task
+    /// `factor`x slower (degraded disk/net/noisy neighbor).
+    Straggler { frac_nodes: f64, factor: f64 },
+}
+
+impl Injector {
+    /// Whether this injector emits scheduled fault events (vs. being
+    /// sampled inline at pod start / cluster build).
+    pub fn is_timed(&self) -> bool {
+        matches!(
+            self,
+            Injector::SpotReclaim { .. } | Injector::NodeCrash { .. }
+        )
+    }
+
+    fn rate_per_node_per_hour(&self) -> f64 {
+        match self {
+            Injector::SpotReclaim {
+                per_node_per_hour, ..
+            }
+            | Injector::NodeCrash {
+                per_node_per_hour, ..
+            } => *per_node_per_hour,
+            _ => 0.0,
+        }
+    }
+}
+
+/// A timed injector bound to its private RNG stream.
+#[derive(Debug)]
+pub struct FaultProcess {
+    pub injector: Injector,
+    rng: Rng,
+}
+
+impl FaultProcess {
+    pub fn new(injector: Injector, rng: Rng) -> Self {
+        FaultProcess { injector, rng }
+    }
+
+    /// Sample the next fault of this process over `n_nodes` nodes:
+    /// `(delay from now, victim node index)`. `None` when the injector is
+    /// inert (rate 0 or not timed) — no event is ever scheduled for it.
+    pub fn next_fault(&mut self, n_nodes: usize) -> Option<(SimTime, usize)> {
+        let rate = self.injector.rate_per_node_per_hour();
+        if rate <= 0.0 || n_nodes == 0 {
+            return None;
+        }
+        let mean_ms = 3_600_000.0 / (rate * n_nodes as f64);
+        let delay = self.rng.exponential(mean_ms).round() as u64;
+        let victim = self.rng.below(n_nodes as u64) as usize;
+        Some((SimTime::from_millis(delay), victim))
+    }
+}
+
+/// Sample the per-node straggler slowdown table: `factor` with probability
+/// `frac`, else 1.0. One draw per node, in node order (deterministic).
+pub fn sample_node_slowdowns(n_nodes: usize, frac: f64, factor: f64, rng: &mut Rng) -> Vec<f64> {
+    (0..n_nodes)
+        .map(|_| if rng.f64() < frac { factor } else { 1.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_injectors_sample_deterministically() {
+        let inj = Injector::SpotReclaim {
+            per_node_per_hour: 1.0,
+            warning_ms: SPOT_WARNING_MS,
+            replace_ms: SPOT_REPLACE_MS,
+        };
+        let mut a = FaultProcess::new(inj.clone(), Rng::new(7));
+        let mut b = FaultProcess::new(inj, Rng::new(7));
+        for _ in 0..100 {
+            assert_eq!(a.next_fault(4), b.next_fault(4));
+        }
+    }
+
+    #[test]
+    fn fault_rate_scales_with_cluster_size() {
+        // 1/h/node over 4 nodes => mean gap ~15 min
+        let mut p = FaultProcess::new(
+            Injector::NodeCrash {
+                per_node_per_hour: 1.0,
+                repair_ms: CRASH_REPAIR_MS,
+            },
+            Rng::new(3),
+        );
+        let n = 20_000;
+        let mut sum_ms = 0u64;
+        for _ in 0..n {
+            let (d, victim) = p.next_fault(4).unwrap();
+            assert!(victim < 4);
+            sum_ms += d.as_millis();
+        }
+        let mean_min = sum_ms as f64 / n as f64 / 60_000.0;
+        assert!((mean_min - 15.0).abs() < 0.5, "mean gap {mean_min} min");
+    }
+
+    #[test]
+    fn inert_injectors_emit_nothing() {
+        let mut zero = FaultProcess::new(
+            Injector::SpotReclaim {
+                per_node_per_hour: 0.0,
+                warning_ms: 1,
+                replace_ms: 1,
+            },
+            Rng::new(1),
+        );
+        assert_eq!(zero.next_fault(4), None);
+        let mut untimed = FaultProcess::new(Injector::PodFailure { prob: 0.5 }, Rng::new(1));
+        assert_eq!(untimed.next_fault(4), None);
+        assert!(!Injector::PodFailure { prob: 0.5 }.is_timed());
+        assert!(Injector::NodeCrash {
+            per_node_per_hour: 1.0,
+            repair_ms: 1
+        }
+        .is_timed());
+    }
+
+    #[test]
+    fn straggler_table_matches_fraction() {
+        let mut rng = Rng::new(9);
+        let slow = sample_node_slowdowns(10_000, 0.25, 3.0, &mut rng);
+        let n_slow = slow.iter().filter(|&&f| f == 3.0).count();
+        assert!(slow.iter().all(|&f| f == 1.0 || f == 3.0));
+        assert!((2_200..2_800).contains(&n_slow), "{n_slow} slow of 10k");
+        // deterministic
+        let mut rng2 = Rng::new(9);
+        assert_eq!(slow, sample_node_slowdowns(10_000, 0.25, 3.0, &mut rng2));
+    }
+}

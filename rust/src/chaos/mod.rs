@@ -1,0 +1,199 @@
+//! Chaos engine: deterministic failure injection, recovery policies and
+//! resilience accounting for every execution model.
+//!
+//! The paper (§4) evaluates the job-based, clustered and worker-pool
+//! models on a *healthy* cluster, but the environments the models target —
+//! spot/preemptible node pools, autoscaled multi-tenant clusters — are
+//! defined by churn: reclaims with a two-minute warning, node crashes,
+//! flaky container starts, and stragglers (cf. KubeAdaptor's task
+//! rescheduling, arXiv:2207.01222, and preemptible capacity as the
+//! dominant cost lever in the Docker/K8s resource-management survey,
+//! arXiv:2010.10350). This module makes failure a first-class, seeded,
+//! *reproducible* input to the simulator:
+//!
+//! * [`inject`] — fault injectors: per-pod start failure (the successor of
+//!   the legacy `sim.pod_failure_prob` knob), spot reclaim with a drain
+//!   warning, whole-node crash, and per-node straggler slowdown. Timed
+//!   injectors are seeded Poisson processes driven off the calendar
+//!   [`crate::sim::EventQueue`], so identical seed + chaos spec gives a
+//!   bit-identical run — including under `run_fleet`.
+//! * [`recover`] — recovery policies, pluggable per
+//!   [`crate::models::ExecModel`]: retry with exponential back-off and a
+//!   delay cap, node blacklisting after K failures, checkpoint-restart
+//!   (a re-run resumes at a configurable fraction of the lost progress),
+//!   and speculative re-execution for straggling pool tasks.
+//! * [`report`] — resilience accounting: wasted work (compute-ms lost to
+//!   faults), retry counts, recovery-latency percentiles via
+//!   [`crate::util::stats::Summary`], and goodput — surfaced in the text,
+//!   JSON and HTML reports and, per tenant, in the fleet SLO table.
+//!
+//! The CLI spec grammar (`hyperflow run --chaos spot:0.1,straggler:0.25`)
+//! is parsed by [`ChaosConfig::parse_spec`]; `benches/chaos_resilience.rs`
+//! sweeps reclaim rates across all four models into `BENCH_chaos.json`.
+
+pub mod inject;
+pub mod recover;
+pub mod report;
+
+pub use inject::Injector;
+pub use recover::RecoveryPolicy;
+pub use report::{ChaosReport, ChaosStats};
+
+/// Complete chaos description for a run: which faults to inject and
+/// (optionally) how to recover from them. An empty injector list disables
+/// the subsystem entirely — the driver then schedules no chaos events and
+/// stays bit-identical with pre-chaos builds.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosConfig {
+    pub injectors: Vec<Injector>,
+    /// Recovery policy override; `None` selects
+    /// [`RecoveryPolicy::for_model`] defaults at build time.
+    pub recovery: Option<RecoveryPolicy>,
+}
+
+impl ChaosConfig {
+    /// Whether any fault source is configured.
+    pub fn is_enabled(&self) -> bool {
+        !self.injectors.is_empty()
+    }
+
+    /// Parse the CLI/JSON chaos spec: a comma-separated list of
+    /// `kind:value` entries.
+    ///
+    /// | kind        | value                         | injector |
+    /// |-------------|-------------------------------|----------|
+    /// | `pod`       | crash probability per start   | [`Injector::PodFailure`] |
+    /// | `spot`      | reclaims per node per hour    | [`Injector::SpotReclaim`] (2 min warning) |
+    /// | `crash`     | crashes per node per hour     | [`Injector::NodeCrash`] |
+    /// | `straggler` | fraction of nodes that are slow | [`Injector::Straggler`] (3x slowdown) |
+    ///
+    /// Example: `spot:0.2,crash:0.1,pod:0.02,straggler:0.25`.
+    pub fn parse_spec(spec: &str) -> Result<ChaosConfig, String> {
+        let mut cfg = ChaosConfig::default();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind, value) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("chaos entry '{entry}' is not kind:value"))?;
+            let v: f64 = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("chaos entry '{entry}': '{value}' is not a number"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("chaos entry '{entry}': value must be >= 0"));
+            }
+            let injector = match kind.trim() {
+                "pod" => {
+                    if v > 1.0 {
+                        return Err(format!("chaos entry '{entry}': probability must be <= 1"));
+                    }
+                    Injector::PodFailure { prob: v }
+                }
+                "spot" => Injector::SpotReclaim {
+                    per_node_per_hour: v,
+                    warning_ms: inject::SPOT_WARNING_MS,
+                    replace_ms: inject::SPOT_REPLACE_MS,
+                },
+                "crash" => Injector::NodeCrash {
+                    per_node_per_hour: v,
+                    repair_ms: inject::CRASH_REPAIR_MS,
+                },
+                "straggler" => {
+                    if v > 1.0 {
+                        return Err(format!("chaos entry '{entry}': fraction must be <= 1"));
+                    }
+                    Injector::Straggler {
+                        frac_nodes: v,
+                        factor: inject::STRAGGLER_FACTOR,
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "unknown chaos injector '{other}' (expected pod, spot, crash, straggler)"
+                    ))
+                }
+            };
+            cfg.injectors.push(injector);
+        }
+        Ok(cfg)
+    }
+
+    /// Combined per-start crash probability over every
+    /// [`Injector::PodFailure`] entry (independent sources compose as
+    /// `1 - prod(1 - p)`).
+    pub fn pod_failure_prob(&self) -> f64 {
+        let survive: f64 = self
+            .injectors
+            .iter()
+            .filter_map(|i| match i {
+                Injector::PodFailure { prob } => Some(1.0 - prob),
+                _ => None,
+            })
+            .product();
+        1.0 - survive
+    }
+
+    /// The straggler injector's `(fraction, factor)`, if configured.
+    pub fn straggler(&self) -> Option<(f64, f64)> {
+        self.injectors.iter().find_map(|i| match i {
+            Injector::Straggler { frac_nodes, factor } => Some((*frac_nodes, *factor)),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let c = ChaosConfig::parse_spec("spot:0.2,crash:0.1,pod:0.02,straggler:0.25").unwrap();
+        assert_eq!(c.injectors.len(), 4);
+        assert!(c.is_enabled());
+        assert!((c.pod_failure_prob() - 0.02).abs() < 1e-12);
+        assert_eq!(c.straggler(), Some((0.25, inject::STRAGGLER_FACTOR)));
+        match &c.injectors[0] {
+            Injector::SpotReclaim {
+                per_node_per_hour,
+                warning_ms,
+                ..
+            } => {
+                assert!((per_node_per_hour - 0.2).abs() < 1e-12);
+                assert_eq!(*warning_ms, 120_000, "the ISSUE's 2-minute warning");
+            }
+            other => panic!("expected spot injector, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_disabled() {
+        let c = ChaosConfig::parse_spec("").unwrap();
+        assert!(!c.is_enabled());
+        assert_eq!(c.pod_failure_prob(), 0.0);
+        assert_eq!(c.straggler(), None);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "spot",           // no value
+            "spot:x",         // not a number
+            "spot:-1",        // negative
+            "pod:1.5",        // probability > 1
+            "straggler:2",    // fraction > 1
+            "meteor:0.5",     // unknown kind
+        ] {
+            assert!(ChaosConfig::parse_spec(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn pod_failure_probs_compose() {
+        let c = ChaosConfig::parse_spec("pod:0.5,pod:0.5").unwrap();
+        assert!((c.pod_failure_prob() - 0.75).abs() < 1e-12);
+    }
+}

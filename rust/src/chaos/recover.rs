@@ -1,0 +1,119 @@
+//! Recovery policies: what the platform does *after* a fault, pluggable
+//! per execution model.
+//!
+//! Four mechanisms (all knobs on one [`RecoveryPolicy`]):
+//!
+//! * **retry with exponential back-off + cap** — a task (or job batch)
+//!   lost to a fault is re-dispatched after `initial x factor^attempt`
+//!   milliseconds, capped at `retry_max_ms`; tasks always retry until they
+//!   complete (the workflow contract), only the *delay* is capped.
+//! * **node blacklisting** — after `blacklist_after` pod-start failures on
+//!   one node, the node is cordoned for `blacklist_ms` (blacklist-aware
+//!   placement: the scheduler skips cordoned nodes).
+//! * **checkpoint-restart** — a re-run resumes at `checkpoint_frac` of the
+//!   work the failed run had completed, so only `1 - checkpoint_frac` of
+//!   the elapsed compute is wasted.
+//! * **speculative re-execution** — a pool task still running after
+//!   `spec_factor x` its nominal duration (a straggler) gets a second,
+//!   concurrently-executing copy; the first completion wins and the loser
+//!   is dropped as stale. At most one copy per task. Pool models only —
+//!   job batches execute inside a single pod and cannot be split.
+
+use crate::models::ExecModel;
+use crate::sim::SimTime;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryPolicy {
+    /// First retry delay after a fault (ms).
+    pub retry_initial_ms: u64,
+    /// Back-off multiplier per attempt.
+    pub retry_factor: f64,
+    /// Cap on the retry delay (ms) — retries themselves are unlimited.
+    pub retry_max_ms: u64,
+    /// Pod-start failures on one node before it is blacklisted (0 = off).
+    pub blacklist_after: u32,
+    /// How long a blacklisted node stays cordoned (ms).
+    pub blacklist_ms: u64,
+    /// Fraction of a failed run's completed work restored on re-run
+    /// (0.0 = restart from scratch, 1.0 = perfect checkpointing).
+    pub checkpoint_frac: f64,
+    /// Drain worker pods during a spot-reclaim warning (graceful: finish
+    /// the current task, take no new work). Without it workers keep
+    /// consuming until the node dies.
+    pub drain_on_warning: bool,
+    /// Launch speculative copies of straggling pool tasks.
+    pub speculative: bool,
+    /// Straggler threshold: speculate once a task has run for
+    /// `spec_factor x` its nominal duration.
+    pub spec_factor: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            retry_initial_ms: 1_000,
+            retry_factor: 2.0,
+            retry_max_ms: 60_000,
+            blacklist_after: 3,
+            blacklist_ms: 120_000,
+            checkpoint_frac: 0.5,
+            drain_on_warning: true,
+            speculative: false,
+            spec_factor: 2.0,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// Model-specific defaults: pool models add speculative re-execution
+    /// (a queue consumer can be duplicated); job models cannot — their
+    /// unit of execution is the whole pod — so they lean on
+    /// checkpoint-restart and retry alone.
+    pub fn for_model(model: &ExecModel) -> Self {
+        match model {
+            ExecModel::JobBased | ExecModel::Clustered(_) => RecoveryPolicy::default(),
+            ExecModel::WorkerPools { .. } | ExecModel::GenericPool => RecoveryPolicy {
+                speculative: true,
+                ..RecoveryPolicy::default()
+            },
+        }
+    }
+
+    /// Retry delay for the given attempt number (0-based), capped.
+    pub fn backoff(&self, attempt: u32) -> SimTime {
+        let exp = self.retry_initial_ms as f64 * self.retry_factor.powi(attempt.min(63) as i32);
+        SimTime::from_millis((exp as u64).min(self.retry_max_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let p = RecoveryPolicy {
+            retry_initial_ms: 1_000,
+            retry_factor: 2.0,
+            retry_max_ms: 8_000,
+            ..Default::default()
+        };
+        let delays: Vec<u64> = (0..6).map(|a| p.backoff(a).as_millis()).collect();
+        assert_eq!(delays, vec![1_000, 2_000, 4_000, 8_000, 8_000, 8_000]);
+        // huge attempt counts saturate instead of overflowing
+        assert_eq!(p.backoff(u32::MAX).as_millis(), 8_000);
+    }
+
+    #[test]
+    fn model_defaults_differ_on_speculation_only() {
+        let job = RecoveryPolicy::for_model(&ExecModel::JobBased);
+        let pools = RecoveryPolicy::for_model(&ExecModel::paper_hybrid_pools());
+        let generic = RecoveryPolicy::for_model(&ExecModel::GenericPool);
+        assert!(!job.speculative);
+        assert!(pools.speculative);
+        assert!(generic.speculative);
+        assert_eq!(job.retry_initial_ms, pools.retry_initial_ms);
+        assert_eq!(job.checkpoint_frac, pools.checkpoint_frac);
+        assert!(job.blacklist_after > 0, "blacklisting on by default");
+    }
+}

@@ -1,0 +1,246 @@
+//! Resilience accounting: what the faults cost and how fast the platform
+//! recovered.
+//!
+//! Definitions (EXPERIMENTS.md §"Resilience / chaos"):
+//!
+//! * **wasted work** — wall-clock compute-ms burned by executions that did
+//!   not produce a completion: the elapsed execution time of a task killed
+//!   by a fault (minus the checkpoint-restored fraction), the full run of
+//!   a losing speculative copy, and the startup time of a pod that crashed
+//!   at container start.
+//! * **useful work** — elapsed execution ms of every *winning* run.
+//! * **goodput** — `useful / (useful + wasted)`; 1.0 on a healthy run.
+//! * **recovery latency** — fault time -> the time the affected task is
+//!   executing again (p50/p95/p99 over all recoveries).
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Mutable accumulator the driver updates during a run.
+#[derive(Debug, Default)]
+pub struct ChaosStats {
+    /// Whether the chaos subsystem was active for this run.
+    pub enabled: bool,
+    pub pod_failures: u64,
+    pub spot_warnings: u64,
+    pub spot_reclaims: u64,
+    pub node_crashes: u64,
+    /// Speculative copies launched for straggling tasks.
+    pub speculations: u64,
+    /// Re-dispatches scheduled by the recovery policy.
+    pub retries: u64,
+    pub blacklists: u64,
+    /// Events dropped because they referenced a dead node incarnation.
+    pub stale_drops: u64,
+    pub wasted_ms: u64,
+    pub useful_ms: u64,
+    /// Fault -> re-execution latency samples (seconds).
+    pub recovery_latency: Summary,
+    /// Per-tenant splits (fleet runs; single runs use lane 0).
+    pub wasted_ms_by_tenant: Vec<u64>,
+    pub retries_by_tenant: Vec<u64>,
+}
+
+impl ChaosStats {
+    /// Size the per-tenant lanes (fleet runs call this with the tenant
+    /// count; single runs keep one lane).
+    pub fn set_tenants(&mut self, n: usize) {
+        self.wasted_ms_by_tenant.resize(n.max(1), 0);
+        self.retries_by_tenant.resize(n.max(1), 0);
+    }
+
+    pub fn add_waste(&mut self, tenant: usize, ms: u64) {
+        self.wasted_ms += ms;
+        if self.wasted_ms_by_tenant.is_empty() {
+            self.set_tenants(1);
+        }
+        let lane = tenant.min(self.wasted_ms_by_tenant.len() - 1);
+        self.wasted_ms_by_tenant[lane] += ms;
+    }
+
+    /// Waste with no task owner (e.g. a shared pool worker crashing at
+    /// container start): counts toward the total but toward no tenant's
+    /// lane — the lanes report *task-attributable* waste, and may
+    /// therefore sum to less than `wasted_ms`.
+    pub fn add_waste_shared(&mut self, ms: u64) {
+        self.wasted_ms += ms;
+    }
+
+    pub fn add_retry(&mut self, tenant: usize) {
+        self.retries += 1;
+        if self.retries_by_tenant.is_empty() {
+            self.set_tenants(1);
+        }
+        let lane = tenant.min(self.retries_by_tenant.len() - 1);
+        self.retries_by_tenant[lane] += 1;
+    }
+
+    /// Freeze the accumulator into the report attached to a `SimResult`.
+    pub fn report(&self) -> ChaosReport {
+        ChaosReport {
+            enabled: self.enabled,
+            pod_failures: self.pod_failures,
+            spot_warnings: self.spot_warnings,
+            spot_reclaims: self.spot_reclaims,
+            node_crashes: self.node_crashes,
+            speculations: self.speculations,
+            retries: self.retries,
+            blacklists: self.blacklists,
+            stale_drops: self.stale_drops,
+            wasted_ms: self.wasted_ms,
+            useful_ms: self.useful_ms,
+            recoveries: self.recovery_latency.len(),
+            recovery_p50_s: self.recovery_latency.percentile(50.0),
+            recovery_p95_s: self.recovery_latency.percentile(95.0),
+            recovery_p99_s: self.recovery_latency.percentile(99.0),
+            wasted_ms_by_tenant: self.wasted_ms_by_tenant.clone(),
+            retries_by_tenant: self.retries_by_tenant.clone(),
+        }
+    }
+}
+
+/// Immutable resilience summary of one run.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosReport {
+    pub enabled: bool,
+    pub pod_failures: u64,
+    pub spot_warnings: u64,
+    pub spot_reclaims: u64,
+    pub node_crashes: u64,
+    pub speculations: u64,
+    pub retries: u64,
+    pub blacklists: u64,
+    pub stale_drops: u64,
+    pub wasted_ms: u64,
+    pub useful_ms: u64,
+    pub recoveries: usize,
+    pub recovery_p50_s: f64,
+    pub recovery_p95_s: f64,
+    pub recovery_p99_s: f64,
+    pub wasted_ms_by_tenant: Vec<u64>,
+    pub retries_by_tenant: Vec<u64>,
+}
+
+impl ChaosReport {
+    /// Total faults injected across every source.
+    pub fn faults_total(&self) -> u64 {
+        self.pod_failures + self.spot_reclaims + self.node_crashes
+    }
+
+    /// `useful / (useful + wasted)`; 1.0 when nothing ran or nothing was
+    /// lost.
+    pub fn goodput(&self) -> f64 {
+        let total = self.useful_ms + self.wasted_ms;
+        if total == 0 {
+            return 1.0;
+        }
+        self.useful_ms as f64 / total as f64
+    }
+
+    /// Fraction of all executed compute that was wasted.
+    pub fn wasted_frac(&self) -> f64 {
+        1.0 - self.goodput()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", self.enabled.into()),
+            ("faults_total", self.faults_total().into()),
+            ("pod_failures", self.pod_failures.into()),
+            ("spot_warnings", self.spot_warnings.into()),
+            ("spot_reclaims", self.spot_reclaims.into()),
+            ("node_crashes", self.node_crashes.into()),
+            ("speculations", self.speculations.into()),
+            ("retries", self.retries.into()),
+            ("blacklists", self.blacklists.into()),
+            ("stale_drops", self.stale_drops.into()),
+            ("wasted_ms", self.wasted_ms.into()),
+            ("useful_ms", self.useful_ms.into()),
+            ("goodput", self.goodput().into()),
+            ("recoveries", self.recoveries.into()),
+            ("recovery_p50_s", self.recovery_p50_s.into()),
+            ("recovery_p95_s", self.recovery_p95_s.into()),
+            ("recovery_p99_s", self.recovery_p99_s.into()),
+            (
+                "wasted_ms_by_tenant",
+                Json::Arr(self.wasted_ms_by_tenant.iter().map(|&v| v.into()).collect()),
+            ),
+            (
+                "retries_by_tenant",
+                Json::Arr(self.retries_by_tenant.iter().map(|&v| v.into()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn goodput_and_waste_fraction() {
+        let mut s = ChaosStats {
+            enabled: true,
+            ..Default::default()
+        };
+        s.useful_ms = 900;
+        s.add_waste(0, 100);
+        let r = s.report();
+        assert!((r.goodput() - 0.9).abs() < 1e-12);
+        assert!((r.wasted_frac() - 0.1).abs() < 1e-12);
+        assert_eq!(r.wasted_ms_by_tenant, vec![100]);
+    }
+
+    #[test]
+    fn empty_run_has_unit_goodput() {
+        let r = ChaosStats::default().report();
+        assert_eq!(r.goodput(), 1.0);
+        assert_eq!(r.wasted_frac(), 0.0);
+        assert_eq!(r.faults_total(), 0);
+        assert!(!r.enabled);
+    }
+
+    #[test]
+    fn per_tenant_lanes_split_waste_and_retries() {
+        let mut s = ChaosStats::default();
+        s.set_tenants(3);
+        s.add_waste(0, 10);
+        s.add_waste(2, 30);
+        s.add_retry(2);
+        s.add_retry(2);
+        // out-of-range tenants clamp to the last lane instead of panicking
+        s.add_waste(9, 5);
+        let r = s.report();
+        assert_eq!(r.wasted_ms, 45);
+        assert_eq!(r.wasted_ms_by_tenant, vec![10, 0, 35]);
+        assert_eq!(r.retries_by_tenant, vec![0, 0, 2]);
+        assert_eq!(r.retries, 2);
+    }
+
+    #[test]
+    fn shared_waste_counts_in_the_total_but_no_lane() {
+        let mut s = ChaosStats::default();
+        s.set_tenants(2);
+        s.add_waste(1, 40);
+        s.add_waste_shared(60);
+        let r = s.report();
+        assert_eq!(r.wasted_ms, 100);
+        assert_eq!(r.wasted_ms_by_tenant, vec![0, 40]);
+        assert!(r.wasted_ms_by_tenant.iter().sum::<u64>() <= r.wasted_ms);
+    }
+
+    #[test]
+    fn recovery_percentiles_survive_the_report() {
+        let mut s = ChaosStats::default();
+        for v in 0..=100 {
+            s.recovery_latency.add(v as f64);
+        }
+        let r = s.report();
+        assert_eq!(r.recoveries, 101);
+        assert!((r.recovery_p50_s - 50.0).abs() < 1e-9);
+        assert!((r.recovery_p99_s - 99.0).abs() < 1e-9);
+        let j = r.to_json().to_string();
+        assert!(j.contains("recovery_p99_s"));
+        assert!(j.contains("goodput"));
+    }
+}

@@ -138,7 +138,13 @@ fn parse_sim(j: Option<&Json>, nodes_default: usize) -> Result<SimConfig> {
     sim.autoscale.min_replicas = u("min_replicas", sim.autoscale.min_replicas as u64)? as usize;
     sim.seed = u("seed", sim.seed)?;
     if let Some(p) = j.opt("pod_failure_prob") {
+        // deprecated: kept working, folded onto the chaos PodFailure
+        // injector at build time (models/driver.rs)
         sim.pod_failure_prob = p.as_f64().map_err(je)?;
+    }
+    if let Some(c) = j.opt("chaos") {
+        sim.chaos = crate::chaos::ChaosConfig::parse_spec(c.as_str().map_err(je)?)
+            .map_err(|e| anyhow!("chaos spec: {e}"))?;
     }
     if let Some(cap) = j.opt("max_pending_pods") {
         sim.max_pending_pods = Some(cap.as_usize().map_err(je)?);
@@ -291,6 +297,29 @@ mod tests {
                 "accepted: {bad}"
             );
         }
+    }
+
+    #[test]
+    fn chaos_spec_parses_and_legacy_pod_failure_keeps_working() {
+        let src = r#"{
+            "workflow": {"type": "montage", "grid": 3},
+            "model": {"type": "pools"},
+            "sim": {"nodes": 4, "chaos": "spot:0.2,straggler:0.25",
+                    "pod_failure_prob": 0.05}
+        }"#;
+        let cfg = ExperimentConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sim.chaos.injectors.len(), 2);
+        assert!(cfg.sim.chaos.is_enabled());
+        // the deprecated knob still parses and still takes effect (the
+        // driver folds it into the chaos PodFailure injector)
+        assert!((cfg.sim.pod_failure_prob - 0.05).abs() < 1e-12);
+
+        let bad = r#"{
+            "workflow": {"type": "montage", "grid": 3},
+            "model": {"type": "pools"},
+            "sim": {"chaos": "meteor:1"}
+        }"#;
+        assert!(ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

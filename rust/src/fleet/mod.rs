@@ -147,6 +147,7 @@ pub fn run(model: ExecModel, mut sim_cfg: SimConfig, cfg: &FleetConfig) -> Fleet
                 sim_events: 0,
                 avg_running_tasks: 0.0,
                 avg_cpu_utilization: 0.0,
+                chaos: crate::chaos::ChaosReport::default(),
             },
             outcomes: Vec::new(),
             metas,

@@ -29,6 +29,11 @@ pub struct TenantRow {
     pub slowdown_p50: f64,
     pub slowdown_p95: f64,
     pub slowdown_p99: f64,
+    /// Resilience SLO columns under churn (chaos runs; 0 otherwise):
+    /// compute-seconds this tenant lost to faults, and how many of its
+    /// tasks/batches were re-dispatched.
+    pub wasted_s: f64,
+    pub retries: u64,
 }
 
 /// Fleet-wide headline numbers (one saturation-sweep point).
@@ -62,6 +67,7 @@ fn tenant_summaries(res: &FleetResult) -> Vec<(Summary, Summary, Summary)> {
 
 /// Per-tenant SLO rows (every tenant, including ones with no arrivals).
 pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
+    let chaos = &res.sim.chaos;
     tenant_summaries(res)
         .into_iter()
         .enumerate()
@@ -74,6 +80,8 @@ pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
             slowdown_p50: slowdown.percentile(50.0),
             slowdown_p95: slowdown.percentile(95.0),
             slowdown_p99: slowdown.percentile(99.0),
+            wasted_s: chaos.wasted_ms_by_tenant.get(t).copied().unwrap_or(0) as f64 / 1000.0,
+            retries: chaos.retries_by_tenant.get(t).copied().unwrap_or(0),
         })
         .collect()
 }
@@ -108,11 +116,12 @@ pub fn aggregate(res: &FleetResult) -> FleetSummary {
 pub fn render_table(res: &FleetResult) -> String {
     let mut out = String::from(
         "tenant  instances  qdelay-mean-s  makespan-mean-s  \
-         slowdown-mean  slowdown-p50  slowdown-p95  slowdown-p99\n",
+         slowdown-mean  slowdown-p50  slowdown-p95  slowdown-p99  \
+         wasted-s  retries\n",
     );
     for r in per_tenant(res) {
         out.push_str(&format!(
-            "{:>6}  {:>9}  {:>13.1}  {:>15.1}  {:>13.2}  {:>12.2}  {:>12.2}  {:>12.2}\n",
+            "{:>6}  {:>9}  {:>13.1}  {:>15.1}  {:>13.2}  {:>12.2}  {:>12.2}  {:>12.2}  {:>8.1}  {:>7}\n",
             r.tenant,
             r.instances,
             r.queue_delay_mean_s,
@@ -121,6 +130,8 @@ pub fn render_table(res: &FleetResult) -> String {
             r.slowdown_p50,
             r.slowdown_p95,
             r.slowdown_p99,
+            r.wasted_s,
+            r.retries,
         ));
     }
     out
@@ -141,6 +152,8 @@ pub fn to_json(res: &FleetResult) -> Json {
                 ("slowdown_p50", r.slowdown_p50.into()),
                 ("slowdown_p95", r.slowdown_p95.into()),
                 ("slowdown_p99", r.slowdown_p99.into()),
+                ("wasted_s", r.wasted_s.into()),
+                ("retries", r.retries.into()),
             ])
         })
         .collect();
@@ -154,6 +167,7 @@ pub fn to_json(res: &FleetResult) -> Json {
         ("mean_slowdown", agg.mean_slowdown.into()),
         ("slowdown_p99", agg.slowdown_p99.into()),
         ("utilization", agg.utilization.into()),
+        ("chaos", res.sim.chaos.to_json()),
         ("tenants", Json::Arr(tenants)),
     ])
 }
@@ -179,6 +193,7 @@ mod tests {
             sim_events: 0,
             avg_running_tasks: 0.0,
             avg_cpu_utilization: 0.5,
+            chaos: crate::chaos::ChaosReport::default(),
         };
         let outcomes = vec![
             InstanceOutcome {
@@ -251,9 +266,25 @@ mod tests {
         assert_eq!(render_table(&r), render_table(&r));
         let t = render_table(&r);
         assert!(t.contains("slowdown-p99"));
+        assert!(t.contains("wasted-s"), "resilience columns present");
         assert_eq!(t.lines().count(), 3, "header + one row per tenant");
         let j = to_json(&r).to_string();
         assert!(j.contains("instances_per_hour"));
         assert!(j.contains("slowdown_p99"));
+        assert!(j.contains("\"chaos\""), "resilience block exported");
+        assert!(j.contains("wasted_s"));
+    }
+
+    #[test]
+    fn per_tenant_resilience_columns_follow_the_chaos_report() {
+        let mut r = fake_result();
+        r.sim.chaos.enabled = true;
+        r.sim.chaos.wasted_ms_by_tenant = vec![1_500, 0];
+        r.sim.chaos.retries_by_tenant = vec![3, 0];
+        let rows = per_tenant(&r);
+        assert!((rows[0].wasted_s - 1.5).abs() < 1e-9);
+        assert_eq!(rows[0].retries, 3);
+        assert_eq!(rows[1].retries, 0);
+        assert_eq!(rows[1].wasted_s, 0.0);
     }
 }

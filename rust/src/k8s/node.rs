@@ -17,6 +17,9 @@ pub struct Node {
     pub max_pods: usize,
     /// Failure injection: a failed node schedules nothing until recovery.
     pub failed: bool,
+    /// Cordoned: running pods continue, but the scheduler places nothing
+    /// new here (chaos: spot-reclaim drain warnings, blacklisted nodes).
+    pub cordoned: bool,
 }
 
 impl Node {
@@ -28,6 +31,7 @@ impl Node {
             pods: 0,
             max_pods: 110,
             failed: false,
+            cordoned: false,
         }
     }
 
@@ -36,6 +40,12 @@ impl Node {
     }
 
     pub fn fits(&self, req: &Resources) -> bool {
+        !self.cordoned && self.fits_ignoring_cordon(req)
+    }
+
+    /// Capacity check without the cordon taint — used by the scheduler to
+    /// tell "cluster full" apart from "capacity exists but is cordoned".
+    pub fn fits_ignoring_cordon(&self, req: &Resources) -> bool {
         !self.failed && self.pods < self.max_pods && self.free().covers(req)
     }
 
@@ -111,6 +121,20 @@ mod tests {
         let mut n = Node::new(NodeId(0), Resources::new(4000, 16384));
         n.alloc(Resources::new(1000, 1024));
         assert!((n.cpu_utilization() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cordon_blocks_placement_but_not_capacity() {
+        let mut n = Node::new(NodeId(0), Resources::new(4000, 16384));
+        let req = Resources::new(1000, 1024);
+        n.cordoned = true;
+        assert!(!n.fits(&req), "cordoned node must reject placements");
+        assert!(
+            n.fits_ignoring_cordon(&req),
+            "capacity itself is still there"
+        );
+        n.failed = true;
+        assert!(!n.fits_ignoring_cordon(&req), "failed trumps everything");
     }
 
     #[test]

@@ -70,6 +70,10 @@ pub struct Scheduler {
     // -- counters for reports/metrics -------------------------------------
     pub binds_total: u64,
     pub backoffs_total: u64,
+    /// Attempts that failed *only* because the capacity that would have
+    /// fit was cordoned (chaos: drain warnings / blacklisted nodes) — the
+    /// back-off churn attributable to churn rather than to load.
+    pub cordoned_misses: u64,
 }
 
 impl Scheduler {
@@ -84,6 +88,7 @@ impl Scheduler {
             busy_until: SimTime::ZERO,
             binds_total: 0,
             backoffs_total: 0,
+            cordoned_misses: 0,
         }
     }
 
@@ -145,6 +150,9 @@ impl Scheduler {
     ) {
         out.bound.clear();
         out.backed_off.clear();
+        // hoisted: on healthy (chaos-free) runs no node is ever cordoned,
+        // so the per-miss attribution scan below is skipped entirely
+        let any_cordoned = nodes.iter().any(|n| n.cordoned);
         let n_attempts = self.active.len();
         for _ in 0..n_attempts {
             let pid = match self.active.pop_front() {
@@ -182,6 +190,14 @@ impl Scheduler {
                     out.bound.push((pid, nid, self.busy_until));
                 }
                 None => {
+                    let req = pod.requests;
+                    if any_cordoned
+                        && nodes
+                            .iter()
+                            .any(|n| n.cordoned && n.fits_ignoring_cordon(&req))
+                    {
+                        self.cordoned_misses += 1;
+                    }
                     let exp = (self.cfg.backoff_initial_ms as f64
                         * self.cfg.backoff_factor.powi(pod.sched_attempts as i32))
                         as u64;
@@ -435,6 +451,43 @@ mod tests {
         // a later (stale) wake enqueue re-adds it to active — the driver
         // guards this with `is_sleeping` before enqueueing
         assert!(!sched.is_sleeping(PodId(0)));
+    }
+
+    #[test]
+    fn cordoned_node_is_skipped_and_counted() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(2);
+        nodes[0].cordoned = true;
+        // one free slot worth of work on each node; node 0 is draining
+        let mut pods: Vec<Pod> = (0..2).map(|i| mkpod(i, 4000)).collect();
+        sched.enqueue(PodId(0));
+        sched.enqueue(PodId(1));
+        let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
+        // only node 1 is placeable; the second pod's miss is attributable
+        // to the cordon, not to a full cluster
+        assert_eq!(pass.bound.len(), 1);
+        assert_eq!(pass.bound[0].1, NodeId(1));
+        assert_eq!(pass.backed_off.len(), 1);
+        assert_eq!(sched.cordoned_misses, 1);
+        // uncordon: the pod now binds to node 0 and no new miss is counted
+        nodes[0].cordoned = false;
+        sched.enqueue(pass.backed_off[0].0);
+        let pass2 = run_pass(&mut sched, SimTime(1_000), &mut pods, &mut nodes);
+        assert_eq!(pass2.bound.len(), 1);
+        assert_eq!(pass2.bound[0].1, NodeId(0));
+        assert_eq!(sched.cordoned_misses, 1);
+    }
+
+    #[test]
+    fn genuinely_full_cluster_counts_no_cordon_miss() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(1);
+        nodes[0].cordoned = true;
+        let mut pods = vec![mkpod(0, 8000)]; // would not fit even uncordoned
+        sched.enqueue(PodId(0));
+        let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
+        assert_eq!(pass.backed_off.len(), 1);
+        assert_eq!(sched.cordoned_misses, 0);
     }
 
     #[test]

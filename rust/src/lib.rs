@@ -14,6 +14,11 @@
 //!   clustering, and auto-scalable worker pools (KEDA-style autoscaler with
 //!   proportional quota allocation, [`autoscale`], over an AMQP-like
 //!   [`broker`]);
+//! * the **chaos engine** ([`chaos`]): deterministic fault injection
+//!   (pod failures, spot reclaims, node crashes, stragglers), pluggable
+//!   recovery policies (retry back-off, blacklisting, checkpoint-restart,
+//!   speculative re-execution) and resilience accounting (wasted work,
+//!   goodput, recovery latency);
 //! * the **fleet service** ([`fleet`]): open-loop multi-tenant workflow
 //!   arrivals on one shared cluster, with weighted fair-share dequeue,
 //!   admission control, and per-tenant slowdown/SLO reporting
@@ -29,6 +34,7 @@
 
 pub mod autoscale;
 pub mod broker;
+pub mod chaos;
 pub mod compute;
 pub mod config;
 pub mod engine;

@@ -20,8 +20,15 @@ fn usage() -> ! {
          flags for run:\n\
            --cluster-size N --cluster-timeout MS   (clustered model)\n\
            --max-pending N                          (throttled job model, §5)\n\
+           --chaos SPEC                             failure injection (see below)\n\
            --json                                   print result as JSON\n\
            --html FILE                              write an HTML report\n\
+         chaos SPEC (run/serve/trace): comma-separated kind:value\n\
+           spot:R       spot reclaims per node per hour (2 min warning)\n\
+           crash:R      node crashes per node per hour (no warning)\n\
+           pod:P        pod crash probability at container start\n\
+           straggler:F  fraction of nodes running tasks 3x slower\n\
+           e.g. --chaos spot:0.2,crash:0.1,straggler:0.25 --seed 7\n\
          flags for serve (open-loop multi-tenant fleet):\n\
            --arrival-rate R    aggregate arrivals in instances/hour (default 6)\n\
            --duration S        arrival window in seconds (default 3600)\n\
@@ -33,6 +40,7 @@ fn usage() -> ! {
            --grids 4,5,6       Montage grid-size mix spread across tenants\n\
            --weights 2,1       fair-share dequeue weight per tenant\n\
            --cap N             admission cap: max concurrent instances (0 = off)\n\
+           --chaos SPEC        failure injection during the fleet run\n\
            --json              print the fleet report as JSON\n"
     );
     std::process::exit(2)
@@ -48,6 +56,17 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("trace") => cmd_trace(&args),
         _ => usage(),
+    }
+}
+
+/// Shared `--chaos` spec parsing for `run` / `serve` / `trace`.
+fn parse_chaos(args: &Args) -> hyperflow_k8s::chaos::ChaosConfig {
+    match args.get("chaos") {
+        None => hyperflow_k8s::chaos::ChaosConfig::default(),
+        Some(spec) => hyperflow_k8s::chaos::ChaosConfig::parse_spec(spec).unwrap_or_else(|e| {
+            eprintln!("--chaos: {e}");
+            usage()
+        }),
     }
 }
 
@@ -81,11 +100,10 @@ fn cmd_trace(args: &Args) {
     let cfg = montage_cfg(args);
     let dag = generate(&cfg);
     let model = parse_model(args);
-    let res = driver::run(
-        dag,
-        model,
-        driver::SimConfig::with_nodes(args.get_usize("nodes", 17)),
-    );
+    let mut sim = driver::SimConfig::with_nodes(args.get_usize("nodes", 17));
+    sim.seed = args.get_u64("seed", 42);
+    sim.chaos = parse_chaos(args);
+    let res = driver::run(dag, model, sim);
     let out = args.get_or("out", "trace.json");
     std::fs::write(out, hyperflow_k8s::report::chrome::to_chrome_trace(&res).to_string())
         .expect("write trace");
@@ -120,6 +138,8 @@ fn cmd_run(args: &Args) {
         let dag = generate(&cfg);
         let model = parse_model(args);
         let mut sim = driver::SimConfig::with_nodes(args.get_usize("nodes", 17));
+        sim.seed = args.get_u64("seed", 42);
+        sim.chaos = parse_chaos(args);
         if args.has("max-pending") {
             sim.max_pending_pods = Some(args.get_usize("max-pending", 64));
         }
@@ -154,6 +174,21 @@ fn cmd_run(args: &Args) {
             res.avg_running_tasks,
             res.avg_cpu_utilization * 100.0
         );
+        if res.chaos.enabled {
+            println!(
+                "chaos: {} faults (pod {}, reclaim {}, crash {})  retries: {}  \
+                 speculative: {}  wasted: {:.0}s  goodput: {:.1}%  recovery p95: {:.1}s",
+                res.chaos.faults_total(),
+                res.chaos.pod_failures,
+                res.chaos.spot_reclaims,
+                res.chaos.node_crashes,
+                res.chaos.retries,
+                res.chaos.speculations,
+                res.chaos.wasted_ms as f64 / 1000.0,
+                res.chaos.goodput() * 100.0,
+                res.chaos.recovery_p95_s,
+            );
+        }
         println!(
             "{}",
             ascii_plot::area_chart(
@@ -257,6 +292,7 @@ fn cmd_serve(args: &Args) {
     };
     let sim = driver::SimConfig {
         seed,
+        chaos: parse_chaos(args),
         ..driver::SimConfig::with_nodes(nodes)
     };
     eprintln!(
@@ -283,9 +319,19 @@ fn cmd_serve(args: &Args) {
             agg.utilization * 100.0
         );
         println!(
-            "queueing delay (mean): {:.1}s   slowdown mean: {:.2}   slowdown p99: {:.2}\n",
+            "queueing delay (mean): {:.1}s   slowdown mean: {:.2}   slowdown p99: {:.2}",
             agg.mean_queue_delay_s, agg.mean_slowdown, agg.slowdown_p99
         );
+        if res.sim.chaos.enabled {
+            println!(
+                "chaos: {} faults   retries: {}   wasted: {:.0}s   goodput: {:.1}%",
+                res.sim.chaos.faults_total(),
+                res.sim.chaos.retries,
+                res.sim.chaos.wasted_ms as f64 / 1000.0,
+                res.sim.chaos.goodput() * 100.0
+            );
+        }
+        println!();
         print!("{}", fleet::report::render_table(&res));
     }
 }

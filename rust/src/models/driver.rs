@@ -36,8 +36,10 @@
 use super::ExecModel;
 use crate::autoscale::{Autoscaler, AutoscalerConfig, PoolSpec};
 use crate::broker::{Broker, PoolId, TenantId};
+use crate::chaos::inject::{sample_node_slowdowns, FaultProcess};
+use crate::chaos::{ChaosConfig, ChaosStats, Injector, RecoveryPolicy};
 use crate::engine::clustering::{BatchAction, Batcher, ClusteringConfig};
-use crate::engine::Engine;
+use crate::engine::{Engine, TaskState};
 use crate::fleet::{FleetPlan, InstanceOutcome};
 use crate::k8s::api_server::{ApiServer, ApiServerConfig};
 use crate::k8s::node::{paper_cluster, Node, NodeId};
@@ -71,13 +73,16 @@ pub struct SimConfig {
     /// Hard wall-clock cap on the simulation (guards against livelock in
     /// pathological configurations). Simulated seconds.
     pub max_sim_s: f64,
-    /// Failure injection: probability that a pod crashes at container
-    /// start (image pull error, OOM on start, node flake). Job pods are
-    /// recreated by the job controller; worker pods are replaced by the
-    /// deployment controller on the next autoscale tick.
+    /// **Deprecated** — legacy knob, kept working for old configs: at
+    /// build time a non-zero value is folded into the chaos subsystem as
+    /// an [`Injector::PodFailure`]. Prefer `chaos` with a `pod:<p>` spec.
     pub pod_failure_prob: f64,
-    /// Seed for the failure-injection RNG.
+    /// Seed for the chaos/failure-injection RNG streams.
     pub seed: u64,
+    /// Chaos engine: fault injectors + recovery policy (see
+    /// [`crate::chaos`]). Empty = disabled, zero overhead, bit-identical
+    /// behavior to pre-chaos builds.
+    pub chaos: ChaosConfig,
     /// Future-work (§5): throttled job submission — cap on pods that may
     /// sit in the Pending/creation pipeline at once; further batches wait
     /// in the engine. `None` reproduces the paper's unthrottled behaviour.
@@ -106,6 +111,7 @@ impl Default for SimConfig {
             max_sim_s: 6.0 * 3600.0,
             pod_failure_prob: 0.0,
             seed: 42,
+            chaos: ChaosConfig::default(),
             max_pending_pods: None,
             node_events: Vec::new(),
         }
@@ -149,6 +155,24 @@ enum Ev {
     NodeEvent { node: usize, up: bool },
     /// Fleet service: workflow instance `inst` arrives (open-loop).
     InstanceArrive { inst: u32 },
+    /// Chaos: timed injector `proc_idx` strikes `node` (spot warning or
+    /// crash); the handler samples and schedules the process's next fault.
+    ChaosFault { proc_idx: u8, node: usize },
+    /// Chaos: a spot-reclaim warning expired — the node goes down now;
+    /// replacement capacity arrives `replace_ms` later.
+    ChaosReclaim { node: usize, replace_ms: u64 },
+    /// Chaos: a reclaimed/crashed node's replacement capacity arrives
+    /// (fresh incarnation).
+    ChaosRestore { node: usize },
+    /// Chaos: a blacklisted node's cordon expires.
+    ChaosUncordon { node: usize },
+    /// Chaos recovery: a failed pool task's retry back-off expired.
+    ChaosRetryTask { task: TaskId },
+    /// Chaos recovery: a failed job batch's retry back-off expired.
+    ChaosRetryBatch { tasks: Vec<TaskId> },
+    /// Chaos recovery: straggler watch — if `task` is still running in
+    /// `pod`, launch a speculative copy.
+    SpecCheck { pod: PodId, task: TaskId },
 }
 
 /// What a pod will do next, extracted from its payload without cloning it
@@ -156,6 +180,89 @@ enum Ev {
 enum PodWork {
     Batch(Vec<TaskId>),
     Pool(PoolId),
+}
+
+/// Sentinel for "no pending fault" in the per-task fault-time table.
+const NO_FAULT: u64 = u64::MAX;
+
+/// Runtime state of the chaos engine for one run (`None` = disabled: no
+/// chaos events are ever scheduled and the hot path is untouched).
+struct ChaosRuntime {
+    /// Timed injectors (spot reclaim, node crash), each with its own
+    /// forked RNG stream.
+    processes: Vec<FaultProcess>,
+    /// Combined per-start crash probability over all PodFailure injectors
+    /// (includes the migrated legacy `pod_failure_prob`).
+    pod_fail_prob: f64,
+    /// Stream for pod-start crash sampling.
+    pod_rng: crate::util::rng::Rng,
+    /// Stream for straggler (re)sampling on node replacement.
+    node_rng: crate::util::rng::Rng,
+    /// Straggler injector params: (fraction of slow nodes, slow factor).
+    straggler: Option<(f64, f64)>,
+    /// Recovery policy in force (explicit or per-model default).
+    policy: RecoveryPolicy,
+    /// Quota the autoscaler was configured with at build (re-scaled to
+    /// surviving capacity on node churn).
+    base_quota: u64,
+}
+
+impl ChaosRuntime {
+    /// Build the runtime from a config, folding the deprecated
+    /// `pod_failure_prob` knob in as one more PodFailure injector.
+    /// Returns `None` when no fault source is configured.
+    fn build(
+        cfg: &ChaosConfig,
+        legacy_pod_failure_prob: f64,
+        model: &ExecModel,
+        seed: u64,
+        base_quota: u64,
+    ) -> Option<ChaosRuntime> {
+        let mut spec = cfg.clone();
+        if legacy_pod_failure_prob > 0.0 {
+            log::warn!(
+                "sim.pod_failure_prob is deprecated: folding it into the chaos \
+                 subsystem as a PodFailure injector (use chaos spec 'pod:{legacy_pod_failure_prob}')"
+            );
+            spec.injectors.push(Injector::PodFailure {
+                prob: legacy_pod_failure_prob,
+            });
+        }
+        if !spec.is_enabled() {
+            return None;
+        }
+        let policy = spec
+            .recovery
+            .clone()
+            .unwrap_or_else(|| RecoveryPolicy::for_model(model));
+        // Fixed fork order => the fault timeline is a pure function of
+        // (seed, chaos spec), independent of everything else in the run.
+        // The pod-failure stream keeps the legacy `seed ^ 0xFA11` seeding
+        // of the old inline pod_failure_prob branch, so configs that only
+        // set the deprecated knob reproduce their historical failure
+        // pattern (one draw per pod start, same order until the first
+        // fault diverges the timeline).
+        let mut master = crate::util::rng::Rng::new(seed ^ 0xC4A0_5EED);
+        let pod_rng = crate::util::rng::Rng::new(seed ^ 0xFA11);
+        let node_rng = master.fork(2);
+        let processes: Vec<FaultProcess> = spec
+            .injectors
+            .iter()
+            .filter(|i| i.is_timed())
+            .enumerate()
+            .map(|(k, i)| FaultProcess::new(i.clone(), master.fork(16 + k as u64)))
+            .collect();
+        assert!(processes.len() <= u8::MAX as usize, "too many timed injectors");
+        Some(ChaosRuntime {
+            processes,
+            pod_fail_prob: spec.pod_failure_prob(),
+            pod_rng,
+            node_rng,
+            straggler: spec.straggler(),
+            policy,
+            base_quota,
+        })
+    }
 }
 
 /// Runtime state of a fleet run (see [`run_fleet`]): per-instance
@@ -230,7 +337,42 @@ struct World {
     g_queue: Vec<GaugeId>,
     /// replicas::<pool> gauge per PoolId.
     g_replicas: Vec<GaugeId>,
-    rng: crate::util::rng::Rng,
+    // -- chaos engine (None for healthy runs; see crate::chaos) ----------
+    chaos: Option<ChaosRuntime>,
+    /// Resilience accounting (always present; all-zero without chaos).
+    chaos_stats: ChaosStats,
+    /// Per-node task-duration multiplier (straggler injector; all 1.0
+    /// otherwise). Resampled when a node's replacement arrives.
+    node_slow: Vec<f64>,
+    /// Node incarnation counters: bumped when replacement capacity for a
+    /// reclaimed/crashed node arrives, so events bound to the previous
+    /// hardware are recognizably stale.
+    node_incarnation: Vec<u32>,
+    /// Pod-start failures charged to each node (blacklisting evidence).
+    node_fault_counts: Vec<u32>,
+    /// Spot warning in progress for the node (drain pending).
+    drain_pending: Vec<bool>,
+    /// Blacklist expiry per node (ZERO = not blacklisted).
+    blacklist_until: Vec<SimTime>,
+    /// Incarnation of the node each pod was bound to (stale-event guard).
+    pod_bound_inc: Vec<u32>,
+    /// When the task currently in each pod started (waste accounting).
+    pod_task_started_at: Vec<SimTime>,
+    /// Remaining work per task (checkpoint-restart shrinks it on re-runs;
+    /// initialized to the DAG durations).
+    task_work_left: Vec<SimTime>,
+    /// Fault-driven re-dispatch count per task (retry back-off input).
+    task_attempts: Vec<u32>,
+    /// When the task was last lost to a fault (`NO_FAULT` = none pending);
+    /// cleared into the recovery-latency summary when it re-starts.
+    task_fault_at: Vec<u64>,
+    /// A speculative copy was already launched for the task (at most one).
+    spec_launched: Vec<bool>,
+    /// Live executions per task (1 normally; 2 while a speculative copy
+    /// races the original). Gates retries — a task with a copy still
+    /// running must not be re-dispatched — and keeps the trace record on
+    /// the first copy's timestamps.
+    task_running: Vec<u8>,
     // -- fleet service (None for classic single-workflow runs) ----------
     fleet: Option<FleetState>,
     /// Instance index of each task (fleet runs; empty otherwise).
@@ -288,6 +430,8 @@ impl World {
         self.pods.push(pod);
         self.batch_queue.push(VecDeque::new());
         self.current_task.push(None);
+        self.pod_bound_inc.push(0);
+        self.pod_task_started_at.push(SimTime::ZERO);
         self.pending_count += 1;
         self.metrics.inc("pods_created", 1);
         id
@@ -350,8 +494,9 @@ impl World {
         if !pass.bound.is_empty() {
             self.record_cpu();
         }
-        for &(pid, _node, bind_done) in &pass.bound {
+        for &(pid, node, bind_done) in &pass.bound {
             self.pending_count -= 1;
+            self.pod_bound_inc[pid.0 as usize] = self.node_incarnation[node.0];
             if matches!(self.pods[pid.0 as usize].payload, Payload::JobBatch { .. }) {
                 self.job_unblocked();
             }
@@ -392,18 +537,63 @@ impl World {
     }
 
     /// Start executing `task` inside `pod` at the current time.
+    ///
+    /// Chaos hooks (all inert on healthy runs): the remaining work may be
+    /// less than the DAG duration (checkpoint-restart), a straggler node
+    /// stretches it by its slowdown factor, a pending fault timestamp is
+    /// folded into the recovery-latency summary, and straggling pool
+    /// tasks get a speculation watch.
     fn start_task(&mut self, pod: PodId, task: TaskId) {
         let now = self.now();
-        let dur = self.engine.dag().tasks[task.0 as usize].duration;
+        let nominal = self.task_work_left[task.0 as usize];
         let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
-        self.trace.started(task, pod.0, now);
+        let slow = match self.pods[pod.0 as usize].node {
+            Some(nid) => self.node_slow[nid.0],
+            None => 1.0,
+        };
+        let dur = if slow != 1.0 {
+            SimTime::from_millis((nominal.as_millis() as f64 * slow).round() as u64)
+        } else {
+            nominal
+        };
+        // a speculative copy racing the original must not overwrite the
+        // task's trace record — queueing delay is ready -> *first* start
+        if self.task_running[task.0 as usize] == 0 {
+            self.trace.started(task, pod.0, now);
+        }
+        self.task_running[task.0 as usize] += 1;
         self.record_running(ttype, 1);
         self.pods[pod.0 as usize].executed += 1;
         self.current_task[pod.0 as usize] = Some(task);
+        self.pod_task_started_at[pod.0 as usize] = now;
+        if self.chaos.is_some() {
+            let fault_at = self.task_fault_at[task.0 as usize];
+            if fault_at != NO_FAULT {
+                self.task_fault_at[task.0 as usize] = NO_FAULT;
+                self.chaos_stats
+                    .recovery_latency
+                    .add((now - SimTime::from_millis(fault_at)).as_secs_f64());
+            }
+        }
         self.q.schedule_at(
             now + SimTime::from_millis(self.cfg.exec_overhead_ms) + dur,
             Ev::TaskDone { pod, task },
         );
+        // straggler watch: if the task is still running after spec_factor
+        // x its nominal time, a speculative copy is launched (pools only)
+        if let Some(ch) = &self.chaos {
+            if ch.policy.speculative
+                && ch.straggler.is_some()
+                && !self.spec_launched[task.0 as usize]
+                && self.pods[pod.0 as usize].pool_id().is_some()
+            {
+                let watch = SimTime::from_millis(
+                    self.cfg.exec_overhead_ms
+                        + (nominal.as_millis() as f64 * ch.policy.spec_factor).round() as u64,
+                );
+                self.q.schedule_at(now + watch, Ev::SpecCheck { pod, task });
+            }
+        }
     }
 
     /// Node failure: kill every pod on the node; recover their work.
@@ -411,6 +601,14 @@ impl World {
     /// in-flight task is redelivered to its queue (the broker's unacked
     /// window, like a RabbitMQ consumer dying).
     fn fail_node(&mut self, node: usize) {
+        self.fail_node_inner(node, false);
+    }
+
+    /// Shared kill path for scheduled `node_events` (`chaos = false`:
+    /// instant redelivery, the pre-chaos semantics) and the chaos engine
+    /// (`chaos = true`: wasted-work accounting, checkpoint-restart credit,
+    /// and policy-driven retry back-off instead of instant redelivery).
+    fn fail_node_inner(&mut self, node: usize, chaos: bool) {
         self.nodes[node].failed = true;
         self.metrics.inc("node_failures", 1);
         let mut victims = std::mem::take(&mut self.members_buf);
@@ -427,6 +625,25 @@ impl World {
             if let Some(task) = in_flight {
                 let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
                 self.record_running(ttype, -1);
+                self.task_running[task.0 as usize] -= 1;
+                if chaos {
+                    if self.engine.state(task) == TaskState::Done {
+                        // losing speculative copy killed after its twin
+                        // already won: the whole run is waste, there is
+                        // nothing to checkpoint or recover
+                        let elapsed = self
+                            .now()
+                            .saturating_sub(self.pod_task_started_at[pid.0 as usize])
+                            .as_millis();
+                        let exec_ms =
+                            elapsed.saturating_sub(self.cfg.exec_overhead_ms.min(elapsed));
+                        self.chaos_stats
+                            .add_waste(self.tenant_of(task).idx(), exec_ms);
+                        self.metrics.inc("speculative_losses", 1);
+                    } else {
+                        self.account_lost_work(pid, task, node);
+                    }
+                }
             }
             let work = match &self.pods[pid.0 as usize].payload {
                 Payload::JobBatch { tasks } => {
@@ -445,19 +662,315 @@ impl World {
             match work {
                 PodWork::Batch(remaining) => {
                     if !remaining.is_empty() {
-                        self.create_job(remaining);
+                        if chaos {
+                            self.schedule_batch_retry(remaining);
+                        } else {
+                            self.create_job(remaining);
+                        }
                     }
                 }
                 PodWork::Pool(pool) => {
-                    // the unacked delivery is redelivered to the queue
                     if let Some(task) = in_flight {
-                        self.broker.nack_requeue(pool, task, self.tenant_of(task));
-                        self.wake_idle_worker(pool);
+                        if chaos {
+                            // the recovery policy owns the message now: it
+                            // re-enters the queue after its retry back-off
+                            // (unless the task already completed elsewhere)
+                            self.broker.nack_drop(pool);
+                            self.record_queue_depth(pool);
+                            if self.engine.state(task) != TaskState::Done {
+                                self.schedule_task_retry(task);
+                            }
+                        } else {
+                            // the unacked delivery is redelivered at once
+                            self.broker.nack_requeue(pool, task, self.tenant_of(task));
+                            self.wake_idle_worker(pool);
+                        }
                     }
                 }
             }
         }
         self.members_buf = victims;
+        if chaos {
+            self.update_chaos_quota();
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // chaos engine: fault application, recovery, accounting
+    // ---------------------------------------------------------------
+
+    /// Sample + schedule the next fault of timed injector `i` (no-op for
+    /// inert processes).
+    fn schedule_next_fault(&mut self, i: usize) {
+        let n = self.nodes.len();
+        let Some(ch) = &mut self.chaos else { return };
+        if let Some((delay, victim)) = ch.processes[i].next_fault(n) {
+            self.q.schedule_in(
+                delay,
+                Ev::ChaosFault {
+                    proc_idx: i as u8,
+                    node: victim,
+                },
+            );
+        }
+    }
+
+    /// A timed fault strikes `node`.
+    fn apply_fault(&mut self, proc_idx: usize, node: usize) {
+        let injector = match &self.chaos {
+            Some(ch) => ch.processes[proc_idx].injector.clone(),
+            None => return,
+        };
+        match injector {
+            Injector::SpotReclaim {
+                warning_ms,
+                replace_ms,
+                ..
+            } => self.spot_warning(node, warning_ms, replace_ms),
+            Injector::NodeCrash { repair_ms, .. } => {
+                if self.nodes[node].failed {
+                    return; // already down
+                }
+                self.chaos_stats.node_crashes += 1;
+                self.metrics.inc("node_crashes", 1);
+                self.fail_node_inner(node, true);
+                self.q
+                    .schedule_in(SimTime::from_millis(repair_ms), Ev::ChaosRestore { node });
+            }
+            _ => unreachable!("only timed injectors emit ChaosFault"),
+        }
+    }
+
+    /// Spot reclaim, phase 1: the provider's warning. The node is cordoned
+    /// (no new placements) and — under a graceful policy — its workers
+    /// drain: idle workers terminate immediately (the autoscaler replaces
+    /// them on surviving nodes), busy workers finish their current task
+    /// and exit. Job pods run on; whatever is still alive when the warning
+    /// expires dies with the node.
+    fn spot_warning(&mut self, node: usize, warning_ms: u64, replace_ms: u64) {
+        if self.nodes[node].failed || self.drain_pending[node] {
+            return; // already dying
+        }
+        self.drain_pending[node] = true;
+        self.nodes[node].cordoned = true;
+        self.chaos_stats.spot_warnings += 1;
+        self.metrics.inc("spot_warnings", 1);
+        let drain = self
+            .chaos
+            .as_ref()
+            .map(|c| c.policy.drain_on_warning)
+            .unwrap_or(false);
+        if drain {
+            let mut victims = std::mem::take(&mut self.members_buf);
+            victims.clear();
+            victims.extend(
+                self.pods
+                    .iter()
+                    .filter(|p| {
+                        p.node == Some(NodeId(node))
+                            && !p.is_terminal()
+                            && p.pool_id().is_some()
+                    })
+                    .map(|p| p.id),
+            );
+            for &pid in &victims {
+                match self.pods[pid.0 as usize].phase {
+                    PodPhase::Running if self.current_task[pid.0 as usize].is_none() => {
+                        // idle worker: release it now so the deployment
+                        // re-creates it on a surviving node
+                        self.terminate_pod(pid, PodPhase::Succeeded);
+                    }
+                    PodPhase::Running => {
+                        self.pods[pid.0 as usize].phase = PodPhase::Draining;
+                    }
+                    // Starting workers are abandoned before doing work
+                    PodPhase::Starting => self.terminate_pod(pid, PodPhase::Deleted),
+                    _ => {}
+                }
+            }
+            self.members_buf = victims;
+        }
+        self.q.schedule_in(
+            SimTime::from_millis(warning_ms),
+            Ev::ChaosReclaim { node, replace_ms },
+        );
+    }
+
+    /// Charge the compute a killed in-flight task burned, minus the
+    /// checkpoint-restored fraction, and shrink the task's remaining work
+    /// accordingly. `node` is where it ran (for de-slowing straggler time
+    /// into work units).
+    fn account_lost_work(&mut self, pod: PodId, task: TaskId, node: usize) {
+        let now = self.now();
+        let elapsed = now
+            .saturating_sub(self.pod_task_started_at[pod.0 as usize])
+            .as_millis();
+        let exec_ms = elapsed.saturating_sub(self.cfg.exec_overhead_ms.min(elapsed));
+        let frac = self
+            .chaos
+            .as_ref()
+            .map(|c| c.policy.checkpoint_frac)
+            .unwrap_or(0.0);
+        // progress in work units (a straggler burns `slow` wall-ms per
+        // work-ms), of which `frac` survives in the checkpoint
+        let slow = self.node_slow[node].max(1.0);
+        let work_done = (exec_ms as f64 / slow) as u64;
+        let left = self.task_work_left[task.0 as usize].as_millis();
+        let credit = ((work_done as f64 * frac) as u64).min(left.saturating_sub(1));
+        self.task_work_left[task.0 as usize] = SimTime::from_millis(left - credit);
+        let wasted = exec_ms.saturating_sub(credit);
+        self.chaos_stats
+            .add_waste(self.tenant_of(task).idx(), wasted);
+        self.task_fault_at[task.0 as usize] = now.as_millis();
+        self.metrics.inc("tasks_lost_to_faults", 1);
+    }
+
+    /// Schedule a pool task's policy-driven re-dispatch — unless another
+    /// copy of it is still executing (speculation): the live copy carries
+    /// the work, and if that copy dies too, *its* kill path schedules the
+    /// retry. Keeps the at-most-one-extra-copy contract.
+    fn schedule_task_retry(&mut self, task: TaskId) {
+        if self.task_running[task.0 as usize] > 0 {
+            return;
+        }
+        let attempt = self.task_attempts[task.0 as usize];
+        self.task_attempts[task.0 as usize] = attempt.saturating_add(1);
+        let delay = self
+            .chaos
+            .as_ref()
+            .map(|c| c.policy.backoff(attempt))
+            .unwrap_or(SimTime::ZERO);
+        self.chaos_stats.add_retry(self.tenant_of(task).idx());
+        self.metrics.inc("chaos_retries", 1);
+        self.q.schedule_in(delay, Ev::ChaosRetryTask { task });
+    }
+
+    /// Schedule a job batch's policy-driven re-creation (attempt count
+    /// keyed on the batch's first task).
+    fn schedule_batch_retry(&mut self, tasks: Vec<TaskId>) {
+        debug_assert!(!tasks.is_empty());
+        let key = tasks[0];
+        let attempt = self.task_attempts[key.0 as usize];
+        self.task_attempts[key.0 as usize] = attempt.saturating_add(1);
+        let delay = self
+            .chaos
+            .as_ref()
+            .map(|c| c.policy.backoff(attempt))
+            .unwrap_or(SimTime::ZERO);
+        self.chaos_stats.add_retry(self.tenant_of(key).idx());
+        self.metrics.inc("chaos_retries", 1);
+        self.q.schedule_in(delay, Ev::ChaosRetryBatch { tasks });
+    }
+
+    /// A pod crashed at container start (PodFailure injector, successor of
+    /// the legacy inline `pod_failure_prob` branch): the startup time is
+    /// wasted, the node collects blacklisting evidence, and the payload is
+    /// recovered by policy — batches after a retry back-off, workers by
+    /// the deployment controller on the next autoscale tick.
+    fn pod_start_failure(&mut self, pod: PodId) {
+        self.metrics.inc("pod_failures", 1);
+        self.chaos_stats.pod_failures += 1;
+        // the container-start latency was burned for nothing; a batch pod
+        // charges its owning tenant, a shared pool worker charges no lane
+        // (it serves every tenant)
+        match &self.pods[pod.0 as usize].payload {
+            Payload::JobBatch { tasks } => {
+                let tenant = self.tenant_of(tasks[0]).idx();
+                self.chaos_stats.add_waste(tenant, self.cfg.pod_start_ms);
+            }
+            Payload::Worker { .. } => {
+                self.chaos_stats.add_waste_shared(self.cfg.pod_start_ms);
+            }
+        }
+        if let Some(nid) = self.pods[pod.0 as usize].node {
+            self.note_node_fault(nid.0);
+        }
+        let retry = match &mut self.pods[pod.0 as usize].payload {
+            Payload::JobBatch { tasks } => Some(std::mem::take(tasks)),
+            Payload::Worker { .. } => None,
+        };
+        self.terminate_pod(pod, PodPhase::Deleted);
+        if let Some(tasks) = retry {
+            self.schedule_batch_retry(tasks);
+        }
+    }
+
+    /// Blacklisting: a node that keeps failing pod starts is cordoned for
+    /// the policy's blacklist window.
+    fn note_node_fault(&mut self, node: usize) {
+        self.node_fault_counts[node] += 1;
+        let Some(ch) = &self.chaos else { return };
+        let k = ch.policy.blacklist_after;
+        let window = ch.policy.blacklist_ms;
+        if k == 0 || self.node_fault_counts[node] < k {
+            return;
+        }
+        if self.nodes[node].failed || self.nodes[node].cordoned {
+            return; // already out of rotation
+        }
+        let now = self.now();
+        self.nodes[node].cordoned = true;
+        self.blacklist_until[node] = now + SimTime::from_millis(window);
+        self.node_fault_counts[node] = 0;
+        self.chaos_stats.blacklists += 1;
+        self.metrics.inc("node_blacklists", 1);
+        self.q
+            .schedule_in(SimTime::from_millis(window), Ev::ChaosUncordon { node });
+    }
+
+    /// Rescale the pool quota to the surviving node capacity (chaos runs
+    /// only — legacy `node_events` keep the original quota semantics).
+    fn update_chaos_quota(&mut self) {
+        let Some(ch) = &self.chaos else { return };
+        let base = ch.base_quota;
+        if self.scaler.is_none() {
+            return;
+        }
+        let total: u64 = self.nodes.iter().map(|n| n.capacity.cpu_m).sum();
+        let live: u64 = self
+            .nodes
+            .iter()
+            .filter(|n| !n.failed)
+            .map(|n| n.capacity.cpu_m)
+            .sum();
+        let quota = ((base as u128 * live as u128) / total.max(1) as u128) as u64;
+        self.scaler.as_mut().unwrap().set_quota(quota);
+    }
+
+    /// A scheduled pod event is stale when the pod's node was reclaimed
+    /// and its replacement (same index, new incarnation) arrived in the
+    /// meantime. Defense-in-depth: chaos kills are synchronous, so pods
+    /// die with their node — but any completion that slips through must
+    /// not be credited against the new hardware.
+    fn stale_node_event(&mut self, pod: PodId) -> bool {
+        let Some(nid) = self.pods[pod.0 as usize].node else {
+            return false;
+        };
+        if self.pod_bound_inc[pod.0 as usize] != self.node_incarnation[nid.0] {
+            self.chaos_stats.stale_drops += 1;
+            self.metrics.inc("stale_node_events_dropped", 1);
+            return true;
+        }
+        false
+    }
+
+    /// Post-completion advance of a pool worker: ack the delivery, then
+    /// drain, fetch the next message, or go idle. Shared by the normal
+    /// completion path and the speculative-loser path.
+    fn advance_worker(&mut self, pod: PodId, pool: PoolId) {
+        let now = self.now();
+        self.broker.ack(pool);
+        self.record_queue_depth(pool);
+        if self.pods[pod.0 as usize].phase == PodPhase::Draining {
+            self.terminate_pod(pod, PodPhase::Succeeded);
+        } else if let Some(next) = self.broker.fetch(pool) {
+            self.q.schedule_at(
+                now + SimTime::from_millis(self.cfg.fetch_ms),
+                Ev::WorkerFetched { pod, task: next },
+            );
+        } else {
+            self.idle_workers[pool.idx()].push_back(pod);
+        }
     }
 
     /// Tenant lane of a task: its instance's tenant in fleet runs, the
@@ -758,22 +1271,17 @@ impl World {
                 if self.pods[pod.0 as usize].is_terminal() {
                     return; // deleted while starting
                 }
-                // failure injection: crash at container start
-                if self.cfg.pod_failure_prob > 0.0 && self.rng.f64() < self.cfg.pod_failure_prob
-                {
-                    self.metrics.inc("pod_failures", 1);
-                    let retry = match &mut self.pods[pod.0 as usize].payload {
-                        // job controller recreates the pod for the batch
-                        // (moving the batch out: the pod is dead anyway)
-                        Payload::JobBatch { tasks } => Some(std::mem::take(tasks)),
-                        // deployment controller replaces the worker on the
-                        // next autoscale tick (replica count short)
-                        Payload::Worker { .. } => None,
-                    };
-                    self.terminate_pod(pod, PodPhase::Deleted);
-                    if let Some(tasks) = retry {
-                        self.create_job(tasks);
-                    }
+                if self.stale_node_event(pod) {
+                    return; // bound to a node incarnation that no longer exists
+                }
+                // chaos: crash at container start (PodFailure injector —
+                // the migrated sim.pod_failure_prob knob included)
+                let crash = match &mut self.chaos {
+                    Some(ch) if ch.pod_fail_prob > 0.0 => ch.pod_rng.f64() < ch.pod_fail_prob,
+                    _ => false,
+                };
+                if crash {
+                    self.pod_start_failure(pod);
                     return;
                 }
                 let work = {
@@ -818,6 +1326,15 @@ impl World {
                     }
                     return;
                 }
+                // chaos/speculation: the task already completed elsewhere
+                // (its other copy won, or it was requeued after a fault
+                // and then finished) — drop the stale delivery
+                if self.engine.state(task) == TaskState::Done {
+                    if let Some(pool) = self.pods[pod.0 as usize].pool_id() {
+                        self.advance_worker(pod, pool);
+                    }
+                    return;
+                }
                 self.start_task(pod, task);
             }
             Ev::TaskDone { pod, task } => {
@@ -826,11 +1343,39 @@ impl World {
                 {
                     return; // pod was killed; the task was requeued/recreated
                 }
+                if self.stale_node_event(pod) {
+                    return; // completion from a node incarnation that is gone
+                }
                 self.current_task[pod.0 as usize] = None;
                 let now = self.now();
                 let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
+                // execution time of this run, net of the fixed executor
+                // overhead — same definition as account_lost_work, so
+                // goodput's numerator and denominator are commensurate
+                let elapsed = now
+                    .saturating_sub(self.pod_task_started_at[pod.0 as usize])
+                    .as_millis();
+                let exec_ms = elapsed.saturating_sub(self.cfg.exec_overhead_ms.min(elapsed));
+                // speculative duplicate that lost the race: the task
+                // already completed in its other copy — the whole run is
+                // wasted work, and the worker simply moves on
+                if self.engine.state(task) == TaskState::Done {
+                    self.record_running(ttype, -1);
+                    self.task_running[task.0 as usize] -= 1;
+                    self.chaos_stats
+                        .add_waste(self.tenant_of(task).idx(), exec_ms);
+                    self.metrics.inc("speculative_losses", 1);
+                    if let Some(pool) = self.pods[pod.0 as usize].pool_id() {
+                        self.advance_worker(pod, pool);
+                    }
+                    return;
+                }
+                if self.chaos.is_some() {
+                    self.chaos_stats.useful_ms += exec_ms;
+                }
                 self.trace.finished(task, now);
                 self.record_running(ttype, -1);
+                self.task_running[task.0 as usize] -= 1;
                 self.completed_by_type[ttype.0 as usize] += 1;
                 // readiness propagation through the reusable scratch buffer
                 let mut ready = std::mem::take(&mut self.ready_buf);
@@ -852,20 +1397,7 @@ impl World {
                             self.terminate_pod(pod, PodPhase::Succeeded);
                         }
                     }
-                    Some(pool) => {
-                        self.broker.ack(pool);
-                        self.record_queue_depth(pool);
-                        if self.pods[pod.0 as usize].phase == PodPhase::Draining {
-                            self.terminate_pod(pod, PodPhase::Succeeded);
-                        } else if let Some(next) = self.broker.fetch(pool) {
-                            self.q.schedule_at(
-                                now + SimTime::from_millis(self.cfg.fetch_ms),
-                                Ev::WorkerFetched { pod, task: next },
-                            );
-                        } else {
-                            self.idle_workers[pool.idx()].push_back(pod);
-                        }
-                    }
+                    Some(pool) => self.advance_worker(pod, pool),
                 }
             }
             Ev::FlushTimer { type_idx, deadline } => {
@@ -886,6 +1418,95 @@ impl World {
             }
             Ev::InstanceArrive { inst } => {
                 self.instance_arrive(inst as usize);
+            }
+            Ev::ChaosFault { proc_idx, node } => {
+                self.apply_fault(proc_idx as usize, node);
+                // lazy Poisson process: draw + schedule the next strike
+                self.schedule_next_fault(proc_idx as usize);
+            }
+            Ev::ChaosReclaim { node, replace_ms } => {
+                self.drain_pending[node] = false;
+                if !self.nodes[node].failed {
+                    self.chaos_stats.spot_reclaims += 1;
+                    self.metrics.inc("spot_reclaims", 1);
+                    self.fail_node_inner(node, true);
+                    self.q
+                        .schedule_in(SimTime::from_millis(replace_ms), Ev::ChaosRestore { node });
+                }
+                // if a crash beat the warning to it, the crash's own
+                // restore will bring the replacement up
+            }
+            Ev::ChaosRestore { node } => {
+                // replacement capacity: same slot, fresh incarnation
+                self.node_incarnation[node] += 1;
+                self.nodes[node].failed = false;
+                self.nodes[node].cordoned = false;
+                self.drain_pending[node] = false;
+                self.blacklist_until[node] = SimTime::ZERO;
+                self.node_fault_counts[node] = 0;
+                // replacement hardware rolls the straggler dice again
+                let resample = self.chaos.as_mut().and_then(|ch| {
+                    ch.straggler
+                        .map(|(frac, factor)| if ch.node_rng.f64() < frac { factor } else { 1.0 })
+                });
+                if let Some(slow) = resample {
+                    self.node_slow[node] = slow;
+                }
+                self.update_chaos_quota();
+                self.metrics.inc("nodes_restored", 1);
+                self.run_scheduler();
+            }
+            Ev::ChaosUncordon { node } => {
+                let now = self.now();
+                if !self.nodes[node].failed
+                    && !self.drain_pending[node]
+                    && self.blacklist_until[node] <= now
+                    && self.nodes[node].cordoned
+                {
+                    self.nodes[node].cordoned = false;
+                    self.run_scheduler();
+                }
+            }
+            Ev::ChaosRetryTask { task } => {
+                if self.engine.state(task) == TaskState::Done {
+                    return; // a speculative copy landed it in the meantime
+                }
+                if self.task_running[task.0 as usize] > 0 {
+                    return; // a copy started while the back-off ran; it owns the work
+                }
+                let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
+                match self.pool_of_type[ttype.0 as usize] {
+                    Some(pool) => {
+                        self.broker.publish_for(pool, task, self.tenant_of(task));
+                        self.record_queue_depth(pool);
+                        self.wake_idle_worker(pool);
+                    }
+                    // defensive: a task of an unpooled type re-enters as a
+                    // single-task job
+                    None => self.create_job(vec![task]),
+                }
+            }
+            Ev::ChaosRetryBatch { tasks } => {
+                self.create_job(tasks);
+            }
+            Ev::SpecCheck { pod, task } => {
+                // still running in this pod after spec_factor x nominal?
+                if self.pods[pod.0 as usize].is_terminal()
+                    || self.current_task[pod.0 as usize] != Some(task)
+                    || self.engine.state(task) == TaskState::Done
+                    || self.spec_launched[task.0 as usize]
+                {
+                    return;
+                }
+                self.spec_launched[task.0 as usize] = true;
+                self.chaos_stats.speculations += 1;
+                self.metrics.inc("speculative_copies", 1);
+                let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
+                if let Some(pool) = self.pool_of_type[ttype.0 as usize] {
+                    self.broker.publish_for(pool, task, self.tenant_of(task));
+                    self.record_queue_depth(pool);
+                    self.wake_idle_worker(pool);
+                }
             }
             Ev::AutoscaleTick => {
                 self.autoscale();
@@ -987,8 +1608,37 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
         .map(|i| metrics.gauge_id(&format!("replicas::{}", broker.name(PoolId(i as u16)))))
         .collect();
 
+    let n_tasks = engine.dag().len();
+    let chaos = ChaosRuntime::build(
+        &cfg.chaos,
+        cfg.pod_failure_prob,
+        model,
+        cfg.seed,
+        cfg.autoscale.quota_cpu_m,
+    );
+    let chaos_enabled = chaos.is_some();
+    // per-task chaos tables (healthy runs read work_left in start_task too,
+    // so it always mirrors the DAG durations)
+    let task_work_left: Vec<SimTime> = engine.dag().tasks.iter().map(|t| t.duration).collect();
+
     let mut world = World {
-        rng: crate::util::rng::Rng::new(cfg.seed ^ 0xFA11),
+        chaos,
+        chaos_stats: ChaosStats {
+            enabled: chaos_enabled,
+            ..Default::default()
+        },
+        node_slow: vec![1.0; cfg.nodes],
+        node_incarnation: vec![0; cfg.nodes],
+        node_fault_counts: vec![0; cfg.nodes],
+        drain_pending: vec![false; cfg.nodes],
+        blacklist_until: vec![SimTime::ZERO; cfg.nodes],
+        pod_bound_inc: Vec::new(),
+        pod_task_started_at: Vec::new(),
+        task_work_left,
+        task_attempts: vec![0; n_tasks],
+        task_fault_at: vec![NO_FAULT; n_tasks],
+        spec_launched: vec![false; n_tasks],
+        task_running: vec![0; n_tasks],
         nodes: paper_cluster(cfg.nodes),
         sched: Scheduler::new(cfg.sched.clone()),
         api: ApiServer::new(cfg.api.clone()),
@@ -1043,6 +1693,20 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
             .schedule_at(SimTime::from_millis(at_ms), Ev::NodeEvent { node, up });
     }
     world.cfg.node_events = node_events;
+    // chaos: sample the straggler table and arm every timed injector
+    let straggler = world.chaos.as_ref().and_then(|c| c.straggler);
+    if let Some((frac, factor)) = straggler {
+        let n = world.nodes.len();
+        let slow = {
+            let ch = world.chaos.as_mut().expect("chaos runtime");
+            sample_node_slowdowns(n, frac, factor, &mut ch.node_rng)
+        };
+        world.node_slow = slow;
+    }
+    let n_processes = world.chaos.as_ref().map(|c| c.processes.len()).unwrap_or(0);
+    for i in 0..n_processes {
+        world.schedule_next_fault(i);
+    }
     (world, initial_ready)
 }
 
@@ -1101,6 +1765,7 @@ fn summarize(world: World, model_name: String, makespan: SimTime, sim_events: u6
         sim_events,
         avg_running_tasks: avg_running,
         avg_cpu_utilization: avg_cpu,
+        chaos: world.chaos_stats.report(),
         trace: world.trace,
         metrics: world.metrics,
     }
@@ -1162,6 +1827,8 @@ pub fn run_fleet(
 
     let (mut world, initial_ready) = build(dag, &model, cfg);
     world.broker.set_tenant_weights(&plan.tenant_weights);
+    // per-tenant resilience accounting (wasted work / retries per lane)
+    world.chaos_stats.set_tenants(plan.tenant_weights.len());
 
     // per-task instance/tenant tables (the disjoint-union offset scheme)
     let mut task_instance = vec![0u32; n_tasks];
@@ -1546,6 +2213,121 @@ mod tests {
             );
             assert!(outcomes.iter().all(|o| o.finished > o.admitted));
         }
+    }
+
+    #[test]
+    fn chaos_every_model_completes_under_heavy_churn() {
+        // spot reclaims, crashes, flaky pod starts and stragglers all at
+        // once: every model must still finish every task exactly once,
+        // and the accounting must show the faults actually happened.
+        for model in [
+            ExecModel::JobBased,
+            ExecModel::Clustered(ClusteringConfig::paper_default()),
+            ExecModel::paper_hybrid_pools(),
+            ExecModel::GenericPool,
+        ] {
+            let dag = generate(&MontageConfig {
+                grid_w: 5,
+                grid_h: 5,
+                diagonals: true,
+                seed: 3,
+            });
+            let n = dag.len();
+            let mut cfg = SimConfig::with_nodes(4);
+            cfg.seed = 9;
+            cfg.chaos =
+                crate::chaos::ChaosConfig::parse_spec("spot:4,crash:2,pod:0.25,straggler:0.3")
+                    .unwrap();
+            let res = run(dag, model.clone(), cfg);
+            let name = model.name();
+            assert_eq!(res.trace.records.len(), n, "{name}: records");
+            for r in &res.trace.records {
+                assert!(r.finished_at.is_some(), "{name}: {:?} lost", r.task);
+            }
+            assert!(res.chaos.enabled, "{name}");
+            assert!(res.chaos.faults_total() > 0, "{name}: no faults injected");
+            assert!(res.chaos.wasted_ms > 0, "{name}: no waste accounted");
+            assert!(res.chaos.goodput() < 1.0, "{name}: goodput must dip");
+            assert!(res.chaos.goodput() > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn chaos_spot_churn_inflates_makespan() {
+        let mk = || {
+            generate(&MontageConfig {
+                grid_w: 6,
+                grid_h: 6,
+                diagonals: true,
+                seed: 2,
+            })
+        };
+        let healthy = run(mk(), ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4));
+        let mut cfg = SimConfig::with_nodes(4);
+        cfg.seed = 5;
+        cfg.chaos = crate::chaos::ChaosConfig::parse_spec("spot:6,crash:3").unwrap();
+        let churned = run(mk(), ExecModel::paper_hybrid_pools(), cfg);
+        assert!(
+            churned.makespan > healthy.makespan,
+            "churn {} vs healthy {}",
+            churned.makespan,
+            healthy.makespan
+        );
+        assert!(healthy.chaos.wasted_ms == 0 && !healthy.chaos.enabled);
+    }
+
+    #[test]
+    fn legacy_pod_failure_prob_is_migrated_onto_the_chaos_engine() {
+        // the deprecated knob must keep injecting failures — now routed
+        // through the PodFailure injector with waste + retry accounting
+        let dag = small_dag();
+        let n = dag.len();
+        let mut cfg = SimConfig::with_nodes(4);
+        cfg.pod_failure_prob = 0.3;
+        cfg.seed = 13;
+        let res = run(dag, ExecModel::JobBased, cfg);
+        assert_eq!(res.trace.records.len(), n);
+        assert!(res.metrics.counter("pod_failures") > 0);
+        assert!(res.chaos.enabled, "legacy knob must enable the subsystem");
+        assert_eq!(
+            res.chaos.pod_failures,
+            res.metrics.counter("pod_failures"),
+            "chaos accounting mirrors the metric"
+        );
+        assert!(res.chaos.retries > 0, "failed batches are retried");
+        assert!(res.chaos.wasted_ms > 0, "burned pod starts are waste");
+    }
+
+    #[test]
+    fn fleet_under_chaos_drains_and_stamps_every_instance() {
+        // regression (fleet accounting under retries): per-instance
+        // outstanding counters must not drift when tasks fail and re-enter
+        // the queue — a faulty fleet run still drains, and every instance
+        // gets admission + completion stamps. (run_fleet panics on any
+        // unstamped instance.)
+        let (a, b) = (small_dag(), small_dag());
+        let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+        let union = Dag::disjoint_union(&[a, b]);
+        let plan = two_instance_plan(n_a, n_b, 20_000, None);
+        let mut cfg = SimConfig::with_nodes(4);
+        cfg.seed = 21;
+        cfg.chaos =
+            crate::chaos::ChaosConfig::parse_spec("pod:0.25,crash:6,straggler:0.5").unwrap();
+        let (res, outcomes) = run_fleet(union, ExecModel::paper_hybrid_pools(), cfg, &plan);
+        assert_eq!(outcomes.len(), 2);
+        for o in &outcomes {
+            assert!(o.finished > o.admitted);
+        }
+        assert_eq!(res.metrics.counter("instances_completed"), 2);
+        assert_eq!(res.trace.records.len(), (n_a + n_b) as usize);
+        assert!(res.chaos.faults_total() > 0, "churn must actually occur");
+        // per-tenant resilience lanes are sized; task-attributable waste
+        // lands in them, shared worker-crash waste only in the total
+        assert_eq!(res.chaos.wasted_ms_by_tenant.len(), 2);
+        assert!(
+            res.chaos.wasted_ms_by_tenant.iter().sum::<u64>() <= res.chaos.wasted_ms,
+            "lanes cannot exceed the total"
+        );
     }
 
     #[test]

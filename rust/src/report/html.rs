@@ -29,6 +29,37 @@ pub fn render(res: &SimResult) -> String {
         res.avg_cpu_utilization * 100.0
     ));
 
+    // resilience section (chaos runs only)
+    if res.chaos.enabled {
+        let c = &res.chaos;
+        body.push_str(&format!(
+            "<h2>resilience (chaos engine)</h2>\
+             <table class='kv'>\
+             <tr><td>faults injected</td><td>{} (pod {}, spot reclaim {}, crash {})</td></tr>\
+             <tr><td>retries</td><td>{}</td></tr>\
+             <tr><td>speculative copies</td><td>{} ({} lost races)</td></tr>\
+             <tr><td>node blacklists</td><td>{}</td></tr>\
+             <tr><td>wasted work</td><td>{:.1} s</td></tr>\
+             <tr><td>goodput</td><td>{:.1}%</td></tr>\
+             <tr><td>recovery latency</td><td>p50 {:.1} s &middot; p95 {:.1} s &middot; p99 {:.1} s ({} recoveries)</td></tr>\
+             </table>",
+            c.faults_total(),
+            c.pod_failures,
+            c.spot_reclaims,
+            c.node_crashes,
+            c.retries,
+            c.speculations,
+            res.metrics.counter("speculative_losses"),
+            c.blacklists,
+            c.wasted_ms as f64 / 1000.0,
+            c.goodput() * 100.0,
+            c.recovery_p50_s,
+            c.recovery_p95_s,
+            c.recovery_p99_s,
+            c.recoveries,
+        ));
+    }
+
     body.push_str(
         &AreaChart {
             title: "cluster utilization: workflow tasks executing in parallel".into(),
@@ -126,5 +157,31 @@ mod tests {
         assert!(html.contains("queue depth — mProject"));
         assert!(html.contains("task wait times"));
         assert!(html.contains("<th>p99 s</th>"), "tail-latency column");
+        assert!(
+            !html.contains("resilience"),
+            "healthy runs carry no chaos section"
+        );
+    }
+
+    #[test]
+    fn chaos_run_renders_the_resilience_section() {
+        let mut cfg = driver::SimConfig::with_nodes(3);
+        cfg.chaos =
+            crate::chaos::ChaosConfig::parse_spec("pod:0.2,crash:4,straggler:0.3").unwrap();
+        cfg.seed = 11;
+        let res = driver::run(
+            generate(&MontageConfig {
+                grid_w: 4,
+                grid_h: 4,
+                diagonals: true,
+                seed: 2,
+            }),
+            ExecModel::paper_hybrid_pools(),
+            cfg,
+        );
+        let html = super::render(&res);
+        assert!(html.contains("resilience (chaos engine)"));
+        assert!(html.contains("goodput"));
+        assert!(html.contains("recovery latency"));
     }
 }

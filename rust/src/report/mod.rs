@@ -112,6 +112,9 @@ pub struct SimResult {
     pub avg_running_tasks: f64,
     /// Average allocated CPU fraction of the cluster over the makespan.
     pub avg_cpu_utilization: f64,
+    /// Resilience accounting from the chaos engine (all-zero, with
+    /// `enabled == false`, on healthy runs).
+    pub chaos: crate::chaos::ChaosReport,
 }
 
 impl SimResult {
@@ -153,6 +156,7 @@ impl SimResult {
             ("sim_events", self.sim_events.into()),
             ("avg_running_tasks", self.avg_running_tasks.into()),
             ("avg_cpu_utilization", self.avg_cpu_utilization.into()),
+            ("chaos", self.chaos.to_json()),
             ("running_tasks_series", Json::Arr(series)),
         ])
     }

@@ -330,6 +330,65 @@ mod tests {
     }
 
     #[test]
+    fn event_exactly_at_the_horizon_goes_through_overflow_in_order() {
+        // base_ms = 0: the wheel covers [0, WHEEL); an event at exactly
+        // base_ms + WHEEL must take the overflow path, and FIFO order at
+        // that timestamp must survive the later sweep into the wheel.
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule_at(SimTime(HORIZON), 10);
+        q.schedule_at(SimTime(HORIZON), 11);
+        q.schedule_at(SimTime(HORIZON - 1), 0); // last in-wheel slot
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some((SimTime(HORIZON - 1), 0)));
+        // wheel drained -> rebase to HORIZON; the boundary events arrive
+        // in schedule order
+        assert_eq!(q.pop(), Some((SimTime(HORIZON), 10)));
+        assert_eq!(q.pop(), Some((SimTime(HORIZON), 11)));
+        // after the rebase the window is [HORIZON, 2*HORIZON): the new
+        // boundary is 2*HORIZON and the same contract holds there
+        q.schedule_at(SimTime(2 * HORIZON), 20);
+        q.schedule_at(SimTime(2 * HORIZON - 1), 19);
+        q.schedule_at(SimTime(2 * HORIZON), 21);
+        assert_eq!(q.pop(), Some((SimTime(2 * HORIZON - 1), 19)));
+        assert_eq!(q.pop(), Some((SimTime(2 * HORIZON), 20)));
+        assert_eq!(q.pop(), Some((SimTime(2 * HORIZON), 21)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn past_events_clamp_to_now_with_fifo_surviving_the_overflow_sweep() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        // two overflow events at one far timestamp (FIFO pair), plus an
+        // early event to drain the wheel first
+        q.schedule_at(SimTime(HORIZON + 500), 1);
+        q.schedule_at(SimTime(HORIZON + 500), 2);
+        q.schedule_at(SimTime(10), 0);
+        assert_eq!(q.pop(), Some((SimTime(10), 0)));
+        // popping the first overflow event forces the rebase sweep and
+        // advances now to HORIZON + 500
+        assert_eq!(q.pop(), Some((SimTime(HORIZON + 500), 1)));
+        assert_eq!(q.now(), SimTime(HORIZON + 500));
+        // events scheduled in the past (and exactly at now) clamp to now
+        // and join the *back* of the current bucket — behind the swept
+        // event 2 that is already there, in schedule order
+        q.schedule_at(SimTime(3), 90);
+        q.schedule_at(q.now(), 91);
+        q.schedule_at(SimTime::ZERO, 92);
+        let order: Vec<(u64, u32)> = std::iter::from_fn(|| q.pop())
+            .map(|(t, e)| (t.as_millis(), e))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                (HORIZON + 500, 2),
+                (HORIZON + 500, 90),
+                (HORIZON + 500, 91),
+                (HORIZON + 500, 92),
+            ]
+        );
+    }
+
+    #[test]
     fn interleaved_schedule_pop_keeps_window_sliding() {
         // march far past several horizons with short relative delays
         let mut q: EventQueue<u64> = EventQueue::new();

@@ -111,6 +111,77 @@ fn multicloud_pools_rerun_is_bit_identical() {
     assert!(a.transfers > 0, "2-cluster split must pay transfers");
 }
 
+/// Chaos rerun contract (the acceptance bar for `--chaos`): identical
+/// seed + chaos spec must reproduce the run bit-identically — makespan,
+/// wasted-work and retry counts included — for the pools model (the
+/// single-cluster counterpart of `McMode::Pools`) and the job model.
+/// Fault timelines are lazily-sampled Poisson processes, so this guards
+/// the whole draw-in-event-order discipline.
+#[test]
+fn chaos_rerun_reproduces_makespan_waste_and_retries() {
+    for model in [ExecModel::paper_hybrid_pools(), ExecModel::JobBased] {
+        let mk = || {
+            let mut cfg = driver::SimConfig::with_nodes(4);
+            cfg.seed = 7;
+            cfg.chaos = hyperflow_k8s::chaos::ChaosConfig::parse_spec("spot:0.2").unwrap();
+            driver::run(montage(6, 3), model.clone(), cfg)
+        };
+        let (a, b) = (mk(), mk());
+        let name = model.name();
+        assert_eq!(a.makespan, b.makespan, "{name}: makespan under spot churn");
+        assert_eq!(a.chaos.wasted_ms, b.chaos.wasted_ms, "{name}: wasted work");
+        assert_eq!(a.chaos.retries, b.chaos.retries, "{name}: retry count");
+        assert_eq!(a.chaos.spot_reclaims, b.chaos.spot_reclaims, "{name}: reclaims");
+        assert_eq!(a.sim_events, b.sim_events, "{name}: event count");
+        assert_eq!(a.sched_binds, b.sched_binds, "{name}: binds");
+    }
+    // heavier spec exercising every injector + recovery mechanism at once
+    let mk = || {
+        let mut cfg = driver::SimConfig::with_nodes(4);
+        cfg.seed = 11;
+        cfg.chaos = hyperflow_k8s::chaos::ChaosConfig::parse_spec(
+            "spot:2,crash:1,pod:0.1,straggler:0.5",
+        )
+        .unwrap();
+        driver::run(montage(6, 3), ExecModel::paper_hybrid_pools(), cfg)
+    };
+    let (a, b) = (mk(), mk());
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.chaos.wasted_ms, b.chaos.wasted_ms);
+    assert_eq!(a.chaos.retries, b.chaos.retries);
+    assert_eq!(a.chaos.speculations, b.chaos.speculations);
+    assert_eq!(a.chaos.recovery_p99_s, b.chaos.recovery_p99_s);
+    assert_eq!(a.sim_events, b.sim_events);
+}
+
+/// Chaos fleet runs must reproduce too — the fault processes interleave
+/// with open-loop arrivals through one calendar queue.
+#[test]
+fn chaos_fleet_rerun_is_bit_identical() {
+    let mk = || {
+        let cfg = FleetConfig {
+            arrival: ArrivalProcess::Poisson { per_hour: 60.0 },
+            duration_s: 400.0,
+            tenants: fleet::default_tenants(2, &[3, 4]),
+            seed: 42,
+            max_in_flight: None,
+        };
+        let mut sim = driver::SimConfig::with_nodes(4);
+        sim.seed = 42;
+        sim.chaos = hyperflow_k8s::chaos::ChaosConfig::parse_spec("spot:1,pod:0.05").unwrap();
+        fleet::run(ExecModel::paper_hybrid_pools(), sim, &cfg)
+    };
+    let (a, b) = (mk(), mk());
+    assert_eq!(a.sim.makespan, b.sim.makespan);
+    assert_eq!(a.sim.sim_events, b.sim.sim_events);
+    assert_eq!(a.sim.chaos.wasted_ms, b.sim.chaos.wasted_ms);
+    assert_eq!(a.sim.chaos.retries_by_tenant, b.sim.chaos.retries_by_tenant);
+    assert_eq!(
+        fleet::report::render_table(&a),
+        fleet::report::render_table(&b)
+    );
+}
+
 /// Fleet runs (open-loop arrivals, tenancy, fair-share lanes, admission
 /// control) must reproduce the per-tenant slowdown table from the seed —
 /// the acceptance contract of `hyperflow serve`.
