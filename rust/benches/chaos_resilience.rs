@@ -22,7 +22,7 @@
 use hyperflow_k8s::chaos::ChaosConfig;
 use hyperflow_k8s::engine::clustering::ClusteringConfig;
 use hyperflow_k8s::models::{driver, ExecModel};
-use hyperflow_k8s::util::env::env_usize;
+use hyperflow_k8s::util::env::{env_f64_list, env_usize};
 use hyperflow_k8s::util::json::Json;
 use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
 
@@ -30,14 +30,7 @@ fn main() {
     let nodes = env_usize("HF_CHAOS_NODES", 4);
     let grid = env_usize("HF_CHAOS_GRID", 6);
     let seed: u64 = 42;
-    let rates: Vec<f64> = std::env::var("HF_CHAOS_RATES")
-        .ok()
-        .map(|s| {
-            s.split(',')
-                .map(|r| r.trim().parse().expect("HF_CHAOS_RATES: numbers"))
-                .collect()
-        })
-        .unwrap_or_else(|| vec![1.0, 2.0, 4.0, 8.0]);
+    let rates = env_f64_list("HF_CHAOS_RATES", &[1.0, 2.0, 4.0, 8.0]);
 
     let models: Vec<(&str, ExecModel)> = vec![
         ("job-based", ExecModel::JobBased),

@@ -1,0 +1,126 @@
+//! Data-plane sweep: re-run the paper's model comparison under realistic
+//! I/O pressure — NFS bandwidth x backend x execution model — and record,
+//! per point, the makespan, bytes moved, cache hit ratio, stage-in tail
+//! and I/O share. The headline is the warm-cache asymmetry: long-lived
+//! pool workers keep node-local caches across tasks, job pods always
+//! start cold, so at constrained NFS bandwidth worker-pools beat the job
+//! model on bytes moved and stage-in p95 (see EXPERIMENTS.md §"Data
+//! plane / storage" for how to read the knee).
+//!
+//! Results are written to `BENCH_data.json` (crate root, next to
+//! `BENCH_driver.json`, `BENCH_fleet.json` and `BENCH_chaos.json`).
+//!
+//!   cargo bench --bench data_locality
+//!
+//! CI runs a reduced sweep: `HF_DATA_GRID=4 HF_DATA_RATES=0.5,2`.
+//! `HF_DATA_RATES=0.25,1,...` overrides the swept NFS bandwidths
+//! (Gbit/s); `HF_DATA_CACHE_GB` the per-node cache size.
+
+use hyperflow_k8s::data::DataConfig;
+use hyperflow_k8s::models::{driver, ExecModel};
+use hyperflow_k8s::util::env::{env_f64, env_f64_list, env_usize};
+use hyperflow_k8s::util::json::Json;
+use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
+
+fn main() {
+    let nodes = env_usize("HF_DATA_NODES", 4);
+    let grid = env_usize("HF_DATA_GRID", 6);
+    let cache_gb = env_f64("HF_DATA_CACHE_GB", 4.0);
+    let seed: u64 = 42;
+    let rates = env_f64_list("HF_DATA_RATES", &[0.25, 0.5, 1.0, 2.0, 5.0]);
+
+    let models: Vec<(&str, ExecModel)> = vec![
+        ("job-based", ExecModel::JobBased),
+        ("worker-pools", ExecModel::paper_hybrid_pools()),
+    ];
+    // NFS points sweep the aggregate server bandwidth; one object-store
+    // point anchors the per-request-latency regime for comparison.
+    let mut backends: Vec<(String, String)> = rates
+        .iter()
+        .map(|r| (format!("nfs:{r}"), format!("nfs:{r},cache:{cache_gb}")))
+        .collect();
+    backends.push(("s3:30x1".into(), format!("s3:30x1,cache:{cache_gb}")));
+
+    let mk_dag = || {
+        generate(&MontageConfig {
+            grid_w: grid,
+            grid_h: grid,
+            diagonals: true,
+            seed,
+        })
+    };
+
+    println!(
+        "== data locality sweep == ({nodes} nodes, montage {grid}x{grid}, \
+         NFS rates {rates:?} Gbit/s + s3, cache {cache_gb} GB/node, seed {seed})\n"
+    );
+    let mut model_rows: Vec<Json> = Vec::new();
+    for (name, model) in &models {
+        let mut cfg = driver::SimConfig::with_nodes(nodes);
+        cfg.seed = seed;
+        let baseline = driver::run(mk_dag(), model.clone(), cfg);
+        let base_s = baseline.makespan.as_secs_f64();
+        println!("{name}: no-data makespan {base_s:.0}s");
+        let mut points: Vec<Json> = Vec::new();
+        for (label, spec) in &backends {
+            let mut cfg = driver::SimConfig::with_nodes(nodes);
+            cfg.seed = seed;
+            cfg.max_sim_s = 24.0 * 3600.0; // starved links stretch runs
+            cfg.data = Some(DataConfig::parse_spec(spec).expect("bench data spec"));
+            let res = driver::run(mk_dag(), model.clone(), cfg);
+            let d = &res.data;
+            let makespan_s = res.makespan.as_secs_f64();
+            println!(
+                "  {label:>10}: makespan {makespan_s:>7.0}s (x{:>5.2})  moved {:>6.2} GB  \
+                 hits {:>5.1}%  stage-in p50/p95/p99 {:>5.2}/{:>5.2}/{:>6.2}s  io {:>4.1}%",
+                makespan_s / base_s,
+                d.bytes_moved() as f64 / 1e9,
+                d.cache_hit_ratio() * 100.0,
+                d.stage_in_p50_s,
+                d.stage_in_p95_s,
+                d.stage_in_p99_s,
+                d.io_frac() * 100.0,
+            );
+            points.push(Json::obj(vec![
+                ("backend", Json::str(label)),
+                ("data_spec", Json::str(spec)),
+                ("makespan_s", makespan_s.into()),
+                ("makespan_inflation", (makespan_s / base_s).into()),
+                ("bytes_in", d.bytes_in.into()),
+                ("bytes_out", d.bytes_out.into()),
+                ("bytes_moved", d.bytes_moved().into()),
+                ("cache_hit_ratio", d.cache_hit_ratio().into()),
+                ("evictions", d.evictions.into()),
+                ("transfers", d.transfers.into()),
+                ("stage_in_p50_s", d.stage_in_p50_s.into()),
+                ("stage_in_p95_s", d.stage_in_p95_s.into()),
+                ("stage_in_p99_s", d.stage_in_p99_s.into()),
+                ("io_frac", d.io_frac().into()),
+            ]));
+        }
+        println!();
+        model_rows.push(Json::obj(vec![
+            ("model", Json::str(name)),
+            ("baseline_makespan_s", base_s.into()),
+            ("points", Json::Arr(points)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("data_locality")),
+        ("nodes", nodes.into()),
+        ("grid", grid.into()),
+        ("cache_gb", cache_gb.into()),
+        ("seed", seed.into()),
+        (
+            "nfs_rates_gbps",
+            Json::Arr(rates.iter().map(|&r| r.into()).collect()),
+        ),
+        ("models", Json::Arr(model_rows)),
+    ]);
+    let path = "BENCH_data.json";
+    match std::fs::write(path, out.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

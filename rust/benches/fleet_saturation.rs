@@ -17,21 +17,14 @@
 
 use hyperflow_k8s::fleet::{self, ArrivalProcess, FleetConfig};
 use hyperflow_k8s::models::{driver, ExecModel};
-use hyperflow_k8s::util::env::{env_f64, env_usize};
+use hyperflow_k8s::util::env::{env_f64, env_f64_list, env_usize};
 use hyperflow_k8s::util::json::Json;
 
 fn main() {
     let nodes = env_usize("HF_FLEET_NODES", 4);
     let duration = env_f64("HF_FLEET_DURATION", 1800.0);
     let tenants = env_usize("HF_FLEET_TENANTS", 4);
-    let rates: Vec<f64> = std::env::var("HF_FLEET_RATES")
-        .ok()
-        .map(|s| {
-            s.split(',')
-                .map(|r| r.trim().parse().expect("HF_FLEET_RATES: numbers"))
-                .collect()
-        })
-        .unwrap_or_else(|| vec![15.0, 30.0, 60.0, 90.0, 120.0]);
+    let rates = env_f64_list("HF_FLEET_RATES", &[15.0, 30.0, 60.0, 90.0, 120.0]);
 
     println!(
         "== fleet saturation sweep == ({nodes} nodes, {duration:.0}s arrival window, \

@@ -1,6 +1,10 @@
 //! Shared data store: the in-memory stand-in for the cluster's shared
 //! filesystem (the paper's setup stages Montage files on a shared volume).
 //! Thread-safe: worker-pod threads read inputs and publish outputs here.
+//!
+//! Byte accounting mirrors the simulated data plane ([`crate::data`]):
+//! `put` records each tensor's byte length, so the realtime e2e path can
+//! report actual bytes moved alongside the simulator's modeled transfers.
 
 use crate::runtime::Tensor;
 use anyhow::{anyhow, Result};
@@ -8,8 +12,19 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 #[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<String, Arc<Tensor>>,
+    bytes: usize,
+}
+
+#[derive(Debug, Default)]
 pub struct Store {
-    inner: Mutex<HashMap<String, Arc<Tensor>>>,
+    inner: Mutex<Inner>,
+}
+
+/// Byte length of a stored tensor (f32 payload).
+fn tensor_bytes(t: &Tensor) -> usize {
+    t.data.len() * 4
 }
 
 impl Store {
@@ -17,11 +32,15 @@ impl Store {
         Store::default()
     }
 
+    /// Insert (or replace) a tensor, keeping the byte total exact across
+    /// overwrites.
     pub fn put(&self, key: &str, t: Tensor) {
-        self.inner
-            .lock()
-            .unwrap()
-            .insert(key.to_string(), Arc::new(t));
+        let sz = tensor_bytes(&t);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.insert(key.to_string(), Arc::new(t)) {
+            inner.bytes -= tensor_bytes(&old);
+        }
+        inner.bytes += sz;
     }
 
     /// Fetch a tensor; error mentions the key (missing data = dependency
@@ -30,31 +49,44 @@ impl Store {
         self.inner
             .lock()
             .unwrap()
+            .map
             .get(key)
             .cloned()
             .ok_or_else(|| anyhow!("store: key '{key}' not present"))
     }
 
     pub fn contains(&self, key: &str) -> bool {
-        self.inner.lock().unwrap().contains_key(key)
+        self.inner.lock().unwrap().map.contains_key(key)
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Approximate resident bytes (for the e2e report).
-    pub fn bytes(&self) -> usize {
+    /// Total resident bytes, maintained incrementally on `put` (O(1), not
+    /// a scan — the e2e report polls this per stage).
+    pub fn bytes_total(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Byte size of one key's tensor, if present.
+    pub fn bytes_of(&self, key: &str) -> Option<usize> {
         self.inner
             .lock()
             .unwrap()
-            .values()
-            .map(|t| t.data.len() * 4)
-            .sum()
+            .map
+            .get(key)
+            .map(|t| tensor_bytes(t))
+    }
+
+    /// Resident bytes (kept for older call sites; same as
+    /// [`Store::bytes_total`]).
+    pub fn bytes(&self) -> usize {
+        self.bytes_total()
     }
 }
 
@@ -71,6 +103,22 @@ mod tests {
         assert!(s.contains("a"));
         assert_eq!(s.len(), 1);
         assert_eq!(s.bytes(), 8);
+        assert_eq!(s.bytes_total(), 8);
+        assert_eq!(s.bytes_of("a"), Some(8));
+        assert_eq!(s.bytes_of("b"), None);
+    }
+
+    #[test]
+    fn overwrite_keeps_byte_total_exact() {
+        let s = Store::new();
+        s.put("k", Tensor::new(vec![0.0; 8], &[8]));
+        assert_eq!(s.bytes_total(), 32);
+        // replacing with a smaller tensor must not leak the old size
+        s.put("k", Tensor::new(vec![0.0; 2], &[2]));
+        assert_eq!(s.bytes_total(), 8);
+        assert_eq!(s.bytes_of("k"), Some(8));
+        s.put("j", Tensor::new(vec![0.0; 4], &[4]));
+        assert_eq!(s.bytes_total(), 24);
     }
 
     #[test]
@@ -95,5 +143,6 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(s.len(), 8);
+        assert_eq!(s.bytes_total(), 32, "8 single-f32 tensors");
     }
 }

@@ -146,6 +146,12 @@ fn parse_sim(j: Option<&Json>, nodes_default: usize) -> Result<SimConfig> {
         sim.chaos = crate::chaos::ChaosConfig::parse_spec(c.as_str().map_err(je)?)
             .map_err(|e| anyhow!("chaos spec: {e}"))?;
     }
+    if let Some(d) = j.opt("data") {
+        sim.data = Some(
+            crate::data::DataConfig::parse_spec(d.as_str().map_err(je)?)
+                .map_err(|e| anyhow!("data spec: {e}"))?,
+        );
+    }
     if let Some(cap) = j.opt("max_pending_pods") {
         sim.max_pending_pods = Some(cap.as_usize().map_err(je)?);
     }
@@ -318,6 +324,26 @@ mod tests {
             "workflow": {"type": "montage", "grid": 3},
             "model": {"type": "pools"},
             "sim": {"chaos": "meteor:1"}
+        }"#;
+        assert!(ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn data_spec_parses_and_bad_specs_are_rejected() {
+        let src = r#"{
+            "workflow": {"type": "montage", "grid": 3},
+            "model": {"type": "pools"},
+            "sim": {"nodes": 4, "data": "nfs:1,cache:4,locality:on"}
+        }"#;
+        let cfg = ExperimentConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        let data = cfg.sim.data.expect("data plane configured");
+        assert!(data.locality);
+        assert_eq!(data.cache_bytes, 4_000_000_000);
+
+        let bad = r#"{
+            "workflow": {"type": "montage", "grid": 3},
+            "model": {"type": "pools"},
+            "sim": {"data": "cache:4"}
         }"#;
         assert!(ExperimentConfig::from_json(&Json::parse(bad).unwrap()).is_err());
     }

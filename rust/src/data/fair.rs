@@ -1,0 +1,324 @@
+//! Max-min fair bandwidth allocation (progressive filling).
+//!
+//! A transfer ("flow") crosses one or more capacitated resources — here a
+//! node's NIC and, for the shared-NFS backend, the file server's aggregate
+//! link — and may additionally be limited by a per-flow cap (the object
+//! store's per-stream bandwidth). The **max-min fair** allocation is the
+//! unique rate vector in which no flow's rate can be increased without
+//! decreasing the rate of a flow that is no better off: water-fill all
+//! flows together, freezing a flow when it hits its own cap or when one of
+//! its resources saturates, until every flow is frozen.
+//!
+//! The driver recomputes the allocation whenever a transfer starts or
+//! finishes (rates are piecewise-constant between such events), so the
+//! whole transfer timeline is a deterministic function of the event order
+//! — identical seed + config stays bit-reproducible.
+
+/// Relative numerical slack for saturation checks.
+const EPS: f64 = 1e-9;
+
+/// One flow's constraint set: the resources it crosses (indices into the
+/// capacity vector) and an optional per-flow rate cap.
+#[derive(Debug, Clone)]
+pub struct FlowReq {
+    pub links: Vec<usize>,
+    /// Per-flow rate cap (`f64::INFINITY` = resource-limited only).
+    pub cap: f64,
+}
+
+impl FlowReq {
+    /// A flow limited only by the resources it crosses.
+    pub fn through(links: Vec<usize>) -> Self {
+        FlowReq {
+            links,
+            cap: f64::INFINITY,
+        }
+    }
+
+    /// Add a per-flow rate cap (object-store per-stream bandwidth).
+    pub fn with_cap(mut self, cap: f64) -> Self {
+        self.cap = cap;
+        self
+    }
+}
+
+/// Reusable scratch for repeated max-min computations — the data plane
+/// recomputes shares on every transfer start/finish, and the driver's
+/// hot-path discipline is zero steady-state allocation (EXPERIMENTS.md
+/// §Perf), so the working vectors live here across calls.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    alloc: Vec<f64>,
+    rem: Vec<f64>,
+    active: Vec<bool>,
+    count: Vec<usize>,
+}
+
+impl Workspace {
+    /// Compute the max-min fair share of every flow given per-resource
+    /// capacities, into the workspace's reusable buffers; the returned
+    /// slice is valid until the next call. Units are arbitrary but must
+    /// be consistent (the data plane uses bytes/ms). Every flow must
+    /// cross at least one resource or carry a finite cap — otherwise its
+    /// fair share would be unbounded.
+    pub fn shares(&mut self, capacity: &[f64], flows: &[FlowReq]) -> &[f64] {
+        let n = flows.len();
+        self.alloc.clear();
+        self.alloc.resize(n, 0.0);
+        if n == 0 {
+            return &self.alloc;
+        }
+        for f in flows {
+            assert!(
+                !f.links.is_empty() || f.cap.is_finite(),
+                "unconstrained flow has no max-min share"
+            );
+            debug_assert!(f.links.iter().all(|&r| r < capacity.len()));
+        }
+        self.rem.clear();
+        self.rem.extend_from_slice(capacity);
+        self.active.clear();
+        self.active.resize(n, true);
+        self.count.clear();
+        self.count.resize(capacity.len(), 0);
+        let mut n_active = n;
+        // Each round saturates at least one resource or flow cap, so the
+        // loop runs at most n + |capacity| rounds; the bound guards FP
+        // corner cases.
+        for _ in 0..(n + capacity.len() + 1) {
+            if n_active == 0 {
+                break;
+            }
+            self.count.fill(0);
+            for (i, f) in flows.iter().enumerate() {
+                if self.active[i] {
+                    for &r in &f.links {
+                        self.count[r] += 1;
+                    }
+                }
+            }
+            // the water level rises by the smallest per-flow headroom
+            let mut delta = f64::INFINITY;
+            for (r, &c) in self.count.iter().enumerate() {
+                if c > 0 {
+                    delta = delta.min(self.rem[r] / c as f64);
+                }
+            }
+            for (i, f) in flows.iter().enumerate() {
+                if self.active[i] {
+                    delta = delta.min(f.cap - self.alloc[i]);
+                }
+            }
+            if !delta.is_finite() {
+                break; // cannot happen with the constraint assert above
+            }
+            let delta = delta.max(0.0);
+            if delta > 0.0 {
+                for (i, f) in flows.iter().enumerate() {
+                    if self.active[i] {
+                        self.alloc[i] += delta;
+                        for &r in &f.links {
+                            self.rem[r] = (self.rem[r] - delta).max(0.0);
+                        }
+                    }
+                }
+            }
+            // freeze flows at their cap or on a saturated resource
+            for (i, f) in flows.iter().enumerate() {
+                if !self.active[i] {
+                    continue;
+                }
+                let capped = f.cap.is_finite() && self.alloc[i] + EPS * f.cap.max(1.0) >= f.cap;
+                let saturated = f
+                    .links
+                    .iter()
+                    .any(|&r| self.rem[r] <= EPS * capacity[r].max(1.0));
+                if capped || saturated {
+                    self.active[i] = false;
+                    n_active -= 1;
+                }
+            }
+        }
+        &self.alloc
+    }
+}
+
+/// One-shot convenience wrapper over [`Workspace::shares`] (tests and
+/// cold paths).
+pub fn max_min_shares(capacity: &[f64], flows: &[FlowReq]) -> Vec<f64> {
+    Workspace::default().shares(capacity, flows).to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} != {b}");
+    }
+
+    #[test]
+    fn single_flow_gets_its_bottleneck() {
+        let s = max_min_shares(&[10.0, 4.0], &[FlowReq::through(vec![0, 1])]);
+        assert_close(s[0], 4.0);
+    }
+
+    #[test]
+    fn equal_flows_split_one_resource_evenly() {
+        let flows: Vec<FlowReq> = (0..4).map(|_| FlowReq::through(vec![0])).collect();
+        let s = max_min_shares(&[8.0], &flows);
+        for &v in &s {
+            assert_close(v, 2.0);
+        }
+    }
+
+    #[test]
+    fn bottleneck_constrained_mix_hand_computed() {
+        // resources: A = 10, B = 4
+        // f0 crosses A only; f1 crosses A and B; f2 crosses B only.
+        // Water-filling: B saturates at level 2 (freezes f1, f2); f0
+        // continues alone on A up to 10 - 2 = 8.
+        let flows = vec![
+            FlowReq::through(vec![0]),
+            FlowReq::through(vec![0, 1]),
+            FlowReq::through(vec![1]),
+        ];
+        let s = max_min_shares(&[10.0, 4.0], &flows);
+        assert_close(s[0], 8.0);
+        assert_close(s[1], 2.0);
+        assert_close(s[2], 2.0);
+    }
+
+    #[test]
+    fn per_flow_cap_frees_headroom_for_the_rest() {
+        // the capped stream stops at 1; the other takes the remaining 9
+        let flows = vec![
+            FlowReq::through(vec![0]).with_cap(1.0),
+            FlowReq::through(vec![0]),
+        ];
+        let s = max_min_shares(&[10.0], &flows);
+        assert_close(s[0], 1.0);
+        assert_close(s[1], 9.0);
+    }
+
+    #[test]
+    fn cap_only_flow_needs_no_resource() {
+        let s = max_min_shares(&[], &[FlowReq { links: vec![], cap: 3.0 }]);
+        assert_close(s[0], 3.0);
+    }
+
+    #[test]
+    fn zero_capacity_resource_starves_its_flows() {
+        let flows = vec![FlowReq::through(vec![0]), FlowReq::through(vec![1])];
+        let s = max_min_shares(&[0.0, 5.0], &flows);
+        assert_close(s[0], 0.0);
+        assert_close(s[1], 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unconstrained flow")]
+    fn unconstrained_flow_is_rejected() {
+        max_min_shares(&[1.0], &[FlowReq::through(vec![])]);
+    }
+
+    #[test]
+    fn empty_problem() {
+        assert!(max_min_shares(&[3.0], &[]).is_empty());
+    }
+
+    /// Random problem generator: up to `size` flows over up to 6 resources,
+    /// each flow crossing 1-2 distinct resources, ~25% carrying a cap.
+    fn gen_problem(rng: &mut Rng, size: usize) -> (Vec<f64>, Vec<FlowReq>) {
+        let n_res = 1 + rng.below(6) as usize;
+        let caps: Vec<f64> = (0..n_res).map(|_| 1.0 + rng.f64() * 99.0).collect();
+        let n_flows = 1 + rng.below(size.max(1) as u64) as usize;
+        let flows: Vec<FlowReq> = (0..n_flows)
+            .map(|_| {
+                let a = rng.below(n_res as u64) as usize;
+                let mut links = vec![a];
+                if rng.below(2) == 1 && n_res > 1 {
+                    let b = rng.below(n_res as u64) as usize;
+                    if b != a {
+                        links.push(b);
+                    }
+                }
+                let mut f = FlowReq::through(links);
+                if rng.below(4) == 0 {
+                    f = f.with_cap(0.5 + rng.f64() * 20.0);
+                }
+                f
+            })
+            .collect();
+        (caps, flows)
+    }
+
+    #[test]
+    fn prop_allocations_respect_capacity_and_are_maximal() {
+        ptest::check(
+            "max-min feasible + maximal",
+            0xFA17,
+            60,
+            24,
+            gen_problem,
+            |(caps, flows)| {
+                let s = max_min_shares(caps, flows);
+                let tol = 1e-6;
+                // feasibility: per-resource sums within capacity
+                for (r, &cap) in caps.iter().enumerate() {
+                    let used: f64 = flows
+                        .iter()
+                        .zip(&s)
+                        .filter(|(f, _)| f.links.contains(&r))
+                        .map(|(_, &v)| v)
+                        .sum();
+                    if used > cap + tol * cap.max(1.0) {
+                        return Err(format!("resource {r} over capacity: {used} > {cap}"));
+                    }
+                }
+                // maximality: every flow is at its cap or on a saturated link
+                for (i, f) in flows.iter().enumerate() {
+                    let at_cap = f.cap.is_finite() && s[i] >= f.cap - tol * f.cap.max(1.0);
+                    let on_saturated = f.links.iter().any(|&r| {
+                        let used: f64 = flows
+                            .iter()
+                            .zip(&s)
+                            .filter(|(g, _)| g.links.contains(&r))
+                            .map(|(_, &v)| v)
+                            .sum();
+                        used >= caps[r] - tol * caps[r].max(1.0)
+                    });
+                    if !at_cap && !on_saturated {
+                        return Err(format!("flow {i} could still grow: {}", s[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_allocation_is_order_independent() {
+        ptest::check(
+            "max-min order independent",
+            0xFA18,
+            40,
+            16,
+            gen_problem,
+            |(caps, flows)| {
+                let fwd = max_min_shares(caps, flows);
+                // reverse the flow order and compare the mapped-back shares
+                let rev_flows: Vec<FlowReq> = flows.iter().rev().cloned().collect();
+                let rev = max_min_shares(caps, &rev_flows);
+                for (i, &v) in fwd.iter().enumerate() {
+                    let w = rev[flows.len() - 1 - i];
+                    if (v - w).abs() > 1e-6 * v.max(1.0) {
+                        return Err(format!("flow {i}: {v} (fwd) vs {w} (rev)"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

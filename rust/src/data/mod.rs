@@ -1,0 +1,938 @@
+//! Data plane: shared-storage and transfer modeling.
+//!
+//! The paper runs Montage against a shared NFS volume, but the simulator
+//! modeled tasks as pure compute — bytes never moved, so storage
+//! contention (a first-order effect on data-intensive workflows, and a
+//! core concern of workflow containerization in KubeAdaptor,
+//! arXiv:2207.01222) was invisible. This module makes data movement a
+//! deterministic, seeded part of every run:
+//!
+//! * **Workflow annotation** — each task declares external input bytes and
+//!   output bytes on the [`crate::workflow::dag::Dag`]; a task's inputs
+//!   are its predecessors' outputs plus its external stage-in. File ids
+//!   are task-scoped, so [`Dag::disjoint_union`] keeps fleet instances'
+//!   files disjoint for free.
+//! * **Backends** ([`Backend`]) — shared NFS with a bounded aggregate
+//!   server bandwidth, or an object store with per-request latency and a
+//!   per-stream bandwidth cap. Every node additionally owns a
+//!   [`NIC_GBPS`] network link.
+//! * **Transfers** — stage-in before execution and stage-out after, one
+//!   coalesced flow per task per direction, rated by max-min fair sharing
+//!   ([`fair`]) over the node links and the NFS server, recomputed on
+//!   every transfer start/finish. All events ride the calendar
+//!   [`crate::sim::EventQueue`], so identical seed + config is
+//!   bit-reproducible.
+//! * **Node-local ephemeral cache** — fetched inputs and produced outputs
+//!   land in an LRU cache on the pod's node, *owned by the pod* (emptyDir
+//!   semantics): entries die with their pod. Long-lived pool workers
+//!   therefore accumulate warm caches, while job pods start cold every
+//!   time — the central asymmetry `benches/data_locality.rs` measures.
+//!   Chaos kills take the cache with the pod (crash-loses-cache).
+//! * **Locality** — with `locality:on`, the scheduler prefers nodes
+//!   already caching a pending pod's input bytes (see
+//!   [`crate::k8s::scheduler::DataLocality`]); off, placement is
+//!   bit-identical to a build without the data plane.
+//!
+//! CLI spec: `--data nfs:1,cache:8,locality:on` (see
+//! [`DataConfig::parse_spec`]).
+
+pub mod fair;
+pub mod report;
+
+pub use report::{DataReport, DataStats};
+
+use crate::k8s::node::Node;
+use crate::k8s::pod::{Payload, Pod, PodId};
+use crate::k8s::scheduler::DataLocality;
+use crate::sim::SimTime;
+use crate::workflow::dag::Dag;
+use crate::workflow::task::TaskId;
+use fair::FlowReq;
+use std::collections::BTreeMap;
+
+/// Per-node NIC bandwidth (Gbit/s) shared by that node's transfers.
+pub const NIC_GBPS: f64 = 10.0;
+
+/// Default per-node cache capacity (decimal GB) when the spec omits
+/// `cache:`.
+pub const DEFAULT_CACHE_GB: f64 = 8.0;
+
+#[inline]
+fn gbps_to_bytes_per_ms(gbps: f64) -> f64 {
+    gbps * 1e9 / 8.0 / 1000.0
+}
+
+/// Storage backend the workflow's files live on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Backend {
+    /// Shared NFS server: one aggregate link of `gbps` Gbit/s that every
+    /// transfer (in either direction) crosses.
+    Nfs { gbps: f64 },
+    /// Object store: per-request latency plus a per-stream bandwidth cap;
+    /// aggregate backend bandwidth is unbounded (nodes' NICs still limit).
+    ObjectStore { latency_ms: u64, stream_gbps: f64 },
+}
+
+/// Complete data-plane description for a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataConfig {
+    pub backend: Backend,
+    /// Node-local ephemeral cache capacity in bytes (0 disables caching).
+    pub cache_bytes: u64,
+    /// Locality-aware scheduling: prefer nodes caching the pod's inputs.
+    pub locality: bool,
+}
+
+impl DataConfig {
+    /// Shared-NFS config with the default cache and locality off.
+    pub fn nfs(gbps: f64) -> Self {
+        DataConfig {
+            backend: Backend::Nfs { gbps },
+            cache_bytes: (DEFAULT_CACHE_GB * 1e9) as u64,
+            locality: false,
+        }
+    }
+
+    /// Parse the CLI/JSON data spec: comma-separated `kind:value` entries.
+    ///
+    /// | kind       | value                          | meaning |
+    /// |------------|--------------------------------|---------|
+    /// | `nfs`      | aggregate Gbit/s               | shared NFS backend |
+    /// | `s3`       | `<latency_ms>x<gbit/s>`        | object-store backend |
+    /// | `cache`    | decimal GB per node            | ephemeral cache size |
+    /// | `locality` | `on` / `off`                   | locality-aware placement |
+    ///
+    /// Exactly one backend entry is required.
+    /// Example: `nfs:1,cache:8,locality:on` or `s3:30x1.5,cache:4`.
+    pub fn parse_spec(spec: &str) -> Result<DataConfig, String> {
+        let mut backend: Option<Backend> = None;
+        let mut cache_bytes = (DEFAULT_CACHE_GB * 1e9) as u64;
+        let mut locality = false;
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind, value) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("data entry '{entry}' is not kind:value"))?;
+            let value = value.trim();
+            match kind.trim() {
+                "nfs" => {
+                    let g: f64 = value
+                        .parse()
+                        .map_err(|_| format!("data entry '{entry}': '{value}' is not a number"))?;
+                    if !g.is_finite() || g <= 0.0 {
+                        return Err(format!("data entry '{entry}': bandwidth must be > 0"));
+                    }
+                    if backend.is_some() {
+                        return Err("data spec lists more than one backend".into());
+                    }
+                    backend = Some(Backend::Nfs { gbps: g });
+                }
+                "s3" => {
+                    let (lat, bw) = value.split_once('x').ok_or_else(|| {
+                        format!("data entry '{entry}': s3 value is <latency_ms>x<gbit/s>")
+                    })?;
+                    let latency_ms: u64 = lat
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("data entry '{entry}': '{lat}' is not a number"))?;
+                    let stream_gbps: f64 = bw
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("data entry '{entry}': '{bw}' is not a number"))?;
+                    if !stream_gbps.is_finite() || stream_gbps <= 0.0 {
+                        return Err(format!(
+                            "data entry '{entry}': per-stream bandwidth must be > 0"
+                        ));
+                    }
+                    if backend.is_some() {
+                        return Err("data spec lists more than one backend".into());
+                    }
+                    backend = Some(Backend::ObjectStore {
+                        latency_ms,
+                        stream_gbps,
+                    });
+                }
+                "cache" => {
+                    let gb: f64 = value
+                        .parse()
+                        .map_err(|_| format!("data entry '{entry}': '{value}' is not a number"))?;
+                    if !gb.is_finite() || gb < 0.0 {
+                        return Err(format!("data entry '{entry}': cache size must be >= 0"));
+                    }
+                    cache_bytes = (gb * 1e9) as u64;
+                }
+                "locality" => {
+                    locality = match value {
+                        "on" => true,
+                        "off" => false,
+                        other => {
+                            return Err(format!(
+                                "data entry '{entry}': locality is on|off, not '{other}'"
+                            ))
+                        }
+                    };
+                }
+                other => {
+                    return Err(format!(
+                        "unknown data entry '{other}' (expected nfs, s3, cache, locality)"
+                    ))
+                }
+            }
+        }
+        let backend = backend.ok_or_else(|| {
+            "data spec needs a backend: nfs:<gbit/s> or s3:<latency_ms>x<gbit/s>".to_string()
+        })?;
+        Ok(DataConfig {
+            backend,
+            cache_bytes,
+            locality,
+        })
+    }
+}
+
+/// Transfer direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dir {
+    In,
+    Out,
+}
+
+/// One coalesced transfer (all of a task's missing input bytes, or its
+/// output) between the backend and a node.
+#[derive(Debug)]
+struct Flow {
+    pod: PodId,
+    task: TaskId,
+    node: usize,
+    tenant: usize,
+    dir: Dir,
+    /// Total bytes this flow moves (for accounting).
+    total: u64,
+    /// Bytes still to move (advanced by `rate` between recomputes).
+    remaining: f64,
+    /// Current max-min fair rate, bytes/ms (0 while inactive).
+    rate: f64,
+    /// Still pending (false once completed or canceled).
+    live: bool,
+    /// Participates in fair sharing (object-store request latency defers
+    /// activation).
+    active: bool,
+    /// Completion-event generation; stale `FlowDone` events are dropped.
+    gen: u32,
+    begun_at: SimTime,
+    /// Absolute ms of the currently scheduled completion (`u64::MAX` none).
+    sched_at: u64,
+    /// Files to insert into the node cache when the flow completes.
+    files: Vec<u32>,
+}
+
+#[derive(Debug)]
+struct CacheEntry {
+    bytes: u64,
+    owner: PodId,
+    stamp: u64,
+}
+
+/// Node-local ephemeral cache: LRU over file ids, entries owned by the
+/// pod that fetched/produced them (emptyDir semantics — they die with it).
+#[derive(Debug, Default)]
+struct NodeCache {
+    used: u64,
+    entries: BTreeMap<u32, CacheEntry>,
+}
+
+/// Scheduling instruction the data plane hands back to the driver.
+#[derive(Debug, Clone, Copy)]
+pub struct FlowEvent {
+    pub flow: u32,
+    pub gen: u32,
+    pub at: SimTime,
+    /// true: schedule an activation (object-store request latency);
+    /// false: schedule a completion check.
+    pub activate: bool,
+}
+
+/// Outcome of starting a stage: the data is already local (`Ready`) or a
+/// transfer was launched (`Wait` — the driver resumes on `FlowDone`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageStart {
+    Ready,
+    Wait,
+}
+
+/// A completed flow, as reported by [`DataPlane::flow_done`].
+#[derive(Debug, Clone, Copy)]
+pub struct FlowDone {
+    pub pod: PodId,
+    pub task: TaskId,
+    pub inbound: bool,
+}
+
+const NO_FLOW: u32 = u32::MAX;
+
+/// Runtime state of the data plane for one simulated run.
+#[derive(Debug)]
+pub struct DataPlane {
+    cfg: DataConfig,
+    /// Per task: input file ids (predecessor outputs, then the external
+    /// input if any). File id `t` = output of task `t`; `n_tasks + t` =
+    /// external input of task `t`.
+    inputs: Vec<Vec<u32>>,
+    file_bytes: Vec<u64>,
+    caches: Vec<NodeCache>,
+    flows: Vec<Flow>,
+    /// Flows currently sharing bandwidth, in activation order.
+    active: Vec<u32>,
+    /// The live flow of each pod (`NO_FLOW` = none); a pod stages at most
+    /// one transfer at a time.
+    pod_flow: Vec<u32>,
+    /// Cache entries owned by each pod (fast-path skip for cancel).
+    pod_owned: Vec<u32>,
+    /// Last time flow progress was advanced (ms).
+    last_ms: u64,
+    /// LRU clock.
+    touch: u64,
+    /// Reusable fair-share workspace + problem buffers — the recompute
+    /// runs on every transfer start/finish (§Perf: no per-event allocs).
+    ws: fair::Workspace,
+    caps_buf: Vec<f64>,
+    reqs_buf: Vec<FlowReq>,
+    pub stats: DataStats,
+}
+
+impl DataPlane {
+    pub fn new(cfg: DataConfig, dag: &Dag, n_nodes: usize) -> Self {
+        let n = dag.len();
+        let mut inputs: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for p in 0..n {
+            for s in dag.successors(TaskId(p as u32)) {
+                inputs[s.0 as usize].push(p as u32);
+            }
+        }
+        let mut file_bytes = vec![0u64; 2 * n];
+        for t in 0..n {
+            let id = TaskId(t as u32);
+            file_bytes[t] = dag.task_out_bytes(id);
+            let ext = dag.task_in_bytes(id);
+            file_bytes[n + t] = ext;
+            if ext > 0 {
+                inputs[t].push((n + t) as u32);
+            }
+        }
+        DataPlane {
+            cfg,
+            inputs,
+            file_bytes,
+            caches: (0..n_nodes).map(|_| NodeCache::default()).collect(),
+            flows: Vec::new(),
+            active: Vec::new(),
+            pod_flow: Vec::new(),
+            pod_owned: Vec::new(),
+            last_ms: 0,
+            touch: 0,
+            ws: fair::Workspace::default(),
+            caps_buf: Vec::new(),
+            reqs_buf: Vec::new(),
+            stats: DataStats {
+                enabled: true,
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn cfg(&self) -> &DataConfig {
+        &self.cfg
+    }
+
+    fn ensure_pod(&mut self, pod: PodId) {
+        let i = pod.0 as usize;
+        if i >= self.pod_flow.len() {
+            self.pod_flow.resize(i + 1, NO_FLOW);
+            self.pod_owned.resize(i + 1, 0);
+        }
+    }
+
+    /// Is `file` currently cached on `node` (read-only; no LRU touch)?
+    fn cached(&self, node: usize, file: u32) -> bool {
+        self.caches[node].entries.contains_key(&file)
+    }
+
+    /// Total bytes of `task`'s inputs currently cached on `node`.
+    fn cached_input_bytes_of(&self, task: TaskId, node: usize) -> u64 {
+        self.inputs[task.0 as usize]
+            .iter()
+            .filter(|&&f| self.cached(node, f))
+            .map(|&f| self.file_bytes[f as usize])
+            .sum()
+    }
+
+    /// Insert `file` into `node`'s cache, owned by `pod`, evicting LRU
+    /// entries as needed. Files larger than the cache are skipped.
+    fn cache_insert(&mut self, node: usize, file: u32, pod: PodId) {
+        let bytes = self.file_bytes[file as usize];
+        if bytes == 0 || bytes > self.cfg.cache_bytes {
+            return;
+        }
+        self.touch += 1;
+        let stamp = self.touch;
+        let cache = &mut self.caches[node];
+        if let Some(e) = cache.entries.get_mut(&file) {
+            e.stamp = stamp; // refresh; keep the original owner
+            return;
+        }
+        while cache.used + bytes > self.cfg.cache_bytes {
+            // evict the least-recently-used entry (deterministic: BTreeMap
+            // iteration order breaks stamp ties by file id, and stamps are
+            // unique anyway)
+            let victim = cache
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&f, _)| f);
+            match victim {
+                Some(f) => {
+                    let e = cache.entries.remove(&f).expect("victim exists");
+                    cache.used -= e.bytes;
+                    let o = e.owner.0 as usize;
+                    if o < self.pod_owned.len() && self.pod_owned[o] > 0 {
+                        self.pod_owned[o] -= 1;
+                    }
+                    self.stats.evictions += 1;
+                }
+                None => return, // cannot happen: bytes <= cache_bytes
+            }
+        }
+        cache.used += bytes;
+        cache.entries.insert(
+            file,
+            CacheEntry {
+                bytes,
+                owner: pod,
+                stamp,
+            },
+        );
+        self.ensure_pod(pod);
+        self.pod_owned[pod.0 as usize] += 1;
+    }
+
+    /// Begin staging `task`'s inputs onto `pod` (bound to `node`).
+    /// Returns `Ready` when every input byte is already local; otherwise
+    /// launches one coalesced transfer and returns `Wait`.
+    pub fn begin_stage_in(
+        &mut self,
+        now: SimTime,
+        pod: PodId,
+        node: usize,
+        task: TaskId,
+        tenant: usize,
+        out: &mut Vec<FlowEvent>,
+    ) -> StageStart {
+        let mut need = 0u64;
+        let mut files: Vec<u32> = Vec::new();
+        let input_ids = std::mem::take(&mut self.inputs[task.0 as usize]);
+        for &f in &input_ids {
+            let bytes = self.file_bytes[f as usize];
+            if bytes == 0 {
+                continue;
+            }
+            if self.cached(node, f) {
+                self.stats.hits += 1;
+                self.stats.bytes_hit += bytes;
+                self.touch += 1;
+                let stamp = self.touch;
+                if let Some(e) = self.caches[node].entries.get_mut(&f) {
+                    e.stamp = stamp;
+                }
+            } else {
+                self.stats.misses += 1;
+                need += bytes;
+                files.push(f);
+            }
+        }
+        self.inputs[task.0 as usize] = input_ids;
+        if need == 0 {
+            self.stats.stage_in.add(0.0);
+            return StageStart::Ready;
+        }
+        self.launch(now, pod, node, task, tenant, Dir::In, need, files, out);
+        StageStart::Wait
+    }
+
+    /// Begin writing `task`'s output back to the backend. Returns `Ready`
+    /// for zero-byte outputs.
+    pub fn begin_stage_out(
+        &mut self,
+        now: SimTime,
+        pod: PodId,
+        node: usize,
+        task: TaskId,
+        tenant: usize,
+        out: &mut Vec<FlowEvent>,
+    ) -> StageStart {
+        let bytes = self.file_bytes[task.0 as usize];
+        if bytes == 0 {
+            self.stats.stage_out.add(0.0);
+            return StageStart::Ready;
+        }
+        let files = vec![task.0];
+        self.launch(now, pod, node, task, tenant, Dir::Out, bytes, files, out);
+        StageStart::Wait
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn launch(
+        &mut self,
+        now: SimTime,
+        pod: PodId,
+        node: usize,
+        task: TaskId,
+        tenant: usize,
+        dir: Dir,
+        bytes: u64,
+        files: Vec<u32>,
+        out: &mut Vec<FlowEvent>,
+    ) {
+        let id = self.flows.len() as u32;
+        self.flows.push(Flow {
+            pod,
+            task,
+            node,
+            tenant,
+            dir,
+            total: bytes,
+            remaining: bytes as f64,
+            rate: 0.0,
+            live: true,
+            active: false,
+            gen: 0,
+            begun_at: now,
+            sched_at: u64::MAX,
+            files,
+        });
+        self.ensure_pod(pod);
+        debug_assert_eq!(self.pod_flow[pod.0 as usize], NO_FLOW, "one stage at a time");
+        self.pod_flow[pod.0 as usize] = id;
+        match self.cfg.backend {
+            Backend::ObjectStore { latency_ms, .. } if latency_ms > 0 => {
+                // the request round-trip runs before any byte moves
+                out.push(FlowEvent {
+                    flow: id,
+                    gen: 0,
+                    at: now + SimTime::from_millis(latency_ms),
+                    activate: true,
+                });
+            }
+            _ => self.activate_flow(now, id, out),
+        }
+    }
+
+    /// An object-store request's latency elapsed: the flow joins fair
+    /// sharing (no-op if the pod died in the meantime).
+    pub fn activate(&mut self, now: SimTime, flow: u32, gen: u32, out: &mut Vec<FlowEvent>) {
+        let f = &self.flows[flow as usize];
+        if !f.live || f.active || f.gen != gen {
+            return;
+        }
+        self.activate_flow(now, flow, out);
+    }
+
+    fn activate_flow(&mut self, now: SimTime, flow: u32, out: &mut Vec<FlowEvent>) {
+        self.flows[flow as usize].active = true;
+        self.active.push(flow);
+        self.recompute(now, out);
+    }
+
+    /// Advance every active flow's progress to `now` at its current rate.
+    fn advance_all(&mut self, now: SimTime) {
+        let now_ms = now.as_millis();
+        let dt = now_ms.saturating_sub(self.last_ms) as f64;
+        if dt > 0.0 {
+            for &id in &self.active {
+                let f = &mut self.flows[id as usize];
+                f.remaining = (f.remaining - f.rate * dt).max(0.0);
+            }
+        }
+        self.last_ms = now_ms;
+    }
+
+    /// Recompute max-min fair rates for every active flow and (re)schedule
+    /// completion checks whose times moved.
+    fn recompute(&mut self, now: SimTime, out: &mut Vec<FlowEvent>) {
+        self.advance_all(now);
+        if self.active.is_empty() {
+            return;
+        }
+        let n_nodes = self.caches.len();
+        let nic = gbps_to_bytes_per_ms(NIC_GBPS);
+        self.caps_buf.clear();
+        self.caps_buf.resize(n_nodes, nic);
+        let (server, stream_cap) = match self.cfg.backend {
+            Backend::Nfs { gbps } => {
+                self.caps_buf.push(gbps_to_bytes_per_ms(gbps));
+                (Some(n_nodes), f64::INFINITY)
+            }
+            Backend::ObjectStore { stream_gbps, .. } => {
+                (None, gbps_to_bytes_per_ms(stream_gbps))
+            }
+        };
+        while self.reqs_buf.len() < self.active.len() {
+            self.reqs_buf.push(FlowReq {
+                links: Vec::with_capacity(2),
+                cap: f64::INFINITY,
+            });
+        }
+        for (k, &id) in self.active.iter().enumerate() {
+            let node = self.flows[id as usize].node;
+            let r = &mut self.reqs_buf[k];
+            r.links.clear();
+            r.links.push(node);
+            if let Some(s) = server {
+                r.links.push(s);
+            }
+            r.cap = stream_cap;
+        }
+        let shares = self
+            .ws
+            .shares(&self.caps_buf, &self.reqs_buf[..self.active.len()]);
+        let now_ms = now.as_millis();
+        for (k, &id) in self.active.iter().enumerate() {
+            let f = &mut self.flows[id as usize];
+            f.rate = shares[k];
+            debug_assert!(f.rate > 0.0, "active flow with zero rate");
+            let eta = if f.rate > 0.0 {
+                (f.remaining / f.rate).ceil() as u64
+            } else {
+                0
+            };
+            let at = now_ms + eta.max(1);
+            if at != f.sched_at {
+                f.gen += 1;
+                f.sched_at = at;
+                out.push(FlowEvent {
+                    flow: id,
+                    gen: f.gen,
+                    at: SimTime::from_millis(at),
+                    activate: false,
+                });
+            }
+        }
+    }
+
+    /// A scheduled completion check fired. Returns the completed flow's
+    /// identity if it genuinely finished (stale generations and canceled
+    /// flows return `None`); pushes any rate-change reschedules to `out`.
+    pub fn flow_done(
+        &mut self,
+        now: SimTime,
+        flow: u32,
+        gen: u32,
+        out: &mut Vec<FlowEvent>,
+    ) -> Option<FlowDone> {
+        {
+            let f = &self.flows[flow as usize];
+            if !f.live || !f.active || f.gen != gen {
+                return None;
+            }
+        }
+        self.advance_all(now);
+        let f = &mut self.flows[flow as usize];
+        if f.remaining > 0.5 {
+            // rounding drift: not actually done — reschedule
+            let eta = (f.remaining / f.rate).ceil() as u64;
+            f.gen += 1;
+            f.sched_at = now.as_millis() + eta.max(1);
+            out.push(FlowEvent {
+                flow,
+                gen: f.gen,
+                at: SimTime::from_millis(f.sched_at),
+                activate: false,
+            });
+            return None;
+        }
+        f.live = false;
+        f.active = false;
+        let pod = f.pod;
+        let task = f.task;
+        let node = f.node;
+        let tenant = f.tenant;
+        let dir = f.dir;
+        let total = f.total;
+        let dur = now.saturating_sub(f.begun_at);
+        let files = std::mem::take(&mut f.files);
+        self.active.retain(|&id| id != flow);
+        self.pod_flow[pod.0 as usize] = NO_FLOW;
+        self.stats.transfers += 1;
+        self.stats.io_ms += dur.as_millis();
+        self.stats.add_tenant_bytes(tenant, total);
+        match dir {
+            Dir::In => {
+                self.stats.bytes_in += total;
+                self.stats.stage_in.add(dur.as_secs_f64());
+            }
+            Dir::Out => {
+                self.stats.bytes_out += total;
+                self.stats.stage_out.add(dur.as_secs_f64());
+            }
+        }
+        for fid in files {
+            self.cache_insert(node, fid, pod);
+        }
+        self.recompute(now, out);
+        Some(FlowDone {
+            pod,
+            task,
+            inbound: dir == Dir::In,
+        })
+    }
+
+    /// A pod terminated (normal completion, scale-down, or chaos kill):
+    /// cancel its in-flight transfer and drop its cache entries — the
+    /// ephemeral scratch dies with the pod.
+    pub fn cancel_pod(
+        &mut self,
+        now: SimTime,
+        pod: PodId,
+        node: Option<usize>,
+        out: &mut Vec<FlowEvent>,
+    ) {
+        let i = pod.0 as usize;
+        if i >= self.pod_flow.len() {
+            return;
+        }
+        let flow = self.pod_flow[i];
+        if flow != NO_FLOW {
+            self.pod_flow[i] = NO_FLOW;
+            let f = &mut self.flows[flow as usize];
+            f.live = false;
+            if f.active {
+                f.active = false;
+                self.active.retain(|&id| id != flow);
+                self.recompute(now, out);
+            }
+        }
+        if self.pod_owned[i] > 0 {
+            if let Some(n) = node {
+                let cache = &mut self.caches[n];
+                let mut freed = 0u64;
+                cache.entries.retain(|_, e| {
+                    if e.owner == pod {
+                        freed += e.bytes;
+                        false
+                    } else {
+                        true
+                    }
+                });
+                cache.used -= freed;
+            }
+            self.pod_owned[i] = 0;
+        }
+    }
+
+    /// Freeze the run's accounting.
+    pub fn report(&self) -> DataReport {
+        self.stats.report()
+    }
+}
+
+impl DataLocality for DataPlane {
+    fn cached_input_bytes(&self, pod: &Pod, node: &Node) -> u64 {
+        match &pod.payload {
+            Payload::JobBatch { tasks } => tasks
+                .iter()
+                .map(|&t| self.cached_input_bytes_of(t, node.id.0))
+                .sum(),
+            // worker pods carry no tasks at placement time
+            Payload::Worker { .. } => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::k8s::resources::Resources;
+    use crate::workflow::task::TaskType;
+
+    #[test]
+    fn parses_full_specs() {
+        let c = DataConfig::parse_spec("nfs:2,cache:4,locality:on").unwrap();
+        assert_eq!(c.backend, Backend::Nfs { gbps: 2.0 });
+        assert_eq!(c.cache_bytes, 4_000_000_000);
+        assert!(c.locality);
+        let c = DataConfig::parse_spec("s3:30x1.5").unwrap();
+        assert_eq!(
+            c.backend,
+            Backend::ObjectStore {
+                latency_ms: 30,
+                stream_gbps: 1.5
+            }
+        );
+        assert!(!c.locality);
+        assert_eq!(c.cache_bytes, (DEFAULT_CACHE_GB * 1e9) as u64);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",                  // no backend
+            "cache:4",           // no backend either
+            "nfs",               // no value
+            "nfs:x",             // not a number
+            "nfs:0",             // zero bandwidth
+            "nfs:-1",            // negative
+            "nfs:1,s3:10x1",     // two backends
+            "s3:10",             // missing stream bandwidth
+            "s3:ax1",            // bad latency
+            "cache:-2,nfs:1",    // negative cache
+            "locality:maybe,nfs:1",
+            "flux:9",            // unknown kind
+        ] {
+            assert!(DataConfig::parse_spec(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    fn two_task_dag(out0: u64, ext0: u64, out1: u64) -> Dag {
+        let mut d = Dag::new("d");
+        let ty = d.add_type(TaskType::new("T", Resources::new(500, 512), 1.0, 0.0));
+        let a = d.add_task(ty, SimTime(1000), &[]);
+        d.set_io(a, ext0, out0);
+        let b = d.add_task(ty, SimTime(1000), &[a]);
+        d.set_io(b, 0, out1);
+        d
+    }
+
+    #[test]
+    fn inputs_are_pred_outputs_plus_external() {
+        let dag = two_task_dag(100, 40, 7);
+        let dp = DataPlane::new(DataConfig::nfs(1.0), &dag, 2);
+        // task 0: external input only (file id n_tasks + 0 = 2)
+        assert_eq!(dp.inputs[0], vec![2]);
+        assert_eq!(dp.file_bytes[2], 40);
+        // task 1: task 0's output
+        assert_eq!(dp.inputs[1], vec![0]);
+        assert_eq!(dp.file_bytes[0], 100);
+    }
+
+    #[test]
+    fn stage_in_flows_complete_and_populate_the_cache() {
+        let dag = two_task_dag(1_000_000, 500_000, 2_000);
+        let mut dp = DataPlane::new(DataConfig::nfs(1.0), &dag, 1);
+        let mut out = Vec::new();
+        let pod = PodId(0);
+        // task 0 stages its 500 kB external input
+        let s = dp.begin_stage_in(SimTime::ZERO, pod, 0, TaskId(0), 0, &mut out);
+        assert_eq!(s, StageStart::Wait);
+        assert_eq!(out.len(), 1);
+        let ev = out[0];
+        assert!(!ev.activate);
+        // 500 kB over 1 Gbit/s = 4 ms
+        assert_eq!(ev.at, SimTime(4));
+        out.clear();
+        let done = dp.flow_done(ev.at, ev.flow, ev.gen, &mut out).unwrap();
+        assert!(done.inbound);
+        assert_eq!(done.task, TaskId(0));
+        assert_eq!(dp.stats.bytes_in, 500_000);
+        assert!(dp.cached(0, 2), "fetched input cached on the node");
+        // stage-out of task 0's 1 MB output
+        out.clear();
+        let s = dp.begin_stage_out(SimTime(10), pod, 0, TaskId(0), 0, &mut out);
+        assert_eq!(s, StageStart::Wait);
+        let ev = out[0];
+        out.clear();
+        let done = dp.flow_done(ev.at, ev.flow, ev.gen, &mut out).unwrap();
+        assert!(!done.inbound);
+        assert_eq!(dp.stats.bytes_out, 1_000_000);
+        assert!(dp.cached(0, 0), "produced output cached on the node");
+        // task 1 on the same node: its input (task 0's output) is a hit
+        out.clear();
+        let s = dp.begin_stage_in(SimTime(20), PodId(0), 0, TaskId(1), 0, &mut out);
+        assert_eq!(s, StageStart::Ready, "warm cache serves the input");
+        assert_eq!(dp.stats.bytes_hit, 1_000_000);
+        assert_eq!(dp.stats.hits, 1);
+    }
+
+    #[test]
+    fn concurrent_flows_share_the_nfs_link_fairly() {
+        // two 1 MB stage-ins on different nodes share a 1 Gbit/s server:
+        // each gets 500 Mbit/s -> 16 ms instead of 8
+        let mut d = Dag::new("d");
+        let ty = d.add_type(TaskType::new("T", Resources::new(500, 512), 1.0, 0.0));
+        for _ in 0..2 {
+            let t = d.add_task(ty, SimTime(1000), &[]);
+            d.set_io(t, 1_000_000, 0);
+        }
+        let mut dp = DataPlane::new(DataConfig::nfs(1.0), &d, 2);
+        let mut out = Vec::new();
+        dp.begin_stage_in(SimTime::ZERO, PodId(0), 0, TaskId(0), 0, &mut out);
+        assert_eq!(out.last().unwrap().at, SimTime(8), "alone: full bandwidth");
+        out.clear();
+        dp.begin_stage_in(SimTime::ZERO, PodId(1), 1, TaskId(1), 0, &mut out);
+        // both flows rescheduled at the halved rate
+        let times: Vec<u64> = out.iter().map(|e| e.at.as_millis()).collect();
+        assert_eq!(times, vec![16, 16]);
+    }
+
+    #[test]
+    fn canceling_a_pod_drops_its_flow_and_cache_entries() {
+        let dag = two_task_dag(1_000_000, 500_000, 2_000);
+        let mut dp = DataPlane::new(DataConfig::nfs(1.0), &dag, 1);
+        let mut out = Vec::new();
+        dp.begin_stage_in(SimTime::ZERO, PodId(0), 0, TaskId(0), 0, &mut out);
+        let ev = out[0];
+        out.clear();
+        dp.cancel_pod(SimTime(2), PodId(0), Some(0), &mut out);
+        // the scheduled completion is now stale
+        assert!(dp.flow_done(ev.at, ev.flow, ev.gen, &mut out).is_none());
+        assert_eq!(dp.stats.bytes_in, 0, "canceled transfers move nothing");
+        // a pod that cached entries loses them on termination
+        let mut dp = DataPlane::new(DataConfig::nfs(1.0), &dag, 1);
+        out.clear();
+        dp.begin_stage_in(SimTime::ZERO, PodId(0), 0, TaskId(0), 0, &mut out);
+        let ev = out[0];
+        out.clear();
+        dp.flow_done(ev.at, ev.flow, ev.gen, &mut out).unwrap();
+        assert!(dp.cached(0, 2));
+        dp.cancel_pod(SimTime(10), PodId(0), Some(0), &mut out);
+        assert!(!dp.cached(0, 2), "emptyDir dies with the pod");
+        assert_eq!(dp.caches[0].used, 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity() {
+        let mut d = Dag::new("d");
+        let ty = d.add_type(TaskType::new("T", Resources::ZERO, 1.0, 0.0));
+        for _ in 0..3 {
+            let t = d.add_task(ty, SimTime(1), &[]);
+            d.set_io(t, 0, 600);
+        }
+        let mut cfg = DataConfig::nfs(1.0);
+        cfg.cache_bytes = 1_000; // fits one 600-byte file
+        let mut dp = DataPlane::new(cfg, &d, 1);
+        dp.cache_insert(0, 0, PodId(0));
+        dp.cache_insert(0, 1, PodId(0));
+        assert!(!dp.cached(0, 0), "LRU evicted the older file");
+        assert!(dp.cached(0, 1));
+        assert_eq!(dp.stats.evictions, 1);
+        assert!(dp.caches[0].used <= 1_000);
+    }
+
+    #[test]
+    fn object_store_defers_activation_by_the_request_latency() {
+        let dag = two_task_dag(0, 1_000_000, 0);
+        let cfg = DataConfig::parse_spec("s3:25x1").unwrap();
+        let mut dp = DataPlane::new(cfg, &dag, 1);
+        let mut out = Vec::new();
+        dp.begin_stage_in(SimTime::ZERO, PodId(0), 0, TaskId(0), 0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].activate);
+        assert_eq!(out[0].at, SimTime(25));
+        let act = out[0];
+        out.clear();
+        dp.activate(act.at, act.flow, act.gen, &mut out);
+        // 1 MB at 1 Gbit/s per-stream = 8 ms after the 25 ms request
+        assert_eq!(out[0].at, SimTime(33));
+    }
+}

@@ -1,0 +1,223 @@
+//! Data-plane accounting: bytes moved, cache effectiveness, stage-in/out
+//! latency percentiles, and the compute-vs-I/O breakdown.
+//!
+//! Definitions (EXPERIMENTS.md §"Data plane / storage"):
+//!
+//! * **bytes in / out** — bytes actually moved over the network by
+//!   stage-in (backend -> node) and stage-out (node -> backend) transfers.
+//!   Cache hits move nothing and are counted separately.
+//! * **cache hit ratio** — `hit_bytes / (hit_bytes + bytes_in)`: the
+//!   fraction of input bytes served from a node-local ephemeral cache.
+//! * **stage-in p50/95/99** — per-task stage-in durations (seconds),
+//!   including the zero-duration fully-cached case — a warm cache shows up
+//!   directly as a collapsed stage-in tail.
+//! * **I/O fraction** — `io_ms / (io_ms + compute_ms)` where `io_ms` sums
+//!   every task's serial stage-in + stage-out time and `compute_ms` sums
+//!   execution time. This is per-task serial time, not wall-clock overlap.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Mutable accumulator the driver and [`super::DataPlane`] update.
+#[derive(Debug, Default)]
+pub struct DataStats {
+    pub enabled: bool,
+    /// Bytes fetched over the network by stage-in transfers.
+    pub bytes_in: u64,
+    /// Bytes written back by stage-out transfers.
+    pub bytes_out: u64,
+    /// Input bytes served from a node-local cache (no transfer).
+    pub bytes_hit: u64,
+    /// Input-file cache hits / misses (file-granularity counts).
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Completed network transfers (stage-in + stage-out flows).
+    pub transfers: u64,
+    /// Per-task stage-in durations, seconds (0.0 when fully cached).
+    pub stage_in: Summary,
+    /// Per-task stage-out durations, seconds.
+    pub stage_out: Summary,
+    /// Sum of task execution time (net of executor overhead), ms.
+    pub compute_ms: u64,
+    /// Sum of per-task serial stage-in + stage-out time, ms.
+    pub io_ms: u64,
+    /// Bytes moved per tenant lane (stage-in + stage-out; fleet runs).
+    pub bytes_by_tenant: Vec<u64>,
+}
+
+impl DataStats {
+    /// Size the per-tenant lanes (fleet runs; single runs keep one lane).
+    pub fn set_tenants(&mut self, n: usize) {
+        self.bytes_by_tenant.resize(n.max(1), 0);
+    }
+
+    pub fn add_tenant_bytes(&mut self, tenant: usize, bytes: u64) {
+        if self.bytes_by_tenant.is_empty() {
+            self.set_tenants(1);
+        }
+        let lane = tenant.min(self.bytes_by_tenant.len() - 1);
+        self.bytes_by_tenant[lane] += bytes;
+    }
+
+    /// Freeze the accumulator into the report attached to a `SimResult`.
+    pub fn report(&self) -> DataReport {
+        DataReport {
+            enabled: self.enabled,
+            bytes_in: self.bytes_in,
+            bytes_out: self.bytes_out,
+            bytes_hit: self.bytes_hit,
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            transfers: self.transfers,
+            stage_ins: self.stage_in.len(),
+            stage_in_mean_s: self.stage_in.mean(),
+            stage_in_p50_s: self.stage_in.percentile(50.0),
+            stage_in_p95_s: self.stage_in.percentile(95.0),
+            stage_in_p99_s: self.stage_in.percentile(99.0),
+            stage_out_p95_s: self.stage_out.percentile(95.0),
+            compute_ms: self.compute_ms,
+            io_ms: self.io_ms,
+            bytes_by_tenant: self.bytes_by_tenant.clone(),
+        }
+    }
+}
+
+/// Immutable data-plane summary of one run (all-zero with
+/// `enabled == false` when the data plane is off).
+#[derive(Debug, Clone, Default)]
+pub struct DataReport {
+    pub enabled: bool,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub bytes_hit: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub transfers: u64,
+    pub stage_ins: usize,
+    pub stage_in_mean_s: f64,
+    pub stage_in_p50_s: f64,
+    pub stage_in_p95_s: f64,
+    pub stage_in_p99_s: f64,
+    pub stage_out_p95_s: f64,
+    pub compute_ms: u64,
+    pub io_ms: u64,
+    pub bytes_by_tenant: Vec<u64>,
+}
+
+impl DataReport {
+    /// Total bytes moved over the network in either direction.
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes_in + self.bytes_out
+    }
+
+    /// Fraction of input bytes served from cache; 1.0 when every input
+    /// byte was cached (or nothing was read).
+    pub fn cache_hit_ratio(&self) -> f64 {
+        let total = self.bytes_hit + self.bytes_in;
+        if total == 0 {
+            return 1.0;
+        }
+        self.bytes_hit as f64 / total as f64
+    }
+
+    /// Fraction of per-task serial time spent in I/O rather than compute.
+    pub fn io_frac(&self) -> f64 {
+        let total = self.io_ms + self.compute_ms;
+        if total == 0 {
+            return 0.0;
+        }
+        self.io_ms as f64 / total as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", self.enabled.into()),
+            ("bytes_in", self.bytes_in.into()),
+            ("bytes_out", self.bytes_out.into()),
+            ("bytes_moved", self.bytes_moved().into()),
+            ("bytes_hit", self.bytes_hit.into()),
+            ("cache_hit_ratio", self.cache_hit_ratio().into()),
+            ("hits", self.hits.into()),
+            ("misses", self.misses.into()),
+            ("evictions", self.evictions.into()),
+            ("transfers", self.transfers.into()),
+            ("stage_ins", self.stage_ins.into()),
+            ("stage_in_mean_s", self.stage_in_mean_s.into()),
+            ("stage_in_p50_s", self.stage_in_p50_s.into()),
+            ("stage_in_p95_s", self.stage_in_p95_s.into()),
+            ("stage_in_p99_s", self.stage_in_p99_s.into()),
+            ("stage_out_p95_s", self.stage_out_p95_s.into()),
+            ("compute_ms", self.compute_ms.into()),
+            ("io_ms", self.io_ms.into()),
+            ("io_frac", self.io_frac().into()),
+            (
+                "bytes_by_tenant",
+                Json::Arr(self.bytes_by_tenant.iter().map(|&v| v.into()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_report_is_inert() {
+        let r = DataStats::default().report();
+        assert!(!r.enabled);
+        assert_eq!(r.bytes_moved(), 0);
+        assert_eq!(r.cache_hit_ratio(), 1.0);
+        assert_eq!(r.io_frac(), 0.0);
+    }
+
+    #[test]
+    fn ratios_from_known_counters() {
+        let mut s = DataStats {
+            enabled: true,
+            ..Default::default()
+        };
+        s.bytes_in = 750;
+        s.bytes_hit = 250;
+        s.bytes_out = 100;
+        s.compute_ms = 900;
+        s.io_ms = 100;
+        let r = s.report();
+        assert!((r.cache_hit_ratio() - 0.25).abs() < 1e-12);
+        assert_eq!(r.bytes_moved(), 850);
+        assert!((r.io_frac() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_in_percentiles_survive_the_report() {
+        let mut s = DataStats::default();
+        for v in 0..=100 {
+            s.stage_in.add(v as f64);
+        }
+        let r = s.report();
+        assert_eq!(r.stage_ins, 101);
+        assert!((r.stage_in_p50_s - 50.0).abs() < 1e-9);
+        assert!((r.stage_in_p95_s - 95.0).abs() < 1e-9);
+        assert!((r.stage_in_p99_s - 99.0).abs() < 1e-9);
+        let j = r.to_json().to_string();
+        assert!(j.contains("stage_in_p99_s"));
+        assert!(j.contains("cache_hit_ratio"));
+    }
+
+    #[test]
+    fn tenant_lanes_clamp_like_the_chaos_lanes() {
+        let mut s = DataStats::default();
+        s.set_tenants(2);
+        s.add_tenant_bytes(0, 10);
+        s.add_tenant_bytes(1, 20);
+        s.add_tenant_bytes(9, 5); // clamps to the last lane
+        assert_eq!(s.bytes_by_tenant, vec![10, 25]);
+        // unsized lanes auto-size to one
+        let mut t = DataStats::default();
+        t.add_tenant_bytes(0, 7);
+        assert_eq!(t.bytes_by_tenant, vec![7]);
+    }
+}

@@ -148,6 +148,7 @@ pub fn run(model: ExecModel, mut sim_cfg: SimConfig, cfg: &FleetConfig) -> Fleet
                 avg_running_tasks: 0.0,
                 avg_cpu_utilization: 0.0,
                 chaos: crate::chaos::ChaosReport::default(),
+                data: crate::data::DataReport::default(),
             },
             outcomes: Vec::new(),
             metas,

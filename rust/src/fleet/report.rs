@@ -34,6 +34,9 @@ pub struct TenantRow {
     /// tasks/batches were re-dispatched.
     pub wasted_s: f64,
     pub retries: u64,
+    /// Data-plane SLO column (data runs; 0 otherwise): decimal GB this
+    /// tenant moved over the network (stage-in + stage-out).
+    pub gb_moved: f64,
 }
 
 /// Fleet-wide headline numbers (one saturation-sweep point).
@@ -68,6 +71,7 @@ fn tenant_summaries(res: &FleetResult) -> Vec<(Summary, Summary, Summary)> {
 /// Per-tenant SLO rows (every tenant, including ones with no arrivals).
 pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
     let chaos = &res.sim.chaos;
+    let data = &res.sim.data;
     tenant_summaries(res)
         .into_iter()
         .enumerate()
@@ -82,6 +86,7 @@ pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
             slowdown_p99: slowdown.percentile(99.0),
             wasted_s: chaos.wasted_ms_by_tenant.get(t).copied().unwrap_or(0) as f64 / 1000.0,
             retries: chaos.retries_by_tenant.get(t).copied().unwrap_or(0),
+            gb_moved: data.bytes_by_tenant.get(t).copied().unwrap_or(0) as f64 / 1e9,
         })
         .collect()
 }
@@ -117,11 +122,11 @@ pub fn render_table(res: &FleetResult) -> String {
     let mut out = String::from(
         "tenant  instances  qdelay-mean-s  makespan-mean-s  \
          slowdown-mean  slowdown-p50  slowdown-p95  slowdown-p99  \
-         wasted-s  retries\n",
+         wasted-s  retries  gb-moved\n",
     );
     for r in per_tenant(res) {
         out.push_str(&format!(
-            "{:>6}  {:>9}  {:>13.1}  {:>15.1}  {:>13.2}  {:>12.2}  {:>12.2}  {:>12.2}  {:>8.1}  {:>7}\n",
+            "{:>6}  {:>9}  {:>13.1}  {:>15.1}  {:>13.2}  {:>12.2}  {:>12.2}  {:>12.2}  {:>8.1}  {:>7}  {:>8.2}\n",
             r.tenant,
             r.instances,
             r.queue_delay_mean_s,
@@ -132,6 +137,7 @@ pub fn render_table(res: &FleetResult) -> String {
             r.slowdown_p99,
             r.wasted_s,
             r.retries,
+            r.gb_moved,
         ));
     }
     out
@@ -154,6 +160,7 @@ pub fn to_json(res: &FleetResult) -> Json {
                 ("slowdown_p99", r.slowdown_p99.into()),
                 ("wasted_s", r.wasted_s.into()),
                 ("retries", r.retries.into()),
+                ("gb_moved", r.gb_moved.into()),
             ])
         })
         .collect();
@@ -168,6 +175,7 @@ pub fn to_json(res: &FleetResult) -> Json {
         ("slowdown_p99", agg.slowdown_p99.into()),
         ("utilization", agg.utilization.into()),
         ("chaos", res.sim.chaos.to_json()),
+        ("data", res.sim.data.to_json()),
         ("tenants", Json::Arr(tenants)),
     ])
 }
@@ -194,6 +202,7 @@ mod tests {
             avg_running_tasks: 0.0,
             avg_cpu_utilization: 0.5,
             chaos: crate::chaos::ChaosReport::default(),
+            data: crate::data::DataReport::default(),
         };
         let outcomes = vec![
             InstanceOutcome {
@@ -267,12 +276,25 @@ mod tests {
         let t = render_table(&r);
         assert!(t.contains("slowdown-p99"));
         assert!(t.contains("wasted-s"), "resilience columns present");
+        assert!(t.contains("gb-moved"), "data-plane column present");
         assert_eq!(t.lines().count(), 3, "header + one row per tenant");
         let j = to_json(&r).to_string();
         assert!(j.contains("instances_per_hour"));
         assert!(j.contains("slowdown_p99"));
         assert!(j.contains("\"chaos\""), "resilience block exported");
         assert!(j.contains("wasted_s"));
+        assert!(j.contains("\"data\""), "data-plane block exported");
+        assert!(j.contains("gb_moved"));
+    }
+
+    #[test]
+    fn per_tenant_bytes_column_follows_the_data_report() {
+        let mut r = fake_result();
+        r.sim.data.enabled = true;
+        r.sim.data.bytes_by_tenant = vec![2_000_000_000, 0];
+        let rows = per_tenant(&r);
+        assert!((rows[0].gb_moved - 2.0).abs() < 1e-9);
+        assert_eq!(rows[1].gb_moved, 0.0);
     }
 
     #[test]

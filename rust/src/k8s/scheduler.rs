@@ -39,6 +39,13 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Data-locality oracle for placement scoring: how many of the pod's
+/// input bytes are already cached on a node. Implemented by
+/// [`crate::data::DataPlane`]; the scheduler itself stays storage-agnostic.
+pub trait DataLocality {
+    fn cached_input_bytes(&self, pod: &Pod, node: &Node) -> u64;
+}
+
 /// Result of one scheduling pass.
 #[derive(Debug, Default, PartialEq)]
 pub struct SchedulePass {
@@ -134,19 +141,23 @@ impl Scheduler {
     /// exponential back-off.
     pub fn pass(&mut self, now: SimTime, pods: &mut [Pod], nodes: &mut [Node]) -> SchedulePass {
         let mut out = SchedulePass::default();
-        self.pass_into(now, pods, nodes, &mut out);
+        self.pass_into(now, pods, nodes, &mut out, None);
         out
     }
 
     /// Allocation-free variant of [`Scheduler::pass`]: clears and refills
     /// `out`, so the driver can reuse one `SchedulePass` across the many
-    /// passes a run performs (EXPERIMENTS.md §Perf).
+    /// passes a run performs (EXPERIMENTS.md §Perf). With a
+    /// [`DataLocality`] oracle, fitting nodes are ranked by cached input
+    /// bytes first (ties fall back to best-fit) — when no node caches
+    /// anything, the choice is bit-identical to the oracle-free path.
     pub fn pass_into(
         &mut self,
         now: SimTime,
         pods: &mut [Pod],
         nodes: &mut [Node],
         out: &mut SchedulePass,
+        locality: Option<&dyn DataLocality>,
     ) {
         out.bound.clear();
         out.backed_off.clear();
@@ -171,12 +182,24 @@ impl Scheduler {
             // Filter + score: best-fit on CPU (tightest remaining capacity
             // that still fits) — keeps large pods schedulable longer than
             // spread-scoring would, matching kube-scheduler's default
-            // bin-packing behaviour under pressure well enough.
-            let fit = nodes
-                .iter()
-                .filter(|n| n.fits(&pod.requests))
-                .min_by_key(|n| n.free().cpu_m)
-                .map(|n| n.id);
+            // bin-packing behaviour under pressure well enough. The
+            // locality oracle prepends a cached-bytes rank; `min_by_key`
+            // keeps the *first* minimum, so an all-zero score degenerates
+            // to exactly the best-fit choice.
+            let fit = match locality {
+                None => nodes
+                    .iter()
+                    .filter(|n| n.fits(&pod.requests))
+                    .min_by_key(|n| n.free().cpu_m)
+                    .map(|n| n.id),
+                Some(h) => nodes
+                    .iter()
+                    .filter(|n| n.fits(&pod.requests))
+                    .min_by_key(|n| {
+                        (std::cmp::Reverse(h.cached_input_bytes(pod, n)), n.free().cpu_m)
+                    })
+                    .map(|n| n.id),
+            };
             match fit {
                 Some(nid) => {
                     nodes[nid.0].alloc(pod.requests);
@@ -357,11 +380,11 @@ mod tests {
         let mut pods: Vec<Pod> = (0..2).map(|i| mkpod(i, 1000)).collect();
         sched.enqueue(PodId(0));
         let mut out = SchedulePass::default();
-        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out);
+        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, None);
         assert_eq!(out.bound.len(), 1);
         // second pass through the same buffer: stale results are cleared
         sched.enqueue(PodId(1));
-        sched.pass_into(SimTime(50), &mut pods, &mut nodes, &mut out);
+        sched.pass_into(SimTime(50), &mut pods, &mut nodes, &mut out, None);
         assert_eq!(out.bound.len(), 1);
         assert_eq!(out.bound[0].0, PodId(1));
         assert!(out.backed_off.is_empty());
@@ -488,6 +511,40 @@ mod tests {
         let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
         assert_eq!(pass.backed_off.len(), 1);
         assert_eq!(sched.cordoned_misses, 0);
+    }
+
+    /// Fixed per-node score table standing in for the data plane.
+    struct FakeLocality {
+        bytes: Vec<u64>,
+    }
+
+    impl DataLocality for FakeLocality {
+        fn cached_input_bytes(&self, _pod: &Pod, node: &Node) -> u64 {
+            self.bytes[node.id.0]
+        }
+    }
+
+    #[test]
+    fn locality_score_beats_best_fit_but_zero_score_degenerates_to_it() {
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(3);
+        // node 0 is the best-fit choice (tightest), node 2 caches the data
+        nodes[0].alloc(Resources::new(3000, 1024));
+        let mut pods = vec![mkpod(0, 1000), mkpod(1, 1000)];
+        let hint = FakeLocality {
+            bytes: vec![0, 0, 4096],
+        };
+        sched.enqueue(PodId(0));
+        let mut out = SchedulePass::default();
+        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, Some(&hint));
+        assert_eq!(out.bound[0].1, NodeId(2), "cached bytes win placement");
+        // an all-zero score must reproduce the best-fit pick exactly
+        let cold = FakeLocality {
+            bytes: vec![0, 0, 0],
+        };
+        sched.enqueue(PodId(1));
+        sched.pass_into(SimTime(10), &mut pods, &mut nodes, &mut out, Some(&cold));
+        assert_eq!(out.bound[0].1, NodeId(0), "zero score falls back to best-fit");
     }
 
     #[test]

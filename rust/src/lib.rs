@@ -23,6 +23,10 @@
 //!   arrivals on one shared cluster, with weighted fair-share dequeue,
 //!   admission control, and per-tenant slowdown/SLO reporting
 //!   (`hyperflow serve`);
+//! * the **data plane** ([`data`]): shared-storage and transfer modeling —
+//!   per-task input/output files, pluggable backends (shared NFS, object
+//!   store) with max-min fair bandwidth sharing, node-local ephemeral
+//!   caches, and locality-aware scheduling (`--data nfs:1,cache:8`);
 //! * the **Montage workflow generator** ([`workflow`]);
 //! * a **PJRT runtime** ([`runtime`]) executing the real Montage numerics
 //!   (JAX + Pallas, AOT-compiled to HLO) inside worker pods ([`compute`],
@@ -37,6 +41,7 @@ pub mod broker;
 pub mod chaos;
 pub mod compute;
 pub mod config;
+pub mod data;
 pub mod engine;
 pub mod fleet;
 pub mod k8s;

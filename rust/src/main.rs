@@ -21,6 +21,7 @@ fn usage() -> ! {
            --cluster-size N --cluster-timeout MS   (clustered model)\n\
            --max-pending N                          (throttled job model, §5)\n\
            --chaos SPEC                             failure injection (see below)\n\
+           --data SPEC                              storage/transfer modeling (see below)\n\
            --json                                   print result as JSON\n\
            --html FILE                              write an HTML report\n\
          chaos SPEC (run/serve/trace): comma-separated kind:value\n\
@@ -29,6 +30,15 @@ fn usage() -> ! {
            pod:P        pod crash probability at container start\n\
            straggler:F  fraction of nodes running tasks 3x slower\n\
            e.g. --chaos spot:0.2,crash:0.1,straggler:0.25 --seed 7\n\
+         data SPEC (run/serve/trace): comma-separated kind:value\n\
+           nfs:G        shared NFS backend, G Gbit/s aggregate server bandwidth\n\
+           s3:LxG       object store, L ms request latency, G Gbit/s per stream\n\
+           cache:GB     node-local ephemeral cache per node (decimal GB, default 8)\n\
+           locality:on  schedule pods onto nodes already caching their inputs\n\
+           exactly one backend (nfs or s3) is required; stage-in runs before\n\
+           and stage-out after every task; pool workers keep warm caches,\n\
+           job pods always start cold\n\
+           e.g. --data nfs:1,cache:8,locality:on   or   --data s3:30x1.5,cache:4\n\
          flags for serve (open-loop multi-tenant fleet):\n\
            --arrival-rate R    aggregate arrivals in instances/hour (default 6)\n\
            --duration S        arrival window in seconds (default 3600)\n\
@@ -70,6 +80,17 @@ fn parse_chaos(args: &Args) -> hyperflow_k8s::chaos::ChaosConfig {
     }
 }
 
+/// Shared `--data` spec parsing for `run` / `serve` / `trace`: a malformed
+/// spec exits with the named parse error instead of panicking.
+fn parse_data(args: &Args) -> Option<hyperflow_k8s::data::DataConfig> {
+    args.get("data").map(|spec| {
+        hyperflow_k8s::data::DataConfig::parse_spec(spec).unwrap_or_else(|e| {
+            eprintln!("--data: {e}");
+            usage()
+        })
+    })
+}
+
 /// Shared `--model` parsing for `run` / `serve` / `trace`.
 fn parse_model(args: &Args) -> ExecModel {
     match args.get_or("model", "pools") {
@@ -103,6 +124,7 @@ fn cmd_trace(args: &Args) {
     let mut sim = driver::SimConfig::with_nodes(args.get_usize("nodes", 17));
     sim.seed = args.get_u64("seed", 42);
     sim.chaos = parse_chaos(args);
+    sim.data = parse_data(args);
     let res = driver::run(dag, model, sim);
     let out = args.get_or("out", "trace.json");
     std::fs::write(out, hyperflow_k8s::report::chrome::to_chrome_trace(&res).to_string())
@@ -140,6 +162,7 @@ fn cmd_run(args: &Args) {
         let mut sim = driver::SimConfig::with_nodes(args.get_usize("nodes", 17));
         sim.seed = args.get_u64("seed", 42);
         sim.chaos = parse_chaos(args);
+        sim.data = parse_data(args);
         if args.has("max-pending") {
             sim.max_pending_pods = Some(args.get_usize("max-pending", 64));
         }
@@ -187,6 +210,20 @@ fn cmd_run(args: &Args) {
                 res.chaos.wasted_ms as f64 / 1000.0,
                 res.chaos.goodput() * 100.0,
                 res.chaos.recovery_p95_s,
+            );
+        }
+        if res.data.enabled {
+            println!(
+                "data: {:.2} GB moved ({:.2} in / {:.2} out)  cache hits: {:.1}%  \
+                 stage-in p50/p95/p99: {:.2}/{:.2}/{:.2}s  I/O share: {:.1}%",
+                res.data.bytes_moved() as f64 / 1e9,
+                res.data.bytes_in as f64 / 1e9,
+                res.data.bytes_out as f64 / 1e9,
+                res.data.cache_hit_ratio() * 100.0,
+                res.data.stage_in_p50_s,
+                res.data.stage_in_p95_s,
+                res.data.stage_in_p99_s,
+                res.data.io_frac() * 100.0,
             );
         }
         println!(
@@ -293,6 +330,7 @@ fn cmd_serve(args: &Args) {
     let sim = driver::SimConfig {
         seed,
         chaos: parse_chaos(args),
+        data: parse_data(args),
         ..driver::SimConfig::with_nodes(nodes)
     };
     eprintln!(
@@ -329,6 +367,14 @@ fn cmd_serve(args: &Args) {
                 res.sim.chaos.retries,
                 res.sim.chaos.wasted_ms as f64 / 1000.0,
                 res.sim.chaos.goodput() * 100.0
+            );
+        }
+        if res.sim.data.enabled {
+            println!(
+                "data: {:.2} GB moved   cache hits: {:.1}%   stage-in p95: {:.2}s",
+                res.sim.data.bytes_moved() as f64 / 1e9,
+                res.sim.data.cache_hit_ratio() * 100.0,
+                res.sim.data.stage_in_p95_s
             );
         }
         println!();

@@ -60,6 +60,33 @@ pub fn render(res: &SimResult) -> String {
         ));
     }
 
+    // data-plane section (data runs only)
+    if res.data.enabled {
+        let d = &res.data;
+        body.push_str(&format!(
+            "<h2>data plane (storage &amp; transfers)</h2>\
+             <table class='kv'>\
+             <tr><td>bytes moved</td><td>{:.2} GB ({:.2} in / {:.2} out, {} transfers)</td></tr>\
+             <tr><td>cache hit ratio</td><td>{:.1}% ({} hits, {} misses, {} evictions)</td></tr>\
+             <tr><td>stage-in latency</td><td>p50 {:.2} s &middot; p95 {:.2} s &middot; p99 {:.2} s ({} stage-ins)</td></tr>\
+             <tr><td>I/O share of task time</td><td>{:.1}%</td></tr>\
+             </table>",
+            d.bytes_moved() as f64 / 1e9,
+            d.bytes_in as f64 / 1e9,
+            d.bytes_out as f64 / 1e9,
+            d.transfers,
+            d.cache_hit_ratio() * 100.0,
+            d.hits,
+            d.misses,
+            d.evictions,
+            d.stage_in_p50_s,
+            d.stage_in_p95_s,
+            d.stage_in_p99_s,
+            d.stage_ins,
+            d.io_frac() * 100.0,
+        ));
+    }
+
     body.push_str(
         &AreaChart {
             title: "cluster utilization: workflow tasks executing in parallel".into(),
@@ -161,6 +188,30 @@ mod tests {
             !html.contains("resilience"),
             "healthy runs carry no chaos section"
         );
+        assert!(
+            !html.contains("data plane"),
+            "data-off runs carry no storage section"
+        );
+    }
+
+    #[test]
+    fn data_run_renders_the_storage_section() {
+        let mut cfg = driver::SimConfig::with_nodes(3);
+        cfg.data = Some(crate::data::DataConfig::parse_spec("nfs:1,cache:4").unwrap());
+        let res = driver::run(
+            generate(&MontageConfig {
+                grid_w: 3,
+                grid_h: 3,
+                diagonals: true,
+                seed: 2,
+            }),
+            ExecModel::paper_hybrid_pools(),
+            cfg,
+        );
+        let html = super::render(&res);
+        assert!(html.contains("data plane (storage"));
+        assert!(html.contains("cache hit ratio"));
+        assert!(html.contains("stage-in latency"));
     }
 
     #[test]

@@ -115,6 +115,9 @@ pub struct SimResult {
     /// Resilience accounting from the chaos engine (all-zero, with
     /// `enabled == false`, on healthy runs).
     pub chaos: crate::chaos::ChaosReport,
+    /// Data-plane accounting (all-zero, with `enabled == false`, when the
+    /// data plane is off).
+    pub data: crate::data::DataReport,
 }
 
 impl SimResult {
@@ -157,6 +160,7 @@ impl SimResult {
             ("avg_running_tasks", self.avg_running_tasks.into()),
             ("avg_cpu_utilization", self.avg_cpu_utilization.into()),
             ("chaos", self.chaos.to_json()),
+            ("data", self.data.to_json()),
             ("running_tasks_series", Json::Arr(series)),
         ])
     }

@@ -20,6 +20,25 @@ pub fn env_f64(key: &str, default: f64) -> f64 {
         .unwrap_or(default)
 }
 
+/// Read `key` as a comma-separated f64 list (the sweep benches' rate
+/// knobs), falling back to `default` when unset. Unlike the scalar
+/// helpers a *malformed* entry panics with the key name — a sweep
+/// silently running default rates would mislabel its output.
+pub fn env_f64_list(key: &str, default: &[f64]) -> Vec<f64> {
+    match std::env::var(key) {
+        Err(_) => default.to_vec(),
+        Ok(s) => s
+            .split(',')
+            .filter(|v| !v.trim().is_empty())
+            .map(|v| {
+                v.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("{key}: '{v}' is not a number"))
+            })
+            .collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -36,5 +55,13 @@ mod tests {
         assert_eq!(env_f64("HF_TEST_SET", 0.0), 12.0);
         std::env::remove_var("HF_TEST_MALFORMED");
         std::env::remove_var("HF_TEST_SET");
+    }
+
+    #[test]
+    fn f64_list_parses_and_defaults() {
+        assert_eq!(env_f64_list("HF_TEST_SURELY_UNSET_LIST", &[1.0, 2.0]), vec![1.0, 2.0]);
+        std::env::set_var("HF_TEST_LIST", "0.5, 2,4.25,");
+        assert_eq!(env_f64_list("HF_TEST_LIST", &[]), vec![0.5, 2.0, 4.25]);
+        std::env::remove_var("HF_TEST_LIST");
     }
 }

@@ -16,6 +16,11 @@ pub struct Dag {
     succs: Vec<Vec<TaskId>>,
     /// Number of predecessors of each task.
     preds: Vec<u32>,
+    /// Data plane: bytes each task stages in from *external* storage
+    /// (initial inputs; dependency bytes are the predecessors' outputs).
+    in_bytes: Vec<u64>,
+    /// Data plane: bytes of the single output file each task produces.
+    out_bytes: Vec<u64>,
     name: String,
 }
 
@@ -76,7 +81,33 @@ impl Dag {
         });
         self.succs.push(Vec::new());
         self.preds.push(deps.len() as u32);
+        self.in_bytes.push(0);
+        self.out_bytes.push(0);
         id
+    }
+
+    /// Annotate a task's data-plane I/O: bytes staged in from external
+    /// storage (beyond its predecessors' outputs) and bytes of the output
+    /// file it produces. Tasks default to (0, 0) — pure compute.
+    pub fn set_io(&mut self, t: TaskId, in_bytes: u64, out_bytes: u64) {
+        self.in_bytes[t.0 as usize] = in_bytes;
+        self.out_bytes[t.0 as usize] = out_bytes;
+    }
+
+    /// External stage-in bytes of a task (0 = inputs come only from
+    /// predecessors).
+    pub fn task_in_bytes(&self, t: TaskId) -> u64 {
+        self.in_bytes[t.0 as usize]
+    }
+
+    /// Output-file bytes of a task.
+    pub fn task_out_bytes(&self, t: TaskId) -> u64 {
+        self.out_bytes[t.0 as usize]
+    }
+
+    /// Sum of all output-file bytes (sanity metric for the data plane).
+    pub fn total_out_bytes(&self) -> u64 {
+        self.out_bytes.iter().sum()
     }
 
     pub fn len(&self) -> usize {
@@ -202,7 +233,10 @@ impl Dag {
                 }
             }
             for t in &inst.tasks {
-                out.add_task(tmap[t.ttype.0 as usize], t.duration, &deps[t.id.0 as usize]);
+                let id = out.add_task(tmap[t.ttype.0 as usize], t.duration, &deps[t.id.0 as usize]);
+                // files stay instance-scoped: task-indexed byte tables
+                // shift with the ids, so no instance can see another's data
+                out.set_io(id, inst.in_bytes[t.id.0 as usize], inst.out_bytes[t.id.0 as usize]);
             }
         }
         out
@@ -210,7 +244,11 @@ impl Dag {
 
     /// Validate structural invariants (used by property tests).
     pub fn validate(&self) -> Result<(), String> {
-        if self.succs.len() != self.tasks.len() || self.preds.len() != self.tasks.len() {
+        if self.succs.len() != self.tasks.len()
+            || self.preds.len() != self.tasks.len()
+            || self.in_bytes.len() != self.tasks.len()
+            || self.out_bytes.len() != self.tasks.len()
+        {
             return Err("internal arrays out of sync".into());
         }
         let mut pred_check = vec![0u32; self.tasks.len()];
@@ -362,6 +400,28 @@ mod tests {
         let a2 = y.add_type(TaskType::new("A", Resources::new(4000, 1024), 1.0, 0.0));
         y.add_task(a2, SimTime(1), &[]);
         Dag::disjoint_union(&[x, y]);
+    }
+
+    #[test]
+    fn io_bytes_default_zero_and_survive_disjoint_union() {
+        let mut d = tiny();
+        assert_eq!(d.task_in_bytes(TaskId(0)), 0);
+        assert_eq!(d.task_out_bytes(TaskId(0)), 0);
+        d.set_io(TaskId(0), 100, 200);
+        d.set_io(TaskId(3), 0, 50);
+        assert_eq!(d.total_out_bytes(), 250);
+        let mut e = tiny();
+        e.set_io(TaskId(1), 7, 9);
+        let u = Dag::disjoint_union(&[d, e]);
+        assert!(u.validate().is_ok());
+        // first instance at offset 0, second at offset 4
+        assert_eq!(u.task_in_bytes(TaskId(0)), 100);
+        assert_eq!(u.task_out_bytes(TaskId(0)), 200);
+        assert_eq!(u.task_out_bytes(TaskId(3)), 50);
+        assert_eq!(u.task_in_bytes(TaskId(5)), 7);
+        assert_eq!(u.task_out_bytes(TaskId(5)), 9);
+        // untouched tasks stay pure compute
+        assert_eq!(u.task_out_bytes(TaskId(4)), 0);
     }
 
     #[test]

@@ -88,6 +88,25 @@ impl MontageConfig {
     }
 }
 
+/// Data-plane size laws (bytes), calibrated to 2MASS-scale Montage runs:
+/// raw tiles are a few MB of FITS, reprojection roughly doubles them
+/// (padded target frame), plane-fit outputs are tiny parameter files, and
+/// the mosaic grows linearly with the tile count. The exact constants are
+/// stand-ins (see EXPERIMENTS.md §"Data plane / storage" for provenance);
+/// what matters for the model comparison is the *shape*: wide stages fan
+/// many medium files through shared storage, and the assembly stage
+/// gathers O(n) bytes into one task.
+pub const RAW_IMAGE_BYTES: u64 = 4 << 20; // mProject external input
+pub const PROJECTED_BYTES: u64 = 8 << 20; // mProject output
+pub const DIFF_FIT_BYTES: u64 = 16 << 10; // mDiffFit plane-fit output
+pub const CONCAT_TABLE_BYTES: u64 = 1 << 20; // mConcatFit table
+pub const BG_MODEL_BYTES: u64 = 512 << 10; // mBgModel corrections
+pub const CORRECTED_BYTES: u64 = 8 << 20; // mBackground output
+pub const IMGTBL_BYTES: u64 = 2 << 20; // mImgtbl metadata table
+pub const MOSAIC_BYTES_PER_IMAGE: u64 = 4 << 20; // mAdd output scales with n
+pub const SHRINK_FACTOR: u64 = 64; // mShrink reduces the mosaic
+pub const JPEG_BYTES: u64 = 1 << 20; // final preview
+
 /// Montage task-type names in pipeline order.
 pub const TYPE_NAMES: [&str; 9] = [
     "mProject",
@@ -164,12 +183,14 @@ pub fn generate(cfg: &MontageConfig) -> Dag {
         SimTime::from_secs_f64(rng.lognormal(t.median_secs, t.sigma))
     };
 
-    // Stage 1: mProject per image.
+    // Stage 1: mProject per image (stages in its raw tile from storage).
     let n = cfg.n_images();
     let mut projects = Vec::with_capacity(n);
     for _ in 0..n {
         let d = sample(&dag, 0, &mut rng);
-        projects.push(dag.add_task(proj, d, &[]));
+        let t = dag.add_task(proj, d, &[]);
+        dag.set_io(t, RAW_IMAGE_BYTES, PROJECTED_BYTES);
+        projects.push(t);
     }
 
     // Stage 2: mDiffFit per overlapping pair (intertwines with stage 1).
@@ -177,31 +198,43 @@ pub fn generate(cfg: &MontageConfig) -> Dag {
     let mut diffs = Vec::with_capacity(pairs.len());
     for &(i, j) in &pairs {
         let d = sample(&dag, 1, &mut rng);
-        diffs.push(dag.add_task(diff, d, &[projects[i], projects[j]]));
+        let t = dag.add_task(diff, d, &[projects[i], projects[j]]);
+        dag.set_io(t, 0, DIFF_FIT_BYTES);
+        diffs.push(t);
     }
 
     // Serial: mConcatFit <- all diffs; mBgModel <- concat.
     let d = sample(&dag, 2, &mut rng);
     let concat_t = dag.add_task(concat, d, &diffs);
+    dag.set_io(concat_t, 0, CONCAT_TABLE_BYTES);
     let d = sample(&dag, 3, &mut rng);
     let bg_t = dag.add_task(bgmodel, d, &[concat_t]);
+    dag.set_io(bg_t, 0, BG_MODEL_BYTES);
 
     // Stage 3: mBackground per image.
     let mut bgs = Vec::with_capacity(n);
     for &p in &projects {
         let d = sample(&dag, 4, &mut rng);
-        bgs.push(dag.add_task(backgr, d, &[bg_t, p]));
+        let t = dag.add_task(backgr, d, &[bg_t, p]);
+        dag.set_io(t, 0, CORRECTED_BYTES);
+        bgs.push(t);
     }
 
-    // Assembly: mImgtbl -> mAdd -> mShrink -> mJPEG.
+    // Assembly: mImgtbl -> mAdd -> mShrink -> mJPEG. The mosaic grows
+    // with the tile count (the data plane's gather hot-spot).
     let d = sample(&dag, 5, &mut rng);
     let imgtbl_t = dag.add_task(imgtbl, d, &bgs);
+    dag.set_io(imgtbl_t, 0, IMGTBL_BYTES);
     let d = sample(&dag, 6, &mut rng);
     let madd_t = dag.add_task(madd, d, &[imgtbl_t]);
+    let mosaic = MOSAIC_BYTES_PER_IMAGE * n as u64;
+    dag.set_io(madd_t, 0, mosaic);
     let d = sample(&dag, 7, &mut rng);
     let shrink_t = dag.add_task(shrink, d, &[madd_t]);
+    dag.set_io(shrink_t, 0, (mosaic / SHRINK_FACTOR).max(1));
     let d = sample(&dag, 8, &mut rng);
-    let _jpeg_t: TaskId = dag.add_task(jpeg, d, &[shrink_t]);
+    let jpeg_t: TaskId = dag.add_task(jpeg, d, &[shrink_t]);
+    dag.set_io(jpeg_t, 0, JPEG_BYTES);
 
     dag
 }
@@ -378,6 +411,41 @@ mod tests {
         // 3x3 grid: h-pairs 6, v-pairs 6, diag 2*4=8
         assert_eq!(overlap_pairs(3, 3, false).len(), 12);
         assert_eq!(overlap_pairs(3, 3, true).len(), 20);
+    }
+
+    #[test]
+    fn size_laws_annotate_every_task() {
+        let cfg = MontageConfig {
+            grid_w: 3,
+            grid_h: 3,
+            diagonals: true,
+            seed: 5,
+        };
+        let dag = generate(&cfg);
+        for t in &dag.tasks {
+            let (inb, outb) = (dag.task_in_bytes(t.id), dag.task_out_bytes(t.id));
+            match dag.type_name(t.id) {
+                "mProject" => {
+                    assert_eq!(inb, RAW_IMAGE_BYTES);
+                    assert_eq!(outb, PROJECTED_BYTES);
+                }
+                "mDiffFit" => {
+                    assert_eq!(inb, 0);
+                    assert_eq!(outb, DIFF_FIT_BYTES);
+                }
+                "mAdd" => assert_eq!(outb, MOSAIC_BYTES_PER_IMAGE * 9),
+                "mShrink" => assert_eq!(outb, MOSAIC_BYTES_PER_IMAGE * 9 / SHRINK_FACTOR),
+                _ => assert!(outb > 0, "{} has no output size", dag.type_name(t.id)),
+            }
+        }
+        // the mosaic dominates: total bytes scale with the grid
+        let big = generate(&MontageConfig {
+            grid_w: 6,
+            grid_h: 6,
+            diagonals: true,
+            seed: 5,
+        });
+        assert!(big.total_out_bytes() > dag.total_out_bytes());
     }
 
     #[test]

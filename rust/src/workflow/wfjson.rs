@@ -35,10 +35,20 @@ pub fn to_json(dag: &Dag) -> Json {
         .iter()
         .map(|t| {
             // reconstruct deps from the forward edge lists
-            Json::obj(vec![
+            let mut fields = vec![
                 ("type", (t.ttype.0 as u64).into()),
                 ("duration_ms", t.duration.as_millis().into()),
-            ])
+            ];
+            // data-plane annotations, omitted when zero (keeps old files
+            // and old readers compatible)
+            let (inb, outb) = (dag.task_in_bytes(t.id), dag.task_out_bytes(t.id));
+            if inb > 0 {
+                fields.push(("in_b", inb.into()));
+            }
+            if outb > 0 {
+                fields.push(("out_b", outb.into()));
+            }
+            Json::obj(fields)
         })
         .collect();
     // deps stored as reverse adjacency: for compactness serialize successor
@@ -84,11 +94,16 @@ pub fn from_json(j: &Json) -> Result<Dag, JsonError> {
         }
     }
     for (i, t) in tasks.iter().enumerate() {
-        dag.add_task(
+        let id = dag.add_task(
             TypeId(t.get("type")?.as_u64()? as u16),
             SimTime::from_millis(t.get("duration_ms")?.as_u64()?),
             &deps[i],
         );
+        let inb = t.opt("in_b").map(|v| v.as_u64()).transpose()?.unwrap_or(0);
+        let outb = t.opt("out_b").map(|v| v.as_u64()).transpose()?.unwrap_or(0);
+        if inb > 0 || outb > 0 {
+            dag.set_io(id, inb, outb);
+        }
     }
     Ok(dag)
 }
@@ -126,7 +141,11 @@ mod tests {
             assert_eq!(back.successors(t), dag.successors(t));
             assert_eq!(back.preds_count(t), dag.preds_count(t));
             assert_eq!(back.tasks[i].duration, dag.tasks[i].duration);
+            // data-plane annotations survive the round trip
+            assert_eq!(back.task_in_bytes(t), dag.task_in_bytes(t));
+            assert_eq!(back.task_out_bytes(t), dag.task_out_bytes(t));
         }
+        assert!(dag.total_out_bytes() > 0, "montage carries size laws");
     }
 
     #[test]

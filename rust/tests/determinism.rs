@@ -182,6 +182,95 @@ fn chaos_fleet_rerun_is_bit_identical() {
     );
 }
 
+/// Data-plane rerun contract (the acceptance bar for `--data`): identical
+/// seed + data spec must reproduce the run bit-identically — makespan,
+/// bytes moved, cache hits and stage-in percentiles included — for the
+/// pools and job models on the NFS backend. Transfer rates are max-min
+/// fair shares recomputed on every flow start/finish, so this guards the
+/// whole piecewise-constant-rate timeline.
+#[test]
+fn data_rerun_reproduces_bytes_and_stage_in_tail() {
+    for model in [ExecModel::paper_hybrid_pools(), ExecModel::JobBased] {
+        let mk = || {
+            let mut cfg = driver::SimConfig::with_nodes(4);
+            cfg.seed = 7;
+            cfg.data =
+                Some(hyperflow_k8s::data::DataConfig::parse_spec("nfs:0.5,cache:4").unwrap());
+            driver::run(montage(6, 3), model.clone(), cfg)
+        };
+        let (a, b) = (mk(), mk());
+        let name = model.name();
+        assert_eq!(a.makespan, b.makespan, "{name}: makespan under I/O");
+        assert_eq!(a.data.bytes_in, b.data.bytes_in, "{name}: bytes in");
+        assert_eq!(a.data.bytes_out, b.data.bytes_out, "{name}: bytes out");
+        assert_eq!(a.data.bytes_hit, b.data.bytes_hit, "{name}: cache hits");
+        assert_eq!(a.data.transfers, b.data.transfers, "{name}: transfers");
+        assert_eq!(
+            a.data.stage_in_p95_s, b.data.stage_in_p95_s,
+            "{name}: stage-in p95"
+        );
+        assert_eq!(a.sim_events, b.sim_events, "{name}: event count");
+        assert_eq!(a.sched_binds, b.sched_binds, "{name}: binds");
+        assert!(a.data.bytes_in > 0, "{name}: the data plane must be live");
+    }
+}
+
+/// A fleet run with the data plane *and* locality-aware placement active
+/// must reproduce too — locality scoring feeds the scheduler from mutable
+/// cache state, so any nondeterminism there would shift placements.
+#[test]
+fn data_fleet_with_locality_rerun_is_bit_identical() {
+    let mk = || {
+        let cfg = FleetConfig {
+            arrival: ArrivalProcess::Poisson { per_hour: 60.0 },
+            duration_s: 400.0,
+            tenants: fleet::default_tenants(2, &[3, 4]),
+            seed: 42,
+            max_in_flight: None,
+        };
+        let mut sim = driver::SimConfig::with_nodes(4);
+        sim.seed = 42;
+        sim.data = Some(
+            hyperflow_k8s::data::DataConfig::parse_spec("nfs:1,cache:4,locality:on").unwrap(),
+        );
+        fleet::run(ExecModel::paper_hybrid_pools(), sim, &cfg)
+    };
+    let (a, b) = (mk(), mk());
+    assert_eq!(a.sim.makespan, b.sim.makespan);
+    assert_eq!(a.sim.sim_events, b.sim.sim_events);
+    assert_eq!(a.sim.data.bytes_in, b.sim.data.bytes_in);
+    assert_eq!(a.sim.data.bytes_by_tenant, b.sim.data.bytes_by_tenant);
+    assert_eq!(
+        fleet::report::render_table(&a),
+        fleet::report::render_table(&b)
+    );
+    assert!(a.sim.data.enabled && a.sim.data.bytes_in > 0);
+}
+
+/// Regression: with the data plane *off* (the default), runs must carry an
+/// all-zero data report and reproduce the baseline makespans exactly —
+/// the `--data` flag gates every data-plane code path, so disabled runs
+/// stay bit-identical to pre-data builds. (The cross-PR half of that
+/// contract is enforced by the untouched rerun tests above, which run the
+/// same `data: None` path the pre-data driver ran.)
+#[test]
+fn data_off_reproduces_baseline_makespans() {
+    for model in all_models() {
+        let mk = || {
+            let cfg = driver::SimConfig::with_nodes(5);
+            assert!(cfg.data.is_none(), "data plane must default to off");
+            driver::run(montage(8, 42), model.clone(), cfg)
+        };
+        let (a, b) = (mk(), mk());
+        let name = model.name();
+        assert!(!a.data.enabled, "{name}: disabled runs report no data");
+        assert_eq!(a.data.bytes_in + a.data.bytes_out, 0, "{name}");
+        assert_eq!(a.data.stage_ins, 0, "{name}: no stage events scheduled");
+        assert_eq!(a.makespan, b.makespan, "{name}: baseline makespan");
+        assert_eq!(a.sim_events, b.sim_events, "{name}: baseline event count");
+    }
+}
+
 /// Fleet runs (open-loop arrivals, tenancy, fair-share lanes, admission
 /// control) must reproduce the per-tenant slowdown table from the seed —
 /// the acceptance contract of `hyperflow serve`.
