@@ -17,8 +17,9 @@
 //!   injectors are seeded Poisson processes driven off the calendar
 //!   [`crate::sim::EventQueue`], so identical seed + chaos spec gives a
 //!   bit-identical run — including under `run_fleet`.
-//! * [`recover`] — recovery policies, pluggable per
-//!   [`crate::models::ExecModel`]: retry with exponential back-off and a
+//! * [`recover`] — recovery policies, pluggable per execution strategy
+//!   ([`crate::exec::strategy::ExecStrategy::default_recovery`]): retry
+//!   with exponential back-off and a
 //!   delay cap, node blacklisting after K failures, checkpoint-restart
 //!   (a re-run resumes at a configurable fraction of the lost progress),
 //!   and speculative re-execution for straggling pool tasks.
@@ -46,8 +47,9 @@ pub use report::{ChaosReport, ChaosStats};
 #[derive(Debug, Clone, Default)]
 pub struct ChaosConfig {
     pub injectors: Vec<Injector>,
-    /// Recovery policy override; `None` selects
-    /// [`RecoveryPolicy::for_model`] defaults at build time.
+    /// Recovery policy override; `None` selects the execution strategy's
+    /// default ([`crate::exec::strategy::ExecStrategy::default_recovery`])
+    /// at build time.
     pub recovery: Option<RecoveryPolicy>,
 }
 

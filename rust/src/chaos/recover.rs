@@ -1,5 +1,9 @@
 //! Recovery policies: what the platform does *after* a fault, pluggable
-//! per execution model.
+//! per execution model. Each strategy module supplies its own default via
+//! [`crate::exec::strategy::ExecStrategy::default_recovery`] (pool models
+//! add speculation; job models cannot split a pod and lean on
+//! checkpoint-restart + retry alone); an explicit policy on the
+//! [`crate::chaos::ChaosConfig`] overrides it.
 //!
 //! Four mechanisms (all knobs on one [`RecoveryPolicy`]):
 //!
@@ -19,7 +23,6 @@
 //!   is dropped as stale. At most one copy per task. Pool models only —
 //!   job batches execute inside a single pod and cannot be split.
 
-use crate::models::ExecModel;
 use crate::sim::SimTime;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -65,20 +68,6 @@ impl Default for RecoveryPolicy {
 }
 
 impl RecoveryPolicy {
-    /// Model-specific defaults: pool models add speculative re-execution
-    /// (a queue consumer can be duplicated); job models cannot — their
-    /// unit of execution is the whole pod — so they lean on
-    /// checkpoint-restart and retry alone.
-    pub fn for_model(model: &ExecModel) -> Self {
-        match model {
-            ExecModel::JobBased | ExecModel::Clustered(_) => RecoveryPolicy::default(),
-            ExecModel::WorkerPools { .. } | ExecModel::GenericPool => RecoveryPolicy {
-                speculative: true,
-                ..RecoveryPolicy::default()
-            },
-        }
-    }
-
     /// Retry delay for the given attempt number (0-based), capped.
     pub fn backoff(&self, attempt: u32) -> SimTime {
         let exp = self.retry_initial_ms as f64 * self.retry_factor.powi(attempt.min(63) as i32);
@@ -105,15 +94,13 @@ mod tests {
     }
 
     #[test]
-    fn model_defaults_differ_on_speculation_only() {
-        let job = RecoveryPolicy::for_model(&ExecModel::JobBased);
-        let pools = RecoveryPolicy::for_model(&ExecModel::paper_hybrid_pools());
-        let generic = RecoveryPolicy::for_model(&ExecModel::GenericPool);
-        assert!(!job.speculative);
-        assert!(pools.speculative);
-        assert!(generic.speculative);
-        assert_eq!(job.retry_initial_ms, pools.retry_initial_ms);
-        assert_eq!(job.checkpoint_frac, pools.checkpoint_frac);
-        assert!(job.blacklist_after > 0, "blacklisting on by default");
+    fn default_policy_has_blacklisting_but_no_speculation() {
+        // the per-model speculation split now lives with the strategies
+        // (see exec::strategy tests); the base policy stays conservative
+        let p = RecoveryPolicy::default();
+        assert!(!p.speculative);
+        assert!(p.blacklist_after > 0, "blacklisting on by default");
+        assert!(p.checkpoint_frac > 0.0 && p.checkpoint_frac < 1.0);
+        assert!(p.drain_on_warning);
     }
 }

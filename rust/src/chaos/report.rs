@@ -77,6 +77,7 @@ impl ChaosStats {
 
     /// Freeze the accumulator into the report attached to a `SimResult`.
     pub fn report(&self) -> ChaosReport {
+        let recovery = self.recovery_latency.percentile_row();
         ChaosReport {
             enabled: self.enabled,
             pod_failures: self.pod_failures,
@@ -90,9 +91,9 @@ impl ChaosStats {
             wasted_ms: self.wasted_ms,
             useful_ms: self.useful_ms,
             recoveries: self.recovery_latency.len(),
-            recovery_p50_s: self.recovery_latency.percentile(50.0),
-            recovery_p95_s: self.recovery_latency.percentile(95.0),
-            recovery_p99_s: self.recovery_latency.percentile(99.0),
+            recovery_p50_s: recovery.p50,
+            recovery_p95_s: recovery.p95,
+            recovery_p99_s: recovery.p99,
             wasted_ms_by_tenant: self.wasted_ms_by_tenant.clone(),
             retries_by_tenant: self.retries_by_tenant.clone(),
         }

@@ -4,7 +4,7 @@
 //! `configs/*.json`).
 
 use crate::engine::clustering::ClusteringConfig;
-use crate::models::{driver::SimConfig, ExecModel};
+use crate::exec::{ExecModel, SimConfig};
 use crate::util::json::{Json, JsonError};
 use crate::workflow::dag::Dag;
 use crate::workflow::montage::{generate, MontageConfig};
@@ -205,45 +205,21 @@ impl ExperimentConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
-        if self.sim.nodes == 0 {
-            return Err(anyhow!("cluster must have at least one node"));
-        }
-        if !(0.0..=1.0).contains(&self.sim.pod_failure_prob) {
-            return Err(anyhow!("pod_failure_prob must be in [0,1]"));
-        }
-        for &(_, node, _) in &self.sim.node_events {
-            if node >= self.sim.nodes {
-                return Err(anyhow!(
-                    "node event references node {node} but cluster has {}",
-                    self.sim.nodes
-                ));
-            }
-        }
-        if let ExecModel::Clustered(c) = &self.model {
-            for r in &c.rules {
-                if r.size == 0 {
-                    return Err(anyhow!("clustering size must be >= 1"));
-                }
-            }
-        }
+        // named ConfigError variants from the exec layer (zero nodes, bad
+        // node events, out-of-range pod_failure_prob, zero cluster sizes,
+        // empty/duplicate pool sets)
+        self.sim.validate().map_err(|e| anyhow!("{e}"))?;
+        self.model.validate().map_err(|e| anyhow!("{e}"))?;
         Ok(())
     }
 
     /// Build the workflow and run the experiment.
     pub fn run(&self) -> Result<crate::report::SimResult> {
         let dag = self.workflow.build()?;
-        if let ExecModel::WorkerPools { pooled_types } = &self.model {
-            for p in pooled_types {
-                if dag.type_id(p).is_none() {
-                    return Err(anyhow!("pooled type '{p}' not present in workflow"));
-                }
-            }
-        }
-        Ok(crate::models::driver::run(
-            dag,
-            self.model.clone(),
-            self.sim.clone(),
-        ))
+        self.model
+            .validate_against(&dag)
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(crate::exec::run(dag, self.model.clone(), self.sim.clone()))
     }
 }
 

@@ -62,6 +62,7 @@ impl DataStats {
 
     /// Freeze the accumulator into the report attached to a `SimResult`.
     pub fn report(&self) -> DataReport {
+        let stage_in = self.stage_in.percentile_row();
         DataReport {
             enabled: self.enabled,
             bytes_in: self.bytes_in,
@@ -73,9 +74,9 @@ impl DataStats {
             transfers: self.transfers,
             stage_ins: self.stage_in.len(),
             stage_in_mean_s: self.stage_in.mean(),
-            stage_in_p50_s: self.stage_in.percentile(50.0),
-            stage_in_p95_s: self.stage_in.percentile(95.0),
-            stage_in_p99_s: self.stage_in.percentile(99.0),
+            stage_in_p50_s: stage_in.p50,
+            stage_in_p95_s: stage_in.p95,
+            stage_in_p99_s: stage_in.p99,
             stage_out_p95_s: self.stage_out.percentile(95.0),
             compute_ms: self.compute_ms,
             io_ms: self.io_ms,

@@ -1,0 +1,54 @@
+//! The **clustered** model (paper §3.2 + §3.5): jobs with HyperFlow task
+//! clustering.
+//!
+//! Identical machinery to [`crate::exec::job`] — the difference is pure
+//! policy: the [`JobPath`]'s batcher runs with real
+//! [`ClusteringConfig`] rules, so same-type tasks agglomerate into
+//! batches of `size` (flushed early by the partial-batch timer,
+//! [`crate::exec::kernel::Ev::FlushTimer`]) and execute sequentially
+//! inside one pod. This slashes pod/API pressure on the 16k-task Montage
+//! runs at the cost of intra-batch serialization (Fig. 4/5).
+
+use crate::chaos::RecoveryPolicy;
+use crate::engine::clustering::ClusteringConfig;
+use crate::engine::Engine;
+use crate::exec::job::JobPath;
+use crate::exec::pools::PoolPath;
+use crate::exec::strategy::{ExecStrategy, StrategyState};
+
+/// §3.2 + clustering: batches of same-type tasks per pod.
+pub struct ClusteredStrategy {
+    state: StrategyState,
+}
+
+impl ClusteredStrategy {
+    pub fn build(rules: ClusteringConfig, engine: &Engine) -> ClusteredStrategy {
+        ClusteredStrategy {
+            state: StrategyState {
+                jobs: JobPath::new(rules),
+                pools: PoolPath::none(engine.dag().types.len()),
+            },
+        }
+    }
+}
+
+impl ExecStrategy for ClusteredStrategy {
+    fn name(&self) -> &'static str {
+        "job-clustered"
+    }
+
+    fn state(&mut self) -> &mut StrategyState {
+        &mut self.state
+    }
+
+    fn state_ref(&self) -> &StrategyState {
+        &self.state
+    }
+
+    /// Like the plain job model: a batch executes inside a single pod and
+    /// cannot be speculatively split, so recovery is retry + blacklist +
+    /// checkpoint-restart.
+    fn default_recovery(&self) -> RecoveryPolicy {
+        RecoveryPolicy::default()
+    }
+}

@@ -1,0 +1,311 @@
+//! Simulation configuration: [`SimConfig`] (cluster / runtime parameters)
+//! and the validating [`SimConfigBuilder`].
+//!
+//! The builder exists so misconfigurations surface as *named* errors
+//! ([`ConfigError`]) at construction time — a zero-node cluster, an empty
+//! worker-pool set, or a tenant/weight arity mismatch used to panic
+//! mid-run deep inside the driver. `SimConfig` itself stays a plain
+//! struct (every field public) so existing call sites and config-file
+//! loading keep working unchanged.
+
+use crate::autoscale::AutoscalerConfig;
+use crate::chaos::ChaosConfig;
+use crate::data::DataConfig;
+use crate::k8s::api_server::ApiServerConfig;
+use crate::k8s::scheduler::SchedulerConfig;
+
+/// A named configuration error, reported before any event is simulated.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    /// The cluster has zero worker nodes.
+    ZeroNodes,
+    /// A scheduled node event references a node outside the cluster.
+    NodeEventOutOfRange { node: usize, nodes: usize },
+    /// The deprecated `pod_failure_prob` knob is outside [0, 1].
+    PodFailureProbOutOfRange(f64),
+    /// `max_sim_s` is not a positive finite wall cap.
+    NonPositiveWallCap(f64),
+    /// A worker-pools model was configured with no pooled types.
+    EmptyPoolSet,
+    /// The same type appears twice in the pooled-type list.
+    DuplicatePooledType(String),
+    /// A pooled type does not exist in the workflow.
+    UnknownPooledType(String),
+    /// A clustering rule has batch size zero.
+    ZeroClusterSize,
+    /// Fleet plan: no tenants (the weight vector is empty).
+    NoTenants,
+    /// Fleet plan: an instance references a tenant with no weight entry.
+    TenantWeightArity { tenant: u16, weights: usize },
+    /// Fleet plan: an admission cap of zero would never admit anything.
+    ZeroAdmissionCap,
+    /// Fleet plan: instance task ranges must be contiguous and cover the
+    /// union DAG. `expected` is the next task offset (mid-plan gap or
+    /// overlap) or the DAG's task count (coverage shortfall at the end);
+    /// `found` is what the plan supplied instead.
+    BadInstanceRanges { expected: u32, found: u32 },
+    /// Fleet plan: an instance with zero tasks.
+    EmptyInstance,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroNodes => write!(f, "cluster must have at least one node"),
+            ConfigError::NodeEventOutOfRange { node, nodes } => write!(
+                f,
+                "node event references node {node} but the cluster has {nodes} nodes"
+            ),
+            ConfigError::PodFailureProbOutOfRange(p) => {
+                write!(f, "pod_failure_prob must be in [0, 1], got {p}")
+            }
+            ConfigError::NonPositiveWallCap(s) => {
+                write!(f, "max_sim_s must be a positive number, got {s}")
+            }
+            ConfigError::EmptyPoolSet => {
+                write!(f, "worker-pools model needs at least one pooled type")
+            }
+            ConfigError::DuplicatePooledType(t) => {
+                write!(f, "pooled type '{t}' is listed more than once")
+            }
+            ConfigError::UnknownPooledType(t) => {
+                write!(f, "pooled type '{t}' is not present in the workflow")
+            }
+            ConfigError::ZeroClusterSize => write!(f, "clustering size must be >= 1"),
+            ConfigError::NoTenants => write!(f, "fleet plan needs at least one tenant"),
+            ConfigError::TenantWeightArity { tenant, weights } => write!(
+                f,
+                "instance tenant {tenant} has no weight entry (weights cover {weights} tenants)"
+            ),
+            ConfigError::ZeroAdmissionCap => {
+                write!(f, "admission cap of 0 would never admit an instance")
+            }
+            ConfigError::BadInstanceRanges { expected, found } => write!(
+                f,
+                "instance task ranges must be contiguous and cover the DAG \
+                 (expected {expected}, got {found})"
+            ),
+            ConfigError::EmptyInstance => write!(f, "empty workflow instance"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Cluster / runtime parameters (defaults follow DESIGN.md §5).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Number of worker nodes (paper: up to 17).
+    pub nodes: usize,
+    /// Pod container startup latency (paper: "typically about 2s").
+    pub pod_start_ms: u64,
+    /// Per-task executor overhead inside a pod (HyperFlow job-executor
+    /// fetch + spawn).
+    pub exec_overhead_ms: u64,
+    /// Job-controller reconcile delay (Job object -> Pod object).
+    pub job_controller_ms: u64,
+    /// Message fetch latency from a pool queue.
+    pub fetch_ms: u64,
+    pub sched: SchedulerConfig,
+    pub api: ApiServerConfig,
+    pub autoscale: AutoscalerConfig,
+    /// Hard wall-clock cap on the simulation (guards against livelock in
+    /// pathological configurations). Simulated seconds.
+    pub max_sim_s: f64,
+    /// **Deprecated** — legacy knob, kept working for old configs: at
+    /// build time a non-zero value is folded into the chaos subsystem as
+    /// a `PodFailure` injector. Prefer `chaos` with a `pod:<p>` spec.
+    pub pod_failure_prob: f64,
+    /// Seed for the chaos/failure-injection RNG streams.
+    pub seed: u64,
+    /// Chaos engine: fault injectors + recovery policy (see
+    /// [`crate::chaos`]). Empty = disabled, zero overhead, bit-identical
+    /// behavior to pre-chaos builds.
+    pub chaos: ChaosConfig,
+    /// Future-work (§5): throttled job submission — cap on pods that may
+    /// sit in the Pending/creation pipeline at once; further batches wait
+    /// in the engine. `None` reproduces the paper's unthrottled behaviour.
+    pub max_pending_pods: Option<usize>,
+    /// Failure injection: scheduled node up/down events (ms, node index,
+    /// up?). Down kills all pods on the node (jobs recreated, worker tasks
+    /// requeued); up restores capacity.
+    pub node_events: Vec<(u64, usize, bool)>,
+    /// Data plane: shared-storage/transfer modeling (see [`crate::data`]).
+    /// `None` (the default) disables it entirely — no stage events are
+    /// ever scheduled and runs are bit-identical to pre-data builds.
+    pub data: Option<DataConfig>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        let nodes = 17;
+        SimConfig {
+            nodes,
+            pod_start_ms: 2_000,
+            exec_overhead_ms: 100,
+            job_controller_ms: 500,
+            fetch_ms: 10,
+            sched: SchedulerConfig::default(),
+            api: ApiServerConfig::default(),
+            autoscale: AutoscalerConfig {
+                quota_cpu_m: nodes as u64 * 4_000,
+                ..Default::default()
+            },
+            max_sim_s: 6.0 * 3600.0,
+            pod_failure_prob: 0.0,
+            seed: 42,
+            chaos: ChaosConfig::default(),
+            max_pending_pods: None,
+            node_events: Vec::new(),
+            data: None,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn with_nodes(nodes: usize) -> Self {
+        SimConfig {
+            nodes,
+            autoscale: AutoscalerConfig {
+                quota_cpu_m: nodes as u64 * 4_000,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Start a validating builder (CLI entry points use this so bad flag
+    /// combinations exit with a named [`ConfigError`] instead of a panic
+    /// halfway through a run).
+    pub fn builder() -> SimConfigBuilder {
+        SimConfigBuilder {
+            cfg: SimConfig::default(),
+        }
+    }
+
+    /// Validate an already-assembled config (the builder calls this; the
+    /// JSON experiment loader reuses it for its own error reporting).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.nodes == 0 {
+            return Err(ConfigError::ZeroNodes);
+        }
+        if !(0.0..=1.0).contains(&self.pod_failure_prob) {
+            return Err(ConfigError::PodFailureProbOutOfRange(self.pod_failure_prob));
+        }
+        if !self.max_sim_s.is_finite() || self.max_sim_s <= 0.0 {
+            return Err(ConfigError::NonPositiveWallCap(self.max_sim_s));
+        }
+        for &(_, node, _) in &self.node_events {
+            if node >= self.nodes {
+                return Err(ConfigError::NodeEventOutOfRange {
+                    node,
+                    nodes: self.nodes,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`SimConfig`] whose `build()` rejects invalid setups with
+/// named errors.
+#[derive(Debug, Clone)]
+pub struct SimConfigBuilder {
+    cfg: SimConfig,
+}
+
+impl SimConfigBuilder {
+    /// Cluster size; also re-derives the autoscaler CPU quota like
+    /// [`SimConfig::with_nodes`].
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.cfg.nodes = nodes;
+        self.cfg.autoscale.quota_cpu_m = nodes as u64 * 4_000;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn chaos(mut self, chaos: ChaosConfig) -> Self {
+        self.cfg.chaos = chaos;
+        self
+    }
+
+    pub fn data(mut self, data: Option<DataConfig>) -> Self {
+        self.cfg.data = data;
+        self
+    }
+
+    pub fn max_pending_pods(mut self, cap: Option<usize>) -> Self {
+        self.cfg.max_pending_pods = cap;
+        self
+    }
+
+    pub fn node_events(mut self, events: Vec<(u64, usize, bool)>) -> Self {
+        self.cfg.node_events = events;
+        self
+    }
+
+    pub fn pod_failure_prob(mut self, p: f64) -> Self {
+        self.cfg.pod_failure_prob = p;
+        self
+    }
+
+    pub fn max_sim_s(mut self, s: f64) -> Self {
+        self.cfg.max_sim_s = s;
+        self
+    }
+
+    pub fn build(self) -> Result<SimConfig, ConfigError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_happy_path_matches_with_nodes() {
+        let built = SimConfig::builder().nodes(4).seed(7).build().unwrap();
+        let direct = SimConfig::with_nodes(4);
+        assert_eq!(built.nodes, direct.nodes);
+        assert_eq!(built.autoscale.quota_cpu_m, direct.autoscale.quota_cpu_m);
+        assert_eq!(built.seed, 7);
+    }
+
+    #[test]
+    fn zero_nodes_is_a_named_error() {
+        let err = SimConfig::builder().nodes(0).build().unwrap_err();
+        assert_eq!(err, ConfigError::ZeroNodes);
+        assert!(err.to_string().contains("at least one node"));
+    }
+
+    #[test]
+    fn out_of_range_node_event_is_rejected() {
+        let err = SimConfig::builder()
+            .nodes(2)
+            .node_events(vec![(1_000, 5, false)])
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::NodeEventOutOfRange { node: 5, nodes: 2 }
+        );
+    }
+
+    #[test]
+    fn bad_legacy_probability_and_wall_cap_are_rejected() {
+        assert!(matches!(
+            SimConfig::builder().pod_failure_prob(2.0).build(),
+            Err(ConfigError::PodFailureProbOutOfRange(_))
+        ));
+        assert!(matches!(
+            SimConfig::builder().max_sim_s(0.0).build(),
+            Err(ConfigError::NonPositiveWallCap(_))
+        ));
+    }
+}

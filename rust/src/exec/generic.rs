@@ -1,0 +1,86 @@
+//! The **generic-pool** model (paper §3.3's rejected alternative): one
+//! untyped worker pool serving every task type.
+//!
+//! The single pool's pod template must request the *maximum* resources
+//! over all task types (the resource-side of §3.3's "universal image"
+//! problem), which degrades packing quality — implemented precisely to
+//! quantify that degradation against the typed pools of
+//! [`crate::exec::pools`]. Routing-wise this is the typed strategy with
+//! the whole `pool_of_type` table pointed at one [`crate::broker::PoolId`],
+//! so the job path never engages on a healthy run.
+
+use crate::autoscale::PoolSpec;
+use crate::chaos::RecoveryPolicy;
+use crate::engine::clustering::ClusteringConfig;
+use crate::engine::Engine;
+use crate::exec::config::SimConfig;
+use crate::exec::job::JobPath;
+use crate::exec::pools::PoolPath;
+use crate::exec::strategy::{ExecStrategy, StrategyState};
+use crate::k8s::resources::Resources;
+use crate::metrics::Registry;
+
+/// Queue name of the single pool in the generic-pool model.
+pub const GENERIC_POOL: &str = "__generic__";
+
+/// §3.3's single generic worker pool for ALL task types.
+pub struct GenericStrategy {
+    state: StrategyState,
+}
+
+impl GenericStrategy {
+    pub fn build(engine: &Engine, cfg: &SimConfig, metrics: &mut Registry) -> GenericStrategy {
+        let n_types = engine.dag().types.len();
+        // generic-pool pod template: max requests over every task type
+        // (§3.3's "universal image" problem, resource-wise)
+        let generic_requests = engine
+            .dag()
+            .types
+            .iter()
+            .fold(Resources::ZERO, |acc, t| Resources {
+                cpu_m: acc.cpu_m.max(t.requests.cpu_m),
+                mem_mb: acc.mem_mb.max(t.requests.mem_mb),
+            });
+        let mut pools = PoolPath::none(n_types);
+        let id = pools.broker.declare(GENERIC_POOL);
+        pools.pool_type.push(None);
+        for slot in pools.pool_of_type.iter_mut() {
+            *slot = Some(id);
+        }
+        pools.generic_requests = generic_requests;
+        let specs = vec![PoolSpec {
+            name: GENERIC_POOL.to_string(),
+            requests: generic_requests,
+        }];
+        pools.finalize(cfg, specs, metrics);
+        GenericStrategy {
+            state: StrategyState {
+                jobs: JobPath::new(ClusteringConfig::none()),
+                pools,
+            },
+        }
+    }
+}
+
+impl ExecStrategy for GenericStrategy {
+    fn name(&self) -> &'static str {
+        "generic-pool"
+    }
+
+    fn state(&mut self) -> &mut StrategyState {
+        &mut self.state
+    }
+
+    fn state_ref(&self) -> &StrategyState {
+        &self.state
+    }
+
+    /// Queue consumers can be duplicated, so stragglers are speculatively
+    /// re-executed like the typed pools.
+    fn default_recovery(&self) -> RecoveryPolicy {
+        RecoveryPolicy {
+            speculative: true,
+            ..RecoveryPolicy::default()
+        }
+    }
+}

@@ -1,0 +1,638 @@
+//! **Subsystem hooks**: how chaos, the data plane and the fleet service
+//! attach to kernel events — instead of being inlined branches of the
+//! event loop.
+//!
+//! Each subsystem follows the same pattern: an `Option<State>` slot on
+//! the [`Kernel`] (`None` = subsystem off, zero events scheduled,
+//! bit-identical to a build without it), plus a set of attachment points
+//! implemented here:
+//!
+//! * **chaos** ([`ChaosRuntime`]) — fault *injection* rides dedicated
+//!   calendar events (`ChaosFault` / `ChaosReclaim` / `ChaosRestore` /
+//!   `ChaosUncordon`); fault *recovery* re-enters work through the
+//!   strategy's `on_retry_task` / `on_retry_batch` hooks after a policy
+//!   back-off. The kill paths ([`StrategyState::fail_node_inner`],
+//!   [`StrategyState::spot_warning`], [`StrategyState::pod_start_failure`])
+//!   charge wasted work and route every orphaned payload to its
+//!   strategy-owned recovery.
+//! * **data plane** — every task expands into a stage-in -> compute ->
+//!   stage-out cycle ([`StrategyState::begin_task`] /
+//!   [`StrategyState::finish_task`]); transfer completions arrive as
+//!   `FlowDone` / `FlowActivate` events and readiness propagation is
+//!   gated on the write-through stage-out.
+//! * **fleet** ([`FleetState`]) — open-loop `InstanceArrive` events feed
+//!   admission control; instance roots dispatch through the shared
+//!   [`StrategyState::dispatch_ready`] routing at admission, and per-task
+//!   completion releases admission slots.
+//!
+//! Note on layering: the `on_*` trait hooks are the *kernel-event*
+//! surface. Work that becomes ready *inside* a strategy operation
+//! (readiness propagation after a completion, fleet admission, retries)
+//! routes through [`StrategyState::dispatch_ready`] directly — it is the
+//! single routing point either way.
+
+use crate::chaos::inject::FaultProcess;
+use crate::chaos::{ChaosConfig, Injector, RecoveryPolicy};
+use crate::data::StageStart;
+use crate::engine::TaskState;
+use crate::exec::kernel::{Ev, IoPhase, Kernel};
+use crate::exec::strategy::{PodWork, StrategyState};
+use crate::k8s::pod::{Payload, PodId, PodPhase};
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+use crate::workflow::task::TaskId;
+use std::collections::VecDeque;
+
+/// Runtime state of the chaos engine for one run (`None` on the kernel =
+/// disabled: no chaos events are ever scheduled and the hot path is
+/// untouched).
+pub struct ChaosRuntime {
+    /// Timed injectors (spot reclaim, node crash), each with its own
+    /// forked RNG stream.
+    pub processes: Vec<FaultProcess>,
+    /// Combined per-start crash probability over all PodFailure injectors
+    /// (includes the migrated legacy `pod_failure_prob`).
+    pub pod_fail_prob: f64,
+    /// Stream for pod-start crash sampling.
+    pub pod_rng: Rng,
+    /// Stream for straggler (re)sampling on node replacement.
+    pub node_rng: Rng,
+    /// Straggler injector params: (fraction of slow nodes, slow factor).
+    pub straggler: Option<(f64, f64)>,
+    /// Recovery policy in force (explicit or the strategy's default).
+    pub policy: RecoveryPolicy,
+    /// Quota the autoscaler was configured with at build (re-scaled to
+    /// surviving capacity on node churn).
+    pub base_quota: u64,
+}
+
+impl ChaosRuntime {
+    /// Build the runtime from a config, folding the deprecated
+    /// `pod_failure_prob` knob in as one more PodFailure injector.
+    /// `default_policy` is the strategy's recovery default, used when the
+    /// spec does not pin a policy. Returns `None` when no fault source is
+    /// configured.
+    pub fn build(
+        cfg: &ChaosConfig,
+        legacy_pod_failure_prob: f64,
+        default_policy: RecoveryPolicy,
+        seed: u64,
+        base_quota: u64,
+    ) -> Option<ChaosRuntime> {
+        let mut spec = cfg.clone();
+        if legacy_pod_failure_prob > 0.0 {
+            log::warn!(
+                "sim.pod_failure_prob is deprecated: folding it into the chaos \
+                 subsystem as a PodFailure injector (use chaos spec 'pod:{legacy_pod_failure_prob}')"
+            );
+            spec.injectors.push(Injector::PodFailure {
+                prob: legacy_pod_failure_prob,
+            });
+        }
+        if !spec.is_enabled() {
+            return None;
+        }
+        let policy = spec.recovery.clone().unwrap_or(default_policy);
+        // Fixed fork order => the fault timeline is a pure function of
+        // (seed, chaos spec), independent of everything else in the run.
+        // The pod-failure stream keeps the legacy `seed ^ 0xFA11` seeding
+        // of the old inline pod_failure_prob branch, so configs that only
+        // set the deprecated knob reproduce their historical failure
+        // pattern (one draw per pod start, same order until the first
+        // fault diverges the timeline).
+        let mut master = Rng::new(seed ^ 0xC4A0_5EED);
+        let pod_rng = Rng::new(seed ^ 0xFA11);
+        let node_rng = master.fork(2);
+        let processes: Vec<FaultProcess> = spec
+            .injectors
+            .iter()
+            .filter(|i| i.is_timed())
+            .enumerate()
+            .map(|(k, i)| FaultProcess::new(i.clone(), master.fork(16 + k as u64)))
+            .collect();
+        assert!(processes.len() <= u8::MAX as usize, "too many timed injectors");
+        Some(ChaosRuntime {
+            processes,
+            pod_fail_prob: spec.pod_failure_prob(),
+            pod_rng,
+            node_rng,
+            straggler: spec.straggler(),
+            policy,
+            base_quota,
+        })
+    }
+}
+
+/// Runtime state of a fleet run: per-instance admission and completion
+/// tracking over the disjoint-union task space.
+pub struct FleetState {
+    /// Unfinished task count per instance; 0 = the instance completed.
+    pub outstanding: Vec<u32>,
+    /// Each instance's initially-ready tasks, dispatched at admission
+    /// (taken out once — an instance is admitted exactly once).
+    pub roots: Vec<Vec<TaskId>>,
+    pub admitted_at: Vec<Option<SimTime>>,
+    pub finished_at: Vec<Option<SimTime>>,
+    /// Arrived instances waiting for an admission slot (FIFO).
+    pub waiting: VecDeque<u32>,
+    /// Instances admitted but not yet finished.
+    pub in_flight: usize,
+    /// Admission-control cap on concurrently running instances.
+    pub max_in_flight: Option<usize>,
+}
+
+impl FleetState {
+    /// An instance arrived (open-loop): `true` if a slot is free and it
+    /// should be admitted now; otherwise it joins the FIFO queue.
+    pub fn try_admit(&mut self, inst: usize) -> bool {
+        match self.max_in_flight {
+            Some(cap) if self.in_flight >= cap => {
+                self.waiting.push_back(inst as u32);
+                false
+            }
+            _ => true,
+        }
+    }
+
+    /// Admit an instance: stamp it and hand back its root tasks for the
+    /// strategy to dispatch.
+    pub fn admit(&mut self, inst: usize, now: SimTime) -> Vec<TaskId> {
+        self.in_flight += 1;
+        debug_assert!(self.admitted_at[inst].is_none(), "double admission");
+        self.admitted_at[inst] = Some(now);
+        std::mem::take(&mut self.roots[inst])
+    }
+
+    /// A task of `inst` completed. Returns `None` while the instance is
+    /// still running; on instance completion, returns the next waiting
+    /// instance (if any) whose admission slot just freed.
+    pub fn task_done(&mut self, inst: usize, now: SimTime) -> Option<Option<u32>> {
+        debug_assert!(self.outstanding[inst] > 0);
+        self.outstanding[inst] -= 1;
+        if self.outstanding[inst] > 0 {
+            return None;
+        }
+        self.finished_at[inst] = Some(now);
+        self.in_flight -= 1;
+        Some(self.waiting.pop_front())
+    }
+}
+
+// ---------------------------------------------------------------
+// data plane: the stage-in -> compute -> stage-out task cycle
+// ---------------------------------------------------------------
+impl StrategyState {
+    /// Hand `task` to `pod`: with the data plane on, stage its inputs
+    /// first (execution starts when the transfer completes); without it,
+    /// execution starts immediately — the exact pre-data path.
+    pub fn begin_task(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        if k.data.is_none() {
+            k.start_task(pod, task);
+            return;
+        }
+        let now = k.now();
+        let node = k.pods[pod.0 as usize].node.expect("running pod is bound").0;
+        let tenant = k.tenant_of(task).idx();
+        k.current_task[pod.0 as usize] = Some(task);
+        k.pod_io[pod.0 as usize] = IoPhase::StageIn;
+        let mut buf = std::mem::take(&mut k.flow_buf);
+        let start = k
+            .data
+            .as_mut()
+            .expect("data plane")
+            .begin_stage_in(now, pod, node, task, tenant, &mut buf);
+        k.schedule_flow_events(buf);
+        if start == StageStart::Ready {
+            // every input byte is already node-local (warm cache)
+            k.start_task(pod, task);
+        }
+    }
+
+    /// The task's compute finished: write its output back to the backend.
+    /// Successors become ready only when the write lands (write-through
+    /// shared storage, like the paper's NFS volume).
+    pub fn begin_stage_out_for(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        let now = k.now();
+        let node = k.pods[pod.0 as usize].node.expect("running pod is bound").0;
+        let tenant = k.tenant_of(task).idx();
+        k.pod_io[pod.0 as usize] = IoPhase::StageOut;
+        k.task_out_pending[task.0 as usize] = true;
+        let mut buf = std::mem::take(&mut k.flow_buf);
+        let start = k
+            .data
+            .as_mut()
+            .expect("data plane")
+            .begin_stage_out(now, pod, node, task, tenant, &mut buf);
+        k.schedule_flow_events(buf);
+        if start == StageStart::Ready {
+            self.finish_task(k, pod, task);
+        }
+    }
+
+    /// Stage-out landed (or the task had no output bytes): the task's
+    /// completion becomes visible — trace it, propagate readiness, and
+    /// advance the pod to its next unit of work. Data-plane runs only.
+    pub fn finish_task(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        let now = k.now();
+        k.current_task[pod.0 as usize] = None;
+        k.pod_io[pod.0 as usize] = IoPhase::Idle;
+        k.task_out_pending[task.0 as usize] = false;
+        // a speculative twin cannot have completed it (the loser is caught
+        // at TaskDone), but guard anyway: completing twice would corrupt
+        // the engine's outstanding count
+        if k.engine.state(task) != TaskState::Done {
+            // success accounting deferred from TaskDone: only an execution
+            // whose output landed counts as useful/completed
+            let ttype = k.engine.dag().tasks[task.0 as usize].ttype;
+            let exec_ms = k.pod_exec_ms[pod.0 as usize];
+            k.completed_by_type[ttype.0 as usize] += 1;
+            if k.chaos.is_some() {
+                k.chaos_stats.useful_ms += exec_ms;
+            }
+            k.data.as_mut().expect("data plane").stats.compute_ms += exec_ms;
+            k.trace.finished(task, now);
+            let mut ready = std::mem::take(&mut k.ready_buf);
+            ready.clear();
+            k.engine.complete_into(task, &mut ready);
+            self.dispatch_ready(k, &ready);
+            k.ready_buf = ready;
+            if k.fleet.is_some() {
+                self.instance_task_done(k, task);
+            }
+        }
+        match k.pods[pod.0 as usize].pool_id() {
+            None => {
+                k.batch_queue[pod.0 as usize].pop_front();
+                if let Some(&next) = k.batch_queue[pod.0 as usize].front() {
+                    self.begin_task(k, pod, next);
+                } else {
+                    self.terminate_pod(k, pod, PodPhase::Succeeded);
+                }
+            }
+            Some(pool) => self.advance_worker(k, pod, pool),
+        }
+    }
+
+    /// A transfer's completion check fired: let the data plane resolve it
+    /// (stale generations drop out), then resume the owning pod's cycle.
+    pub fn flow_done(&mut self, k: &mut Kernel, flow: u32, gen: u32) {
+        let now = k.now();
+        let mut buf = std::mem::take(&mut k.flow_buf);
+        let done = k
+            .data
+            .as_mut()
+            .and_then(|dp| dp.flow_done(now, flow, gen, &mut buf));
+        k.schedule_flow_events(buf);
+        let Some(d) = done else { return };
+        // a completing flow implies a live pod (kills cancel their flows
+        // synchronously) — but stay defensive
+        if k.pods[d.pod.0 as usize].is_terminal()
+            || k.current_task[d.pod.0 as usize] != Some(d.task)
+        {
+            return;
+        }
+        if d.inbound {
+            k.start_task(d.pod, d.task);
+        } else {
+            self.finish_task(k, d.pod, d.task);
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// chaos engine: fault application and payload recovery
+// ---------------------------------------------------------------
+impl StrategyState {
+    /// A timed fault strikes `node`.
+    pub fn apply_fault(&mut self, k: &mut Kernel, proc_idx: usize, node: usize) {
+        let injector = match &k.chaos {
+            Some(ch) => ch.processes[proc_idx].injector.clone(),
+            None => return,
+        };
+        match injector {
+            Injector::SpotReclaim {
+                warning_ms,
+                replace_ms,
+                ..
+            } => self.spot_warning(k, node, warning_ms, replace_ms),
+            Injector::NodeCrash { repair_ms, .. } => {
+                if k.nodes[node].failed {
+                    return; // already down
+                }
+                k.chaos_stats.node_crashes += 1;
+                k.metrics.inc("node_crashes", 1);
+                self.fail_node_inner(k, node, true);
+                k.q
+                    .schedule_in(SimTime::from_millis(repair_ms), Ev::ChaosRestore { node });
+            }
+            _ => unreachable!("only timed injectors emit ChaosFault"),
+        }
+    }
+
+    /// Spot reclaim, phase 1: the provider's warning. The node is cordoned
+    /// (no new placements) and — under a graceful policy — its workers
+    /// drain: idle workers terminate immediately (the autoscaler replaces
+    /// them on surviving nodes), busy workers finish their current task
+    /// and exit. Job pods run on; whatever is still alive when the warning
+    /// expires dies with the node.
+    pub fn spot_warning(&mut self, k: &mut Kernel, node: usize, warning_ms: u64, replace_ms: u64) {
+        if k.nodes[node].failed || k.drain_pending[node] {
+            return; // already dying
+        }
+        k.drain_pending[node] = true;
+        k.nodes[node].cordoned = true;
+        k.chaos_stats.spot_warnings += 1;
+        k.metrics.inc("spot_warnings", 1);
+        let drain = k
+            .chaos
+            .as_ref()
+            .map(|c| c.policy.drain_on_warning)
+            .unwrap_or(false);
+        if drain {
+            let victims = k.take_node_victims(node, true);
+            for &pid in &victims {
+                match k.pods[pid.0 as usize].phase {
+                    PodPhase::Running if k.current_task[pid.0 as usize].is_none() => {
+                        // idle worker: release it now so the deployment
+                        // re-creates it on a surviving node
+                        self.terminate_pod(k, pid, PodPhase::Succeeded);
+                    }
+                    PodPhase::Running => {
+                        k.pods[pid.0 as usize].phase = PodPhase::Draining;
+                    }
+                    // Starting workers are abandoned before doing work
+                    PodPhase::Starting => self.terminate_pod(k, pid, PodPhase::Deleted),
+                    _ => {}
+                }
+            }
+            k.put_members_buf(victims);
+        }
+        k.q.schedule_in(
+            SimTime::from_millis(warning_ms),
+            Ev::ChaosReclaim { node, replace_ms },
+        );
+    }
+
+    /// Node failure: kill every pod on the node; recover their work.
+    /// Job batches are recreated by the job controller; a worker's
+    /// in-flight task is redelivered to its queue (the broker's unacked
+    /// window, like a RabbitMQ consumer dying).
+    ///
+    /// Shared kill path for scheduled `node_events` (`chaos = false`:
+    /// instant redelivery, the pre-chaos semantics) and the chaos engine
+    /// (`chaos = true`: wasted-work accounting, checkpoint-restart credit,
+    /// and policy-driven retry back-off instead of instant redelivery).
+    pub fn fail_node_inner(&mut self, k: &mut Kernel, node: usize, chaos: bool) {
+        k.nodes[node].failed = true;
+        k.metrics.inc("node_failures", 1);
+        let victims = k.take_node_victims(node, false);
+        for &pid in &victims {
+            // roll back the running-task accounting for the in-flight task
+            let in_flight = k.current_task[pid.0 as usize].take();
+            let phase = k.pod_io[pid.0 as usize];
+            if let Some(task) = in_flight {
+                if phase != IoPhase::Compute {
+                    // killed while staging data: nothing executed yet
+                    // (stage-in) or the output write was lost (stage-out —
+                    // the task must re-run, its completion never became
+                    // visible). The requeue below handles both; only the
+                    // running-task accounting is skipped.
+                    if phase == IoPhase::StageOut {
+                        k.task_out_pending[task.0 as usize] = false;
+                        if chaos {
+                            // the finished execution died with its output:
+                            // its compute (plus the partial write) never
+                            // counted as useful — charge it as waste and
+                            // stamp the fault for recovery latency
+                            let wasted = k.run_exec_ms(pid);
+                            k.chaos_stats
+                                .add_waste(k.tenant_of(task).idx(), wasted);
+                            k.fault_stamp(task);
+                        }
+                    }
+                } else {
+                    let ttype = k.engine.dag().tasks[task.0 as usize].ttype;
+                    k.record_running(ttype, -1);
+                    k.task_running[task.0 as usize] -= 1;
+                    if chaos {
+                        if k.engine.state(task) == TaskState::Done {
+                            // losing speculative copy killed after its twin
+                            // already won: the whole run is waste, there is
+                            // nothing to checkpoint or recover
+                            let exec_ms = k.run_exec_ms(pid);
+                            k.chaos_stats
+                                .add_waste(k.tenant_of(task).idx(), exec_ms);
+                            k.metrics.inc("speculative_losses", 1);
+                        } else {
+                            k.account_lost_work(pid, task, node);
+                        }
+                    }
+                }
+            }
+            let work = match &k.pods[pid.0 as usize].payload {
+                Payload::JobBatch { tasks } => {
+                    // job controller recreates the pod with the unfinished
+                    // remainder of the batch (current task included)
+                    let remaining: Vec<TaskId> = if k.batch_queue[pid.0 as usize].is_empty() {
+                        tasks.clone() // killed while Pending/Starting
+                    } else {
+                        k.batch_queue[pid.0 as usize].iter().copied().collect()
+                    };
+                    PodWork::Batch(remaining)
+                }
+                Payload::Worker { pool } => PodWork::Pool(*pool),
+            };
+            self.terminate_pod(k, pid, PodPhase::Deleted);
+            match work {
+                PodWork::Batch(remaining) => {
+                    if !remaining.is_empty() {
+                        if chaos {
+                            k.schedule_batch_retry(remaining);
+                        } else {
+                            self.jobs.create_job(k, remaining);
+                        }
+                    }
+                }
+                PodWork::Pool(pool) => {
+                    if let Some(task) = in_flight {
+                        if chaos {
+                            // the recovery policy owns the message now: it
+                            // re-enters the queue after its retry back-off
+                            // (unless the task already completed elsewhere)
+                            self.pools.broker.nack_drop(pool);
+                            self.pools.record_queue_depth(k, pool);
+                            if k.engine.state(task) != TaskState::Done {
+                                k.schedule_task_retry(task);
+                            }
+                        } else {
+                            // the unacked delivery is redelivered at once
+                            self.pools
+                                .broker
+                                .nack_requeue(pool, task, k.tenant_of(task));
+                            self.pools.wake_idle_worker(k, pool);
+                        }
+                    }
+                }
+            }
+        }
+        k.put_members_buf(victims);
+        if chaos {
+            self.pools.update_chaos_quota(k);
+        }
+    }
+
+    /// A pod crashed at container start (PodFailure injector, successor of
+    /// the legacy inline `pod_failure_prob` branch): the startup time is
+    /// wasted, the node collects blacklisting evidence, and the payload is
+    /// recovered by policy — batches after a retry back-off, workers by
+    /// the deployment controller on the next autoscale tick.
+    pub fn pod_start_failure(&mut self, k: &mut Kernel, pod: PodId) {
+        k.metrics.inc("pod_failures", 1);
+        k.chaos_stats.pod_failures += 1;
+        // the container-start latency was burned for nothing; a batch pod
+        // charges its owning tenant, a shared pool worker charges no lane
+        // (it serves every tenant)
+        match &k.pods[pod.0 as usize].payload {
+            Payload::JobBatch { tasks } => {
+                let tenant = k.tenant_of(tasks[0]).idx();
+                k.chaos_stats.add_waste(tenant, k.cfg.pod_start_ms);
+            }
+            Payload::Worker { .. } => {
+                k.chaos_stats.add_waste_shared(k.cfg.pod_start_ms);
+            }
+        }
+        if let Some(nid) = k.pods[pod.0 as usize].node {
+            k.note_node_fault(nid.0);
+        }
+        let retry = match &mut k.pods[pod.0 as usize].payload {
+            Payload::JobBatch { tasks } => Some(std::mem::take(tasks)),
+            Payload::Worker { .. } => None,
+        };
+        self.terminate_pod(k, pod, PodPhase::Deleted);
+        if let Some(tasks) = retry {
+            k.schedule_batch_retry(tasks);
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// fleet service: instance arrival / admission / completion
+// ---------------------------------------------------------------
+impl StrategyState {
+    /// An instance arrives (open-loop): admit immediately if a slot is
+    /// free, otherwise it joined the admission queue (FIFO).
+    pub fn instance_arrive(&mut self, k: &mut Kernel, inst: usize) {
+        let admit = k.fleet.as_mut().expect("fleet mode").try_admit(inst);
+        if admit {
+            self.admit_instance(k, inst);
+        }
+    }
+
+    /// Admit an instance: dispatch its root tasks into the shared cluster.
+    pub fn admit_instance(&mut self, k: &mut Kernel, inst: usize) {
+        let now = k.now();
+        let roots = k.fleet.as_mut().expect("fleet mode").admit(inst, now);
+        k.metrics.inc("instances_admitted", 1);
+        self.dispatch_ready(k, &roots);
+    }
+
+    /// Per-instance completion bookkeeping after a task finished; frees an
+    /// admission slot (and admits the next waiting instance) when the
+    /// task was its instance's last.
+    pub fn instance_task_done(&mut self, k: &mut Kernel, task: TaskId) {
+        let now = k.now();
+        let inst = k.task_instance[task.0 as usize] as usize;
+        let Some(next) = k
+            .fleet
+            .as_mut()
+            .expect("fleet mode")
+            .task_done(inst, now)
+        else {
+            return;
+        };
+        k.metrics.inc("instances_completed", 1);
+        if let Some(next) = next {
+            self.admit_instance(k, next as usize);
+        }
+    }
+
+    /// The node-event entry point (`node_events` config + tests): the
+    /// pre-chaos instant-redelivery semantics.
+    pub fn fail_node(&mut self, k: &mut Kernel, node: usize) {
+        self.fail_node_inner(k, node, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_instance_state(cap: Option<usize>) -> FleetState {
+        FleetState {
+            outstanding: vec![2, 1],
+            roots: vec![vec![TaskId(0)], vec![TaskId(2)]],
+            admitted_at: vec![None; 2],
+            finished_at: vec![None; 2],
+            waiting: VecDeque::new(),
+            in_flight: 0,
+            max_in_flight: cap,
+        }
+    }
+
+    #[test]
+    fn admission_cap_queues_and_releases_in_fifo_order() {
+        let mut fs = two_instance_state(Some(1));
+        assert!(fs.try_admit(0));
+        let roots = fs.admit(0, SimTime(10));
+        assert_eq!(roots, vec![TaskId(0)]);
+        assert_eq!(fs.in_flight, 1);
+        // second instance must wait
+        assert!(!fs.try_admit(1));
+        assert_eq!(fs.waiting.len(), 1);
+        // first task done: instance 0 still running
+        assert_eq!(fs.task_done(0, SimTime(20)), None);
+        // last task done: slot frees, instance 1 pops
+        assert_eq!(fs.task_done(0, SimTime(30)), Some(Some(1)));
+        assert_eq!(fs.finished_at[0], Some(SimTime(30)));
+        assert_eq!(fs.in_flight, 0);
+    }
+
+    #[test]
+    fn uncapped_admission_is_immediate() {
+        let mut fs = two_instance_state(None);
+        assert!(fs.try_admit(0));
+        fs.admit(0, SimTime::ZERO);
+        assert!(fs.try_admit(1));
+        fs.admit(1, SimTime::ZERO);
+        assert_eq!(fs.in_flight, 2);
+        assert!(fs.waiting.is_empty());
+        // completing the single-task instance pops nobody
+        assert_eq!(fs.task_done(1, SimTime(5)), Some(None));
+    }
+
+    #[test]
+    fn chaos_runtime_disabled_without_fault_sources() {
+        let rt = ChaosRuntime::build(
+            &ChaosConfig::default(),
+            0.0,
+            RecoveryPolicy::default(),
+            42,
+            1_000,
+        );
+        assert!(rt.is_none(), "no injectors => subsystem off");
+    }
+
+    #[test]
+    fn chaos_runtime_folds_legacy_pod_failure_knob() {
+        let rt = ChaosRuntime::build(
+            &ChaosConfig::default(),
+            0.25,
+            RecoveryPolicy::default(),
+            42,
+            1_000,
+        )
+        .expect("legacy knob enables the subsystem");
+        assert!((rt.pod_fail_prob - 0.25).abs() < 1e-12);
+        assert!(rt.processes.is_empty(), "pod failure is not a timed process");
+    }
+}

@@ -1,0 +1,137 @@
+//! The **job path**: one Kubernetes Job (-> one Pod) per task batch
+//! (paper §3.2), plus the [`JobStrategy`] that runs a workflow purely on
+//! it.
+//!
+//! Event flow:
+//! ```text
+//!   task ready -> batcher (maybe buffer) -> API: create Job
+//!   -> job controller reconcile -> API: create Pod
+//!   -> scheduler (may back off!) -> pod start (~2 s)
+//!   -> execute batch sequentially -> pod terminates, free node
+//! ```
+//!
+//! [`JobPath`] is shared machinery: the clustered strategy drives it with
+//! real batching rules, the hybrid worker-pools strategy uses it for the
+//! serial (non-pooled) stages, and the plain job strategy drives it with
+//! [`ClusteringConfig::none`] so every task is a singleton batch. The
+//! §5 pending-pod throttle (`max_pending_pods`) also lives here.
+
+use crate::chaos::RecoveryPolicy;
+use crate::engine::clustering::{Batcher, ClusteringConfig};
+use crate::engine::Engine;
+use crate::exec::kernel::{Ev, Kernel};
+use crate::exec::pools::PoolPath;
+use crate::exec::strategy::{ExecStrategy, StrategyState};
+use crate::k8s::pod::Payload;
+use crate::sim::SimTime;
+use crate::workflow::task::TaskId;
+use std::collections::VecDeque;
+
+/// Job-submission machinery: clustering buffers and the pending-pod
+/// throttle. Every strategy owns one (pool strategies use it for their
+/// non-pooled types).
+pub struct JobPath {
+    pub batcher: Batcher,
+    /// Job batches deferred by the pending-pod throttle (§5 future work).
+    pub throttle_wait: VecDeque<Vec<TaskId>>,
+    /// Pods created but not yet bound (throttle accounting).
+    pub jobs_in_flight: usize,
+}
+
+impl JobPath {
+    pub fn new(cfg: ClusteringConfig) -> JobPath {
+        JobPath {
+            batcher: Batcher::new(cfg),
+            throttle_wait: VecDeque::new(),
+            jobs_in_flight: 0,
+        }
+    }
+
+    /// Job path: create a Job for a batch of same-type tasks, honouring the
+    /// pending-pod throttle (§5 future work) when configured.
+    pub fn create_job(&mut self, k: &mut Kernel, tasks: Vec<TaskId>) {
+        debug_assert!(!tasks.is_empty());
+        if let Some(cap) = k.cfg.max_pending_pods {
+            if self.jobs_in_flight >= cap {
+                self.throttle_wait.push_back(tasks);
+                k.metrics.inc("throttled_batches", 1);
+                return;
+            }
+        }
+        self.create_job_now(k, tasks);
+    }
+
+    fn create_job_now(&mut self, k: &mut Kernel, tasks: Vec<TaskId>) {
+        let requests = k.engine.dag().type_of(tasks[0]).requests;
+        let pid = k.new_pod(Payload::JobBatch { tasks }, requests);
+        self.jobs_in_flight += 1;
+        k.metrics.inc("jobs_created", 1);
+        // API round-trip for the Job object
+        let done = k.api.admit(k.now());
+        k.q.schedule_at(done, Ev::JobAdmitted { pod: pid });
+    }
+
+    /// A job pod left the pending pipeline: admit deferred batches.
+    pub fn job_unblocked(&mut self, k: &mut Kernel) {
+        debug_assert!(self.jobs_in_flight > 0);
+        self.jobs_in_flight -= 1;
+        if let Some(cap) = k.cfg.max_pending_pods {
+            while self.jobs_in_flight < cap {
+                match self.throttle_wait.pop_front() {
+                    Some(batch) => self.create_job_now(k, batch),
+                    None => break,
+                }
+            }
+        }
+    }
+
+    /// A clustering partial-batch timeout fired: flush the partial batch
+    /// if the deadline is still current.
+    pub fn flush_timer(&mut self, k: &mut Kernel, type_idx: u16, deadline: SimTime) {
+        let batch = self
+            .batcher
+            .timer_fired(&k.engine.dag().types[type_idx as usize].name, deadline);
+        if let Some(batch) = batch {
+            self.create_job(k, batch);
+        }
+    }
+}
+
+/// §3.2: one task -> one Kubernetes Job -> one Pod. No queues, no pools:
+/// the [`JobPath`] with [`ClusteringConfig::none`] flushes every ready
+/// task as a singleton batch.
+pub struct JobStrategy {
+    state: StrategyState,
+}
+
+impl JobStrategy {
+    pub fn build(engine: &Engine) -> JobStrategy {
+        JobStrategy {
+            state: StrategyState {
+                jobs: JobPath::new(ClusteringConfig::none()),
+                pools: PoolPath::none(engine.dag().types.len()),
+            },
+        }
+    }
+}
+
+impl ExecStrategy for JobStrategy {
+    fn name(&self) -> &'static str {
+        "job-based"
+    }
+
+    fn state(&mut self) -> &mut StrategyState {
+        &mut self.state
+    }
+
+    fn state_ref(&self) -> &StrategyState {
+        &self.state
+    }
+
+    /// Job pods cannot be speculatively duplicated (the unit of execution
+    /// is the whole pod), so the default policy leans on retry back-off,
+    /// blacklisting and checkpoint-restart alone.
+    fn default_recovery(&self) -> RecoveryPolicy {
+        RecoveryPolicy::default()
+    }
+}

@@ -1,0 +1,545 @@
+//! The execution **kernel**: the simulation substrate every strategy and
+//! subsystem hook runs on.
+//!
+//! The kernel owns the calendar [`EventQueue`], the pod/node tables and
+//! their lifecycle bookkeeping, the HyperFlow [`Engine`], the control
+//! plane ([`Scheduler`] + [`ApiServer`]), metrics/trace accounting, and
+//! the per-task fault/data tables the subsystem hooks ([`crate::exec::hooks`])
+//! write through. It deliberately knows nothing about execution *models*:
+//! routing a ready task to a queue or a Job, advancing a worker, and
+//! scaling deployments are [`crate::exec::strategy::ExecStrategy`]
+//! decisions layered on top.
+//!
+//! Hot-path contract (EXPERIMENTS.md §Perf): every per-pod / per-task
+//! attribute is a dense `Vec` indexed by the interned id, gauge handles
+//! are pre-resolved, and the reusable scratch buffers (`ready_buf`,
+//! `pass_buf`, `members_buf`) keep the steady-state event loop free of
+//! heap allocation.
+
+use crate::chaos::ChaosStats;
+use crate::data::{DataPlane, FlowEvent};
+use crate::engine::Engine;
+use crate::exec::config::SimConfig;
+use crate::exec::hooks::{ChaosRuntime, FleetState};
+use crate::k8s::api_server::ApiServer;
+use crate::k8s::node::{Node, NodeId};
+use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
+use crate::k8s::resources::Resources;
+use crate::k8s::scheduler::{SchedulePass, Scheduler};
+use crate::metrics::{GaugeId, Registry};
+use crate::report::Trace;
+use crate::sim::{EventQueue, SimTime};
+use crate::workflow::task::{TaskId, TypeId};
+use std::collections::VecDeque;
+
+/// Simulation events.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Ev {
+    /// API processed the Job creation; the Job controller will now create
+    /// the pod object.
+    JobAdmitted { pod: PodId },
+    /// Pod object exists; enters the scheduler.
+    PodCreated { pod: PodId },
+    /// Container started; payload begins.
+    PodStarted { pod: PodId },
+    /// Current task inside the pod finished.
+    TaskDone { pod: PodId, task: TaskId },
+    /// A pod's scheduling back-off expired; retry.
+    BackoffExpire { pod: PodId },
+    /// Clustering partial-batch timeout.
+    FlushTimer { type_idx: u16, deadline: SimTime },
+    /// Autoscaler poll.
+    AutoscaleTick,
+    /// A worker finished fetching a message from its queue.
+    WorkerFetched { pod: PodId, task: TaskId },
+    /// Failure injection: a node goes down (kills its pods) or comes back.
+    NodeEvent { node: usize, up: bool },
+    /// Fleet service: workflow instance `inst` arrives (open-loop).
+    InstanceArrive { inst: u32 },
+    /// Chaos: timed injector `proc_idx` strikes `node` (spot warning or
+    /// crash); the handler samples and schedules the process's next fault.
+    ChaosFault { proc_idx: u8, node: usize },
+    /// Chaos: a spot-reclaim warning expired — the node goes down now;
+    /// replacement capacity arrives `replace_ms` later.
+    ChaosReclaim { node: usize, replace_ms: u64 },
+    /// Chaos: a reclaimed/crashed node's replacement capacity arrives
+    /// (fresh incarnation).
+    ChaosRestore { node: usize },
+    /// Chaos: a blacklisted node's cordon expires.
+    ChaosUncordon { node: usize },
+    /// Chaos recovery: a failed pool task's retry back-off expired.
+    ChaosRetryTask { task: TaskId },
+    /// Chaos recovery: a failed job batch's retry back-off expired.
+    ChaosRetryBatch { tasks: Vec<TaskId> },
+    /// Chaos recovery: straggler watch — if `task` is still running in
+    /// `pod`, launch a speculative copy.
+    SpecCheck { pod: PodId, task: TaskId },
+    /// Data plane: a transfer's scheduled completion check (stale
+    /// generations are dropped by [`DataPlane::flow_done`]).
+    FlowDone { flow: u32, gen: u32 },
+    /// Data plane: an object-store request's latency elapsed — the flow
+    /// joins fair bandwidth sharing.
+    FlowActivate { flow: u32, gen: u32 },
+}
+
+/// Where a pod is in the stage-in -> compute -> stage-out cycle of its
+/// current task (always `Idle` between tasks; stage phases only occur
+/// with the data plane enabled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoPhase {
+    Idle,
+    StageIn,
+    Compute,
+    StageOut,
+}
+
+/// Sentinel for "no pending fault" in the per-task fault-time table.
+pub(crate) const NO_FAULT: u64 = u64::MAX;
+
+/// The simulation substrate: everything that is *not* an execution-model
+/// decision. See the module docs for the layering contract.
+pub struct Kernel {
+    pub cfg: SimConfig,
+    pub q: EventQueue<Ev>,
+    pub pods: Vec<Pod>,
+    pub nodes: Vec<Node>,
+    pub sched: Scheduler,
+    pub api: ApiServer,
+    pub engine: Engine,
+    pub metrics: Registry,
+    pub trace: Trace,
+    pub running_tasks: i64,
+    /// Incremental count of pods in the Pending phase (perf: a full scan
+    /// here was 70% of the 16k job-model sim, see EXPERIMENTS.md §Perf).
+    pub pending_count: usize,
+    /// Completed tasks per TypeId (feeds the VPA usage estimator).
+    pub completed_by_type: Vec<u64>,
+    // pre-resolved gauge handles (string-keyed lookups were hot; §Perf)
+    pub g_running: GaugeId,
+    pub g_cpu: GaugeId,
+    pub g_pending: GaugeId,
+    /// running::<type> gauge per TypeId.
+    pub g_by_type: Vec<GaugeId>,
+    // -- per-pod tables (pushed by `new_pod`, indexed by PodId) ----------
+    /// Remaining batch tasks per pod (job path), front = current.
+    pub batch_queue: Vec<VecDeque<TaskId>>,
+    /// Task currently executing in each pod (for node-failure recovery).
+    pub current_task: Vec<Option<TaskId>>,
+    /// Incarnation of the node each pod was bound to (stale-event guard).
+    pub pod_bound_inc: Vec<u32>,
+    /// When the task currently in each pod started (waste accounting).
+    pub pod_task_started_at: Vec<SimTime>,
+    /// Stage cycle position per pod (all `Idle`/`Compute` without data).
+    pub pod_io: Vec<IoPhase>,
+    /// Execution ms of the task a pod is currently staging out — success
+    /// accounting (useful work, completed-by-type, compute time) is
+    /// deferred until the write lands, so a kill mid-write re-runs the
+    /// task without double counting.
+    pub pod_exec_ms: Vec<u64>,
+    // -- chaos hook (None for healthy runs; see crate::exec::hooks) ------
+    pub chaos: Option<ChaosRuntime>,
+    /// Resilience accounting (always present; all-zero without chaos).
+    pub chaos_stats: ChaosStats,
+    /// Per-node task-duration multiplier (straggler injector; all 1.0
+    /// otherwise). Resampled when a node's replacement arrives.
+    pub node_slow: Vec<f64>,
+    /// Node incarnation counters: bumped when replacement capacity for a
+    /// reclaimed/crashed node arrives, so events bound to the previous
+    /// hardware are recognizably stale.
+    pub node_incarnation: Vec<u32>,
+    /// Pod-start failures charged to each node (blacklisting evidence).
+    pub node_fault_counts: Vec<u32>,
+    /// Spot warning in progress for the node (drain pending).
+    pub drain_pending: Vec<bool>,
+    /// Blacklist expiry per node (ZERO = not blacklisted).
+    pub blacklist_until: Vec<SimTime>,
+    /// Remaining work per task (checkpoint-restart shrinks it on re-runs;
+    /// initialized to the DAG durations).
+    pub task_work_left: Vec<SimTime>,
+    /// Fault-driven re-dispatch count per task (retry back-off input).
+    pub task_attempts: Vec<u32>,
+    /// When the task was last lost to a fault (`NO_FAULT` = none pending);
+    /// cleared into the recovery-latency summary when it re-starts.
+    pub task_fault_at: Vec<u64>,
+    /// A speculative copy was already launched for the task (at most one).
+    pub spec_launched: Vec<bool>,
+    /// Live executions per task (1 normally; 2 while a speculative copy
+    /// races the original). Gates retries — a task with a copy still
+    /// running must not be re-dispatched — and keeps the trace record on
+    /// the first copy's timestamps.
+    pub task_running: Vec<u8>,
+    // -- data hook (None = pure-compute tasks, the pre-data behavior) ----
+    pub data: Option<DataPlane>,
+    /// Task has a stage-out in flight (its completion is not yet visible
+    /// to successors); sized only when the data plane is on.
+    pub task_out_pending: Vec<bool>,
+    /// Scratch buffer for transfer (re)schedules.
+    pub flow_buf: Vec<FlowEvent>,
+    // -- fleet hook (None for classic single-workflow runs) --------------
+    pub fleet: Option<FleetState>,
+    /// Instance index of each task (fleet runs; empty otherwise).
+    pub task_instance: Vec<u32>,
+    /// Tenant lane of each task (fleet runs; empty = all tenant 0).
+    pub task_tenant: Vec<u16>,
+    // -- reusable scratch buffers (zero steady-state allocation, §Perf) --
+    /// Newly-ready tasks from `Engine::complete_into`.
+    pub ready_buf: Vec<TaskId>,
+    /// Scheduler pass output.
+    pub pass_buf: SchedulePass,
+    /// Pod-id snapshots (node-failure victims, scale-down members).
+    pub members_buf: Vec<PodId>,
+}
+
+impl Kernel {
+    pub fn now(&self) -> SimTime {
+        self.q.now()
+    }
+
+    // ---------------------------------------------------------------
+    // pod lifecycle primitives
+    // ---------------------------------------------------------------
+
+    /// Register a new pod with precomputed resource requests (the caller
+    /// — job path or pool path — owns the template-sizing policy) and
+    /// grow every per-pod table alongside it.
+    pub fn new_pod(&mut self, payload: Payload, requests: Resources) -> PodId {
+        let id = PodId(self.pods.len() as u64);
+        let pod = Pod::new(id, payload, requests, self.now());
+        self.pods.push(pod);
+        self.batch_queue.push(VecDeque::new());
+        self.current_task.push(None);
+        self.pod_bound_inc.push(0);
+        self.pod_task_started_at.push(SimTime::ZERO);
+        self.pod_io.push(IoPhase::Idle);
+        self.pod_exec_ms.push(0);
+        self.pending_count += 1;
+        self.metrics.inc("pods_created", 1);
+        id
+    }
+
+    /// Mark a pod terminal and free its node resources. The strategy
+    /// layer wraps this with deployment-membership cleanup and the
+    /// post-release scheduler pass ([`crate::exec::strategy::StrategyState::terminate_pod`]).
+    pub fn release_pod(&mut self, pid: PodId, phase: PodPhase) {
+        let now = self.now();
+        if self.pods[pid.0 as usize].phase == PodPhase::Pending {
+            self.pending_count -= 1;
+        }
+        // data plane: the pod's in-flight transfer is torn down and its
+        // ephemeral cache entries die with it (crash-loses-cache)
+        if self.data.is_some() {
+            let node = self.pods[pid.0 as usize].node.map(|n| n.0);
+            let mut buf = std::mem::take(&mut self.flow_buf);
+            self.data
+                .as_mut()
+                .expect("data plane")
+                .cancel_pod(now, pid, node, &mut buf);
+            self.schedule_flow_events(buf);
+            self.pod_io[pid.0 as usize] = IoPhase::Idle;
+        }
+        let pod = &mut self.pods[pid.0 as usize];
+        debug_assert!(!pod.is_terminal());
+        let had_node = pod.node;
+        pod.phase = phase;
+        pod.finished_at = Some(now);
+        if let Some(nid) = had_node {
+            let req = pod.requests;
+            self.nodes[nid.0].release(req);
+            self.record_cpu();
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // accounting
+    // ---------------------------------------------------------------
+
+    pub fn record_cpu(&mut self) {
+        let now = self.now();
+        let alloc: u64 = self.nodes.iter().map(|n| n.allocated.cpu_m).sum();
+        self.metrics.set_id(self.g_cpu, now, alloc as f64);
+    }
+
+    pub fn record_running(&mut self, ttype: TypeId, delta: i64) {
+        let now = self.now();
+        self.running_tasks += delta;
+        self.metrics
+            .set_id(self.g_running, now, self.running_tasks as f64);
+        self.metrics
+            .add_id(self.g_by_type[ttype.0 as usize], now, delta as f64);
+    }
+
+    /// Tenant lane of a task: its instance's tenant in fleet runs, the
+    /// default lane otherwise.
+    pub fn tenant_of(&self, t: TaskId) -> crate::broker::TenantId {
+        crate::broker::TenantId(self.task_tenant.get(t.0 as usize).copied().unwrap_or(0))
+    }
+
+    /// Wall-clock execution ms the pod's current run has burned, net of
+    /// the fixed executor overhead. One definition shared by success
+    /// accounting (`TaskDone`), wasted-work charging on kills, and
+    /// checkpoint-restart credit — so goodput's numerator and denominator
+    /// stay commensurate (previously hand-copied at four sites).
+    pub fn run_exec_ms(&self, pod: PodId) -> u64 {
+        let elapsed = self
+            .now()
+            .saturating_sub(self.pod_task_started_at[pod.0 as usize])
+            .as_millis();
+        elapsed.saturating_sub(self.cfg.exec_overhead_ms.min(elapsed))
+    }
+
+    /// Stamp a task as lost to a fault: the recovery-latency clock starts
+    /// now and stops when the task executes again (`start_task`).
+    pub fn fault_stamp(&mut self, task: TaskId) {
+        self.task_fault_at[task.0 as usize] = self.now().as_millis();
+        self.metrics.inc("tasks_lost_to_faults", 1);
+    }
+
+    // ---------------------------------------------------------------
+    // node-fault bookkeeping (one copy; previously hand-rolled by the
+    // spot-warning, node-failure and pod-start-failure paths)
+    // ---------------------------------------------------------------
+
+    /// Snapshot the live pods on `node` into the reusable members buffer
+    /// (`workers_only` restricts to pool workers, the spot-drain case).
+    /// Return the buffer with [`Kernel::put_members_buf`] when done.
+    pub fn take_node_victims(&mut self, node: usize, workers_only: bool) -> Vec<PodId> {
+        let mut victims = std::mem::take(&mut self.members_buf);
+        victims.clear();
+        victims.extend(
+            self.pods
+                .iter()
+                .filter(|p| {
+                    p.node == Some(NodeId(node))
+                        && !p.is_terminal()
+                        && (!workers_only || p.pool_id().is_some())
+                })
+                .map(|p| p.id),
+        );
+        victims
+    }
+
+    pub fn put_members_buf(&mut self, buf: Vec<PodId>) {
+        self.members_buf = buf;
+    }
+
+    /// A scheduled pod event is stale when the pod's node was reclaimed
+    /// and its replacement (same index, new incarnation) arrived in the
+    /// meantime. Defense-in-depth: chaos kills are synchronous, so pods
+    /// die with their node — but any completion that slips through must
+    /// not be credited against the new hardware.
+    pub fn stale_node_event(&mut self, pod: PodId) -> bool {
+        let Some(nid) = self.pods[pod.0 as usize].node else {
+            return false;
+        };
+        if self.pod_bound_inc[pod.0 as usize] != self.node_incarnation[nid.0] {
+            self.chaos_stats.stale_drops += 1;
+            self.metrics.inc("stale_node_events_dropped", 1);
+            return true;
+        }
+        false
+    }
+
+    /// Replacement capacity arrived for a reclaimed/crashed node: bump the
+    /// incarnation counter (so events bound to the old hardware read as
+    /// stale) and reset every per-node fault flag.
+    pub fn node_replaced(&mut self, node: usize) {
+        self.node_incarnation[node] += 1;
+        self.nodes[node].failed = false;
+        self.nodes[node].cordoned = false;
+        self.drain_pending[node] = false;
+        self.blacklist_until[node] = SimTime::ZERO;
+        self.node_fault_counts[node] = 0;
+    }
+
+    /// Blacklisting: a node that keeps failing pod starts is cordoned for
+    /// the policy's blacklist window.
+    pub fn note_node_fault(&mut self, node: usize) {
+        self.node_fault_counts[node] += 1;
+        let Some(ch) = &self.chaos else { return };
+        let k = ch.policy.blacklist_after;
+        let window = ch.policy.blacklist_ms;
+        if k == 0 || self.node_fault_counts[node] < k {
+            return;
+        }
+        if self.nodes[node].failed || self.nodes[node].cordoned {
+            return; // already out of rotation
+        }
+        let now = self.now();
+        self.nodes[node].cordoned = true;
+        self.blacklist_until[node] = now + SimTime::from_millis(window);
+        self.node_fault_counts[node] = 0;
+        self.chaos_stats.blacklists += 1;
+        self.metrics.inc("node_blacklists", 1);
+        self.q
+            .schedule_in(SimTime::from_millis(window), Ev::ChaosUncordon { node });
+    }
+
+    // ---------------------------------------------------------------
+    // task execution
+    // ---------------------------------------------------------------
+
+    /// Start executing `task` inside `pod` at the current time.
+    ///
+    /// Chaos hooks (all inert on healthy runs): the remaining work may be
+    /// less than the DAG duration (checkpoint-restart), a straggler node
+    /// stretches it by its slowdown factor, a pending fault timestamp is
+    /// folded into the recovery-latency summary, and straggling pool
+    /// tasks get a speculation watch.
+    pub fn start_task(&mut self, pod: PodId, task: TaskId) {
+        let now = self.now();
+        let nominal = self.task_work_left[task.0 as usize];
+        let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
+        let slow = match self.pods[pod.0 as usize].node {
+            Some(nid) => self.node_slow[nid.0],
+            None => 1.0,
+        };
+        let dur = if slow != 1.0 {
+            SimTime::from_millis((nominal.as_millis() as f64 * slow).round() as u64)
+        } else {
+            nominal
+        };
+        // a speculative copy racing the original must not overwrite the
+        // task's trace record — queueing delay is ready -> *first* start
+        if self.task_running[task.0 as usize] == 0 {
+            self.trace.started(task, pod.0, now);
+        }
+        self.task_running[task.0 as usize] += 1;
+        self.record_running(ttype, 1);
+        self.pods[pod.0 as usize].executed += 1;
+        self.current_task[pod.0 as usize] = Some(task);
+        self.pod_io[pod.0 as usize] = IoPhase::Compute;
+        self.pod_task_started_at[pod.0 as usize] = now;
+        if self.chaos.is_some() {
+            let fault_at = self.task_fault_at[task.0 as usize];
+            if fault_at != NO_FAULT {
+                self.task_fault_at[task.0 as usize] = NO_FAULT;
+                self.chaos_stats
+                    .recovery_latency
+                    .add((now - SimTime::from_millis(fault_at)).as_secs_f64());
+            }
+        }
+        self.q.schedule_at(
+            now + SimTime::from_millis(self.cfg.exec_overhead_ms) + dur,
+            Ev::TaskDone { pod, task },
+        );
+        // straggler watch: if the task is still running after spec_factor
+        // x its nominal time, a speculative copy is launched (pools only)
+        if let Some(ch) = &self.chaos {
+            if ch.policy.speculative
+                && ch.straggler.is_some()
+                && !self.spec_launched[task.0 as usize]
+                && self.pods[pod.0 as usize].pool_id().is_some()
+            {
+                let watch = SimTime::from_millis(
+                    self.cfg.exec_overhead_ms
+                        + (nominal.as_millis() as f64 * ch.policy.spec_factor).round() as u64,
+                );
+                self.q.schedule_at(now + watch, Ev::SpecCheck { pod, task });
+            }
+        }
+    }
+
+    /// Charge the compute a killed in-flight task burned, minus the
+    /// checkpoint-restored fraction, and shrink the task's remaining work
+    /// accordingly. `node` is where it ran (for de-slowing straggler time
+    /// into work units).
+    pub fn account_lost_work(&mut self, pod: PodId, task: TaskId, node: usize) {
+        let exec_ms = self.run_exec_ms(pod);
+        let frac = self
+            .chaos
+            .as_ref()
+            .map(|c| c.policy.checkpoint_frac)
+            .unwrap_or(0.0);
+        // progress in work units (a straggler burns `slow` wall-ms per
+        // work-ms), of which `frac` survives in the checkpoint
+        let slow = self.node_slow[node].max(1.0);
+        let work_done = (exec_ms as f64 / slow) as u64;
+        let left = self.task_work_left[task.0 as usize].as_millis();
+        let credit = ((work_done as f64 * frac) as u64).min(left.saturating_sub(1));
+        self.task_work_left[task.0 as usize] = SimTime::from_millis(left - credit);
+        let wasted = exec_ms.saturating_sub(credit);
+        self.chaos_stats
+            .add_waste(self.tenant_of(task).idx(), wasted);
+        self.fault_stamp(task);
+    }
+
+    // ---------------------------------------------------------------
+    // chaos recovery scheduling
+    // ---------------------------------------------------------------
+
+    /// Schedule a pool task's policy-driven re-dispatch — unless another
+    /// copy of it is still executing (speculation): the live copy carries
+    /// the work, and if that copy dies too, *its* kill path schedules the
+    /// retry. Keeps the at-most-one-extra-copy contract.
+    pub fn schedule_task_retry(&mut self, task: TaskId) {
+        if self.task_running[task.0 as usize] > 0 {
+            return;
+        }
+        let attempt = self.task_attempts[task.0 as usize];
+        self.task_attempts[task.0 as usize] = attempt.saturating_add(1);
+        let delay = self
+            .chaos
+            .as_ref()
+            .map(|c| c.policy.backoff(attempt))
+            .unwrap_or(SimTime::ZERO);
+        self.chaos_stats.add_retry(self.tenant_of(task).idx());
+        self.metrics.inc("chaos_retries", 1);
+        self.q.schedule_in(delay, Ev::ChaosRetryTask { task });
+    }
+
+    /// Schedule a job batch's policy-driven re-creation (attempt count
+    /// keyed on the batch's first task).
+    pub fn schedule_batch_retry(&mut self, tasks: Vec<TaskId>) {
+        debug_assert!(!tasks.is_empty());
+        let key = tasks[0];
+        let attempt = self.task_attempts[key.0 as usize];
+        self.task_attempts[key.0 as usize] = attempt.saturating_add(1);
+        let delay = self
+            .chaos
+            .as_ref()
+            .map(|c| c.policy.backoff(attempt))
+            .unwrap_or(SimTime::ZERO);
+        self.chaos_stats.add_retry(self.tenant_of(key).idx());
+        self.metrics.inc("chaos_retries", 1);
+        self.q.schedule_in(delay, Ev::ChaosRetryBatch { tasks });
+    }
+
+    /// Sample + schedule the next fault of timed injector `i` (no-op for
+    /// inert processes).
+    pub fn schedule_next_fault(&mut self, i: usize) {
+        let n = self.nodes.len();
+        let Some(ch) = &mut self.chaos else { return };
+        if let Some((delay, victim)) = ch.processes[i].next_fault(n) {
+            self.q.schedule_in(
+                delay,
+                Ev::ChaosFault {
+                    proc_idx: i as u8,
+                    node: victim,
+                },
+            );
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // data-plane plumbing
+    // ---------------------------------------------------------------
+
+    /// Drain the data plane's (re)schedules into the event queue.
+    pub fn schedule_flow_events(&mut self, mut buf: Vec<FlowEvent>) {
+        for ev in buf.drain(..) {
+            let e = if ev.activate {
+                Ev::FlowActivate {
+                    flow: ev.flow,
+                    gen: ev.gen,
+                }
+            } else {
+                Ev::FlowDone {
+                    flow: ev.flow,
+                    gen: ev.gen,
+                }
+            };
+            self.q.schedule_at(ev.at, e);
+        }
+        self.flow_buf = buf;
+    }
+}

@@ -1,0 +1,528 @@
+//! The layered **execution subsystem**: a discrete-event kernel with
+//! pluggable execution-model strategies and subsystem hooks.
+//!
+//! # Architecture map
+//!
+//! ```text
+//!              run() / run_fleet()           (this module: thin binding)
+//!                      |
+//!   +------------------v-------------------+
+//!   |  World = Kernel + Strategy           |  event router (handle())
+//!   +---------+--------------------+-------+
+//!             |                    |
+//!   +---------v---------+  +------v--------------------------------+
+//!   | kernel (kernel.rs)|  | strategy (strategy.rs)                |
+//!   | calendar queue,   |  | ExecStrategy trait + enum dispatch    |
+//!   | pods/nodes, sched,|  |   job.rs       §3.2 one task = 1 Job  |
+//!   | API server, trace,|  |   clustered.rs §3.5 batched jobs      |
+//!   | engine, metrics,  |  |   pools.rs     §3.3 typed worker pools|
+//!   | per-task tables   |  |   generic.rs   §3.3 one generic pool  |
+//!   +---------^---------+  +------^--------------------------------+
+//!             |                   |
+//!   +---------+-------------------+--------+
+//!   | hooks (hooks.rs)                     |
+//!   |  chaos: ChaosRuntime + kill paths    |
+//!   |  data plane: stage-in/out cycle      |
+//!   |  fleet: FleetState admission control |
+//!   +--------------------------------------+
+//! ```
+//!
+//! * The **kernel** ([`kernel`]) owns the substrate: the calendar
+//!   [`crate::sim::EventQueue`], pod/node lifecycle tables, the
+//!   scheduler/API control plane, accounting, and the zero-alloc scratch
+//!   buffers (EXPERIMENTS.md §Perf).
+//! * A **strategy** ([`strategy::ExecStrategy`], one module per paper
+//!   model) decides *routing policy*: where a ready task goes, how a pod
+//!   advances, and how deployments scale. Strategies are enum-dispatched
+//!   ([`strategy::Strategy`]) — static calls, no boxed closures.
+//! * **Subsystem hooks** ([`hooks`]) attach chaos, the data plane and the
+//!   fleet service to kernel events; each is an `Option<_>` slot that
+//!   stays `None` (zero events, bit-identical runs) unless configured.
+//!
+//! Two entry points share the event machinery:
+//!
+//! * [`run`] — the paper's experiment harness: one workflow, dispatched
+//!   at t=0, simulated to completion.
+//! * [`run_fleet`] — the fleet service: many workflow *instances* (one
+//!   [`Dag::disjoint_union`] task space, each instance a contiguous id
+//!   range) arriving over simulated time, tagged with tenants, admitted
+//!   under an optional concurrency cap, and executed concurrently on the
+//!   shared cluster. Instance roots are held back until admission;
+//!   readiness propagation, pools, autoscaling and scheduling are exactly
+//!   the single-run code paths — the autoscaler simply sees the aggregate
+//!   backlog of all in-flight instances, and the broker's per-tenant
+//!   lanes enforce weighted fair-share at dequeue time.
+//!
+//! Determinism contract: identical `(workflow, model, SimConfig)` inputs
+//! reproduce makespans, counters and event totals bit-identically
+//! (`tests/determinism.rs`, `tests/golden_trace.rs`).
+
+pub mod clustered;
+pub mod config;
+pub mod generic;
+pub mod hooks;
+pub mod job;
+pub mod kernel;
+pub mod pools;
+pub mod strategy;
+
+#[cfg(test)]
+mod tests;
+
+pub use config::{ConfigError, SimConfig, SimConfigBuilder};
+pub use strategy::ExecModel;
+
+use crate::chaos::inject::sample_node_slowdowns;
+use crate::chaos::ChaosStats;
+use crate::data::DataPlane;
+use crate::engine::Engine;
+use crate::fleet::{FleetPlan, InstanceOutcome};
+use crate::k8s::api_server::ApiServer;
+use crate::k8s::node::paper_cluster;
+use crate::k8s::pod::PodPhase;
+use crate::k8s::scheduler::{SchedulePass, Scheduler};
+use crate::metrics::{GaugeId, Registry};
+use crate::report::{SimResult, Trace};
+use crate::sim::{EventQueue, SimTime};
+use crate::workflow::dag::Dag;
+use crate::workflow::task::TaskId;
+use hooks::{ChaosRuntime, FleetState};
+use kernel::{Ev, Kernel, NO_FAULT};
+use std::collections::VecDeque;
+use strategy::{ExecStrategy, Strategy};
+
+/// The bound simulation: the kernel substrate plus the execution-model
+/// strategy layered on it. `handle` routes each calendar event either to
+/// a kernel primitive or through the strategy's lifecycle hooks.
+struct World {
+    k: Kernel,
+    strat: Strategy,
+}
+
+impl World {
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::JobAdmitted { pod } => {
+                // job controller creates the pod object after its reconcile
+                let done = self.k.api.admit(self.k.now())
+                    + SimTime::from_millis(self.k.cfg.job_controller_ms);
+                self.k.q.schedule_at(done, Ev::PodCreated { pod });
+            }
+            Ev::PodCreated { pod } => {
+                if self.k.pods[pod.0 as usize].phase == PodPhase::Pending {
+                    self.k.sched.enqueue(pod);
+                    self.strat.on_capacity_changed(&mut self.k);
+                }
+            }
+            Ev::BackoffExpire { pod } => {
+                if self.k.pods[pod.0 as usize].phase == PodPhase::Pending
+                    && self.k.sched.is_sleeping(pod)
+                {
+                    self.k.sched.enqueue(pod);
+                    self.strat.on_capacity_changed(&mut self.k);
+                }
+            }
+            Ev::PodStarted { pod } => self.strat.on_pod_started(&mut self.k, pod),
+            Ev::WorkerFetched { pod, task } => {
+                self.strat.on_worker_fetched(&mut self.k, pod, task)
+            }
+            Ev::TaskDone { pod, task } => self.strat.on_task_done(&mut self.k, pod, task),
+            Ev::FlushTimer { type_idx, deadline } => {
+                self.strat.on_flush_timer(&mut self.k, type_idx, deadline)
+            }
+            Ev::NodeEvent { node, up } => {
+                if up {
+                    self.k.nodes[node].failed = false;
+                    self.strat.on_capacity_changed(&mut self.k); // capacity restored
+                } else {
+                    self.strat.on_node_down(&mut self.k, node, false);
+                }
+            }
+            Ev::InstanceArrive { inst } => {
+                self.strat
+                    .state()
+                    .instance_arrive(&mut self.k, inst as usize);
+            }
+            Ev::ChaosFault { proc_idx, node } => {
+                self.strat.on_fault(&mut self.k, proc_idx as usize, node);
+                // lazy Poisson process: draw + schedule the next strike
+                self.k.schedule_next_fault(proc_idx as usize);
+            }
+            Ev::ChaosReclaim { node, replace_ms } => {
+                self.k.drain_pending[node] = false;
+                if !self.k.nodes[node].failed {
+                    self.k.chaos_stats.spot_reclaims += 1;
+                    self.k.metrics.inc("spot_reclaims", 1);
+                    self.strat.on_node_down(&mut self.k, node, true);
+                    self.k.q.schedule_in(
+                        SimTime::from_millis(replace_ms),
+                        Ev::ChaosRestore { node },
+                    );
+                }
+                // if a crash beat the warning to it, the crash's own
+                // restore will bring the replacement up
+            }
+            Ev::ChaosRestore { node } => {
+                // replacement capacity: same slot, fresh incarnation
+                self.k.node_replaced(node);
+                // replacement hardware rolls the straggler dice again
+                let resample = self.k.chaos.as_mut().and_then(|ch| {
+                    ch.straggler
+                        .map(|(frac, factor)| if ch.node_rng.f64() < frac { factor } else { 1.0 })
+                });
+                if let Some(slow) = resample {
+                    self.k.node_slow[node] = slow;
+                }
+                self.strat
+                    .state()
+                    .pools
+                    .update_chaos_quota(&mut self.k);
+                self.k.metrics.inc("nodes_restored", 1);
+                self.strat.on_capacity_changed(&mut self.k);
+            }
+            Ev::ChaosUncordon { node } => {
+                let now = self.k.now();
+                if !self.k.nodes[node].failed
+                    && !self.k.drain_pending[node]
+                    && self.k.blacklist_until[node] <= now
+                    && self.k.nodes[node].cordoned
+                {
+                    self.k.nodes[node].cordoned = false;
+                    self.strat.on_capacity_changed(&mut self.k);
+                }
+            }
+            Ev::ChaosRetryTask { task } => self.strat.on_retry_task(&mut self.k, task),
+            Ev::ChaosRetryBatch { tasks } => self.strat.on_retry_batch(&mut self.k, tasks),
+            Ev::SpecCheck { pod, task } => self.strat.on_speculate(&mut self.k, pod, task),
+            Ev::FlowActivate { flow, gen } => {
+                let now = self.k.now();
+                let mut buf = std::mem::take(&mut self.k.flow_buf);
+                if let Some(dp) = &mut self.k.data {
+                    dp.activate(now, flow, gen, &mut buf);
+                }
+                self.k.schedule_flow_events(buf);
+            }
+            Ev::FlowDone { flow, gen } => {
+                self.strat.state().flow_done(&mut self.k, flow, gen)
+            }
+            Ev::AutoscaleTick => {
+                self.strat.on_scale(&mut self.k);
+                if !self.k.engine.is_done() {
+                    let poll = self
+                        .strat
+                        .state_ref()
+                        .pools
+                        .scaler
+                        .as_ref()
+                        .map(|s| s.cfg.poll_ms)
+                        .unwrap_or(15_000);
+                    self.k
+                        .q
+                        .schedule_in(SimTime::from_millis(poll), Ev::AutoscaleTick);
+                }
+            }
+        }
+    }
+}
+
+/// Construct the simulated world (cluster, control plane, strategy,
+/// gauges) for a workflow + execution model, returning the
+/// initially-ready tasks for the caller to dispatch — at t=0 ([`run`]) or
+/// per instance arrival ([`run_fleet`]).
+fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
+    let (engine, initial_ready) = Engine::new(dag);
+    let n_types = engine.dag().types.len();
+
+    // pre-resolve the hot gauges (see §Perf)
+    let mut metrics = Registry::new();
+    let g_running = metrics.gauge_id("running_tasks");
+    let g_cpu = metrics.gauge_id("cpu_allocated_m");
+    let g_pending = metrics.gauge_id("pending_pods");
+    let g_by_type: Vec<GaugeId> = engine
+        .dag()
+        .types
+        .iter()
+        .map(|t| metrics.gauge_id(&format!("running::{}", t.name)))
+        .collect();
+
+    // the single ExecModel match in the execution layer: instantiate the
+    // model's strategy (declares pools + per-pool gauges)
+    let strat = Strategy::build(model, &engine, &cfg, &mut metrics);
+
+    let n_tasks = engine.dag().len();
+    let chaos = ChaosRuntime::build(
+        &cfg.chaos,
+        cfg.pod_failure_prob,
+        strat.default_recovery(),
+        cfg.seed,
+        cfg.autoscale.quota_cpu_m,
+    );
+    let chaos_enabled = chaos.is_some();
+    // data plane: file tables + caches derived from the DAG's annotations
+    let data = cfg
+        .data
+        .as_ref()
+        .map(|dc| DataPlane::new(dc.clone(), engine.dag(), cfg.nodes));
+    let task_out_pending = if data.is_some() {
+        vec![false; n_tasks]
+    } else {
+        Vec::new()
+    };
+    // per-task chaos tables (healthy runs read work_left in start_task too,
+    // so it always mirrors the DAG durations)
+    let task_work_left: Vec<SimTime> = engine.dag().tasks.iter().map(|t| t.duration).collect();
+
+    let mut k = Kernel {
+        chaos,
+        chaos_stats: ChaosStats {
+            enabled: chaos_enabled,
+            ..Default::default()
+        },
+        node_slow: vec![1.0; cfg.nodes],
+        node_incarnation: vec![0; cfg.nodes],
+        node_fault_counts: vec![0; cfg.nodes],
+        drain_pending: vec![false; cfg.nodes],
+        blacklist_until: vec![SimTime::ZERO; cfg.nodes],
+        task_work_left,
+        task_attempts: vec![0; n_tasks],
+        task_fault_at: vec![NO_FAULT; n_tasks],
+        spec_launched: vec![false; n_tasks],
+        task_running: vec![0; n_tasks],
+        nodes: paper_cluster(cfg.nodes),
+        sched: Scheduler::new(cfg.sched.clone()),
+        api: ApiServer::new(cfg.api.clone()),
+        engine,
+        metrics,
+        trace: Trace::new(),
+        running_tasks: 0,
+        pending_count: 0,
+        completed_by_type: vec![0; n_types],
+        data,
+        task_out_pending,
+        flow_buf: Vec::new(),
+        fleet: None,
+        task_instance: Vec::new(),
+        task_tenant: Vec::new(),
+        g_running,
+        g_cpu,
+        g_pending,
+        g_by_type,
+        q: EventQueue::new(),
+        pods: Vec::new(),
+        batch_queue: Vec::new(),
+        current_task: Vec::new(),
+        pod_bound_inc: Vec::new(),
+        pod_task_started_at: Vec::new(),
+        pod_io: Vec::new(),
+        pod_exec_ms: Vec::new(),
+        ready_buf: Vec::new(),
+        pass_buf: SchedulePass::default(),
+        members_buf: Vec::new(),
+        cfg,
+    };
+
+    k.metrics.set_id(k.g_running, SimTime::ZERO, 0.0);
+    // schedule the configured node failures (moved out and back rather
+    // than cloning the whole Vec per run)
+    let node_events = std::mem::take(&mut k.cfg.node_events);
+    for &(at_ms, node, up) in &node_events {
+        assert!(node < k.nodes.len(), "node event for unknown node {node}");
+        k.q
+            .schedule_at(SimTime::from_millis(at_ms), Ev::NodeEvent { node, up });
+    }
+    k.cfg.node_events = node_events;
+    // chaos: sample the straggler table and arm every timed injector
+    let straggler = k.chaos.as_ref().and_then(|c| c.straggler);
+    if let Some((frac, factor)) = straggler {
+        let n = k.nodes.len();
+        let slow = {
+            let ch = k.chaos.as_mut().expect("chaos runtime");
+            sample_node_slowdowns(n, frac, factor, &mut ch.node_rng)
+        };
+        k.node_slow = slow;
+    }
+    let n_processes = k.chaos.as_ref().map(|c| c.processes.len()).unwrap_or(0);
+    for i in 0..n_processes {
+        k.schedule_next_fault(i);
+    }
+    (World { k, strat }, initial_ready)
+}
+
+/// Pump the event loop until every workflow task completed (or the wall
+/// cap fires); returns the makespan and the processed event count.
+fn drive(world: &mut World) -> (SimTime, u64) {
+    let max_ms = (world.k.cfg.max_sim_s * 1000.0) as u64;
+    let mut makespan = SimTime::ZERO;
+    let mut sim_events: u64 = 0;
+    while let Some((t, ev)) = world.k.q.pop() {
+        if t.as_millis() > max_ms {
+            log::warn!(
+                "simulation wall cap hit at {t} with {} tasks outstanding",
+                world.k.engine.n_outstanding()
+            );
+            break;
+        }
+        sim_events += 1;
+        world.handle(ev);
+        if world.k.engine.is_done() {
+            makespan = world.k.q.now();
+            break;
+        }
+    }
+    assert!(
+        world.k.engine.is_done(),
+        "simulation ended with {} of {} tasks incomplete (deadlock?)",
+        world.k.engine.n_outstanding(),
+        world.k.engine.dag().len()
+    );
+    (makespan, sim_events)
+}
+
+/// Fold the finished kernel into a [`SimResult`].
+fn summarize(k: Kernel, model_name: String, makespan: SimTime, sim_events: u64) -> SimResult {
+    let t_end = makespan.as_secs_f64();
+    let avg_running = k
+        .metrics
+        .gauge("running_tasks")
+        .map(|s| s.time_average(0.0, t_end))
+        .unwrap_or(0.0);
+    let total_cpu = k.cfg.nodes as f64 * 4_000.0;
+    let avg_cpu = k
+        .metrics
+        .gauge("cpu_allocated_m")
+        .map(|s| s.time_average(0.0, t_end) / total_cpu)
+        .unwrap_or(0.0);
+
+    SimResult {
+        model_name,
+        makespan,
+        data: k.data.as_ref().map(|d| d.report()).unwrap_or_default(),
+        pods_created: k.metrics.counter("pods_created"),
+        api_requests: k.api.requests_total,
+        sched_backoffs: k.sched.backoffs_total,
+        sched_binds: k.sched.binds_total,
+        sim_events,
+        avg_running_tasks: avg_running,
+        avg_cpu_utilization: avg_cpu,
+        chaos: k.chaos_stats.report(),
+        trace: k.trace,
+        metrics: k.metrics,
+    }
+}
+
+/// Run a workflow under an execution model on the simulated cluster.
+pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
+    let model_name = model.name().to_string();
+    let (mut world, initial_ready) = build(dag, &model, cfg);
+    world.strat.on_ready(&mut world.k, &initial_ready);
+    if world.strat.state_ref().pools.scaler.is_some() {
+        // first poll fires quickly so pools can start warming up
+        world
+            .k
+            .q
+            .schedule_in(SimTime::from_millis(1_000), Ev::AutoscaleTick);
+    }
+    let (makespan, sim_events) = drive(&mut world);
+    summarize(world.k, model_name, makespan, sim_events)
+}
+
+/// Run an open-loop fleet of workflow instances on one shared cluster.
+///
+/// `dag` is the [`Dag::disjoint_union`] of every instance; `plan` maps
+/// each instance to its contiguous task range, tenant, and arrival time,
+/// and carries the tenant fair-share weights plus the admission cap. Each
+/// instance's root tasks are dispatched when the instance is *admitted*
+/// (at arrival, or when a slot frees under the cap); everything downstream
+/// — readiness, batching, pools, autoscaling — is the single-run
+/// machinery operating on the aggregate workload. Returns the overall
+/// [`SimResult`] plus one [`InstanceOutcome`] per instance (same order as
+/// `plan.instances`), from which per-tenant SLO statistics are derived by
+/// [`crate::fleet::report`].
+///
+/// Panics on a structurally invalid plan (the panic message carries the
+/// named [`ConfigError`]); callers that want a `Result` should check
+/// [`FleetPlan::validate`] themselves before invoking — the CLI and the
+/// config loader do.
+pub fn run_fleet(
+    dag: Dag,
+    model: ExecModel,
+    cfg: SimConfig,
+    plan: &FleetPlan,
+) -> (SimResult, Vec<InstanceOutcome>) {
+    let model_name = format!("fleet/{}", model.name());
+    let n_tasks = dag.len();
+    // validate the plan: contiguous instance ranges covering the union
+    // DAG, every tenant weighted, a usable admission cap
+    if let Err(e) = plan.validate(n_tasks as u32) {
+        panic!("invalid fleet plan: {e}");
+    }
+
+    let (mut world, initial_ready) = build(dag, &model, cfg);
+    world
+        .strat
+        .state()
+        .pools
+        .broker
+        .set_tenant_weights(&plan.tenant_weights);
+    // per-tenant resilience accounting (wasted work / retries per lane)
+    world.k.chaos_stats.set_tenants(plan.tenant_weights.len());
+    // per-tenant bytes-moved lanes for the data plane, when enabled
+    if let Some(dp) = &mut world.k.data {
+        dp.stats.set_tenants(plan.tenant_weights.len());
+    }
+
+    // per-task instance/tenant tables (the disjoint-union offset scheme)
+    let mut task_instance = vec![0u32; n_tasks];
+    let mut task_tenant = vec![0u16; n_tasks];
+    for (i, s) in plan.instances.iter().enumerate() {
+        let range = s.first_task as usize..(s.first_task + s.n_tasks) as usize;
+        task_instance[range.clone()].fill(i as u32);
+        task_tenant[range].fill(s.tenant);
+    }
+    // hold each instance's roots back until it is admitted
+    let mut roots: Vec<Vec<TaskId>> = vec![Vec::new(); plan.instances.len()];
+    for &t in &initial_ready {
+        roots[task_instance[t.0 as usize] as usize].push(t);
+    }
+    world.k.task_instance = task_instance;
+    world.k.task_tenant = task_tenant;
+    world.k.fleet = Some(FleetState {
+        outstanding: plan.instances.iter().map(|s| s.n_tasks).collect(),
+        roots,
+        admitted_at: vec![None; plan.instances.len()],
+        finished_at: vec![None; plan.instances.len()],
+        waiting: VecDeque::new(),
+        in_flight: 0,
+        max_in_flight: plan.max_in_flight,
+    });
+    for (i, s) in plan.instances.iter().enumerate() {
+        world.k.q.schedule_at(
+            SimTime::from_millis(s.arrival_ms),
+            Ev::InstanceArrive { inst: i as u32 },
+        );
+    }
+    if world.strat.state_ref().pools.scaler.is_some() {
+        world
+            .k
+            .q
+            .schedule_in(SimTime::from_millis(1_000), Ev::AutoscaleTick);
+    }
+
+    let (makespan, sim_events) = drive(&mut world);
+
+    let fs = world.k.fleet.take().expect("fleet state");
+    debug_assert!(fs.waiting.is_empty() && fs.in_flight == 0);
+    let outcomes = plan
+        .instances
+        .iter()
+        .enumerate()
+        .map(|(i, s)| InstanceOutcome {
+            tenant: s.tenant,
+            arrival: SimTime::from_millis(s.arrival_ms),
+            admitted: fs.admitted_at[i].expect("instance never admitted"),
+            finished: fs.finished_at[i].expect("instance never finished"),
+            n_tasks: s.n_tasks,
+        })
+        .collect();
+    (summarize(world.k, model_name, makespan, sim_events), outcomes)
+}

@@ -1,0 +1,438 @@
+//! The **pool path**: auto-scalable worker-pool deployments fed by
+//! broker queues (paper §3.3), plus the hybrid [`PoolsStrategy`] used in
+//! the paper's experiments (§4.4).
+//!
+//! Event flow:
+//! ```text
+//!   task ready -> publish to type queue -> wake idle worker / autoscaler
+//!   autoscale tick: desired replicas -> API: create/delete worker pods
+//!   -> scheduler -> pod start -> worker loop: fetch/execute/ack
+//! ```
+//!
+//! [`PoolPath`] is shared machinery: the hybrid strategy declares one
+//! pool per pooled type, the generic strategy declares a single untyped
+//! pool covering every type, and the job strategies carry an empty pool
+//! set (so the routing table sends everything to the job path). Pools
+//! are interned to dense [`PoolId`] indices at startup, so deployments,
+//! idle-worker queues, queue-depth gauges and per-type routing are all
+//! `Vec` lookups (EXPERIMENTS.md §Perf).
+
+use crate::autoscale::{Autoscaler, PoolSpec};
+use crate::broker::{Broker, PoolId, TenantId};
+use crate::chaos::RecoveryPolicy;
+use crate::engine::clustering::ClusteringConfig;
+use crate::engine::Engine;
+use crate::exec::config::SimConfig;
+use crate::exec::job::JobPath;
+use crate::exec::kernel::{Ev, Kernel};
+use crate::exec::strategy::{ExecStrategy, StrategyState};
+use crate::k8s::pod::{Payload, PodId, PodPhase};
+use crate::k8s::resources::Resources;
+use crate::metrics::{GaugeId, Registry};
+use crate::sim::SimTime;
+use crate::workflow::task::{TaskId, TypeId};
+use std::collections::VecDeque;
+
+/// Worker-pool machinery: the broker, per-pool deployment state, the
+/// autoscaler, and the type -> pool routing table. Empty (zero pools)
+/// for the pure job strategies.
+pub struct PoolPath {
+    pub broker: Broker,
+    pub scaler: Option<Autoscaler>,
+    /// Worker deployment state per pool: live pod set, kept sorted by
+    /// `PodId` (ids are assigned monotonically, so insertion is a push;
+    /// this preserves the old `BTreeSet` iteration order for scale-down).
+    pub deployments: Vec<Vec<PodId>>,
+    /// Idle running workers per pool (FIFO).
+    pub idle_workers: Vec<VecDeque<PodId>>,
+    /// The task type backing each pool (`None` for the generic pool).
+    pub pool_type: Vec<Option<TypeId>>,
+    /// Routing table: which pool (if any) a ready task of each type goes
+    /// to. Replaces per-task string compares/clones in dispatch.
+    pub pool_of_type: Vec<Option<PoolId>>,
+    /// Pools in name order — the autoscale reconciliation applies desired
+    /// counts in this order to stay bit-identical with the pre-interning
+    /// code, which iterated a `BTreeMap<String, usize>`.
+    pub pools_by_name: Vec<PoolId>,
+    /// Pod template for the generic-pool model (max over all types).
+    pub generic_requests: Resources,
+    /// queue::<pool> gauge per PoolId.
+    pub g_queue: Vec<GaugeId>,
+    /// replicas::<pool> gauge per PoolId.
+    pub g_replicas: Vec<GaugeId>,
+    // reusable scratch buffers (§Perf)
+    /// Idle-worker snapshot for scale-down.
+    idle_buf: Vec<PodId>,
+    /// Autoscale tick: backlog / current / desired per pool.
+    backlog_buf: Vec<usize>,
+    current_buf: Vec<usize>,
+    desired_buf: Vec<usize>,
+}
+
+impl PoolPath {
+    /// No pools at all: every type routes to the job path.
+    pub fn none(n_types: usize) -> PoolPath {
+        PoolPath {
+            broker: Broker::new(),
+            scaler: None,
+            deployments: Vec::new(),
+            idle_workers: Vec::new(),
+            pool_type: Vec::new(),
+            pool_of_type: vec![None; n_types],
+            pools_by_name: Vec::new(),
+            generic_requests: Resources::ZERO,
+            g_queue: Vec::new(),
+            g_replicas: Vec::new(),
+            idle_buf: Vec::new(),
+            backlog_buf: Vec::new(),
+            current_buf: Vec::new(),
+            desired_buf: Vec::new(),
+        }
+    }
+
+    /// Finish construction once every pool is declared on the broker:
+    /// size the per-pool tables, build the autoscaler, resolve the
+    /// name-ordered reconciliation sequence and the per-pool gauges.
+    pub fn finalize(&mut self, cfg: &SimConfig, specs: Vec<PoolSpec>, metrics: &mut Registry) {
+        let n_pools = self.pool_type.len();
+        self.scaler = (n_pools > 0).then(|| Autoscaler::new(cfg.autoscale.clone(), specs));
+        self.deployments = vec![Vec::new(); n_pools];
+        self.idle_workers = vec![VecDeque::new(); n_pools];
+        let mut pools_by_name: Vec<PoolId> = (0..n_pools).map(|i| PoolId(i as u16)).collect();
+        pools_by_name.sort_by(|a, b| self.broker.name(*a).cmp(self.broker.name(*b)));
+        self.pools_by_name = pools_by_name;
+        self.g_queue = (0..n_pools)
+            .map(|i| {
+                let name = self.broker.name(PoolId(i as u16));
+                metrics.gauge_id(&format!("queue::{name}"))
+            })
+            .collect();
+        self.g_replicas = (0..n_pools)
+            .map(|i| {
+                let name = self.broker.name(PoolId(i as u16));
+                metrics.gauge_id(&format!("replicas::{name}"))
+            })
+            .collect();
+    }
+
+    pub fn n_pools(&self) -> usize {
+        self.pool_type.len()
+    }
+
+    /// Record the current depth of a pool's queue.
+    pub fn record_queue_depth(&mut self, k: &mut Kernel, pool: PoolId) {
+        let now = k.now();
+        let depth = self.broker.queue(pool).depth();
+        k.metrics
+            .set_id(self.g_queue[pool.idx()], now, depth as f64);
+    }
+
+    /// Publish a ready task to its pool queue and try to hand it to an
+    /// idle worker.
+    pub fn publish(&mut self, k: &mut Kernel, pool: PoolId, task: TaskId, tenant: TenantId) {
+        self.broker.publish_for(pool, task, tenant);
+        self.record_queue_depth(k, pool);
+        self.wake_idle_worker(k, pool);
+    }
+
+    /// Give an idle worker of `pool` a task, if any is queued.
+    pub fn wake_idle_worker(&mut self, k: &mut Kernel, pool: PoolId) {
+        while let Some(&pid) = self.idle_workers[pool.idx()].front() {
+            // skip workers that were deleted while idle
+            if k.pods[pid.0 as usize].phase != PodPhase::Running {
+                self.idle_workers[pool.idx()].pop_front();
+                continue;
+            }
+            if let Some(task) = self.broker.fetch(pool) {
+                self.idle_workers[pool.idx()].pop_front();
+                let now = k.now();
+                k.q.schedule_at(
+                    now + SimTime::from_millis(k.cfg.fetch_ms),
+                    Ev::WorkerFetched { pod: pid, task },
+                );
+            }
+            return;
+        }
+    }
+
+    /// A running worker has no task in hand: fetch the next message or
+    /// park in the idle queue. Shared by pod start and post-completion
+    /// advance (previously two hand-copied branches).
+    pub fn fetch_or_idle(&mut self, k: &mut Kernel, pod: PodId, pool: PoolId) {
+        let now = k.now();
+        if let Some(task) = self.broker.fetch(pool) {
+            k.q.schedule_at(
+                now + SimTime::from_millis(k.cfg.fetch_ms),
+                Ev::WorkerFetched { pod, task },
+            );
+        } else {
+            self.idle_workers[pool.idx()].push_back(pod);
+        }
+    }
+
+    /// Pool path: create a worker pod for a deployment scale-up. The pod
+    /// template is the pool's (VPA right-sizes it once enough samples of
+    /// the backing type completed, §5).
+    pub fn create_worker(&mut self, k: &mut Kernel, pool: PoolId) {
+        let requests = match self.pool_type[pool.idx()] {
+            None => self.generic_requests,
+            Some(ty) => {
+                let t = &k.engine.dag().types[ty.0 as usize];
+                // §5 VPA: once enough of this type has run, right-size
+                // new workers to the observed CPU usage
+                if k.cfg.autoscale.vpa
+                    && k.completed_by_type[ty.0 as usize] >= k.cfg.autoscale.vpa_min_samples
+                {
+                    Resources::new(t.cpu_used_m, t.requests.mem_mb)
+                } else {
+                    t.requests
+                }
+            }
+        };
+        let pid = k.new_pod(Payload::Worker { pool }, requests);
+        let dep = &mut self.deployments[pool.idx()];
+        if let Some(&last) = dep.last() {
+            debug_assert!(last < pid, "pod ids must be monotone");
+        }
+        dep.push(pid);
+        let done = k.api.admit(k.now());
+        k.q.schedule_at(done, Ev::PodCreated { pod: pid });
+    }
+
+    /// Drop a terminated worker from its deployment's live set.
+    pub fn forget_worker(&mut self, pool: PoolId, pid: PodId) {
+        let dep = &mut self.deployments[pool.idx()];
+        if let Ok(i) = dep.binary_search(&pid) {
+            dep.remove(i);
+        }
+    }
+
+    /// Rescale the pool quota to the surviving node capacity (chaos runs
+    /// only — legacy `node_events` keep the original quota semantics).
+    pub fn update_chaos_quota(&mut self, k: &mut Kernel) {
+        let Some(ch) = &k.chaos else { return };
+        let base = ch.base_quota;
+        if self.scaler.is_none() {
+            return;
+        }
+        let total: u64 = k.nodes.iter().map(|n| n.capacity.cpu_m).sum();
+        let live: u64 = k
+            .nodes
+            .iter()
+            .filter(|n| !n.failed)
+            .map(|n| n.capacity.cpu_m)
+            .sum();
+        let quota = ((base as u128 * live as u128) / total.max(1) as u128) as u64;
+        self.scaler.as_mut().unwrap().set_quota(quota);
+    }
+}
+
+// ---------------------------------------------------------------
+// pool-side strategy mechanics that terminate pods / re-enter the
+// scheduler, and therefore need the whole strategy state
+// ---------------------------------------------------------------
+impl StrategyState {
+    /// Post-completion advance of a pool worker: ack the delivery, then
+    /// drain, fetch the next message, or go idle. Shared by the normal
+    /// completion path and the speculative-loser path.
+    pub fn advance_worker(&mut self, k: &mut Kernel, pod: PodId, pool: PoolId) {
+        self.pools.broker.ack(pool);
+        self.pools.record_queue_depth(k, pool);
+        if k.pods[pod.0 as usize].phase == PodPhase::Draining {
+            self.terminate_pod(k, pod, PodPhase::Succeeded);
+        } else {
+            self.pools.fetch_or_idle(k, pod, pool);
+        }
+    }
+
+    /// Autoscaler reconciliation: publish VPA templates, poll desired
+    /// replica counts from the aggregate backlog, and apply them in pool
+    /// name order.
+    pub fn autoscale(&mut self, k: &mut Kernel) {
+        let now = k.now();
+        // VPA: publish right-sized pod templates to the scaler once a
+        // type's usage estimate is trustworthy
+        if k.cfg.autoscale.vpa {
+            if let Some(s) = &mut self.pools.scaler {
+                for pool in 0..self.pools.pool_type.len() {
+                    let Some(ty) = self.pools.pool_type[pool] else { continue };
+                    let t = &k.engine.dag().types[ty.0 as usize];
+                    if k.completed_by_type[ty.0 as usize] >= k.cfg.autoscale.vpa_min_samples
+                        && t.cpu_used_m != t.requests.cpu_m
+                    {
+                        s.set_pool_requests(pool, Resources::new(t.cpu_used_m, t.requests.mem_mb));
+                    }
+                }
+            }
+        }
+        if self.pools.scaler.is_none() {
+            return;
+        }
+        let n_pools = self.pools.deployments.len();
+        let mut backlogs = std::mem::take(&mut self.pools.backlog_buf);
+        let mut current = std::mem::take(&mut self.pools.current_buf);
+        let mut desired = std::mem::take(&mut self.pools.desired_buf);
+        backlogs.clear();
+        current.clear();
+        for pool in 0..n_pools {
+            backlogs.push(self.pools.broker.queue(PoolId(pool as u16)).backlog());
+            let have = self.pools.deployments[pool].len();
+            current.push(have);
+            k.metrics
+                .set_id(self.pools.g_replicas[pool], now, have as f64);
+        }
+        self.pools
+            .scaler
+            .as_mut()
+            .unwrap()
+            .poll_into(now, &backlogs, &current, &mut desired);
+        let pools_by_name = std::mem::take(&mut self.pools.pools_by_name);
+        for &pool in &pools_by_name {
+            let want = desired[pool.idx()];
+            let have = self.pools.deployments[pool.idx()].len();
+            if want > have {
+                for _ in 0..(want - have) {
+                    self.pools.create_worker(k, pool);
+                }
+            } else if want < have {
+                self.scale_down(k, pool, have - want);
+            }
+        }
+        self.pools.pools_by_name = pools_by_name;
+        self.pools.backlog_buf = backlogs;
+        self.pools.current_buf = current;
+        self.pools.desired_buf = desired;
+        self.run_scheduler(k);
+    }
+
+    /// Remove `n` workers from a pool: pending pods first, then idle
+    /// running workers, then mark busy workers Draining.
+    fn scale_down(&mut self, k: &mut Kernel, pool: PoolId, n: usize) {
+        let mut members = std::mem::take(&mut k.members_buf);
+        members.clear();
+        members.extend_from_slice(&self.pools.deployments[pool.idx()]);
+        let mut idle = std::mem::take(&mut self.pools.idle_buf);
+        idle.clear();
+        idle.extend(self.pools.idle_workers[pool.idx()].iter().copied());
+        self.scale_down_phases(k, pool, n, &members, &idle);
+        k.members_buf = members;
+        self.pools.idle_buf = idle;
+    }
+
+    fn scale_down_phases(
+        &mut self,
+        k: &mut Kernel,
+        pool: PoolId,
+        n: usize,
+        members: &[PodId],
+        idle: &[PodId],
+    ) {
+        let mut remaining = n;
+        // 1. pending (never scheduled) pods
+        for &pid in members {
+            if remaining == 0 {
+                return;
+            }
+            if k.pods[pid.0 as usize].phase == PodPhase::Pending {
+                self.terminate_pod(k, pid, PodPhase::Deleted);
+                remaining -= 1;
+            }
+        }
+        // also starting pods that haven't begun work
+        for &pid in members {
+            if remaining == 0 {
+                return;
+            }
+            if k.pods[pid.0 as usize].phase == PodPhase::Starting {
+                self.terminate_pod(k, pid, PodPhase::Deleted);
+                remaining -= 1;
+            }
+        }
+        // 2. idle running workers
+        for &pid in idle {
+            if remaining == 0 {
+                return;
+            }
+            if k.pods[pid.0 as usize].phase == PodPhase::Running {
+                self.pools.idle_workers[pool.idx()].retain(|&p| p != pid);
+                self.terminate_pod(k, pid, PodPhase::Deleted);
+                remaining -= 1;
+            }
+        }
+        // 3. drain busy workers (terminate after current task)
+        for &pid in members {
+            if remaining == 0 {
+                return;
+            }
+            let pod = &mut k.pods[pid.0 as usize];
+            if pod.phase == PodPhase::Running {
+                pod.phase = PodPhase::Draining;
+                remaining -= 1;
+            }
+        }
+    }
+}
+
+/// §3.3: worker pools for `pooled_types`; other types run as jobs (the
+/// paper's hybrid setup — pools for the three parallel stages, jobs for
+/// the serial tail).
+pub struct PoolsStrategy {
+    state: StrategyState,
+}
+
+impl PoolsStrategy {
+    pub fn build(
+        pooled_types: &[String],
+        engine: &Engine,
+        cfg: &SimConfig,
+        metrics: &mut Registry,
+    ) -> PoolsStrategy {
+        let n_types = engine.dag().types.len();
+        let mut pools = PoolPath::none(n_types);
+        let mut specs: Vec<PoolSpec> = Vec::new();
+        for t in pooled_types {
+            let ty = engine
+                .dag()
+                .type_id(t)
+                .unwrap_or_else(|| panic!("pooled type '{t}' not in workflow"));
+            let id = pools.broker.declare(t);
+            assert_eq!(id.idx(), pools.pool_type.len(), "duplicate pooled type '{t}'");
+            pools.pool_type.push(Some(ty));
+            pools.pool_of_type[ty.0 as usize] = Some(id);
+            specs.push(PoolSpec {
+                name: t.clone(),
+                requests: engine.dag().types[ty.0 as usize].requests,
+            });
+        }
+        pools.finalize(cfg, specs, metrics);
+        PoolsStrategy {
+            state: StrategyState {
+                jobs: JobPath::new(ClusteringConfig::none()),
+                pools,
+            },
+        }
+    }
+}
+
+impl ExecStrategy for PoolsStrategy {
+    fn name(&self) -> &'static str {
+        "worker-pools"
+    }
+
+    fn state(&mut self) -> &mut StrategyState {
+        &mut self.state
+    }
+
+    fn state_ref(&self) -> &StrategyState {
+        &self.state
+    }
+
+    /// Pool tasks are queue deliveries, so a straggling task can be
+    /// speculatively duplicated (first completion wins).
+    fn default_recovery(&self) -> RecoveryPolicy {
+        RecoveryPolicy {
+            speculative: true,
+            ..RecoveryPolicy::default()
+        }
+    }
+}

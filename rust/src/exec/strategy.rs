@@ -1,0 +1,680 @@
+//! The **strategy** layer: pluggable execution-model policy on top of the
+//! [`Kernel`].
+//!
+//! * [`ExecModel`] — the user-facing model description (paper §3), parsed
+//!   by the CLI / config layer.
+//! * [`ExecStrategy`] — the lifecycle-hook trait the kernel event loop
+//!   dispatches into: `on_ready`, `on_pod_started`, `on_pod_idle`,
+//!   `on_task_done`, `on_scale`, `on_retry_task` / `on_retry_batch`,
+//!   `on_speculate`, `on_node_down`, `on_fault`. One module per model
+//!   implements it: [`crate::exec::job`], [`crate::exec::clustered`],
+//!   [`crate::exec::pools`], [`crate::exec::generic`].
+//! * [`Strategy`] — the enum-backed dispatcher ([`Strategy::build`] holds
+//!   the *single* `ExecModel` match in the execution layer). Enum
+//!   dispatch keeps the hot path static — no boxed trait objects, no
+//!   per-event closures (EXPERIMENTS.md §Perf).
+//! * [`StrategyState`] — the shared machinery every strategy composes: a
+//!   [`JobPath`] (batching + throttling) and a [`PoolPath`] (queues +
+//!   deployments + autoscaler), plus the cross-cutting operations that
+//!   touch both (scheduling passes, ready-task routing, pod
+//!   termination). A model is a *configuration* of these paths — e.g.
+//!   the hybrid pools model routes pooled types to queues and everything
+//!   else to singleton jobs — which is what lets one event loop execute
+//!   all four paper models bit-reproducibly.
+
+use crate::chaos::RecoveryPolicy;
+use crate::engine::clustering::{BatchAction, ClusteringConfig};
+use crate::engine::{Engine, TaskState};
+use crate::exec::clustered::ClusteredStrategy;
+use crate::exec::config::{ConfigError, SimConfig};
+use crate::exec::generic::GenericStrategy;
+use crate::exec::job::{JobPath, JobStrategy};
+use crate::exec::kernel::{Ev, IoPhase, Kernel};
+use crate::exec::pools::{PoolPath, PoolsStrategy};
+use crate::k8s::pod::{Payload, PodId, PodPhase};
+use crate::k8s::scheduler::DataLocality;
+use crate::metrics::Registry;
+use crate::sim::SimTime;
+use crate::workflow::dag::Dag;
+use crate::workflow::task::TaskId;
+
+/// Which execution model a run uses (paper §3).
+#[derive(Debug, Clone)]
+pub enum ExecModel {
+    /// §3.2: one task -> one Kubernetes Job -> one Pod.
+    JobBased,
+    /// §3.2 + clustering: batches of same-type tasks per pod.
+    Clustered(ClusteringConfig),
+    /// §3.3: worker pools for `pooled_types`; other types run as jobs
+    /// (the paper's hybrid setup). Set `pooled_types` to all types for the
+    /// pure pool model.
+    WorkerPools { pooled_types: Vec<String> },
+    /// §3.3's rejected alternative: a single generic worker pool for ALL
+    /// task types. "Inferior both conceptually and technically": the pod
+    /// template must request the max resources over every type (degrading
+    /// scheduling quality) and implies one universal container image.
+    /// Implemented to quantify exactly that degradation.
+    GenericPool,
+}
+
+impl ExecModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecModel::JobBased => "job-based",
+            ExecModel::Clustered(_) => "job-clustered",
+            ExecModel::WorkerPools { .. } => "worker-pools",
+            ExecModel::GenericPool => "generic-pool",
+        }
+    }
+
+    /// The hybrid worker-pools setup used in §4.4: pools for the three
+    /// parallel stages, jobs for everything else.
+    pub fn paper_hybrid_pools() -> Self {
+        ExecModel::WorkerPools {
+            pooled_types: vec![
+                "mProject".to_string(),
+                "mDiffFit".to_string(),
+                "mBackground".to_string(),
+            ],
+        }
+    }
+
+    /// Structural validation (no workflow needed): empty pool sets,
+    /// duplicate pool declarations and zero-size clustering rules become
+    /// named errors instead of mid-run panics.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        match self {
+            ExecModel::WorkerPools { pooled_types } => {
+                if pooled_types.is_empty() {
+                    return Err(ConfigError::EmptyPoolSet);
+                }
+                for (i, t) in pooled_types.iter().enumerate() {
+                    if pooled_types[..i].contains(t) {
+                        return Err(ConfigError::DuplicatePooledType(t.clone()));
+                    }
+                }
+                Ok(())
+            }
+            ExecModel::Clustered(c) => {
+                if c.rules.iter().any(|r| r.size == 0) {
+                    return Err(ConfigError::ZeroClusterSize);
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Validate the model against a concrete workflow (pooled types must
+    /// exist in the DAG).
+    pub fn validate_against(&self, dag: &Dag) -> Result<(), ConfigError> {
+        if let ExecModel::WorkerPools { pooled_types } = self {
+            for t in pooled_types {
+                if dag.type_id(t).is_none() {
+                    return Err(ConfigError::UnknownPooledType(t.clone()));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What a pod will do next, extracted from its payload without cloning it
+/// (the owned `Vec<TaskId>` is *moved* out of job payloads).
+pub enum PodWork {
+    Batch(Vec<TaskId>),
+    Pool(crate::broker::PoolId),
+}
+
+/// The machinery every strategy composes: the job path and the pool path.
+/// Cross-cutting operations (routing, scheduling passes, termination, the
+/// subsystem-hook glue in [`crate::exec::hooks`]) are methods here so any
+/// strategy can reach both paths without borrow gymnastics.
+pub struct StrategyState {
+    pub jobs: JobPath,
+    pub pools: PoolPath,
+}
+
+impl StrategyState {
+    // ---------------------------------------------------------------
+    // routing + scheduling
+    // ---------------------------------------------------------------
+
+    /// Route newly-ready tasks: pooled types publish to their queue,
+    /// everything else goes through the job path's batcher.
+    pub fn dispatch_ready(&mut self, k: &mut Kernel, ready: &[TaskId]) {
+        let now = k.now();
+        for &t in ready {
+            let ttype = k.engine.dag().tasks[t.0 as usize].ttype;
+            k.trace.ready(t, k.engine.dag().type_name(t), now);
+            match self.pools.pool_of_type[ttype.0 as usize] {
+                Some(pool) => {
+                    let tenant = k.tenant_of(t);
+                    self.pools.publish(k, pool, t, tenant);
+                }
+                None => {
+                    // job path (with or without clustering)
+                    let action = self.jobs.batcher.push(
+                        now,
+                        &k.engine.dag().types[ttype.0 as usize].name,
+                        t,
+                    );
+                    match action {
+                        BatchAction::Flush(batch) => self.jobs.create_job(k, batch),
+                        BatchAction::ArmTimer(deadline) => k.q.schedule_at(
+                            deadline,
+                            Ev::FlushTimer {
+                                type_idx: ttype.0,
+                                deadline,
+                            },
+                        ),
+                        BatchAction::Buffered => {}
+                    }
+                }
+            }
+        }
+    }
+
+    /// One scheduler pass: bind what fits, back off what doesn't. Bound
+    /// job pods leave the pending pipeline (throttle accounting); the
+    /// locality oracle is consulted only when the data plane asks for it.
+    pub fn run_scheduler(&mut self, k: &mut Kernel) {
+        let now = k.now();
+        let mut pass = std::mem::take(&mut k.pass_buf);
+        // locality-aware placement only when the data plane asks for it;
+        // otherwise the oracle-free path is taken (bit-identical to the
+        // pre-data scheduler)
+        let data = k.data.take();
+        let locality: Option<&dyn DataLocality> = match &data {
+            Some(d) if d.cfg().locality => Some(d),
+            _ => None,
+        };
+        k.sched
+            .pass_into(now, &mut k.pods, &mut k.nodes, &mut pass, locality);
+        k.data = data;
+        if !pass.bound.is_empty() {
+            k.record_cpu();
+        }
+        for &(pid, node, bind_done) in &pass.bound {
+            k.pending_count -= 1;
+            k.pod_bound_inc[pid.0 as usize] = k.node_incarnation[node.0];
+            if matches!(k.pods[pid.0 as usize].payload, Payload::JobBatch { .. }) {
+                self.jobs.job_unblocked(k);
+            }
+            k.q.schedule_at(
+                bind_done + SimTime::from_millis(k.cfg.pod_start_ms),
+                Ev::PodStarted { pod: pid },
+            );
+        }
+        for &(pid, until) in &pass.backed_off {
+            k.q.schedule_at(until, Ev::BackoffExpire { pod: pid });
+        }
+        k.pass_buf = pass;
+        k.metrics.set_id(k.g_pending, now, k.pending_count as f64);
+    }
+
+    /// Terminate a pod, drop it from its deployment, and re-run the
+    /// scheduler: freed resources mean pods in the *active* queue can
+    /// retry now; pods in back-off keep sleeping (the paper's §4.2/4.3
+    /// pathology).
+    pub fn terminate_pod(&mut self, k: &mut Kernel, pid: PodId, phase: PodPhase) {
+        k.release_pod(pid, phase);
+        if let Some(pool) = k.pods[pid.0 as usize].pool_id() {
+            self.pools.forget_worker(pool, pid);
+        }
+        k.sched.forget(pid);
+        // pod deletion is an API request too
+        k.api.admit(k.now());
+        self.run_scheduler(k);
+    }
+
+    // ---------------------------------------------------------------
+    // kernel-event entry points (the trait hooks delegate here)
+    // ---------------------------------------------------------------
+
+    /// Container started: maybe crash (chaos), then begin the payload —
+    /// a batch starts its first task, a worker fetches or goes idle.
+    pub fn pod_started(&mut self, k: &mut Kernel, pod: PodId) {
+        let now = k.now();
+        if k.pods[pod.0 as usize].is_terminal() {
+            return; // deleted while starting
+        }
+        if k.stale_node_event(pod) {
+            return; // bound to a node incarnation that no longer exists
+        }
+        // chaos: crash at container start (PodFailure injector — the
+        // migrated sim.pod_failure_prob knob included)
+        let crash = match &mut k.chaos {
+            Some(ch) if ch.pod_fail_prob > 0.0 => ch.pod_rng.f64() < ch.pod_fail_prob,
+            _ => false,
+        };
+        if crash {
+            self.pod_start_failure(k, pod);
+            return;
+        }
+        let work = {
+            let p = &mut k.pods[pod.0 as usize];
+            p.phase = PodPhase::Running;
+            p.running_at = Some(now);
+            match &mut p.payload {
+                // move the batch into the execution queue — the
+                // remainder lives in `batch_queue` from here on
+                Payload::JobBatch { tasks } => PodWork::Batch(std::mem::take(tasks)),
+                Payload::Worker { pool } => PodWork::Pool(*pool),
+            }
+        };
+        match work {
+            PodWork::Batch(tasks) => {
+                k.batch_queue[pod.0 as usize] = tasks.into();
+                let first = k.batch_queue[pod.0 as usize]
+                    .front()
+                    .copied()
+                    .expect("non-empty batch");
+                self.begin_task(k, pod, first);
+            }
+            PodWork::Pool(pool) => self.pools.fetch_or_idle(k, pod, pool),
+        }
+    }
+
+    /// A worker's queue fetch completed: drop stale deliveries, requeue if
+    /// the worker died in the meantime, otherwise begin the task.
+    pub fn worker_fetched(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        if k.pods[pod.0 as usize].is_terminal() {
+            // worker deleted between fetch and start: requeue on the
+            // pod's own pool (its payload outlives deletion)
+            if let Some(pool) = k.pods[pod.0 as usize].pool_id() {
+                self.pools.broker.nack_requeue(pool, task, k.tenant_of(task));
+                self.pools.wake_idle_worker(k, pool);
+            }
+            return;
+        }
+        // chaos/speculation: the task already completed elsewhere (its
+        // other copy won, or it was requeued after a fault and then
+        // finished) — drop the stale delivery
+        if k.engine.state(task) == TaskState::Done {
+            if let Some(pool) = k.pods[pod.0 as usize].pool_id() {
+                self.advance_worker(k, pod, pool);
+            }
+            return;
+        }
+        self.begin_task(k, pod, task);
+    }
+
+    /// The current task's compute finished: account it, propagate
+    /// readiness (or hand off to the stage-out cycle), and advance the
+    /// pod to its next unit of work.
+    pub fn task_done(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        if k.pods[pod.0 as usize].is_terminal() || k.current_task[pod.0 as usize] != Some(task) {
+            return; // pod was killed; the task was requeued/recreated
+        }
+        if k.stale_node_event(pod) {
+            return; // completion from a node incarnation that is gone
+        }
+        let now = k.now();
+        let ttype = k.engine.dag().tasks[task.0 as usize].ttype;
+        // execution time of this run, net of the fixed executor overhead
+        // (same definition as the waste accounting, so goodput's numerator
+        // and denominator are commensurate)
+        let exec_ms = k.run_exec_ms(pod);
+        // speculative duplicate that lost the race: the task already
+        // completed in its other copy (or, with the data plane, its twin's
+        // stage-out is already in flight) — the whole run is wasted work,
+        // and the worker simply moves on
+        if k.engine.state(task) == TaskState::Done
+            || (k.data.is_some() && k.task_out_pending[task.0 as usize])
+        {
+            k.current_task[pod.0 as usize] = None;
+            k.pod_io[pod.0 as usize] = IoPhase::Idle;
+            k.record_running(ttype, -1);
+            k.task_running[task.0 as usize] -= 1;
+            k.chaos_stats.add_waste(k.tenant_of(task).idx(), exec_ms);
+            k.metrics.inc("speculative_losses", 1);
+            if let Some(pool) = k.pods[pod.0 as usize].pool_id() {
+                self.advance_worker(k, pod, pool);
+            }
+            return;
+        }
+        if k.data.is_some() {
+            // the execution is done but the output write is not:
+            // successors wait for the stage-out (write-through shared
+            // storage). `current_task` stays set so a kill during the
+            // write re-runs the task — and ALL success accounting (useful
+            // work, completed-by-type, compute time) waits for the write
+            // to land in finish_task, or the re-run would be counted
+            // twice.
+            k.record_running(ttype, -1);
+            k.task_running[task.0 as usize] -= 1;
+            k.pod_exec_ms[pod.0 as usize] = exec_ms;
+            self.begin_stage_out_for(k, pod, task);
+            return;
+        }
+        if k.chaos.is_some() {
+            k.chaos_stats.useful_ms += exec_ms;
+        }
+        k.current_task[pod.0 as usize] = None;
+        k.pod_io[pod.0 as usize] = IoPhase::Idle;
+        k.trace.finished(task, now);
+        k.record_running(ttype, -1);
+        k.task_running[task.0 as usize] -= 1;
+        k.completed_by_type[ttype.0 as usize] += 1;
+        // readiness propagation through the reusable scratch buffer
+        let mut ready = std::mem::take(&mut k.ready_buf);
+        ready.clear();
+        k.engine.complete_into(task, &mut ready);
+        self.dispatch_ready(k, &ready);
+        k.ready_buf = ready;
+        // fleet: per-instance completion + admission-slot release
+        if k.fleet.is_some() {
+            self.instance_task_done(k, task);
+        }
+        // advance the pod
+        match k.pods[pod.0 as usize].pool_id() {
+            None => {
+                k.batch_queue[pod.0 as usize].pop_front();
+                if let Some(&next) = k.batch_queue[pod.0 as usize].front() {
+                    k.start_task(pod, next);
+                } else {
+                    self.terminate_pod(k, pod, PodPhase::Succeeded);
+                }
+            }
+            Some(pool) => self.advance_worker(k, pod, pool),
+        }
+    }
+
+    /// A failed task's retry back-off expired: re-enter it, unless a
+    /// speculative copy landed it (or started) in the meantime.
+    pub fn retry_task(&mut self, k: &mut Kernel, task: TaskId) {
+        if k.engine.state(task) == TaskState::Done {
+            return; // a speculative copy landed it in the meantime
+        }
+        if k.task_running[task.0 as usize] > 0 {
+            return; // a copy started while the back-off ran; it owns the work
+        }
+        let ttype = k.engine.dag().tasks[task.0 as usize].ttype;
+        match self.pools.pool_of_type[ttype.0 as usize] {
+            Some(pool) => {
+                let tenant = k.tenant_of(task);
+                self.pools.publish(k, pool, task, tenant);
+            }
+            // defensive: a task of an unpooled type re-enters as a
+            // single-task job
+            None => self.jobs.create_job(k, vec![task]),
+        }
+    }
+
+    /// Straggler watch fired: if the task is still running in this pod,
+    /// launch its speculative copy (at most one per task).
+    pub fn speculate(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        if k.pods[pod.0 as usize].is_terminal()
+            || k.current_task[pod.0 as usize] != Some(task)
+            || k.engine.state(task) == TaskState::Done
+            || k.spec_launched[task.0 as usize]
+        {
+            return;
+        }
+        k.spec_launched[task.0 as usize] = true;
+        k.chaos_stats.speculations += 1;
+        k.metrics.inc("speculative_copies", 1);
+        let ttype = k.engine.dag().tasks[task.0 as usize].ttype;
+        if let Some(pool) = self.pools.pool_of_type[ttype.0 as usize] {
+            let tenant = k.tenant_of(task);
+            self.pools.publish(k, pool, task, tenant);
+        }
+    }
+}
+
+/// Lifecycle hooks the kernel event loop dispatches into. One module per
+/// execution model implements this trait; the default bodies encode the
+/// shared semantics over [`StrategyState`], so a model only overrides
+/// what it actually changes (its name, its construction, its recovery
+/// default).
+///
+/// Scope: these hooks are the **kernel -> strategy** boundary — they fire
+/// once per calendar event. Strategy-internal chains (e.g. readiness
+/// propagation inside `task_done`, instance admission) call the
+/// [`StrategyState`] mechanics directly, so a model that wants to change
+/// *routing itself* should do it in its pool tables / batcher
+/// configuration (the single routing point is
+/// [`StrategyState::dispatch_ready`]), not by overriding `on_ready`
+/// alone.
+pub trait ExecStrategy {
+    /// Model name as reported in results (matches [`ExecModel::name`]).
+    fn name(&self) -> &'static str;
+    fn state(&mut self) -> &mut StrategyState;
+    fn state_ref(&self) -> &StrategyState;
+    /// The recovery policy used when the chaos spec does not pin one.
+    fn default_recovery(&self) -> RecoveryPolicy;
+
+    /// Newly-ready tasks (readiness propagation, instance admission, the
+    /// t=0 roots).
+    fn on_ready(&mut self, k: &mut Kernel, ready: &[TaskId]) {
+        self.state().dispatch_ready(k, ready);
+    }
+    /// A pod's container started.
+    fn on_pod_started(&mut self, k: &mut Kernel, pod: PodId) {
+        self.state().pod_started(k, pod);
+    }
+    /// A running worker holds no task (just started, or completed one):
+    /// fetch the next message or park it idle.
+    fn on_pod_idle(&mut self, k: &mut Kernel, pod: PodId, pool: crate::broker::PoolId) {
+        let st = self.state();
+        st.pools.fetch_or_idle(k, pod, pool);
+    }
+    /// A worker's queue fetch completed.
+    fn on_worker_fetched(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        self.state().worker_fetched(k, pod, task);
+    }
+    /// A task's compute finished.
+    fn on_task_done(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        self.state().task_done(k, pod, task);
+    }
+    /// A clustering flush timer fired.
+    fn on_flush_timer(&mut self, k: &mut Kernel, type_idx: u16, deadline: SimTime) {
+        self.state().jobs.flush_timer(k, type_idx, deadline);
+    }
+    /// Autoscaler poll.
+    fn on_scale(&mut self, k: &mut Kernel) {
+        self.state().autoscale(k);
+    }
+    /// A failed pool task's retry back-off expired.
+    fn on_retry_task(&mut self, k: &mut Kernel, task: TaskId) {
+        self.state().retry_task(k, task);
+    }
+    /// A failed job batch's retry back-off expired.
+    fn on_retry_batch(&mut self, k: &mut Kernel, tasks: Vec<TaskId>) {
+        self.state().jobs.create_job(k, tasks);
+    }
+    /// Straggler watch fired.
+    fn on_speculate(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        self.state().speculate(k, pod, task);
+    }
+    /// A node went down (scheduled event or chaos fault); recover every
+    /// pod that was on it.
+    fn on_node_down(&mut self, k: &mut Kernel, node: usize, chaos: bool) {
+        self.state().fail_node_inner(k, node, chaos);
+    }
+    /// A timed chaos injector struck.
+    fn on_fault(&mut self, k: &mut Kernel, proc_idx: usize, node: usize) {
+        self.state().apply_fault(k, proc_idx, node);
+    }
+    /// Capacity or cordon state changed: give waiting pods another pass.
+    fn on_capacity_changed(&mut self, k: &mut Kernel) {
+        self.state().run_scheduler(k);
+    }
+}
+
+/// Enum-backed strategy dispatch: static, allocation-free, and the single
+/// place the execution layer matches on [`ExecModel`].
+pub enum Strategy {
+    Job(JobStrategy),
+    Clustered(ClusteredStrategy),
+    Pools(PoolsStrategy),
+    Generic(GenericStrategy),
+}
+
+impl Strategy {
+    /// Instantiate the strategy for a model: declare its pools, configure
+    /// its batcher, and register its per-pool gauges.
+    pub fn build(
+        model: &ExecModel,
+        engine: &Engine,
+        cfg: &SimConfig,
+        metrics: &mut Registry,
+    ) -> Strategy {
+        match model {
+            ExecModel::JobBased => Strategy::Job(JobStrategy::build(engine)),
+            ExecModel::Clustered(c) => {
+                Strategy::Clustered(ClusteredStrategy::build(c.clone(), engine))
+            }
+            ExecModel::WorkerPools { pooled_types } => {
+                Strategy::Pools(PoolsStrategy::build(pooled_types, engine, cfg, metrics))
+            }
+            ExecModel::GenericPool => Strategy::Generic(GenericStrategy::build(engine, cfg, metrics)),
+        }
+    }
+}
+
+macro_rules! delegate {
+    ($self:ident, $inner:ident => $body:expr) => {
+        match $self {
+            Strategy::Job($inner) => $body,
+            Strategy::Clustered($inner) => $body,
+            Strategy::Pools($inner) => $body,
+            Strategy::Generic($inner) => $body,
+        }
+    };
+}
+
+impl ExecStrategy for Strategy {
+    fn name(&self) -> &'static str {
+        delegate!(self, s => s.name())
+    }
+    fn state(&mut self) -> &mut StrategyState {
+        delegate!(self, s => s.state())
+    }
+    fn state_ref(&self) -> &StrategyState {
+        delegate!(self, s => s.state_ref())
+    }
+    fn default_recovery(&self) -> RecoveryPolicy {
+        delegate!(self, s => s.default_recovery())
+    }
+    fn on_ready(&mut self, k: &mut Kernel, ready: &[TaskId]) {
+        delegate!(self, s => s.on_ready(k, ready))
+    }
+    fn on_pod_started(&mut self, k: &mut Kernel, pod: PodId) {
+        delegate!(self, s => s.on_pod_started(k, pod))
+    }
+    fn on_pod_idle(&mut self, k: &mut Kernel, pod: PodId, pool: crate::broker::PoolId) {
+        delegate!(self, s => s.on_pod_idle(k, pod, pool))
+    }
+    fn on_worker_fetched(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        delegate!(self, s => s.on_worker_fetched(k, pod, task))
+    }
+    fn on_task_done(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        delegate!(self, s => s.on_task_done(k, pod, task))
+    }
+    fn on_flush_timer(&mut self, k: &mut Kernel, type_idx: u16, deadline: SimTime) {
+        delegate!(self, s => s.on_flush_timer(k, type_idx, deadline))
+    }
+    fn on_scale(&mut self, k: &mut Kernel) {
+        delegate!(self, s => s.on_scale(k))
+    }
+    fn on_retry_task(&mut self, k: &mut Kernel, task: TaskId) {
+        delegate!(self, s => s.on_retry_task(k, task))
+    }
+    fn on_retry_batch(&mut self, k: &mut Kernel, tasks: Vec<TaskId>) {
+        delegate!(self, s => s.on_retry_batch(k, tasks))
+    }
+    fn on_speculate(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        delegate!(self, s => s.on_speculate(k, pod, task))
+    }
+    fn on_node_down(&mut self, k: &mut Kernel, node: usize, chaos: bool) {
+        delegate!(self, s => s.on_node_down(k, node, chaos))
+    }
+    fn on_fault(&mut self, k: &mut Kernel, proc_idx: usize, node: usize) {
+        delegate!(self, s => s.on_fault(k, proc_idx, node))
+    }
+    fn on_capacity_changed(&mut self, k: &mut Kernel) {
+        delegate!(self, s => s.on_capacity_changed(k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_names() {
+        assert_eq!(ExecModel::JobBased.name(), "job-based");
+        assert_eq!(
+            ExecModel::Clustered(ClusteringConfig::paper_default()).name(),
+            "job-clustered"
+        );
+        assert_eq!(ExecModel::paper_hybrid_pools().name(), "worker-pools");
+        assert_eq!(ExecModel::GenericPool.name(), "generic-pool");
+    }
+
+    #[test]
+    fn validate_rejects_empty_and_duplicate_pool_sets() {
+        assert_eq!(
+            ExecModel::WorkerPools {
+                pooled_types: vec![]
+            }
+            .validate(),
+            Err(ConfigError::EmptyPoolSet)
+        );
+        assert_eq!(
+            ExecModel::WorkerPools {
+                pooled_types: vec!["a".into(), "a".into()]
+            }
+            .validate(),
+            Err(ConfigError::DuplicatePooledType("a".into()))
+        );
+        assert!(ExecModel::paper_hybrid_pools().validate().is_ok());
+        assert!(ExecModel::JobBased.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_zero_cluster_size() {
+        let mut c = ClusteringConfig::paper_default();
+        c.rules[0].size = 0;
+        assert_eq!(
+            ExecModel::Clustered(c).validate(),
+            Err(ConfigError::ZeroClusterSize)
+        );
+    }
+
+    #[test]
+    fn strategy_recovery_defaults_differ_on_speculation_only() {
+        use crate::workflow::montage::{generate, MontageConfig};
+        let dag = generate(&MontageConfig {
+            grid_w: 3,
+            grid_h: 3,
+            diagonals: true,
+            seed: 1,
+        });
+        let cfg = SimConfig::with_nodes(3);
+        let mut metrics = Registry::new();
+        let (engine, _) = Engine::new(dag);
+        let job = Strategy::build(&ExecModel::JobBased, &engine, &cfg, &mut metrics);
+        let pools = Strategy::build(
+            &ExecModel::paper_hybrid_pools(),
+            &engine,
+            &cfg,
+            &mut metrics,
+        );
+        let generic = Strategy::build(&ExecModel::GenericPool, &engine, &cfg, &mut metrics);
+        assert!(!job.default_recovery().speculative);
+        assert!(pools.default_recovery().speculative);
+        assert!(generic.default_recovery().speculative);
+        assert_eq!(
+            job.default_recovery().retry_initial_ms,
+            pools.default_recovery().retry_initial_ms
+        );
+        assert_eq!(
+            job.default_recovery().checkpoint_frac,
+            pools.default_recovery().checkpoint_frac
+        );
+        assert!(job.default_recovery().blacklist_after > 0);
+    }
+}

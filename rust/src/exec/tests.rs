@@ -1,0 +1,643 @@
+//! Unit tests for the execution subsystem (moved intact from the old
+//! `models/driver.rs` god-object — same configurations, same assertions,
+//! so the decomposition is checked against the pre-refactor behavior).
+
+use super::{run, run_fleet, ExecModel, SimConfig};
+use crate::engine::clustering::ClusteringConfig;
+use crate::fleet::FleetPlan;
+use crate::sim::SimTime;
+use crate::workflow::dag::Dag;
+use crate::workflow::montage::{generate, MontageConfig};
+use crate::workflow::task::TaskId;
+
+fn small_dag() -> Dag {
+    generate(&MontageConfig {
+        grid_w: 3,
+        grid_h: 3,
+        diagonals: true,
+        seed: 1,
+    })
+}
+
+#[test]
+fn job_based_completes_small_workflow() {
+    let res = run(small_dag(), ExecModel::JobBased, SimConfig::with_nodes(4));
+    assert!(res.makespan > SimTime::ZERO);
+    // every task got its own pod
+    assert_eq!(res.pods_created as usize, small_dag().len());
+    assert!(res.avg_running_tasks > 0.0);
+    assert!(res.sim_events > 0);
+}
+
+#[test]
+fn clustered_uses_fewer_pods() {
+    let dag = small_dag();
+    let n = dag.len();
+    let res = run(
+        dag,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        SimConfig::with_nodes(4),
+    );
+    assert!(
+        (res.pods_created as usize) < n,
+        "clustering must reduce pod count: {} vs {n}",
+        res.pods_created
+    );
+}
+
+#[test]
+fn worker_pools_completes() {
+    let res = run(
+        small_dag(),
+        ExecModel::paper_hybrid_pools(),
+        SimConfig::with_nodes(4),
+    );
+    assert!(res.makespan > SimTime::ZERO);
+    assert!(res.avg_running_tasks > 0.0);
+}
+
+#[test]
+fn all_tasks_traced_exactly_once() {
+    for model in [
+        ExecModel::JobBased,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ExecModel::paper_hybrid_pools(),
+    ] {
+        let dag = small_dag();
+        let n = dag.len();
+        let res = run(dag, model, SimConfig::with_nodes(4));
+        assert_eq!(res.trace.records.len(), n);
+        for r in &res.trace.records {
+            assert!(r.started_at.is_some(), "{:?} never started", r.task);
+            assert!(r.finished_at.is_some(), "{:?} never finished", r.task);
+            assert!(r.started_at.unwrap() >= r.ready_at);
+            assert!(r.finished_at.unwrap() > r.started_at.unwrap());
+        }
+    }
+}
+
+#[test]
+fn dependencies_respected_in_trace() {
+    let dag = small_dag();
+    let succs: Vec<(TaskId, Vec<TaskId>)> = (0..dag.len())
+        .map(|i| {
+            let t = TaskId(i as u32);
+            (t, dag.successors(t).to_vec())
+        })
+        .collect();
+    let res = run(dag, ExecModel::JobBased, SimConfig::with_nodes(4));
+    for (t, ss) in succs {
+        let t_fin = res.trace.record(t).unwrap().finished_at.unwrap();
+        for s in ss {
+            let s_start = res.trace.record(s).unwrap().started_at.unwrap();
+            assert!(
+                s_start >= t_fin,
+                "dependency violated: {s:?} started before {t:?} finished"
+            );
+        }
+    }
+}
+
+#[test]
+fn pools_beat_plain_jobs_on_parallel_stage_heavy_workflow() {
+    let mk = || {
+        generate(&MontageConfig {
+            grid_w: 6,
+            grid_h: 6,
+            diagonals: true,
+            seed: 2,
+        })
+    };
+    let jobs = run(mk(), ExecModel::JobBased, SimConfig::with_nodes(4));
+    let pools = run(mk(), ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4));
+    assert!(
+        pools.makespan < jobs.makespan,
+        "pools {} vs jobs {}",
+        pools.makespan,
+        jobs.makespan
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = run(small_dag(), ExecModel::JobBased, SimConfig::with_nodes(4));
+    let b = run(small_dag(), ExecModel::JobBased, SimConfig::with_nodes(4));
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.pods_created, b.pods_created);
+    assert_eq!(a.api_requests, b.api_requests);
+}
+
+#[test]
+fn generic_pool_completes_but_wastes_resources() {
+    // wide parallel stages: the generic pod template (max requests over
+    // all types = mAdd's 2000m) halves the worker slots (§3.3)
+    let mk = || {
+        generate(&MontageConfig {
+            grid_w: 10,
+            grid_h: 10,
+            diagonals: true,
+            seed: 4,
+        })
+    };
+    let dag = mk();
+    let n = dag.len();
+    let generic = run(dag, ExecModel::GenericPool, SimConfig::with_nodes(4));
+    assert_eq!(generic.trace.records.len(), n);
+    let typed = run(
+        mk(),
+        ExecModel::WorkerPools {
+            pooled_types: crate::workflow::montage::TYPE_NAMES
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        },
+        SimConfig::with_nodes(4),
+    );
+    assert!(
+        typed.makespan < generic.makespan,
+        "typed {} vs generic {}",
+        typed.makespan,
+        generic.makespan
+    );
+}
+
+#[test]
+fn job_throttle_cuts_backoffs_and_makespan() {
+    // §5 future work: "improvement of the job queuing mechanism in the
+    // job-based model to reduce the number of requested Pods, thus
+    // mitigating the main flaw of the model" — confirmed.
+    let mk = || {
+        generate(&MontageConfig {
+            grid_w: 8,
+            grid_h: 8,
+            diagonals: true,
+            seed: 4,
+        })
+    };
+    let mut throttled_cfg = SimConfig::with_nodes(4);
+    throttled_cfg.max_pending_pods = Some(8);
+    let throttled = run(mk(), ExecModel::JobBased, throttled_cfg);
+    let unthrottled = run(mk(), ExecModel::JobBased, SimConfig::with_nodes(4));
+    assert_eq!(throttled.trace.records.len(), mk().len());
+    assert!(
+        throttled.sched_backoffs < unthrottled.sched_backoffs / 2,
+        "throttle should slash back-offs: {} vs {}",
+        throttled.sched_backoffs,
+        unthrottled.sched_backoffs
+    );
+    assert!(
+        throttled.makespan <= unthrottled.makespan,
+        "throttle should not slow the run: {} vs {}",
+        throttled.makespan,
+        unthrottled.makespan
+    );
+    assert!(throttled.metrics.counter("throttled_batches") > 0);
+}
+
+#[test]
+fn vpa_rightsizing_speeds_up_pools() {
+    // §5 future work: with VPA, workers request observed usage
+    // (mDiffFit 300m vs 500m requested) -> more fit per node
+    let mk = || {
+        generate(&MontageConfig {
+            grid_w: 14,
+            grid_h: 14,
+            diagonals: true,
+            seed: 6,
+        })
+    };
+    let mut vpa_cfg = SimConfig::with_nodes(4);
+    vpa_cfg.autoscale.vpa = true;
+    let with_vpa = run(mk(), ExecModel::paper_hybrid_pools(), vpa_cfg);
+    let without = run(mk(), ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4));
+    assert_eq!(with_vpa.trace.records.len(), mk().len());
+    assert!(
+        with_vpa.makespan < without.makespan,
+        "VPA {} vs {}",
+        with_vpa.makespan,
+        without.makespan
+    );
+    // capacity still never exceeded
+    let cap = 4.0 * 4000.0;
+    for &(_, v) in with_vpa.metrics.gauge("cpu_allocated_m").unwrap().points() {
+        assert!(v <= cap + 1e-9);
+    }
+}
+
+#[test]
+fn node_failure_recovers_all_tasks() {
+    for model in [
+        ExecModel::JobBased,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ExecModel::paper_hybrid_pools(),
+    ] {
+        let dag = small_dag();
+        let n = dag.len();
+        let mut cfg = SimConfig::with_nodes(4);
+        // node 0 dies mid-run, comes back much later
+        cfg.node_events = vec![(30_000, 0, false), (200_000, 0, true)];
+        let res = run(dag, model.clone(), cfg);
+        assert_eq!(res.trace.records.len(), n, "{}", model.name());
+        assert!(res.metrics.counter("node_failures") == 1);
+        for r in &res.trace.records {
+            assert!(r.finished_at.is_some(), "{:?} lost", r.task);
+        }
+    }
+}
+
+fn two_instance_plan(n_a: u32, n_b: u32, arrival_b_ms: u64, cap: Option<usize>) -> FleetPlan {
+    FleetPlan {
+        instances: vec![
+            crate::fleet::InstanceSpec {
+                tenant: 0,
+                arrival_ms: 0,
+                first_task: 0,
+                n_tasks: n_a,
+            },
+            crate::fleet::InstanceSpec {
+                tenant: 1,
+                arrival_ms: arrival_b_ms,
+                first_task: n_a,
+                n_tasks: n_b,
+            },
+        ],
+        tenant_weights: vec![1, 1],
+        max_in_flight: cap,
+    }
+}
+
+#[test]
+fn fleet_two_instances_complete_concurrently() {
+    let (a, b) = (small_dag(), small_dag());
+    let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+    let union = Dag::disjoint_union(&[a, b]);
+    let plan = two_instance_plan(n_a, n_b, 30_000, None);
+    let (res, outcomes) = run_fleet(
+        union,
+        ExecModel::paper_hybrid_pools(),
+        SimConfig::with_nodes(4),
+        &plan,
+    );
+    assert_eq!(res.trace.records.len(), (n_a + n_b) as usize);
+    assert_eq!(outcomes.len(), 2);
+    for o in &outcomes {
+        assert!(o.admitted >= o.arrival, "admitted before arrival");
+        assert!(o.finished > o.admitted, "finished before admitted");
+    }
+    // no cap: admission is immediate at arrival
+    assert_eq!(outcomes[0].admitted, SimTime::ZERO);
+    assert_eq!(outcomes[1].admitted, SimTime::from_millis(30_000));
+    // the second instance overlaps the first (shared cluster, not serial)
+    assert!(outcomes[1].admitted < outcomes[0].finished);
+}
+
+#[test]
+fn fleet_admission_cap_serializes_instances() {
+    let (a, b) = (small_dag(), small_dag());
+    let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+    let union = Dag::disjoint_union(&[a, b]);
+    let plan = two_instance_plan(n_a, n_b, 30_000, Some(1));
+    let (res, outcomes) = run_fleet(
+        union,
+        ExecModel::paper_hybrid_pools(),
+        SimConfig::with_nodes(4),
+        &plan,
+    );
+    assert_eq!(res.trace.records.len(), (n_a + n_b) as usize);
+    // cap 1: the second instance waits for the first to finish
+    assert!(outcomes[1].admitted >= outcomes[0].finished);
+    assert!(outcomes[1].admitted > outcomes[1].arrival, "queued at the cap");
+    assert_eq!(res.metrics.counter("instances_admitted"), 2);
+    assert_eq!(res.metrics.counter("instances_completed"), 2);
+}
+
+#[test]
+fn fleet_works_under_every_model() {
+    for model in [
+        ExecModel::JobBased,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ExecModel::paper_hybrid_pools(),
+        ExecModel::GenericPool,
+    ] {
+        let (a, b) = (small_dag(), small_dag());
+        let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+        let union = Dag::disjoint_union(&[a, b]);
+        let plan = two_instance_plan(n_a, n_b, 10_000, None);
+        let (res, outcomes) = run_fleet(union, model.clone(), SimConfig::with_nodes(4), &plan);
+        assert_eq!(
+            res.trace.records.len(),
+            (n_a + n_b) as usize,
+            "{}",
+            model.name()
+        );
+        assert!(outcomes.iter().all(|o| o.finished > o.admitted));
+    }
+}
+
+#[test]
+fn chaos_every_model_completes_under_heavy_churn() {
+    // spot reclaims, crashes, flaky pod starts and stragglers all at
+    // once: every model must still finish every task exactly once,
+    // and the accounting must show the faults actually happened.
+    for model in [
+        ExecModel::JobBased,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ExecModel::paper_hybrid_pools(),
+        ExecModel::GenericPool,
+    ] {
+        let dag = generate(&MontageConfig {
+            grid_w: 5,
+            grid_h: 5,
+            diagonals: true,
+            seed: 3,
+        });
+        let n = dag.len();
+        let mut cfg = SimConfig::with_nodes(4);
+        cfg.seed = 9;
+        cfg.chaos =
+            crate::chaos::ChaosConfig::parse_spec("spot:4,crash:2,pod:0.25,straggler:0.3")
+                .unwrap();
+        let res = run(dag, model.clone(), cfg);
+        let name = model.name();
+        assert_eq!(res.trace.records.len(), n, "{name}: records");
+        for r in &res.trace.records {
+            assert!(r.finished_at.is_some(), "{name}: {:?} lost", r.task);
+        }
+        assert!(res.chaos.enabled, "{name}");
+        assert!(res.chaos.faults_total() > 0, "{name}: no faults injected");
+        assert!(res.chaos.wasted_ms > 0, "{name}: no waste accounted");
+        assert!(res.chaos.goodput() < 1.0, "{name}: goodput must dip");
+        assert!(res.chaos.goodput() > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn chaos_spot_churn_inflates_makespan() {
+    let mk = || {
+        generate(&MontageConfig {
+            grid_w: 6,
+            grid_h: 6,
+            diagonals: true,
+            seed: 2,
+        })
+    };
+    let healthy = run(mk(), ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4));
+    let mut cfg = SimConfig::with_nodes(4);
+    cfg.seed = 5;
+    cfg.chaos = crate::chaos::ChaosConfig::parse_spec("spot:6,crash:3").unwrap();
+    let churned = run(mk(), ExecModel::paper_hybrid_pools(), cfg);
+    assert!(
+        churned.makespan > healthy.makespan,
+        "churn {} vs healthy {}",
+        churned.makespan,
+        healthy.makespan
+    );
+    assert!(healthy.chaos.wasted_ms == 0 && !healthy.chaos.enabled);
+}
+
+#[test]
+fn legacy_pod_failure_prob_is_migrated_onto_the_chaos_engine() {
+    // the deprecated knob must keep injecting failures — now routed
+    // through the PodFailure injector with waste + retry accounting
+    let dag = small_dag();
+    let n = dag.len();
+    let mut cfg = SimConfig::with_nodes(4);
+    cfg.pod_failure_prob = 0.3;
+    cfg.seed = 13;
+    let res = run(dag, ExecModel::JobBased, cfg);
+    assert_eq!(res.trace.records.len(), n);
+    assert!(res.metrics.counter("pod_failures") > 0);
+    assert!(res.chaos.enabled, "legacy knob must enable the subsystem");
+    assert_eq!(
+        res.chaos.pod_failures,
+        res.metrics.counter("pod_failures"),
+        "chaos accounting mirrors the metric"
+    );
+    assert!(res.chaos.retries > 0, "failed batches are retried");
+    assert!(res.chaos.wasted_ms > 0, "burned pod starts are waste");
+}
+
+#[test]
+fn fleet_under_chaos_drains_and_stamps_every_instance() {
+    // regression (fleet accounting under retries): per-instance
+    // outstanding counters must not drift when tasks fail and re-enter
+    // the queue — a faulty fleet run still drains, and every instance
+    // gets admission + completion stamps. (run_fleet panics on any
+    // unstamped instance.)
+    let (a, b) = (small_dag(), small_dag());
+    let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+    let union = Dag::disjoint_union(&[a, b]);
+    let plan = two_instance_plan(n_a, n_b, 20_000, None);
+    let mut cfg = SimConfig::with_nodes(4);
+    cfg.seed = 21;
+    cfg.chaos =
+        crate::chaos::ChaosConfig::parse_spec("pod:0.25,crash:6,straggler:0.5").unwrap();
+    let (res, outcomes) = run_fleet(union, ExecModel::paper_hybrid_pools(), cfg, &plan);
+    assert_eq!(outcomes.len(), 2);
+    for o in &outcomes {
+        assert!(o.finished > o.admitted);
+    }
+    assert_eq!(res.metrics.counter("instances_completed"), 2);
+    assert_eq!(res.trace.records.len(), (n_a + n_b) as usize);
+    assert!(res.chaos.faults_total() > 0, "churn must actually occur");
+    // per-tenant resilience lanes are sized; task-attributable waste
+    // lands in them, shared worker-crash waste only in the total
+    assert_eq!(res.chaos.wasted_ms_by_tenant.len(), 2);
+    assert!(
+        res.chaos.wasted_ms_by_tenant.iter().sum::<u64>() <= res.chaos.wasted_ms,
+        "lanes cannot exceed the total"
+    );
+}
+
+fn data_cfg(nodes: usize, spec: &str) -> SimConfig {
+    let mut cfg = SimConfig::with_nodes(nodes);
+    cfg.data = Some(crate::data::DataConfig::parse_spec(spec).unwrap());
+    cfg
+}
+
+#[test]
+fn data_plane_every_model_completes_and_accounts_bytes() {
+    for model in [
+        ExecModel::JobBased,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ExecModel::paper_hybrid_pools(),
+        ExecModel::GenericPool,
+    ] {
+        let dag = small_dag();
+        let n = dag.len();
+        let res = run(dag, model.clone(), data_cfg(4, "nfs:1,cache:4"));
+        let name = model.name();
+        assert_eq!(res.trace.records.len(), n, "{name}: records");
+        for r in &res.trace.records {
+            assert!(r.finished_at.is_some(), "{name}: {:?} lost", r.task);
+            assert!(r.started_at.unwrap() >= r.ready_at, "{name}");
+            assert!(r.finished_at.unwrap() > r.started_at.unwrap(), "{name}");
+        }
+        assert!(res.data.enabled, "{name}");
+        assert!(res.data.bytes_in > 0, "{name}: no stage-in traffic");
+        assert!(res.data.bytes_out > 0, "{name}: no stage-out traffic");
+        assert!(res.data.transfers > 0, "{name}");
+        assert!(res.data.compute_ms > 0, "{name}");
+        assert!(res.data.io_ms > 0, "{name}: transfers must take time");
+        // every task stages in exactly once on a healthy run
+        assert_eq!(res.data.stage_ins, n, "{name}");
+    }
+}
+
+#[test]
+fn data_plane_slows_the_run_and_the_default_stays_inert() {
+    let base = SimConfig::with_nodes(4);
+    assert!(base.data.is_none(), "data plane must be opt-in");
+    let plain = run(small_dag(), ExecModel::paper_hybrid_pools(), base);
+    assert!(!plain.data.enabled);
+    assert_eq!(plain.data.bytes_in, 0);
+    // a constrained shared link must cost wall-clock time
+    let with_data = run(
+        small_dag(),
+        ExecModel::paper_hybrid_pools(),
+        data_cfg(4, "nfs:0.5,cache:4"),
+    );
+    assert!(
+        with_data.makespan > plain.makespan,
+        "I/O pressure must show up: {} vs {}",
+        with_data.makespan,
+        plain.makespan
+    );
+}
+
+#[test]
+fn warm_pool_caches_beat_cold_job_pods_on_bytes_and_stage_in() {
+    // the ISSUE's acceptance asymmetry: long-lived workers keep their
+    // node-local caches across tasks, job pods always start cold — at
+    // constrained NFS bandwidth pools move fewer bytes and collapse
+    // the stage-in tail.
+    let mk = || {
+        generate(&MontageConfig {
+            grid_w: 6,
+            grid_h: 6,
+            diagonals: true,
+            seed: 2,
+        })
+    };
+    let jobs = run(mk(), ExecModel::JobBased, data_cfg(4, "nfs:0.5,cache:8"));
+    let pools = run(
+        mk(),
+        ExecModel::paper_hybrid_pools(),
+        data_cfg(4, "nfs:0.5,cache:8"),
+    );
+    assert!(
+        pools.data.bytes_in < jobs.data.bytes_in,
+        "pools {} vs jobs {} bytes in",
+        pools.data.bytes_in,
+        jobs.data.bytes_in
+    );
+    assert!(
+        pools.data.cache_hit_ratio() > jobs.data.cache_hit_ratio(),
+        "pools {:.3} vs jobs {:.3} hit ratio",
+        pools.data.cache_hit_ratio(),
+        jobs.data.cache_hit_ratio()
+    );
+    assert!(
+        pools.data.stage_in_p95_s <= jobs.data.stage_in_p95_s,
+        "pools {:.2}s vs jobs {:.2}s stage-in p95",
+        pools.data.stage_in_p95_s,
+        jobs.data.stage_in_p95_s
+    );
+}
+
+#[test]
+fn locality_scheduling_completes_and_reproduces() {
+    // clustered batches are the placement-sensitive case: producers
+    // may still be alive when consumers schedule
+    let mk = || {
+        let mut cfg = data_cfg(4, "nfs:1,cache:8,locality:on");
+        cfg.seed = 3;
+        run(
+            generate(&MontageConfig {
+                grid_w: 5,
+                grid_h: 5,
+                diagonals: true,
+                seed: 3,
+            }),
+            ExecModel::Clustered(ClusteringConfig::paper_default()),
+            cfg,
+        )
+    };
+    let (a, b) = (mk(), mk());
+    assert_eq!(a.trace.records.len(), b.trace.records.len());
+    assert_eq!(a.makespan, b.makespan, "locality run must reproduce");
+    assert_eq!(a.data.bytes_in, b.data.bytes_in);
+    assert_eq!(a.sched_binds, b.sched_binds);
+    for r in &a.trace.records {
+        assert!(r.finished_at.is_some(), "{:?} lost under locality", r.task);
+    }
+}
+
+#[test]
+fn data_plane_survives_chaos_churn() {
+    // node crashes kill in-flight transfers and wipe node caches
+    // (crash-loses-cache); every task must still complete exactly once
+    for model in [ExecModel::paper_hybrid_pools(), ExecModel::JobBased] {
+        let dag = generate(&MontageConfig {
+            grid_w: 5,
+            grid_h: 5,
+            diagonals: true,
+            seed: 4,
+        });
+        let n = dag.len();
+        let mut cfg = data_cfg(4, "nfs:1,cache:4");
+        cfg.seed = 9;
+        cfg.chaos = crate::chaos::ChaosConfig::parse_spec("crash:4,pod:0.15").unwrap();
+        let res = run(dag, model.clone(), cfg);
+        let name = model.name();
+        assert_eq!(res.trace.records.len(), n, "{name}");
+        for r in &res.trace.records {
+            assert!(r.finished_at.is_some(), "{name}: {:?} lost", r.task);
+        }
+        assert!(res.chaos.faults_total() > 0, "{name}: churn must occur");
+        assert!(res.data.bytes_in > 0, "{name}");
+        // interrupted stage-ins re-run, so there can be more stage-in
+        // samples than tasks — never fewer
+        assert!(res.data.stage_ins >= n, "{name}");
+    }
+}
+
+#[test]
+fn fleet_with_data_fills_tenant_byte_lanes() {
+    let (a, b) = (small_dag(), small_dag());
+    let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+    let union = Dag::disjoint_union(&[a, b]);
+    let plan = two_instance_plan(n_a, n_b, 20_000, None);
+    let (res, outcomes) = run_fleet(
+        union,
+        ExecModel::paper_hybrid_pools(),
+        data_cfg(4, "nfs:1,cache:4"),
+        &plan,
+    );
+    assert_eq!(outcomes.len(), 2);
+    for o in &outcomes {
+        assert!(o.finished > o.admitted);
+    }
+    assert_eq!(res.data.bytes_by_tenant.len(), 2);
+    assert!(res.data.bytes_by_tenant.iter().all(|&b| b > 0));
+    // every moved byte belongs to some tenant's instance
+    assert_eq!(
+        res.data.bytes_by_tenant.iter().sum::<u64>(),
+        res.data.bytes_in + res.data.bytes_out
+    );
+}
+
+#[test]
+fn nodes_never_overcommitted() {
+    // run and assert the cpu_allocated series never exceeds capacity
+    let res = run(
+        small_dag(),
+        ExecModel::paper_hybrid_pools(),
+        SimConfig::with_nodes(3),
+    );
+    let cap = 3.0 * 4000.0;
+    let s = res.metrics.gauge("cpu_allocated_m").unwrap();
+    for &(_, v) in s.points() {
+        assert!(v <= cap + 1e-9, "allocated {v} exceeds capacity {cap}");
+    }
+}

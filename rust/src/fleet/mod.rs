@@ -15,7 +15,7 @@
 //! * [`workload`] — turns a [`FleetConfig`] into a concrete [`FleetPlan`]:
 //!   per-arrival Montage instances with per-tenant size mixes, merged into
 //!   one task space with [`crate::workflow::dag::Dag::disjoint_union`];
-//! * [`crate::models::driver::run_fleet`] — the multi-instance engine:
+//! * [`crate::exec::run_fleet`] — the multi-instance engine:
 //!   instances are admitted (optionally under a concurrency cap), their
 //!   tasks flow through tenant-aware broker lanes with weighted fair-share
 //!   dequeue, and the autoscaler sees the aggregate backlog;
@@ -32,8 +32,7 @@ pub mod workload;
 pub use arrival::ArrivalProcess;
 pub use workload::InstanceMeta;
 
-use crate::models::driver::{self, SimConfig};
-use crate::models::ExecModel;
+use crate::exec::{self as driver, ConfigError, ExecModel, SimConfig};
 use crate::report::SimResult;
 use crate::sim::SimTime;
 
@@ -49,7 +48,7 @@ pub struct InstanceSpec {
 }
 
 /// A fully-resolved fleet workload, ready for
-/// [`crate::models::driver::run_fleet`].
+/// [`crate::exec::run_fleet`].
 #[derive(Debug, Clone)]
 pub struct FleetPlan {
     /// Instances in arrival order; task ranges are contiguous and cover
@@ -60,6 +59,48 @@ pub struct FleetPlan {
     /// Admission-control cap: max concurrently running instances
     /// (`None` = admit on arrival).
     pub max_in_flight: Option<usize>,
+}
+
+impl FleetPlan {
+    /// Structural validation against a union DAG of `n_tasks` tasks:
+    /// contiguous instance ranges covering the DAG, every instance tenant
+    /// weighted, a usable admission cap. Named errors instead of the
+    /// assorted mid-run panics these used to be.
+    pub fn validate(&self, n_tasks: u32) -> Result<(), ConfigError> {
+        if self.tenant_weights.is_empty() {
+            return Err(ConfigError::NoTenants);
+        }
+        if self.max_in_flight == Some(0) {
+            return Err(ConfigError::ZeroAdmissionCap);
+        }
+        let mut expect = 0u32;
+        for s in &self.instances {
+            if s.first_task != expect {
+                // gap/overlap: the next range must start where the last ended
+                return Err(ConfigError::BadInstanceRanges {
+                    expected: expect,
+                    found: s.first_task,
+                });
+            }
+            if s.n_tasks == 0 {
+                return Err(ConfigError::EmptyInstance);
+            }
+            if (s.tenant as usize) >= self.tenant_weights.len() {
+                return Err(ConfigError::TenantWeightArity {
+                    tenant: s.tenant,
+                    weights: self.tenant_weights.len(),
+                });
+            }
+            expect += s.n_tasks;
+        }
+        if expect != n_tasks {
+            return Err(ConfigError::BadInstanceRanges {
+                expected: n_tasks,
+                found: expect,
+            });
+        }
+        Ok(())
+    }
 }
 
 /// Lifecycle of one instance after the run: arrival (open-loop),
@@ -263,6 +304,51 @@ mod tests {
         assert_eq!(agg.instances, 0);
         assert_eq!(agg.completed_per_hour, 0.0);
         assert_eq!(report::per_tenant(&res).len(), 2);
+    }
+
+    #[test]
+    fn fleet_plan_validation_names_each_failure_mode() {
+        let spec = |tenant, first, n| InstanceSpec {
+            tenant,
+            arrival_ms: 0,
+            first_task: first,
+            n_tasks: n,
+        };
+        let ok = FleetPlan {
+            instances: vec![spec(0, 0, 3), spec(1, 3, 2)],
+            tenant_weights: vec![1, 1],
+            max_in_flight: None,
+        };
+        assert!(ok.validate(5).is_ok());
+        let mut bad = ok.clone();
+        bad.tenant_weights.clear();
+        assert_eq!(bad.validate(5), Err(ConfigError::NoTenants));
+        let mut bad = ok.clone();
+        bad.max_in_flight = Some(0);
+        assert_eq!(bad.validate(5), Err(ConfigError::ZeroAdmissionCap));
+        let mut bad = ok.clone();
+        bad.instances[1].tenant = 7;
+        assert_eq!(
+            bad.validate(5),
+            Err(ConfigError::TenantWeightArity {
+                tenant: 7,
+                weights: 2
+            })
+        );
+        let mut bad = ok.clone();
+        bad.instances[1].first_task = 4; // gap
+        assert!(matches!(
+            bad.validate(5),
+            Err(ConfigError::BadInstanceRanges { .. })
+        ));
+        let mut bad = ok.clone();
+        bad.instances[1].n_tasks = 0;
+        assert_eq!(bad.validate(5), Err(ConfigError::EmptyInstance));
+        // ranges that do not cover the DAG
+        assert!(matches!(
+            ok.validate(9),
+            Err(ConfigError::BadInstanceRanges { .. })
+        ));
     }
 
     #[test]

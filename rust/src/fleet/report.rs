@@ -75,18 +75,21 @@ pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
     tenant_summaries(res)
         .into_iter()
         .enumerate()
-        .map(|(t, (delay, makespan, slowdown))| TenantRow {
-            tenant: t as u16,
-            instances: slowdown.len(),
-            queue_delay_mean_s: delay.mean(),
-            makespan_mean_s: makespan.mean(),
-            slowdown_mean: slowdown.mean(),
-            slowdown_p50: slowdown.percentile(50.0),
-            slowdown_p95: slowdown.percentile(95.0),
-            slowdown_p99: slowdown.percentile(99.0),
-            wasted_s: chaos.wasted_ms_by_tenant.get(t).copied().unwrap_or(0) as f64 / 1000.0,
-            retries: chaos.retries_by_tenant.get(t).copied().unwrap_or(0),
-            gb_moved: data.bytes_by_tenant.get(t).copied().unwrap_or(0) as f64 / 1e9,
+        .map(|(t, (delay, makespan, slowdown))| {
+            let row = slowdown.percentile_row();
+            TenantRow {
+                tenant: t as u16,
+                instances: slowdown.len(),
+                queue_delay_mean_s: delay.mean(),
+                makespan_mean_s: makespan.mean(),
+                slowdown_mean: slowdown.mean(),
+                slowdown_p50: row.p50,
+                slowdown_p95: row.p95,
+                slowdown_p99: row.p99,
+                wasted_s: chaos.wasted_ms_by_tenant.get(t).copied().unwrap_or(0) as f64 / 1000.0,
+                retries: chaos.retries_by_tenant.get(t).copied().unwrap_or(0),
+                gb_moved: data.bytes_by_tenant.get(t).copied().unwrap_or(0) as f64 / 1e9,
+            }
         })
         .collect()
 }

@@ -10,10 +10,12 @@
 //!   scheduler with exponential back-off, API-server queueing, pod
 //!   lifecycle latencies;
 //! * the **HyperFlow engine** ([`engine`]) with task clustering;
-//! * the three **execution models** ([`models`]): job-based, job-based with
-//!   clustering, and auto-scalable worker pools (KEDA-style autoscaler with
-//!   proportional quota allocation, [`autoscale`], over an AMQP-like
-//!   [`broker`]);
+//! * the layered **execution subsystem** ([`exec`]): an event-loop kernel
+//!   with pluggable model strategies — job-based, job-based with
+//!   clustering, typed worker pools and the generic pool (KEDA-style
+//!   autoscaler with proportional quota allocation, [`autoscale`], over an
+//!   AMQP-like [`broker`]); [`models`] re-exports the model enum and the
+//!   legacy driver entry points;
 //! * the **chaos engine** ([`chaos`]): deterministic fault injection
 //!   (pod failures, spot reclaims, node crashes, stragglers), pluggable
 //!   recovery policies (retry back-off, blacklisting, checkpoint-restart,
@@ -43,6 +45,7 @@ pub mod compute;
 pub mod config;
 pub mod data;
 pub mod engine;
+pub mod exec;
 pub mod fleet;
 pub mod k8s;
 pub mod metrics;

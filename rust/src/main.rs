@@ -51,9 +51,30 @@ fn usage() -> ! {
            --weights 2,1       fair-share dequeue weight per tenant\n\
            --cap N             admission cap: max concurrent instances (0 = off)\n\
            --chaos SPEC        failure injection during the fleet run\n\
-           --json              print the fleet report as JSON\n"
+           --json              print the fleet report as JSON\n\
+         validation: flag combinations are checked up front and exit with a\n\
+           named config error (e.g. zero nodes, empty/duplicate pool set,\n\
+           node event outside the cluster, --weights arity mismatch)\n"
     );
     std::process::exit(2)
+}
+
+/// Build a validated `SimConfig` from the shared CLI flags; a bad
+/// combination exits with the named [`hyperflow_k8s::exec::ConfigError`]
+/// instead of panicking mid-run.
+fn parse_sim(args: &Args, max_pending: bool) -> driver::SimConfig {
+    let mut b = driver::SimConfig::builder()
+        .nodes(args.get_usize("nodes", 17))
+        .seed(args.get_u64("seed", 42))
+        .chaos(parse_chaos(args))
+        .data(parse_data(args));
+    if max_pending && args.has("max-pending") {
+        b = b.max_pending_pods(Some(args.get_usize("max-pending", 64)));
+    }
+    b.build().unwrap_or_else(|e| {
+        eprintln!("config error: {e}");
+        usage()
+    })
 }
 
 fn main() {
@@ -93,7 +114,7 @@ fn parse_data(args: &Args) -> Option<hyperflow_k8s::data::DataConfig> {
 
 /// Shared `--model` parsing for `run` / `serve` / `trace`.
 fn parse_model(args: &Args) -> ExecModel {
-    match args.get_or("model", "pools") {
+    let model = match args.get_or("model", "pools") {
         "job" | "job-based" => ExecModel::JobBased,
         "clustered" => {
             let size = args.get_usize("cluster-size", 0);
@@ -112,7 +133,12 @@ fn parse_model(args: &Args) -> ExecModel {
             eprintln!("unknown model '{m}'");
             usage()
         }
+    };
+    if let Err(e) = model.validate() {
+        eprintln!("config error: {e}");
+        usage()
     }
+    model
 }
 
 /// `hyperflow trace --model pools --tasks 2000 --out trace.json` — export a
@@ -121,10 +147,7 @@ fn cmd_trace(args: &Args) {
     let cfg = montage_cfg(args);
     let dag = generate(&cfg);
     let model = parse_model(args);
-    let mut sim = driver::SimConfig::with_nodes(args.get_usize("nodes", 17));
-    sim.seed = args.get_u64("seed", 42);
-    sim.chaos = parse_chaos(args);
-    sim.data = parse_data(args);
+    let sim = parse_sim(args, false);
     let res = driver::run(dag, model, sim);
     let out = args.get_or("out", "trace.json");
     std::fs::write(out, hyperflow_k8s::report::chrome::to_chrome_trace(&res).to_string())
@@ -159,13 +182,7 @@ fn cmd_run(args: &Args) {
         let cfg = montage_cfg(args);
         let dag = generate(&cfg);
         let model = parse_model(args);
-        let mut sim = driver::SimConfig::with_nodes(args.get_usize("nodes", 17));
-        sim.seed = args.get_u64("seed", 42);
-        sim.chaos = parse_chaos(args);
-        sim.data = parse_data(args);
-        if args.has("max-pending") {
-            sim.max_pending_pods = Some(args.get_usize("max-pending", 64));
-        }
+        let sim = parse_sim(args, true);
         let n_tasks = dag.len();
         eprintln!(
             "running {} on montage {}x{} ({} tasks), {} nodes",
@@ -327,12 +344,7 @@ fn cmd_serve(args: &Args) {
         seed,
         max_in_flight: (cap > 0).then_some(cap),
     };
-    let sim = driver::SimConfig {
-        seed,
-        chaos: parse_chaos(args),
-        data: parse_data(args),
-        ..driver::SimConfig::with_nodes(nodes)
-    };
+    let sim = parse_sim(args, false);
     eprintln!(
         "fleet: {} arrivals over {duration:.0}s, {n_tenants} tenants, {} on {nodes} nodes (seed {seed})",
         fleet_cfg.arrival.label(),

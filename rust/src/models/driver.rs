@@ -1,2803 +1,10 @@
-//! The discrete-event simulation driver: binds an [`ExecModel`] to the
-//! Kubernetes substrate and the HyperFlow engine and runs a workflow to
-//! completion, producing a [`SimResult`] trace.
-//!
-//! Two entry points share the same event machinery:
-//!
-//! * [`run`] — the paper's experiment harness: one workflow, dispatched at
-//!   t=0, simulated to completion.
-//! * [`run_fleet`] — the fleet service: many workflow *instances* (one
-//!   [`Dag::disjoint_union`] task space, each instance a contiguous id
-//!   range) arriving over simulated time, tagged with tenants, admitted
-//!   under an optional concurrency cap, and executed concurrently on the
-//!   shared cluster. Instance roots are held back until admission;
-//!   readiness propagation, pools, autoscaling and scheduling are exactly
-//!   the single-run code paths — the autoscaler simply sees the aggregate
-//!   backlog of all in-flight instances, and the broker's per-tenant lanes
-//!   enforce weighted fair-share at dequeue time.
-//!
-//! Event flow (job path):          Event flow (pool path):
-//!   task ready                       task ready
-//!   -> batcher (maybe buffer)        -> publish to type queue
-//!   -> API: create Job               -> wake idle worker / autoscaler
-//!   -> API: create Pod               ...
-//!   -> scheduler (may back off!)     autoscale tick: desired replicas
-//!   -> pod start (~2 s)              -> API: create/delete worker pods
-//!   -> execute batch sequentially    -> scheduler -> pod start
-//!   -> pod terminates, free node     -> worker loop: fetch/execute/ack
-//!
-//! Hot-path design (EXPERIMENTS.md §Perf): pools are interned to dense
-//! [`PoolId`] indices at startup, so deployments, idle-worker queues,
-//! queue-depth gauges and per-type routing are all `Vec` lookups; the
-//! steady-state event loop performs no string hashing, no map walks and no
-//! per-event heap allocation (readiness, scheduler passes and batch
-//! hand-offs reuse scratch buffers or move payloads instead of cloning).
-
-use super::ExecModel;
-use crate::autoscale::{Autoscaler, AutoscalerConfig, PoolSpec};
-use crate::broker::{Broker, PoolId, TenantId};
-use crate::chaos::inject::{sample_node_slowdowns, FaultProcess};
-use crate::chaos::{ChaosConfig, ChaosStats, Injector, RecoveryPolicy};
-use crate::data::{DataConfig, DataPlane, FlowEvent, StageStart};
-use crate::engine::clustering::{BatchAction, Batcher, ClusteringConfig};
-use crate::engine::{Engine, TaskState};
-use crate::fleet::{FleetPlan, InstanceOutcome};
-use crate::k8s::api_server::{ApiServer, ApiServerConfig};
-use crate::k8s::node::{paper_cluster, Node, NodeId};
-use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
-use crate::k8s::resources::Resources;
-use crate::k8s::scheduler::{DataLocality, SchedulePass, Scheduler, SchedulerConfig};
-use crate::metrics::{GaugeId, Registry};
-use crate::report::{SimResult, Trace};
-use crate::sim::{EventQueue, SimTime};
-use crate::workflow::dag::Dag;
-use crate::workflow::task::{TaskId, TypeId};
-use std::collections::VecDeque;
-
-/// Cluster / runtime parameters (defaults follow DESIGN.md §5).
-#[derive(Debug, Clone)]
-pub struct SimConfig {
-    /// Number of worker nodes (paper: up to 17).
-    pub nodes: usize,
-    /// Pod container startup latency (paper: "typically about 2s").
-    pub pod_start_ms: u64,
-    /// Per-task executor overhead inside a pod (HyperFlow job-executor
-    /// fetch + spawn).
-    pub exec_overhead_ms: u64,
-    /// Job-controller reconcile delay (Job object -> Pod object).
-    pub job_controller_ms: u64,
-    /// Message fetch latency from a pool queue.
-    pub fetch_ms: u64,
-    pub sched: SchedulerConfig,
-    pub api: ApiServerConfig,
-    pub autoscale: AutoscalerConfig,
-    /// Hard wall-clock cap on the simulation (guards against livelock in
-    /// pathological configurations). Simulated seconds.
-    pub max_sim_s: f64,
-    /// **Deprecated** — legacy knob, kept working for old configs: at
-    /// build time a non-zero value is folded into the chaos subsystem as
-    /// an [`Injector::PodFailure`]. Prefer `chaos` with a `pod:<p>` spec.
-    pub pod_failure_prob: f64,
-    /// Seed for the chaos/failure-injection RNG streams.
-    pub seed: u64,
-    /// Chaos engine: fault injectors + recovery policy (see
-    /// [`crate::chaos`]). Empty = disabled, zero overhead, bit-identical
-    /// behavior to pre-chaos builds.
-    pub chaos: ChaosConfig,
-    /// Future-work (§5): throttled job submission — cap on pods that may
-    /// sit in the Pending/creation pipeline at once; further batches wait
-    /// in the engine. `None` reproduces the paper's unthrottled behaviour.
-    pub max_pending_pods: Option<usize>,
-    /// Failure injection: scheduled node up/down events (ms, node index,
-    /// up?). Down kills all pods on the node (jobs recreated, worker tasks
-    /// requeued); up restores capacity.
-    pub node_events: Vec<(u64, usize, bool)>,
-    /// Data plane: shared-storage/transfer modeling (see [`crate::data`]).
-    /// `None` (the default) disables it entirely — no stage events are
-    /// ever scheduled and runs are bit-identical to pre-data builds.
-    pub data: Option<DataConfig>,
-}
-
-impl Default for SimConfig {
-    fn default() -> Self {
-        let nodes = 17;
-        SimConfig {
-            nodes,
-            pod_start_ms: 2_000,
-            exec_overhead_ms: 100,
-            job_controller_ms: 500,
-            fetch_ms: 10,
-            sched: SchedulerConfig::default(),
-            api: ApiServerConfig::default(),
-            autoscale: AutoscalerConfig {
-                quota_cpu_m: nodes as u64 * 4_000,
-                ..Default::default()
-            },
-            max_sim_s: 6.0 * 3600.0,
-            pod_failure_prob: 0.0,
-            seed: 42,
-            chaos: ChaosConfig::default(),
-            max_pending_pods: None,
-            node_events: Vec::new(),
-            data: None,
-        }
-    }
-}
-
-impl SimConfig {
-    pub fn with_nodes(nodes: usize) -> Self {
-        SimConfig {
-            nodes,
-            autoscale: AutoscalerConfig {
-                quota_cpu_m: nodes as u64 * 4_000,
-                ..Default::default()
-            },
-            ..Default::default()
-        }
-    }
-}
-
-/// Simulation events.
-#[derive(Debug, Clone, PartialEq, Eq)]
-enum Ev {
-    /// API processed the Job creation; the Job controller will now create
-    /// the pod object.
-    JobAdmitted { pod: PodId },
-    /// Pod object exists; enters the scheduler.
-    PodCreated { pod: PodId },
-    /// Container started; payload begins.
-    PodStarted { pod: PodId },
-    /// Current task inside the pod finished.
-    TaskDone { pod: PodId, task: TaskId },
-    /// A pod's scheduling back-off expired; retry.
-    BackoffExpire { pod: PodId },
-    /// Clustering partial-batch timeout.
-    FlushTimer { type_idx: u16, deadline: SimTime },
-    /// Autoscaler poll.
-    AutoscaleTick,
-    /// A worker finished fetching a message from its queue.
-    WorkerFetched { pod: PodId, task: TaskId },
-    /// Failure injection: a node goes down (kills its pods) or comes back.
-    NodeEvent { node: usize, up: bool },
-    /// Fleet service: workflow instance `inst` arrives (open-loop).
-    InstanceArrive { inst: u32 },
-    /// Chaos: timed injector `proc_idx` strikes `node` (spot warning or
-    /// crash); the handler samples and schedules the process's next fault.
-    ChaosFault { proc_idx: u8, node: usize },
-    /// Chaos: a spot-reclaim warning expired — the node goes down now;
-    /// replacement capacity arrives `replace_ms` later.
-    ChaosReclaim { node: usize, replace_ms: u64 },
-    /// Chaos: a reclaimed/crashed node's replacement capacity arrives
-    /// (fresh incarnation).
-    ChaosRestore { node: usize },
-    /// Chaos: a blacklisted node's cordon expires.
-    ChaosUncordon { node: usize },
-    /// Chaos recovery: a failed pool task's retry back-off expired.
-    ChaosRetryTask { task: TaskId },
-    /// Chaos recovery: a failed job batch's retry back-off expired.
-    ChaosRetryBatch { tasks: Vec<TaskId> },
-    /// Chaos recovery: straggler watch — if `task` is still running in
-    /// `pod`, launch a speculative copy.
-    SpecCheck { pod: PodId, task: TaskId },
-    /// Data plane: a transfer's scheduled completion check (stale
-    /// generations are dropped by [`DataPlane::flow_done`]).
-    FlowDone { flow: u32, gen: u32 },
-    /// Data plane: an object-store request's latency elapsed — the flow
-    /// joins fair bandwidth sharing.
-    FlowActivate { flow: u32, gen: u32 },
-}
-
-/// Where a pod is in the stage-in -> compute -> stage-out cycle of its
-/// current task (always `Idle` between tasks; stage phases only occur
-/// with the data plane enabled).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum IoPhase {
-    Idle,
-    StageIn,
-    Compute,
-    StageOut,
-}
-
-/// What a pod will do next, extracted from its payload without cloning it
-/// (the owned `Vec<TaskId>` is *moved* out of job payloads).
-enum PodWork {
-    Batch(Vec<TaskId>),
-    Pool(PoolId),
-}
-
-/// Sentinel for "no pending fault" in the per-task fault-time table.
-const NO_FAULT: u64 = u64::MAX;
-
-/// Runtime state of the chaos engine for one run (`None` = disabled: no
-/// chaos events are ever scheduled and the hot path is untouched).
-struct ChaosRuntime {
-    /// Timed injectors (spot reclaim, node crash), each with its own
-    /// forked RNG stream.
-    processes: Vec<FaultProcess>,
-    /// Combined per-start crash probability over all PodFailure injectors
-    /// (includes the migrated legacy `pod_failure_prob`).
-    pod_fail_prob: f64,
-    /// Stream for pod-start crash sampling.
-    pod_rng: crate::util::rng::Rng,
-    /// Stream for straggler (re)sampling on node replacement.
-    node_rng: crate::util::rng::Rng,
-    /// Straggler injector params: (fraction of slow nodes, slow factor).
-    straggler: Option<(f64, f64)>,
-    /// Recovery policy in force (explicit or per-model default).
-    policy: RecoveryPolicy,
-    /// Quota the autoscaler was configured with at build (re-scaled to
-    /// surviving capacity on node churn).
-    base_quota: u64,
-}
-
-impl ChaosRuntime {
-    /// Build the runtime from a config, folding the deprecated
-    /// `pod_failure_prob` knob in as one more PodFailure injector.
-    /// Returns `None` when no fault source is configured.
-    fn build(
-        cfg: &ChaosConfig,
-        legacy_pod_failure_prob: f64,
-        model: &ExecModel,
-        seed: u64,
-        base_quota: u64,
-    ) -> Option<ChaosRuntime> {
-        let mut spec = cfg.clone();
-        if legacy_pod_failure_prob > 0.0 {
-            log::warn!(
-                "sim.pod_failure_prob is deprecated: folding it into the chaos \
-                 subsystem as a PodFailure injector (use chaos spec 'pod:{legacy_pod_failure_prob}')"
-            );
-            spec.injectors.push(Injector::PodFailure {
-                prob: legacy_pod_failure_prob,
-            });
-        }
-        if !spec.is_enabled() {
-            return None;
-        }
-        let policy = spec
-            .recovery
-            .clone()
-            .unwrap_or_else(|| RecoveryPolicy::for_model(model));
-        // Fixed fork order => the fault timeline is a pure function of
-        // (seed, chaos spec), independent of everything else in the run.
-        // The pod-failure stream keeps the legacy `seed ^ 0xFA11` seeding
-        // of the old inline pod_failure_prob branch, so configs that only
-        // set the deprecated knob reproduce their historical failure
-        // pattern (one draw per pod start, same order until the first
-        // fault diverges the timeline).
-        let mut master = crate::util::rng::Rng::new(seed ^ 0xC4A0_5EED);
-        let pod_rng = crate::util::rng::Rng::new(seed ^ 0xFA11);
-        let node_rng = master.fork(2);
-        let processes: Vec<FaultProcess> = spec
-            .injectors
-            .iter()
-            .filter(|i| i.is_timed())
-            .enumerate()
-            .map(|(k, i)| FaultProcess::new(i.clone(), master.fork(16 + k as u64)))
-            .collect();
-        assert!(processes.len() <= u8::MAX as usize, "too many timed injectors");
-        Some(ChaosRuntime {
-            processes,
-            pod_fail_prob: spec.pod_failure_prob(),
-            pod_rng,
-            node_rng,
-            straggler: spec.straggler(),
-            policy,
-            base_quota,
-        })
-    }
-}
-
-/// Runtime state of a fleet run (see [`run_fleet`]): per-instance
-/// admission and completion tracking over the disjoint-union task space.
-struct FleetState {
-    /// Unfinished task count per instance; 0 = the instance completed.
-    outstanding: Vec<u32>,
-    /// Each instance's initially-ready tasks, dispatched at admission
-    /// (taken out once — an instance is admitted exactly once).
-    roots: Vec<Vec<TaskId>>,
-    admitted_at: Vec<Option<SimTime>>,
-    finished_at: Vec<Option<SimTime>>,
-    /// Arrived instances waiting for an admission slot (FIFO).
-    waiting: VecDeque<u32>,
-    /// Instances admitted but not yet finished.
-    in_flight: usize,
-    /// Admission-control cap on concurrently running instances.
-    max_in_flight: Option<usize>,
-}
-
-struct World {
-    cfg: SimConfig,
-    q: EventQueue<Ev>,
-    pods: Vec<Pod>,
-    nodes: Vec<Node>,
-    sched: Scheduler,
-    api: ApiServer,
-    engine: Engine,
-    batcher: Batcher,
-    broker: Broker,
-    scaler: Option<Autoscaler>,
-    /// Worker deployment state per pool: live pod set, kept sorted by
-    /// `PodId` (ids are assigned monotonically, so insertion is a push;
-    /// this preserves the old `BTreeSet` iteration order for scale-down).
-    deployments: Vec<Vec<PodId>>,
-    /// Idle running workers per pool (FIFO).
-    idle_workers: Vec<VecDeque<PodId>>,
-    /// The task type backing each pool (`None` for the generic pool).
-    pool_type: Vec<Option<TypeId>>,
-    /// Routing table: which pool (if any) a ready task of each type goes
-    /// to. Replaces per-task string compares/clones in dispatch.
-    pool_of_type: Vec<Option<PoolId>>,
-    /// Pools in name order — the autoscale reconciliation applies desired
-    /// counts in this order to stay bit-identical with the pre-interning
-    /// code, which iterated a `BTreeMap<String, usize>`.
-    pools_by_name: Vec<PoolId>,
-    /// Remaining batch tasks per pod (job path), front = current.
-    batch_queue: Vec<VecDeque<TaskId>>,
-    /// Task currently executing in each pod (for node-failure recovery).
-    current_task: Vec<Option<TaskId>>,
-    /// Job batches deferred by the pending-pod throttle (§5 future work).
-    throttle_wait: VecDeque<Vec<TaskId>>,
-    /// Pods created but not yet bound (throttle accounting).
-    jobs_in_flight: usize,
-    /// Pod template for the generic-pool model (max over all types).
-    generic_requests: Resources,
-    metrics: Registry,
-    trace: Trace,
-    running_tasks: i64,
-    /// Incremental count of pods in the Pending phase (perf: a full scan
-    /// here was 70% of the 16k job-model sim, see EXPERIMENTS.md §Perf).
-    pending_count: usize,
-    /// Completed tasks per TypeId (feeds the VPA usage estimator).
-    completed_by_type: Vec<u64>,
-    // pre-resolved gauge handles (string-keyed lookups were hot; §Perf)
-    g_running: GaugeId,
-    g_cpu: GaugeId,
-    g_pending: GaugeId,
-    /// running::<type> gauge per TypeId.
-    g_by_type: Vec<GaugeId>,
-    /// queue::<pool> gauge per PoolId.
-    g_queue: Vec<GaugeId>,
-    /// replicas::<pool> gauge per PoolId.
-    g_replicas: Vec<GaugeId>,
-    // -- chaos engine (None for healthy runs; see crate::chaos) ----------
-    chaos: Option<ChaosRuntime>,
-    /// Resilience accounting (always present; all-zero without chaos).
-    chaos_stats: ChaosStats,
-    /// Per-node task-duration multiplier (straggler injector; all 1.0
-    /// otherwise). Resampled when a node's replacement arrives.
-    node_slow: Vec<f64>,
-    /// Node incarnation counters: bumped when replacement capacity for a
-    /// reclaimed/crashed node arrives, so events bound to the previous
-    /// hardware are recognizably stale.
-    node_incarnation: Vec<u32>,
-    /// Pod-start failures charged to each node (blacklisting evidence).
-    node_fault_counts: Vec<u32>,
-    /// Spot warning in progress for the node (drain pending).
-    drain_pending: Vec<bool>,
-    /// Blacklist expiry per node (ZERO = not blacklisted).
-    blacklist_until: Vec<SimTime>,
-    /// Incarnation of the node each pod was bound to (stale-event guard).
-    pod_bound_inc: Vec<u32>,
-    /// When the task currently in each pod started (waste accounting).
-    pod_task_started_at: Vec<SimTime>,
-    /// Remaining work per task (checkpoint-restart shrinks it on re-runs;
-    /// initialized to the DAG durations).
-    task_work_left: Vec<SimTime>,
-    /// Fault-driven re-dispatch count per task (retry back-off input).
-    task_attempts: Vec<u32>,
-    /// When the task was last lost to a fault (`NO_FAULT` = none pending);
-    /// cleared into the recovery-latency summary when it re-starts.
-    task_fault_at: Vec<u64>,
-    /// A speculative copy was already launched for the task (at most one).
-    spec_launched: Vec<bool>,
-    /// Live executions per task (1 normally; 2 while a speculative copy
-    /// races the original). Gates retries — a task with a copy still
-    /// running must not be re-dispatched — and keeps the trace record on
-    /// the first copy's timestamps.
-    task_running: Vec<u8>,
-    // -- data plane (None = pure-compute tasks, the pre-data behavior) ---
-    data: Option<DataPlane>,
-    /// Stage cycle position per pod (all `Idle`/`Compute` without data).
-    pod_io: Vec<IoPhase>,
-    /// Execution ms of the task a pod is currently staging out — success
-    /// accounting (useful work, completed-by-type, compute time) is
-    /// deferred until the write lands, so a kill mid-write re-runs the
-    /// task without double counting.
-    pod_exec_ms: Vec<u64>,
-    /// Task has a stage-out in flight (its completion is not yet visible
-    /// to successors); sized only when the data plane is on.
-    task_out_pending: Vec<bool>,
-    /// Scratch buffer for transfer (re)schedules.
-    flow_buf: Vec<FlowEvent>,
-    // -- fleet service (None for classic single-workflow runs) ----------
-    fleet: Option<FleetState>,
-    /// Instance index of each task (fleet runs; empty otherwise).
-    task_instance: Vec<u32>,
-    /// Tenant lane of each task (fleet runs; empty = all tenant 0).
-    task_tenant: Vec<u16>,
-    // -- reusable scratch buffers (zero steady-state allocation, §Perf) --
-    /// Newly-ready tasks from `Engine::complete_into`.
-    ready_buf: Vec<TaskId>,
-    /// Scheduler pass output.
-    pass_buf: SchedulePass,
-    /// Pod-id snapshots (scale-down members, node-failure victims).
-    members_buf: Vec<PodId>,
-    /// Idle-worker snapshot for scale-down.
-    idle_buf: Vec<PodId>,
-    /// Autoscale tick: backlog / current / desired per pool.
-    backlog_buf: Vec<usize>,
-    current_buf: Vec<usize>,
-    desired_buf: Vec<usize>,
-}
-
-/// Queue name of the single pool in the generic-pool model.
-const GENERIC_POOL: &str = "__generic__";
-
-impl World {
-    fn now(&self) -> SimTime {
-        self.q.now()
-    }
-
-    // ---------------------------------------------------------------
-    // helpers
-    // ---------------------------------------------------------------
-    fn new_pod(&mut self, payload: Payload) -> PodId {
-        let requests = match &payload {
-            Payload::Worker { pool } => match self.pool_type[pool.idx()] {
-                None => self.generic_requests,
-                Some(ty) => {
-                    let t = &self.engine.dag().types[ty.0 as usize];
-                    // §5 VPA: once enough of this type has run, right-size
-                    // new workers to the observed CPU usage
-                    if self.cfg.autoscale.vpa
-                        && self.completed_by_type[ty.0 as usize]
-                            >= self.cfg.autoscale.vpa_min_samples
-                    {
-                        Resources::new(t.cpu_used_m, t.requests.mem_mb)
-                    } else {
-                        t.requests
-                    }
-                }
-            },
-            Payload::JobBatch { tasks } => self.engine.dag().type_of(tasks[0]).requests,
-        };
-        let id = PodId(self.pods.len() as u64);
-        let pod = Pod::new(id, payload, requests, self.now());
-        self.pods.push(pod);
-        self.batch_queue.push(VecDeque::new());
-        self.current_task.push(None);
-        self.pod_bound_inc.push(0);
-        self.pod_task_started_at.push(SimTime::ZERO);
-        self.pod_io.push(IoPhase::Idle);
-        self.pod_exec_ms.push(0);
-        self.pending_count += 1;
-        self.metrics.inc("pods_created", 1);
-        id
-    }
-
-    /// Job path: create a Job for a batch of same-type tasks, honouring the
-    /// pending-pod throttle (§5 future work) when configured.
-    fn create_job(&mut self, tasks: Vec<TaskId>) {
-        debug_assert!(!tasks.is_empty());
-        if let Some(cap) = self.cfg.max_pending_pods {
-            if self.jobs_in_flight >= cap {
-                self.throttle_wait.push_back(tasks);
-                self.metrics.inc("throttled_batches", 1);
-                return;
-            }
-        }
-        self.create_job_now(tasks);
-    }
-
-    fn create_job_now(&mut self, tasks: Vec<TaskId>) {
-        let pid = self.new_pod(Payload::JobBatch { tasks });
-        self.jobs_in_flight += 1;
-        self.metrics.inc("jobs_created", 1);
-        // API round-trip for the Job object
-        let done = self.api.admit(self.now());
-        self.q.schedule_at(done, Ev::JobAdmitted { pod: pid });
-    }
-
-    /// A job pod left the pending pipeline: admit deferred batches.
-    fn job_unblocked(&mut self) {
-        debug_assert!(self.jobs_in_flight > 0);
-        self.jobs_in_flight -= 1;
-        if let Some(cap) = self.cfg.max_pending_pods {
-            while self.jobs_in_flight < cap {
-                match self.throttle_wait.pop_front() {
-                    Some(batch) => self.create_job_now(batch),
-                    None => break,
-                }
-            }
-        }
-    }
-
-    /// Pool path: create a worker pod for a deployment scale-up.
-    fn create_worker(&mut self, pool: PoolId) {
-        let pid = self.new_pod(Payload::Worker { pool });
-        let dep = &mut self.deployments[pool.idx()];
-        if let Some(&last) = dep.last() {
-            debug_assert!(last < pid, "pod ids must be monotone");
-        }
-        dep.push(pid);
-        let done = self.api.admit(self.now());
-        self.q.schedule_at(done, Ev::PodCreated { pod: pid });
-    }
-
-    fn run_scheduler(&mut self) {
-        let now = self.now();
-        let mut pass = std::mem::take(&mut self.pass_buf);
-        // locality-aware placement only when the data plane asks for it;
-        // otherwise the oracle-free path is taken (bit-identical to the
-        // pre-data scheduler)
-        let data = self.data.take();
-        let locality: Option<&dyn DataLocality> = match &data {
-            Some(d) if d.cfg().locality => Some(d),
-            _ => None,
-        };
-        self.sched
-            .pass_into(now, &mut self.pods, &mut self.nodes, &mut pass, locality);
-        self.data = data;
-        if !pass.bound.is_empty() {
-            self.record_cpu();
-        }
-        for &(pid, node, bind_done) in &pass.bound {
-            self.pending_count -= 1;
-            self.pod_bound_inc[pid.0 as usize] = self.node_incarnation[node.0];
-            if matches!(self.pods[pid.0 as usize].payload, Payload::JobBatch { .. }) {
-                self.job_unblocked();
-            }
-            self.q.schedule_at(
-                bind_done + SimTime::from_millis(self.cfg.pod_start_ms),
-                Ev::PodStarted { pod: pid },
-            );
-        }
-        for &(pid, until) in &pass.backed_off {
-            self.q.schedule_at(until, Ev::BackoffExpire { pod: pid });
-        }
-        self.pass_buf = pass;
-        self.metrics
-            .set_id(self.g_pending, now, self.pending_count as f64);
-    }
-
-    fn record_cpu(&mut self) {
-        let now = self.now();
-        let alloc: u64 = self.nodes.iter().map(|n| n.allocated.cpu_m).sum();
-        self.metrics.set_id(self.g_cpu, now, alloc as f64);
-    }
-
-    fn record_running(&mut self, ttype: TypeId, delta: i64) {
-        let now = self.now();
-        self.running_tasks += delta;
-        self.metrics
-            .set_id(self.g_running, now, self.running_tasks as f64);
-        self.metrics
-            .add_id(self.g_by_type[ttype.0 as usize], now, delta as f64);
-    }
-
-    /// Record the current depth of a pool's queue.
-    fn record_queue_depth(&mut self, pool: PoolId) {
-        let now = self.now();
-        let depth = self.broker.queue(pool).depth();
-        self.metrics
-            .set_id(self.g_queue[pool.idx()], now, depth as f64);
-    }
-
-    /// Start executing `task` inside `pod` at the current time.
-    ///
-    /// Chaos hooks (all inert on healthy runs): the remaining work may be
-    /// less than the DAG duration (checkpoint-restart), a straggler node
-    /// stretches it by its slowdown factor, a pending fault timestamp is
-    /// folded into the recovery-latency summary, and straggling pool
-    /// tasks get a speculation watch.
-    fn start_task(&mut self, pod: PodId, task: TaskId) {
-        let now = self.now();
-        let nominal = self.task_work_left[task.0 as usize];
-        let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
-        let slow = match self.pods[pod.0 as usize].node {
-            Some(nid) => self.node_slow[nid.0],
-            None => 1.0,
-        };
-        let dur = if slow != 1.0 {
-            SimTime::from_millis((nominal.as_millis() as f64 * slow).round() as u64)
-        } else {
-            nominal
-        };
-        // a speculative copy racing the original must not overwrite the
-        // task's trace record — queueing delay is ready -> *first* start
-        if self.task_running[task.0 as usize] == 0 {
-            self.trace.started(task, pod.0, now);
-        }
-        self.task_running[task.0 as usize] += 1;
-        self.record_running(ttype, 1);
-        self.pods[pod.0 as usize].executed += 1;
-        self.current_task[pod.0 as usize] = Some(task);
-        self.pod_io[pod.0 as usize] = IoPhase::Compute;
-        self.pod_task_started_at[pod.0 as usize] = now;
-        if self.chaos.is_some() {
-            let fault_at = self.task_fault_at[task.0 as usize];
-            if fault_at != NO_FAULT {
-                self.task_fault_at[task.0 as usize] = NO_FAULT;
-                self.chaos_stats
-                    .recovery_latency
-                    .add((now - SimTime::from_millis(fault_at)).as_secs_f64());
-            }
-        }
-        self.q.schedule_at(
-            now + SimTime::from_millis(self.cfg.exec_overhead_ms) + dur,
-            Ev::TaskDone { pod, task },
-        );
-        // straggler watch: if the task is still running after spec_factor
-        // x its nominal time, a speculative copy is launched (pools only)
-        if let Some(ch) = &self.chaos {
-            if ch.policy.speculative
-                && ch.straggler.is_some()
-                && !self.spec_launched[task.0 as usize]
-                && self.pods[pod.0 as usize].pool_id().is_some()
-            {
-                let watch = SimTime::from_millis(
-                    self.cfg.exec_overhead_ms
-                        + (nominal.as_millis() as f64 * ch.policy.spec_factor).round() as u64,
-                );
-                self.q.schedule_at(now + watch, Ev::SpecCheck { pod, task });
-            }
-        }
-    }
-
-    // ---------------------------------------------------------------
-    // data plane: the stage-in -> compute -> stage-out task cycle
-    // ---------------------------------------------------------------
-
-    /// Drain the data plane's (re)schedules into the event queue.
-    fn schedule_flow_events(&mut self, mut buf: Vec<FlowEvent>) {
-        for ev in buf.drain(..) {
-            let e = if ev.activate {
-                Ev::FlowActivate {
-                    flow: ev.flow,
-                    gen: ev.gen,
-                }
-            } else {
-                Ev::FlowDone {
-                    flow: ev.flow,
-                    gen: ev.gen,
-                }
-            };
-            self.q.schedule_at(ev.at, e);
-        }
-        self.flow_buf = buf;
-    }
-
-    /// Hand `task` to `pod`: with the data plane on, stage its inputs
-    /// first (execution starts when the transfer completes); without it,
-    /// execution starts immediately — the exact pre-data path.
-    fn begin_task(&mut self, pod: PodId, task: TaskId) {
-        if self.data.is_none() {
-            self.start_task(pod, task);
-            return;
-        }
-        let now = self.now();
-        let node = self.pods[pod.0 as usize].node.expect("running pod is bound").0;
-        let tenant = self.tenant_of(task).idx();
-        self.current_task[pod.0 as usize] = Some(task);
-        self.pod_io[pod.0 as usize] = IoPhase::StageIn;
-        let mut buf = std::mem::take(&mut self.flow_buf);
-        let start = self
-            .data
-            .as_mut()
-            .expect("data plane")
-            .begin_stage_in(now, pod, node, task, tenant, &mut buf);
-        self.schedule_flow_events(buf);
-        if start == StageStart::Ready {
-            // every input byte is already node-local (warm cache)
-            self.start_task(pod, task);
-        }
-    }
-
-    /// The task's compute finished: write its output back to the backend.
-    /// Successors become ready only when the write lands (write-through
-    /// shared storage, like the paper's NFS volume).
-    fn begin_stage_out_for(&mut self, pod: PodId, task: TaskId) {
-        let now = self.now();
-        let node = self.pods[pod.0 as usize].node.expect("running pod is bound").0;
-        let tenant = self.tenant_of(task).idx();
-        self.pod_io[pod.0 as usize] = IoPhase::StageOut;
-        self.task_out_pending[task.0 as usize] = true;
-        let mut buf = std::mem::take(&mut self.flow_buf);
-        let start = self
-            .data
-            .as_mut()
-            .expect("data plane")
-            .begin_stage_out(now, pod, node, task, tenant, &mut buf);
-        self.schedule_flow_events(buf);
-        if start == StageStart::Ready {
-            self.finish_task(pod, task);
-        }
-    }
-
-    /// Stage-out landed (or the task had no output bytes): the task's
-    /// completion becomes visible — trace it, propagate readiness, and
-    /// advance the pod to its next unit of work. Data-plane runs only.
-    fn finish_task(&mut self, pod: PodId, task: TaskId) {
-        let now = self.now();
-        self.current_task[pod.0 as usize] = None;
-        self.pod_io[pod.0 as usize] = IoPhase::Idle;
-        self.task_out_pending[task.0 as usize] = false;
-        // a speculative twin cannot have completed it (the loser is caught
-        // at TaskDone), but guard anyway: completing twice would corrupt
-        // the engine's outstanding count
-        if self.engine.state(task) != TaskState::Done {
-            // success accounting deferred from TaskDone: only an execution
-            // whose output landed counts as useful/completed
-            let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
-            let exec_ms = self.pod_exec_ms[pod.0 as usize];
-            self.completed_by_type[ttype.0 as usize] += 1;
-            if self.chaos.is_some() {
-                self.chaos_stats.useful_ms += exec_ms;
-            }
-            self.data.as_mut().expect("data plane").stats.compute_ms += exec_ms;
-            self.trace.finished(task, now);
-            let mut ready = std::mem::take(&mut self.ready_buf);
-            ready.clear();
-            self.engine.complete_into(task, &mut ready);
-            self.dispatch_ready(&ready);
-            self.ready_buf = ready;
-            if self.fleet.is_some() {
-                self.instance_task_done(task);
-            }
-        }
-        match self.pods[pod.0 as usize].pool_id() {
-            None => {
-                self.batch_queue[pod.0 as usize].pop_front();
-                if let Some(&next) = self.batch_queue[pod.0 as usize].front() {
-                    self.begin_task(pod, next);
-                } else {
-                    self.terminate_pod(pod, PodPhase::Succeeded);
-                }
-            }
-            Some(pool) => self.advance_worker(pod, pool),
-        }
-    }
-
-    /// Node failure: kill every pod on the node; recover their work.
-    /// Job batches are recreated by the job controller; a worker's
-    /// in-flight task is redelivered to its queue (the broker's unacked
-    /// window, like a RabbitMQ consumer dying).
-    fn fail_node(&mut self, node: usize) {
-        self.fail_node_inner(node, false);
-    }
-
-    /// Shared kill path for scheduled `node_events` (`chaos = false`:
-    /// instant redelivery, the pre-chaos semantics) and the chaos engine
-    /// (`chaos = true`: wasted-work accounting, checkpoint-restart credit,
-    /// and policy-driven retry back-off instead of instant redelivery).
-    fn fail_node_inner(&mut self, node: usize, chaos: bool) {
-        self.nodes[node].failed = true;
-        self.metrics.inc("node_failures", 1);
-        let mut victims = std::mem::take(&mut self.members_buf);
-        victims.clear();
-        victims.extend(
-            self.pods
-                .iter()
-                .filter(|p| p.node == Some(NodeId(node)) && !p.is_terminal())
-                .map(|p| p.id),
-        );
-        for &pid in &victims {
-            // roll back the running-task accounting for the in-flight task
-            let in_flight = self.current_task[pid.0 as usize].take();
-            let phase = self.pod_io[pid.0 as usize];
-            if let Some(task) = in_flight {
-                if phase != IoPhase::Compute {
-                    // killed while staging data: nothing executed yet
-                    // (stage-in) or the output write was lost (stage-out —
-                    // the task must re-run, its completion never became
-                    // visible). The requeue below handles both; only the
-                    // running-task accounting is skipped.
-                    if phase == IoPhase::StageOut {
-                        self.task_out_pending[task.0 as usize] = false;
-                        if chaos {
-                            // the finished execution died with its output:
-                            // its compute (plus the partial write) never
-                            // counted as useful — charge it as waste and
-                            // stamp the fault for recovery latency
-                            let now = self.now();
-                            let elapsed = now
-                                .saturating_sub(self.pod_task_started_at[pid.0 as usize])
-                                .as_millis();
-                            let wasted =
-                                elapsed.saturating_sub(self.cfg.exec_overhead_ms.min(elapsed));
-                            self.chaos_stats
-                                .add_waste(self.tenant_of(task).idx(), wasted);
-                            self.task_fault_at[task.0 as usize] = now.as_millis();
-                            self.metrics.inc("tasks_lost_to_faults", 1);
-                        }
-                    }
-                } else {
-                    let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
-                    self.record_running(ttype, -1);
-                    self.task_running[task.0 as usize] -= 1;
-                    if chaos {
-                        if self.engine.state(task) == TaskState::Done {
-                            // losing speculative copy killed after its twin
-                            // already won: the whole run is waste, there is
-                            // nothing to checkpoint or recover
-                            let elapsed = self
-                                .now()
-                                .saturating_sub(self.pod_task_started_at[pid.0 as usize])
-                                .as_millis();
-                            let exec_ms =
-                                elapsed.saturating_sub(self.cfg.exec_overhead_ms.min(elapsed));
-                            self.chaos_stats
-                                .add_waste(self.tenant_of(task).idx(), exec_ms);
-                            self.metrics.inc("speculative_losses", 1);
-                        } else {
-                            self.account_lost_work(pid, task, node);
-                        }
-                    }
-                }
-            }
-            let work = match &self.pods[pid.0 as usize].payload {
-                Payload::JobBatch { tasks } => {
-                    // job controller recreates the pod with the unfinished
-                    // remainder of the batch (current task included)
-                    let remaining: Vec<TaskId> = if self.batch_queue[pid.0 as usize].is_empty() {
-                        tasks.clone() // killed while Pending/Starting
-                    } else {
-                        self.batch_queue[pid.0 as usize].iter().copied().collect()
-                    };
-                    PodWork::Batch(remaining)
-                }
-                Payload::Worker { pool } => PodWork::Pool(*pool),
-            };
-            self.terminate_pod(pid, PodPhase::Deleted);
-            match work {
-                PodWork::Batch(remaining) => {
-                    if !remaining.is_empty() {
-                        if chaos {
-                            self.schedule_batch_retry(remaining);
-                        } else {
-                            self.create_job(remaining);
-                        }
-                    }
-                }
-                PodWork::Pool(pool) => {
-                    if let Some(task) = in_flight {
-                        if chaos {
-                            // the recovery policy owns the message now: it
-                            // re-enters the queue after its retry back-off
-                            // (unless the task already completed elsewhere)
-                            self.broker.nack_drop(pool);
-                            self.record_queue_depth(pool);
-                            if self.engine.state(task) != TaskState::Done {
-                                self.schedule_task_retry(task);
-                            }
-                        } else {
-                            // the unacked delivery is redelivered at once
-                            self.broker.nack_requeue(pool, task, self.tenant_of(task));
-                            self.wake_idle_worker(pool);
-                        }
-                    }
-                }
-            }
-        }
-        self.members_buf = victims;
-        if chaos {
-            self.update_chaos_quota();
-        }
-    }
-
-    // ---------------------------------------------------------------
-    // chaos engine: fault application, recovery, accounting
-    // ---------------------------------------------------------------
-
-    /// Sample + schedule the next fault of timed injector `i` (no-op for
-    /// inert processes).
-    fn schedule_next_fault(&mut self, i: usize) {
-        let n = self.nodes.len();
-        let Some(ch) = &mut self.chaos else { return };
-        if let Some((delay, victim)) = ch.processes[i].next_fault(n) {
-            self.q.schedule_in(
-                delay,
-                Ev::ChaosFault {
-                    proc_idx: i as u8,
-                    node: victim,
-                },
-            );
-        }
-    }
-
-    /// A timed fault strikes `node`.
-    fn apply_fault(&mut self, proc_idx: usize, node: usize) {
-        let injector = match &self.chaos {
-            Some(ch) => ch.processes[proc_idx].injector.clone(),
-            None => return,
-        };
-        match injector {
-            Injector::SpotReclaim {
-                warning_ms,
-                replace_ms,
-                ..
-            } => self.spot_warning(node, warning_ms, replace_ms),
-            Injector::NodeCrash { repair_ms, .. } => {
-                if self.nodes[node].failed {
-                    return; // already down
-                }
-                self.chaos_stats.node_crashes += 1;
-                self.metrics.inc("node_crashes", 1);
-                self.fail_node_inner(node, true);
-                self.q
-                    .schedule_in(SimTime::from_millis(repair_ms), Ev::ChaosRestore { node });
-            }
-            _ => unreachable!("only timed injectors emit ChaosFault"),
-        }
-    }
-
-    /// Spot reclaim, phase 1: the provider's warning. The node is cordoned
-    /// (no new placements) and — under a graceful policy — its workers
-    /// drain: idle workers terminate immediately (the autoscaler replaces
-    /// them on surviving nodes), busy workers finish their current task
-    /// and exit. Job pods run on; whatever is still alive when the warning
-    /// expires dies with the node.
-    fn spot_warning(&mut self, node: usize, warning_ms: u64, replace_ms: u64) {
-        if self.nodes[node].failed || self.drain_pending[node] {
-            return; // already dying
-        }
-        self.drain_pending[node] = true;
-        self.nodes[node].cordoned = true;
-        self.chaos_stats.spot_warnings += 1;
-        self.metrics.inc("spot_warnings", 1);
-        let drain = self
-            .chaos
-            .as_ref()
-            .map(|c| c.policy.drain_on_warning)
-            .unwrap_or(false);
-        if drain {
-            let mut victims = std::mem::take(&mut self.members_buf);
-            victims.clear();
-            victims.extend(
-                self.pods
-                    .iter()
-                    .filter(|p| {
-                        p.node == Some(NodeId(node))
-                            && !p.is_terminal()
-                            && p.pool_id().is_some()
-                    })
-                    .map(|p| p.id),
-            );
-            for &pid in &victims {
-                match self.pods[pid.0 as usize].phase {
-                    PodPhase::Running if self.current_task[pid.0 as usize].is_none() => {
-                        // idle worker: release it now so the deployment
-                        // re-creates it on a surviving node
-                        self.terminate_pod(pid, PodPhase::Succeeded);
-                    }
-                    PodPhase::Running => {
-                        self.pods[pid.0 as usize].phase = PodPhase::Draining;
-                    }
-                    // Starting workers are abandoned before doing work
-                    PodPhase::Starting => self.terminate_pod(pid, PodPhase::Deleted),
-                    _ => {}
-                }
-            }
-            self.members_buf = victims;
-        }
-        self.q.schedule_in(
-            SimTime::from_millis(warning_ms),
-            Ev::ChaosReclaim { node, replace_ms },
-        );
-    }
-
-    /// Charge the compute a killed in-flight task burned, minus the
-    /// checkpoint-restored fraction, and shrink the task's remaining work
-    /// accordingly. `node` is where it ran (for de-slowing straggler time
-    /// into work units).
-    fn account_lost_work(&mut self, pod: PodId, task: TaskId, node: usize) {
-        let now = self.now();
-        let elapsed = now
-            .saturating_sub(self.pod_task_started_at[pod.0 as usize])
-            .as_millis();
-        let exec_ms = elapsed.saturating_sub(self.cfg.exec_overhead_ms.min(elapsed));
-        let frac = self
-            .chaos
-            .as_ref()
-            .map(|c| c.policy.checkpoint_frac)
-            .unwrap_or(0.0);
-        // progress in work units (a straggler burns `slow` wall-ms per
-        // work-ms), of which `frac` survives in the checkpoint
-        let slow = self.node_slow[node].max(1.0);
-        let work_done = (exec_ms as f64 / slow) as u64;
-        let left = self.task_work_left[task.0 as usize].as_millis();
-        let credit = ((work_done as f64 * frac) as u64).min(left.saturating_sub(1));
-        self.task_work_left[task.0 as usize] = SimTime::from_millis(left - credit);
-        let wasted = exec_ms.saturating_sub(credit);
-        self.chaos_stats
-            .add_waste(self.tenant_of(task).idx(), wasted);
-        self.task_fault_at[task.0 as usize] = now.as_millis();
-        self.metrics.inc("tasks_lost_to_faults", 1);
-    }
-
-    /// Schedule a pool task's policy-driven re-dispatch — unless another
-    /// copy of it is still executing (speculation): the live copy carries
-    /// the work, and if that copy dies too, *its* kill path schedules the
-    /// retry. Keeps the at-most-one-extra-copy contract.
-    fn schedule_task_retry(&mut self, task: TaskId) {
-        if self.task_running[task.0 as usize] > 0 {
-            return;
-        }
-        let attempt = self.task_attempts[task.0 as usize];
-        self.task_attempts[task.0 as usize] = attempt.saturating_add(1);
-        let delay = self
-            .chaos
-            .as_ref()
-            .map(|c| c.policy.backoff(attempt))
-            .unwrap_or(SimTime::ZERO);
-        self.chaos_stats.add_retry(self.tenant_of(task).idx());
-        self.metrics.inc("chaos_retries", 1);
-        self.q.schedule_in(delay, Ev::ChaosRetryTask { task });
-    }
-
-    /// Schedule a job batch's policy-driven re-creation (attempt count
-    /// keyed on the batch's first task).
-    fn schedule_batch_retry(&mut self, tasks: Vec<TaskId>) {
-        debug_assert!(!tasks.is_empty());
-        let key = tasks[0];
-        let attempt = self.task_attempts[key.0 as usize];
-        self.task_attempts[key.0 as usize] = attempt.saturating_add(1);
-        let delay = self
-            .chaos
-            .as_ref()
-            .map(|c| c.policy.backoff(attempt))
-            .unwrap_or(SimTime::ZERO);
-        self.chaos_stats.add_retry(self.tenant_of(key).idx());
-        self.metrics.inc("chaos_retries", 1);
-        self.q.schedule_in(delay, Ev::ChaosRetryBatch { tasks });
-    }
-
-    /// A pod crashed at container start (PodFailure injector, successor of
-    /// the legacy inline `pod_failure_prob` branch): the startup time is
-    /// wasted, the node collects blacklisting evidence, and the payload is
-    /// recovered by policy — batches after a retry back-off, workers by
-    /// the deployment controller on the next autoscale tick.
-    fn pod_start_failure(&mut self, pod: PodId) {
-        self.metrics.inc("pod_failures", 1);
-        self.chaos_stats.pod_failures += 1;
-        // the container-start latency was burned for nothing; a batch pod
-        // charges its owning tenant, a shared pool worker charges no lane
-        // (it serves every tenant)
-        match &self.pods[pod.0 as usize].payload {
-            Payload::JobBatch { tasks } => {
-                let tenant = self.tenant_of(tasks[0]).idx();
-                self.chaos_stats.add_waste(tenant, self.cfg.pod_start_ms);
-            }
-            Payload::Worker { .. } => {
-                self.chaos_stats.add_waste_shared(self.cfg.pod_start_ms);
-            }
-        }
-        if let Some(nid) = self.pods[pod.0 as usize].node {
-            self.note_node_fault(nid.0);
-        }
-        let retry = match &mut self.pods[pod.0 as usize].payload {
-            Payload::JobBatch { tasks } => Some(std::mem::take(tasks)),
-            Payload::Worker { .. } => None,
-        };
-        self.terminate_pod(pod, PodPhase::Deleted);
-        if let Some(tasks) = retry {
-            self.schedule_batch_retry(tasks);
-        }
-    }
-
-    /// Blacklisting: a node that keeps failing pod starts is cordoned for
-    /// the policy's blacklist window.
-    fn note_node_fault(&mut self, node: usize) {
-        self.node_fault_counts[node] += 1;
-        let Some(ch) = &self.chaos else { return };
-        let k = ch.policy.blacklist_after;
-        let window = ch.policy.blacklist_ms;
-        if k == 0 || self.node_fault_counts[node] < k {
-            return;
-        }
-        if self.nodes[node].failed || self.nodes[node].cordoned {
-            return; // already out of rotation
-        }
-        let now = self.now();
-        self.nodes[node].cordoned = true;
-        self.blacklist_until[node] = now + SimTime::from_millis(window);
-        self.node_fault_counts[node] = 0;
-        self.chaos_stats.blacklists += 1;
-        self.metrics.inc("node_blacklists", 1);
-        self.q
-            .schedule_in(SimTime::from_millis(window), Ev::ChaosUncordon { node });
-    }
-
-    /// Rescale the pool quota to the surviving node capacity (chaos runs
-    /// only — legacy `node_events` keep the original quota semantics).
-    fn update_chaos_quota(&mut self) {
-        let Some(ch) = &self.chaos else { return };
-        let base = ch.base_quota;
-        if self.scaler.is_none() {
-            return;
-        }
-        let total: u64 = self.nodes.iter().map(|n| n.capacity.cpu_m).sum();
-        let live: u64 = self
-            .nodes
-            .iter()
-            .filter(|n| !n.failed)
-            .map(|n| n.capacity.cpu_m)
-            .sum();
-        let quota = ((base as u128 * live as u128) / total.max(1) as u128) as u64;
-        self.scaler.as_mut().unwrap().set_quota(quota);
-    }
-
-    /// A scheduled pod event is stale when the pod's node was reclaimed
-    /// and its replacement (same index, new incarnation) arrived in the
-    /// meantime. Defense-in-depth: chaos kills are synchronous, so pods
-    /// die with their node — but any completion that slips through must
-    /// not be credited against the new hardware.
-    fn stale_node_event(&mut self, pod: PodId) -> bool {
-        let Some(nid) = self.pods[pod.0 as usize].node else {
-            return false;
-        };
-        if self.pod_bound_inc[pod.0 as usize] != self.node_incarnation[nid.0] {
-            self.chaos_stats.stale_drops += 1;
-            self.metrics.inc("stale_node_events_dropped", 1);
-            return true;
-        }
-        false
-    }
-
-    /// Post-completion advance of a pool worker: ack the delivery, then
-    /// drain, fetch the next message, or go idle. Shared by the normal
-    /// completion path and the speculative-loser path.
-    fn advance_worker(&mut self, pod: PodId, pool: PoolId) {
-        let now = self.now();
-        self.broker.ack(pool);
-        self.record_queue_depth(pool);
-        if self.pods[pod.0 as usize].phase == PodPhase::Draining {
-            self.terminate_pod(pod, PodPhase::Succeeded);
-        } else if let Some(next) = self.broker.fetch(pool) {
-            self.q.schedule_at(
-                now + SimTime::from_millis(self.cfg.fetch_ms),
-                Ev::WorkerFetched { pod, task: next },
-            );
-        } else {
-            self.idle_workers[pool.idx()].push_back(pod);
-        }
-    }
-
-    /// Tenant lane of a task: its instance's tenant in fleet runs, the
-    /// default lane otherwise.
-    fn tenant_of(&self, t: TaskId) -> TenantId {
-        TenantId(self.task_tenant.get(t.0 as usize).copied().unwrap_or(0))
-    }
-
-    /// Route newly-ready tasks to the execution model.
-    fn dispatch_ready(&mut self, ready: &[TaskId]) {
-        let now = self.now();
-        for &t in ready {
-            let ttype = self.engine.dag().tasks[t.0 as usize].ttype;
-            self.trace.ready(t, self.engine.dag().type_name(t), now);
-            match self.pool_of_type[ttype.0 as usize] {
-                Some(pool) => {
-                    self.broker.publish_for(pool, t, self.tenant_of(t));
-                    self.record_queue_depth(pool);
-                    self.wake_idle_worker(pool);
-                }
-                None => {
-                    // job path (with or without clustering)
-                    let action = self.batcher.push(
-                        now,
-                        &self.engine.dag().types[ttype.0 as usize].name,
-                        t,
-                    );
-                    match action {
-                        BatchAction::Flush(batch) => self.create_job(batch),
-                        BatchAction::ArmTimer(deadline) => self.q.schedule_at(
-                            deadline,
-                            Ev::FlushTimer {
-                                type_idx: ttype.0,
-                                deadline,
-                            },
-                        ),
-                        BatchAction::Buffered => {}
-                    }
-                }
-            }
-        }
-    }
-
-    /// Give an idle worker of `pool` a task, if any is queued.
-    fn wake_idle_worker(&mut self, pool: PoolId) {
-        while let Some(&pid) = self.idle_workers[pool.idx()].front() {
-            // skip workers that were deleted while idle
-            if self.pods[pid.0 as usize].phase != PodPhase::Running {
-                self.idle_workers[pool.idx()].pop_front();
-                continue;
-            }
-            if let Some(task) = self.broker.fetch(pool) {
-                self.idle_workers[pool.idx()].pop_front();
-                let now = self.now();
-                self.q.schedule_at(
-                    now + SimTime::from_millis(self.cfg.fetch_ms),
-                    Ev::WorkerFetched { pod: pid, task },
-                );
-            }
-            return;
-        }
-    }
-
-    /// Terminate a pod and free its node resources.
-    fn terminate_pod(&mut self, pid: PodId, phase: PodPhase) {
-        let now = self.now();
-        if self.pods[pid.0 as usize].phase == PodPhase::Pending {
-            self.pending_count -= 1;
-        }
-        // data plane: the pod's in-flight transfer is torn down and its
-        // ephemeral cache entries die with it (crash-loses-cache)
-        if self.data.is_some() {
-            let node = self.pods[pid.0 as usize].node.map(|n| n.0);
-            let mut buf = std::mem::take(&mut self.flow_buf);
-            self.data
-                .as_mut()
-                .expect("data plane")
-                .cancel_pod(now, pid, node, &mut buf);
-            self.schedule_flow_events(buf);
-            self.pod_io[pid.0 as usize] = IoPhase::Idle;
-        }
-        let pod = &mut self.pods[pid.0 as usize];
-        debug_assert!(!pod.is_terminal());
-        let had_node = pod.node;
-        pod.phase = phase;
-        pod.finished_at = Some(now);
-        if let Some(nid) = had_node {
-            let req = pod.requests;
-            self.nodes[nid.0].release(req);
-            self.record_cpu();
-        }
-        if let Some(pool) = self.pods[pid.0 as usize].pool_id() {
-            let dep = &mut self.deployments[pool.idx()];
-            if let Ok(i) = dep.binary_search(&pid) {
-                dep.remove(i);
-            }
-        }
-        self.sched.forget(pid);
-        // pod deletion is an API request too
-        self.api.admit(now);
-        // freed resources: pods in the *active* queue can retry now; pods in
-        // back-off keep sleeping (the paper's §4.2/4.3 pathology).
-        self.run_scheduler();
-    }
-
-    // ---------------------------------------------------------------
-    // fleet service: instance arrival / admission / completion
-    // ---------------------------------------------------------------
-
-    /// An instance arrives (open-loop): admit immediately if a slot is
-    /// free, otherwise join the admission queue (FIFO).
-    fn instance_arrive(&mut self, inst: usize) {
-        let admit = {
-            let fs = self.fleet.as_mut().expect("fleet mode");
-            match fs.max_in_flight {
-                Some(cap) if fs.in_flight >= cap => {
-                    fs.waiting.push_back(inst as u32);
-                    false
-                }
-                _ => true,
-            }
-        };
-        if admit {
-            self.admit_instance(inst);
-        }
-    }
-
-    /// Admit an instance: dispatch its root tasks into the shared cluster.
-    fn admit_instance(&mut self, inst: usize) {
-        let now = self.now();
-        let roots = {
-            let fs = self.fleet.as_mut().expect("fleet mode");
-            fs.in_flight += 1;
-            debug_assert!(fs.admitted_at[inst].is_none(), "double admission");
-            fs.admitted_at[inst] = Some(now);
-            std::mem::take(&mut fs.roots[inst])
-        };
-        self.metrics.inc("instances_admitted", 1);
-        self.dispatch_ready(&roots);
-    }
-
-    /// Per-instance completion bookkeeping after a task finished; frees an
-    /// admission slot (and admits the next waiting instance) when the
-    /// task was its instance's last.
-    fn instance_task_done(&mut self, task: TaskId) {
-        let now = self.now();
-        let inst = self.task_instance[task.0 as usize] as usize;
-        let next = {
-            let fs = self.fleet.as_mut().expect("fleet mode");
-            debug_assert!(fs.outstanding[inst] > 0);
-            fs.outstanding[inst] -= 1;
-            if fs.outstanding[inst] > 0 {
-                return;
-            }
-            fs.finished_at[inst] = Some(now);
-            fs.in_flight -= 1;
-            fs.waiting.pop_front()
-        };
-        self.metrics.inc("instances_completed", 1);
-        if let Some(next) = next {
-            self.admit_instance(next as usize);
-        }
-    }
-
-    // ---------------------------------------------------------------
-    // autoscaler reconciliation
-    // ---------------------------------------------------------------
-    fn autoscale(&mut self) {
-        let now = self.now();
-        // VPA: publish right-sized pod templates to the scaler once a
-        // type's usage estimate is trustworthy
-        if self.cfg.autoscale.vpa {
-            if let Some(s) = &mut self.scaler {
-                for pool in 0..self.pool_type.len() {
-                    let Some(ty) = self.pool_type[pool] else { continue };
-                    let t = &self.engine.dag().types[ty.0 as usize];
-                    if self.completed_by_type[ty.0 as usize] >= self.cfg.autoscale.vpa_min_samples
-                        && t.cpu_used_m != t.requests.cpu_m
-                    {
-                        s.set_pool_requests(pool, Resources::new(t.cpu_used_m, t.requests.mem_mb));
-                    }
-                }
-            }
-        }
-        if self.scaler.is_none() {
-            return;
-        }
-        let n_pools = self.deployments.len();
-        let mut backlogs = std::mem::take(&mut self.backlog_buf);
-        let mut current = std::mem::take(&mut self.current_buf);
-        let mut desired = std::mem::take(&mut self.desired_buf);
-        backlogs.clear();
-        current.clear();
-        for pool in 0..n_pools {
-            backlogs.push(self.broker.queue(PoolId(pool as u16)).backlog());
-            let have = self.deployments[pool].len();
-            current.push(have);
-            self.metrics.set_id(self.g_replicas[pool], now, have as f64);
-        }
-        self.scaler
-            .as_mut()
-            .unwrap()
-            .poll_into(now, &backlogs, &current, &mut desired);
-        let pools_by_name = std::mem::take(&mut self.pools_by_name);
-        for &pool in &pools_by_name {
-            let want = desired[pool.idx()];
-            let have = self.deployments[pool.idx()].len();
-            if want > have {
-                for _ in 0..(want - have) {
-                    self.create_worker(pool);
-                }
-            } else if want < have {
-                self.scale_down(pool, have - want);
-            }
-        }
-        self.pools_by_name = pools_by_name;
-        self.backlog_buf = backlogs;
-        self.current_buf = current;
-        self.desired_buf = desired;
-        self.run_scheduler();
-    }
-
-    /// Remove `n` workers from a pool: pending pods first, then idle
-    /// running workers, then mark busy workers Draining.
-    fn scale_down(&mut self, pool: PoolId, n: usize) {
-        let mut members = std::mem::take(&mut self.members_buf);
-        members.clear();
-        members.extend_from_slice(&self.deployments[pool.idx()]);
-        let mut idle = std::mem::take(&mut self.idle_buf);
-        idle.clear();
-        idle.extend(self.idle_workers[pool.idx()].iter().copied());
-        self.scale_down_phases(pool, n, &members, &idle);
-        self.members_buf = members;
-        self.idle_buf = idle;
-    }
-
-    fn scale_down_phases(&mut self, pool: PoolId, n: usize, members: &[PodId], idle: &[PodId]) {
-        let mut remaining = n;
-        // 1. pending (never scheduled) pods
-        for &pid in members {
-            if remaining == 0 {
-                return;
-            }
-            if self.pods[pid.0 as usize].phase == PodPhase::Pending {
-                self.terminate_pod(pid, PodPhase::Deleted);
-                remaining -= 1;
-            }
-        }
-        // also starting pods that haven't begun work
-        for &pid in members {
-            if remaining == 0 {
-                return;
-            }
-            if self.pods[pid.0 as usize].phase == PodPhase::Starting {
-                self.terminate_pod(pid, PodPhase::Deleted);
-                remaining -= 1;
-            }
-        }
-        // 2. idle running workers
-        for &pid in idle {
-            if remaining == 0 {
-                return;
-            }
-            if self.pods[pid.0 as usize].phase == PodPhase::Running {
-                self.idle_workers[pool.idx()].retain(|&p| p != pid);
-                self.terminate_pod(pid, PodPhase::Deleted);
-                remaining -= 1;
-            }
-        }
-        // 3. drain busy workers (terminate after current task)
-        for &pid in members {
-            if remaining == 0 {
-                return;
-            }
-            let pod = &mut self.pods[pid.0 as usize];
-            if pod.phase == PodPhase::Running {
-                pod.phase = PodPhase::Draining;
-                remaining -= 1;
-            }
-        }
-    }
-
-    // ---------------------------------------------------------------
-    // event handlers
-    // ---------------------------------------------------------------
-    fn handle(&mut self, ev: Ev) {
-        match ev {
-            Ev::JobAdmitted { pod } => {
-                // job controller creates the pod object after its reconcile
-                let done = self.api.admit(self.now())
-                    + SimTime::from_millis(self.cfg.job_controller_ms);
-                self.q.schedule_at(done, Ev::PodCreated { pod });
-            }
-            Ev::PodCreated { pod } => {
-                if self.pods[pod.0 as usize].phase == PodPhase::Pending {
-                    self.sched.enqueue(pod);
-                    self.run_scheduler();
-                }
-            }
-            Ev::BackoffExpire { pod } => {
-                if self.pods[pod.0 as usize].phase == PodPhase::Pending
-                    && self.sched.is_sleeping(pod)
-                {
-                    self.sched.enqueue(pod);
-                    self.run_scheduler();
-                }
-            }
-            Ev::PodStarted { pod } => {
-                let now = self.now();
-                if self.pods[pod.0 as usize].is_terminal() {
-                    return; // deleted while starting
-                }
-                if self.stale_node_event(pod) {
-                    return; // bound to a node incarnation that no longer exists
-                }
-                // chaos: crash at container start (PodFailure injector —
-                // the migrated sim.pod_failure_prob knob included)
-                let crash = match &mut self.chaos {
-                    Some(ch) if ch.pod_fail_prob > 0.0 => ch.pod_rng.f64() < ch.pod_fail_prob,
-                    _ => false,
-                };
-                if crash {
-                    self.pod_start_failure(pod);
-                    return;
-                }
-                let work = {
-                    let p = &mut self.pods[pod.0 as usize];
-                    p.phase = PodPhase::Running;
-                    p.running_at = Some(now);
-                    match &mut p.payload {
-                        // move the batch into the execution queue — the
-                        // remainder lives in `batch_queue` from here on
-                        Payload::JobBatch { tasks } => PodWork::Batch(std::mem::take(tasks)),
-                        Payload::Worker { pool } => PodWork::Pool(*pool),
-                    }
-                };
-                match work {
-                    PodWork::Batch(tasks) => {
-                        self.batch_queue[pod.0 as usize] = tasks.into();
-                        let first = self.batch_queue[pod.0 as usize]
-                            .front()
-                            .copied()
-                            .expect("non-empty batch");
-                        self.begin_task(pod, first);
-                    }
-                    PodWork::Pool(pool) => {
-                        if let Some(task) = self.broker.fetch(pool) {
-                            self.q.schedule_at(
-                                now + SimTime::from_millis(self.cfg.fetch_ms),
-                                Ev::WorkerFetched { pod, task },
-                            );
-                        } else {
-                            self.idle_workers[pool.idx()].push_back(pod);
-                        }
-                    }
-                }
-            }
-            Ev::WorkerFetched { pod, task } => {
-                if self.pods[pod.0 as usize].is_terminal() {
-                    // worker deleted between fetch and start: requeue on
-                    // the pod's own pool (its payload outlives deletion)
-                    if let Some(pool) = self.pods[pod.0 as usize].pool_id() {
-                        self.broker.nack_requeue(pool, task, self.tenant_of(task));
-                        self.wake_idle_worker(pool);
-                    }
-                    return;
-                }
-                // chaos/speculation: the task already completed elsewhere
-                // (its other copy won, or it was requeued after a fault
-                // and then finished) — drop the stale delivery
-                if self.engine.state(task) == TaskState::Done {
-                    if let Some(pool) = self.pods[pod.0 as usize].pool_id() {
-                        self.advance_worker(pod, pool);
-                    }
-                    return;
-                }
-                self.begin_task(pod, task);
-            }
-            Ev::TaskDone { pod, task } => {
-                if self.pods[pod.0 as usize].is_terminal()
-                    || self.current_task[pod.0 as usize] != Some(task)
-                {
-                    return; // pod was killed; the task was requeued/recreated
-                }
-                if self.stale_node_event(pod) {
-                    return; // completion from a node incarnation that is gone
-                }
-                let now = self.now();
-                let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
-                // execution time of this run, net of the fixed executor
-                // overhead — same definition as account_lost_work, so
-                // goodput's numerator and denominator are commensurate
-                let elapsed = now
-                    .saturating_sub(self.pod_task_started_at[pod.0 as usize])
-                    .as_millis();
-                let exec_ms = elapsed.saturating_sub(self.cfg.exec_overhead_ms.min(elapsed));
-                // speculative duplicate that lost the race: the task
-                // already completed in its other copy (or, with the data
-                // plane, its twin's stage-out is already in flight) — the
-                // whole run is wasted work, and the worker simply moves on
-                if self.engine.state(task) == TaskState::Done
-                    || (self.data.is_some() && self.task_out_pending[task.0 as usize])
-                {
-                    self.current_task[pod.0 as usize] = None;
-                    self.pod_io[pod.0 as usize] = IoPhase::Idle;
-                    self.record_running(ttype, -1);
-                    self.task_running[task.0 as usize] -= 1;
-                    self.chaos_stats
-                        .add_waste(self.tenant_of(task).idx(), exec_ms);
-                    self.metrics.inc("speculative_losses", 1);
-                    if let Some(pool) = self.pods[pod.0 as usize].pool_id() {
-                        self.advance_worker(pod, pool);
-                    }
-                    return;
-                }
-                if self.data.is_some() {
-                    // the execution is done but the output write is not:
-                    // successors wait for the stage-out (write-through
-                    // shared storage). `current_task` stays set so a kill
-                    // during the write re-runs the task — and ALL success
-                    // accounting (useful work, completed-by-type, compute
-                    // time) waits for the write to land in finish_task,
-                    // or the re-run would be counted twice.
-                    self.record_running(ttype, -1);
-                    self.task_running[task.0 as usize] -= 1;
-                    self.pod_exec_ms[pod.0 as usize] = exec_ms;
-                    self.begin_stage_out_for(pod, task);
-                    return;
-                }
-                if self.chaos.is_some() {
-                    self.chaos_stats.useful_ms += exec_ms;
-                }
-                self.current_task[pod.0 as usize] = None;
-                self.pod_io[pod.0 as usize] = IoPhase::Idle;
-                self.trace.finished(task, now);
-                self.record_running(ttype, -1);
-                self.task_running[task.0 as usize] -= 1;
-                self.completed_by_type[ttype.0 as usize] += 1;
-                // readiness propagation through the reusable scratch buffer
-                let mut ready = std::mem::take(&mut self.ready_buf);
-                ready.clear();
-                self.engine.complete_into(task, &mut ready);
-                self.dispatch_ready(&ready);
-                self.ready_buf = ready;
-                // fleet: per-instance completion + admission-slot release
-                if self.fleet.is_some() {
-                    self.instance_task_done(task);
-                }
-                // advance the pod
-                match self.pods[pod.0 as usize].pool_id() {
-                    None => {
-                        self.batch_queue[pod.0 as usize].pop_front();
-                        if let Some(&next) = self.batch_queue[pod.0 as usize].front() {
-                            self.start_task(pod, next);
-                        } else {
-                            self.terminate_pod(pod, PodPhase::Succeeded);
-                        }
-                    }
-                    Some(pool) => self.advance_worker(pod, pool),
-                }
-            }
-            Ev::FlushTimer { type_idx, deadline } => {
-                let batch = self
-                    .batcher
-                    .timer_fired(&self.engine.dag().types[type_idx as usize].name, deadline);
-                if let Some(batch) = batch {
-                    self.create_job(batch);
-                }
-            }
-            Ev::NodeEvent { node, up } => {
-                if up {
-                    self.nodes[node].failed = false;
-                    self.run_scheduler(); // capacity restored
-                } else {
-                    self.fail_node(node);
-                }
-            }
-            Ev::InstanceArrive { inst } => {
-                self.instance_arrive(inst as usize);
-            }
-            Ev::ChaosFault { proc_idx, node } => {
-                self.apply_fault(proc_idx as usize, node);
-                // lazy Poisson process: draw + schedule the next strike
-                self.schedule_next_fault(proc_idx as usize);
-            }
-            Ev::ChaosReclaim { node, replace_ms } => {
-                self.drain_pending[node] = false;
-                if !self.nodes[node].failed {
-                    self.chaos_stats.spot_reclaims += 1;
-                    self.metrics.inc("spot_reclaims", 1);
-                    self.fail_node_inner(node, true);
-                    self.q
-                        .schedule_in(SimTime::from_millis(replace_ms), Ev::ChaosRestore { node });
-                }
-                // if a crash beat the warning to it, the crash's own
-                // restore will bring the replacement up
-            }
-            Ev::ChaosRestore { node } => {
-                // replacement capacity: same slot, fresh incarnation
-                self.node_incarnation[node] += 1;
-                self.nodes[node].failed = false;
-                self.nodes[node].cordoned = false;
-                self.drain_pending[node] = false;
-                self.blacklist_until[node] = SimTime::ZERO;
-                self.node_fault_counts[node] = 0;
-                // replacement hardware rolls the straggler dice again
-                let resample = self.chaos.as_mut().and_then(|ch| {
-                    ch.straggler
-                        .map(|(frac, factor)| if ch.node_rng.f64() < frac { factor } else { 1.0 })
-                });
-                if let Some(slow) = resample {
-                    self.node_slow[node] = slow;
-                }
-                self.update_chaos_quota();
-                self.metrics.inc("nodes_restored", 1);
-                self.run_scheduler();
-            }
-            Ev::ChaosUncordon { node } => {
-                let now = self.now();
-                if !self.nodes[node].failed
-                    && !self.drain_pending[node]
-                    && self.blacklist_until[node] <= now
-                    && self.nodes[node].cordoned
-                {
-                    self.nodes[node].cordoned = false;
-                    self.run_scheduler();
-                }
-            }
-            Ev::ChaosRetryTask { task } => {
-                if self.engine.state(task) == TaskState::Done {
-                    return; // a speculative copy landed it in the meantime
-                }
-                if self.task_running[task.0 as usize] > 0 {
-                    return; // a copy started while the back-off ran; it owns the work
-                }
-                let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
-                match self.pool_of_type[ttype.0 as usize] {
-                    Some(pool) => {
-                        self.broker.publish_for(pool, task, self.tenant_of(task));
-                        self.record_queue_depth(pool);
-                        self.wake_idle_worker(pool);
-                    }
-                    // defensive: a task of an unpooled type re-enters as a
-                    // single-task job
-                    None => self.create_job(vec![task]),
-                }
-            }
-            Ev::ChaosRetryBatch { tasks } => {
-                self.create_job(tasks);
-            }
-            Ev::SpecCheck { pod, task } => {
-                // still running in this pod after spec_factor x nominal?
-                if self.pods[pod.0 as usize].is_terminal()
-                    || self.current_task[pod.0 as usize] != Some(task)
-                    || self.engine.state(task) == TaskState::Done
-                    || self.spec_launched[task.0 as usize]
-                {
-                    return;
-                }
-                self.spec_launched[task.0 as usize] = true;
-                self.chaos_stats.speculations += 1;
-                self.metrics.inc("speculative_copies", 1);
-                let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
-                if let Some(pool) = self.pool_of_type[ttype.0 as usize] {
-                    self.broker.publish_for(pool, task, self.tenant_of(task));
-                    self.record_queue_depth(pool);
-                    self.wake_idle_worker(pool);
-                }
-            }
-            Ev::FlowActivate { flow, gen } => {
-                let now = self.now();
-                let mut buf = std::mem::take(&mut self.flow_buf);
-                if let Some(dp) = &mut self.data {
-                    dp.activate(now, flow, gen, &mut buf);
-                }
-                self.schedule_flow_events(buf);
-            }
-            Ev::FlowDone { flow, gen } => {
-                let now = self.now();
-                let mut buf = std::mem::take(&mut self.flow_buf);
-                let done = self
-                    .data
-                    .as_mut()
-                    .and_then(|dp| dp.flow_done(now, flow, gen, &mut buf));
-                self.schedule_flow_events(buf);
-                let Some(d) = done else { return };
-                // a completing flow implies a live pod (kills cancel their
-                // flows synchronously) — but stay defensive
-                if self.pods[d.pod.0 as usize].is_terminal()
-                    || self.current_task[d.pod.0 as usize] != Some(d.task)
-                {
-                    return;
-                }
-                if d.inbound {
-                    self.start_task(d.pod, d.task);
-                } else {
-                    self.finish_task(d.pod, d.task);
-                }
-            }
-            Ev::AutoscaleTick => {
-                self.autoscale();
-                if !self.engine.is_done() {
-                    let poll = self
-                        .scaler
-                        .as_ref()
-                        .map(|s| s.cfg.poll_ms)
-                        .unwrap_or(15_000);
-                    self.q
-                        .schedule_in(SimTime::from_millis(poll), Ev::AutoscaleTick);
-                }
-            }
-        }
-    }
-}
-
-/// Construct the simulated world (cluster, control plane, pools, gauges)
-/// for a workflow + execution model, returning the initially-ready tasks
-/// for the caller to dispatch — at t=0 ([`run`]) or per instance arrival
-/// ([`run_fleet`]).
-fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
-    let (engine, initial_ready) = Engine::new(dag);
-
-    let batcher = match model {
-        ExecModel::Clustered(c) => Batcher::new(c.clone()),
-        _ => Batcher::new(ClusteringConfig::none()),
-    };
-
-    let n_types = engine.dag().types.len();
-    // generic-pool pod template: max requests over every task type (§3.3's
-    // "universal image" problem, resource-wise)
-    let generic_requests = engine
-        .dag()
-        .types
-        .iter()
-        .fold(Resources::ZERO, |acc, t| Resources {
-            cpu_m: acc.cpu_m.max(t.requests.cpu_m),
-            mem_mb: acc.mem_mb.max(t.requests.mem_mb),
-        });
-
-    // Intern every pool up front: PoolId = declaration order, aligned with
-    // the autoscaler's spec indices and the broker's queue indices.
-    let mut broker = Broker::new();
-    let mut pool_type: Vec<Option<TypeId>> = Vec::new();
-    let mut pool_of_type: Vec<Option<PoolId>> = vec![None; n_types];
-    let mut specs: Vec<PoolSpec> = Vec::new();
-    match model {
-        ExecModel::WorkerPools { pooled_types } => {
-            for t in pooled_types {
-                let ty = engine
-                    .dag()
-                    .type_id(t)
-                    .unwrap_or_else(|| panic!("pooled type '{t}' not in workflow"));
-                let id = broker.declare(t);
-                assert_eq!(id.idx(), pool_type.len(), "duplicate pooled type '{t}'");
-                pool_type.push(Some(ty));
-                pool_of_type[ty.0 as usize] = Some(id);
-                specs.push(PoolSpec {
-                    name: t.clone(),
-                    requests: engine.dag().types[ty.0 as usize].requests,
-                });
-            }
-        }
-        ExecModel::GenericPool => {
-            let id = broker.declare(GENERIC_POOL);
-            pool_type.push(None);
-            for slot in pool_of_type.iter_mut() {
-                *slot = Some(id);
-            }
-            specs.push(PoolSpec {
-                name: GENERIC_POOL.to_string(),
-                requests: generic_requests,
-            });
-        }
-        _ => {}
-    }
-    let n_pools = pool_type.len();
-    let scaler = (n_pools > 0).then(|| Autoscaler::new(cfg.autoscale.clone(), specs));
-
-    let mut pools_by_name: Vec<PoolId> = (0..n_pools).map(|i| PoolId(i as u16)).collect();
-    pools_by_name.sort_by(|a, b| broker.name(*a).cmp(broker.name(*b)));
-
-    // pre-resolve the hot gauges (see §Perf)
-    let mut metrics = Registry::new();
-    let g_running = metrics.gauge_id("running_tasks");
-    let g_cpu = metrics.gauge_id("cpu_allocated_m");
-    let g_pending = metrics.gauge_id("pending_pods");
-    let g_by_type: Vec<GaugeId> = engine
-        .dag()
-        .types
-        .iter()
-        .map(|t| metrics.gauge_id(&format!("running::{}", t.name)))
-        .collect();
-    let g_queue: Vec<GaugeId> = (0..n_pools)
-        .map(|i| metrics.gauge_id(&format!("queue::{}", broker.name(PoolId(i as u16)))))
-        .collect();
-    let g_replicas: Vec<GaugeId> = (0..n_pools)
-        .map(|i| metrics.gauge_id(&format!("replicas::{}", broker.name(PoolId(i as u16)))))
-        .collect();
-
-    let n_tasks = engine.dag().len();
-    let chaos = ChaosRuntime::build(
-        &cfg.chaos,
-        cfg.pod_failure_prob,
-        model,
-        cfg.seed,
-        cfg.autoscale.quota_cpu_m,
-    );
-    let chaos_enabled = chaos.is_some();
-    // data plane: file tables + caches derived from the DAG's annotations
-    let data = cfg
-        .data
-        .as_ref()
-        .map(|dc| DataPlane::new(dc.clone(), engine.dag(), cfg.nodes));
-    let task_out_pending = if data.is_some() {
-        vec![false; n_tasks]
-    } else {
-        Vec::new()
-    };
-    // per-task chaos tables (healthy runs read work_left in start_task too,
-    // so it always mirrors the DAG durations)
-    let task_work_left: Vec<SimTime> = engine.dag().tasks.iter().map(|t| t.duration).collect();
-
-    let mut world = World {
-        chaos,
-        chaos_stats: ChaosStats {
-            enabled: chaos_enabled,
-            ..Default::default()
-        },
-        node_slow: vec![1.0; cfg.nodes],
-        node_incarnation: vec![0; cfg.nodes],
-        node_fault_counts: vec![0; cfg.nodes],
-        drain_pending: vec![false; cfg.nodes],
-        blacklist_until: vec![SimTime::ZERO; cfg.nodes],
-        pod_bound_inc: Vec::new(),
-        pod_task_started_at: Vec::new(),
-        task_work_left,
-        task_attempts: vec![0; n_tasks],
-        task_fault_at: vec![NO_FAULT; n_tasks],
-        spec_launched: vec![false; n_tasks],
-        task_running: vec![0; n_tasks],
-        nodes: paper_cluster(cfg.nodes),
-        sched: Scheduler::new(cfg.sched.clone()),
-        api: ApiServer::new(cfg.api.clone()),
-        engine,
-        batcher,
-        broker,
-        scaler,
-        deployments: vec![Vec::new(); n_pools],
-        idle_workers: vec![VecDeque::new(); n_pools],
-        pool_type,
-        pool_of_type,
-        pools_by_name,
-        batch_queue: Vec::new(),
-        current_task: Vec::new(),
-        throttle_wait: VecDeque::new(),
-        jobs_in_flight: 0,
-        generic_requests,
-        metrics,
-        trace: Trace::new(),
-        running_tasks: 0,
-        pending_count: 0,
-        completed_by_type: vec![0; n_types],
-        data,
-        pod_io: Vec::new(),
-        pod_exec_ms: Vec::new(),
-        task_out_pending,
-        flow_buf: Vec::new(),
-        fleet: None,
-        task_instance: Vec::new(),
-        task_tenant: Vec::new(),
-        g_running,
-        g_cpu,
-        g_pending,
-        g_by_type,
-        g_queue,
-        g_replicas,
-        q: EventQueue::new(),
-        pods: Vec::new(),
-        ready_buf: Vec::new(),
-        pass_buf: SchedulePass::default(),
-        members_buf: Vec::new(),
-        idle_buf: Vec::new(),
-        backlog_buf: Vec::new(),
-        current_buf: Vec::new(),
-        desired_buf: Vec::new(),
-        cfg,
-    };
-
-    world.metrics.set_id(world.g_running, SimTime::ZERO, 0.0);
-    // schedule the configured node failures (moved out and back rather
-    // than cloning the whole Vec per run)
-    let node_events = std::mem::take(&mut world.cfg.node_events);
-    for &(at_ms, node, up) in &node_events {
-        assert!(node < world.nodes.len(), "node event for unknown node {node}");
-        world
-            .q
-            .schedule_at(SimTime::from_millis(at_ms), Ev::NodeEvent { node, up });
-    }
-    world.cfg.node_events = node_events;
-    // chaos: sample the straggler table and arm every timed injector
-    let straggler = world.chaos.as_ref().and_then(|c| c.straggler);
-    if let Some((frac, factor)) = straggler {
-        let n = world.nodes.len();
-        let slow = {
-            let ch = world.chaos.as_mut().expect("chaos runtime");
-            sample_node_slowdowns(n, frac, factor, &mut ch.node_rng)
-        };
-        world.node_slow = slow;
-    }
-    let n_processes = world.chaos.as_ref().map(|c| c.processes.len()).unwrap_or(0);
-    for i in 0..n_processes {
-        world.schedule_next_fault(i);
-    }
-    (world, initial_ready)
-}
-
-/// Pump the event loop until every workflow task completed (or the wall
-/// cap fires); returns the makespan and the processed event count.
-fn drive(world: &mut World) -> (SimTime, u64) {
-    let max_ms = (world.cfg.max_sim_s * 1000.0) as u64;
-    let mut makespan = SimTime::ZERO;
-    let mut sim_events: u64 = 0;
-    while let Some((t, ev)) = world.q.pop() {
-        if t.as_millis() > max_ms {
-            log::warn!(
-                "simulation wall cap hit at {t} with {} tasks outstanding",
-                world.engine.n_outstanding()
-            );
-            break;
-        }
-        sim_events += 1;
-        world.handle(ev);
-        if world.engine.is_done() {
-            makespan = world.q.now();
-            break;
-        }
-    }
-    assert!(
-        world.engine.is_done(),
-        "simulation ended with {} of {} tasks incomplete (deadlock?)",
-        world.engine.n_outstanding(),
-        world.engine.dag().len()
-    );
-    (makespan, sim_events)
-}
-
-/// Fold the finished world into a [`SimResult`].
-fn summarize(world: World, model_name: String, makespan: SimTime, sim_events: u64) -> SimResult {
-    let t_end = makespan.as_secs_f64();
-    let avg_running = world
-        .metrics
-        .gauge("running_tasks")
-        .map(|s| s.time_average(0.0, t_end))
-        .unwrap_or(0.0);
-    let total_cpu = world.cfg.nodes as f64 * 4_000.0;
-    let avg_cpu = world
-        .metrics
-        .gauge("cpu_allocated_m")
-        .map(|s| s.time_average(0.0, t_end) / total_cpu)
-        .unwrap_or(0.0);
-
-    SimResult {
-        model_name,
-        makespan,
-        data: world
-            .data
-            .as_ref()
-            .map(|d| d.report())
-            .unwrap_or_default(),
-        pods_created: world.metrics.counter("pods_created"),
-        api_requests: world.api.requests_total,
-        sched_backoffs: world.sched.backoffs_total,
-        sched_binds: world.sched.binds_total,
-        sim_events,
-        avg_running_tasks: avg_running,
-        avg_cpu_utilization: avg_cpu,
-        chaos: world.chaos_stats.report(),
-        trace: world.trace,
-        metrics: world.metrics,
-    }
-}
-
-/// Run a workflow under an execution model on the simulated cluster.
-pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
-    let model_name = model.name().to_string();
-    let (mut world, initial_ready) = build(dag, &model, cfg);
-    world.dispatch_ready(&initial_ready);
-    if world.scaler.is_some() {
-        // first poll fires quickly so pools can start warming up
-        world
-            .q
-            .schedule_in(SimTime::from_millis(1_000), Ev::AutoscaleTick);
-    }
-    let (makespan, sim_events) = drive(&mut world);
-    summarize(world, model_name, makespan, sim_events)
-}
-
-/// Run an open-loop fleet of workflow instances on one shared cluster.
-///
-/// `dag` is the [`Dag::disjoint_union`] of every instance; `plan` maps
-/// each instance to its contiguous task range, tenant, and arrival time,
-/// and carries the tenant fair-share weights plus the admission cap. Each
-/// instance's root tasks are dispatched when the instance is *admitted*
-/// (at arrival, or when a slot frees under the cap); everything downstream
-/// — readiness, batching, pools, autoscaling — is the single-run
-/// machinery operating on the aggregate workload. Returns the overall
-/// [`SimResult`] plus one [`InstanceOutcome`] per instance (same order as
-/// `plan.instances`), from which per-tenant SLO statistics are derived by
-/// [`crate::fleet::report`].
-pub fn run_fleet(
-    dag: Dag,
-    model: ExecModel,
-    cfg: SimConfig,
-    plan: &FleetPlan,
-) -> (SimResult, Vec<InstanceOutcome>) {
-    let model_name = format!("fleet/{}", model.name());
-    let n_tasks = dag.len();
-    // validate the plan: contiguous instance ranges covering the union DAG
-    assert!(!plan.tenant_weights.is_empty(), "at least one tenant");
-    assert!(
-        plan.max_in_flight != Some(0),
-        "admission cap of 0 would never admit an instance"
-    );
-    let mut expect = 0u32;
-    for s in &plan.instances {
-        assert_eq!(s.first_task, expect, "instance ranges must be contiguous");
-        assert!(s.n_tasks > 0, "empty workflow instance");
-        assert!(
-            (s.tenant as usize) < plan.tenant_weights.len(),
-            "instance tenant {} has no weight entry",
-            s.tenant
-        );
-        expect += s.n_tasks;
-    }
-    assert_eq!(expect as usize, n_tasks, "instance ranges must cover the DAG");
-
-    let (mut world, initial_ready) = build(dag, &model, cfg);
-    world.broker.set_tenant_weights(&plan.tenant_weights);
-    // per-tenant resilience accounting (wasted work / retries per lane)
-    world.chaos_stats.set_tenants(plan.tenant_weights.len());
-    // per-tenant bytes-moved lanes for the data plane, when enabled
-    if let Some(dp) = &mut world.data {
-        dp.stats.set_tenants(plan.tenant_weights.len());
-    }
-
-    // per-task instance/tenant tables (the disjoint-union offset scheme)
-    let mut task_instance = vec![0u32; n_tasks];
-    let mut task_tenant = vec![0u16; n_tasks];
-    for (i, s) in plan.instances.iter().enumerate() {
-        let range = s.first_task as usize..(s.first_task + s.n_tasks) as usize;
-        task_instance[range.clone()].fill(i as u32);
-        task_tenant[range].fill(s.tenant);
-    }
-    // hold each instance's roots back until it is admitted
-    let mut roots: Vec<Vec<TaskId>> = vec![Vec::new(); plan.instances.len()];
-    for &t in &initial_ready {
-        roots[task_instance[t.0 as usize] as usize].push(t);
-    }
-    world.task_instance = task_instance;
-    world.task_tenant = task_tenant;
-    world.fleet = Some(FleetState {
-        outstanding: plan.instances.iter().map(|s| s.n_tasks).collect(),
-        roots,
-        admitted_at: vec![None; plan.instances.len()],
-        finished_at: vec![None; plan.instances.len()],
-        waiting: VecDeque::new(),
-        in_flight: 0,
-        max_in_flight: plan.max_in_flight,
-    });
-    for (i, s) in plan.instances.iter().enumerate() {
-        world.q.schedule_at(
-            SimTime::from_millis(s.arrival_ms),
-            Ev::InstanceArrive { inst: i as u32 },
-        );
-    }
-    if world.scaler.is_some() {
-        world
-            .q
-            .schedule_in(SimTime::from_millis(1_000), Ev::AutoscaleTick);
-    }
-
-    let (makespan, sim_events) = drive(&mut world);
-
-    let fs = world.fleet.take().expect("fleet state");
-    debug_assert!(fs.waiting.is_empty() && fs.in_flight == 0);
-    let outcomes = plan
-        .instances
-        .iter()
-        .enumerate()
-        .map(|(i, s)| InstanceOutcome {
-            tenant: s.tenant,
-            arrival: SimTime::from_millis(s.arrival_ms),
-            admitted: fs.admitted_at[i].expect("instance never admitted"),
-            finished: fs.finished_at[i].expect("instance never finished"),
-            n_tasks: s.n_tasks,
-        })
-        .collect();
-    (summarize(world, model_name, makespan, sim_events), outcomes)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::workflow::montage::{generate, MontageConfig};
-
-    fn small_dag() -> Dag {
-        generate(&MontageConfig {
-            grid_w: 3,
-            grid_h: 3,
-            diagonals: true,
-            seed: 1,
-        })
-    }
-
-    #[test]
-    fn job_based_completes_small_workflow() {
-        let res = run(small_dag(), ExecModel::JobBased, SimConfig::with_nodes(4));
-        assert!(res.makespan > SimTime::ZERO);
-        // every task got its own pod
-        assert_eq!(res.pods_created as usize, small_dag().len());
-        assert!(res.avg_running_tasks > 0.0);
-        assert!(res.sim_events > 0);
-    }
-
-    #[test]
-    fn clustered_uses_fewer_pods() {
-        let dag = small_dag();
-        let n = dag.len();
-        let res = run(
-            dag,
-            ExecModel::Clustered(ClusteringConfig::paper_default()),
-            SimConfig::with_nodes(4),
-        );
-        assert!(
-            (res.pods_created as usize) < n,
-            "clustering must reduce pod count: {} vs {n}",
-            res.pods_created
-        );
-    }
-
-    #[test]
-    fn worker_pools_completes() {
-        let res = run(
-            small_dag(),
-            ExecModel::paper_hybrid_pools(),
-            SimConfig::with_nodes(4),
-        );
-        assert!(res.makespan > SimTime::ZERO);
-        assert!(res.avg_running_tasks > 0.0);
-    }
-
-    #[test]
-    fn all_tasks_traced_exactly_once() {
-        for model in [
-            ExecModel::JobBased,
-            ExecModel::Clustered(ClusteringConfig::paper_default()),
-            ExecModel::paper_hybrid_pools(),
-        ] {
-            let dag = small_dag();
-            let n = dag.len();
-            let res = run(dag, model, SimConfig::with_nodes(4));
-            assert_eq!(res.trace.records.len(), n);
-            for r in &res.trace.records {
-                assert!(r.started_at.is_some(), "{:?} never started", r.task);
-                assert!(r.finished_at.is_some(), "{:?} never finished", r.task);
-                assert!(r.started_at.unwrap() >= r.ready_at);
-                assert!(r.finished_at.unwrap() > r.started_at.unwrap());
-            }
-        }
-    }
-
-    #[test]
-    fn dependencies_respected_in_trace() {
-        let dag = small_dag();
-        let succs: Vec<(TaskId, Vec<TaskId>)> = (0..dag.len())
-            .map(|i| {
-                let t = TaskId(i as u32);
-                (t, dag.successors(t).to_vec())
-            })
-            .collect();
-        let res = run(dag, ExecModel::JobBased, SimConfig::with_nodes(4));
-        for (t, ss) in succs {
-            let t_fin = res.trace.record(t).unwrap().finished_at.unwrap();
-            for s in ss {
-                let s_start = res.trace.record(s).unwrap().started_at.unwrap();
-                assert!(
-                    s_start >= t_fin,
-                    "dependency violated: {s:?} started before {t:?} finished"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn pools_beat_plain_jobs_on_parallel_stage_heavy_workflow() {
-        let mk = || {
-            generate(&MontageConfig {
-                grid_w: 6,
-                grid_h: 6,
-                diagonals: true,
-                seed: 2,
-            })
-        };
-        let jobs = run(mk(), ExecModel::JobBased, SimConfig::with_nodes(4));
-        let pools = run(mk(), ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4));
-        assert!(
-            pools.makespan < jobs.makespan,
-            "pools {} vs jobs {}",
-            pools.makespan,
-            jobs.makespan
-        );
-    }
-
-    #[test]
-    fn deterministic_given_seed() {
-        let a = run(small_dag(), ExecModel::JobBased, SimConfig::with_nodes(4));
-        let b = run(small_dag(), ExecModel::JobBased, SimConfig::with_nodes(4));
-        assert_eq!(a.makespan, b.makespan);
-        assert_eq!(a.pods_created, b.pods_created);
-        assert_eq!(a.api_requests, b.api_requests);
-    }
-
-    #[test]
-    fn generic_pool_completes_but_wastes_resources() {
-        // wide parallel stages: the generic pod template (max requests over
-        // all types = mAdd's 2000m) halves the worker slots (§3.3)
-        let mk = || {
-            generate(&MontageConfig {
-                grid_w: 10,
-                grid_h: 10,
-                diagonals: true,
-                seed: 4,
-            })
-        };
-        let dag = mk();
-        let n = dag.len();
-        let generic = run(dag, ExecModel::GenericPool, SimConfig::with_nodes(4));
-        assert_eq!(generic.trace.records.len(), n);
-        let typed = run(
-            mk(),
-            ExecModel::WorkerPools {
-                pooled_types: crate::workflow::montage::TYPE_NAMES
-                    .iter()
-                    .map(|s| s.to_string())
-                    .collect(),
-            },
-            SimConfig::with_nodes(4),
-        );
-        assert!(
-            typed.makespan < generic.makespan,
-            "typed {} vs generic {}",
-            typed.makespan,
-            generic.makespan
-        );
-    }
-
-    #[test]
-    fn job_throttle_cuts_backoffs_and_makespan() {
-        // §5 future work: "improvement of the job queuing mechanism in the
-        // job-based model to reduce the number of requested Pods, thus
-        // mitigating the main flaw of the model" — confirmed.
-        let mk = || {
-            generate(&MontageConfig {
-                grid_w: 8,
-                grid_h: 8,
-                diagonals: true,
-                seed: 4,
-            })
-        };
-        let mut throttled_cfg = SimConfig::with_nodes(4);
-        throttled_cfg.max_pending_pods = Some(8);
-        let throttled = run(mk(), ExecModel::JobBased, throttled_cfg);
-        let unthrottled = run(mk(), ExecModel::JobBased, SimConfig::with_nodes(4));
-        assert_eq!(throttled.trace.records.len(), mk().len());
-        assert!(
-            throttled.sched_backoffs < unthrottled.sched_backoffs / 2,
-            "throttle should slash back-offs: {} vs {}",
-            throttled.sched_backoffs,
-            unthrottled.sched_backoffs
-        );
-        assert!(
-            throttled.makespan <= unthrottled.makespan,
-            "throttle should not slow the run: {} vs {}",
-            throttled.makespan,
-            unthrottled.makespan
-        );
-        assert!(throttled.metrics.counter("throttled_batches") > 0);
-    }
-
-    #[test]
-    fn vpa_rightsizing_speeds_up_pools() {
-        // §5 future work: with VPA, workers request observed usage
-        // (mDiffFit 300m vs 500m requested) -> more fit per node
-        let mk = || {
-            generate(&MontageConfig {
-                grid_w: 14,
-                grid_h: 14,
-                diagonals: true,
-                seed: 6,
-            })
-        };
-        let mut vpa_cfg = SimConfig::with_nodes(4);
-        vpa_cfg.autoscale.vpa = true;
-        let with_vpa = run(mk(), ExecModel::paper_hybrid_pools(), vpa_cfg);
-        let without = run(mk(), ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4));
-        assert_eq!(with_vpa.trace.records.len(), mk().len());
-        assert!(
-            with_vpa.makespan < without.makespan,
-            "VPA {} vs {}",
-            with_vpa.makespan,
-            without.makespan
-        );
-        // capacity still never exceeded
-        let cap = 4.0 * 4000.0;
-        for &(_, v) in with_vpa.metrics.gauge("cpu_allocated_m").unwrap().points() {
-            assert!(v <= cap + 1e-9);
-        }
-    }
-
-    #[test]
-    fn node_failure_recovers_all_tasks() {
-        for model in [
-            ExecModel::JobBased,
-            ExecModel::Clustered(ClusteringConfig::paper_default()),
-            ExecModel::paper_hybrid_pools(),
-        ] {
-            let dag = small_dag();
-            let n = dag.len();
-            let mut cfg = SimConfig::with_nodes(4);
-            // node 0 dies mid-run, comes back much later
-            cfg.node_events = vec![(30_000, 0, false), (200_000, 0, true)];
-            let res = run(dag, model.clone(), cfg);
-            assert_eq!(res.trace.records.len(), n, "{}", model.name());
-            assert!(res.metrics.counter("node_failures") == 1);
-            for r in &res.trace.records {
-                assert!(r.finished_at.is_some(), "{:?} lost", r.task);
-            }
-        }
-    }
-
-    fn two_instance_plan(n_a: u32, n_b: u32, arrival_b_ms: u64, cap: Option<usize>) -> FleetPlan {
-        FleetPlan {
-            instances: vec![
-                crate::fleet::InstanceSpec {
-                    tenant: 0,
-                    arrival_ms: 0,
-                    first_task: 0,
-                    n_tasks: n_a,
-                },
-                crate::fleet::InstanceSpec {
-                    tenant: 1,
-                    arrival_ms: arrival_b_ms,
-                    first_task: n_a,
-                    n_tasks: n_b,
-                },
-            ],
-            tenant_weights: vec![1, 1],
-            max_in_flight: cap,
-        }
-    }
-
-    #[test]
-    fn fleet_two_instances_complete_concurrently() {
-        let (a, b) = (small_dag(), small_dag());
-        let (n_a, n_b) = (a.len() as u32, b.len() as u32);
-        let union = Dag::disjoint_union(&[a, b]);
-        let plan = two_instance_plan(n_a, n_b, 30_000, None);
-        let (res, outcomes) = run_fleet(
-            union,
-            ExecModel::paper_hybrid_pools(),
-            SimConfig::with_nodes(4),
-            &plan,
-        );
-        assert_eq!(res.trace.records.len(), (n_a + n_b) as usize);
-        assert_eq!(outcomes.len(), 2);
-        for o in &outcomes {
-            assert!(o.admitted >= o.arrival, "admitted before arrival");
-            assert!(o.finished > o.admitted, "finished before admitted");
-        }
-        // no cap: admission is immediate at arrival
-        assert_eq!(outcomes[0].admitted, SimTime::ZERO);
-        assert_eq!(outcomes[1].admitted, SimTime::from_millis(30_000));
-        // the second instance overlaps the first (shared cluster, not serial)
-        assert!(outcomes[1].admitted < outcomes[0].finished);
-    }
-
-    #[test]
-    fn fleet_admission_cap_serializes_instances() {
-        let (a, b) = (small_dag(), small_dag());
-        let (n_a, n_b) = (a.len() as u32, b.len() as u32);
-        let union = Dag::disjoint_union(&[a, b]);
-        let plan = two_instance_plan(n_a, n_b, 30_000, Some(1));
-        let (res, outcomes) = run_fleet(
-            union,
-            ExecModel::paper_hybrid_pools(),
-            SimConfig::with_nodes(4),
-            &plan,
-        );
-        assert_eq!(res.trace.records.len(), (n_a + n_b) as usize);
-        // cap 1: the second instance waits for the first to finish
-        assert!(outcomes[1].admitted >= outcomes[0].finished);
-        assert!(outcomes[1].admitted > outcomes[1].arrival, "queued at the cap");
-        assert_eq!(res.metrics.counter("instances_admitted"), 2);
-        assert_eq!(res.metrics.counter("instances_completed"), 2);
-    }
-
-    #[test]
-    fn fleet_works_under_every_model() {
-        for model in [
-            ExecModel::JobBased,
-            ExecModel::Clustered(ClusteringConfig::paper_default()),
-            ExecModel::paper_hybrid_pools(),
-            ExecModel::GenericPool,
-        ] {
-            let (a, b) = (small_dag(), small_dag());
-            let (n_a, n_b) = (a.len() as u32, b.len() as u32);
-            let union = Dag::disjoint_union(&[a, b]);
-            let plan = two_instance_plan(n_a, n_b, 10_000, None);
-            let (res, outcomes) =
-                run_fleet(union, model.clone(), SimConfig::with_nodes(4), &plan);
-            assert_eq!(
-                res.trace.records.len(),
-                (n_a + n_b) as usize,
-                "{}",
-                model.name()
-            );
-            assert!(outcomes.iter().all(|o| o.finished > o.admitted));
-        }
-    }
-
-    #[test]
-    fn chaos_every_model_completes_under_heavy_churn() {
-        // spot reclaims, crashes, flaky pod starts and stragglers all at
-        // once: every model must still finish every task exactly once,
-        // and the accounting must show the faults actually happened.
-        for model in [
-            ExecModel::JobBased,
-            ExecModel::Clustered(ClusteringConfig::paper_default()),
-            ExecModel::paper_hybrid_pools(),
-            ExecModel::GenericPool,
-        ] {
-            let dag = generate(&MontageConfig {
-                grid_w: 5,
-                grid_h: 5,
-                diagonals: true,
-                seed: 3,
-            });
-            let n = dag.len();
-            let mut cfg = SimConfig::with_nodes(4);
-            cfg.seed = 9;
-            cfg.chaos =
-                crate::chaos::ChaosConfig::parse_spec("spot:4,crash:2,pod:0.25,straggler:0.3")
-                    .unwrap();
-            let res = run(dag, model.clone(), cfg);
-            let name = model.name();
-            assert_eq!(res.trace.records.len(), n, "{name}: records");
-            for r in &res.trace.records {
-                assert!(r.finished_at.is_some(), "{name}: {:?} lost", r.task);
-            }
-            assert!(res.chaos.enabled, "{name}");
-            assert!(res.chaos.faults_total() > 0, "{name}: no faults injected");
-            assert!(res.chaos.wasted_ms > 0, "{name}: no waste accounted");
-            assert!(res.chaos.goodput() < 1.0, "{name}: goodput must dip");
-            assert!(res.chaos.goodput() > 0.0, "{name}");
-        }
-    }
-
-    #[test]
-    fn chaos_spot_churn_inflates_makespan() {
-        let mk = || {
-            generate(&MontageConfig {
-                grid_w: 6,
-                grid_h: 6,
-                diagonals: true,
-                seed: 2,
-            })
-        };
-        let healthy = run(mk(), ExecModel::paper_hybrid_pools(), SimConfig::with_nodes(4));
-        let mut cfg = SimConfig::with_nodes(4);
-        cfg.seed = 5;
-        cfg.chaos = crate::chaos::ChaosConfig::parse_spec("spot:6,crash:3").unwrap();
-        let churned = run(mk(), ExecModel::paper_hybrid_pools(), cfg);
-        assert!(
-            churned.makespan > healthy.makespan,
-            "churn {} vs healthy {}",
-            churned.makespan,
-            healthy.makespan
-        );
-        assert!(healthy.chaos.wasted_ms == 0 && !healthy.chaos.enabled);
-    }
-
-    #[test]
-    fn legacy_pod_failure_prob_is_migrated_onto_the_chaos_engine() {
-        // the deprecated knob must keep injecting failures — now routed
-        // through the PodFailure injector with waste + retry accounting
-        let dag = small_dag();
-        let n = dag.len();
-        let mut cfg = SimConfig::with_nodes(4);
-        cfg.pod_failure_prob = 0.3;
-        cfg.seed = 13;
-        let res = run(dag, ExecModel::JobBased, cfg);
-        assert_eq!(res.trace.records.len(), n);
-        assert!(res.metrics.counter("pod_failures") > 0);
-        assert!(res.chaos.enabled, "legacy knob must enable the subsystem");
-        assert_eq!(
-            res.chaos.pod_failures,
-            res.metrics.counter("pod_failures"),
-            "chaos accounting mirrors the metric"
-        );
-        assert!(res.chaos.retries > 0, "failed batches are retried");
-        assert!(res.chaos.wasted_ms > 0, "burned pod starts are waste");
-    }
-
-    #[test]
-    fn fleet_under_chaos_drains_and_stamps_every_instance() {
-        // regression (fleet accounting under retries): per-instance
-        // outstanding counters must not drift when tasks fail and re-enter
-        // the queue — a faulty fleet run still drains, and every instance
-        // gets admission + completion stamps. (run_fleet panics on any
-        // unstamped instance.)
-        let (a, b) = (small_dag(), small_dag());
-        let (n_a, n_b) = (a.len() as u32, b.len() as u32);
-        let union = Dag::disjoint_union(&[a, b]);
-        let plan = two_instance_plan(n_a, n_b, 20_000, None);
-        let mut cfg = SimConfig::with_nodes(4);
-        cfg.seed = 21;
-        cfg.chaos =
-            crate::chaos::ChaosConfig::parse_spec("pod:0.25,crash:6,straggler:0.5").unwrap();
-        let (res, outcomes) = run_fleet(union, ExecModel::paper_hybrid_pools(), cfg, &plan);
-        assert_eq!(outcomes.len(), 2);
-        for o in &outcomes {
-            assert!(o.finished > o.admitted);
-        }
-        assert_eq!(res.metrics.counter("instances_completed"), 2);
-        assert_eq!(res.trace.records.len(), (n_a + n_b) as usize);
-        assert!(res.chaos.faults_total() > 0, "churn must actually occur");
-        // per-tenant resilience lanes are sized; task-attributable waste
-        // lands in them, shared worker-crash waste only in the total
-        assert_eq!(res.chaos.wasted_ms_by_tenant.len(), 2);
-        assert!(
-            res.chaos.wasted_ms_by_tenant.iter().sum::<u64>() <= res.chaos.wasted_ms,
-            "lanes cannot exceed the total"
-        );
-    }
-
-    fn data_cfg(nodes: usize, spec: &str) -> SimConfig {
-        let mut cfg = SimConfig::with_nodes(nodes);
-        cfg.data = Some(crate::data::DataConfig::parse_spec(spec).unwrap());
-        cfg
-    }
-
-    #[test]
-    fn data_plane_every_model_completes_and_accounts_bytes() {
-        for model in [
-            ExecModel::JobBased,
-            ExecModel::Clustered(ClusteringConfig::paper_default()),
-            ExecModel::paper_hybrid_pools(),
-            ExecModel::GenericPool,
-        ] {
-            let dag = small_dag();
-            let n = dag.len();
-            let res = run(dag, model.clone(), data_cfg(4, "nfs:1,cache:4"));
-            let name = model.name();
-            assert_eq!(res.trace.records.len(), n, "{name}: records");
-            for r in &res.trace.records {
-                assert!(r.finished_at.is_some(), "{name}: {:?} lost", r.task);
-                assert!(r.started_at.unwrap() >= r.ready_at, "{name}");
-                assert!(r.finished_at.unwrap() > r.started_at.unwrap(), "{name}");
-            }
-            assert!(res.data.enabled, "{name}");
-            assert!(res.data.bytes_in > 0, "{name}: no stage-in traffic");
-            assert!(res.data.bytes_out > 0, "{name}: no stage-out traffic");
-            assert!(res.data.transfers > 0, "{name}");
-            assert!(res.data.compute_ms > 0, "{name}");
-            assert!(res.data.io_ms > 0, "{name}: transfers must take time");
-            // every task stages in exactly once on a healthy run
-            assert_eq!(res.data.stage_ins, n, "{name}");
-        }
-    }
-
-    #[test]
-    fn data_plane_slows_the_run_and_the_default_stays_inert() {
-        let base = SimConfig::with_nodes(4);
-        assert!(base.data.is_none(), "data plane must be opt-in");
-        let plain = run(small_dag(), ExecModel::paper_hybrid_pools(), base);
-        assert!(!plain.data.enabled);
-        assert_eq!(plain.data.bytes_in, 0);
-        // a constrained shared link must cost wall-clock time
-        let with_data = run(
-            small_dag(),
-            ExecModel::paper_hybrid_pools(),
-            data_cfg(4, "nfs:0.5,cache:4"),
-        );
-        assert!(
-            with_data.makespan > plain.makespan,
-            "I/O pressure must show up: {} vs {}",
-            with_data.makespan,
-            plain.makespan
-        );
-    }
-
-    #[test]
-    fn warm_pool_caches_beat_cold_job_pods_on_bytes_and_stage_in() {
-        // the ISSUE's acceptance asymmetry: long-lived workers keep their
-        // node-local caches across tasks, job pods always start cold — at
-        // constrained NFS bandwidth pools move fewer bytes and collapse
-        // the stage-in tail.
-        let mk = || {
-            generate(&MontageConfig {
-                grid_w: 6,
-                grid_h: 6,
-                diagonals: true,
-                seed: 2,
-            })
-        };
-        let jobs = run(mk(), ExecModel::JobBased, data_cfg(4, "nfs:0.5,cache:8"));
-        let pools = run(
-            mk(),
-            ExecModel::paper_hybrid_pools(),
-            data_cfg(4, "nfs:0.5,cache:8"),
-        );
-        assert!(
-            pools.data.bytes_in < jobs.data.bytes_in,
-            "pools {} vs jobs {} bytes in",
-            pools.data.bytes_in,
-            jobs.data.bytes_in
-        );
-        assert!(
-            pools.data.cache_hit_ratio() > jobs.data.cache_hit_ratio(),
-            "pools {:.3} vs jobs {:.3} hit ratio",
-            pools.data.cache_hit_ratio(),
-            jobs.data.cache_hit_ratio()
-        );
-        assert!(
-            pools.data.stage_in_p95_s <= jobs.data.stage_in_p95_s,
-            "pools {:.2}s vs jobs {:.2}s stage-in p95",
-            pools.data.stage_in_p95_s,
-            jobs.data.stage_in_p95_s
-        );
-    }
-
-    #[test]
-    fn locality_scheduling_completes_and_reproduces() {
-        // clustered batches are the placement-sensitive case: producers
-        // may still be alive when consumers schedule
-        let mk = || {
-            let mut cfg = data_cfg(4, "nfs:1,cache:8,locality:on");
-            cfg.seed = 3;
-            run(
-                generate(&MontageConfig {
-                    grid_w: 5,
-                    grid_h: 5,
-                    diagonals: true,
-                    seed: 3,
-                }),
-                ExecModel::Clustered(ClusteringConfig::paper_default()),
-                cfg,
-            )
-        };
-        let (a, b) = (mk(), mk());
-        assert_eq!(a.trace.records.len(), b.trace.records.len());
-        assert_eq!(a.makespan, b.makespan, "locality run must reproduce");
-        assert_eq!(a.data.bytes_in, b.data.bytes_in);
-        assert_eq!(a.sched_binds, b.sched_binds);
-        for r in &a.trace.records {
-            assert!(r.finished_at.is_some(), "{:?} lost under locality", r.task);
-        }
-    }
-
-    #[test]
-    fn data_plane_survives_chaos_churn() {
-        // node crashes kill in-flight transfers and wipe node caches
-        // (crash-loses-cache); every task must still complete exactly once
-        for model in [ExecModel::paper_hybrid_pools(), ExecModel::JobBased] {
-            let dag = generate(&MontageConfig {
-                grid_w: 5,
-                grid_h: 5,
-                diagonals: true,
-                seed: 4,
-            });
-            let n = dag.len();
-            let mut cfg = data_cfg(4, "nfs:1,cache:4");
-            cfg.seed = 9;
-            cfg.chaos =
-                crate::chaos::ChaosConfig::parse_spec("crash:4,pod:0.15").unwrap();
-            let res = run(dag, model.clone(), cfg);
-            let name = model.name();
-            assert_eq!(res.trace.records.len(), n, "{name}");
-            for r in &res.trace.records {
-                assert!(r.finished_at.is_some(), "{name}: {:?} lost", r.task);
-            }
-            assert!(res.chaos.faults_total() > 0, "{name}: churn must occur");
-            assert!(res.data.bytes_in > 0, "{name}");
-            // interrupted stage-ins re-run, so there can be more stage-in
-            // samples than tasks — never fewer
-            assert!(res.data.stage_ins >= n, "{name}");
-        }
-    }
-
-    #[test]
-    fn fleet_with_data_fills_tenant_byte_lanes() {
-        let (a, b) = (small_dag(), small_dag());
-        let (n_a, n_b) = (a.len() as u32, b.len() as u32);
-        let union = Dag::disjoint_union(&[a, b]);
-        let plan = two_instance_plan(n_a, n_b, 20_000, None);
-        let (res, outcomes) = run_fleet(
-            union,
-            ExecModel::paper_hybrid_pools(),
-            data_cfg(4, "nfs:1,cache:4"),
-            &plan,
-        );
-        assert_eq!(outcomes.len(), 2);
-        for o in &outcomes {
-            assert!(o.finished > o.admitted);
-        }
-        assert_eq!(res.data.bytes_by_tenant.len(), 2);
-        assert!(res.data.bytes_by_tenant.iter().all(|&b| b > 0));
-        // every moved byte belongs to some tenant's instance
-        assert_eq!(
-            res.data.bytes_by_tenant.iter().sum::<u64>(),
-            res.data.bytes_in + res.data.bytes_out
-        );
-    }
-
-    #[test]
-    fn nodes_never_overcommitted() {
-        // run and assert the cpu_allocated series never exceeds capacity
-        let res = run(
-            small_dag(),
-            ExecModel::paper_hybrid_pools(),
-            SimConfig::with_nodes(3),
-        );
-        let cap = 3.0 * 4000.0;
-        let s = res.metrics.gauge("cpu_allocated_m").unwrap();
-        for &(_, v) in s.points() {
-            assert!(v <= cap + 1e-9, "allocated {v} exceeds capacity {cap}");
-        }
-    }
-}
+//! Back-compat shim: the 2.8k-line simulation driver that used to live
+//! here was decomposed into the layered [`crate::exec`] subsystem —
+//! kernel ([`crate::exec::kernel`]), pluggable model strategies
+//! ([`crate::exec::strategy`] + one module per paper model), and
+//! subsystem hooks ([`crate::exec::hooks`]). The public entry points are
+//! re-exported so every existing `models::driver::{run, run_fleet,
+//! SimConfig}` call site (tests, benches, examples, configs) keeps
+//! working unchanged.
+
+pub use crate::exec::{run, run_fleet, ConfigError, SimConfig, SimConfigBuilder};

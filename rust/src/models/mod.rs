@@ -6,61 +6,23 @@
 //!   queues (§3.3/3.5). The paper's experiments use the *hybrid* variant
 //!   (pools for the three parallel stages, jobs for the serial tail), which
 //!   is the default here.
+//! * [`ExecModel::GenericPool`] — §3.3's rejected single generic pool.
 //!
-//! [`driver`] hosts the discrete-event simulation binding an execution
-//! model to the Kubernetes substrate (scheduler + API server + autoscaler +
-//! broker) and the HyperFlow engine.
+//! This module is a facade: the model enum and the simulation live in the
+//! layered [`crate::exec`] subsystem (kernel / strategies / hooks), with
+//! [`driver`] kept as a re-export shim for the old entry-point paths.
+//! [`multicloud`] hosts the §5 multi-cluster extension, a compact
+//! standalone DES.
 
 pub mod driver;
 pub mod multicloud;
 
-use crate::engine::clustering::ClusteringConfig;
-
-/// Which execution model a run uses.
-#[derive(Debug, Clone)]
-pub enum ExecModel {
-    /// §3.2: one task -> one Kubernetes Job -> one Pod.
-    JobBased,
-    /// §3.2 + clustering: batches of same-type tasks per pod.
-    Clustered(ClusteringConfig),
-    /// §3.3: worker pools for `pooled_types`; other types run as jobs
-    /// (the paper's hybrid setup). Set `pooled_types` to all types for the
-    /// pure pool model.
-    WorkerPools { pooled_types: Vec<String> },
-    /// §3.3's rejected alternative: a single generic worker pool for ALL
-    /// task types. "Inferior both conceptually and technically": the pod
-    /// template must request the max resources over every type (degrading
-    /// scheduling quality) and implies one universal container image.
-    /// Implemented to quantify exactly that degradation.
-    GenericPool,
-}
-
-impl ExecModel {
-    pub fn name(&self) -> &'static str {
-        match self {
-            ExecModel::JobBased => "job-based",
-            ExecModel::Clustered(_) => "job-clustered",
-            ExecModel::WorkerPools { .. } => "worker-pools",
-            ExecModel::GenericPool => "generic-pool",
-        }
-    }
-
-    /// The hybrid worker-pools setup used in §4.4: pools for the three
-    /// parallel stages, jobs for everything else.
-    pub fn paper_hybrid_pools() -> Self {
-        ExecModel::WorkerPools {
-            pooled_types: vec![
-                "mProject".to_string(),
-                "mDiffFit".to_string(),
-                "mBackground".to_string(),
-            ],
-        }
-    }
-}
+pub use crate::exec::ExecModel;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::clustering::ClusteringConfig;
 
     #[test]
     fn names() {

@@ -19,8 +19,11 @@
 //! 4x4+1 node splits.
 //!
 //! Pools here are the same interned [`PoolId`] space the single-cluster
-//! driver uses: an index into `pooled_types`, shared by the global queues,
-//! the per-(cloud, pool) idle/worker tables, and worker payloads.
+//! execution kernel ([`crate::exec`]) uses: an index into `pooled_types`,
+//! shared by the global queues, the per-(cloud, pool) idle/worker tables,
+//! and worker payloads. This module stays a standalone DES rather than a
+//! [`crate::exec::strategy::ExecStrategy`] because it owns K control
+//! planes, not one.
 
 use crate::broker::PoolId;
 use crate::engine::Engine;

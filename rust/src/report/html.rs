@@ -135,13 +135,14 @@ pub fn render(res: &SimResult) -> String {
          <th>p50 s</th><th>p95 s</th><th>p99 s</th><th>max s</th></tr>",
     );
     for (ty, s) in res.trace.wait_times_by_type() {
+        let row = s.percentile_row();
         body.push_str(&format!(
             "<tr><td>{ty}</td><td>{}</td><td>{:.1}</td><td>{:.1}</td><td>{:.1}</td><td>{:.1}</td><td>{:.1}</td></tr>",
             s.len(),
             s.mean(),
-            s.median(),
-            s.percentile(95.0),
-            s.percentile(99.0),
+            row.p50,
+            row.p95,
+            row.p99,
             s.max()
         ));
     }

@@ -59,15 +59,7 @@ impl Summary {
         }
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = (p / 100.0) * (s.len() - 1) as f64;
-        let lo = rank.floor() as usize;
-        let hi = rank.ceil() as usize;
-        if lo == hi {
-            s[lo]
-        } else {
-            let frac = rank - lo as f64;
-            s[lo] * (1.0 - frac) + s[hi] * frac
-        }
+        percentile_of_sorted(&s, p)
     }
 
     pub fn median(&self) -> f64 {
@@ -77,6 +69,48 @@ impl Summary {
     pub fn sum(&self) -> f64 {
         self.samples.iter().sum()
     }
+
+    /// The standard p50/p95/p99 report row, computed with a single sort
+    /// (the per-call sort in [`Summary::percentile`] sorted thrice).
+    /// Every latency table in the crate — HTML wait times, chaos recovery
+    /// latency, data-plane stage-ins, fleet slowdowns — assembles its row
+    /// through this one helper.
+    pub fn percentile_row(&self) -> PercentileRow {
+        if self.samples.is_empty() {
+            return PercentileRow::default();
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        PercentileRow {
+            p50: percentile_of_sorted(&s, 50.0),
+            p95: percentile_of_sorted(&s, 95.0),
+            p99: percentile_of_sorted(&s, 99.0),
+        }
+    }
+}
+
+/// Linear-interpolation percentile over an already-sorted slice — the one
+/// definition shared by [`Summary::percentile`] and
+/// [`Summary::percentile_row`], so the two can never drift apart.
+fn percentile_of_sorted(s: &[f64], p: f64) -> f64 {
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let frac = rank - lo as f64;
+        s[lo] * (1.0 - frac) + s[hi] * frac
+    }
+}
+
+/// A p50/p95/p99 triple — the row shape shared by every latency/SLO table
+/// in the reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PercentileRow {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
 }
 
 /// Integrate a step function given as (time, value) change points over
@@ -154,6 +188,28 @@ mod tests {
             t.add(v as f64);
         }
         assert!((t.percentile(99.0) - 8.91).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_row_matches_individual_percentiles() {
+        let mut s = Summary::new();
+        for v in 0..=100 {
+            s.add(v as f64);
+        }
+        let row = s.percentile_row();
+        assert_eq!(row.p50, s.percentile(50.0));
+        assert_eq!(row.p95, s.percentile(95.0));
+        assert_eq!(row.p99, s.percentile(99.0));
+        // interpolated case must agree bit-for-bit too
+        let mut t = Summary::new();
+        for v in 0..=9 {
+            t.add(v as f64);
+        }
+        let row = t.percentile_row();
+        assert_eq!(row.p99, t.percentile(99.0));
+        assert_eq!(row.p50, t.median());
+        // empty summaries yield the all-zero row
+        assert_eq!(Summary::new().percentile_row(), PercentileRow::default());
     }
 
     #[test]
