@@ -1,0 +1,18 @@
+#!/bin/sh
+# Refresh the committed perf baselines: run every bench harness at the
+# reduced CI knobs and copy the BENCH_*.json outputs into baselines/.
+# Run from this directory (or anywhere inside the repo).
+set -eu
+
+cd "$(dirname "$0")/.."
+
+HF_BENCH_GRID=4 HF_BENCH_ITERS=1 cargo bench --bench coordinator_hotpath
+HF_FLEET_DURATION=400 HF_FLEET_NODES=4 cargo bench --bench fleet_saturation
+HF_CHAOS_GRID=4 HF_CHAOS_RATES=2,4,8 cargo bench --bench chaos_resilience
+HF_DATA_GRID=4 HF_DATA_RATES=0.5,2 cargo bench --bench data_locality
+HF_ISO_DURATION=1200 HF_ISO_RATE=12 HF_ISO_NODES=6 cargo bench --bench tenant_takeover
+
+for f in BENCH_driver.json BENCH_fleet.json BENCH_chaos.json BENCH_data.json BENCH_isolation.json; do
+    [ -f "$f" ] && cp "$f" baselines/"$f"
+done
+echo "baselines refreshed — review the diff before committing"

@@ -1,0 +1,157 @@
+//! Tenant-takeover isolation sweep: run the multi-tenant fleet under a
+//! deterministic tenant-compromise scenario (`takeover:0@T`) and measure,
+//! per execution model per isolation policy, the compromised tenant's
+//! blast radius and the collateral damage the *innocent* tenants suffer.
+//! This demonstrates the isolation gradient the quotas/node-pool work is
+//! for: `shared` lets the takeover cordon the whole cluster, `dedicated`
+//! confines the drain to the victim's node partition, and `sandboxed`
+//! contains the escape entirely (only the compromised tenant's own pods
+//! are killed). See EXPERIMENTS.md §"Multi-tenancy / isolation" for how
+//! to read the table.
+//!
+//! Results are written to `BENCH_isolation.json` (crate root, next to
+//! `BENCH_chaos.json` and `BENCH_fleet.json`).
+//!
+//!   cargo bench --bench tenant_takeover
+//!
+//! CI runs a reduced grid: `HF_ISO_DURATION=1200 HF_ISO_RATE=12`.
+
+use hyperflow_k8s::chaos::ChaosConfig;
+use hyperflow_k8s::engine::clustering::ClusteringConfig;
+use hyperflow_k8s::fleet::{self, ArrivalProcess, FleetConfig};
+use hyperflow_k8s::k8s::isolation::IsolationConfig;
+use hyperflow_k8s::models::{driver, ExecModel};
+use hyperflow_k8s::util::env::{env_f64, env_usize};
+use hyperflow_k8s::util::json::Json;
+
+fn main() {
+    let nodes = env_usize("HF_ISO_NODES", 12);
+    let tenants = env_usize("HF_ISO_TENANTS", 3);
+    let duration = env_f64("HF_ISO_DURATION", 3600.0);
+    let rate = env_f64("HF_ISO_RATE", 24.0);
+    let seed: u64 = 42;
+    // the compromise lands mid-window, when every tenant has work in flight
+    let takeover_s = duration / 2.0;
+
+    let models: Vec<(&str, ExecModel)> = vec![
+        ("job-based", ExecModel::JobBased),
+        (
+            "job-clustered",
+            ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ),
+        ("worker-pools", ExecModel::paper_hybrid_pools()),
+        ("generic-pool", ExecModel::GenericPool),
+    ];
+    // policy sweep: same quota everywhere, only the node-pool policy moves
+    let policies: Vec<(&str, String)> = vec![
+        ("shared", "shared,quota:16000x65536".into()),
+        ("dedicated", "dedicated,quota:16000x65536".into()),
+        ("sandboxed", "sandboxed,quota:16000x65536".into()),
+    ];
+
+    let fleet_cfg = FleetConfig {
+        arrival: ArrivalProcess::Poisson { per_hour: rate },
+        duration_s: duration,
+        tenants: fleet::default_tenants(tenants, &[3, 4]),
+        seed,
+        max_in_flight: None,
+    };
+    let mk_sim = |iso: Option<&str>, chaos: Option<&str>| {
+        let mut cfg = driver::SimConfig::with_nodes(nodes);
+        cfg.seed = seed;
+        cfg.isolation =
+            iso.map(|s| IsolationConfig::parse_spec(s).expect("bench isolation spec"));
+        if let Some(spec) = chaos {
+            cfg.chaos = ChaosConfig::parse_spec(spec).expect("bench chaos spec");
+        }
+        cfg
+    };
+
+    println!(
+        "== tenant takeover sweep == ({nodes} nodes, {tenants} tenants, \
+         {rate}/h over {duration:.0}s, takeover of tenant 0 at {takeover_s:.0}s, seed {seed})\n"
+    );
+    let chaos_spec = format!("takeover:0@{takeover_s}");
+    let mut model_rows: Vec<Json> = Vec::new();
+    for (name, model) in &models {
+        // healthy baseline: isolation off, no takeover
+        let base = fleet::run(model.clone(), mk_sim(None, None), &fleet_cfg);
+        let base_agg = fleet::report::aggregate(&base);
+        println!(
+            "{name}: healthy span {:.0}s, mean slowdown {:.2}",
+            base_agg.span_s, base_agg.mean_slowdown
+        );
+        let mut points: Vec<Json> = Vec::new();
+        for (policy, iso_spec) in &policies {
+            let res = fleet::run(
+                model.clone(),
+                mk_sim(Some(iso_spec), Some(&chaos_spec)),
+                &fleet_cfg,
+            );
+            let agg = fleet::report::aggregate(&res);
+            let rows = fleet::report::per_tenant(&res);
+            let victim = &rows[0];
+            let innocents: Vec<_> = rows.iter().skip(1).collect();
+            let n_i = innocents.len().max(1) as f64;
+            let innocent_slowdown =
+                innocents.iter().map(|r| r.slowdown_mean).sum::<f64>() / n_i;
+            let innocent_exposed_s =
+                innocents.iter().map(|r| r.takeover_exposed_s).sum::<f64>();
+            let iso = &res.sim.isolation;
+            println!(
+                "  {policy:>9}: victim slowdown {:>6.2}  innocent slowdown {:>6.2} \
+                 (healthy {:>5.2})  blast {:>2} nodes / {:>3} pods ({:>3} innocent)  \
+                 exposed {innocent_exposed_s:>7.1}s  throttles {:>4}  violations {:>3}",
+                victim.slowdown_mean,
+                innocent_slowdown,
+                base_agg.mean_slowdown,
+                iso.blast_nodes,
+                iso.blast_pods,
+                iso.blast_innocent_pods,
+                iso.quota_throttles(),
+                iso.violations(),
+            );
+            points.push(Json::obj(vec![
+                ("policy", Json::str(policy)),
+                ("isolation_spec", Json::str(iso_spec)),
+                ("chaos_spec", Json::str(&chaos_spec)),
+                ("span_s", agg.span_s.into()),
+                ("utilization", agg.utilization.into()),
+                ("victim_slowdown_mean", victim.slowdown_mean.into()),
+                ("victim_slowdown_p99", victim.slowdown_p99.into()),
+                ("innocent_slowdown_mean", innocent_slowdown.into()),
+                ("innocent_takeover_exposed_s", innocent_exposed_s.into()),
+                ("takeovers", iso.takeovers.into()),
+                ("blast_nodes", iso.blast_nodes.into()),
+                ("blast_pods", iso.blast_pods.into()),
+                ("blast_innocent_pods", iso.blast_innocent_pods.into()),
+                ("blast_storage_surfaces", iso.blast_storage_surfaces.into()),
+                ("quota_throttles", iso.quota_throttles().into()),
+                ("violations", iso.violations().into()),
+            ]));
+        }
+        println!();
+        model_rows.push(Json::obj(vec![
+            ("model", Json::str(name)),
+            ("healthy_span_s", base_agg.span_s.into()),
+            ("healthy_mean_slowdown", base_agg.mean_slowdown.into()),
+            ("points", Json::Arr(points)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("tenant_takeover")),
+        ("nodes", nodes.into()),
+        ("tenants", tenants.into()),
+        ("duration_s", duration.into()),
+        ("arrival_rate_per_hour", rate.into()),
+        ("takeover_s", takeover_s.into()),
+        ("seed", seed.into()),
+        ("models", Json::Arr(model_rows)),
+    ]);
+    let path = "BENCH_isolation.json";
+    match std::fs::write(path, out.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -225,6 +225,43 @@ impl Autoscaler {
     }
 }
 
+/// Split an integer `total` proportionally to `weights` with
+/// largest-remainder rounding: the shares sum to exactly `total` whenever
+/// any weight is positive, no share deviates from its exact proportion by
+/// more than one unit, and zero-weight lanes get exactly zero. All-zero
+/// weights yield all-zero shares — the caller decides what an unweighted
+/// split means. Equal remainders resolve in index order, so the split is
+/// deterministic. Used for per-tenant sub-quota carving and the node-pool
+/// partitioning in [`crate::k8s::isolation::IsolationState::set_tenants`].
+pub fn split_quota(total: u64, weights: &[u64]) -> Vec<u64> {
+    let wsum: u64 = weights.iter().sum();
+    if wsum == 0 {
+        return vec![0; weights.len()];
+    }
+    let mut shares: Vec<u64> = Vec::with_capacity(weights.len());
+    let mut rems: Vec<(u128, usize)> = Vec::with_capacity(weights.len());
+    let mut given = 0u64;
+    for (i, &w) in weights.iter().enumerate() {
+        let exact = total as u128 * w as u128;
+        let fl = (exact / wsum as u128) as u64;
+        shares.push(fl);
+        given += fl;
+        rems.push((exact % wsum as u128, i));
+    }
+    // hand the remainder out by largest fractional part; a unit of
+    // remainder only ever lands on a lane with a nonzero fraction
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut left = total - given;
+    for &(_, i) in &rems {
+        if left == 0 {
+            break;
+        }
+        shares[i] += 1;
+        left -= 1;
+    }
+    shares
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -432,6 +469,86 @@ mod tests {
         assert!(degraded[0] * 1000 <= 4_000 + 1000, "respects the new quota");
         a.set_quota(8_000); // replacement capacity arrived
         assert_eq!(a.allocate(&[100, 0]), healthy);
+    }
+
+    #[test]
+    fn quota_shrink_below_current_deployment_scales_down() {
+        // shrink below what is already deployed: desired drops to fit the
+        // new quota, but only after the stabilization window (no thrash)
+        let mut a = Autoscaler::new(
+            AutoscalerConfig {
+                quota_cpu_m: 8_000,
+                stabilization_ms: 30_000,
+                ..Default::default()
+            },
+            pools(),
+        );
+        let cur = [8, 0]; // 8000m of mProject already deployed
+        a.set_quota(2_000);
+        let d = a.poll(SimTime(0), &[100, 0], &cur);
+        assert_eq!(d[0], 8, "held during stabilization");
+        let d = a.poll(SimTime(30_000), &[100, 0], &cur);
+        assert_eq!(d[0], 2, "drained to the shrunken quota");
+    }
+
+    #[test]
+    fn zero_quota_drains_backlogged_pools_to_the_floor() {
+        // a fully-reclaimed cluster (quota 0) must not panic or divide by
+        // zero: backlogged pools keep the one keep-alive replica the
+        // starvation floor guarantees, idle pools drain to zero
+        let mut a = Autoscaler::new(
+            AutoscalerConfig {
+                quota_cpu_m: 8_000,
+                stabilization_ms: 0,
+                ..Default::default()
+            },
+            pools(),
+        );
+        a.set_quota(0);
+        assert_eq!(a.allocate(&[100, 0]), vec![1, 0]);
+        // with no backlog at all, the pools drain completely
+        assert_eq!(a.poll(SimTime(0), &[0, 0], &[8, 4]), vec![0, 0]);
+    }
+
+    #[test]
+    fn split_quota_is_exact_and_deterministic() {
+        assert_eq!(split_quota(8, &[3, 1]), vec![6, 2]);
+        // equal remainders resolve in index order
+        assert_eq!(split_quota(10, &[1, 1, 1]), vec![4, 3, 3]);
+        assert_eq!(split_quota(0, &[5, 5]), vec![0, 0]);
+        assert_eq!(split_quota(7, &[0, 0]), vec![0, 0], "all-zero weights");
+        assert_eq!(split_quota(5, &[]), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn split_quota_never_exceeds_aggregate_property() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(13);
+        for _ in 0..200 {
+            let n = 1 + rng.below(6) as usize;
+            let w: Vec<u64> = (0..n).map(|_| rng.below(10)).collect();
+            let total = rng.below(100);
+            let s = split_quota(total, &w);
+            let sum: u64 = s.iter().sum();
+            let wsum: u64 = w.iter().sum();
+            if wsum == 0 {
+                assert_eq!(sum, 0);
+                continue;
+            }
+            // the per-tenant sub-quota split exactly covers — and never
+            // exceeds — the aggregate quota
+            assert_eq!(sum, total, "weights {w:?} total {total}");
+            for (i, &share) in s.iter().enumerate() {
+                let exact = total as f64 * w[i] as f64 / wsum as f64;
+                assert!(
+                    (share as f64 - exact).abs() <= 1.0,
+                    "share {share} vs exact {exact}"
+                );
+                if w[i] == 0 {
+                    assert_eq!(share, 0, "zero weight must get zero share");
+                }
+            }
+        }
     }
 
     #[test]

@@ -51,6 +51,12 @@ pub enum Injector {
     /// Straggler slowdown: `frac_nodes` of the cluster runs every task
     /// `factor`x slower (degraded disk/net/noisy neighbor).
     Straggler { frac_nodes: f64, factor: f64 },
+    /// Tenant takeover at a fixed instant: `tenant` is assumed fully
+    /// compromised at `at_ms` and its blast radius
+    /// ([`crate::chaos::takeover`]) is remediated. RNG-free — the event
+    /// is placed on the calendar at build time, so adding or removing a
+    /// takeover never shifts the other injectors' RNG streams.
+    Takeover { tenant: u16, at_ms: u64 },
 }
 
 impl Injector {
@@ -169,6 +175,17 @@ mod tests {
             repair_ms: 1
         }
         .is_timed());
+    }
+
+    #[test]
+    fn takeover_is_untimed_and_rate_free() {
+        // a takeover must never join the timed-process list: it is
+        // scheduled at a fixed calendar time and consumes no RNG, so its
+        // presence cannot shift the other injectors' fork indices
+        let t = Injector::Takeover { tenant: 1, at_ms: 600_000 };
+        assert!(!t.is_timed());
+        let mut p = FaultProcess::new(t, Rng::new(5));
+        assert_eq!(p.next_fault(4), None);
     }
 
     #[test]

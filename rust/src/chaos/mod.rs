@@ -27,6 +27,10 @@
 //!   faults), retry counts, recovery-latency percentiles via
 //!   [`crate::util::stats::Summary`], and goodput — surfaced in the text,
 //!   JSON and HTML reports and, per tenant, in the fleet SLO table.
+//! * [`takeover`] — the tenant-takeover scenario: a minimal privilege
+//!   model per [`crate::k8s::isolation::IsolationPolicy`] and the
+//!   blast-radius computation behind the RNG-free `takeover:<tenant>@<t>`
+//!   injector.
 //!
 //! The CLI spec grammar (`hyperflow run --chaos spot:0.1,straggler:0.25`)
 //! is parsed by [`ChaosConfig::parse_spec`]; `benches/chaos_resilience.rs`
@@ -35,6 +39,7 @@
 pub mod inject;
 pub mod recover;
 pub mod report;
+pub mod takeover;
 
 pub use inject::Injector;
 pub use recover::RecoveryPolicy;
@@ -68,8 +73,9 @@ impl ChaosConfig {
     /// | `spot`      | reclaims per node per hour    | [`Injector::SpotReclaim`] (2 min warning) |
     /// | `crash`     | crashes per node per hour     | [`Injector::NodeCrash`] |
     /// | `straggler` | fraction of nodes that are slow | [`Injector::Straggler`] (3x slowdown) |
+    /// | `takeover`  | `<tenant>@<t_seconds>`          | [`Injector::Takeover`] (fixed instant) |
     ///
-    /// Example: `spot:0.2,crash:0.1,pod:0.02,straggler:0.25`.
+    /// Example: `spot:0.2,crash:0.1,pod:0.02,straggler:0.25,takeover:1@600`.
     pub fn parse_spec(spec: &str) -> Result<ChaosConfig, String> {
         let mut cfg = ChaosConfig::default();
         for entry in spec.split(',') {
@@ -80,6 +86,27 @@ impl ChaosConfig {
             let (kind, value) = entry
                 .split_once(':')
                 .ok_or_else(|| format!("chaos entry '{entry}' is not kind:value"))?;
+            // takeover takes `<tenant>@<t_seconds>`, not a plain number —
+            // handled before the generic numeric-value parse below
+            if kind.trim() == "takeover" {
+                let (tenant, at) = value.trim().split_once('@').ok_or_else(|| {
+                    format!("chaos entry '{entry}': expected takeover:<tenant>@<t_seconds>")
+                })?;
+                let tenant: u16 = tenant.trim().parse().map_err(|_| {
+                    format!("chaos entry '{entry}': '{tenant}' is not a tenant id")
+                })?;
+                let at_s: f64 = at.trim().parse().map_err(|_| {
+                    format!("chaos entry '{entry}': '{at}' is not a time in seconds")
+                })?;
+                if !at_s.is_finite() || at_s < 0.0 {
+                    return Err(format!("chaos entry '{entry}': time must be >= 0"));
+                }
+                cfg.injectors.push(Injector::Takeover {
+                    tenant,
+                    at_ms: (at_s * 1000.0).round() as u64,
+                });
+                continue;
+            }
             let v: f64 = value
                 .trim()
                 .parse()
@@ -114,7 +141,8 @@ impl ChaosConfig {
                 }
                 other => {
                     return Err(format!(
-                        "unknown chaos injector '{other}' (expected pod, spot, crash, straggler)"
+                        "unknown chaos injector '{other}' \
+                         (expected pod, spot, crash, straggler, takeover)"
                     ))
                 }
             };
@@ -142,6 +170,14 @@ impl ChaosConfig {
     pub fn straggler(&self) -> Option<(f64, f64)> {
         self.injectors.iter().find_map(|i| match i {
             Injector::Straggler { frac_nodes, factor } => Some((*frac_nodes, *factor)),
+            _ => None,
+        })
+    }
+
+    /// Scheduled takeovers as `(tenant, at_ms)`, in spec order.
+    pub fn takeovers(&self) -> impl Iterator<Item = (u16, u64)> + '_ {
+        self.injectors.iter().filter_map(|i| match i {
+            Injector::Takeover { tenant, at_ms } => Some((*tenant, *at_ms)),
             _ => None,
         })
     }
@@ -188,9 +224,25 @@ mod tests {
             "pod:1.5",        // probability > 1
             "straggler:2",    // fraction > 1
             "meteor:0.5",     // unknown kind
+            "takeover:1",     // missing @time
+            "takeover:x@600", // tenant not a number
+            "takeover:1@soon", // time not a number
+            "takeover:1@-5",  // negative time
         ] {
             assert!(ChaosConfig::parse_spec(bad).is_err(), "accepted: {bad}");
         }
+    }
+
+    #[test]
+    fn parses_takeover_entries() {
+        let c = ChaosConfig::parse_spec("takeover:1@600,spot:0.5,takeover:0@1800.5").unwrap();
+        assert!(c.is_enabled());
+        let t: Vec<(u16, u64)> = c.takeovers().collect();
+        assert_eq!(t, vec![(1, 600_000), (0, 1_800_500)]);
+        // takeover-only spec still counts as enabled chaos
+        let only = ChaosConfig::parse_spec("takeover:2@0").unwrap();
+        assert!(only.is_enabled());
+        assert_eq!(only.pod_failure_prob(), 0.0);
     }
 
     #[test]

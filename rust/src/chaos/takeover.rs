@@ -1,0 +1,262 @@
+//! Tenant takeover: the blast-radius model behind the deterministic
+//! `takeover:<tenant>@<t>` chaos injector.
+//!
+//! A takeover assumes the worst about one tenant at a fixed instant:
+//! every container it has running executes attacker code. What that
+//! attacker can *reach* is governed by a minimal RBAC/privilege model
+//! derived from the isolation policy
+//! ([`crate::k8s::isolation::IsolationPolicy`]):
+//!
+//! | policy    | node escape | co-resident pods      | storage surfaces          |
+//! |-----------|-------------|-----------------------|---------------------------|
+//! | shared    | yes         | every pod on reached nodes | node caches + shared backend |
+//! | dedicated | yes         | same-tenant only (by placement) | own-pool caches + shared backend |
+//! | sandboxed | no          | none                  | shared backend only       |
+//!
+//! The **blast radius** is computed from the live placement at takeover
+//! time — nodes hosting the victim's pods, every pod co-resident on
+//! those nodes, and the data-plane surfaces an escaped container could
+//! touch. Remediation (in `exec/hooks.rs`) then cordons and drains the
+//! reachable nodes with the PR 3 cordon/incarnation machinery (sandboxed
+//! runtimes deny the escape, so only the victim's own pods are killed).
+//! The whole scenario is RNG-free: the injector fires at a fixed
+//! calendar time and the radius is a pure function of simulator state,
+//! so identical seed+spec reruns are bit-identical.
+//!
+//! Grounded in KubeSec-style privilege reachability analysis and the
+//! shared-vs-dedicated trade of cluster-of-clusters deployments
+//! (PAPERS.md).
+
+use crate::k8s::isolation::IsolationPolicy;
+use crate::k8s::node::NodeId;
+use crate::k8s::pod::Pod;
+
+/// Cordon-and-drain window granted to blast-radius nodes before they are
+/// reclaimed for re-imaging (mirrors the spot-reclaim warning shape).
+pub const TAKEOVER_DRAIN_MS: u64 = 60_000;
+
+/// Re-image/replace time for a reclaimed blast-radius node before its
+/// capacity returns (fresh incarnation).
+pub const TAKEOVER_REIMAGE_MS: u64 = 240_000;
+
+/// What a compromised container is allowed to reach — the minimal
+/// RBAC/privilege model the isolation policy implies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrivilegeModel {
+    /// Container-to-node escape (hostPath/privileged/kernel surface).
+    pub can_reach_node: bool,
+    /// From a reached node, co-resident pods are reachable.
+    pub can_reach_co_resident: bool,
+    /// Node-local caches on reached nodes are readable.
+    pub can_reach_node_cache: bool,
+    /// The shared storage backend is reachable over the network even
+    /// from inside a sandbox.
+    pub can_reach_shared_storage: bool,
+}
+
+impl PrivilegeModel {
+    pub fn for_policy(policy: IsolationPolicy) -> PrivilegeModel {
+        let escape = policy.can_reach_node();
+        PrivilegeModel {
+            can_reach_node: escape,
+            can_reach_co_resident: escape,
+            can_reach_node_cache: escape,
+            can_reach_shared_storage: true,
+        }
+    }
+}
+
+/// The computed reach of one takeover, at the instant it fires.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BlastRadius {
+    /// Nodes the attacker can escape onto (sorted ascending; empty under
+    /// a sandboxed runtime).
+    pub nodes: Vec<NodeId>,
+    /// Pods inside the radius: co-residents of reached nodes, or just
+    /// the victim's own pods when escape is denied.
+    pub pods: u64,
+    /// Radius pods currently embodying *another* tenant's work — the
+    /// pods whose loss shows up in innocent tenants' SLOs.
+    pub innocent_pods: u64,
+    /// Data-plane surfaces reachable: node-local caches on reached nodes
+    /// plus the shared backend (0 when the data plane is off).
+    pub storage_surfaces: u64,
+}
+
+/// Compute the blast radius of `victim` from live placement.
+///
+/// `effective_tenant` maps a pod to the tenant whose work it currently
+/// embodies (`None` for idle infrastructure) — see
+/// [`crate::k8s::isolation::IsolationState::effective_tenant`].
+pub fn compute_blast_radius(
+    victim: u16,
+    privilege: &PrivilegeModel,
+    pods: &[Pod],
+    n_nodes: usize,
+    node_failed: impl Fn(NodeId) -> bool,
+    effective_tenant: impl Fn(&Pod) -> Option<u16>,
+    data_plane_on: bool,
+) -> BlastRadius {
+    let mut br = BlastRadius::default();
+    let mut on_node = vec![false; n_nodes];
+    let mut victim_pods = 0u64;
+    for pod in pods {
+        if pod.is_terminal() || effective_tenant(pod) != Some(victim) {
+            continue;
+        }
+        victim_pods += 1;
+        if let Some(nid) = pod.node {
+            if !node_failed(nid) {
+                on_node[nid.0] = true;
+            }
+        }
+    }
+    if privilege.can_reach_node {
+        br.nodes = (0..n_nodes)
+            .filter(|&i| on_node[i])
+            .map(NodeId)
+            .collect();
+        for pod in pods {
+            let Some(nid) = pod.node else { continue };
+            if pod.is_terminal() || !on_node[nid.0] {
+                continue;
+            }
+            br.pods += 1;
+            if privilege.can_reach_co_resident {
+                if let Some(t) = effective_tenant(pod) {
+                    if t != victim {
+                        br.innocent_pods += 1;
+                    }
+                }
+            }
+        }
+    } else {
+        br.pods = victim_pods;
+    }
+    if data_plane_on {
+        if privilege.can_reach_node_cache {
+            br.storage_surfaces += br.nodes.len() as u64;
+        }
+        if privilege.can_reach_shared_storage {
+            br.storage_surfaces += 1;
+        }
+    }
+    br
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::k8s::pod::{Payload, PodId, PodPhase};
+    use crate::k8s::resources::Resources;
+    use crate::sim::SimTime;
+    use crate::workflow::task::TaskId;
+
+    /// pods: (id, node, effective tenant, running?)
+    fn mkpods(spec: &[(u64, Option<usize>, Option<u16>, bool)]) -> (Vec<Pod>, Vec<Option<u16>>) {
+        let mut pods = Vec::new();
+        let mut eff = Vec::new();
+        for &(id, node, tenant, running) in spec {
+            let mut p = Pod::new(
+                PodId(id),
+                Payload::JobBatch { tasks: vec![TaskId(0)] },
+                Resources::new(500, 512),
+                SimTime::ZERO,
+            );
+            p.node = node.map(NodeId);
+            p.phase = if running { PodPhase::Running } else { PodPhase::Succeeded };
+            pods.push(p);
+            eff.push(tenant);
+        }
+        (pods, eff)
+    }
+
+    fn radius(
+        victim: u16,
+        policy: IsolationPolicy,
+        spec: &[(u64, Option<usize>, Option<u16>, bool)],
+        data_on: bool,
+    ) -> BlastRadius {
+        let (pods, eff) = mkpods(spec);
+        compute_blast_radius(
+            victim,
+            &PrivilegeModel::for_policy(policy),
+            &pods,
+            4,
+            |_| false,
+            |p: &Pod| eff[p.id.0 as usize],
+            data_on,
+        )
+    }
+
+    const MIXED: &[(u64, Option<usize>, Option<u16>, bool)] = &[
+        (0, Some(0), Some(0), true),  // victim on node 0
+        (1, Some(0), Some(1), true),  // innocent co-resident on node 0
+        (2, Some(1), Some(1), true),  // innocent alone on node 1
+        (3, Some(2), Some(0), true),  // victim on node 2
+        (4, Some(2), None, true),     // idle infra on node 2
+        (5, None, Some(0), true),     // victim still pending (no node)
+        (6, Some(3), Some(0), false), // terminal victim: out of scope
+    ];
+
+    #[test]
+    fn shared_radius_reaches_co_residents_and_caches() {
+        let br = radius(0, IsolationPolicy::Shared, MIXED, true);
+        assert_eq!(br.nodes, vec![NodeId(0), NodeId(2)]);
+        // pods on nodes 0+2: victim x2, innocent x1, idle infra x1
+        assert_eq!(br.pods, 4);
+        assert_eq!(br.innocent_pods, 1);
+        // 2 node caches + 1 shared backend
+        assert_eq!(br.storage_surfaces, 3);
+    }
+
+    #[test]
+    fn sandboxed_radius_is_only_the_victims_pods() {
+        let br = radius(0, IsolationPolicy::Sandboxed, MIXED, true);
+        assert!(br.nodes.is_empty());
+        assert_eq!(br.pods, 3, "victim's own non-terminal pods");
+        assert_eq!(br.innocent_pods, 0);
+        assert_eq!(br.storage_surfaces, 1, "shared backend only");
+    }
+
+    #[test]
+    fn dedicated_placement_yields_no_innocents() {
+        // under a dedicated partition the victim's pods sit only on its
+        // own nodes; co-residents are same-tenant or idle infra
+        let spec: &[(u64, Option<usize>, Option<u16>, bool)] = &[
+            (0, Some(0), Some(0), true),
+            (1, Some(0), Some(0), true),
+            (2, Some(0), None, true),
+            (3, Some(2), Some(1), true), // other tenant's pool: unreached
+        ];
+        let br = radius(0, IsolationPolicy::Dedicated, spec, false);
+        assert_eq!(br.nodes, vec![NodeId(0)]);
+        assert_eq!(br.pods, 3);
+        assert_eq!(br.innocent_pods, 0);
+        assert_eq!(br.storage_surfaces, 0, "data plane off");
+    }
+
+    #[test]
+    fn failed_nodes_are_outside_the_radius() {
+        let (pods, eff) = mkpods(MIXED);
+        let br = compute_blast_radius(
+            0,
+            &PrivilegeModel::for_policy(IsolationPolicy::Shared),
+            &pods,
+            4,
+            |n| n == NodeId(0),
+            |p: &Pod| eff[p.id.0 as usize],
+            false,
+        );
+        assert_eq!(br.nodes, vec![NodeId(2)]);
+    }
+
+    #[test]
+    fn privilege_model_follows_policy() {
+        let sh = PrivilegeModel::for_policy(IsolationPolicy::Shared);
+        assert!(sh.can_reach_node && sh.can_reach_co_resident);
+        let sb = PrivilegeModel::for_policy(IsolationPolicy::Sandboxed);
+        assert!(!sb.can_reach_node && !sb.can_reach_node_cache);
+        assert!(sb.can_reach_shared_storage, "network storage survives the sandbox");
+    }
+}

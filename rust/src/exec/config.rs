@@ -12,6 +12,7 @@ use crate::autoscale::AutoscalerConfig;
 use crate::chaos::ChaosConfig;
 use crate::data::DataConfig;
 use crate::k8s::api_server::ApiServerConfig;
+use crate::k8s::isolation::IsolationConfig;
 use crate::k8s::scheduler::SchedulerConfig;
 
 /// A named configuration error, reported before any event is simulated.
@@ -46,6 +47,12 @@ pub enum ConfigError {
     BadInstanceRanges { expected: u32, found: u32 },
     /// Fleet plan: an instance with zero tasks.
     EmptyInstance,
+    /// Isolation: a zero resource quota can never admit a pod — every
+    /// tenant pod would back off forever until the wall cap trips.
+    ZeroIsolationQuota,
+    /// Isolation: a LimitRange with a zero default/floor is a no-op that
+    /// almost certainly meant something else.
+    ZeroLimitRange,
 }
 
 impl std::fmt::Display for ConfigError {
@@ -86,6 +93,14 @@ impl std::fmt::Display for ConfigError {
                  (expected {expected}, got {found})"
             ),
             ConfigError::EmptyInstance => write!(f, "empty workflow instance"),
+            ConfigError::ZeroIsolationQuota => write!(
+                f,
+                "isolation quota must be non-zero in every capped dimension \
+                 (a zero quota can never admit a pod)"
+            ),
+            ConfigError::ZeroLimitRange => {
+                write!(f, "isolation limit range must have a non-zero default")
+            }
         }
     }
 }
@@ -134,6 +149,12 @@ pub struct SimConfig {
     /// `None` (the default) disables it entirely — no stage events are
     /// ever scheduled and runs are bit-identical to pre-data builds.
     pub data: Option<DataConfig>,
+    /// Tenant isolation: namespaces/quotas/node pools (see
+    /// [`crate::k8s::isolation`]). `None` (the default) disables it
+    /// entirely and runs are bit-identical to pre-isolation builds —
+    /// unless the chaos spec schedules a takeover, which builds a
+    /// default shared-policy state so the blast radius can be computed.
+    pub isolation: Option<IsolationConfig>,
 }
 
 impl Default for SimConfig {
@@ -158,6 +179,7 @@ impl Default for SimConfig {
             max_pending_pods: None,
             node_events: Vec::new(),
             data: None,
+            isolation: None,
         }
     }
 }
@@ -203,6 +225,18 @@ impl SimConfig {
                 });
             }
         }
+        if let Some(iso) = &self.isolation {
+            if let Some(q) = &iso.quota {
+                if q.cpu_m == 0 || q.mem_mb == 0 || q.pods == Some(0) {
+                    return Err(ConfigError::ZeroIsolationQuota);
+                }
+            }
+            if let Some(lr) = &iso.limit {
+                if lr.default == crate::k8s::Resources::ZERO {
+                    return Err(ConfigError::ZeroLimitRange);
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -235,6 +269,11 @@ impl SimConfigBuilder {
 
     pub fn data(mut self, data: Option<DataConfig>) -> Self {
         self.cfg.data = data;
+        self
+    }
+
+    pub fn isolation(mut self, isolation: Option<IsolationConfig>) -> Self {
+        self.cfg.isolation = isolation;
         self
     }
 
@@ -294,6 +333,35 @@ mod tests {
         assert_eq!(
             err,
             ConfigError::NodeEventOutOfRange { node: 5, nodes: 2 }
+        );
+    }
+
+    #[test]
+    fn zero_isolation_quota_and_limit_are_rejected() {
+        let iso = |spec: &str| {
+            Some(crate::k8s::isolation::IsolationConfig::parse_spec(spec).unwrap())
+        };
+        assert!(matches!(
+            SimConfig::builder().isolation(iso("shared,quota:0x1024")).build(),
+            Err(ConfigError::ZeroIsolationQuota)
+        ));
+        assert!(matches!(
+            SimConfig::builder().isolation(iso("shared,pods:0")).build(),
+            Err(ConfigError::ZeroIsolationQuota)
+        ));
+        assert!(matches!(
+            SimConfig::builder().isolation(iso("shared,limit:0x0")).build(),
+            Err(ConfigError::ZeroLimitRange)
+        ));
+        // a sane spec passes and lands in the config
+        let cfg = SimConfig::builder()
+            .nodes(4)
+            .isolation(iso("dedicated,quota:8000x32768"))
+            .build()
+            .unwrap();
+        assert_eq!(
+            cfg.isolation.unwrap().policy,
+            crate::k8s::isolation::IsolationPolicy::Dedicated
         );
     }
 

@@ -14,7 +14,10 @@
 //!   back-off. The kill paths ([`StrategyState::fail_node_inner`],
 //!   [`StrategyState::spot_warning`], [`StrategyState::pod_start_failure`])
 //!   charge wasted work and route every orphaned payload to its
-//!   strategy-owned recovery.
+//!   strategy-owned recovery. Tenant takeovers (`ChaosTakeover`) measure
+//!   the compromised tenant's blast radius against the isolation model
+//!   ([`StrategyState::apply_takeover`]) and remediate by cordon-and-drain
+//!   ([`StrategyState::drain_node`]) or contained pod kills.
 //! * **data plane** — every task expands into a stage-in -> compute ->
 //!   stage-out cycle ([`StrategyState::begin_task`] /
 //!   [`StrategyState::finish_task`]); transfer completions arrive as
@@ -329,20 +332,31 @@ impl StrategyState {
         }
     }
 
-    /// Spot reclaim, phase 1: the provider's warning. The node is cordoned
-    /// (no new placements) and — under a graceful policy — its workers
-    /// drain: idle workers terminate immediately (the autoscaler replaces
-    /// them on surviving nodes), busy workers finish their current task
-    /// and exit. Job pods run on; whatever is still alive when the warning
-    /// expires dies with the node.
+    /// Spot reclaim, phase 1: the provider's warning. See
+    /// [`StrategyState::drain_node`] for the shared cordon-and-drain
+    /// mechanics; this wrapper only owns the spot-reclaim counters.
     pub fn spot_warning(&mut self, k: &mut Kernel, node: usize, warning_ms: u64, replace_ms: u64) {
+        if self.drain_node(k, node, warning_ms, replace_ms) {
+            k.chaos_stats.spot_warnings += 1;
+            k.metrics.inc("spot_warnings", 1);
+        }
+    }
+
+    /// Cordon-and-drain a node ahead of losing it: no new placements, and
+    /// — under a graceful policy — its workers drain: idle workers
+    /// terminate immediately (the autoscaler replaces them on surviving
+    /// nodes), busy workers finish their current task and exit. Job pods
+    /// run on; whatever is still alive when the warning expires dies with
+    /// the node (`ChaosReclaim`), and replacement capacity arrives
+    /// `replace_ms` later. Shared by the spot-reclaim warning and the
+    /// takeover blast-radius remediation. Returns `false` when the node
+    /// is already dying (no drain started).
+    pub fn drain_node(&mut self, k: &mut Kernel, node: usize, warning_ms: u64, replace_ms: u64) -> bool {
         if k.nodes[node].failed || k.drain_pending[node] {
-            return; // already dying
+            return false; // already dying
         }
         k.drain_pending[node] = true;
         k.nodes[node].cordoned = true;
-        k.chaos_stats.spot_warnings += 1;
-        k.metrics.inc("spot_warnings", 1);
         let drain = k
             .chaos
             .as_ref()
@@ -371,6 +385,155 @@ impl StrategyState {
             SimTime::from_millis(warning_ms),
             Ev::ChaosReclaim { node, replace_ms },
         );
+        true
+    }
+
+    /// A tenant is compromised (`takeover:<tenant>@<t>` injector): compute
+    /// the blast radius its privilege level can reach, record the exposure
+    /// every innocent tenant suffered on those nodes, then remediate.
+    /// Escaping policies (shared/dedicated) cordon-and-drain every
+    /// reachable node — innocent work drains, lingering pods die with the
+    /// node and the capacity returns after a re-image. The sandboxed
+    /// policy contains the escape, so only the victim's own pods are
+    /// killed and recovered through the normal retry machinery.
+    pub fn apply_takeover(&mut self, k: &mut Kernel, tenant: u16) {
+        use crate::chaos::takeover::{
+            compute_blast_radius, PrivilegeModel, TAKEOVER_DRAIN_MS, TAKEOVER_REIMAGE_MS,
+        };
+        let Some(mut iso) = k.isolation.take() else {
+            return; // takeover without an isolation model: nothing to measure
+        };
+        let now = k.now();
+        let privilege = PrivilegeModel::for_policy(iso.cfg.policy);
+        let br = {
+            let current_task = &k.current_task;
+            let task_tenant = &k.task_tenant;
+            let eff = |p: &crate::k8s::pod::Pod| {
+                let tt = current_task[p.id.0 as usize]
+                    .map(|t| task_tenant.get(t.0 as usize).copied().unwrap_or(0));
+                iso.effective_tenant(p, tt)
+            };
+            compute_blast_radius(
+                tenant,
+                &privilege,
+                &k.pods,
+                k.nodes.len(),
+                |n| k.nodes[n.0].failed,
+                eff,
+                k.data.is_some(),
+            )
+        };
+        iso.stats.takeovers += 1;
+        iso.stats.blast_nodes_total += br.nodes.len() as u64;
+        iso.stats.blast_pods_total += br.pods;
+        iso.stats.blast_innocent_pods_total += br.innocent_pods;
+        iso.stats.blast_storage_surfaces_total += br.storage_surfaces;
+        // innocent SLO impact: compute time innocent tenants had in flight
+        // on blast nodes at takeover time (it drains or dies below)
+        for &nid in &br.nodes {
+            for p in k.pods.iter().filter(|p| p.node == Some(nid) && !p.is_terminal()) {
+                if let Some(t) = k.current_task[p.id.0 as usize] {
+                    let tt = k.task_tenant.get(t.0 as usize).copied().unwrap_or(0);
+                    if tt != tenant {
+                        let exposed = now
+                            .saturating_sub(k.pod_task_started_at[p.id.0 as usize])
+                            .as_millis();
+                        iso.stats.add_exposure(tt, exposed);
+                    }
+                }
+            }
+        }
+        let can_reach_node = privilege.can_reach_node;
+        // restore before remediation: drain/kill paths re-enter the
+        // scheduler and release_pod, which charge and refund the quota
+        k.isolation = Some(iso);
+        k.metrics.inc("tenant_takeovers", 1);
+        if can_reach_node {
+            for &nid in &br.nodes {
+                self.drain_node(k, nid.0, TAKEOVER_DRAIN_MS, TAKEOVER_REIMAGE_MS);
+            }
+        } else {
+            // contained: kill only the compromised tenant's own pods
+            let victims: Vec<PodId> = k
+                .pods
+                .iter()
+                .filter(|p| !p.is_terminal())
+                .filter(|p| {
+                    let tt = k.current_task[p.id.0 as usize]
+                        .map(|t| k.task_tenant.get(t.0 as usize).copied().unwrap_or(0));
+                    k.isolation
+                        .as_ref()
+                        .and_then(|i| i.effective_tenant(p, tt))
+                        == Some(tenant)
+                })
+                .map(|p| p.id)
+                .collect();
+            for pid in victims {
+                self.takeover_kill_pod(k, pid);
+            }
+        }
+    }
+
+    /// Kill a single pod during takeover remediation, recovering its
+    /// payload through the chaos machinery (waste accounting, retry
+    /// back-off) — the per-pod slice of [`StrategyState::fail_node_inner`]
+    /// without the node going down.
+    fn takeover_kill_pod(&mut self, k: &mut Kernel, pid: PodId) {
+        if k.pods[pid.0 as usize].is_terminal() {
+            return;
+        }
+        let node = k.pods[pid.0 as usize].node;
+        let in_flight = k.current_task[pid.0 as usize].take();
+        let phase = k.pod_io[pid.0 as usize];
+        if let Some(task) = in_flight {
+            if phase != IoPhase::Compute {
+                if phase == IoPhase::StageOut {
+                    k.task_out_pending[task.0 as usize] = false;
+                    let wasted = k.run_exec_ms(pid);
+                    k.chaos_stats.add_waste(k.tenant_of(task).idx(), wasted);
+                    k.fault_stamp(task);
+                }
+            } else {
+                let ttype = k.engine.dag().tasks[task.0 as usize].ttype;
+                k.record_running(ttype, -1);
+                k.task_running[task.0 as usize] -= 1;
+                if k.engine.state(task) == TaskState::Done {
+                    let exec_ms = k.run_exec_ms(pid);
+                    k.chaos_stats.add_waste(k.tenant_of(task).idx(), exec_ms);
+                    k.metrics.inc("speculative_losses", 1);
+                } else if let Some(n) = node {
+                    k.account_lost_work(pid, task, n.0);
+                }
+            }
+        }
+        let work = match &k.pods[pid.0 as usize].payload {
+            Payload::JobBatch { tasks } => {
+                let remaining: Vec<TaskId> = if k.batch_queue[pid.0 as usize].is_empty() {
+                    tasks.clone()
+                } else {
+                    k.batch_queue[pid.0 as usize].iter().copied().collect()
+                };
+                PodWork::Batch(remaining)
+            }
+            Payload::Worker { pool } => PodWork::Pool(*pool),
+        };
+        self.terminate_pod(k, pid, PodPhase::Deleted);
+        match work {
+            PodWork::Batch(remaining) => {
+                if !remaining.is_empty() {
+                    k.schedule_batch_retry(remaining);
+                }
+            }
+            PodWork::Pool(pool) => {
+                if let Some(task) = in_flight {
+                    self.pools.broker.nack_drop(pool);
+                    self.pools.record_queue_depth(k, pool);
+                    if k.engine.state(task) != TaskState::Done {
+                        k.schedule_task_retry(task);
+                    }
+                }
+            }
+        }
     }
 
     /// Node failure: kill every pod on the node; recover their work.

@@ -22,6 +22,7 @@ use crate::engine::Engine;
 use crate::exec::config::SimConfig;
 use crate::exec::hooks::{ChaosRuntime, FleetState};
 use crate::k8s::api_server::ApiServer;
+use crate::k8s::isolation::{IsolationState, SHARED_TENANT};
 use crate::k8s::node::{Node, NodeId};
 use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
 use crate::k8s::resources::Resources;
@@ -80,6 +81,10 @@ pub enum Ev {
     /// Data plane: an object-store request's latency elapsed — the flow
     /// joins fair bandwidth sharing.
     FlowActivate { flow: u32, gen: u32 },
+    /// Chaos: tenant `tenant` is fully compromised at this instant — its
+    /// blast radius is computed and remediated (RNG-free; placed on the
+    /// calendar at build time).
+    ChaosTakeover { tenant: u16 },
 }
 
 /// Where a pod is in the stage-in -> compute -> stage-out cycle of its
@@ -175,6 +180,8 @@ pub struct Kernel {
     pub task_out_pending: Vec<bool>,
     /// Scratch buffer for transfer (re)schedules.
     pub flow_buf: Vec<FlowEvent>,
+    // -- isolation hook (None = no namespaces/quotas, pre-tenancy paths) -
+    pub isolation: Option<IsolationState>,
     // -- fleet hook (None for classic single-workflow runs) --------------
     pub fleet: Option<FleetState>,
     /// Instance index of each task (fleet runs; empty otherwise).
@@ -201,9 +208,24 @@ impl Kernel {
 
     /// Register a new pod with precomputed resource requests (the caller
     /// — job path or pool path — owns the template-sizing policy) and
-    /// grow every per-pod table alongside it.
+    /// grow every per-pod table alongside it. With isolation on, the pod
+    /// is stamped into its tenant's namespace (job batches inherit their
+    /// first task's tenant; pool workers are shared infrastructure) and
+    /// the namespace LimitRange defaults/floors the requests.
     pub fn new_pod(&mut self, payload: Payload, requests: Resources) -> PodId {
         let id = PodId(self.pods.len() as u64);
+        let requests = if let Some(iso) = &mut self.isolation {
+            let tenant = match &payload {
+                Payload::JobBatch { tasks } => tasks
+                    .first()
+                    .map(|t| self.task_tenant.get(t.0 as usize).copied().unwrap_or(0))
+                    .unwrap_or(0),
+                Payload::Worker { .. } => SHARED_TENANT,
+            };
+            iso.on_pod_created(id, tenant, requests)
+        } else {
+            requests
+        };
         let pod = Pod::new(id, payload, requests, self.now());
         self.pods.push(pod);
         self.batch_queue.push(VecDeque::new());
@@ -236,6 +258,11 @@ impl Kernel {
                 .cancel_pod(now, pid, node, &mut buf);
             self.schedule_flow_events(buf);
             self.pod_io[pid.0 as usize] = IoPhase::Idle;
+        }
+        // namespace quota frees with the pod (idempotent: only ever
+        // charged once, at bind)
+        if let Some(iso) = &mut self.isolation {
+            iso.release(pid);
         }
         let pod = &mut self.pods[pid.0 as usize];
         debug_assert!(!pod.is_terminal());
@@ -409,6 +436,13 @@ impl Kernel {
         self.current_task[pod.0 as usize] = Some(task);
         self.pod_io[pod.0 as usize] = IoPhase::Compute;
         self.pod_task_started_at[pod.0 as usize] = now;
+        // isolation audit: a task starting on capacity owned by another
+        // tenant is a pool-isolation violation (e.g. a mixed clustered
+        // batch riding a foreign namespace's pod)
+        if let (Some(iso), Some(nid)) = (&mut self.isolation, self.pods[pod.0 as usize].node) {
+            let tt = self.task_tenant.get(task.0 as usize).copied().unwrap_or(0);
+            iso.note_task_start(tt, nid);
+        }
         if self.chaos.is_some() {
             let fault_at = self.task_fault_at[task.0 as usize];
             if fault_at != NO_FAULT {

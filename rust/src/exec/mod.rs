@@ -24,6 +24,8 @@
 //!   |  chaos: ChaosRuntime + kill paths    |
 //!   |  data plane: stage-in/out cycle      |
 //!   |  fleet: FleetState admission control |
+//!   |  isolation: namespaces/quotas/pools  |
+//!   |    + tenant-takeover blast radius    |
 //!   +--------------------------------------+
 //! ```
 //!
@@ -78,6 +80,7 @@ use crate::data::DataPlane;
 use crate::engine::Engine;
 use crate::fleet::{FleetPlan, InstanceOutcome};
 use crate::k8s::api_server::ApiServer;
+use crate::k8s::isolation::{IsolationConfig, IsolationPolicy, IsolationState};
 use crate::k8s::node::paper_cluster;
 use crate::k8s::pod::PodPhase;
 use crate::k8s::scheduler::{SchedulePass, Scheduler};
@@ -191,6 +194,9 @@ impl World {
                     self.strat.on_capacity_changed(&mut self.k);
                 }
             }
+            Ev::ChaosTakeover { tenant } => {
+                self.strat.state().apply_takeover(&mut self.k, tenant)
+            }
             Ev::ChaosRetryTask { task } => self.strat.on_retry_task(&mut self.k, task),
             Ev::ChaosRetryBatch { tasks } => self.strat.on_retry_batch(&mut self.k, tasks),
             Ev::SpecCheck { pod, task } => self.strat.on_speculate(&mut self.k, pod, task),
@@ -271,6 +277,19 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
     // per-task chaos tables (healthy runs read work_left in start_task too,
     // so it always mirrors the DAG durations)
     let task_work_left: Vec<SimTime> = engine.dag().tasks.iter().map(|t| t.duration).collect();
+    // isolation: namespaces/quotas/node pools. A scheduled takeover forces
+    // the subsystem on (default shared policy) so the blast-radius
+    // machinery has tenancy state to work with; otherwise `None` keeps
+    // every pre-tenancy run bit-identical.
+    let isolation = if cfg.isolation.is_some() || cfg.chaos.takeovers().next().is_some() {
+        let ic = cfg
+            .isolation
+            .clone()
+            .unwrap_or_else(|| IsolationConfig::new(IsolationPolicy::Shared));
+        Some(IsolationState::new(ic, cfg.nodes))
+    } else {
+        None
+    };
 
     let mut k = Kernel {
         chaos,
@@ -300,6 +319,7 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
         data,
         task_out_pending,
         flow_buf: Vec::new(),
+        isolation,
         fleet: None,
         task_instance: Vec::new(),
         task_tenant: Vec::new(),
@@ -344,6 +364,13 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
     let n_processes = k.chaos.as_ref().map(|c| c.processes.len()).unwrap_or(0);
     for i in 0..n_processes {
         k.schedule_next_fault(i);
+    }
+    // takeovers are RNG-free fixed calendar events — placed last so they
+    // cannot perturb the injector fork order above
+    let takeovers: Vec<(u16, u64)> = k.cfg.chaos.takeovers().collect();
+    for (tenant, at_ms) in takeovers {
+        k.q
+            .schedule_at(SimTime::from_millis(at_ms), Ev::ChaosTakeover { tenant });
     }
     (World { k, strat }, initial_ready)
 }
@@ -404,6 +431,11 @@ fn summarize(k: Kernel, model_name: String, makespan: SimTime, sim_events: u64) 
         sim_events,
         avg_running_tasks: avg_running,
         avg_cpu_utilization: avg_cpu,
+        isolation: k
+            .isolation
+            .as_ref()
+            .map(|i| i.report())
+            .unwrap_or_default(),
         chaos: k.chaos_stats.report(),
         trace: k.trace,
         metrics: k.metrics,
@@ -466,6 +498,10 @@ pub fn run_fleet(
         .set_tenant_weights(&plan.tenant_weights);
     // per-tenant resilience accounting (wasted work / retries per lane)
     world.k.chaos_stats.set_tenants(plan.tenant_weights.len());
+    // per-tenant namespaces + fair-share-weighted node-pool partition
+    if let Some(iso) = &mut world.k.isolation {
+        iso.set_tenants(&plan.tenant_weights);
+    }
     // per-tenant bytes-moved lanes for the data plane, when enabled
     if let Some(dp) = &mut world.k.data {
         dp.stats.set_tenants(plan.tenant_weights.len());

@@ -135,8 +135,29 @@ impl PoolPath {
         self.wake_idle_worker(k, pool);
     }
 
+    /// Fetch the next message a given worker is allowed to serve. Under a
+    /// node-partitioning isolation policy a worker on a tenant-owned node
+    /// draws only from that tenant's lane (pods on owned nodes must not
+    /// execute foreign work); workers on shared nodes — and every worker
+    /// when isolation is off or `shared` — use the plain stride-fair
+    /// fetch, bit-identical to the pre-isolation path.
+    fn fetch_for_worker(&mut self, k: &Kernel, pod: PodId, pool: PoolId) -> Option<TaskId> {
+        let constrained = k.isolation.as_ref().filter(|i| i.constrains_fetch());
+        match (constrained, k.pods[pod.0 as usize].node) {
+            (Some(iso), Some(node)) => match iso.node_owner(node) {
+                Some(t) => self.broker.fetch_from(pool, TenantId(t)),
+                None => self.broker.fetch(pool),
+            },
+            _ => self.broker.fetch(pool),
+        }
+    }
+
     /// Give an idle worker of `pool` a task, if any is queued.
     pub fn wake_idle_worker(&mut self, k: &mut Kernel, pool: PoolId) {
+        if k.isolation.as_ref().is_some_and(|i| i.constrains_fetch()) {
+            self.wake_idle_worker_constrained(k, pool);
+            return;
+        }
         while let Some(&pid) = self.idle_workers[pool.idx()].front() {
             // skip workers that were deleted while idle
             if k.pods[pid.0 as usize].phase != PodPhase::Running {
@@ -155,12 +176,43 @@ impl PoolPath {
         }
     }
 
+    /// Isolation-partitioned variant of [`PoolPath::wake_idle_worker`]:
+    /// different idle workers can reach different lanes (their nodes have
+    /// different owners), so scan the FIFO for the first live worker whose
+    /// lane has work instead of only probing the front.
+    fn wake_idle_worker_constrained(&mut self, k: &mut Kernel, pool: PoolId) {
+        // same lazy cleanup as the unconstrained path: deleted workers at
+        // the front are dropped for good
+        while let Some(&pid) = self.idle_workers[pool.idx()].front() {
+            if k.pods[pid.0 as usize].phase != PodPhase::Running {
+                self.idle_workers[pool.idx()].pop_front();
+            } else {
+                break;
+            }
+        }
+        for i in 0..self.idle_workers[pool.idx()].len() {
+            let pid = self.idle_workers[pool.idx()][i];
+            if k.pods[pid.0 as usize].phase != PodPhase::Running {
+                continue;
+            }
+            if let Some(task) = self.fetch_for_worker(k, pid, pool) {
+                self.idle_workers[pool.idx()].remove(i);
+                let now = k.now();
+                k.q.schedule_at(
+                    now + SimTime::from_millis(k.cfg.fetch_ms),
+                    Ev::WorkerFetched { pod: pid, task },
+                );
+                return;
+            }
+        }
+    }
+
     /// A running worker has no task in hand: fetch the next message or
     /// park in the idle queue. Shared by pod start and post-completion
     /// advance (previously two hand-copied branches).
     pub fn fetch_or_idle(&mut self, k: &mut Kernel, pod: PodId, pool: PoolId) {
         let now = k.now();
-        if let Some(task) = self.broker.fetch(pool) {
+        if let Some(task) = self.fetch_for_worker(k, pod, pool) {
             k.q.schedule_at(
                 now + SimTime::from_millis(k.cfg.fetch_ms),
                 Ev::WorkerFetched { pod, task },

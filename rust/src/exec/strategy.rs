@@ -189,12 +189,22 @@ impl StrategyState {
             Some(d) if d.cfg().locality => Some(d),
             _ => None,
         };
+        // isolation oracle: quota admission + node-pool placement filter
+        // (None — the default — is bit-identical to the pre-tenancy pass)
+        let mut iso = k.isolation.take();
         k.sched
-            .pass_into(now, &mut k.pods, &mut k.nodes, &mut pass, locality);
+            .pass_into(now, &mut k.pods, &mut k.nodes, &mut pass, locality, iso.as_mut());
         k.data = data;
+        k.isolation = iso;
         if !pass.bound.is_empty() {
             k.record_cpu();
         }
+        // a sandboxed runtime class (gVisor/Kata-style) boots extra
+        // machinery per pod: constant start-latency tax on every bind
+        let start_ms = k.cfg.pod_start_ms
+            + k.isolation
+                .as_ref()
+                .map_or(0, |i| i.cfg.policy.start_overhead_ms());
         for &(pid, node, bind_done) in &pass.bound {
             k.pending_count -= 1;
             k.pod_bound_inc[pid.0 as usize] = k.node_incarnation[node.0];
@@ -202,7 +212,7 @@ impl StrategyState {
                 self.jobs.job_unblocked(k);
             }
             k.q.schedule_at(
-                bind_done + SimTime::from_millis(k.cfg.pod_start_ms),
+                bind_done + SimTime::from_millis(start_ms),
                 Ev::PodStarted { pod: pid },
             );
         }

@@ -190,6 +190,7 @@ pub fn run(model: ExecModel, mut sim_cfg: SimConfig, cfg: &FleetConfig) -> Fleet
                 avg_cpu_utilization: 0.0,
                 chaos: crate::chaos::ChaosReport::default(),
                 data: crate::data::DataReport::default(),
+                isolation: crate::k8s::isolation::IsolationReport::default(),
             },
             outcomes: Vec::new(),
             metas,

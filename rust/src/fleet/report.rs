@@ -37,6 +37,14 @@ pub struct TenantRow {
     /// Data-plane SLO column (data runs; 0 otherwise): decimal GB this
     /// tenant moved over the network (stage-in + stage-out).
     pub gb_moved: f64,
+    /// Isolation SLO columns (isolation runs; 0 otherwise): admissions
+    /// this tenant had throttled at its ResourceQuota, placement
+    /// violations it suffered (its tasks executing on foreign-owned
+    /// nodes), and compute-seconds of *this* tenant's in-flight work
+    /// caught in another tenant's takeover blast radius.
+    pub quota_throttles: u64,
+    pub violations: u64,
+    pub takeover_exposed_s: f64,
 }
 
 /// Fleet-wide headline numbers (one saturation-sweep point).
@@ -72,6 +80,7 @@ fn tenant_summaries(res: &FleetResult) -> Vec<(Summary, Summary, Summary)> {
 pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
     let chaos = &res.sim.chaos;
     let data = &res.sim.data;
+    let iso = &res.sim.isolation;
     tenant_summaries(res)
         .into_iter()
         .enumerate()
@@ -89,6 +98,14 @@ pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
                 wasted_s: chaos.wasted_ms_by_tenant.get(t).copied().unwrap_or(0) as f64 / 1000.0,
                 retries: chaos.retries_by_tenant.get(t).copied().unwrap_or(0),
                 gb_moved: data.bytes_by_tenant.get(t).copied().unwrap_or(0) as f64 / 1e9,
+                quota_throttles: iso.quota_throttles_by_tenant.get(t).copied().unwrap_or(0),
+                violations: iso.violations_by_tenant.get(t).copied().unwrap_or(0),
+                takeover_exposed_s: iso
+                    .takeover_exposed_ms_by_tenant
+                    .get(t)
+                    .copied()
+                    .unwrap_or(0) as f64
+                    / 1000.0,
             }
         })
         .collect()
@@ -125,11 +142,11 @@ pub fn render_table(res: &FleetResult) -> String {
     let mut out = String::from(
         "tenant  instances  qdelay-mean-s  makespan-mean-s  \
          slowdown-mean  slowdown-p50  slowdown-p95  slowdown-p99  \
-         wasted-s  retries  gb-moved\n",
+         wasted-s  retries  gb-moved  quota-thr  iso-viol  tko-exposed-s\n",
     );
     for r in per_tenant(res) {
         out.push_str(&format!(
-            "{:>6}  {:>9}  {:>13.1}  {:>15.1}  {:>13.2}  {:>12.2}  {:>12.2}  {:>12.2}  {:>8.1}  {:>7}  {:>8.2}\n",
+            "{:>6}  {:>9}  {:>13.1}  {:>15.1}  {:>13.2}  {:>12.2}  {:>12.2}  {:>12.2}  {:>8.1}  {:>7}  {:>8.2}  {:>9}  {:>8}  {:>13.1}\n",
             r.tenant,
             r.instances,
             r.queue_delay_mean_s,
@@ -141,6 +158,9 @@ pub fn render_table(res: &FleetResult) -> String {
             r.wasted_s,
             r.retries,
             r.gb_moved,
+            r.quota_throttles,
+            r.violations,
+            r.takeover_exposed_s,
         ));
     }
     out
@@ -164,6 +184,9 @@ pub fn to_json(res: &FleetResult) -> Json {
                 ("wasted_s", r.wasted_s.into()),
                 ("retries", r.retries.into()),
                 ("gb_moved", r.gb_moved.into()),
+                ("quota_throttles", r.quota_throttles.into()),
+                ("violations", r.violations.into()),
+                ("takeover_exposed_s", r.takeover_exposed_s.into()),
             ])
         })
         .collect();
@@ -179,6 +202,7 @@ pub fn to_json(res: &FleetResult) -> Json {
         ("utilization", agg.utilization.into()),
         ("chaos", res.sim.chaos.to_json()),
         ("data", res.sim.data.to_json()),
+        ("isolation", res.sim.isolation.to_json()),
         ("tenants", Json::Arr(tenants)),
     ])
 }
@@ -206,6 +230,7 @@ mod tests {
             avg_cpu_utilization: 0.5,
             chaos: crate::chaos::ChaosReport::default(),
             data: crate::data::DataReport::default(),
+            isolation: crate::k8s::isolation::IsolationReport::default(),
         };
         let outcomes = vec![
             InstanceOutcome {
@@ -280,6 +305,8 @@ mod tests {
         assert!(t.contains("slowdown-p99"));
         assert!(t.contains("wasted-s"), "resilience columns present");
         assert!(t.contains("gb-moved"), "data-plane column present");
+        assert!(t.contains("quota-thr"), "isolation columns present");
+        assert!(t.contains("tko-exposed-s"), "isolation columns present");
         assert_eq!(t.lines().count(), 3, "header + one row per tenant");
         let j = to_json(&r).to_string();
         assert!(j.contains("instances_per_hour"));
@@ -288,6 +315,9 @@ mod tests {
         assert!(j.contains("wasted_s"));
         assert!(j.contains("\"data\""), "data-plane block exported");
         assert!(j.contains("gb_moved"));
+        assert!(j.contains("\"isolation\""), "isolation block exported");
+        assert!(j.contains("quota_throttles"));
+        assert!(j.contains("takeover_exposed_s"));
     }
 
     #[test]
@@ -311,5 +341,21 @@ mod tests {
         assert_eq!(rows[0].retries, 3);
         assert_eq!(rows[1].retries, 0);
         assert_eq!(rows[1].wasted_s, 0.0);
+    }
+
+    #[test]
+    fn per_tenant_isolation_columns_follow_the_report() {
+        let mut r = fake_result();
+        r.sim.isolation.enabled = true;
+        r.sim.isolation.quota_throttles_by_tenant = vec![4, 0];
+        r.sim.isolation.violations_by_tenant = vec![0, 2];
+        r.sim.isolation.takeover_exposed_ms_by_tenant = vec![0, 2_500];
+        let rows = per_tenant(&r);
+        assert_eq!(rows[0].quota_throttles, 4);
+        assert_eq!(rows[0].violations, 0);
+        assert_eq!(rows[0].takeover_exposed_s, 0.0);
+        assert_eq!(rows[1].quota_throttles, 0);
+        assert_eq!(rows[1].violations, 2);
+        assert!((rows[1].takeover_exposed_s - 2.5).abs() < 1e-9);
     }
 }

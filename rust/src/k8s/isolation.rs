@@ -1,0 +1,661 @@
+//! Tenant isolation: namespaces, ResourceQuotas, LimitRanges and
+//! node-pool isolation policies.
+//!
+//! The paper's worker-pools model wins on utilization precisely because
+//! tenants share one elastic cluster (§3.4) — but sharing without
+//! boundaries means one misbehaving (or compromised) tenant can starve
+//! or crash everyone. Real cloud-native platforms bound that risk with
+//! Kubernetes namespaces, ResourceQuota/LimitRange admission control and
+//! node-pool isolation (cf. "Resource Management Schemes for Cloud-Native
+//! Platforms with Computing Containers of Docker and Kubernetes",
+//! PAPERS.md). This module makes those boundaries first-class and
+//! *measurable*:
+//!
+//! * [`IsolationPolicy`] — `shared` (one node pool, quota-only
+//!   boundaries), `dedicated` (nodes partitioned into per-tenant pools,
+//!   enforced as taint/toleration-style placement constraints in the
+//!   scheduler), `sandboxed` (dedicated pools **plus** a hardened
+//!   runtime: no container-to-node escape, at the price of a fixed pod
+//!   sandbox-start overhead);
+//! * [`ResourceQuota`] — per-tenant namespace quota (cpu/mem/pod-count)
+//!   enforced when a pod is admitted to a node. Kubernetes rejects the
+//!   pod at the apiserver and the owning controller retries; the
+//!   simulator folds that reject-and-retry loop into the scheduler's
+//!   existing exponential back-off, counting each deferral as a
+//!   *quota throttle*;
+//! * [`crate::k8s::resources::LimitRange`] — namespace request
+//!   defaulting/floor applied at pod creation;
+//! * [`IsolationState`] — the runtime ledger: node ownership, per-pod
+//!   namespace stamps, quota usage, and the violation/throttle counters
+//!   surfaced in [`IsolationReport`] and the fleet SLO table.
+//!
+//! The blast-radius/privilege side of isolation (what a *compromised*
+//! tenant can reach) lives in [`crate::chaos::takeover`]; this module
+//! supplies it the ownership facts it needs.
+//!
+//! With `SimConfig.isolation == None` nothing here is constructed and
+//! every run is bit-identical to an isolation-unaware build.
+
+use super::node::NodeId;
+use super::pod::{Payload, Pod, PodId};
+use super::resources::{LimitRange, Resources};
+use crate::util::json::Json;
+
+/// Namespace stamp for infrastructure pods (worker pools serve every
+/// tenant through broker lanes, so the pod itself belongs to no tenant;
+/// the task it currently executes does).
+pub const SHARED_TENANT: u16 = u16::MAX;
+
+/// How tenant workloads map onto node pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsolationPolicy {
+    /// One shared node pool: quotas bound *how much* a tenant uses, not
+    /// *where* it runs.
+    Shared,
+    /// Nodes are partitioned into per-tenant pools (fair-share-weighted
+    /// largest-remainder split); a tenant's pods only bind to its own
+    /// pool, and pool workers only serve the tenant owning their node.
+    Dedicated,
+    /// Dedicated pools plus a hardened pod runtime (gVisor/Kata-style):
+    /// container-to-node escape is denied, so a takeover's blast radius
+    /// is the victim's own pods — at the price of
+    /// [`SANDBOX_START_OVERHEAD_MS`] extra pod start latency.
+    Sandboxed,
+}
+
+/// Extra pod start latency under [`IsolationPolicy::Sandboxed`]: a
+/// hardened runtime boots a guest kernel / userspace proxy per pod.
+pub const SANDBOX_START_OVERHEAD_MS: u64 = 1_500;
+
+impl IsolationPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IsolationPolicy::Shared => "shared",
+            IsolationPolicy::Dedicated => "dedicated",
+            IsolationPolicy::Sandboxed => "sandboxed",
+        }
+    }
+
+    /// Do per-tenant node pools exist (placement + fetch constraints)?
+    pub fn partitions_nodes(&self) -> bool {
+        !matches!(self, IsolationPolicy::Shared)
+    }
+
+    /// Can a compromised container escape onto its node (and from there
+    /// reach co-resident pods and node-local caches)?
+    pub fn can_reach_node(&self) -> bool {
+        !matches!(self, IsolationPolicy::Sandboxed)
+    }
+
+    /// Pod start overhead the runtime class adds.
+    pub fn start_overhead_ms(&self) -> u64 {
+        match self {
+            IsolationPolicy::Sandboxed => SANDBOX_START_OVERHEAD_MS,
+            _ => 0,
+        }
+    }
+}
+
+/// Per-tenant namespace quota (the Kubernetes `ResourceQuota` object):
+/// aggregate requests and pod count a namespace may hold at once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceQuota {
+    pub cpu_m: u64,
+    pub mem_mb: u64,
+    /// Max concurrently admitted pods (`None` = unbounded).
+    pub pods: Option<u64>,
+}
+
+/// Parsed `--isolation` spec.
+///
+/// Grammar: `shared|dedicated|sandboxed[,quota:<cpu_m>x<mem_mb>]`
+/// `[,pods:<n>][,limit:<cpu_m>x<mem_mb>]`
+/// — e.g. `dedicated,quota:8000x32768,pods:50,limit:250x512`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IsolationConfig {
+    pub policy: IsolationPolicy,
+    /// Per-tenant namespace quota (admission-time enforcement).
+    pub quota: Option<ResourceQuota>,
+    /// Namespace LimitRange: request defaulting/floor at pod creation.
+    pub limit: Option<LimitRange>,
+}
+
+impl IsolationConfig {
+    pub fn new(policy: IsolationPolicy) -> Self {
+        IsolationConfig {
+            policy,
+            quota: None,
+            limit: None,
+        }
+    }
+
+    /// Parse the CLI/bench spec. Errors are sentences naming the bad
+    /// entry (the CLI prefixes them with `--isolation:`).
+    pub fn parse_spec(spec: &str) -> Result<IsolationConfig, String> {
+        let mut parts = spec.split(',').map(str::trim).filter(|p| !p.is_empty());
+        let policy = match parts.next() {
+            Some("shared") => IsolationPolicy::Shared,
+            Some("dedicated") => IsolationPolicy::Dedicated,
+            Some("sandboxed") => IsolationPolicy::Sandboxed,
+            Some(other) => {
+                return Err(format!(
+                    "isolation policy '{other}' is not one of shared, dedicated, sandboxed"
+                ))
+            }
+            None => return Err("empty isolation spec (expected a policy)".into()),
+        };
+        let mut cfg = IsolationConfig::new(policy);
+        for entry in parts {
+            let (kind, value) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("isolation entry '{entry}' is not kind:value"))?;
+            match kind.trim() {
+                "quota" => {
+                    let (cpu_m, mem_mb) = parse_pair(entry, value)?;
+                    let pods = cfg.quota.and_then(|q| q.pods);
+                    cfg.quota = Some(ResourceQuota { cpu_m, mem_mb, pods });
+                }
+                "pods" => {
+                    let n: u64 = value.trim().parse().map_err(|_| {
+                        format!("isolation entry '{entry}': '{value}' is not a pod count")
+                    })?;
+                    let mut q = cfg.quota.unwrap_or(ResourceQuota {
+                        cpu_m: u64::MAX,
+                        mem_mb: u64::MAX,
+                        pods: None,
+                    });
+                    q.pods = Some(n);
+                    cfg.quota = Some(q);
+                }
+                "limit" => {
+                    let (cpu_m, mem_mb) = parse_pair(entry, value)?;
+                    cfg.limit = Some(LimitRange {
+                        default: Resources::new(cpu_m, mem_mb),
+                    });
+                }
+                other => {
+                    return Err(format!(
+                        "unknown isolation entry '{other}' (expected quota, pods, limit)"
+                    ))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// One-line summary for CLI banners.
+    pub fn describe(&self) -> String {
+        let mut s = String::from(self.policy.name());
+        if let Some(q) = &self.quota {
+            if q.cpu_m != u64::MAX {
+                s.push_str(&format!(" quota={}m x {}Mi", q.cpu_m, q.mem_mb));
+            }
+            if let Some(p) = q.pods {
+                s.push_str(&format!(" pods<={p}"));
+            }
+        }
+        if let Some(l) = &self.limit {
+            s.push_str(&format!(
+                " limit={}m x {}Mi",
+                l.default.cpu_m, l.default.mem_mb
+            ));
+        }
+        s
+    }
+}
+
+fn parse_pair(entry: &str, value: &str) -> Result<(u64, u64), String> {
+    let (cpu, mem) = value.split_once('x').ok_or_else(|| {
+        format!("isolation entry '{entry}': '{value}' is not <cpu_m>x<mem_mb>")
+    })?;
+    let cpu_m: u64 = cpu.trim().parse().map_err(|_| {
+        format!("isolation entry '{entry}': '{cpu}' is not a millicore count")
+    })?;
+    let mem_mb: u64 = mem.trim().parse().map_err(|_| {
+        format!("isolation entry '{entry}': '{mem}' is not a MiB count")
+    })?;
+    Ok((cpu_m, mem_mb))
+}
+
+/// Per-run isolation counters (dense per-tenant lanes, fleet-sized by
+/// [`IsolationState::set_tenants`]).
+#[derive(Debug, Default, Clone)]
+pub struct IsolationStats {
+    /// Scheduler deferrals because the namespace quota was full.
+    pub quota_throttles_by_tenant: Vec<u64>,
+    /// Tasks that started on capacity owned by *another* tenant under a
+    /// partitioning policy (e.g. a mixed-tenant clustered batch).
+    pub violations_by_tenant: Vec<u64>,
+    /// Compute-ms innocent tenants had in flight inside takeover blast
+    /// radii at takeover time (their exposure to the remediation drain).
+    pub takeover_exposed_ms_by_tenant: Vec<u64>,
+    pub takeovers: u64,
+    pub blast_nodes_total: u64,
+    pub blast_pods_total: u64,
+    pub blast_innocent_pods_total: u64,
+    pub blast_storage_surfaces_total: u64,
+}
+
+impl IsolationStats {
+    fn lane(v: &mut Vec<u64>, tenant: u16) -> &mut u64 {
+        // clamp unknown/oversized tenants to the last lane, matching
+        // ChaosStats semantics
+        let i = (tenant as usize).min(v.len().saturating_sub(1));
+        &mut v[i]
+    }
+
+    pub fn add_throttle(&mut self, tenant: u16) {
+        *Self::lane(&mut self.quota_throttles_by_tenant, tenant) += 1;
+    }
+
+    pub fn add_violation(&mut self, tenant: u16) {
+        *Self::lane(&mut self.violations_by_tenant, tenant) += 1;
+    }
+
+    pub fn add_exposure(&mut self, tenant: u16, ms: u64) {
+        *Self::lane(&mut self.takeover_exposed_ms_by_tenant, tenant) += ms;
+    }
+}
+
+/// Runtime ledger: who owns which node, which namespace each pod lives
+/// in, and how much of each quota is in use.
+#[derive(Debug)]
+pub struct IsolationState {
+    pub cfg: IsolationConfig,
+    /// Owning tenant per node (`None` = shared pool). Empty vector under
+    /// [`IsolationPolicy::Shared`].
+    node_tenant: Vec<Option<u16>>,
+    /// Namespace stamp per pod ([`SHARED_TENANT`] for pool workers).
+    pod_tenant: Vec<u16>,
+    /// Quota charged at bind per pod (released with the pod).
+    charged: Vec<Option<Resources>>,
+    /// Per-tenant quota usage.
+    used: Vec<Resources>,
+    used_pods: Vec<u64>,
+    n_tenants: usize,
+    n_nodes: usize,
+    pub stats: IsolationStats,
+}
+
+impl IsolationState {
+    /// Build for a single-tenant run; [`IsolationState::set_tenants`]
+    /// re-partitions when a fleet plan arrives.
+    pub fn new(cfg: IsolationConfig, n_nodes: usize) -> Self {
+        let mut s = IsolationState {
+            cfg,
+            node_tenant: Vec::new(),
+            pod_tenant: Vec::new(),
+            charged: Vec::new(),
+            used: Vec::new(),
+            used_pods: Vec::new(),
+            n_tenants: 0,
+            n_nodes,
+            stats: IsolationStats::default(),
+        };
+        s.set_tenants(&[1]);
+        s
+    }
+
+    /// Size the per-tenant lanes and (re)partition the node pools by
+    /// fair-share weight. Called before any event runs, so partitioning
+    /// is part of the deterministic initial state.
+    pub fn set_tenants(&mut self, weights: &[u64]) {
+        let n = weights.len().max(1);
+        self.n_tenants = n;
+        self.used = vec![Resources::ZERO; n];
+        self.used_pods = vec![0; n];
+        self.stats.quota_throttles_by_tenant = vec![0; n];
+        self.stats.violations_by_tenant = vec![0; n];
+        self.stats.takeover_exposed_ms_by_tenant = vec![0; n];
+        self.node_tenant = if self.cfg.policy.partitions_nodes() {
+            // weighted largest-remainder split of the node count: tenant
+            // t owns a contiguous block of `counts[t]` nodes
+            let unit = vec![1u64; n];
+            let w = if weights.iter().all(|&x| x == 0) { &unit } else { weights };
+            let counts = crate::autoscale::split_quota(self.n_nodes as u64, w);
+            let mut owners = Vec::with_capacity(self.n_nodes);
+            for (t, &c) in counts.iter().enumerate() {
+                for _ in 0..c {
+                    owners.push(Some(t as u16));
+                }
+            }
+            // remainder nodes (all-zero weights edge) stay shared
+            owners.resize(self.n_nodes, None);
+            owners
+        } else {
+            Vec::new()
+        };
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.n_tenants
+    }
+
+    /// Owning tenant of a node (`None` = shared pool / shared policy).
+    pub fn node_owner(&self, node: NodeId) -> Option<u16> {
+        self.node_tenant.get(node.0).copied().flatten()
+    }
+
+    /// Do worker fetches have to stay within the node owner's lane?
+    pub fn constrains_fetch(&self) -> bool {
+        self.cfg.policy.partitions_nodes()
+    }
+
+    /// Stamp a new pod with its namespace and apply the LimitRange
+    /// default/floor to its requests. Returns the effective requests.
+    pub fn on_pod_created(&mut self, pod: PodId, tenant: u16, requests: Resources) -> Resources {
+        let i = pod.0 as usize;
+        if i >= self.pod_tenant.len() {
+            self.pod_tenant.resize(i + 1, SHARED_TENANT);
+            self.charged.resize(i + 1, None);
+        }
+        self.pod_tenant[i] = tenant;
+        match &self.cfg.limit {
+            Some(lr) => lr.apply(requests),
+            None => requests,
+        }
+    }
+
+    /// Namespace of a pod ([`SHARED_TENANT`] when unstamped — pods
+    /// created before the state existed never happen, but stay safe).
+    pub fn tenant_of_pod(&self, pod: PodId) -> u16 {
+        self.pod_tenant
+            .get(pod.0 as usize)
+            .copied()
+            .unwrap_or(SHARED_TENANT)
+    }
+
+    /// The tenant whose *work* a pod currently embodies: the namespace
+    /// for tenant-owned pods, the running task's tenant for pool
+    /// workers, `None` for idle infrastructure.
+    pub fn effective_tenant(&self, pod: &Pod, current_task_tenant: Option<u16>) -> Option<u16> {
+        match &pod.payload {
+            Payload::JobBatch { .. } => Some(self.tenant_of_pod(pod.id)),
+            Payload::Worker { .. } => current_task_tenant,
+        }
+    }
+
+    /// Placement constraint (the taint/toleration check): may `tenant`'s
+    /// pod bind to `node`? Shared-namespace infrastructure pods tolerate
+    /// every pool — the node's owner then bounds whose work they serve
+    /// (see `Broker::fetch_from`).
+    pub fn allows(&self, tenant: u16, node: NodeId) -> bool {
+        match self.node_owner(node) {
+            None => true,
+            Some(owner) => tenant == SHARED_TENANT || tenant == owner,
+        }
+    }
+
+    /// Admission check against the namespace quota. Infrastructure pods
+    /// are not namespaced and always pass.
+    pub fn admits(&self, tenant: u16, requests: Resources) -> bool {
+        if tenant == SHARED_TENANT {
+            return true;
+        }
+        let Some(q) = &self.cfg.quota else { return true };
+        let t = (tenant as usize).min(self.n_tenants - 1);
+        if let Some(cap) = q.pods {
+            if self.used_pods[t] >= cap {
+                return false;
+            }
+        }
+        let u = self.used[t];
+        u.cpu_m.saturating_add(requests.cpu_m) <= q.cpu_m
+            && u.mem_mb.saturating_add(requests.mem_mb) <= q.mem_mb
+    }
+
+    /// Charge the quota for a pod that just bound.
+    pub fn charge(&mut self, pod: PodId, tenant: u16, requests: Resources) {
+        if tenant == SHARED_TENANT || self.cfg.quota.is_none() {
+            return;
+        }
+        let t = (tenant as usize).min(self.n_tenants - 1);
+        self.used[t] = self.used[t] + requests;
+        self.used_pods[t] += 1;
+        let i = pod.0 as usize;
+        if i >= self.charged.len() {
+            self.charged.resize(i + 1, None);
+            self.pod_tenant.resize(i + 1, SHARED_TENANT);
+        }
+        self.charged[i] = Some(requests);
+    }
+
+    /// Release a pod's quota charge (no-op for pods that never bound).
+    pub fn release(&mut self, pod: PodId) {
+        let i = pod.0 as usize;
+        let Some(req) = self.charged.get_mut(i).and_then(|c| c.take()) else {
+            return;
+        };
+        let tenant = self.pod_tenant[i];
+        let t = (tenant as usize).min(self.n_tenants - 1);
+        self.used[t] = self.used[t].saturating_sub(req);
+        self.used_pods[t] = self.used_pods[t].saturating_sub(1);
+    }
+
+    /// Record a task start on `node`; counts an isolation violation when
+    /// the task runs on capacity owned by another tenant.
+    pub fn note_task_start(&mut self, task_tenant: u16, node: NodeId) {
+        if let Some(owner) = self.node_owner(node) {
+            if owner != task_tenant {
+                self.stats.add_violation(task_tenant);
+            }
+        }
+    }
+
+    /// Quota currently in use by a tenant (test/report hook).
+    pub fn used_by(&self, tenant: u16) -> (Resources, u64) {
+        let t = (tenant as usize).min(self.n_tenants - 1);
+        (self.used[t], self.used_pods[t])
+    }
+
+    pub fn report(&self) -> IsolationReport {
+        IsolationReport {
+            enabled: true,
+            policy: self.cfg.policy.name().to_string(),
+            quota_throttles_by_tenant: self.stats.quota_throttles_by_tenant.clone(),
+            violations_by_tenant: self.stats.violations_by_tenant.clone(),
+            takeover_exposed_ms_by_tenant: self.stats.takeover_exposed_ms_by_tenant.clone(),
+            takeovers: self.stats.takeovers,
+            blast_nodes: self.stats.blast_nodes_total,
+            blast_pods: self.stats.blast_pods_total,
+            blast_innocent_pods: self.stats.blast_innocent_pods_total,
+            blast_storage_surfaces: self.stats.blast_storage_surfaces_total,
+        }
+    }
+}
+
+/// Isolation accounting attached to every [`crate::report::SimResult`]
+/// (all-zero, `enabled == false`, when isolation is off).
+#[derive(Debug, Default, Clone)]
+pub struct IsolationReport {
+    pub enabled: bool,
+    pub policy: String,
+    pub quota_throttles_by_tenant: Vec<u64>,
+    pub violations_by_tenant: Vec<u64>,
+    pub takeover_exposed_ms_by_tenant: Vec<u64>,
+    pub takeovers: u64,
+    /// Blast-radius sizes summed over all takeovers this run.
+    pub blast_nodes: u64,
+    pub blast_pods: u64,
+    pub blast_innocent_pods: u64,
+    pub blast_storage_surfaces: u64,
+}
+
+impl IsolationReport {
+    pub fn quota_throttles(&self) -> u64 {
+        self.quota_throttles_by_tenant.iter().sum()
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.violations_by_tenant.iter().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", self.enabled.into()),
+            ("policy", Json::str(&self.policy)),
+            ("quota_throttles", self.quota_throttles().into()),
+            ("isolation_violations", self.violations().into()),
+            ("takeovers", self.takeovers.into()),
+            ("blast_nodes", self.blast_nodes.into()),
+            ("blast_pods", self.blast_pods.into()),
+            ("blast_innocent_pods", self.blast_innocent_pods.into()),
+            ("blast_storage_surfaces", self.blast_storage_surfaces.into()),
+            (
+                "quota_throttles_by_tenant",
+                Json::Arr(
+                    self.quota_throttles_by_tenant
+                        .iter()
+                        .map(|&v| v.into())
+                        .collect(),
+                ),
+            ),
+            (
+                "violations_by_tenant",
+                Json::Arr(self.violations_by_tenant.iter().map(|&v| v.into()).collect()),
+            ),
+            (
+                "takeover_exposed_ms_by_tenant",
+                Json::Arr(
+                    self.takeover_exposed_ms_by_tenant
+                        .iter()
+                        .map(|&v| v.into())
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let cfg =
+            IsolationConfig::parse_spec("dedicated,quota:8000x32768,pods:50,limit:250x512")
+                .unwrap();
+        assert_eq!(cfg.policy, IsolationPolicy::Dedicated);
+        let q = cfg.quota.unwrap();
+        assert_eq!((q.cpu_m, q.mem_mb, q.pods), (8000, 32768, Some(50)));
+        assert_eq!(cfg.limit.unwrap().default, Resources::new(250, 512));
+    }
+
+    #[test]
+    fn pods_entry_alone_leaves_resources_unbounded() {
+        let cfg = IsolationConfig::parse_spec("shared,pods:4").unwrap();
+        let q = cfg.quota.unwrap();
+        assert_eq!(q.pods, Some(4));
+        assert_eq!(q.cpu_m, u64::MAX);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "vip",
+            "dedicated,quota:8000",
+            "dedicated,quota:axb",
+            "shared,pods:many",
+            "shared,limit:1x2x3",
+            "shared,quota",
+            "shared,ns:team-a",
+        ] {
+            assert!(IsolationConfig::parse_spec(bad).is_err(), "{bad:?} must fail");
+        }
+    }
+
+    #[test]
+    fn dedicated_partitions_nodes_by_weight() {
+        let mut s = IsolationState::new(
+            IsolationConfig::new(IsolationPolicy::Dedicated),
+            8,
+        );
+        s.set_tenants(&[3, 1]);
+        // 8 nodes split 3:1 => 6 and 2, contiguous blocks
+        let owners: Vec<Option<u16>> = (0..8).map(|i| s.node_owner(NodeId(i))).collect();
+        assert_eq!(owners[..6], vec![Some(0); 6]);
+        assert_eq!(owners[6..], vec![Some(1); 2]);
+        assert!(s.allows(0, NodeId(2)));
+        assert!(!s.allows(0, NodeId(7)));
+        assert!(s.allows(SHARED_TENANT, NodeId(7)), "infra tolerates all pools");
+    }
+
+    #[test]
+    fn shared_policy_owns_no_nodes() {
+        let mut s =
+            IsolationState::new(IsolationConfig::new(IsolationPolicy::Shared), 4);
+        s.set_tenants(&[1, 1]);
+        assert_eq!(s.node_owner(NodeId(0)), None);
+        assert!(s.allows(1, NodeId(0)));
+        assert!(!s.constrains_fetch());
+    }
+
+    #[test]
+    fn quota_admission_charges_and_releases() {
+        let mut cfg = IsolationConfig::new(IsolationPolicy::Shared);
+        cfg.quota = Some(ResourceQuota {
+            cpu_m: 2000,
+            mem_mb: 4096,
+            pods: Some(2),
+        });
+        let mut s = IsolationState::new(cfg, 4);
+        let req = Resources::new(1000, 1024);
+        assert!(s.admits(0, req));
+        s.charge(PodId(0), 0, req);
+        s.charge(PodId(1), 0, req);
+        assert_eq!(s.used_by(0), (Resources::new(2000, 2048), 2));
+        // cpu and pod-count caps both full now
+        assert!(!s.admits(0, Resources::new(1, 1)));
+        assert!(s.admits(SHARED_TENANT, req), "infra is not namespaced");
+        s.release(PodId(0));
+        assert_eq!(s.used_by(0), (Resources::new(1000, 1024), 1));
+        assert!(s.admits(0, req));
+        // double release is a no-op; releasing an uncharged pod too
+        s.release(PodId(0));
+        s.release(PodId(9));
+        assert_eq!(s.used_by(0), (Resources::new(1000, 1024), 1));
+    }
+
+    #[test]
+    fn violations_count_cross_pool_task_starts() {
+        let mut s = IsolationState::new(
+            IsolationConfig::new(IsolationPolicy::Dedicated),
+            4,
+        );
+        s.set_tenants(&[1, 1]);
+        s.note_task_start(1, NodeId(0)); // tenant 1's task on tenant 0's node
+        s.note_task_start(0, NodeId(0)); // in-pool: fine
+        assert_eq!(s.stats.violations_by_tenant, vec![0, 1]);
+        assert_eq!(s.report().violations(), 1);
+    }
+
+    #[test]
+    fn report_round_trips_counters() {
+        let mut s = IsolationState::new(
+            IsolationConfig::new(IsolationPolicy::Sandboxed),
+            2,
+        );
+        s.set_tenants(&[1, 1]);
+        s.stats.add_throttle(0);
+        s.stats.add_exposure(1, 1500);
+        s.stats.takeovers = 1;
+        let r = s.report();
+        assert!(r.enabled);
+        assert_eq!(r.policy, "sandboxed");
+        assert_eq!(r.quota_throttles(), 1);
+        assert_eq!(r.takeover_exposed_ms_by_tenant, vec![0, 1500]);
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"takeovers\":1"));
+        let off = IsolationReport::default();
+        assert!(!off.enabled && off.quota_throttles() == 0);
+    }
+
+    #[test]
+    fn describe_names_the_knobs() {
+        let cfg = IsolationConfig::parse_spec("sandboxed,quota:4000x8192,pods:9").unwrap();
+        let d = cfg.describe();
+        assert!(d.contains("sandboxed") && d.contains("4000m") && d.contains("pods<=9"));
+    }
+}

@@ -4,12 +4,14 @@
 //! are modeled explicitly.
 
 pub mod api_server;
+pub mod isolation;
 pub mod node;
 pub mod pod;
 pub mod resources;
 pub mod scheduler;
 
+pub use isolation::{IsolationConfig, IsolationPolicy, IsolationState};
 pub use node::{Node, NodeId};
 pub use pod::{Payload, Pod, PodId, PodPhase};
-pub use resources::Resources;
+pub use resources::{LimitRange, Resources};
 pub use scheduler::{Scheduler, SchedulerConfig};

@@ -47,6 +47,27 @@ impl Resources {
     }
 }
 
+/// Namespace LimitRange: the default/minimum request a tenant namespace
+/// imposes on its pods. Kubernetes uses it to default containers that
+/// request nothing and to floor undersized requests — both collapse to a
+/// component-wise maximum with `default` (a zero request becomes exactly
+/// the default). Applied at pod creation when the isolation subsystem is
+/// active (`--isolation ...,limit:<cpu_m>x<mem_mb>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LimitRange {
+    pub default: Resources,
+}
+
+impl LimitRange {
+    /// Default/floor a pod's requests.
+    pub fn apply(&self, req: Resources) -> Resources {
+        Resources {
+            cpu_m: req.cpu_m.max(self.default.cpu_m),
+            mem_mb: req.mem_mb.max(self.default.mem_mb),
+        }
+    }
+}
+
 impl Add for Resources {
     type Output = Resources;
     fn add(self, rhs: Resources) -> Resources {
@@ -108,6 +129,19 @@ mod tests {
         assert_eq!(a - b, Resources::new(750, 1536));
         assert_eq!(b.saturating_sub(a), Resources::ZERO);
         assert_eq!(b.checked_mul(3), Resources::new(750, 1536));
+    }
+
+    #[test]
+    fn limit_range_defaults_and_floors() {
+        let lr = LimitRange {
+            default: Resources::new(250, 512),
+        };
+        // a zero request takes the namespace default exactly
+        assert_eq!(lr.apply(Resources::ZERO), Resources::new(250, 512));
+        // undersized requests are floored component-wise
+        assert_eq!(lr.apply(Resources::new(100, 2048)), Resources::new(250, 2048));
+        // requests above the floor pass through untouched
+        assert_eq!(lr.apply(Resources::new(1000, 1024)), Resources::new(1000, 1024));
     }
 
     #[test]

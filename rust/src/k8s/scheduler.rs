@@ -8,6 +8,7 @@
 //! their back-off, leaving the cluster idle (the ~100 s gap in Fig. 4),
 //! and then wake in synchronized batches.
 
+use super::isolation::IsolationState;
 use super::node::{Node, NodeId};
 use super::pod::{Pod, PodId, PodPhase};
 use crate::sim::SimTime;
@@ -141,7 +142,7 @@ impl Scheduler {
     /// exponential back-off.
     pub fn pass(&mut self, now: SimTime, pods: &mut [Pod], nodes: &mut [Node]) -> SchedulePass {
         let mut out = SchedulePass::default();
-        self.pass_into(now, pods, nodes, &mut out, None);
+        self.pass_into(now, pods, nodes, &mut out, None, None);
         out
     }
 
@@ -151,6 +152,15 @@ impl Scheduler {
     /// [`DataLocality`] oracle, fitting nodes are ranked by cached input
     /// bytes first (ties fall back to best-fit) — when no node caches
     /// anything, the choice is bit-identical to the oracle-free path.
+    ///
+    /// With an [`IsolationState`] oracle, two more gates apply per pod:
+    /// the namespace ResourceQuota is checked *before* the node search
+    /// (a full quota throttles the pod through the same exponential
+    /// back-off — Kubernetes rejects at the apiserver and the owning
+    /// controller retries), and node-pool placement constraints filter
+    /// the candidate nodes like taints/tolerations. Quota is charged on
+    /// bind and released with the pod. A `None` oracle (isolation off)
+    /// is bit-identical to pre-isolation behavior.
     pub fn pass_into(
         &mut self,
         now: SimTime,
@@ -158,6 +168,7 @@ impl Scheduler {
         nodes: &mut [Node],
         out: &mut SchedulePass,
         locality: Option<&dyn DataLocality>,
+        mut isolation: Option<&mut IsolationState>,
     ) {
         out.bound.clear();
         out.backed_off.clear();
@@ -179,26 +190,53 @@ impl Scheduler {
             if pod.phase != PodPhase::Pending {
                 continue; // deleted while queued
             }
+            // Namespace quota admission first: a throttled pod never
+            // reaches the node search.
+            let tenant = isolation.as_deref().map(|iso| iso.tenant_of_pod(pid));
+            let admitted = match (isolation.as_deref_mut(), tenant) {
+                (Some(iso), Some(t)) => {
+                    if iso.admits(t, pod.requests) {
+                        true
+                    } else {
+                        iso.stats.add_throttle(t);
+                        false
+                    }
+                }
+                _ => true,
+            };
             // Filter + score: best-fit on CPU (tightest remaining capacity
             // that still fits) — keeps large pods schedulable longer than
             // spread-scoring would, matching kube-scheduler's default
             // bin-packing behaviour under pressure well enough. The
             // locality oracle prepends a cached-bytes rank; `min_by_key`
             // keeps the *first* minimum, so an all-zero score degenerates
-            // to exactly the best-fit choice.
-            let fit = match locality {
-                None => nodes
-                    .iter()
-                    .filter(|n| n.fits(&pod.requests))
-                    .min_by_key(|n| n.free().cpu_m)
-                    .map(|n| n.id),
-                Some(h) => nodes
-                    .iter()
-                    .filter(|n| n.fits(&pod.requests))
-                    .min_by_key(|n| {
-                        (std::cmp::Reverse(h.cached_input_bytes(pod, n)), n.free().cpu_m)
-                    })
-                    .map(|n| n.id),
+            // to exactly the best-fit choice. The isolation oracle drops
+            // nodes outside the tenant's pool from the candidate set.
+            let fit = if !admitted {
+                None
+            } else {
+                let iso = isolation.as_deref();
+                let ok = |n: &Node| {
+                    n.fits(&pod.requests)
+                        && match (iso, tenant) {
+                            (Some(i), Some(t)) => i.allows(t, n.id),
+                            _ => true,
+                        }
+                };
+                match locality {
+                    None => nodes
+                        .iter()
+                        .filter(|n| ok(n))
+                        .min_by_key(|n| n.free().cpu_m)
+                        .map(|n| n.id),
+                    Some(h) => nodes
+                        .iter()
+                        .filter(|n| ok(n))
+                        .min_by_key(|n| {
+                            (std::cmp::Reverse(h.cached_input_bytes(pod, n)), n.free().cpu_m)
+                        })
+                        .map(|n| n.id),
+                }
             };
             match fit {
                 Some(nid) => {
@@ -206,6 +244,9 @@ impl Scheduler {
                     pod.phase = PodPhase::Starting;
                     pod.node = Some(nid);
                     pod.scheduled_at = Some(now);
+                    if let (Some(iso), Some(t)) = (isolation.as_deref_mut(), tenant) {
+                        iso.charge(pid, t, pod.requests);
+                    }
                     // pipeline the binds to model scheduler throughput
                     self.busy_until =
                         self.busy_until.max(now) + SimTime::from_millis(self.cfg.bind_ms);
@@ -214,7 +255,8 @@ impl Scheduler {
                 }
                 None => {
                     let req = pod.requests;
-                    if any_cordoned
+                    if admitted
+                        && any_cordoned
                         && nodes
                             .iter()
                             .any(|n| n.cordoned && n.fits_ignoring_cordon(&req))
@@ -380,11 +422,11 @@ mod tests {
         let mut pods: Vec<Pod> = (0..2).map(|i| mkpod(i, 1000)).collect();
         sched.enqueue(PodId(0));
         let mut out = SchedulePass::default();
-        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, None);
+        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, None, None);
         assert_eq!(out.bound.len(), 1);
         // second pass through the same buffer: stale results are cleared
         sched.enqueue(PodId(1));
-        sched.pass_into(SimTime(50), &mut pods, &mut nodes, &mut out, None);
+        sched.pass_into(SimTime(50), &mut pods, &mut nodes, &mut out, None, None);
         assert_eq!(out.bound.len(), 1);
         assert_eq!(out.bound[0].0, PodId(1));
         assert!(out.backed_off.is_empty());
@@ -536,14 +578,14 @@ mod tests {
         };
         sched.enqueue(PodId(0));
         let mut out = SchedulePass::default();
-        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, Some(&hint));
+        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, Some(&hint), None);
         assert_eq!(out.bound[0].1, NodeId(2), "cached bytes win placement");
         // an all-zero score must reproduce the best-fit pick exactly
         let cold = FakeLocality {
             bytes: vec![0, 0, 0],
         };
         sched.enqueue(PodId(1));
-        sched.pass_into(SimTime(10), &mut pods, &mut nodes, &mut out, Some(&cold));
+        sched.pass_into(SimTime(10), &mut pods, &mut nodes, &mut out, Some(&cold), None);
         assert_eq!(out.bound[0].1, NodeId(0), "zero score falls back to best-fit");
     }
 
@@ -568,5 +610,80 @@ mod tests {
                 assert!(node.allocated.mem_mb <= node.capacity.mem_mb);
             }
         }
+    }
+
+    // -- isolation oracle: quota admission + placement constraints --------
+
+    use crate::k8s::isolation::{
+        IsolationConfig, IsolationPolicy, IsolationState, SHARED_TENANT,
+    };
+
+    #[test]
+    fn quota_throttles_then_admits_after_release() {
+        let cfg = IsolationConfig::parse_spec("shared,quota:1000x4096").unwrap();
+        let mut iso = IsolationState::new(cfg, 1);
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(1); // 4000m — plenty; only quota binds
+        let mut pods: Vec<Pod> = (0..2).map(|i| mkpod(i, 1000)).collect();
+        for i in 0..2 {
+            iso.on_pod_created(PodId(i), 0, pods[i as usize].requests);
+            sched.enqueue(PodId(i));
+        }
+        let mut out = SchedulePass::default();
+        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, None, Some(&mut iso));
+        // first pod fills the 1000m namespace quota; second is throttled
+        // into back-off, not bound
+        assert_eq!(out.bound.len(), 1);
+        assert_eq!(out.bound[0].0, PodId(0));
+        assert_eq!(out.backed_off.len(), 1);
+        assert_eq!(iso.stats.quota_throttles_by_tenant, vec![1]);
+        // quota frees with the pod: the throttled pod then binds
+        iso.release(PodId(0));
+        sched.enqueue(PodId(1));
+        sched.pass_into(SimTime(2_000), &mut pods, &mut nodes, &mut out, None, Some(&mut iso));
+        assert_eq!(out.bound.len(), 1);
+        assert_eq!(out.bound[0].0, PodId(1));
+    }
+
+    #[test]
+    fn dedicated_policy_constrains_placement_to_owned_nodes() {
+        let mut iso = IsolationState::new(
+            IsolationConfig::new(IsolationPolicy::Dedicated),
+            2,
+        );
+        iso.set_tenants(&[1, 1]); // node 0 -> tenant 0, node 1 -> tenant 1
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(2);
+        // make the foreign node 0 the best-fit winner: only the pool
+        // constraint can steer the pod to node 1
+        nodes[0].alloc(Resources::new(3000, 1024));
+        let mut pods = vec![mkpod(0, 1000)];
+        iso.on_pod_created(PodId(0), 1, pods[0].requests);
+        sched.enqueue(PodId(0));
+        let mut out = SchedulePass::default();
+        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, None, Some(&mut iso));
+        assert_eq!(out.bound.len(), 1);
+        assert_eq!(out.bound[0].1, NodeId(1), "tenant 1 must land in its own pool");
+        assert_eq!(iso.stats.quota_throttles_by_tenant.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn shared_tenant_pods_bind_anywhere_under_dedicated_policy() {
+        let mut iso = IsolationState::new(
+            IsolationConfig::new(IsolationPolicy::Dedicated),
+            2,
+        );
+        iso.set_tenants(&[1, 1]);
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut nodes = paper_cluster(2);
+        nodes[0].alloc(Resources::new(3000, 1024)); // node 0 is best-fit
+        let mut pods = vec![mkpod(0, 1000)];
+        // infra/worker pods carry the shared sentinel and ignore pools
+        iso.on_pod_created(PodId(0), SHARED_TENANT, pods[0].requests);
+        sched.enqueue(PodId(0));
+        let mut out = SchedulePass::default();
+        sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, None, Some(&mut iso));
+        assert_eq!(out.bound.len(), 1);
+        assert_eq!(out.bound[0].1, NodeId(0), "shared pods keep plain best-fit");
     }
 }

@@ -22,6 +22,7 @@ fn usage() -> ! {
            --max-pending N                          (throttled job model, §5)\n\
            --chaos SPEC                             failure injection (see below)\n\
            --data SPEC                              storage/transfer modeling (see below)\n\
+           --isolation SPEC                         tenant isolation (see below)\n\
            --json                                   print result as JSON\n\
            --html FILE                              write an HTML report\n\
          chaos SPEC (run/serve/trace): comma-separated kind:value\n\
@@ -29,7 +30,17 @@ fn usage() -> ! {
            crash:R      node crashes per node per hour (no warning)\n\
            pod:P        pod crash probability at container start\n\
            straggler:F  fraction of nodes running tasks 3x slower\n\
+           takeover:T@S tenant T compromised at S seconds (blast radius is\n\
+                        measured against the --isolation policy, then drained)\n\
            e.g. --chaos spot:0.2,crash:0.1,straggler:0.25 --seed 7\n\
+         isolation SPEC (run/serve): policy[,quota:...][,pods:N][,limit:...]\n\
+           shared|dedicated|sandboxed   node-pool policy: shared nodes,\n\
+                        per-tenant node partitions, or partitions plus a\n\
+                        sandbox runtime (no node escape, slower pod start)\n\
+           quota:CxM    per-tenant ResourceQuota, C milli-CPU x M MiB\n\
+           pods:N       per-tenant pod-count quota\n\
+           limit:CxM    LimitRange floor applied to pod requests\n\
+           e.g. --isolation dedicated,quota:16000x65536,pods:64\n\
          data SPEC (run/serve/trace): comma-separated kind:value\n\
            nfs:G        shared NFS backend, G Gbit/s aggregate server bandwidth\n\
            s3:LxG       object store, L ms request latency, G Gbit/s per stream\n\
@@ -51,6 +62,7 @@ fn usage() -> ! {
            --weights 2,1       fair-share dequeue weight per tenant\n\
            --cap N             admission cap: max concurrent instances (0 = off)\n\
            --chaos SPEC        failure injection during the fleet run\n\
+           --isolation SPEC    tenant isolation during the fleet run\n\
            --json              print the fleet report as JSON\n\
          validation: flag combinations are checked up front and exit with a\n\
            named config error (e.g. zero nodes, empty/duplicate pool set,\n\
@@ -67,7 +79,8 @@ fn parse_sim(args: &Args, max_pending: bool) -> driver::SimConfig {
         .nodes(args.get_usize("nodes", 17))
         .seed(args.get_u64("seed", 42))
         .chaos(parse_chaos(args))
-        .data(parse_data(args));
+        .data(parse_data(args))
+        .isolation(parse_isolation(args));
     if max_pending && args.has("max-pending") {
         b = b.max_pending_pods(Some(args.get_usize("max-pending", 64)));
     }
@@ -107,6 +120,17 @@ fn parse_data(args: &Args) -> Option<hyperflow_k8s::data::DataConfig> {
     args.get("data").map(|spec| {
         hyperflow_k8s::data::DataConfig::parse_spec(spec).unwrap_or_else(|e| {
             eprintln!("--data: {e}");
+            usage()
+        })
+    })
+}
+
+/// Shared `--isolation` spec parsing for `run` / `serve`: a malformed
+/// spec exits with the named parse error instead of panicking.
+fn parse_isolation(args: &Args) -> Option<hyperflow_k8s::k8s::isolation::IsolationConfig> {
+    args.get("isolation").map(|spec| {
+        hyperflow_k8s::k8s::isolation::IsolationConfig::parse_spec(spec).unwrap_or_else(|e| {
+            eprintln!("--isolation: {e}");
             usage()
         })
     })
@@ -241,6 +265,19 @@ fn cmd_run(args: &Args) {
                 res.data.stage_in_p95_s,
                 res.data.stage_in_p99_s,
                 res.data.io_frac() * 100.0,
+            );
+        }
+        if res.isolation.enabled {
+            println!(
+                "isolation: policy {}  quota throttles: {}  violations: {}  \
+                 takeovers: {} (blast: {} nodes, {} pods, {} innocent)",
+                res.isolation.policy,
+                res.isolation.quota_throttles(),
+                res.isolation.violations(),
+                res.isolation.takeovers,
+                res.isolation.blast_nodes,
+                res.isolation.blast_pods,
+                res.isolation.blast_innocent_pods,
             );
         }
         println!(
@@ -387,6 +424,15 @@ fn cmd_serve(args: &Args) {
                 res.sim.data.bytes_moved() as f64 / 1e9,
                 res.sim.data.cache_hit_ratio() * 100.0,
                 res.sim.data.stage_in_p95_s
+            );
+        }
+        if res.sim.isolation.enabled {
+            println!(
+                "isolation: policy {}   quota throttles: {}   violations: {}   takeovers: {}",
+                res.sim.isolation.policy,
+                res.sim.isolation.quota_throttles(),
+                res.sim.isolation.violations(),
+                res.sim.isolation.takeovers
             );
         }
         println!();

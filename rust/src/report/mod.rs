@@ -118,6 +118,10 @@ pub struct SimResult {
     /// Data-plane accounting (all-zero, with `enabled == false`, when the
     /// data plane is off).
     pub data: crate::data::DataReport,
+    /// Multi-tenant isolation accounting: quota throttles, placement
+    /// violations and takeover blast radii (all-zero, with
+    /// `enabled == false`, when isolation is off).
+    pub isolation: crate::k8s::isolation::IsolationReport,
 }
 
 impl SimResult {
@@ -161,6 +165,7 @@ impl SimResult {
             ("avg_cpu_utilization", self.avg_cpu_utilization.into()),
             ("chaos", self.chaos.to_json()),
             ("data", self.data.to_json()),
+            ("isolation", self.isolation.to_json()),
             ("running_tasks_series", Json::Arr(series)),
         ])
     }

@@ -271,6 +271,89 @@ fn data_off_reproduces_baseline_makespans() {
     }
 }
 
+/// Isolation + takeover rerun contract (the acceptance bar for
+/// `--isolation` and `takeover:T@S`): a fleet run with per-tenant quotas,
+/// node-pool partitioning, lane-constrained worker fetches and a
+/// mid-window tenant compromise must reproduce the whole SLO table —
+/// blast radius, quota throttles, violations and innocent exposure
+/// included — bit-identically from the seed.
+#[test]
+fn isolation_takeover_fleet_rerun_is_bit_identical() {
+    for spec in ["shared,quota:16000x65536", "dedicated,quota:16000x65536", "sandboxed"] {
+        let mk = || {
+            let cfg = FleetConfig {
+                arrival: ArrivalProcess::Poisson { per_hour: 60.0 },
+                duration_s: 400.0,
+                tenants: fleet::default_tenants(2, &[3, 4]),
+                seed: 42,
+                max_in_flight: None,
+            };
+            let mut sim = driver::SimConfig::with_nodes(4);
+            sim.seed = 42;
+            sim.isolation =
+                Some(hyperflow_k8s::k8s::isolation::IsolationConfig::parse_spec(spec).unwrap());
+            sim.chaos = hyperflow_k8s::chaos::ChaosConfig::parse_spec("takeover:0@200").unwrap();
+            fleet::run(ExecModel::paper_hybrid_pools(), sim, &cfg)
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.sim.makespan, b.sim.makespan, "{spec}: makespan");
+        assert_eq!(a.sim.sim_events, b.sim.sim_events, "{spec}: event count");
+        assert!(a.sim.isolation.enabled, "{spec}: isolation must be live");
+        assert_eq!(a.sim.isolation.takeovers, 1, "{spec}: one takeover fired");
+        assert_eq!(
+            a.sim.isolation.blast_nodes, b.sim.isolation.blast_nodes,
+            "{spec}: blast nodes"
+        );
+        assert_eq!(
+            a.sim.isolation.quota_throttles_by_tenant,
+            b.sim.isolation.quota_throttles_by_tenant,
+            "{spec}: throttles"
+        );
+        assert_eq!(
+            a.sim.isolation.takeover_exposed_ms_by_tenant,
+            b.sim.isolation.takeover_exposed_ms_by_tenant,
+            "{spec}: innocent exposure"
+        );
+        assert_eq!(
+            fleet::report::render_table(&a),
+            fleet::report::render_table(&b),
+            "{spec}: SLO table diverged across reruns"
+        );
+        // the sandbox contains the escape: no foreign nodes are reachable
+        if spec.starts_with("sandboxed") {
+            assert_eq!(a.sim.isolation.blast_nodes, 0, "sandbox must contain the blast");
+            assert_eq!(a.sim.isolation.blast_innocent_pods, 0, "no innocent pods reached");
+        }
+    }
+}
+
+/// Regression: with `--isolation` unset (the default), runs must carry an
+/// all-zero isolation report and reproduce the baseline makespans exactly
+/// — the flag gates every isolation code path (admission, placement
+/// filtering, lane-constrained fetch, sandbox start overhead), so
+/// disabled runs stay bit-identical to pre-isolation builds.
+#[test]
+fn isolation_off_reproduces_baseline_makespans() {
+    for model in all_models() {
+        let mk = || {
+            let cfg = driver::SimConfig::with_nodes(5);
+            assert!(cfg.isolation.is_none(), "isolation must default to off");
+            driver::run(montage(8, 42), model.clone(), cfg)
+        };
+        let (a, b) = (mk(), mk());
+        let name = model.name();
+        assert!(!a.isolation.enabled, "{name}: disabled runs report no isolation");
+        assert_eq!(a.isolation.takeovers, 0, "{name}: no takeovers scheduled");
+        assert_eq!(
+            a.isolation.quota_throttles() + a.isolation.violations(),
+            0,
+            "{name}: no isolation accounting off the flag"
+        );
+        assert_eq!(a.makespan, b.makespan, "{name}: baseline makespan");
+        assert_eq!(a.sim_events, b.sim_events, "{name}: baseline event count");
+    }
+}
+
 /// Fleet runs (open-loop arrivals, tenancy, fair-share lanes, admission
 /// control) must reproduce the per-tenant slowdown table from the seed —
 /// the acceptance contract of `hyperflow serve`.
