@@ -269,6 +269,10 @@ pub struct FlowDone {
     pub pod: PodId,
     pub task: TaskId,
     pub inbound: bool,
+    /// Bytes the flow moved (achieved-bandwidth reporting).
+    pub bytes: u64,
+    /// Wall time the transfer took.
+    pub dur: SimTime,
 }
 
 const NO_FLOW: u32 = u32::MAX;
@@ -685,6 +689,8 @@ impl DataPlane {
             pod,
             task,
             inbound: dir == Dir::In,
+            bytes: total,
+            dur,
         })
     }
 

@@ -155,6 +155,11 @@ pub struct SimConfig {
     /// unless the chaos spec schedules a takeover, which builds a
     /// default shared-policy state so the blast radius can be computed.
     pub isolation: Option<IsolationConfig>,
+    /// Observability: attach the flight recorder ([`crate::obs`]) and
+    /// produce span/event traces plus critical-path attribution in the
+    /// result. Off by default; recording never perturbs the simulation
+    /// (no RNG draws, no calendar events), it only fills side tables.
+    pub obs: bool,
 }
 
 impl Default for SimConfig {
@@ -180,6 +185,7 @@ impl Default for SimConfig {
             node_events: Vec::new(),
             data: None,
             isolation: None,
+            obs: false,
         }
     }
 }
@@ -194,6 +200,13 @@ impl SimConfig {
             },
             ..Default::default()
         }
+    }
+
+    /// Attach the flight recorder (builder-style, for tests and callers
+    /// that assemble a config by hand).
+    pub fn obs(mut self, on: bool) -> Self {
+        self.obs = on;
+        self
     }
 
     /// Start a validating builder (CLI entry points use this so bad flag
@@ -279,6 +292,11 @@ impl SimConfigBuilder {
 
     pub fn max_pending_pods(mut self, cap: Option<usize>) -> Self {
         self.cfg.max_pending_pods = cap;
+        self
+    }
+
+    pub fn obs(mut self, on: bool) -> Self {
+        self.cfg.obs = on;
         self
     }
 

@@ -41,6 +41,7 @@ use crate::engine::TaskState;
 use crate::exec::kernel::{Ev, IoPhase, Kernel};
 use crate::exec::strategy::{PodWork, StrategyState};
 use crate::k8s::pod::{Payload, PodId, PodPhase};
+use crate::obs::Actor;
 use crate::sim::SimTime;
 use crate::util::rng::Rng;
 use crate::workflow::task::TaskId;
@@ -189,11 +190,14 @@ impl StrategyState {
     /// first (execution starts when the transfer completes); without it,
     /// execution starts immediately — the exact pre-data path.
     pub fn begin_task(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
+        let now = k.now();
+        if let Some(o) = k.obs.as_mut() {
+            o.dispatch(pod, task, now);
+        }
         if k.data.is_none() {
             k.start_task(pod, task);
             return;
         }
-        let now = k.now();
         let node = k.pods[pod.0 as usize].node.expect("running pod is bound").0;
         let tenant = k.tenant_of(task).idx();
         k.current_task[pod.0 as usize] = Some(task);
@@ -254,6 +258,9 @@ impl StrategyState {
             }
             k.data.as_mut().expect("data plane").stats.compute_ms += exec_ms;
             k.trace.finished(task, now);
+            if let Some(o) = k.obs.as_mut() {
+                o.finished(task, now);
+            }
             let mut ready = std::mem::take(&mut k.ready_buf);
             ready.clear();
             k.engine.complete_into(task, &mut ready);
@@ -287,6 +294,21 @@ impl StrategyState {
             .and_then(|dp| dp.flow_done(now, flow, gen, &mut buf));
         k.schedule_flow_events(buf);
         let Some(d) = done else { return };
+        if let Some(o) = k.obs.as_mut() {
+            // achieved bandwidth over the whole transfer, Gbit/s
+            let gbps = if d.dur > SimTime::ZERO {
+                d.bytes as f64 * 8.0 / 1e9 / d.dur.as_secs_f64()
+            } else {
+                0.0
+            };
+            o.event(
+                now,
+                Actor::Data,
+                if d.inbound { "stage_in_done" } else { "stage_out_done" },
+                format!("pod {} task {}", d.pod.0, d.task.0),
+                gbps,
+            );
+        }
         // a completing flow implies a live pod (kills cancel their flows
         // synchronously) — but stay defensive
         if k.pods[d.pod.0 as usize].is_terminal()
@@ -323,7 +345,17 @@ impl StrategyState {
                     return; // already down
                 }
                 k.chaos_stats.node_crashes += 1;
-                k.metrics.inc("node_crashes", 1);
+                k.metrics.inc_id(k.c.node_crashes, 1);
+                if let Some(o) = k.obs.as_mut() {
+                    let now = k.q.now();
+                    o.event(
+                        now,
+                        Actor::Chaos,
+                        "node_crash",
+                        format!("node {node}"),
+                        repair_ms as f64 / 1000.0,
+                    );
+                }
                 self.fail_node_inner(k, node, true);
                 k.q
                     .schedule_in(SimTime::from_millis(repair_ms), Ev::ChaosRestore { node });
@@ -338,7 +370,17 @@ impl StrategyState {
     pub fn spot_warning(&mut self, k: &mut Kernel, node: usize, warning_ms: u64, replace_ms: u64) {
         if self.drain_node(k, node, warning_ms, replace_ms) {
             k.chaos_stats.spot_warnings += 1;
-            k.metrics.inc("spot_warnings", 1);
+            k.metrics.inc_id(k.c.spot_warnings, 1);
+            if let Some(o) = k.obs.as_mut() {
+                let now = k.q.now();
+                o.event(
+                    now,
+                    Actor::Chaos,
+                    "spot_warning",
+                    format!("node {node}"),
+                    warning_ms as f64 / 1000.0,
+                );
+            }
         }
     }
 
@@ -447,7 +489,20 @@ impl StrategyState {
         // restore before remediation: drain/kill paths re-enter the
         // scheduler and release_pod, which charge and refund the quota
         k.isolation = Some(iso);
-        k.metrics.inc("tenant_takeovers", 1);
+        k.metrics.inc_id(k.c.tenant_takeovers, 1);
+        if let Some(o) = k.obs.as_mut() {
+            o.event(
+                now,
+                Actor::Chaos,
+                "takeover",
+                format!(
+                    "tenant {tenant}: {} nodes, {} pods in blast radius",
+                    br.nodes.len(),
+                    br.pods
+                ),
+                br.nodes.len() as f64,
+            );
+        }
         if can_reach_node {
             for &nid in &br.nodes {
                 self.drain_node(k, nid.0, TAKEOVER_DRAIN_MS, TAKEOVER_REIMAGE_MS);
@@ -482,6 +537,10 @@ impl StrategyState {
         if k.pods[pid.0 as usize].is_terminal() {
             return;
         }
+        if let Some(o) = k.obs.as_mut() {
+            let now = k.q.now();
+            o.attempt_lost(pid, now);
+        }
         let node = k.pods[pid.0 as usize].node;
         let in_flight = k.current_task[pid.0 as usize].take();
         let phase = k.pod_io[pid.0 as usize];
@@ -500,7 +559,7 @@ impl StrategyState {
                 if k.engine.state(task) == TaskState::Done {
                     let exec_ms = k.run_exec_ms(pid);
                     k.chaos_stats.add_waste(k.tenant_of(task).idx(), exec_ms);
-                    k.metrics.inc("speculative_losses", 1);
+                    k.metrics.inc_id(k.c.speculative_losses, 1);
                 } else if let Some(n) = node {
                     k.account_lost_work(pid, task, n.0);
                 }
@@ -547,9 +606,25 @@ impl StrategyState {
     /// and policy-driven retry back-off instead of instant redelivery).
     pub fn fail_node_inner(&mut self, k: &mut Kernel, node: usize, chaos: bool) {
         k.nodes[node].failed = true;
-        k.metrics.inc("node_failures", 1);
+        k.metrics.inc_id(k.c.node_failures, 1);
         let victims = k.take_node_victims(node, false);
+        if let Some(o) = k.obs.as_mut() {
+            let now = k.q.now();
+            o.event(
+                now,
+                Actor::Chaos,
+                "node_down",
+                format!("node {node}"),
+                victims.len() as f64,
+            );
+        }
         for &pid in &victims {
+            // every attempt on the node dies with it: its compute so far
+            // is recovery waste on the owning task's span
+            if let Some(o) = k.obs.as_mut() {
+                let now = k.q.now();
+                o.attempt_lost(pid, now);
+            }
             // roll back the running-task accounting for the in-flight task
             let in_flight = k.current_task[pid.0 as usize].take();
             let phase = k.pod_io[pid.0 as usize];
@@ -585,7 +660,7 @@ impl StrategyState {
                             let exec_ms = k.run_exec_ms(pid);
                             k.chaos_stats
                                 .add_waste(k.tenant_of(task).idx(), exec_ms);
-                            k.metrics.inc("speculative_losses", 1);
+                            k.metrics.inc_id(k.c.speculative_losses, 1);
                         } else {
                             k.account_lost_work(pid, task, node);
                         }
@@ -650,8 +725,18 @@ impl StrategyState {
     /// recovered by policy — batches after a retry back-off, workers by
     /// the deployment controller on the next autoscale tick.
     pub fn pod_start_failure(&mut self, k: &mut Kernel, pod: PodId) {
-        k.metrics.inc("pod_failures", 1);
+        k.metrics.inc_id(k.c.pod_failures, 1);
         k.chaos_stats.pod_failures += 1;
+        if let Some(o) = k.obs.as_mut() {
+            let now = k.q.now();
+            o.event(
+                now,
+                Actor::Chaos,
+                "pod_start_failure",
+                format!("pod {}", pod.0),
+                0.0,
+            );
+        }
         // the container-start latency was burned for nothing; a batch pod
         // charges its owning tenant, a shared pool worker charges no lane
         // (it serves every tenant)
@@ -695,7 +780,17 @@ impl StrategyState {
     pub fn admit_instance(&mut self, k: &mut Kernel, inst: usize) {
         let now = k.now();
         let roots = k.fleet.as_mut().expect("fleet mode").admit(inst, now);
-        k.metrics.inc("instances_admitted", 1);
+        k.metrics.inc_id(k.c.instances_admitted, 1);
+        if let Some(o) = k.obs.as_mut() {
+            let in_flight = k.fleet.as_ref().map_or(0, |f| f.in_flight);
+            o.event(
+                now,
+                Actor::Fleet,
+                "admit",
+                format!("instance {inst}"),
+                in_flight as f64,
+            );
+        }
         self.dispatch_ready(k, &roots);
     }
 
@@ -713,7 +808,17 @@ impl StrategyState {
         else {
             return;
         };
-        k.metrics.inc("instances_completed", 1);
+        k.metrics.inc_id(k.c.instances_completed, 1);
+        if let Some(o) = k.obs.as_mut() {
+            let in_flight = k.fleet.as_ref().map_or(0, |f| f.in_flight);
+            o.event(
+                now,
+                Actor::Fleet,
+                "instance_done",
+                format!("instance {inst}"),
+                in_flight as f64,
+            );
+        }
         if let Some(next) = next {
             self.admit_instance(k, next as usize);
         }

@@ -27,7 +27,8 @@ use crate::k8s::node::{Node, NodeId};
 use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
 use crate::k8s::resources::Resources;
 use crate::k8s::scheduler::{SchedulePass, Scheduler};
-use crate::metrics::{GaugeId, Registry};
+use crate::metrics::{CounterId, GaugeId, Registry};
+use crate::obs::FlightRecorder;
 use crate::report::Trace;
 use crate::sim::{EventQueue, SimTime};
 use crate::workflow::task::{TaskId, TypeId};
@@ -101,6 +102,56 @@ pub enum IoPhase {
 /// Sentinel for "no pending fault" in the per-task fault-time table.
 pub(crate) const NO_FAULT: u64 = u64::MAX;
 
+/// Pre-resolved [`CounterId`] handles for every counter the kernel,
+/// strategies and hooks increment on hot paths — the counter-side mirror
+/// of the pre-resolved gauge handles (`inc(&str)` did a string-keyed
+/// BTreeMap lookup, allocating on first touch, once per pod/fault/retry).
+/// Resolved once at build; counters therefore exist (value 0) from the
+/// start of the run, which also gives the Prometheus exposition a
+/// complete metric set.
+#[derive(Debug, Clone, Copy)]
+pub struct Counters {
+    pub pods_created: CounterId,
+    pub tasks_lost_to_faults: CounterId,
+    pub stale_node_events_dropped: CounterId,
+    pub node_blacklists: CounterId,
+    pub chaos_retries: CounterId,
+    pub node_crashes: CounterId,
+    pub node_failures: CounterId,
+    pub spot_warnings: CounterId,
+    pub spot_reclaims: CounterId,
+    pub nodes_restored: CounterId,
+    pub pod_failures: CounterId,
+    pub speculative_copies: CounterId,
+    pub speculative_losses: CounterId,
+    pub instances_admitted: CounterId,
+    pub instances_completed: CounterId,
+    pub tenant_takeovers: CounterId,
+}
+
+impl Counters {
+    pub fn resolve(reg: &mut Registry) -> Self {
+        Counters {
+            pods_created: reg.counter_id("pods_created"),
+            tasks_lost_to_faults: reg.counter_id("tasks_lost_to_faults"),
+            stale_node_events_dropped: reg.counter_id("stale_node_events_dropped"),
+            node_blacklists: reg.counter_id("node_blacklists"),
+            chaos_retries: reg.counter_id("chaos_retries"),
+            node_crashes: reg.counter_id("node_crashes"),
+            node_failures: reg.counter_id("node_failures"),
+            spot_warnings: reg.counter_id("spot_warnings"),
+            spot_reclaims: reg.counter_id("spot_reclaims"),
+            nodes_restored: reg.counter_id("nodes_restored"),
+            pod_failures: reg.counter_id("pod_failures"),
+            speculative_copies: reg.counter_id("speculative_copies"),
+            speculative_losses: reg.counter_id("speculative_losses"),
+            instances_admitted: reg.counter_id("instances_admitted"),
+            instances_completed: reg.counter_id("instances_completed"),
+            tenant_takeovers: reg.counter_id("tenant_takeovers"),
+        }
+    }
+}
+
 /// The simulation substrate: everything that is *not* an execution-model
 /// decision. See the module docs for the layering contract.
 pub struct Kernel {
@@ -112,7 +163,14 @@ pub struct Kernel {
     pub api: ApiServer,
     pub engine: Engine,
     pub metrics: Registry,
+    /// Pre-resolved counter handles (hot-path increments, see [`Counters`]).
+    pub c: Counters,
     pub trace: Trace,
+    /// Flight recorder (`--obs`): structured span/event recording. `None`
+    /// — the default — records nothing; recording never draws RNG and
+    /// never schedules events, so the simulated trace is bit-identical
+    /// either way.
+    pub obs: Option<FlightRecorder>,
     pub running_tasks: i64,
     /// Incremental count of pods in the Pending phase (perf: a full scan
     /// here was 70% of the 16k job-model sim, see EXPERIMENTS.md §Perf).
@@ -235,7 +293,7 @@ impl Kernel {
         self.pod_io.push(IoPhase::Idle);
         self.pod_exec_ms.push(0);
         self.pending_count += 1;
-        self.metrics.inc("pods_created", 1);
+        self.metrics.inc_id(self.c.pods_created, 1);
         id
     }
 
@@ -314,11 +372,41 @@ impl Kernel {
         elapsed.saturating_sub(self.cfg.exec_overhead_ms.min(elapsed))
     }
 
+    /// Flight recorder: stamp the winning attempt's lifecycle chain when
+    /// a task's compute finishes in `pod`. Job pods carry real
+    /// created/bound/running timestamps; a pool worker long predates the
+    /// task, so all three collapse to the broker dispatch time (the
+    /// asymmetry the attribution report is built to show). No-op without
+    /// the recorder.
+    pub fn obs_task_complete(&mut self, pod: PodId, task: TaskId, now: SimTime) {
+        if self.obs.is_none() {
+            return;
+        }
+        let p = &self.pods[pod.0 as usize];
+        let (a, b, c) = if p.pool_id().is_some() {
+            let d = self
+                .obs
+                .as_ref()
+                .expect("recorder checked above")
+                .dispatch_of(pod, now);
+            (d, d, d)
+        } else {
+            (
+                p.created_at,
+                p.scheduled_at.unwrap_or(p.created_at),
+                p.running_at.unwrap_or(now),
+            )
+        };
+        if let Some(o) = self.obs.as_mut() {
+            o.complete(pod, task, now, a, b, c);
+        }
+    }
+
     /// Stamp a task as lost to a fault: the recovery-latency clock starts
     /// now and stops when the task executes again (`start_task`).
     pub fn fault_stamp(&mut self, task: TaskId) {
         self.task_fault_at[task.0 as usize] = self.now().as_millis();
-        self.metrics.inc("tasks_lost_to_faults", 1);
+        self.metrics.inc_id(self.c.tasks_lost_to_faults, 1);
     }
 
     // ---------------------------------------------------------------
@@ -360,7 +448,7 @@ impl Kernel {
         };
         if self.pod_bound_inc[pod.0 as usize] != self.node_incarnation[nid.0] {
             self.chaos_stats.stale_drops += 1;
-            self.metrics.inc("stale_node_events_dropped", 1);
+            self.metrics.inc_id(self.c.stale_node_events_dropped, 1);
             return true;
         }
         false
@@ -396,7 +484,7 @@ impl Kernel {
         self.blacklist_until[node] = now + SimTime::from_millis(window);
         self.node_fault_counts[node] = 0;
         self.chaos_stats.blacklists += 1;
-        self.metrics.inc("node_blacklists", 1);
+        self.metrics.inc_id(self.c.node_blacklists, 1);
         self.q
             .schedule_in(SimTime::from_millis(window), Ev::ChaosUncordon { node });
     }
@@ -429,6 +517,9 @@ impl Kernel {
         // task's trace record — queueing delay is ready -> *first* start
         if self.task_running[task.0 as usize] == 0 {
             self.trace.started(task, pod.0, now);
+        }
+        if let Some(o) = self.obs.as_mut() {
+            o.exec_start(pod, task, now);
         }
         self.task_running[task.0 as usize] += 1;
         self.record_running(ttype, 1);
@@ -517,7 +608,7 @@ impl Kernel {
             .map(|c| c.policy.backoff(attempt))
             .unwrap_or(SimTime::ZERO);
         self.chaos_stats.add_retry(self.tenant_of(task).idx());
-        self.metrics.inc("chaos_retries", 1);
+        self.metrics.inc_id(self.c.chaos_retries, 1);
         self.q.schedule_in(delay, Ev::ChaosRetryTask { task });
     }
 
@@ -534,7 +625,7 @@ impl Kernel {
             .map(|c| c.policy.backoff(attempt))
             .unwrap_or(SimTime::ZERO);
         self.chaos_stats.add_retry(self.tenant_of(key).idx());
-        self.metrics.inc("chaos_retries", 1);
+        self.metrics.inc_id(self.c.chaos_retries, 1);
         self.q.schedule_in(delay, Ev::ChaosRetryBatch { tasks });
     }
 

@@ -85,12 +85,13 @@ use crate::k8s::node::paper_cluster;
 use crate::k8s::pod::PodPhase;
 use crate::k8s::scheduler::{SchedulePass, Scheduler};
 use crate::metrics::{GaugeId, Registry};
+use crate::obs::{critpath, Actor, FlightRecorder, ObsReport, PodRow};
 use crate::report::{SimResult, Trace};
 use crate::sim::{EventQueue, SimTime};
 use crate::workflow::dag::Dag;
 use crate::workflow::task::TaskId;
 use hooks::{ChaosRuntime, FleetState};
-use kernel::{Ev, Kernel, NO_FAULT};
+use kernel::{Counters, Ev, Kernel, NO_FAULT};
 use std::collections::VecDeque;
 use strategy::{ExecStrategy, Strategy};
 
@@ -155,7 +156,17 @@ impl World {
                 self.k.drain_pending[node] = false;
                 if !self.k.nodes[node].failed {
                     self.k.chaos_stats.spot_reclaims += 1;
-                    self.k.metrics.inc("spot_reclaims", 1);
+                    self.k.metrics.inc_id(self.k.c.spot_reclaims, 1);
+                    if let Some(o) = self.k.obs.as_mut() {
+                        let at = self.k.q.now();
+                        o.event(
+                            at,
+                            Actor::Chaos,
+                            "spot_reclaim",
+                            format!("node {node}"),
+                            replace_ms as f64 / 1000.0,
+                        );
+                    }
                     self.strat.on_node_down(&mut self.k, node, true);
                     self.k.q.schedule_in(
                         SimTime::from_millis(replace_ms),
@@ -180,7 +191,11 @@ impl World {
                     .state()
                     .pools
                     .update_chaos_quota(&mut self.k);
-                self.k.metrics.inc("nodes_restored", 1);
+                self.k.metrics.inc_id(self.k.c.nodes_restored, 1);
+                if let Some(o) = self.k.obs.as_mut() {
+                    let at = self.k.q.now();
+                    o.event(at, Actor::Chaos, "node_restored", format!("node {node}"), 0.0);
+                }
                 self.strat.on_capacity_changed(&mut self.k);
             }
             Ev::ChaosUncordon { node } => {
@@ -239,8 +254,9 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
     let (engine, initial_ready) = Engine::new(dag);
     let n_types = engine.dag().types.len();
 
-    // pre-resolve the hot gauges (see §Perf)
+    // pre-resolve the hot gauges and counters (see §Perf)
     let mut metrics = Registry::new();
+    let c = Counters::resolve(&mut metrics);
     let g_running = metrics.gauge_id("running_tasks");
     let g_cpu = metrics.gauge_id("cpu_allocated_m");
     let g_pending = metrics.gauge_id("pending_pods");
@@ -312,7 +328,9 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
         api: ApiServer::new(cfg.api.clone()),
         engine,
         metrics,
+        c,
         trace: Trace::new(),
+        obs: cfg.obs.then(|| FlightRecorder::new(n_tasks)),
         running_tasks: 0,
         pending_count: 0,
         completed_by_type: vec![0; n_types],
@@ -405,8 +423,50 @@ fn drive(world: &mut World) -> (SimTime, u64) {
     (makespan, sim_events)
 }
 
-/// Fold the finished kernel into a [`SimResult`].
-fn summarize(k: Kernel, model_name: String, makespan: SimTime, sim_events: u64) -> SimResult {
+/// Fold the finished kernel into a [`SimResult`]. The strategy is only
+/// consulted to resolve broker pool names for the pod lanes of the
+/// flight-recorder report.
+fn summarize(
+    mut k: Kernel,
+    strat: &Strategy,
+    model_name: String,
+    makespan: SimTime,
+    sim_events: u64,
+) -> SimResult {
+    // distill the flight recorder (when attached): whole-run attribution
+    // over the critical path, control-plane events, pod lanes
+    let obs = k.obs.take().map(|rec| {
+        let preds = critpath::predecessors(k.engine.dag());
+        let n = k.engine.dag().len() as u32;
+        let (attribution, critical_path) =
+            match critpath::attribute(&rec, &preds, 0, n, SimTime::ZERO) {
+                Some((a, p)) => (Some(a), p),
+                None => (None, Vec::new()),
+            };
+        let broker = &strat.state_ref().pools.broker;
+        let pods = k
+            .pods
+            .iter()
+            .enumerate()
+            .map(|(i, p)| PodRow {
+                pod: i as u64,
+                node: p.node.map(|n| n.0 as u32),
+                pool: p.pool_id().map(|pid| broker.name(pid).to_string()),
+                created: p.created_at,
+                scheduled: p.scheduled_at,
+                running: p.running_at,
+                finished: p.finished_at,
+            })
+            .collect();
+        ObsReport {
+            attribution,
+            critical_path,
+            events: rec.events,
+            pods,
+            instance_attr: Vec::new(),
+        }
+    });
+
     let t_end = makespan.as_secs_f64();
     let avg_running = k
         .metrics
@@ -437,6 +497,7 @@ fn summarize(k: Kernel, model_name: String, makespan: SimTime, sim_events: u64) 
             .map(|i| i.report())
             .unwrap_or_default(),
         chaos: k.chaos_stats.report(),
+        obs,
         trace: k.trace,
         metrics: k.metrics,
     }
@@ -455,7 +516,8 @@ pub fn run(dag: Dag, model: ExecModel, cfg: SimConfig) -> SimResult {
             .schedule_in(SimTime::from_millis(1_000), Ev::AutoscaleTick);
     }
     let (makespan, sim_events) = drive(&mut world);
-    summarize(world.k, model_name, makespan, sim_events)
+    let World { k, strat } = world;
+    summarize(k, &strat, model_name, makespan, sim_events)
 }
 
 /// Run an open-loop fleet of workflow instances on one shared cluster.
@@ -548,6 +610,24 @@ pub fn run_fleet(
 
     let fs = world.k.fleet.take().expect("fleet state");
     debug_assert!(fs.waiting.is_empty() && fs.in_flight == 0);
+    // per-instance attribution: each instance's contiguous sub-DAG,
+    // based at its admission time so the first segment's queueing covers
+    // admission -> first dispatch
+    let instance_attr: Vec<Option<critpath::Attribution>> = match world.k.obs.as_ref() {
+        Some(rec) => {
+            let preds = critpath::predecessors(world.k.engine.dag());
+            plan.instances
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let base = fs.admitted_at[i].unwrap_or(SimTime::ZERO);
+                    critpath::attribute(rec, &preds, s.first_task, s.first_task + s.n_tasks, base)
+                        .map(|(a, _)| a)
+                })
+                .collect()
+        }
+        None => Vec::new(),
+    };
     let outcomes = plan
         .instances
         .iter()
@@ -560,5 +640,10 @@ pub fn run_fleet(
             n_tasks: s.n_tasks,
         })
         .collect();
-    (summarize(world.k, model_name, makespan, sim_events), outcomes)
+    let World { k, strat } = world;
+    let mut res = summarize(k, &strat, model_name, makespan, sim_events);
+    if let Some(o) = res.obs.as_mut() {
+        o.instance_attr = instance_attr;
+    }
+    (res, outcomes)
 }

@@ -29,6 +29,7 @@ use crate::exec::strategy::{ExecStrategy, StrategyState};
 use crate::k8s::pod::{Payload, PodId, PodPhase};
 use crate::k8s::resources::Resources;
 use crate::metrics::{GaugeId, Registry};
+use crate::obs::Actor;
 use crate::sim::SimTime;
 use crate::workflow::task::{TaskId, TypeId};
 use std::collections::VecDeque;
@@ -119,6 +120,20 @@ impl PoolPath {
         self.pool_type.len()
     }
 
+    /// Flight recorder: a message left `pool`'s queue for `pod` (the
+    /// remaining depth rides along as the event value).
+    fn record_dequeue(&self, k: &mut Kernel, pool: PoolId, pod: PodId, now: SimTime) {
+        if let Some(o) = k.obs.as_mut() {
+            o.event(
+                now,
+                Actor::Broker,
+                "dequeue",
+                format!("{} -> pod {}", self.broker.name(pool), pod.0),
+                self.broker.queue(pool).depth() as f64,
+            );
+        }
+    }
+
     /// Record the current depth of a pool's queue.
     pub fn record_queue_depth(&mut self, k: &mut Kernel, pool: PoolId) {
         let now = k.now();
@@ -167,6 +182,7 @@ impl PoolPath {
             if let Some(task) = self.broker.fetch(pool) {
                 self.idle_workers[pool.idx()].pop_front();
                 let now = k.now();
+                self.record_dequeue(k, pool, pid, now);
                 k.q.schedule_at(
                     now + SimTime::from_millis(k.cfg.fetch_ms),
                     Ev::WorkerFetched { pod: pid, task },
@@ -198,6 +214,7 @@ impl PoolPath {
             if let Some(task) = self.fetch_for_worker(k, pid, pool) {
                 self.idle_workers[pool.idx()].remove(i);
                 let now = k.now();
+                self.record_dequeue(k, pool, pid, now);
                 k.q.schedule_at(
                     now + SimTime::from_millis(k.cfg.fetch_ms),
                     Ev::WorkerFetched { pod: pid, task },
@@ -213,6 +230,7 @@ impl PoolPath {
     pub fn fetch_or_idle(&mut self, k: &mut Kernel, pod: PodId, pool: PoolId) {
         let now = k.now();
         if let Some(task) = self.fetch_for_worker(k, pod, pool) {
+            self.record_dequeue(k, pool, pod, now);
             k.q.schedule_at(
                 now + SimTime::from_millis(k.cfg.fetch_ms),
                 Ev::WorkerFetched { pod, task },
@@ -342,6 +360,23 @@ impl StrategyState {
         for &pool in &pools_by_name {
             let want = desired[pool.idx()];
             let have = self.pools.deployments[pool.idx()].len();
+            if want != have {
+                if let Some(o) = k.obs.as_mut() {
+                    o.event(
+                        now,
+                        Actor::Autoscaler,
+                        if want > have { "scale_up" } else { "scale_down" },
+                        format!(
+                            "{}: {} -> {} (backlog {})",
+                            self.pools.broker.name(pool),
+                            have,
+                            want,
+                            backlogs[pool.idx()]
+                        ),
+                        want as f64,
+                    );
+                }
+            }
             if want > have {
                 for _ in 0..(want - have) {
                     self.pools.create_worker(k, pool);

@@ -34,6 +34,7 @@ use crate::exec::pools::{PoolPath, PoolsStrategy};
 use crate::k8s::pod::{Payload, PodId, PodPhase};
 use crate::k8s::scheduler::DataLocality;
 use crate::metrics::Registry;
+use crate::obs::Actor;
 use crate::sim::SimTime;
 use crate::workflow::dag::Dag;
 use crate::workflow::task::TaskId;
@@ -147,6 +148,9 @@ impl StrategyState {
         for &t in ready {
             let ttype = k.engine.dag().tasks[t.0 as usize].ttype;
             k.trace.ready(t, k.engine.dag().type_name(t), now);
+            if let Some(o) = k.obs.as_mut() {
+                o.ready(t, now);
+            }
             match self.pools.pool_of_type[ttype.0 as usize] {
                 Some(pool) => {
                     let tenant = k.tenant_of(t);
@@ -218,6 +222,31 @@ impl StrategyState {
         }
         for &(pid, until) in &pass.backed_off {
             k.q.schedule_at(until, Ev::BackoffExpire { pod: pid });
+        }
+        if let Some(o) = k.obs.as_mut() {
+            for &(pid, node, _) in &pass.bound {
+                o.event(
+                    now,
+                    Actor::Scheduler,
+                    "bind",
+                    format!("pod {} -> node {}", pid.0, node.0),
+                    1.0,
+                );
+            }
+            for (i, &(pid, until)) in pass.backed_off.iter().enumerate() {
+                let why = pass
+                    .backoff_reasons
+                    .get(i)
+                    .map(|r| r.name())
+                    .unwrap_or("nofit");
+                o.event(
+                    now,
+                    Actor::Scheduler,
+                    "backoff",
+                    format!("pod {} ({why})", pid.0),
+                    until.saturating_sub(now).as_secs_f64(),
+                );
+            }
         }
         k.pass_buf = pass;
         k.metrics.set_id(k.g_pending, now, k.pending_count as f64);
@@ -338,7 +367,17 @@ impl StrategyState {
             k.record_running(ttype, -1);
             k.task_running[task.0 as usize] -= 1;
             k.chaos_stats.add_waste(k.tenant_of(task).idx(), exec_ms);
-            k.metrics.inc("speculative_losses", 1);
+            k.metrics.inc_id(k.c.speculative_losses, 1);
+            if let Some(o) = k.obs.as_mut() {
+                o.attempt_lost(pod, now);
+                o.event(
+                    now,
+                    Actor::Chaos,
+                    "spec_loss",
+                    format!("task {} pod {}", task.0, pod.0),
+                    exec_ms as f64 / 1000.0,
+                );
+            }
             if let Some(pool) = k.pods[pod.0 as usize].pool_id() {
                 self.advance_worker(k, pod, pool);
             }
@@ -355,6 +394,8 @@ impl StrategyState {
             k.record_running(ttype, -1);
             k.task_running[task.0 as usize] -= 1;
             k.pod_exec_ms[pod.0 as usize] = exec_ms;
+            // compute is over; `finished` is stamped when the write lands
+            k.obs_task_complete(pod, task, now);
             self.begin_stage_out_for(k, pod, task);
             return;
         }
@@ -364,6 +405,10 @@ impl StrategyState {
         k.current_task[pod.0 as usize] = None;
         k.pod_io[pod.0 as usize] = IoPhase::Idle;
         k.trace.finished(task, now);
+        k.obs_task_complete(pod, task, now);
+        if let Some(o) = k.obs.as_mut() {
+            o.finished(task, now);
+        }
         k.record_running(ttype, -1);
         k.task_running[task.0 as usize] -= 1;
         k.completed_by_type[ttype.0 as usize] += 1;
@@ -424,7 +469,17 @@ impl StrategyState {
         }
         k.spec_launched[task.0 as usize] = true;
         k.chaos_stats.speculations += 1;
-        k.metrics.inc("speculative_copies", 1);
+        k.metrics.inc_id(k.c.speculative_copies, 1);
+        let now = k.now();
+        if let Some(o) = k.obs.as_mut() {
+            o.event(
+                now,
+                Actor::Chaos,
+                "speculate",
+                format!("task {} straggling in pod {}", task.0, pod.0),
+                0.0,
+            );
+        }
         let ttype = k.engine.dag().tasks[task.0 as usize].ttype;
         if let Some(pool) = self.pools.pool_of_type[ttype.0 as usize] {
             let tenant = k.tenant_of(task);

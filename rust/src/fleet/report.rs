@@ -45,6 +45,16 @@ pub struct TenantRow {
     pub quota_throttles: u64,
     pub violations: u64,
     pub takeover_exposed_s: f64,
+    /// Critical-path attribution columns (flight-recorder runs only; all
+    /// zero otherwise): mean seconds per phase over this tenant's
+    /// instances, from each instance's own critical path.
+    pub crit_queue_s: f64,
+    pub crit_sched_s: f64,
+    pub crit_pod_start_s: f64,
+    pub crit_stage_in_s: f64,
+    pub crit_compute_s: f64,
+    pub crit_stage_out_s: f64,
+    pub crit_recovery_s: f64,
 }
 
 /// Fleet-wide headline numbers (one saturation-sweep point).
@@ -76,11 +86,45 @@ fn tenant_summaries(res: &FleetResult) -> Vec<(Summary, Summary, Summary)> {
     acc
 }
 
+/// Per-tenant mean attribution seconds (7 phases), from the flight
+/// recorder's per-instance critical paths. All zero when obs is off.
+fn tenant_crit_means(res: &FleetResult) -> Vec<[f64; 7]> {
+    let mut sums: Vec<([f64; 7], usize)> = vec![([0.0; 7], 0); res.n_tenants];
+    if let Some(o) = &res.sim.obs {
+        for (m, a) in res.metas.iter().zip(&o.instance_attr) {
+            let Some(a) = a else { continue };
+            let (s, n) = &mut sums[m.tenant as usize];
+            for (slot, ms) in s.iter_mut().zip([
+                a.queueing_ms,
+                a.scheduling_ms,
+                a.pod_start_ms,
+                a.stage_in_ms,
+                a.compute_ms,
+                a.stage_out_ms,
+                a.recovery_ms,
+            ]) {
+                *slot += ms as f64 / 1000.0;
+            }
+            *n += 1;
+        }
+    }
+    sums.into_iter()
+        .map(|(s, n)| {
+            if n == 0 {
+                [0.0; 7]
+            } else {
+                s.map(|v| v / n as f64)
+            }
+        })
+        .collect()
+}
+
 /// Per-tenant SLO rows (every tenant, including ones with no arrivals).
 pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
     let chaos = &res.sim.chaos;
     let data = &res.sim.data;
     let iso = &res.sim.isolation;
+    let crit = tenant_crit_means(res);
     tenant_summaries(res)
         .into_iter()
         .enumerate()
@@ -106,6 +150,13 @@ pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
                     .copied()
                     .unwrap_or(0) as f64
                     / 1000.0,
+                crit_queue_s: crit[t][0],
+                crit_sched_s: crit[t][1],
+                crit_pod_start_s: crit[t][2],
+                crit_stage_in_s: crit[t][3],
+                crit_compute_s: crit[t][4],
+                crit_stage_out_s: crit[t][5],
+                crit_recovery_s: crit[t][6],
             }
         })
         .collect()
@@ -138,15 +189,24 @@ pub fn aggregate(res: &FleetResult) -> FleetSummary {
 }
 
 /// Deterministic fixed-width text table (the `hyperflow serve` output).
+/// Flight-recorder runs gain seven `crit-*` attribution columns.
 pub fn render_table(res: &FleetResult) -> String {
+    let with_crit = res.sim.obs.is_some();
     let mut out = String::from(
         "tenant  instances  qdelay-mean-s  makespan-mean-s  \
          slowdown-mean  slowdown-p50  slowdown-p95  slowdown-p99  \
-         wasted-s  retries  gb-moved  quota-thr  iso-viol  tko-exposed-s\n",
+         wasted-s  retries  gb-moved  quota-thr  iso-viol  tko-exposed-s",
     );
+    if with_crit {
+        out.push_str(
+            "  crit-queue-s  crit-sched-s  crit-podstart-s  \
+             crit-stagein-s  crit-compute-s  crit-stageout-s  crit-recovery-s",
+        );
+    }
+    out.push('\n');
     for r in per_tenant(res) {
         out.push_str(&format!(
-            "{:>6}  {:>9}  {:>13.1}  {:>15.1}  {:>13.2}  {:>12.2}  {:>12.2}  {:>12.2}  {:>8.1}  {:>7}  {:>8.2}  {:>9}  {:>8}  {:>13.1}\n",
+            "{:>6}  {:>9}  {:>13.1}  {:>15.1}  {:>13.2}  {:>12.2}  {:>12.2}  {:>12.2}  {:>8.1}  {:>7}  {:>8.2}  {:>9}  {:>8}  {:>13.1}",
             r.tenant,
             r.instances,
             r.queue_delay_mean_s,
@@ -162,6 +222,19 @@ pub fn render_table(res: &FleetResult) -> String {
             r.violations,
             r.takeover_exposed_s,
         ));
+        if with_crit {
+            out.push_str(&format!(
+                "  {:>12.1}  {:>12.1}  {:>15.1}  {:>14.1}  {:>14.1}  {:>15.1}  {:>15.1}",
+                r.crit_queue_s,
+                r.crit_sched_s,
+                r.crit_pod_start_s,
+                r.crit_stage_in_s,
+                r.crit_compute_s,
+                r.crit_stage_out_s,
+                r.crit_recovery_s,
+            ));
+        }
+        out.push('\n');
     }
     out
 }
@@ -169,10 +242,11 @@ pub fn render_table(res: &FleetResult) -> String {
 /// JSON export of the fleet report (`hyperflow serve --json`).
 pub fn to_json(res: &FleetResult) -> Json {
     let agg = aggregate(res);
+    let with_crit = res.sim.obs.is_some();
     let tenants: Vec<Json> = per_tenant(res)
         .into_iter()
         .map(|r| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("tenant", (r.tenant as u64).into()),
                 ("instances", r.instances.into()),
                 ("queue_delay_mean_s", r.queue_delay_mean_s.into()),
@@ -187,7 +261,19 @@ pub fn to_json(res: &FleetResult) -> Json {
                 ("quota_throttles", r.quota_throttles.into()),
                 ("violations", r.violations.into()),
                 ("takeover_exposed_s", r.takeover_exposed_s.into()),
-            ])
+            ];
+            if with_crit {
+                fields.extend([
+                    ("crit_queue_s", r.crit_queue_s.into()),
+                    ("crit_sched_s", r.crit_sched_s.into()),
+                    ("crit_pod_start_s", r.crit_pod_start_s.into()),
+                    ("crit_stage_in_s", r.crit_stage_in_s.into()),
+                    ("crit_compute_s", r.crit_compute_s.into()),
+                    ("crit_stage_out_s", r.crit_stage_out_s.into()),
+                    ("crit_recovery_s", r.crit_recovery_s.into()),
+                ]);
+            }
+            Json::obj(fields)
         })
         .collect();
     Json::obj(vec![
@@ -231,6 +317,7 @@ mod tests {
             chaos: crate::chaos::ChaosReport::default(),
             data: crate::data::DataReport::default(),
             isolation: crate::k8s::isolation::IsolationReport::default(),
+            obs: None,
         };
         let outcomes = vec![
             InstanceOutcome {
@@ -341,6 +428,38 @@ mod tests {
         assert_eq!(rows[0].retries, 3);
         assert_eq!(rows[1].retries, 0);
         assert_eq!(rows[1].wasted_s, 0.0);
+    }
+
+    #[test]
+    fn crit_columns_appear_only_on_flight_recorder_runs() {
+        let mut r = fake_result();
+        assert!(!render_table(&r).contains("crit-queue-s"));
+        assert!(!to_json(&r).to_string().contains("crit_queue_s"));
+        // attach a recorder report: instance 0 (tenant 0) attributed,
+        // instance 1 (tenant 1) unattributed
+        r.sim.obs = Some(crate::obs::ObsReport {
+            attribution: None,
+            critical_path: Vec::new(),
+            events: Vec::new(),
+            pods: Vec::new(),
+            instance_attr: vec![
+                Some(crate::obs::critpath::Attribution {
+                    path_tasks: 2,
+                    queueing_ms: 1_500,
+                    compute_ms: 4_000,
+                    ..Default::default()
+                }),
+                None,
+            ],
+        });
+        let t = render_table(&r);
+        assert!(t.contains("crit-queue-s"));
+        assert!(t.contains("crit-recovery-s"));
+        let rows = per_tenant(&r);
+        assert!((rows[0].crit_queue_s - 1.5).abs() < 1e-9);
+        assert!((rows[0].crit_compute_s - 4.0).abs() < 1e-9);
+        assert_eq!(rows[1].crit_queue_s, 0.0);
+        assert!(to_json(&r).to_string().contains("crit_compute_s"));
     }
 
     #[test]

@@ -47,6 +47,29 @@ pub trait DataLocality {
     fn cached_input_bytes(&self, pod: &Pod, node: &Node) -> u64;
 }
 
+/// Why a pod failed a scheduling attempt (flight-recorder annotation on
+/// every back-off; costs one enum push per miss, nothing on binds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackoffReason {
+    /// The namespace ResourceQuota rejected admission.
+    Quota,
+    /// Capacity that would have fit exists but is cordoned (drain
+    /// warning / blacklist) — churn-attributable back-off.
+    Cordoned,
+    /// No node fits the request.
+    NoFit,
+}
+
+impl BackoffReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackoffReason::Quota => "quota",
+            BackoffReason::Cordoned => "cordoned",
+            BackoffReason::NoFit => "nofit",
+        }
+    }
+}
+
 /// Result of one scheduling pass.
 #[derive(Debug, Default, PartialEq)]
 pub struct SchedulePass {
@@ -54,6 +77,8 @@ pub struct SchedulePass {
     pub bound: Vec<(PodId, NodeId, SimTime)>,
     /// Pods that failed to fit, with the time their back-off expires.
     pub backed_off: Vec<(PodId, SimTime)>,
+    /// Why each entry of `backed_off` missed (parallel vector).
+    pub backoff_reasons: Vec<BackoffReason>,
 }
 
 /// The scheduler: an active queue plus the back-off bookkeeping.
@@ -172,6 +197,7 @@ impl Scheduler {
     ) {
         out.bound.clear();
         out.backed_off.clear();
+        out.backoff_reasons.clear();
         // hoisted: on healthy (chaos-free) runs no node is ever cordoned,
         // so the per-miss attribution scan below is skipped entirely
         let any_cordoned = nodes.iter().any(|n| n.cordoned);
@@ -255,14 +281,18 @@ impl Scheduler {
                 }
                 None => {
                     let req = pod.requests;
-                    if admitted
-                        && any_cordoned
+                    let reason = if !admitted {
+                        BackoffReason::Quota
+                    } else if any_cordoned
                         && nodes
                             .iter()
                             .any(|n| n.cordoned && n.fits_ignoring_cordon(&req))
                     {
                         self.cordoned_misses += 1;
-                    }
+                        BackoffReason::Cordoned
+                    } else {
+                        BackoffReason::NoFit
+                    };
                     let exp = (self.cfg.backoff_initial_ms as f64
                         * self.cfg.backoff_factor.powi(pod.sched_attempts as i32))
                         as u64;
@@ -275,6 +305,7 @@ impl Scheduler {
                     }
                     self.backoffs_total += 1;
                     out.backed_off.push((pid, pod.backoff_until));
+                    out.backoff_reasons.push(reason);
                 }
             }
         }
@@ -333,6 +364,7 @@ mod tests {
         let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
         assert_eq!(pass.bound.len(), 4);
         assert_eq!(pass.backed_off.len(), 2);
+        assert_eq!(pass.backoff_reasons, vec![BackoffReason::NoFit; 2]);
         assert_eq!(sched.sleeping_len(), 2);
         // first back-off is the initial delay
         assert_eq!(pass.backed_off[0].1, SimTime(1_000));

@@ -29,6 +29,10 @@
 //!   per-task input/output files, pluggable backends (shared NFS, object
 //!   store) with max-min fair bandwidth sharing, node-local ephemeral
 //!   caches, and locality-aware scheduling (`--data nfs:1,cache:8`);
+//! * the **flight recorder** ([`obs`]): zero-cost-when-disabled span and
+//!   control-plane event tracing with critical-path makespan attribution,
+//!   a full Chrome/Perfetto export, and a Prometheus text exposition
+//!   (`--obs trace:out.json,prom:out.txt,crit:on`);
 //! * the **Montage workflow generator** ([`workflow`]);
 //! * a **PJRT runtime** ([`runtime`]) executing the real Montage numerics
 //!   (JAX + Pallas, AOT-compiled to HLO) inside worker pods ([`compute`],
@@ -50,6 +54,7 @@ pub mod fleet;
 pub mod k8s;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod realtime;
 pub mod report;
 pub mod runtime;

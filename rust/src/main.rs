@@ -23,8 +23,20 @@ fn usage() -> ! {
            --chaos SPEC                             failure injection (see below)\n\
            --data SPEC                              storage/transfer modeling (see below)\n\
            --isolation SPEC                         tenant isolation (see below)\n\
+           --obs SPEC                               flight recorder (see below)\n\
            --json                                   print result as JSON\n\
            --html FILE                              write an HTML report\n\
+         obs SPEC (run/serve/trace): flight recorder, comma-separated\n\
+           trace:FILE   extended Chrome trace: control-plane instant events,\n\
+                        counter tracks, per-node pod lanes (Perfetto-ready)\n\
+           prom:FILE    Prometheus/OpenMetrics text exposition of every\n\
+                        counter and gauge at end of run\n\
+           crit:on      print the critical-path attribution report\n\
+                        (makespan decomposed into queueing / scheduling /\n\
+                        pod-start / stage-in / compute / stage-out / recovery)\n\
+           bare --obs enables recording only (attribution still lands in\n\
+           --json/--html); recording never perturbs the simulation\n\
+           e.g. --obs trace:out.json,prom:metrics.txt,crit:on\n\
          chaos SPEC (run/serve/trace): comma-separated kind:value\n\
            spot:R       spot reclaims per node per hour (2 min warning)\n\
            crash:R      node crashes per node per hour (no warning)\n\
@@ -63,6 +75,7 @@ fn usage() -> ! {
            --cap N             admission cap: max concurrent instances (0 = off)\n\
            --chaos SPEC        failure injection during the fleet run\n\
            --isolation SPEC    tenant isolation during the fleet run\n\
+           --obs SPEC          flight recorder; adds per-tenant crit-* columns\n\
            --json              print the fleet report as JSON\n\
          validation: flag combinations are checked up front and exit with a\n\
            named config error (e.g. zero nodes, empty/duplicate pool set,\n\
@@ -80,7 +93,8 @@ fn parse_sim(args: &Args, max_pending: bool) -> driver::SimConfig {
         .seed(args.get_u64("seed", 42))
         .chaos(parse_chaos(args))
         .data(parse_data(args))
-        .isolation(parse_isolation(args));
+        .isolation(parse_isolation(args))
+        .obs(args.has("obs"));
     if max_pending && args.has("max-pending") {
         b = b.max_pending_pods(Some(args.get_usize("max-pending", 64)));
     }
@@ -136,6 +150,46 @@ fn parse_isolation(args: &Args) -> Option<hyperflow_k8s::k8s::isolation::Isolati
     })
 }
 
+/// Shared `--obs` spec parsing for `run` / `serve` / `trace`. A bare
+/// `--obs` enables recording without exporting any files.
+fn parse_obs(args: &Args) -> Option<hyperflow_k8s::obs::ObsSpec> {
+    args.get("obs").map(|spec| {
+        if spec == "true" {
+            // bare flag: the CLI parser stores "true" for valueless flags
+            return hyperflow_k8s::obs::ObsSpec::default();
+        }
+        hyperflow_k8s::obs::ObsSpec::parse_spec(spec).unwrap_or_else(|e| {
+            eprintln!("--obs: {e}");
+            usage()
+        })
+    })
+}
+
+/// Write the `--obs` artifacts for a finished run: extended Chrome trace,
+/// Prometheus text exposition, and (with `crit:on`) the attribution
+/// report on stderr.
+fn write_obs_artifacts(res: &hyperflow_k8s::report::SimResult, spec: &hyperflow_k8s::obs::ObsSpec) {
+    if let Some(path) = &spec.trace_out {
+        std::fs::write(
+            path,
+            hyperflow_k8s::report::chrome::to_chrome_trace(res).to_string(),
+        )
+        .expect("write obs trace");
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = &spec.prom_out {
+        std::fs::write(path, hyperflow_k8s::obs::prom::render(&res.metrics))
+            .expect("write prom exposition");
+        eprintln!("wrote {path}");
+    }
+    if spec.crit {
+        match res.obs.as_ref().and_then(|o| o.attribution.as_ref()) {
+            Some(a) => eprint!("{}", a.render(res.makespan)),
+            None => eprintln!("note: no critical-path attribution available"),
+        }
+    }
+}
+
 /// Shared `--model` parsing for `run` / `serve` / `trace`.
 fn parse_model(args: &Args) -> ExecModel {
     let model = match args.get_or("model", "pools") {
@@ -181,6 +235,11 @@ fn cmd_trace(args: &Args) {
         res.trace.records.len(),
         res.makespan.as_secs_f64()
     );
+    // `--obs` enables the recorder (extended tracks land in the trace
+    // above); prom/crit entries export their artifacts on top
+    if let Some(spec) = parse_obs(args) {
+        write_obs_artifacts(&res, &spec);
+    }
 }
 
 fn montage_cfg(args: &Args) -> MontageConfig {
@@ -222,6 +281,9 @@ fn cmd_run(args: &Args) {
         let html = hyperflow_k8s::report::html::render(&res);
         std::fs::write(path, html).expect("write html report");
         eprintln!("wrote {path}");
+    }
+    if let Some(spec) = parse_obs(args) {
+        write_obs_artifacts(&res, &spec);
     }
     if args.has("json") {
         println!("{}", res.to_json());
@@ -393,6 +455,9 @@ fn cmd_serve(args: &Args) {
             "note: the arrival process produced no instances in the window — \
              raise --arrival-rate or --duration"
         );
+    }
+    if let Some(spec) = parse_obs(args) {
+        write_obs_artifacts(&res.sim, &spec);
     }
     if args.has("json") {
         println!("{}", fleet::report::to_json(&res));

@@ -48,7 +48,14 @@ impl Series {
     }
 
     /// Resample onto a uniform grid with `dt` seconds (for CSV export).
+    ///
+    /// A non-positive (or NaN) `dt` would loop forever on the grid walk
+    /// and a negative `t_end` has no valid grid at all — both return an
+    /// empty vector instead of hanging or panicking in release builds.
     pub fn resample(&self, t_end: f64, dt: f64) -> Vec<(f64, f64)> {
+        if !(dt > 0.0) || t_end < 0.0 {
+            return Vec::new();
+        }
         let mut out = Vec::new();
         let mut idx = 0;
         let mut cur = 0.0;
@@ -71,10 +78,18 @@ impl Series {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GaugeId(usize);
 
+/// Pre-resolved handle to a counter, mirroring [`GaugeId`]: the name is
+/// interned once (cold path) and every increment after that is a plain
+/// `Vec` index instead of a string-keyed BTreeMap lookup that allocates
+/// on first touch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+
 /// Metrics registry: named counters and gauges (with history).
 #[derive(Debug, Default)]
 pub struct Registry {
-    counters: BTreeMap<String, u64>,
+    counters: Vec<u64>,
+    counter_names: BTreeMap<String, usize>,
     gauges: Vec<Series>,
     names: BTreeMap<String, usize>,
 }
@@ -84,12 +99,51 @@ impl Registry {
         Registry::default()
     }
 
+    /// Resolve (or create) a counter handle. Interned counters exist with
+    /// value 0 from this point on, so reports and the Prometheus
+    /// exposition see every registered counter even before its first
+    /// increment.
+    pub fn counter_id(&mut self, name: &str) -> CounterId {
+        if let Some(&i) = self.counter_names.get(name) {
+            return CounterId(i);
+        }
+        self.counters.push(0);
+        let i = self.counters.len() - 1;
+        self.counter_names.insert(name.to_string(), i);
+        CounterId(i)
+    }
+
+    /// Increment a counter by handle (hot path).
+    #[inline]
+    pub fn inc_id(&mut self, id: CounterId, by: u64) {
+        self.counters[id.0] += by;
+    }
+
+    /// Read a counter by handle.
+    #[inline]
+    pub fn counter_by_id(&self, id: CounterId) -> u64 {
+        self.counters[id.0]
+    }
+
+    /// Name-resolving increment (cold paths and tests).
     pub fn inc(&mut self, name: &str, by: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += by;
+        let id = self.counter_id(name);
+        self.inc_id(id, by);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.get(name).copied().unwrap_or(0)
+        self.counter_names
+            .get(name)
+            .map(|&i| self.counters[i])
+            .unwrap_or(0)
+    }
+
+    /// All counters, in deterministic (sorted-name) order — the
+    /// Prometheus/OpenMetrics exposition walks this.
+    pub fn counters_sorted(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counter_names
+            .iter()
+            .map(move |(n, &i)| (n.as_str(), self.counters[i]))
     }
 
     /// Resolve (or create) a gauge handle.
@@ -205,5 +259,54 @@ mod tests {
         s.record(1.0, 1.0);
         s.record(1.0, 2.0); // same instant, new value — allowed
         assert_eq!(s.points().len(), 2);
+    }
+
+    #[test]
+    fn counter_ids_are_interned_and_fast_path_equivalent() {
+        let mut r = Registry::new();
+        let a = r.counter_id("pods_created");
+        let b = r.counter_id("pods_created");
+        assert_eq!(a, b, "re-resolving a name yields the same handle");
+        r.inc_id(a, 2);
+        r.inc("pods_created", 1); // name path hits the same slot
+        assert_eq!(r.counter("pods_created"), 3);
+        assert_eq!(r.counter_by_id(a), 3);
+        // interned-but-untouched counters are visible with value 0
+        let z = r.counter_id("stale_node_events_dropped");
+        assert_eq!(r.counter_by_id(z), 0);
+        assert_eq!(r.counter("stale_node_events_dropped"), 0);
+    }
+
+    #[test]
+    fn counters_sorted_is_deterministic_and_complete() {
+        let mut r = Registry::new();
+        r.inc("zeta", 1);
+        r.inc("alpha", 2);
+        let _ = r.counter_id("mid");
+        let all: Vec<(String, u64)> = r
+            .counters_sorted()
+            .map(|(n, v)| (n.to_string(), v))
+            .collect();
+        assert_eq!(
+            all,
+            vec![
+                ("alpha".to_string(), 2),
+                ("mid".to_string(), 0),
+                ("zeta".to_string(), 1)
+            ]
+        );
+    }
+
+    #[test]
+    fn resample_guards_degenerate_grids() {
+        let mut s = Series::default();
+        s.record(0.0, 1.0);
+        assert!(s.resample(5.0, 0.0).is_empty(), "dt = 0 would never advance");
+        assert!(s.resample(5.0, -1.0).is_empty(), "negative dt");
+        assert!(s.resample(5.0, f64::NAN).is_empty(), "NaN dt");
+        assert!(s.resample(-1.0, 1.0).is_empty(), "negative horizon");
+        // boundary: a zero-length horizon still samples the t=0 point
+        let r = s.resample(0.0, 1.0);
+        assert_eq!(r, vec![(0.0, 1.0)]);
     }
 }

@@ -1,0 +1,317 @@
+//! Critical-path extraction + makespan attribution.
+//!
+//! Walk backward from the last-finishing task, at each step following
+//! the predecessor that finished last (ties break to the lower task id —
+//! deterministic). The resulting chain of tasks covers the makespan
+//! end-to-end: each task on the path became ready exactly when its
+//! chosen predecessor finished, so the per-task segments
+//! `[fin_prev, fin_i]` tile `[base, makespan]` with no gaps.
+//!
+//! Each segment is decomposed with the span's recorded timestamps
+//! (`ready ≤ A ≤ B ≤ C ≤ E ≤ F ≤ fin`, see [`crate::obs::TaskSpan`]):
+//!
+//! | phase        | window                         | meaning |
+//! |--------------|--------------------------------|---------|
+//! | queueing     | `A − fin_prev` minus recovery  | waiting for dispatch: broker queue, admission, back-off waits, batch flush |
+//! | recovery     | min(wasted, `A − ready`)       | execution time consumed by failed / losing attempts |
+//! | scheduling   | `B − A`                        | pod pending → bound (scheduler passes, quota throttles) |
+//! | pod-start    | `C − B`                        | container creation overhead (the paper's ~2 s tax on job models) |
+//! | stage-in     | `E − C`                        | input transfer (data plane; 0 without it) |
+//! | compute      | `F − E`                        | task execution incl. the exec-overhead handshake |
+//! | stage-out    | `fin − F`                      | output write-back gating readiness |
+//!
+//! All arithmetic is in integer milliseconds on clamped-monotone stamps,
+//! so the seven phases sum to `makespan − base` *exactly* — the
+//! attribution invariant `tests/obs.rs` checks under all four models.
+
+use super::FlightRecorder;
+use crate::sim::SimTime;
+use crate::util::json::Json;
+use crate::workflow::dag::Dag;
+use crate::workflow::task::TaskId;
+
+/// Makespan decomposition over the critical path (milliseconds).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Attribution {
+    /// Tasks on the critical path.
+    pub path_tasks: u32,
+    pub queueing_ms: u64,
+    pub scheduling_ms: u64,
+    pub pod_start_ms: u64,
+    pub stage_in_ms: u64,
+    pub compute_ms: u64,
+    pub stage_out_ms: u64,
+    pub recovery_ms: u64,
+}
+
+impl Attribution {
+    /// Sum of all phases — equals the attributed span (makespan − base)
+    /// by construction.
+    pub fn total_ms(&self) -> u64 {
+        self.queueing_ms
+            + self.scheduling_ms
+            + self.pod_start_ms
+            + self.stage_in_ms
+            + self.compute_ms
+            + self.stage_out_ms
+            + self.recovery_ms
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path_tasks", (self.path_tasks as u64).into()),
+            ("queueing_s", (self.queueing_ms as f64 / 1000.0).into()),
+            ("scheduling_s", (self.scheduling_ms as f64 / 1000.0).into()),
+            ("pod_start_s", (self.pod_start_ms as f64 / 1000.0).into()),
+            ("stage_in_s", (self.stage_in_ms as f64 / 1000.0).into()),
+            ("compute_s", (self.compute_ms as f64 / 1000.0).into()),
+            ("stage_out_s", (self.stage_out_ms as f64 / 1000.0).into()),
+            ("recovery_s", (self.recovery_ms as f64 / 1000.0).into()),
+            ("total_s", (self.total_ms() as f64 / 1000.0).into()),
+        ])
+    }
+
+    /// Fixed-width text block (`--obs crit:on` output).
+    pub fn render(&self, makespan: SimTime) -> String {
+        let total = self.total_ms().max(1) as f64;
+        let row = |name: &str, ms: u64| {
+            format!(
+                "  {name:<12} {:>10.1} s  {:>5.1}%\n",
+                ms as f64 / 1000.0,
+                ms as f64 * 100.0 / total
+            )
+        };
+        let mut out = format!(
+            "critical path: {} tasks, {:.1} s attributed of {:.1} s makespan\n",
+            self.path_tasks,
+            self.total_ms() as f64 / 1000.0,
+            makespan.as_secs_f64()
+        );
+        out.push_str(&row("queueing", self.queueing_ms));
+        out.push_str(&row("scheduling", self.scheduling_ms));
+        out.push_str(&row("pod-start", self.pod_start_ms));
+        out.push_str(&row("stage-in", self.stage_in_ms));
+        out.push_str(&row("compute", self.compute_ms));
+        out.push_str(&row("stage-out", self.stage_out_ms));
+        out.push_str(&row("recovery", self.recovery_ms));
+        out
+    }
+}
+
+/// Predecessor lists for every task (the DAG only stores successors).
+pub fn predecessors(dag: &Dag) -> Vec<Vec<u32>> {
+    let n = dag.len();
+    let mut preds: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for p in 0..n {
+        for s in dag.successors(TaskId(p as u32)) {
+            preds[s.0 as usize].push(p as u32);
+        }
+    }
+    preds
+}
+
+fn clamp(v: SimTime, lo: u64, hi: u64) -> u64 {
+    v.as_millis().clamp(lo, hi)
+}
+
+/// Extract the critical path over tasks in `[lo, hi)` and attribute it.
+///
+/// `base` is the segment start of the path's root: `SimTime::ZERO` for a
+/// whole run, the instance's admission time for one fleet instance (so
+/// the first segment's queueing covers admission → first dispatch).
+/// Returns `None` when no task in range finished.
+pub fn attribute(
+    rec: &FlightRecorder,
+    preds: &[Vec<u32>],
+    lo: u32,
+    hi: u32,
+    base: SimTime,
+) -> Option<(Attribution, Vec<u32>)> {
+    let spans = rec.spans();
+    let fin = |t: u32| -> Option<SimTime> {
+        spans.get(t as usize).and_then(|s| s.finished)
+    };
+    // last-finishing task in range (ties -> lowest id, deterministic)
+    let mut last: Option<(u32, SimTime)> = None;
+    for t in lo..hi {
+        if let Some(f) = fin(t) {
+            match last {
+                Some((_, bf)) if f <= bf => {}
+                _ => last = Some((t, f)),
+            }
+        }
+    }
+    let (mut cur, _) = last?;
+    // backward walk: predecessor that finished last gates readiness
+    let mut path = vec![cur];
+    loop {
+        let mut best: Option<(u32, SimTime)> = None;
+        for &p in preds.get(cur as usize).map(|v| v.as_slice()).unwrap_or(&[]) {
+            if !(lo..hi).contains(&p) {
+                continue;
+            }
+            if let Some(f) = fin(p) {
+                match best {
+                    Some((_, bf)) if f <= bf => {}
+                    _ => best = Some((p, f)),
+                }
+            }
+        }
+        match best {
+            Some((p, _)) => {
+                path.push(p);
+                cur = p;
+            }
+            None => break,
+        }
+    }
+    path.reverse();
+
+    let mut attr = Attribution {
+        path_tasks: path.len() as u32,
+        ..Attribution::default()
+    };
+    let mut prev_fin = base.as_millis();
+    for &t in &path {
+        let s = &spans[t as usize];
+        // >= prev_fin by the readiness-gating argument above; the max is
+        // belt-and-braces so a malformed span cannot underflow
+        let fin_ms = s.finished.expect("path tasks finished").as_millis().max(prev_fin);
+        // clamp the chain monotone; a span the recorder never completed
+        // (cannot happen for a finished task, but stay defensive)
+        // degenerates every inner phase to zero
+        let ready = clamp(s.ready.unwrap_or(SimTime::ZERO), prev_fin, fin_ms);
+        let (a, b, c, e, f) = if s.pod.is_some() {
+            let a = clamp(s.pod_created, ready, fin_ms);
+            let b = clamp(s.bound, a, fin_ms);
+            let c = clamp(s.running, b, fin_ms);
+            let e = clamp(s.exec_start, c, fin_ms);
+            let f = clamp(s.compute_end, e, fin_ms);
+            (a, b, c, e, f)
+        } else {
+            (fin_ms, fin_ms, fin_ms, fin_ms, fin_ms)
+        };
+        // recovery happened while the task waited to re-dispatch: it can
+        // never exceed the pre-bind window, so queueing stays >= 0 and
+        // the segment still telescopes exactly
+        let recovery = s.recovery_ms.min(a - prev_fin);
+        attr.queueing_ms += (a - prev_fin) - recovery;
+        attr.recovery_ms += recovery;
+        attr.scheduling_ms += b - a;
+        attr.pod_start_ms += c - b;
+        attr.stage_in_ms += e - c;
+        attr.compute_ms += f - e;
+        attr.stage_out_ms += fin_ms - f;
+        prev_fin = fin_ms;
+    }
+    Some((attr, path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::k8s::pod::PodId;
+
+    /// Hand-built two-task chain: 0 -> 1.
+    fn recorder() -> (FlightRecorder, Vec<Vec<u32>>) {
+        let mut r = FlightRecorder::new(2);
+        // task 0: ready 0, pod created 100, bound 300, running 2300,
+        // exec 2300, compute end 10300, finished 10300
+        r.ready(TaskId(0), SimTime(0));
+        r.dispatch(PodId(0), TaskId(0), SimTime(2_300));
+        r.exec_start(PodId(0), TaskId(0), SimTime(2_300));
+        r.complete(
+            PodId(0),
+            TaskId(0),
+            SimTime(10_300),
+            SimTime(100),
+            SimTime(300),
+            SimTime(2_300),
+        );
+        r.finished(TaskId(0), SimTime(10_300));
+        // task 1 (pool-style: A=B=C=dispatch): ready at 10300, dispatched
+        // 11000, stage-in to 12000, compute to 15000, stage-out to 15500
+        r.ready(TaskId(1), SimTime(10_300));
+        r.dispatch(PodId(1), TaskId(1), SimTime(11_000));
+        r.exec_start(PodId(1), TaskId(1), SimTime(12_000));
+        r.complete(
+            PodId(1),
+            TaskId(1),
+            SimTime(15_000),
+            SimTime(11_000),
+            SimTime(11_000),
+            SimTime(11_000),
+        );
+        r.finished(TaskId(1), SimTime(15_500));
+        (r, vec![vec![], vec![0]])
+    }
+
+    #[test]
+    fn attribution_telescopes_exactly() {
+        let (r, preds) = recorder();
+        let (attr, path) = attribute(&r, &preds, 0, 2, SimTime::ZERO).unwrap();
+        assert_eq!(path, vec![0, 1]);
+        assert_eq!(attr.path_tasks, 2);
+        // task 0: queue 100, sched 200, pod-start 2000, compute 8000
+        // task 1: queue 700, stage-in 1000, compute 3000, stage-out 500
+        assert_eq!(attr.queueing_ms, 100 + 700);
+        assert_eq!(attr.scheduling_ms, 200);
+        assert_eq!(attr.pod_start_ms, 2_000);
+        assert_eq!(attr.stage_in_ms, 1_000);
+        assert_eq!(attr.compute_ms, 8_000 + 3_000);
+        assert_eq!(attr.stage_out_ms, 500);
+        assert_eq!(attr.recovery_ms, 0);
+        assert_eq!(attr.total_ms(), 15_500, "sums to the last finish");
+    }
+
+    #[test]
+    fn recovery_is_carved_out_of_queueing() {
+        let (mut r, preds) = recorder();
+        // a failed attempt of task 1 burned 400 ms before the winner
+        r.span_mut(TaskId(1)).recovery_ms = 400;
+        let (attr, _) = attribute(&r, &preds, 0, 2, SimTime::ZERO).unwrap();
+        assert_eq!(attr.recovery_ms, 400);
+        assert_eq!(attr.queueing_ms, 100 + 300);
+        assert_eq!(attr.total_ms(), 15_500, "invariant survives recovery");
+        // waste beyond the pre-bind window is clamped, not double-counted
+        r.span_mut(TaskId(1)).recovery_ms = 10_000;
+        let (attr, _) = attribute(&r, &preds, 0, 2, SimTime::ZERO).unwrap();
+        assert_eq!(attr.queueing_ms, 100);
+        assert_eq!(attr.recovery_ms, 700);
+        assert_eq!(attr.total_ms(), 15_500);
+    }
+
+    #[test]
+    fn range_and_base_select_a_sub_path() {
+        let (r, preds) = recorder();
+        // instance = task 1 only, admitted at its ready time
+        let (attr, path) = attribute(&r, &preds, 1, 2, SimTime(10_300)).unwrap();
+        assert_eq!(path, vec![1]);
+        assert_eq!(attr.total_ms(), 15_500 - 10_300);
+        // empty range
+        assert!(attribute(&r, &preds, 2, 2, SimTime::ZERO).is_none());
+    }
+
+    #[test]
+    fn unfinished_runs_yield_none() {
+        let r = FlightRecorder::new(3);
+        let preds = vec![vec![], vec![0], vec![1]];
+        assert!(attribute(&r, &preds, 0, 3, SimTime::ZERO).is_none());
+    }
+
+    #[test]
+    fn render_and_json_carry_every_phase() {
+        let (r, preds) = recorder();
+        let (attr, _) = attribute(&r, &preds, 0, 2, SimTime::ZERO).unwrap();
+        let text = attr.render(SimTime(15_500));
+        for phase in [
+            "queueing", "scheduling", "pod-start", "stage-in", "compute",
+            "stage-out", "recovery",
+        ] {
+            assert!(text.contains(phase), "missing {phase} in:\n{text}");
+        }
+        let j = attr.to_json().to_string();
+        assert!(j.contains("\"total_s\""));
+        assert!(j.contains("\"pod_start_s\""));
+    }
+}

@@ -1,0 +1,525 @@
+//! Flight recorder: structured span/event tracing for the execution
+//! kernel.
+//!
+//! The paper's evaluation pipeline (§3.5) is built on observation —
+//! Prometheus + Metrics Server feed the autoscaler and produce the
+//! utilization figures — and its headline claim (worker pools cut
+//! makespan ~20%) is an attribution statement about *where cluster time
+//! goes*. This module gives the simulator the same depth of
+//! instrumentation:
+//!
+//! * a [`FlightRecorder`] owned by the execution kernel
+//!   (`exec::Kernel::obs`, an `Option` exactly like the chaos/data/fleet
+//!   hooks: `None` — the default — records nothing and costs one branch
+//!   per site), capturing per-task lifecycle spans
+//!   (ready → dispatch → bind → pod-start → stage-in → compute →
+//!   stage-out → done, plus retry / kill / speculative attempts) and
+//!   instant events from every control-plane actor (scheduler binds and
+//!   rejection reasons, autoscaler decisions with trigger backlog, chaos
+//!   injections/remediations, data flows with achieved bandwidth, broker
+//!   lane dequeues, fleet admissions, isolation quota throttles);
+//! * a critical-path extractor + makespan attribution report
+//!   ([`critpath`]) that decomposes the makespan into
+//!   queueing / scheduling / pod-start / stage-in / compute / stage-out /
+//!   recovery-wasted seconds, telescoping exactly (integer milliseconds)
+//!   so the phases always sum to the makespan;
+//! * a Prometheus/OpenMetrics text exposition of the metrics registry
+//!   ([`prom`]).
+//!
+//! **Determinism contract:** recording draws no random numbers and
+//! schedules no calendar events — it only *observes* state the kernel
+//! already computes. With the recorder attached the simulated trace is
+//! bit-identical to a run without it; only the exported artifacts differ
+//! (`tests/obs.rs` pins this).
+
+pub mod critpath;
+pub mod prom;
+
+use crate::k8s::pod::PodId;
+use crate::sim::SimTime;
+use crate::util::json::Json;
+use crate::workflow::task::TaskId;
+
+/// Parsed `--obs` CLI spec: which artifacts to export.
+/// `trace:<file>` — extended Chrome/Perfetto trace JSON;
+/// `prom:<file>` — Prometheus text exposition of all counters/gauges;
+/// `crit:on|off` — print the critical-path attribution report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsSpec {
+    pub trace_out: Option<String>,
+    pub prom_out: Option<String>,
+    pub crit: bool,
+}
+
+impl ObsSpec {
+    /// Parse `trace:out.json,prom:out.txt,crit:on`. Every entry is
+    /// optional; an empty spec still enables recording (the attribution
+    /// lands in `--json`/`--html` output).
+    pub fn parse_spec(spec: &str) -> Result<ObsSpec, String> {
+        let mut out = ObsSpec::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once(':') {
+                Some(("trace", path)) if !path.is_empty() => {
+                    out.trace_out = Some(path.to_string());
+                }
+                Some(("prom", path)) if !path.is_empty() => {
+                    out.prom_out = Some(path.to_string());
+                }
+                Some(("crit", v)) => match v {
+                    "on" => out.crit = true,
+                    "off" => out.crit = false,
+                    other => {
+                        return Err(format!("--obs crit must be on|off, got '{other}'"));
+                    }
+                },
+                _ => {
+                    return Err(format!(
+                        "unknown --obs entry '{part}' \
+                         (expected trace:<file>, prom:<file>, crit:on|off)"
+                    ));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Control-plane actor an instant event is attributed to (one Perfetto
+/// "thread" per actor in the exported trace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Actor {
+    Scheduler,
+    Autoscaler,
+    Broker,
+    Chaos,
+    Data,
+    Fleet,
+}
+
+impl Actor {
+    pub fn name(self) -> &'static str {
+        match self {
+            Actor::Scheduler => "scheduler",
+            Actor::Autoscaler => "autoscaler",
+            Actor::Broker => "broker",
+            Actor::Chaos => "chaos",
+            Actor::Data => "data-plane",
+            Actor::Fleet => "fleet",
+        }
+    }
+
+    /// Stable Chrome-trace thread id for this actor's lane.
+    pub fn tid(self) -> u64 {
+        match self {
+            Actor::Scheduler => 1,
+            Actor::Autoscaler => 2,
+            Actor::Broker => 3,
+            Actor::Chaos => 4,
+            Actor::Data => 5,
+            Actor::Fleet => 6,
+        }
+    }
+
+    pub const ALL: [Actor; 6] = [
+        Actor::Scheduler,
+        Actor::Autoscaler,
+        Actor::Broker,
+        Actor::Chaos,
+        Actor::Data,
+        Actor::Fleet,
+    ];
+}
+
+/// One control-plane instant event.
+#[derive(Debug, Clone)]
+pub struct ObsEvent {
+    pub at: SimTime,
+    pub actor: Actor,
+    /// Static event kind ("bind", "backoff", "scale_up", "fault", ...).
+    pub kind: &'static str,
+    /// Free-form detail (pod/node/pool/tenant identity).
+    pub detail: String,
+    /// Primary magnitude (backlog, replicas, Gbit/s, seconds — per kind).
+    pub value: f64,
+}
+
+/// Recorded lifecycle span of one task (the *winning* attempt's
+/// timestamps; failed/speculative attempts accrue into `recovery_ms`).
+///
+/// Timestamp chain, monotone by construction:
+/// `ready ≤ pod_created (A) ≤ bound (B) ≤ running (C) ≤ exec_start (E) ≤
+/// compute_end (F) ≤ finished`. For worker-pool tasks the worker pod
+/// long predates the task, so A = B = C = the broker dispatch time and
+/// the scheduling/pod-start phases are attributed to the pool's elastic
+/// capacity (queueing) instead — exactly the asymmetry the paper's §4
+/// comparison measures.
+#[derive(Debug, Clone)]
+pub struct TaskSpan {
+    pub ready: Option<SimTime>,
+    /// Pod of the attempt that completed the task.
+    pub pod: Option<PodId>,
+    /// A — winning pod created (job models) / task dispatched (pools).
+    pub pod_created: SimTime,
+    /// B — winning pod bound by the scheduler.
+    pub bound: SimTime,
+    /// C — winning pod running (container started).
+    pub running: SimTime,
+    /// E — compute began (stage-in, if any, completed).
+    pub exec_start: SimTime,
+    /// F — compute finished.
+    pub compute_end: SimTime,
+    /// Task fully done: output staged out, readiness propagated.
+    pub finished: Option<SimTime>,
+    /// Execution milliseconds consumed by failed / losing attempts.
+    pub recovery_ms: u64,
+    /// Dispatch attempts (1 = clean first-try execution).
+    pub attempts: u32,
+}
+
+impl TaskSpan {
+    fn empty() -> Self {
+        TaskSpan {
+            ready: None,
+            pod: None,
+            pod_created: SimTime::ZERO,
+            bound: SimTime::ZERO,
+            running: SimTime::ZERO,
+            exec_start: SimTime::ZERO,
+            compute_end: SimTime::ZERO,
+            finished: None,
+            recovery_ms: 0,
+            attempts: 0,
+        }
+    }
+}
+
+/// In-flight attempt tracked per pod (a pod executes one task at a time
+/// in every model, so one slot per pod suffices — speculative copies run
+/// in *different* pods).
+#[derive(Debug, Clone)]
+struct PodCur {
+    task: Option<TaskId>,
+    dispatch: SimTime,
+    exec_start: Option<SimTime>,
+}
+
+impl PodCur {
+    fn empty() -> Self {
+        PodCur {
+            task: None,
+            dispatch: SimTime::ZERO,
+            exec_start: None,
+        }
+    }
+}
+
+/// The recorder. Owned by the kernel as `Option<FlightRecorder>`; every
+/// call site is `if let Some(o) = k.obs.as_mut() { ... }`, so a disabled
+/// run pays one branch and touches no memory.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    spans: Vec<TaskSpan>,
+    pods: Vec<PodCur>,
+    pub events: Vec<ObsEvent>,
+}
+
+impl FlightRecorder {
+    pub fn new(n_tasks: usize) -> Self {
+        FlightRecorder {
+            spans: vec![TaskSpan::empty(); n_tasks],
+            pods: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    fn span_mut(&mut self, t: TaskId) -> &mut TaskSpan {
+        let i = t.0 as usize;
+        if i >= self.spans.len() {
+            self.spans.resize(i + 1, TaskSpan::empty());
+        }
+        &mut self.spans[i]
+    }
+
+    fn pod_mut(&mut self, p: PodId) -> &mut PodCur {
+        let i = p.0 as usize;
+        if i >= self.pods.len() {
+            self.pods.resize(i + 1, PodCur::empty());
+        }
+        &mut self.pods[i]
+    }
+
+    pub fn spans(&self) -> &[TaskSpan] {
+        &self.spans
+    }
+
+    pub fn span(&self, t: TaskId) -> Option<&TaskSpan> {
+        self.spans.get(t.0 as usize)
+    }
+
+    /// Task became ready (dependencies satisfied / instance admitted).
+    pub fn ready(&mut self, t: TaskId, now: SimTime) {
+        let s = self.span_mut(t);
+        if s.ready.is_none() {
+            s.ready = Some(now);
+        }
+    }
+
+    /// An attempt of `t` was handed to pod `p` (job pod reached its
+    /// payload, or a pool worker fetched the message).
+    pub fn dispatch(&mut self, p: PodId, t: TaskId, now: SimTime) {
+        *self.pod_mut(p) = PodCur {
+            task: Some(t),
+            dispatch: now,
+            exec_start: None,
+        };
+        self.span_mut(t).attempts += 1;
+    }
+
+    /// Compute began for the attempt running in pod `p`. A start with no
+    /// prior dispatch (paths that hand work to a pod without a broker /
+    /// payload step) implicitly opens the attempt at `now`.
+    pub fn exec_start(&mut self, p: PodId, t: TaskId, now: SimTime) {
+        let cur = self.pod_mut(p);
+        if cur.task == Some(t) {
+            cur.exec_start = Some(now);
+        } else {
+            *cur = PodCur {
+                task: Some(t),
+                dispatch: now,
+                exec_start: Some(now),
+            };
+        }
+    }
+
+    /// Dispatch time of the attempt currently in pod `p` (`now` fallback
+    /// for pods the recorder never saw a dispatch for).
+    pub fn dispatch_of(&self, p: PodId, now: SimTime) -> SimTime {
+        self.pods
+            .get(p.0 as usize)
+            .filter(|c| c.task.is_some())
+            .map(|c| c.dispatch)
+            .unwrap_or(now)
+    }
+
+    /// The attempt in pod `p` was killed (chaos fault, drain, takeover,
+    /// speculative loss): its execution time so far is recovery waste.
+    pub fn attempt_lost(&mut self, p: PodId, now: SimTime) {
+        let i = p.0 as usize;
+        if i >= self.pods.len() {
+            return;
+        }
+        let cur = std::mem::replace(&mut self.pods[i], PodCur::empty());
+        if let (Some(t), Some(start)) = (cur.task, cur.exec_start) {
+            self.span_mut(t).recovery_ms += now.saturating_sub(start).as_millis();
+        }
+    }
+
+    /// The attempt in pod `p` completed the task: stamp the winning
+    /// attempt's chain. `a`/`b`/`c` are the pod's created/bound/running
+    /// times (job models) or the dispatch time three times (pool tasks).
+    pub fn complete(
+        &mut self,
+        p: PodId,
+        t: TaskId,
+        now: SimTime,
+        a: SimTime,
+        b: SimTime,
+        c: SimTime,
+    ) {
+        let exec = {
+            let cur = self.pod_mut(p);
+            let e = if cur.task == Some(t) { cur.exec_start } else { None };
+            *cur = PodCur::empty();
+            e
+        };
+        let s = self.span_mut(t);
+        s.pod = Some(p);
+        s.pod_created = a;
+        s.bound = b;
+        s.running = c;
+        s.exec_start = exec.unwrap_or(c);
+        s.compute_end = now;
+    }
+
+    /// Task fully finished (stage-out landed, readiness propagated).
+    pub fn finished(&mut self, t: TaskId, now: SimTime) {
+        let s = self.span_mut(t);
+        if s.finished.is_none() {
+            s.finished = Some(now);
+        }
+    }
+
+    /// Record a control-plane instant event.
+    pub fn event(
+        &mut self,
+        at: SimTime,
+        actor: Actor,
+        kind: &'static str,
+        detail: String,
+        value: f64,
+    ) {
+        self.events.push(ObsEvent {
+            at,
+            actor,
+            kind,
+            detail,
+            value,
+        });
+    }
+}
+
+/// One pod's lifetime, harvested from the kernel's pod table at the end
+/// of a run (per-node lanes in the Perfetto export).
+#[derive(Debug, Clone)]
+pub struct PodRow {
+    pub pod: u64,
+    pub node: Option<u32>,
+    /// Pool name for workers, `None` for job pods.
+    pub pool: Option<String>,
+    pub created: SimTime,
+    pub scheduled: Option<SimTime>,
+    pub running: Option<SimTime>,
+    pub finished: Option<SimTime>,
+}
+
+/// Everything the recorder distills into the run result
+/// (`SimResult::obs`, present only when `--obs` / `SimConfig::obs` is
+/// set).
+#[derive(Debug)]
+pub struct ObsReport {
+    /// Whole-run critical-path attribution (`None` if no task finished).
+    pub attribution: Option<critpath::Attribution>,
+    /// The critical path itself, start → end, as task ids.
+    pub critical_path: Vec<u32>,
+    /// Control-plane instant events, in emission (= time) order.
+    pub events: Vec<ObsEvent>,
+    /// Pod lifetimes for the per-node Perfetto lanes.
+    pub pods: Vec<PodRow>,
+    /// Fleet runs: per-instance attribution, aligned with the outcome
+    /// vector (`None` for instances that never finished).
+    pub instance_attr: Vec<Option<critpath::Attribution>>,
+}
+
+impl ObsReport {
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(a) = &self.attribution {
+            fields.push(("attribution", a.to_json()));
+        }
+        fields.push((
+            "critical_path",
+            Json::Arr(
+                self.critical_path
+                    .iter()
+                    .map(|&t| Json::from(t as u64))
+                    .collect(),
+            ),
+        ));
+        fields.push(("events", Json::from(self.events.len() as u64)));
+        if !self.instance_attr.is_empty() {
+            fields.push((
+                "instance_attribution",
+                Json::Arr(
+                    self.instance_attr
+                        .iter()
+                        .map(|a| match a {
+                            Some(a) => a.to_json(),
+                            None => Json::obj(vec![]),
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_spec_parses_all_entries() {
+        let s = ObsSpec::parse_spec("trace:out.json,prom:out.txt,crit:on").unwrap();
+        assert_eq!(s.trace_out.as_deref(), Some("out.json"));
+        assert_eq!(s.prom_out.as_deref(), Some("out.txt"));
+        assert!(s.crit);
+        let s = ObsSpec::parse_spec("crit:off").unwrap();
+        assert!(!s.crit);
+        assert_eq!(s.trace_out, None);
+        assert_eq!(ObsSpec::parse_spec("").unwrap(), ObsSpec::default());
+        assert!(ObsSpec::parse_spec("bogus:1").is_err());
+        assert!(ObsSpec::parse_spec("crit:maybe").is_err());
+        assert!(ObsSpec::parse_spec("trace:").is_err(), "empty path");
+    }
+
+    #[test]
+    fn recorder_tracks_a_clean_attempt() {
+        let mut r = FlightRecorder::new(2);
+        let t = TaskId(1);
+        let p = PodId(7);
+        r.ready(t, SimTime(100));
+        r.dispatch(p, t, SimTime(500));
+        r.exec_start(p, t, SimTime(600));
+        r.complete(p, t, SimTime(1_600), SimTime(200), SimTime(300), SimTime(500));
+        r.finished(t, SimTime(1_700));
+        let s = r.span(t).unwrap();
+        assert_eq!(s.ready, Some(SimTime(100)));
+        assert_eq!(s.pod, Some(p));
+        assert_eq!(s.pod_created, SimTime(200));
+        assert_eq!(s.bound, SimTime(300));
+        assert_eq!(s.running, SimTime(500));
+        assert_eq!(s.exec_start, SimTime(600));
+        assert_eq!(s.compute_end, SimTime(1_600));
+        assert_eq!(s.finished, Some(SimTime(1_700)));
+        assert_eq!(s.attempts, 1);
+        assert_eq!(s.recovery_ms, 0);
+    }
+
+    #[test]
+    fn lost_attempts_accrue_recovery_and_preserve_the_winner() {
+        let mut r = FlightRecorder::new(1);
+        let t = TaskId(0);
+        r.ready(t, SimTime(0));
+        // attempt 1 dies 400 ms into compute
+        r.dispatch(PodId(1), t, SimTime(100));
+        r.exec_start(PodId(1), t, SimTime(200));
+        r.attempt_lost(PodId(1), SimTime(600));
+        // attempt 2 never reached compute before dying: no waste accrued
+        r.dispatch(PodId(2), t, SimTime(700));
+        r.attempt_lost(PodId(2), SimTime(800));
+        // attempt 3 wins
+        r.dispatch(PodId(3), t, SimTime(900));
+        r.exec_start(PodId(3), t, SimTime(900));
+        r.complete(
+            PodId(3),
+            t,
+            SimTime(1_900),
+            SimTime(850),
+            SimTime(860),
+            SimTime(900),
+        );
+        r.finished(t, SimTime(1_900));
+        let s = r.span(t).unwrap();
+        assert_eq!(s.recovery_ms, 400);
+        assert_eq!(s.attempts, 3);
+        assert_eq!(s.pod, Some(PodId(3)));
+        // killing an unknown pod is a no-op, not a panic
+        r.attempt_lost(PodId(99), SimTime(2_000));
+    }
+
+    #[test]
+    fn events_record_in_order() {
+        let mut r = FlightRecorder::new(0);
+        r.event(SimTime(5), Actor::Scheduler, "bind", "pod 1 -> node 2".into(), 1.0);
+        r.event(SimTime(9), Actor::Chaos, "fault", "spot reclaim node 0".into(), 0.0);
+        assert_eq!(r.events.len(), 2);
+        assert_eq!(r.events[0].actor.name(), "scheduler");
+        assert_eq!(r.events[1].kind, "fault");
+        assert_ne!(Actor::Scheduler.tid(), Actor::Chaos.tid());
+    }
+}

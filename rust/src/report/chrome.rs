@@ -1,37 +1,63 @@
 //! Chrome trace-event export: open the trace in `chrome://tracing` /
 //! Perfetto to see the per-pod Gantt chart of a run. Each pod is a "thread"
 //! and each task a complete event (`ph: "X"`).
+//!
+//! When the run carried a flight recorder (`SimConfig::obs`), the trace
+//! grows three extra tracks:
+//!
+//! - pid 2 "control-plane": one instant-event lane per actor (scheduler,
+//!   autoscaler, broker, chaos, data, fleet);
+//! - pid 3 "counters": every gauge series as Chrome counter events
+//!   (`ph: "C"`), rendered by Perfetto as stacked area charts;
+//! - pid 100+node: per-node pod lanes, one complete event per pod from
+//!   creation to termination.
 
 use super::SimResult;
+use crate::obs::Actor;
 use crate::util::json::Json;
+
+/// Lane for tasks that never reached a pod (killed before dispatch).
+const LOST_TID: u64 = u64::MAX;
+
+fn process_name(pid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", pid.into()),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+fn thread_name(pid: u64, tid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("thread_name")),
+        ("ph", Json::str("M")),
+        ("pid", pid.into()),
+        ("tid", tid.into()),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
 
 /// Build the trace-event JSON for a run.
 pub fn to_chrome_trace(res: &SimResult) -> Json {
     let mut events = Vec::new();
     // process metadata
-    events.push(Json::obj(vec![
-        ("name", Json::str("process_name")),
-        ("ph", Json::str("M")),
-        ("pid", 1u64.into()),
-        (
-            "args",
-            Json::obj(vec![(
-                "name",
-                Json::str(format!("hyperflow-k8s ({})", res.model_name)),
-            )]),
-        ),
-    ]));
+    events.push(process_name(
+        1,
+        &format!("hyperflow-k8s ({})", res.model_name),
+    ));
     for r in &res.trace.records {
-        let (Some(start), Some(end), Some(pod)) = (r.started_at, r.finished_at, r.pod)
-        else {
-            continue;
-        };
+        // Unfinished or never-dispatched tasks still get a zero-duration
+        // event: killed work must stay visible in the Gantt chart.
+        let start = r.started_at.unwrap_or(r.ready_at);
+        let end = r.finished_at.unwrap_or(start);
+        let lost = r.finished_at.is_none() || r.pod.is_none();
         events.push(Json::obj(vec![
             ("name", Json::str(&r.type_name)),
-            ("cat", Json::str("task")),
+            ("cat", Json::str(if lost { "lost" } else { "task" })),
             ("ph", Json::str("X")),
             ("pid", 1u64.into()),
-            ("tid", pod.into()),
+            ("tid", r.pod.unwrap_or(LOST_TID).into()),
             // chrome traces are in microseconds
             ("ts", (start.as_millis() * 1000).into()),
             ("dur", ((end - start).as_millis() * 1000).into()),
@@ -44,7 +70,103 @@ pub fn to_chrome_trace(res: &SimResult) -> Json {
             ),
         ]));
     }
+    if let Some(o) = &res.obs {
+        push_control_plane(&mut events, o);
+        push_counters(&mut events, res);
+        push_node_lanes(&mut events, o);
+    }
     Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+/// pid 2: one instant-event lane per control-plane actor.
+fn push_control_plane(events: &mut Vec<Json>, o: &crate::obs::ObsReport) {
+    events.push(process_name(2, "control-plane"));
+    for a in Actor::ALL {
+        events.push(thread_name(2, a.tid(), a.name()));
+    }
+    for e in &o.events {
+        events.push(Json::obj(vec![
+            ("name", Json::str(e.kind)),
+            ("cat", Json::str(e.actor.name())),
+            ("ph", Json::str("I")),
+            ("s", Json::str("t")),
+            ("pid", 2u64.into()),
+            ("tid", e.actor.tid().into()),
+            ("ts", (e.at.as_millis() * 1000).into()),
+            (
+                "args",
+                Json::obj(vec![
+                    ("detail", Json::str(&e.detail)),
+                    ("value", e.value.into()),
+                ]),
+            ),
+        ]));
+    }
+}
+
+/// pid 3: every gauge series as Chrome counter events.
+fn push_counters(events: &mut Vec<Json>, res: &SimResult) {
+    events.push(process_name(3, "counters"));
+    for name in res.metrics.gauge_names() {
+        let Some(s) = res.metrics.gauge(name) else { continue };
+        for &(t, v) in s.points() {
+            events.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("ph", Json::str("C")),
+                ("pid", 3u64.into()),
+                // gauge timestamps are in seconds
+                ("ts", ((t * 1e6) as u64).into()),
+                ("args", Json::obj(vec![("value", v.into())])),
+            ]));
+        }
+    }
+}
+
+/// pid 100+node: per-node pod lanes (pool workers and job pods alike).
+fn push_node_lanes(events: &mut Vec<Json>, o: &crate::obs::ObsReport) {
+    let mut named = std::collections::BTreeSet::new();
+    for p in &o.pods {
+        let Some(node) = p.node else { continue };
+        let pid = 100 + node as u64;
+        if named.insert(node) {
+            events.push(process_name(pid, &format!("node {node}")));
+        }
+        let end = p.finished.or(p.running).unwrap_or(p.created);
+        events.push(Json::obj(vec![
+            (
+                "name",
+                Json::str(p.pool.as_deref().unwrap_or("job pod")),
+            ),
+            ("cat", Json::str("pod")),
+            ("ph", Json::str("X")),
+            ("pid", pid.into()),
+            ("tid", p.pod.into()),
+            ("ts", (p.created.as_millis() * 1000).into()),
+            (
+                "dur",
+                ((end.saturating_sub(p.created)).as_millis() * 1000).into(),
+            ),
+            (
+                "args",
+                Json::obj(vec![
+                    (
+                        "scheduled_ms",
+                        match p.scheduled {
+                            Some(t) => t.as_millis().into(),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "running_ms",
+                        match p.running {
+                            Some(t) => t.as_millis().into(),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+        ]));
+    }
 }
 
 #[cfg(test)]
@@ -53,14 +175,18 @@ mod tests {
     use crate::models::{driver, ExecModel};
     use crate::workflow::montage::{generate, MontageConfig};
 
-    #[test]
-    fn trace_has_event_per_task() {
-        let dag = generate(&MontageConfig {
+    fn dag3x3() -> crate::workflow::dag::Dag {
+        generate(&MontageConfig {
             grid_w: 3,
             grid_h: 3,
             diagonals: false,
             seed: 2,
-        });
+        })
+    }
+
+    #[test]
+    fn trace_has_event_per_task() {
+        let dag = dag3x3();
         let n = dag.len();
         let res = driver::run(dag, ExecModel::JobBased, driver::SimConfig::with_nodes(3));
         let j = to_chrome_trace(&res);
@@ -73,5 +199,62 @@ mod tests {
         // serializes to parseable JSON
         let text = j.to_string();
         assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn unfinished_tasks_emit_zero_duration_events() {
+        // Hand-build a trace where one task never started and one never
+        // finished: both must still appear, flagged as "lost".
+        let dag = dag3x3();
+        let n = dag.len();
+        let mut res = driver::run(dag, ExecModel::JobBased, driver::SimConfig::with_nodes(3));
+        {
+            let r = &mut res.trace.records[0];
+            r.finished_at = None;
+        }
+        {
+            let r = &mut res.trace.records[1];
+            r.started_at = None;
+            r.finished_at = None;
+            r.pod = None;
+        }
+        let j = to_chrome_trace(&res);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), n + 1, "no task may be silently dropped");
+        let lost: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("cat").and_then(|c| c.as_str()) == Some("lost"))
+            .collect();
+        assert_eq!(lost.len(), 2);
+        for e in &lost {
+            assert_eq!(e.get("dur").unwrap().as_u64().unwrap(), 0);
+        }
+    }
+
+    #[test]
+    fn obs_run_gains_control_plane_counter_and_node_tracks() {
+        let dag = dag3x3();
+        let res = driver::run(
+            dag,
+            ExecModel::JobBased,
+            driver::SimConfig::with_nodes(3).obs(true),
+        );
+        assert!(res.obs.is_some());
+        let j = to_chrome_trace(&res);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let pid_of = |e: &Json| e.get("pid").and_then(|p| p.as_u64()).unwrap_or(0);
+        assert!(events.iter().any(|e| pid_of(e) == 2),
+            "control-plane track missing");
+        assert!(
+            events
+                .iter()
+                .any(|e| pid_of(e) == 3
+                    && e.get("ph").and_then(|p| p.as_str()) == Some("C")),
+            "counter track missing"
+        );
+        assert!(events.iter().any(|e| pid_of(e) >= 100),
+            "node pod lanes missing");
+        // the whole thing round-trips through the JSON parser
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 }

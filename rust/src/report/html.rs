@@ -87,6 +87,38 @@ pub fn render(res: &SimResult) -> String {
         ));
     }
 
+    // critical-path attribution (flight-recorder runs only)
+    if let Some(a) = res.obs.as_ref().and_then(|o| o.attribution.as_ref()) {
+        let pct = |ms: u64| ms as f64 / res.makespan.as_millis().max(1) as f64 * 100.0;
+        body.push_str(&format!(
+            "<h2>critical-path attribution ({} tasks on the path)</h2>\
+             <table class='kv'>\
+             <tr><td>queueing</td><td>{:.1} s ({:.1}%)</td></tr>\
+             <tr><td>scheduling</td><td>{:.1} s ({:.1}%)</td></tr>\
+             <tr><td>pod start</td><td>{:.1} s ({:.1}%)</td></tr>\
+             <tr><td>stage-in</td><td>{:.1} s ({:.1}%)</td></tr>\
+             <tr><td>compute</td><td>{:.1} s ({:.1}%)</td></tr>\
+             <tr><td>stage-out</td><td>{:.1} s ({:.1}%)</td></tr>\
+             <tr><td>recovery</td><td>{:.1} s ({:.1}%)</td></tr>\
+             </table>",
+            a.path_tasks,
+            a.queueing_ms as f64 / 1000.0,
+            pct(a.queueing_ms),
+            a.scheduling_ms as f64 / 1000.0,
+            pct(a.scheduling_ms),
+            a.pod_start_ms as f64 / 1000.0,
+            pct(a.pod_start_ms),
+            a.stage_in_ms as f64 / 1000.0,
+            pct(a.stage_in_ms),
+            a.compute_ms as f64 / 1000.0,
+            pct(a.compute_ms),
+            a.stage_out_ms as f64 / 1000.0,
+            pct(a.stage_out_ms),
+            a.recovery_ms as f64 / 1000.0,
+            pct(a.recovery_ms),
+        ));
+    }
+
     body.push_str(
         &AreaChart {
             title: "cluster utilization: workflow tasks executing in parallel".into(),
@@ -193,6 +225,27 @@ mod tests {
             !html.contains("data plane"),
             "data-off runs carry no storage section"
         );
+        assert!(
+            !html.contains("critical-path attribution"),
+            "obs-off runs carry no attribution section"
+        );
+    }
+
+    #[test]
+    fn obs_run_renders_the_attribution_section() {
+        let res = driver::run(
+            generate(&MontageConfig {
+                grid_w: 3,
+                grid_h: 3,
+                diagonals: true,
+                seed: 1,
+            }),
+            ExecModel::paper_hybrid_pools(),
+            driver::SimConfig::with_nodes(3).obs(true),
+        );
+        let html = super::render(&res);
+        assert!(html.contains("critical-path attribution"));
+        assert!(html.contains("<td>compute</td>"));
     }
 
     #[test]

@@ -122,6 +122,10 @@ pub struct SimResult {
     /// violations and takeover blast radii (all-zero, with
     /// `enabled == false`, when isolation is off).
     pub isolation: crate::k8s::isolation::IsolationReport,
+    /// Flight-recorder artifacts (spans, control-plane events,
+    /// critical-path attribution). `None` unless the run opted in via
+    /// `SimConfig::obs` — recording never perturbs the simulation.
+    pub obs: Option<crate::obs::ObsReport>,
 }
 
 impl SimResult {
@@ -166,6 +170,13 @@ impl SimResult {
             ("chaos", self.chaos.to_json()),
             ("data", self.data.to_json()),
             ("isolation", self.isolation.to_json()),
+            (
+                "obs",
+                match &self.obs {
+                    Some(o) => o.to_json(),
+                    None => Json::Null,
+                },
+            ),
             ("running_tasks_series", Json::Arr(series)),
         ])
     }

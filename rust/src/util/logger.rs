@@ -38,7 +38,14 @@ pub fn init() {
         Ok("info") => LevelFilter::Info,
         Ok("debug") => LevelFilter::Debug,
         Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Warn,
+        Ok(other) => {
+            eprintln!(
+                "HF_LOG: unrecognized level '{other}' — using warn \
+                 (accepted: error, warn, info, debug, trace)"
+            );
+            LevelFilter::Warn
+        }
+        Err(_) => LevelFilter::Warn,
     };
     if log::set_logger(&LOGGER).is_ok() {
         log::set_max_level(level);

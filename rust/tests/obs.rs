@@ -1,0 +1,174 @@
+//! Flight-recorder integration contract.
+//!
+//! Two properties pin the "observe, never perturb" design:
+//!
+//! 1. the simulation fingerprint (makespan, event count, pods, binds,
+//!    back-offs) is bit-identical with and without the recorder attached
+//!    — recording draws no RNG and schedules no calendar events;
+//! 2. with the recorder on, critical-path attribution decomposes the
+//!    makespan *exactly* (integer milliseconds) into queueing /
+//!    scheduling / pod-start / stage-in / compute / stage-out / recovery
+//!    for every execution model, plain and with chaos or the data plane
+//!    attached.
+
+use hyperflow_k8s::engine::clustering::ClusteringConfig;
+use hyperflow_k8s::exec::{run, run_fleet, ExecModel, SimConfig};
+use hyperflow_k8s::fleet::{FleetPlan, InstanceSpec};
+use hyperflow_k8s::workflow::dag::Dag;
+use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
+
+fn fixed_dag() -> Dag {
+    generate(&MontageConfig {
+        grid_w: 4,
+        grid_h: 4,
+        diagonals: true,
+        seed: 11,
+    })
+}
+
+fn all_models() -> Vec<ExecModel> {
+    vec![
+        ExecModel::JobBased,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ExecModel::paper_hybrid_pools(),
+        ExecModel::GenericPool,
+    ]
+}
+
+/// The three run configurations exercised per model: healthy cluster,
+/// every chaos injector, and a constrained shared-NFS data plane.
+fn configs(obs: bool) -> Vec<(&'static str, SimConfig)> {
+    let plain = SimConfig::with_nodes(4).obs(obs);
+    let mut chaos = SimConfig::with_nodes(4);
+    chaos.seed = 7;
+    chaos.chaos =
+        hyperflow_k8s::chaos::ChaosConfig::parse_spec("spot:2,crash:1,pod:0.1,straggler:0.5")
+            .unwrap();
+    let chaos = chaos.obs(obs);
+    let mut data = SimConfig::with_nodes(4);
+    data.data = Some(hyperflow_k8s::data::DataConfig::parse_spec("nfs:0.5,cache:4").unwrap());
+    let data = data.obs(obs);
+    vec![("plain", plain), ("chaos", chaos), ("data", data)]
+}
+
+/// Ordering-sensitive simulation fingerprint (same counters as the golden
+/// trace): any recorder-induced perturbation shifts at least one field.
+fn fingerprint(obs: bool) -> String {
+    let mut out = String::new();
+    for model in all_models() {
+        for (tag, cfg) in configs(obs) {
+            let res = run(fixed_dag(), model.clone(), cfg);
+            out.push_str(&format!(
+                "{tag}/{}: makespan_ms={} events={} pods={} binds={} backoffs={} api={}\n",
+                model.name(),
+                res.makespan.as_millis(),
+                res.sim_events,
+                res.pods_created,
+                res.sched_binds,
+                res.sched_backoffs,
+                res.api_requests,
+            ));
+        }
+    }
+    out
+}
+
+#[test]
+fn recording_does_not_perturb_the_simulation() {
+    assert_eq!(
+        fingerprint(false),
+        fingerprint(true),
+        "attaching the flight recorder changed the simulated trace"
+    );
+}
+
+#[test]
+fn obs_runs_are_bit_identical_on_rerun() {
+    assert_eq!(
+        fingerprint(true),
+        fingerprint(true),
+        "recorder-on rerun diverged"
+    );
+}
+
+#[test]
+fn attribution_sums_to_makespan_for_every_model() {
+    for model in all_models() {
+        for (tag, cfg) in configs(true) {
+            let res = run(fixed_dag(), model.clone(), cfg);
+            let o = res
+                .obs
+                .as_ref()
+                .unwrap_or_else(|| panic!("{tag}/{}: recorder missing", model.name()));
+            let a = o
+                .attribution
+                .as_ref()
+                .unwrap_or_else(|| panic!("{tag}/{}: no attribution", model.name()));
+            assert_eq!(
+                a.total_ms(),
+                res.makespan.as_millis(),
+                "{tag}/{}: phase decomposition must telescope to the makespan \
+                 (path of {} tasks: {:?})",
+                model.name(),
+                a.path_tasks,
+                o.critical_path,
+            );
+            assert!(
+                !o.critical_path.is_empty(),
+                "{tag}/{}: empty critical path",
+                model.name()
+            );
+            assert!(
+                !o.events.is_empty(),
+                "{tag}/{}: no control-plane events recorded",
+                model.name()
+            );
+            assert!(
+                !o.pods.is_empty(),
+                "{tag}/{}: no pod lanes harvested",
+                model.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fleet_runs_attribute_each_instance_from_its_admission() {
+    let (a, b) = (fixed_dag(), fixed_dag());
+    let (n_a, n_b) = (a.len() as u32, b.len() as u32);
+    let union = Dag::disjoint_union(&[a, b]);
+    let plan = FleetPlan {
+        instances: vec![
+            InstanceSpec {
+                tenant: 0,
+                arrival_ms: 0,
+                first_task: 0,
+                n_tasks: n_a,
+            },
+            InstanceSpec {
+                tenant: 1,
+                arrival_ms: 20_000,
+                first_task: n_a,
+                n_tasks: n_b,
+            },
+        ],
+        tenant_weights: vec![2, 1],
+        max_in_flight: None,
+    };
+    let (res, outcomes) = run_fleet(
+        union,
+        ExecModel::paper_hybrid_pools(),
+        SimConfig::with_nodes(4).obs(true),
+        &plan,
+    );
+    let o = res.obs.as_ref().expect("recorder attached");
+    assert_eq!(o.instance_attr.len(), outcomes.len());
+    for (i, (attr, out)) in o.instance_attr.iter().zip(&outcomes).enumerate() {
+        let attr = attr.as_ref().unwrap_or_else(|| panic!("instance {i} unattributed"));
+        assert_eq!(
+            attr.total_ms(),
+            (out.finished - out.admitted).as_millis(),
+            "instance {i}: attribution must telescope from admission to finish"
+        );
+    }
+}
