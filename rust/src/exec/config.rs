@@ -14,6 +14,7 @@ use crate::data::DataConfig;
 use crate::k8s::api_server::ApiServerConfig;
 use crate::k8s::isolation::IsolationConfig;
 use crate::k8s::scheduler::SchedulerConfig;
+use crate::obs::monitor::{MonitorConfig, RulesSource};
 
 /// A named configuration error, reported before any event is simulated.
 #[derive(Debug, Clone, PartialEq)]
@@ -53,6 +54,11 @@ pub enum ConfigError {
     /// Isolation: a LimitRange with a zero default/floor is a no-op that
     /// almost certainly meant something else.
     ZeroLimitRange,
+    /// Monitor: a zero scrape interval would loop forever on one tick.
+    ZeroScrapeInterval,
+    /// Monitor: the supplied rule file failed to parse (message carries
+    /// the line-numbered parser error).
+    BadMonitorRules(String),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -101,6 +107,10 @@ impl std::fmt::Display for ConfigError {
             ConfigError::ZeroLimitRange => {
                 write!(f, "isolation limit range must have a non-zero default")
             }
+            ConfigError::ZeroScrapeInterval => {
+                write!(f, "monitor scrape interval must be non-zero")
+            }
+            ConfigError::BadMonitorRules(e) => write!(f, "monitor rules: {e}"),
         }
     }
 }
@@ -160,6 +170,11 @@ pub struct SimConfig {
     /// result. Off by default; recording never perturbs the simulation
     /// (no RNG draws, no calendar events), it only fills side tables.
     pub obs: bool,
+    /// Monitoring stack ([`crate::obs::monitor`]): deterministic scrape
+    /// loop with recording rules and SLO burn-rate alerting. `None` (the
+    /// default) schedules no ticks and runs stay bit-identical to
+    /// pre-monitor builds; the scrape itself is read-only and RNG-free.
+    pub monitor: Option<MonitorConfig>,
 }
 
 impl Default for SimConfig {
@@ -186,6 +201,7 @@ impl Default for SimConfig {
             data: None,
             isolation: None,
             obs: false,
+            monitor: None,
         }
     }
 }
@@ -250,6 +266,18 @@ impl SimConfig {
                 }
             }
         }
+        if let Some(m) = &self.monitor {
+            if m.interval_ms == 0 {
+                return Err(ConfigError::ZeroScrapeInterval);
+            }
+            // parse user-supplied rules now so build() can unwrap later;
+            // builtin variants are covered by unit tests in obs::monitor
+            if let RulesSource::Inline(text) = &m.rules {
+                if let Err(e) = crate::obs::rules::RuleSet::parse(text) {
+                    return Err(ConfigError::BadMonitorRules(e));
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -297,6 +325,11 @@ impl SimConfigBuilder {
 
     pub fn obs(mut self, on: bool) -> Self {
         self.cfg.obs = on;
+        self
+    }
+
+    pub fn monitor(mut self, monitor: Option<MonitorConfig>) -> Self {
+        self.cfg.monitor = monitor;
         self
     }
 
@@ -381,6 +414,34 @@ mod tests {
             cfg.isolation.unwrap().policy,
             crate::k8s::isolation::IsolationPolicy::Dedicated
         );
+    }
+
+    #[test]
+    fn monitor_misconfigurations_are_named_errors() {
+        let zero = MonitorConfig {
+            interval_ms: 0,
+            ..Default::default()
+        };
+        assert!(matches!(
+            SimConfig::builder().monitor(Some(zero)).build(),
+            Err(ConfigError::ZeroScrapeInterval)
+        ));
+        let bad = MonitorConfig {
+            rules: RulesSource::Inline("alert Broken if".into()),
+            ..Default::default()
+        };
+        let err = SimConfig::builder().monitor(Some(bad)).build().unwrap_err();
+        match &err {
+            ConfigError::BadMonitorRules(msg) => {
+                assert!(msg.contains("line 1"), "parser error is line-numbered: {msg}")
+            }
+            other => panic!("expected BadMonitorRules, got {other:?}"),
+        }
+        // builtin rules always validate
+        SimConfig::builder()
+            .monitor(Some(MonitorConfig::default()))
+            .build()
+            .unwrap();
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
 use crate::k8s::resources::Resources;
 use crate::k8s::scheduler::{SchedulePass, Scheduler};
 use crate::metrics::{CounterId, GaugeId, Registry};
+use crate::obs::monitor::MonitorState;
 use crate::obs::FlightRecorder;
 use crate::report::Trace;
 use crate::sim::{EventQueue, SimTime};
@@ -86,6 +87,11 @@ pub enum Ev {
     /// blast radius is computed and remediated (RNG-free; placed on the
     /// calendar at build time).
     ChaosTakeover { tenant: u16 },
+    /// Monitoring scrape: sample the registry into the monitor's ring
+    /// buffers and evaluate recording/alert rules. RNG-free and
+    /// self-rescheduling at a fixed interval; only exists with
+    /// `--monitor` attached.
+    MonitorTick,
 }
 
 /// Where a pod is in the stage-in -> compute -> stage-out cycle of its
@@ -171,6 +177,11 @@ pub struct Kernel {
     /// never schedules events, so the simulated trace is bit-identical
     /// either way.
     pub obs: Option<FlightRecorder>,
+    /// Monitoring stack (`--monitor`): deterministic scrape loop with
+    /// recording rules and SLO burn-rate alerting. `None` — the default —
+    /// schedules no ticks; scrapes only read kernel state, so the
+    /// simulated trace is unchanged apart from the tick events.
+    pub monitor: Option<MonitorState>,
     pub running_tasks: i64,
     /// Incremental count of pods in the Pending phase (perf: a full scan
     /// here was 70% of the 16k job-model sim, see EXPERIMENTS.md §Perf).

@@ -85,6 +85,7 @@ use crate::k8s::node::paper_cluster;
 use crate::k8s::pod::PodPhase;
 use crate::k8s::scheduler::{SchedulePass, Scheduler};
 use crate::metrics::{GaugeId, Registry};
+use crate::obs::monitor::MonitorState;
 use crate::obs::{critpath, Actor, FlightRecorder, ObsReport, PodRow};
 use crate::report::{SimResult, Trace};
 use crate::sim::{EventQueue, SimTime};
@@ -242,6 +243,22 @@ impl World {
                         .schedule_in(SimTime::from_millis(poll), Ev::AutoscaleTick);
                 }
             }
+            Ev::MonitorTick => {
+                // take/put-back so the scrape can borrow the whole kernel
+                // read-only; it draws no RNG and mutates nothing but its
+                // own ring buffers and alert lifecycles
+                if let Some(mut m) = self.k.monitor.take() {
+                    let now = self.k.now();
+                    m.scrape(now, &self.k);
+                    let interval = m.interval_ms();
+                    self.k.monitor = Some(m);
+                    if !self.k.engine.is_done() {
+                        self.k
+                            .q
+                            .schedule_in(SimTime::from_millis(interval), Ev::MonitorTick);
+                    }
+                }
+            }
         }
     }
 }
@@ -331,6 +348,7 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
         c,
         trace: Trace::new(),
         obs: cfg.obs.then(|| FlightRecorder::new(n_tasks)),
+        monitor: None,
         running_tasks: 0,
         pending_count: 0,
         completed_by_type: vec![0; n_types],
@@ -389,6 +407,16 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
     for (tenant, at_ms) in takeovers {
         k.q
             .schedule_at(SimTime::from_millis(at_ms), Ev::ChaosTakeover { tenant });
+    }
+    // monitor scrape loop: same RNG-free fixed-event pattern as the
+    // takeovers, armed after every injector for the same reason
+    if let Some(mc) = k.cfg.monitor.clone() {
+        let m = MonitorState::from_config(&mc, k.data.is_some(), k.isolation.is_some())
+            .expect("monitor rules validated by SimConfig::validate");
+        let interval = m.interval_ms();
+        k.monitor = Some(m);
+        k.q
+            .schedule_in(SimTime::from_millis(interval), Ev::MonitorTick);
     }
     (World { k, strat }, initial_ready)
 }
@@ -467,6 +495,10 @@ fn summarize(
         }
     });
 
+    // harvest the monitor before the registry moves into the result:
+    // finalize open alert episodes and freeze the report
+    let monitor = k.monitor.take().map(|m| m.into_report(makespan));
+
     let t_end = makespan.as_secs_f64();
     let avg_running = k
         .metrics
@@ -498,6 +530,7 @@ fn summarize(
             .unwrap_or_default(),
         chaos: k.chaos_stats.report(),
         obs,
+        monitor,
         trace: k.trace,
         metrics: k.metrics,
     }
@@ -598,6 +631,11 @@ pub fn run_fleet(
             SimTime::from_millis(s.arrival_ms),
             Ev::InstanceArrive { inst: i as u32 },
         );
+    }
+    // per-tenant SLO rules (slowdown age + burn-rate budgets) only make
+    // sense on fleet runs; tell the monitor who the tenants are
+    if let Some(m) = world.k.monitor.as_mut() {
+        m.set_fleet(plan.instances.iter().map(|s| s.tenant).collect());
     }
     if world.strat.state_ref().pools.scaler.is_some() {
         world

@@ -191,6 +191,8 @@ pub fn run(model: ExecModel, mut sim_cfg: SimConfig, cfg: &FleetConfig) -> Fleet
                 chaos: crate::chaos::ChaosReport::default(),
                 data: crate::data::DataReport::default(),
                 isolation: crate::k8s::isolation::IsolationReport::default(),
+                obs: None,
+                monitor: None,
             },
             outcomes: Vec::new(),
             metas,

@@ -55,6 +55,12 @@ pub struct TenantRow {
     pub crit_compute_s: f64,
     pub crit_stage_out_s: f64,
     pub crit_recovery_s: f64,
+    /// Monitoring-stack SLO columns (`--monitor` runs only; zero
+    /// otherwise): firing episodes of this tenant's scoped alerts
+    /// (slowdown age + burn-rate budget), and total seconds those alerts
+    /// spent firing.
+    pub alerts_fired: u64,
+    pub alert_firing_s: f64,
 }
 
 /// Fleet-wide headline numbers (one saturation-sweep point).
@@ -124,6 +130,7 @@ pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
     let chaos = &res.sim.chaos;
     let data = &res.sim.data;
     let iso = &res.sim.isolation;
+    let mon = res.sim.monitor.as_ref();
     let crit = tenant_crit_means(res);
     tenant_summaries(res)
         .into_iter()
@@ -157,6 +164,9 @@ pub fn per_tenant(res: &FleetResult) -> Vec<TenantRow> {
                 crit_compute_s: crit[t][4],
                 crit_stage_out_s: crit[t][5],
                 crit_recovery_s: crit[t][6],
+                alerts_fired: mon.map(|m| m.tenant_fired(t as u16)).unwrap_or(0),
+                alert_firing_s: mon.map(|m| m.tenant_firing_ms(t as u16)).unwrap_or(0) as f64
+                    / 1000.0,
             }
         })
         .collect()
@@ -192,6 +202,7 @@ pub fn aggregate(res: &FleetResult) -> FleetSummary {
 /// Flight-recorder runs gain seven `crit-*` attribution columns.
 pub fn render_table(res: &FleetResult) -> String {
     let with_crit = res.sim.obs.is_some();
+    let with_mon = res.sim.monitor.is_some();
     let mut out = String::from(
         "tenant  instances  qdelay-mean-s  makespan-mean-s  \
          slowdown-mean  slowdown-p50  slowdown-p95  slowdown-p99  \
@@ -202,6 +213,9 @@ pub fn render_table(res: &FleetResult) -> String {
             "  crit-queue-s  crit-sched-s  crit-podstart-s  \
              crit-stagein-s  crit-compute-s  crit-stageout-s  crit-recovery-s",
         );
+    }
+    if with_mon {
+        out.push_str("  alerts-fired  alert-firing-s");
     }
     out.push('\n');
     for r in per_tenant(res) {
@@ -234,6 +248,12 @@ pub fn render_table(res: &FleetResult) -> String {
                 r.crit_recovery_s,
             ));
         }
+        if with_mon {
+            out.push_str(&format!(
+                "  {:>12}  {:>14.1}",
+                r.alerts_fired, r.alert_firing_s,
+            ));
+        }
         out.push('\n');
     }
     out
@@ -243,6 +263,7 @@ pub fn render_table(res: &FleetResult) -> String {
 pub fn to_json(res: &FleetResult) -> Json {
     let agg = aggregate(res);
     let with_crit = res.sim.obs.is_some();
+    let with_mon = res.sim.monitor.is_some();
     let tenants: Vec<Json> = per_tenant(res)
         .into_iter()
         .map(|r| {
@@ -273,6 +294,12 @@ pub fn to_json(res: &FleetResult) -> Json {
                     ("crit_recovery_s", r.crit_recovery_s.into()),
                 ]);
             }
+            if with_mon {
+                fields.extend([
+                    ("alerts_fired", r.alerts_fired.into()),
+                    ("alert_firing_s", r.alert_firing_s.into()),
+                ]);
+            }
             Json::obj(fields)
         })
         .collect();
@@ -289,6 +316,13 @@ pub fn to_json(res: &FleetResult) -> Json {
         ("chaos", res.sim.chaos.to_json()),
         ("data", res.sim.data.to_json()),
         ("isolation", res.sim.isolation.to_json()),
+        (
+            "monitor",
+            match &res.sim.monitor {
+                Some(m) => m.to_json(),
+                None => Json::Null,
+            },
+        ),
         ("tenants", Json::Arr(tenants)),
     ])
 }
@@ -318,6 +352,7 @@ mod tests {
             data: crate::data::DataReport::default(),
             isolation: crate::k8s::isolation::IsolationReport::default(),
             obs: None,
+            monitor: None,
         };
         let outcomes = vec![
             InstanceOutcome {
@@ -460,6 +495,42 @@ mod tests {
         assert!((rows[0].crit_compute_s - 4.0).abs() < 1e-9);
         assert_eq!(rows[1].crit_queue_s, 0.0);
         assert!(to_json(&r).to_string().contains("crit_compute_s"));
+    }
+
+    #[test]
+    fn alert_columns_appear_only_on_monitor_runs() {
+        let mut r = fake_result();
+        assert!(!render_table(&r).contains("alerts-fired"));
+        assert!(!to_json(&r).to_string().contains("alerts_fired"));
+        // attach a monitor report with one tenant-1-scoped alert that
+        // fired twice for 30 s total
+        r.sim.monitor = Some(crate::obs::monitor::MonitorReport {
+            interval_ms: 30_000,
+            ticks: 7,
+            makespan_ms: 200_000,
+            alerts: vec![crate::obs::monitor::AlertReport {
+                name: "TenantSlowdown::1".into(),
+                kind: "threshold",
+                severity: "page".into(),
+                tenant: Some(1),
+                expr: "tenant_active_age_s::1 > 1800".into(),
+                fired: 2,
+                firing_ms: 30_000,
+                final_state: crate::obs::alerts::AlertState::Inactive,
+                episodes: Vec::new(),
+            }],
+            records: Vec::new(),
+        });
+        let t = render_table(&r);
+        assert!(t.contains("alerts-fired"));
+        assert!(t.contains("alert-firing-s"));
+        let rows = per_tenant(&r);
+        assert_eq!(rows[0].alerts_fired, 0, "tenant-0 untouched");
+        assert_eq!(rows[1].alerts_fired, 2);
+        assert!((rows[1].alert_firing_s - 30.0).abs() < 1e-9);
+        let j = to_json(&r).to_string();
+        assert!(j.contains("\"monitor\""), "monitor block exported");
+        assert!(j.contains("alert_firing_s"));
     }
 
     #[test]

@@ -33,6 +33,13 @@
 //!   control-plane event tracing with critical-path makespan attribution,
 //!   a full Chrome/Perfetto export, and a Prometheus text exposition
 //!   (`--obs trace:out.json,prom:out.txt,crit:on`);
+//! * the **in-sim monitoring stack** ([`obs::monitor`], [`obs::rules`],
+//!   [`obs::alerts`]): a deterministic fixed-interval scrape loop
+//!   evaluating PromQL-lite recording rules and alert rules — threshold
+//!   alerts with `for:` holds, multi-window SLO burn-rate alerts, the
+//!   full inactive→pending→firing→resolved lifecycle — plus
+//!   `ewma`/`holt_winters` forecasters queryable from kernel hooks
+//!   (`--monitor interval:30,rules:builtin,alerts:alerts.json`);
 //! * the **Montage workflow generator** ([`workflow`]);
 //! * a **PJRT runtime** ([`runtime`]) executing the real Montage numerics
 //!   (JAX + Pallas, AOT-compiled to HLO) inside worker pods ([`compute`],

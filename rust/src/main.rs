@@ -24,6 +24,7 @@ fn usage() -> ! {
            --data SPEC                              storage/transfer modeling (see below)\n\
            --isolation SPEC                         tenant isolation (see below)\n\
            --obs SPEC                               flight recorder (see below)\n\
+           --monitor SPEC                           in-sim monitoring stack (see below)\n\
            --json                                   print result as JSON\n\
            --html FILE                              write an HTML report\n\
          obs SPEC (run/serve/trace): flight recorder, comma-separated\n\
@@ -37,6 +38,20 @@ fn usage() -> ! {
            bare --obs enables recording only (attribution still lands in\n\
            --json/--html); recording never perturbs the simulation\n\
            e.g. --obs trace:out.json,prom:metrics.txt,crit:on\n\
+         monitor SPEC (run/serve/trace): deterministic scrape loop with\n\
+           recording rules and SLO burn-rate alerting, comma-separated\n\
+           interval:S   scrape interval in sim seconds (default 30)\n\
+           rules:X      builtin (default) or a rule file: record / alert\n\
+                        (threshold + for: duration) / burnrate statements\n\
+                        over rate(), increase(), avg/max/min_over_time(),\n\
+                        changes(), ewma(), holt_winters()\n\
+           alerts:FILE  write the alert report (lifecycles, episodes,\n\
+                        final recording-rule values) as JSON\n\
+           bare --monitor = interval:30,rules:builtin; scrapes only read\n\
+           kernel state (RNG-free fixed ticks) so the simulated trace is\n\
+           unchanged; alert states also land in --json/--html and in the\n\
+           --obs prom exposition as ALERTS{{...}} series\n\
+           e.g. --monitor interval:15,rules:builtin,alerts:alerts.json\n\
          chaos SPEC (run/serve/trace): comma-separated kind:value\n\
            spot:R       spot reclaims per node per hour (2 min warning)\n\
            crash:R      node crashes per node per hour (no warning)\n\
@@ -76,6 +91,7 @@ fn usage() -> ! {
            --chaos SPEC        failure injection during the fleet run\n\
            --isolation SPEC    tenant isolation during the fleet run\n\
            --obs SPEC          flight recorder; adds per-tenant crit-* columns\n\
+           --monitor SPEC      monitoring stack; adds per-tenant alert columns\n\
            --json              print the fleet report as JSON\n\
          validation: flag combinations are checked up front and exit with a\n\
            named config error (e.g. zero nodes, empty/duplicate pool set,\n\
@@ -94,7 +110,8 @@ fn parse_sim(args: &Args, max_pending: bool) -> driver::SimConfig {
         .chaos(parse_chaos(args))
         .data(parse_data(args))
         .isolation(parse_isolation(args))
-        .obs(args.has("obs"));
+        .obs(args.has("obs"))
+        .monitor(parse_monitor(args));
     if max_pending && args.has("max-pending") {
         b = b.max_pending_pods(Some(args.get_usize("max-pending", 64)));
     }
@@ -165,6 +182,54 @@ fn parse_obs(args: &Args) -> Option<hyperflow_k8s::obs::ObsSpec> {
     })
 }
 
+/// Shared `--monitor` spec parsing for `run` / `serve` / `trace`. A bare
+/// `--monitor` takes every default (30 s scrapes, builtin rules). A
+/// `rules:FILE` entry is loaded here — the library stays
+/// filesystem-free and validates the text at config-build time.
+fn parse_monitor(args: &Args) -> Option<hyperflow_k8s::obs::monitor::MonitorConfig> {
+    args.get("monitor").map(|spec| {
+        let (mut cfg, rules_path) =
+            hyperflow_k8s::obs::monitor::MonitorConfig::parse_spec(spec).unwrap_or_else(|e| {
+                eprintln!("--monitor: {e}");
+                usage()
+            });
+        if let Some(path) = rules_path {
+            let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+                eprintln!("--monitor: cannot read rules file '{path}': {e}");
+                usage()
+            });
+            cfg.rules = hyperflow_k8s::obs::monitor::RulesSource::Inline(text);
+        }
+        cfg
+    })
+}
+
+/// End-of-run monitoring output: the alert summary and timeline on
+/// stderr, plus the `alerts:FILE` JSON artifact when requested.
+fn write_monitor_artifacts(res: &hyperflow_k8s::report::SimResult, args: &Args) {
+    let Some(mon) = &res.monitor else { return };
+    eprintln!(
+        "monitor: {} scrapes @ {:.0}s   alerts fired: {}   time firing: {:.0}s",
+        mon.ticks,
+        mon.interval_ms as f64 / 1000.0,
+        mon.fired_total(),
+        mon.firing_ms_total() as f64 / 1000.0,
+    );
+    for (ms, line) in mon.timeline() {
+        eprintln!("  [{:>8.1}s] {line}", ms as f64 / 1000.0);
+    }
+    // the alerts path rides on the spec string; re-parsing it here is
+    // cheap and keeps SimConfig the single owner of the monitor config
+    let alerts_out = args
+        .get("monitor")
+        .and_then(|spec| hyperflow_k8s::obs::monitor::MonitorConfig::parse_spec(spec).ok())
+        .and_then(|(cfg, _)| cfg.alerts_out);
+    if let Some(path) = alerts_out {
+        std::fs::write(&path, format!("{}\n", mon.to_json())).expect("write alerts json");
+        eprintln!("wrote {path}");
+    }
+}
+
 /// Write the `--obs` artifacts for a finished run: extended Chrome trace,
 /// Prometheus text exposition, and (with `crit:on`) the attribution
 /// report on stderr.
@@ -178,8 +243,11 @@ fn write_obs_artifacts(res: &hyperflow_k8s::report::SimResult, spec: &hyperflow_
         eprintln!("wrote {path}");
     }
     if let Some(path) = &spec.prom_out {
-        std::fs::write(path, hyperflow_k8s::obs::prom::render(&res.metrics))
-            .expect("write prom exposition");
+        std::fs::write(
+            path,
+            hyperflow_k8s::obs::prom::render_with_alerts(&res.metrics, res.monitor.as_ref()),
+        )
+        .expect("write prom exposition");
         eprintln!("wrote {path}");
     }
     if spec.crit {
@@ -240,6 +308,7 @@ fn cmd_trace(args: &Args) {
     if let Some(spec) = parse_obs(args) {
         write_obs_artifacts(&res, &spec);
     }
+    write_monitor_artifacts(&res, args);
 }
 
 fn montage_cfg(args: &Args) -> MontageConfig {
@@ -285,6 +354,7 @@ fn cmd_run(args: &Args) {
     if let Some(spec) = parse_obs(args) {
         write_obs_artifacts(&res, &spec);
     }
+    write_monitor_artifacts(&res, args);
     if args.has("json") {
         println!("{}", res.to_json());
     } else {
@@ -340,6 +410,14 @@ fn cmd_run(args: &Args) {
                 res.isolation.blast_nodes,
                 res.isolation.blast_pods,
                 res.isolation.blast_innocent_pods,
+            );
+        }
+        if let Some(mon) = &res.monitor {
+            println!(
+                "monitor: {} scrapes   alerts fired: {}   time firing: {:.0}s",
+                mon.ticks,
+                mon.fired_total(),
+                mon.firing_ms_total() as f64 / 1000.0,
             );
         }
         println!(
@@ -459,6 +537,7 @@ fn cmd_serve(args: &Args) {
     if let Some(spec) = parse_obs(args) {
         write_obs_artifacts(&res.sim, &spec);
     }
+    write_monitor_artifacts(&res.sim, args);
     if args.has("json") {
         println!("{}", fleet::report::to_json(&res));
     } else {

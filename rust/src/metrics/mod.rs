@@ -242,6 +242,20 @@ mod tests {
     }
 
     #[test]
+    fn series_time_average_degenerate_windows_are_zero() {
+        // empty series and collapsed/inverted/NaN windows: a
+        // zero-makespan run must report 0.0 utilization, not NaN
+        let empty = Series::default();
+        assert_eq!(empty.time_average(0.0, 10.0), 0.0);
+        let mut s = Series::default();
+        s.record(0.0, 5.0);
+        assert_eq!(s.time_average(0.0, 0.0), 0.0);
+        assert_eq!(s.time_average(10.0, 5.0), 0.0);
+        let nan = s.time_average(0.0, f64::NAN);
+        assert_eq!(nan, 0.0, "NaN window must not poison the average");
+    }
+
+    #[test]
     fn series_resample_uniform() {
         let mut s = Series::default();
         s.record(0.0, 1.0);

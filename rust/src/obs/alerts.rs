@@ -1,0 +1,265 @@
+//! Alert lifecycle: the Prometheus-style inactive → pending → firing →
+//! resolved state machine, advanced once per scrape tick.
+//!
+//! Semantics pinned by the fixture tests below:
+//!
+//! - an alert whose condition holds enters *pending* and starts its
+//!   `for:` clock at that tick's timestamp;
+//! - it promotes to *firing* at the first tick where the condition has
+//!   held for at least the `for:` duration (a `for: 0s` alert fires the
+//!   same tick it activates);
+//! - a pending alert whose condition clears never fired — the episode
+//!   is discarded, exactly like Prometheus;
+//! - a firing alert whose condition clears resolves at that tick, and
+//!   the completed episode (pending/firing/resolved timestamps plus the
+//!   peak observed value) is kept for the report;
+//! - an episode still firing when the run ends is kept open
+//!   (`resolved_ms: None`) and its firing time is charged up to the
+//!   makespan.
+
+/// Lifecycle state of one alert rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    Inactive,
+    Pending,
+    Firing,
+}
+
+impl AlertState {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertState::Inactive => "inactive",
+            AlertState::Pending => "pending",
+            AlertState::Firing => "firing",
+        }
+    }
+}
+
+/// One pending→firing(→resolved) arc of an alert. Timestamps are sim
+/// milliseconds; `firing_ms` is `None` only transiently (while the
+/// episode is still pending) — every episode in
+/// [`AlertRuntime::episodes`] has fired.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Episode {
+    pub pending_ms: u64,
+    pub firing_ms: Option<u64>,
+    pub resolved_ms: Option<u64>,
+    /// Largest rule value observed while the episode was active.
+    pub peak: f64,
+}
+
+impl Episode {
+    /// Milliseconds spent firing, charging open episodes to `end_ms`.
+    pub fn firing_span_ms(&self, end_ms: u64) -> u64 {
+        match self.firing_ms {
+            None => 0,
+            Some(f) => self.resolved_ms.unwrap_or(end_ms).saturating_sub(f),
+        }
+    }
+}
+
+/// Per-alert lifecycle state, fed one `(timestamp, condition, value)`
+/// observation per scrape tick.
+#[derive(Debug, Default)]
+pub struct AlertRuntime {
+    state_: Option<AlertState>,
+    pending_since: u64,
+    open: Option<Episode>,
+    /// Completed (fired) episodes, oldest first.
+    pub episodes: Vec<Episode>,
+}
+
+impl AlertRuntime {
+    pub fn new() -> Self {
+        AlertRuntime::default()
+    }
+
+    pub fn state(&self) -> AlertState {
+        self.state_.unwrap_or(AlertState::Inactive)
+    }
+
+    /// Advance one tick. Returns `Some((from, to))` on a state
+    /// transition.
+    pub fn step(
+        &mut self,
+        now_ms: u64,
+        active: bool,
+        value: f64,
+        for_ms: u64,
+    ) -> Option<(AlertState, AlertState)> {
+        let from = self.state();
+        let value = if value.is_finite() { value } else { 0.0 };
+        match (from, active) {
+            (AlertState::Inactive, true) => {
+                self.pending_since = now_ms;
+                let mut ep = Episode {
+                    pending_ms: now_ms,
+                    firing_ms: None,
+                    resolved_ms: None,
+                    peak: value,
+                };
+                if for_ms == 0 {
+                    ep.firing_ms = Some(now_ms);
+                    self.state_ = Some(AlertState::Firing);
+                } else {
+                    self.state_ = Some(AlertState::Pending);
+                }
+                self.open = Some(ep);
+            }
+            (AlertState::Pending, true) => {
+                if let Some(ep) = self.open.as_mut() {
+                    ep.peak = ep.peak.max(value);
+                }
+                if now_ms.saturating_sub(self.pending_since) >= for_ms {
+                    if let Some(ep) = self.open.as_mut() {
+                        ep.firing_ms = Some(now_ms);
+                    }
+                    self.state_ = Some(AlertState::Firing);
+                }
+            }
+            (AlertState::Pending, false) => {
+                // never fired: the episode evaporates (Prometheus keeps
+                // no record of pending-only activations either)
+                self.open = None;
+                self.state_ = Some(AlertState::Inactive);
+            }
+            (AlertState::Firing, true) => {
+                if let Some(ep) = self.open.as_mut() {
+                    ep.peak = ep.peak.max(value);
+                }
+            }
+            (AlertState::Firing, false) => {
+                if let Some(mut ep) = self.open.take() {
+                    ep.resolved_ms = Some(now_ms);
+                    self.episodes.push(ep);
+                }
+                self.state_ = Some(AlertState::Inactive);
+            }
+            (AlertState::Inactive, false) => {}
+        }
+        let to = self.state();
+        if from != to {
+            Some((from, to))
+        } else {
+            None
+        }
+    }
+
+    /// End of run: keep a still-firing episode (open-ended), drop a
+    /// still-pending one.
+    pub fn finalize(&mut self) {
+        if let Some(ep) = self.open.take() {
+            if ep.firing_ms.is_some() {
+                self.episodes.push(ep);
+            }
+        }
+    }
+
+    /// Number of distinct firing episodes.
+    pub fn fired(&self) -> u64 {
+        self.episodes.len() as u64
+    }
+
+    /// Total firing milliseconds, charging open episodes to `end_ms`.
+    pub fn firing_ms(&self, end_ms: u64) -> u64 {
+        self.episodes.iter().map(|e| e.firing_span_ms(end_ms)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The pinned lifecycle fixture from the issue: a synthetic series
+    /// walks one alert through every transition at exact timestamps.
+    #[test]
+    fn lifecycle_fixture_pins_exact_timestamps() {
+        let mut rt = AlertRuntime::new();
+        let for_ms = 60_000;
+        // t=30s: condition false → stays inactive
+        assert_eq!(rt.step(30_000, false, 0.0, for_ms), None);
+        assert_eq!(rt.state(), AlertState::Inactive);
+        // t=60s: condition true → pending
+        assert_eq!(
+            rt.step(60_000, true, 5.0, for_ms),
+            Some((AlertState::Inactive, AlertState::Pending))
+        );
+        // t=90s: held 30s < 60s → still pending, peak tracks 7.0
+        assert_eq!(rt.step(90_000, true, 7.0, for_ms), None);
+        assert_eq!(rt.state(), AlertState::Pending);
+        // t=120s: held 60s ≥ for → firing
+        assert_eq!(
+            rt.step(120_000, true, 6.0, for_ms),
+            Some((AlertState::Pending, AlertState::Firing))
+        );
+        // t=150s: cleared → resolved
+        assert_eq!(
+            rt.step(150_000, false, 0.0, for_ms),
+            Some((AlertState::Firing, AlertState::Inactive))
+        );
+        rt.finalize();
+        assert_eq!(
+            rt.episodes,
+            vec![Episode {
+                pending_ms: 60_000,
+                firing_ms: Some(120_000),
+                resolved_ms: Some(150_000),
+                peak: 7.0,
+            }]
+        );
+        assert_eq!(rt.fired(), 1);
+        assert_eq!(rt.firing_ms(1_000_000), 30_000);
+    }
+
+    #[test]
+    fn pending_that_clears_never_fired() {
+        let mut rt = AlertRuntime::new();
+        rt.step(10_000, true, 3.0, 60_000);
+        assert_eq!(rt.state(), AlertState::Pending);
+        assert_eq!(
+            rt.step(20_000, false, 0.0, 60_000),
+            Some((AlertState::Pending, AlertState::Inactive))
+        );
+        rt.finalize();
+        assert!(rt.episodes.is_empty(), "pending-only episodes are discarded");
+        assert_eq!(rt.fired(), 0);
+    }
+
+    #[test]
+    fn for_zero_fires_immediately() {
+        let mut rt = AlertRuntime::new();
+        assert_eq!(
+            rt.step(40_000, true, 9.0, 0),
+            Some((AlertState::Inactive, AlertState::Firing))
+        );
+        assert_eq!(rt.episodes.len(), 0, "still open");
+        rt.finalize();
+        assert_eq!(rt.episodes[0].pending_ms, 40_000);
+        assert_eq!(rt.episodes[0].firing_ms, Some(40_000));
+        assert_eq!(rt.episodes[0].resolved_ms, None, "open at end of run");
+        // open episode charged to the makespan
+        assert_eq!(rt.firing_ms(100_000), 60_000);
+    }
+
+    #[test]
+    fn refiring_opens_a_second_episode() {
+        let mut rt = AlertRuntime::new();
+        rt.step(0, true, 1.0, 0);
+        rt.step(10_000, false, 0.0, 0);
+        rt.step(20_000, true, 2.0, 0);
+        rt.step(30_000, false, 0.0, 0);
+        rt.finalize();
+        assert_eq!(rt.fired(), 2);
+        assert_eq!(rt.firing_ms(30_000), 20_000);
+        assert_eq!(rt.episodes[1].peak, 2.0);
+    }
+
+    #[test]
+    fn non_finite_values_cannot_poison_the_peak() {
+        let mut rt = AlertRuntime::new();
+        rt.step(0, true, f64::NAN, 0);
+        rt.step(10_000, true, f64::INFINITY, 0);
+        rt.step(20_000, false, 0.0, 0);
+        assert_eq!(rt.episodes[0].peak, 0.0);
+    }
+}

@@ -24,7 +24,11 @@
 //!   recovery-wasted seconds, telescoping exactly (integer milliseconds)
 //!   so the phases always sum to the makespan;
 //! * a Prometheus/OpenMetrics text exposition of the metrics registry
-//!   ([`prom`]).
+//!   ([`prom`]);
+//! * an active monitoring stack ([`monitor`]): a deterministic
+//!   fixed-interval scrape loop feeding PromQL-lite recording rules
+//!   ([`rules`]) and Prometheus-style alert lifecycles ([`alerts`]),
+//!   including multi-window SLO burn-rate alerts.
 //!
 //! **Determinism contract:** recording draws no random numbers and
 //! schedules no calendar events — it only *observes* state the kernel
@@ -32,8 +36,11 @@
 //! bit-identical to a run without it; only the exported artifacts differ
 //! (`tests/obs.rs` pins this).
 
+pub mod alerts;
 pub mod critpath;
+pub mod monitor;
 pub mod prom;
+pub mod rules;
 
 use crate::k8s::pod::PodId;
 use crate::sim::SimTime;

@@ -1,0 +1,669 @@
+//! In-sim monitoring stack: deterministic scrape loop, recording rules,
+//! and SLO burn-rate alerting.
+//!
+//! A [`MonitorState`] rides on the exec kernel as an optional attachment
+//! (like chaos / data / fleet): when `--monitor` is off the slot is
+//! `None`, no `MonitorTick` calendar events exist, and every golden
+//! trace is bit-identical to a build without this module. When on, a
+//! fixed-interval RNG-free `Ev::MonitorTick` (scheduled last in
+//! `build()`, the same untimed-event pattern as chaos takeovers, so
+//! injector fork indices never shift) drives [`MonitorState::scrape`]:
+//!
+//! 1. sample every registry counter and gauge — plus synthesized series
+//!    for backlog, task completions, data-plane cache traffic, quota
+//!    throttles, and per-tenant instance age — into the fixed-interval
+//!    ring buffers of [`rules::SampleStore`];
+//! 2. advance the `ewma()` / `holt_winters()` smoother state;
+//! 3. evaluate recording rules in file order, pushing each result back
+//!    into the store (later rules and kernel-side consumers can read
+//!    them — [`MonitorState::query`] is the forecaster interface the
+//!    predictive autoscaler reads, ROADMAP item 5);
+//! 4. evaluate threshold alerts and multi-window burn-rate alerts and
+//!    advance each alert's inactive→pending→firing→resolved lifecycle.
+//!
+//! Scraping only *reads* the kernel: it draws no RNG, mutates no
+//! simulation state, and schedules nothing but its own next tick — the
+//! monitor-on fingerprint differs from monitor-off only by the tick
+//! events themselves.
+
+use crate::exec::kernel::Kernel;
+use crate::sim::SimTime;
+use crate::util::json::Json;
+
+use super::alerts::{AlertRuntime, AlertState, Episode};
+use super::rules::{eval, BurnRateRule, RuleSet, SampleStore};
+
+/// Where the rule text comes from: the built-in set (assembled to match
+/// the attached subsystems) or an inline ruleset (CLI `rules:FILE`,
+/// loaded by the caller).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RulesSource {
+    Builtin,
+    Inline(String),
+}
+
+/// Monitor attachment config, carried on `SimConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorConfig {
+    /// Scrape interval in sim milliseconds.
+    pub interval_ms: u64,
+    pub rules: RulesSource,
+    /// `alerts:FILE` output path (CLI convenience; the library report is
+    /// always on `SimResult::monitor`).
+    pub alerts_out: Option<String>,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig {
+            interval_ms: 30_000,
+            rules: RulesSource::Builtin,
+            alerts_out: None,
+        }
+    }
+}
+
+impl MonitorConfig {
+    /// Parse the `--monitor interval:S,rules:builtin|FILE,alerts:FILE`
+    /// CLI spec. `rules:` paths are returned verbatim — the caller loads
+    /// the file into [`RulesSource::Inline`] (the library stays
+    /// filesystem-free). A bare `--monitor` ("true") takes every
+    /// default.
+    pub fn parse_spec(spec: &str) -> Result<(MonitorConfig, Option<String>), String> {
+        let mut cfg = MonitorConfig::default();
+        let mut rules_path = None;
+        if spec == "true" || spec.trim().is_empty() {
+            return Ok((cfg, rules_path));
+        }
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once(':') {
+                Some(("interval", v)) => {
+                    let secs: f64 = v
+                        .parse()
+                        .map_err(|_| format!("--monitor interval must be seconds, got '{v}'"))?;
+                    if !(secs > 0.0) {
+                        return Err(format!("--monitor interval must be > 0, got '{v}'"));
+                    }
+                    cfg.interval_ms = (secs * 1000.0).round() as u64;
+                }
+                Some(("rules", v)) if !v.is_empty() => {
+                    if v != "builtin" {
+                        rules_path = Some(v.to_string());
+                    }
+                }
+                Some(("alerts", path)) if !path.is_empty() => {
+                    cfg.alerts_out = Some(path.to_string());
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown --monitor entry '{part}' \
+                         (expected interval:<secs>, rules:builtin|<file>, alerts:<file>)"
+                    ));
+                }
+            }
+        }
+        Ok((cfg, rules_path))
+    }
+}
+
+// ---------------------------------------------------------------------
+// builtin rules
+// ---------------------------------------------------------------------
+
+/// Instance age (oldest unfinished admission) at which a tenant counts
+/// as slow for the per-tenant burn-rate budget.
+const TENANT_SLOW_AGE_S: f64 = 900.0;
+
+/// The built-in ruleset. Subsystem-specific alerts are only emitted when
+/// their subsystem is attached — a cache alert on a run with no data
+/// plane would fire on the 0/0 idle ratio forever.
+pub fn builtin_rules(data_on: bool, isolation_on: bool) -> String {
+    let mut t = String::from(
+        "# hyperflow builtin monitoring rules\n\
+         record backlog_avg = avg_over_time(backlog_total[120s])\n\
+         record backlog_ewma = ewma(backlog_total, 0.3)\n\
+         record backlog_forecast = holt_winters(backlog_total, 0.5, 0.1)\n\
+         record task_throughput = rate(tasks_completed[300s])\n\
+         record pod_failure_ratio = rate(pod_failures[300s]) / rate(pods_created[300s])\n\
+         alert BacklogSaturation if avg_over_time(backlog_total[120s]) > 16 for 120s severity page\n\
+         alert PodStartFailureRate if pod_failure_ratio > 0.05 for 300s severity ticket\n\
+         alert AutoscalerFlapping if changes(replicas_total[600s]) > 8 for 0s severity ticket\n\
+         burnrate TaskDisruptionBudget on tasks_lost_to_faults / tasks_completed \
+         slo 0.001 factor 10 fast 120s slow 600s severity page\n",
+    );
+    if data_on {
+        t.push_str(
+            "record cache_hit_ratio = rate(data_cache_hits[300s]) / \
+             (rate(data_cache_hits[300s]) + rate(data_cache_misses[300s]))\n\
+             alert CacheHitCollapse if rate(data_cache_misses[300s]) - \
+             3 * rate(data_cache_hits[300s]) > 0 for 300s severity ticket\n",
+        );
+    }
+    if isolation_on {
+        t.push_str(
+            "alert QuotaThrottleSurge if rate(quota_throttles_total[300s]) > 0.2 \
+             for 120s severity ticket\n",
+        );
+    }
+    t
+}
+
+/// Per-tenant builtin rules, appended once the fleet plan (and thus the
+/// tenant count) is known.
+pub fn builtin_tenant_rules(n_tenants: usize) -> String {
+    use std::fmt::Write;
+    let mut t = String::new();
+    for tn in 0..n_tenants {
+        let _ = writeln!(
+            t,
+            "record tenant_age_forecast::{tn} = holt_winters(tenant_active_age_s::{tn}, 0.5, 0.1)"
+        );
+        let _ = writeln!(
+            t,
+            "alert TenantSlowdown::{tn} if tenant_active_age_s::{tn} > 1800 \
+             for 300s severity page tenant {tn}"
+        );
+        let _ = writeln!(
+            t,
+            "burnrate TenantSlowdownBudget::{tn} on tenant_slow_seconds::{tn} / \
+             tenant_busy_seconds::{tn} slo 0.1 factor 3 fast 300s slow 1200s \
+             severity page tenant {tn}"
+        );
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// monitor state
+// ---------------------------------------------------------------------
+
+/// The live monitoring stack, held in `Kernel::monitor`.
+#[derive(Debug)]
+pub struct MonitorState {
+    interval_ms: u64,
+    builtin: bool,
+    rules: RuleSet,
+    store: SampleStore,
+    alert_rt: Vec<AlertRuntime>,
+    burn_rt: Vec<AlertRuntime>,
+    ticks: u64,
+    /// Instance → tenant map (fleet runs), for the per-tenant series.
+    instance_tenants: Vec<u16>,
+    n_tenants: usize,
+    tenant_slow_ms: Vec<u64>,
+    tenant_busy_ms: Vec<u64>,
+}
+
+impl MonitorState {
+    pub fn new(interval_ms: u64, rules: RuleSet, builtin: bool) -> Self {
+        let interval_s = interval_ms.max(1) as f64 / 1000.0;
+        let store = SampleStore::new(interval_s, rules.max_window_s());
+        let alert_rt = (0..rules.alerts.len()).map(|_| AlertRuntime::new()).collect();
+        let burn_rt = (0..rules.burns.len()).map(|_| AlertRuntime::new()).collect();
+        MonitorState {
+            interval_ms: interval_ms.max(1),
+            builtin,
+            rules,
+            store,
+            alert_rt,
+            burn_rt,
+            ticks: 0,
+            instance_tenants: Vec::new(),
+            n_tenants: 0,
+            tenant_slow_ms: Vec::new(),
+            tenant_busy_ms: Vec::new(),
+        }
+    }
+
+    /// Build from config; resolves the builtin ruleset against the
+    /// attached subsystems.
+    pub fn from_config(
+        cfg: &MonitorConfig,
+        data_on: bool,
+        isolation_on: bool,
+    ) -> Result<Self, String> {
+        let (text, builtin) = match &cfg.rules {
+            RulesSource::Builtin => (builtin_rules(data_on, isolation_on), true),
+            RulesSource::Inline(s) => (s.clone(), false),
+        };
+        let rules = RuleSet::parse(&text)?;
+        Ok(MonitorState::new(cfg.interval_ms, rules, builtin))
+    }
+
+    pub fn interval_ms(&self) -> u64 {
+        self.interval_ms
+    }
+
+    /// Fleet runs: install the instance→tenant map and (for the builtin
+    /// ruleset) the per-tenant rules. Must run before the first tick.
+    pub fn set_fleet(&mut self, instance_tenants: Vec<u16>) {
+        self.n_tenants = instance_tenants
+            .iter()
+            .map(|&t| t as usize + 1)
+            .max()
+            .unwrap_or(0);
+        self.instance_tenants = instance_tenants;
+        self.tenant_slow_ms = vec![0; self.n_tenants];
+        self.tenant_busy_ms = vec![0; self.n_tenants];
+        if self.builtin {
+            let text = builtin_tenant_rules(self.n_tenants);
+            self.rules
+                .parse_append(&text)
+                .expect("builtin tenant rules must parse");
+            while self.alert_rt.len() < self.rules.alerts.len() {
+                self.alert_rt.push(AlertRuntime::new());
+            }
+            while self.burn_rt.len() < self.rules.burns.len() {
+                self.burn_rt.push(AlertRuntime::new());
+            }
+            self.store.grow(self.rules.max_window_s());
+        }
+    }
+
+    /// Latest value of any scraped or recorded series — the kernel-side
+    /// query interface (e.g. `backlog_forecast` for a predictive
+    /// autoscaler).
+    pub fn query(&self, name: &str) -> Option<f64> {
+        self.store.last(name)
+    }
+
+    /// One scrape tick: sample, smooth, record, alert. Read-only on the
+    /// kernel.
+    pub fn scrape(&mut self, now: SimTime, k: &Kernel) {
+        self.ticks += 1;
+        let now_ms = now.as_millis();
+
+        // -- 1. raw samples, deterministic (sorted-name) order ----------
+        let counters: Vec<(String, u64)> = k
+            .metrics
+            .counters_sorted()
+            .map(|(n, v)| (n.to_string(), v))
+            .collect();
+        for (n, v) in counters {
+            self.store.push(&n, v as f64);
+        }
+        let gauge_names: Vec<String> = k.metrics.gauge_names().map(str::to_string).collect();
+        let mut queue_total = 0.0;
+        let mut replicas_total = 0.0;
+        for n in &gauge_names {
+            let v = k.metrics.gauge_value(n);
+            if n.starts_with("queue::") {
+                queue_total += v;
+            } else if n.starts_with("replicas::") {
+                replicas_total += v;
+            }
+            self.store.push(n, v);
+        }
+
+        // -- synthesized series ----------------------------------------
+        let done = (k.engine.dag().len() - k.engine.n_outstanding()) as f64;
+        self.store.push("tasks_completed", done);
+        let backlog = k.metrics.gauge_value("pending_pods") + queue_total;
+        self.store.push("backlog_total", backlog);
+        self.store.push("pool_queue_total", queue_total);
+        self.store.push("replicas_total", replicas_total);
+        if let Some(d) = &k.data {
+            self.store.push("data_cache_hits", d.stats.hits as f64);
+            self.store.push("data_cache_misses", d.stats.misses as f64);
+        }
+        if let Some(iso) = &k.isolation {
+            let throttles: u64 = iso.stats.quota_throttles_by_tenant.iter().sum();
+            self.store.push("quota_throttles_total", throttles as f64);
+        }
+        if let Some(fs) = &k.fleet {
+            self.store
+                .push("fleet_waiting_instances", fs.waiting.len() as f64);
+            self.store.push("fleet_inflight_instances", fs.in_flight as f64);
+            for tn in 0..self.n_tenants {
+                // oldest unfinished admitted instance of this tenant
+                let mut oldest: Option<u64> = None;
+                for (i, &it) in self.instance_tenants.iter().enumerate() {
+                    if it as usize != tn || fs.finished_at.get(i).copied().flatten().is_some() {
+                        continue;
+                    }
+                    if let Some(Some(adm)) = fs.admitted_at.get(i) {
+                        let a = adm.as_millis();
+                        oldest = Some(oldest.map_or(a, |o| o.min(a)));
+                    }
+                }
+                let age_s = oldest.map(|a| now_ms.saturating_sub(a) as f64 / 1000.0);
+                if age_s.is_some() {
+                    self.tenant_busy_ms[tn] += self.interval_ms;
+                    if age_s.unwrap_or(0.0) > TENANT_SLOW_AGE_S {
+                        self.tenant_slow_ms[tn] += self.interval_ms;
+                    }
+                }
+                self.store
+                    .push(&format!("tenant_active_age_s::{tn}"), age_s.unwrap_or(0.0));
+                self.store.push(
+                    &format!("tenant_busy_seconds::{tn}"),
+                    self.tenant_busy_ms[tn] as f64 / 1000.0,
+                );
+                self.store.push(
+                    &format!("tenant_slow_seconds::{tn}"),
+                    self.tenant_slow_ms[tn] as f64 / 1000.0,
+                );
+            }
+        }
+
+        // -- 2. smoothers advance once per tick ------------------------
+        for i in 0..self.rules.smoothers.len() {
+            let metric = self.rules.smoothers[i].metric().to_string();
+            let x = self.store.last(&metric).unwrap_or(0.0);
+            self.rules.smoothers[i].update(x);
+        }
+
+        // -- 3. recording rules, in file order -------------------------
+        for i in 0..self.rules.records.len() {
+            let v = eval(&self.rules.records[i].expr, &self.store, &self.rules.smoothers);
+            let name = self.rules.records[i].name.clone();
+            self.store.push(&name, v);
+        }
+
+        // -- 4. alerts -------------------------------------------------
+        for (i, rule) in self.rules.alerts.iter().enumerate() {
+            let l = eval(&rule.lhs, &self.store, &self.rules.smoothers);
+            let r = eval(&rule.rhs, &self.store, &self.rules.smoothers);
+            let active = rule.cmp.holds(l, r);
+            self.alert_rt[i].step(now_ms, active, l, rule.for_ms);
+        }
+        for (i, rule) in self.rules.burns.iter().enumerate() {
+            let fast = BurnRateRule::ratio(&self.store, &rule.numer, &rule.denom, rule.fast_s);
+            let slow = BurnRateRule::ratio(&self.store, &rule.numer, &rule.denom, rule.slow_s);
+            let thr = rule.threshold();
+            let active = fast >= thr && slow >= thr;
+            self.burn_rt[i].step(now_ms, active, fast, 0);
+        }
+    }
+
+    /// Fold the run into the report (end of simulation).
+    pub fn into_report(mut self, makespan: SimTime) -> MonitorReport {
+        for rt in self.alert_rt.iter_mut().chain(self.burn_rt.iter_mut()) {
+            rt.finalize();
+        }
+        let mut alerts = Vec::new();
+        for (rule, rt) in self.rules.alerts.iter().zip(&self.alert_rt) {
+            alerts.push(AlertReport {
+                name: rule.name.clone(),
+                kind: "threshold",
+                severity: rule.severity.clone(),
+                tenant: rule.tenant,
+                expr: format!(
+                    "value {} threshold for {}ms",
+                    rule.cmp.symbol(),
+                    rule.for_ms
+                ),
+                fired: rt.fired(),
+                firing_ms: rt.firing_ms(makespan.as_millis()),
+                final_state: rt.state(),
+                episodes: rt.episodes.clone(),
+            });
+        }
+        for (rule, rt) in self.rules.burns.iter().zip(&self.burn_rt) {
+            alerts.push(AlertReport {
+                name: rule.name.clone(),
+                kind: "burnrate",
+                severity: rule.severity.clone(),
+                tenant: rule.tenant,
+                expr: format!(
+                    "{}/{} burn >= {:.4} over {}s and {}s",
+                    rule.numer,
+                    rule.denom,
+                    rule.threshold(),
+                    rule.fast_s,
+                    rule.slow_s
+                ),
+                fired: rt.fired(),
+                firing_ms: rt.firing_ms(makespan.as_millis()),
+                final_state: rt.state(),
+                episodes: rt.episodes.clone(),
+            });
+        }
+        let records = self
+            .rules
+            .records
+            .iter()
+            .map(|r| (r.name.clone(), self.store.last(&r.name).unwrap_or(0.0)))
+            .collect();
+        MonitorReport {
+            interval_ms: self.interval_ms,
+            ticks: self.ticks,
+            makespan_ms: makespan.as_millis(),
+            alerts,
+            records,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// report
+// ---------------------------------------------------------------------
+
+/// Final state of one alert rule after the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertReport {
+    pub name: String,
+    /// "threshold" or "burnrate".
+    pub kind: &'static str,
+    pub severity: String,
+    pub tenant: Option<u16>,
+    /// Human-readable condition summary.
+    pub expr: String,
+    pub fired: u64,
+    pub firing_ms: u64,
+    pub final_state: AlertState,
+    pub episodes: Vec<Episode>,
+}
+
+/// End-of-run monitoring report, attached to `SimResult::monitor`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorReport {
+    pub interval_ms: u64,
+    pub ticks: u64,
+    pub makespan_ms: u64,
+    /// Threshold alerts in rule order, then burn-rate alerts in rule
+    /// order.
+    pub alerts: Vec<AlertReport>,
+    /// Recording rules and their final values, in rule order.
+    pub records: Vec<(String, f64)>,
+}
+
+impl MonitorReport {
+    pub fn fired_total(&self) -> u64 {
+        self.alerts.iter().map(|a| a.fired).sum()
+    }
+
+    pub fn firing_ms_total(&self) -> u64 {
+        self.alerts.iter().map(|a| a.firing_ms).sum()
+    }
+
+    /// Alerts-fired count attributed to one tenant (tenant-scoped rules
+    /// only).
+    pub fn tenant_fired(&self, tenant: u16) -> u64 {
+        self.alerts
+            .iter()
+            .filter(|a| a.tenant == Some(tenant))
+            .map(|a| a.fired)
+            .sum()
+    }
+
+    /// Time-in-firing (ms) attributed to one tenant.
+    pub fn tenant_firing_ms(&self, tenant: u16) -> u64 {
+        self.alerts
+            .iter()
+            .filter(|a| a.tenant == Some(tenant))
+            .map(|a| a.firing_ms)
+            .sum()
+    }
+
+    /// Chronological `(time_ms, line)` alert timeline for the text
+    /// report: one entry per lifecycle edge of every fired episode.
+    pub fn timeline(&self) -> Vec<(u64, String)> {
+        let mut out: Vec<(u64, String)> = Vec::new();
+        for a in &self.alerts {
+            for ep in &a.episodes {
+                out.push((
+                    ep.pending_ms,
+                    format!("{} pending ({})", a.name, a.severity),
+                ));
+                if let Some(f) = ep.firing_ms {
+                    out.push((f, format!("{} FIRING (peak {:.3})", a.name, ep.peak)));
+                }
+                match ep.resolved_ms {
+                    Some(r) => out.push((r, format!("{} resolved", a.name))),
+                    None => out.push((
+                        self.makespan_ms,
+                        format!("{} still firing at end of run", a.name),
+                    )),
+                }
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let alerts = self
+            .alerts
+            .iter()
+            .map(|a| {
+                let episodes = a
+                    .episodes
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("pending_ms", e.pending_ms.into()),
+                            (
+                                "firing_ms",
+                                e.firing_ms.map(Json::from).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "resolved_ms",
+                                e.resolved_ms.map(Json::from).unwrap_or(Json::Null),
+                            ),
+                            ("peak", e.peak.into()),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("name", Json::str(&a.name)),
+                    ("kind", Json::str(a.kind)),
+                    ("severity", Json::str(&a.severity)),
+                    (
+                        "tenant",
+                        a.tenant.map(|t| Json::from(t as u64)).unwrap_or(Json::Null),
+                    ),
+                    ("expr", Json::str(&a.expr)),
+                    ("fired", a.fired.into()),
+                    ("firing_ms", a.firing_ms.into()),
+                    ("final_state", Json::str(a.final_state.name())),
+                    ("episodes", Json::Arr(episodes)),
+                ])
+            })
+            .collect();
+        let records = self
+            .records
+            .iter()
+            .map(|(n, v)| Json::obj(vec![("name", Json::str(n)), ("value", (*v).into())]))
+            .collect();
+        Json::obj(vec![
+            ("interval_ms", self.interval_ms.into()),
+            ("ticks", self.ticks.into()),
+            ("makespan_ms", self.makespan_ms.into()),
+            ("alerts_fired", self.fired_total().into()),
+            ("firing_ms_total", self.firing_ms_total().into()),
+            ("alerts", Json::Arr(alerts)),
+            ("records", Json::Arr(records)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_rules_parse_for_every_subsystem_combination() {
+        for data_on in [false, true] {
+            for iso_on in [false, true] {
+                let text = builtin_rules(data_on, iso_on);
+                let rs = RuleSet::parse(&text)
+                    .unwrap_or_else(|e| panic!("builtin({data_on},{iso_on}): {e}"));
+                assert!(rs.alerts.iter().any(|a| a.name == "BacklogSaturation"));
+                assert!(rs.burns.iter().any(|b| b.name == "TaskDisruptionBudget"));
+                assert_eq!(
+                    rs.alerts.iter().any(|a| a.name == "CacheHitCollapse"),
+                    data_on
+                );
+                assert_eq!(
+                    rs.alerts.iter().any(|a| a.name == "QuotaThrottleSurge"),
+                    iso_on
+                );
+            }
+        }
+        let tenant_text = builtin_tenant_rules(3);
+        let rs = RuleSet::parse(&tenant_text).unwrap();
+        assert_eq!(rs.alerts.len(), 3);
+        assert_eq!(rs.burns.len(), 3);
+        assert_eq!(rs.alerts[2].tenant, Some(2));
+        assert_eq!(rs.burns[1].numer, "tenant_slow_seconds::1");
+    }
+
+    #[test]
+    fn parse_spec_accepts_the_documented_grammar() {
+        let (cfg, path) = MonitorConfig::parse_spec("true").unwrap();
+        assert_eq!(cfg, MonitorConfig::default());
+        assert_eq!(path, None);
+
+        let (cfg, path) =
+            MonitorConfig::parse_spec("interval:15,rules:builtin,alerts:out.json").unwrap();
+        assert_eq!(cfg.interval_ms, 15_000);
+        assert_eq!(cfg.alerts_out.as_deref(), Some("out.json"));
+        assert_eq!(path, None);
+
+        let (cfg, path) = MonitorConfig::parse_spec("interval:0.5,rules:my_rules.txt").unwrap();
+        assert_eq!(cfg.interval_ms, 500);
+        assert_eq!(path.as_deref(), Some("my_rules.txt"));
+
+        assert!(MonitorConfig::parse_spec("interval:0").is_err());
+        assert!(MonitorConfig::parse_spec("interval:nope").is_err());
+        assert!(MonitorConfig::parse_spec("bogus:1").is_err());
+    }
+
+    #[test]
+    fn report_json_is_deterministic_and_complete() {
+        let rules = RuleSet::parse(
+            "record r = x\n\
+             alert A if x > 1 for 0s severity page\n\
+             burnrate B on e / t slo 0.01 factor 2 fast 60s slow 120s tenant 1",
+        )
+        .unwrap();
+        let mut m = MonitorState::new(30_000, rules, false);
+        // drive the store directly (no kernel needed for report shape)
+        m.store.push("x", 2.0);
+        m.store.push("e", 0.0);
+        m.store.push("t", 0.0);
+        m.alert_rt[0].step(30_000, true, 2.0, 0);
+        m.burn_rt[0].step(30_000, false, 0.0, 0);
+        m.ticks = 1;
+        let rep = m.into_report(SimTime::from_millis(90_000));
+        assert_eq!(rep.alerts.len(), 2);
+        assert_eq!(rep.alerts[0].kind, "threshold");
+        assert_eq!(rep.alerts[1].kind, "burnrate");
+        assert_eq!(rep.alerts[1].tenant, Some(1));
+        assert_eq!(rep.fired_total(), 1);
+        assert_eq!(rep.firing_ms_total(), 60_000, "open episode runs to makespan");
+        assert_eq!(rep.tenant_fired(1), 0);
+        let j = rep.to_json().to_string();
+        assert_eq!(j, rep.to_json().to_string(), "serialization is stable");
+        assert!(j.contains("\"alerts_fired\""));
+        assert!(j.contains("\"final_state\":\"firing\""));
+        let tl = rep.timeline();
+        assert_eq!(tl.len(), 3, "pending + firing + still-firing edges");
+        assert!(tl[2].1.contains("still firing"));
+    }
+}

@@ -13,6 +13,7 @@
 //! suffix. Output order is deterministic (sorted names).
 
 use crate::metrics::Registry;
+use crate::obs::monitor::MonitorReport;
 use std::fmt::Write;
 
 /// Sanitize a registry name ("queue::mProject") into a Prometheus metric
@@ -34,8 +35,31 @@ fn sanitize(name: &str) -> String {
     }
 }
 
+/// Escape a label value per the exposition format (backslash, quote,
+/// newline).
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(ch),
+        }
+    }
+    out
+}
+
 /// Render the full registry as Prometheus text exposition.
 pub fn render(reg: &Registry) -> String {
+    render_with_alerts(reg, None)
+}
+
+/// Render the registry plus — when a monitoring report is supplied — the
+/// Prometheus-convention `ALERTS{alertname,severity,alertstate}` series
+/// (final lifecycle state of every alert rule) and a per-alert
+/// `hf_alerts_fired_total` counter, all before the `# EOF` terminator.
+pub fn render_with_alerts(reg: &Registry, monitor: Option<&MonitorReport>) -> String {
     let mut out = String::new();
     for (name, value) in reg.counters_sorted() {
         let m = format!("hf_{}_total", sanitize(name));
@@ -52,6 +76,31 @@ pub fn render(reg: &Registry) -> String {
         let _ = writeln!(out, "# TYPE {m} gauge");
         let _ = writeln!(out, "{m} {v}");
     }
+    if let Some(mon) = monitor {
+        if !mon.alerts.is_empty() {
+            let _ = writeln!(out, "# HELP ALERTS end-of-run alert rule states");
+            let _ = writeln!(out, "# TYPE ALERTS gauge");
+            for a in &mon.alerts {
+                let _ = writeln!(
+                    out,
+                    "ALERTS{{alertname=\"{}\",severity=\"{}\",alertstate=\"{}\"}} 1",
+                    escape_label(&a.name),
+                    escape_label(&a.severity),
+                    a.final_state.name(),
+                );
+            }
+            let _ = writeln!(out, "# HELP hf_alerts_fired_total firing episodes per alert rule");
+            let _ = writeln!(out, "# TYPE hf_alerts_fired_total counter");
+            for a in &mon.alerts {
+                let _ = writeln!(
+                    out,
+                    "hf_alerts_fired_total{{alertname=\"{}\"}} {}",
+                    escape_label(&a.name),
+                    a.fired,
+                );
+            }
+        }
+    }
     out.push_str("# EOF\n");
     out
 }
@@ -67,6 +116,68 @@ mod tests {
         assert_eq!(sanitize("pods_created"), "pods_created");
         assert_eq!(sanitize("running::mDiff-Fit"), "running_mDiff_Fit");
         assert_eq!(sanitize("::"), "unnamed");
+        // unicode, whitespace and symbol runs all collapse to single _
+        assert_eq!(sanitize("tenant μs/op (p99)"), "tenant_s_op_p99");
+        assert_eq!(sanitize("  spaced  name  "), "spaced_name");
+        assert_eq!(sanitize("a//b\\c"), "a_b_c");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn alerts_exposition_lists_every_rule_before_eof() {
+        use crate::obs::alerts::AlertState;
+        use crate::obs::monitor::{AlertReport, MonitorReport};
+        let mon = MonitorReport {
+            interval_ms: 30_000,
+            ticks: 5,
+            makespan_ms: 150_000,
+            alerts: vec![
+                AlertReport {
+                    name: "BacklogSaturation".into(),
+                    kind: "threshold",
+                    severity: "page".into(),
+                    tenant: None,
+                    expr: "avg_over_time(backlog_total[120s]) > 16".into(),
+                    fired: 2,
+                    firing_ms: 60_000,
+                    final_state: AlertState::Firing,
+                    episodes: Vec::new(),
+                },
+                AlertReport {
+                    name: "TaskDisruptionBudget".into(),
+                    kind: "burnrate",
+                    severity: "page".into(),
+                    tenant: None,
+                    expr: "burn >= 10 x 0.001".into(),
+                    fired: 0,
+                    firing_ms: 0,
+                    final_state: AlertState::Inactive,
+                    episodes: Vec::new(),
+                },
+            ],
+            records: Vec::new(),
+        };
+        let mut reg = Registry::new();
+        reg.inc("pods_created", 1);
+        let text = render_with_alerts(&reg, Some(&mon));
+        assert!(text.contains(
+            "ALERTS{alertname=\"BacklogSaturation\",severity=\"page\",alertstate=\"firing\"} 1"
+        ));
+        assert!(text.contains(
+            "ALERTS{alertname=\"TaskDisruptionBudget\",severity=\"page\",alertstate=\"inactive\"} 1"
+        ));
+        assert!(text.contains("hf_alerts_fired_total{alertname=\"BacklogSaturation\"} 2"));
+        assert!(text.ends_with("# EOF\n"));
+        // alert series come after the registry metrics, before EOF
+        let alerts_at = text.find("ALERTS{").unwrap();
+        assert!(alerts_at > text.find("hf_pods_created_total").unwrap());
+        // without a report the output is unchanged from render()
+        assert_eq!(render_with_alerts(&reg, None), render(&reg));
     }
 
     #[test]

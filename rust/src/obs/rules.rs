@@ -1,0 +1,1118 @@
+//! PromQL-lite: the rule language of the in-sim monitoring stack.
+//!
+//! A deliberately small subset of PromQL, evaluated once per scrape tick
+//! against fixed-interval ring buffers (see [`SampleStore`]). Because the
+//! scrape interval is constant, a `[90s]` range selector is just a
+//! k-sample lookback (`k = round(90 / interval)`), which keeps every
+//! window function O(window) with zero timestamp bookkeeping.
+//!
+//! Statements (one per line, `#` starts a comment):
+//!
+//! ```text
+//! record NAME = EXPR
+//! alert  NAME if EXPR CMP EXPR for DUR [severity WORD] [tenant N]
+//! burnrate NAME on NUMER / DENOM slo F factor F fast DUR slow DUR
+//!          [severity WORD] [tenant N]
+//! ```
+//!
+//! Expressions support `+ - * /`, parentheses, numeric literals, metric
+//! names (current sample), the window functions `rate(m[DUR])`,
+//! `increase(m[DUR])`, `avg_over_time(m[DUR])`, `max_over_time(m[DUR])`,
+//! `min_over_time(m[DUR])`, `changes(m[DUR])`, and the stateful
+//! smoothers `ewma(m, alpha)` / `holt_winters(m, alpha, beta)` whose
+//! state advances exactly once per tick (these are the forecaster inputs
+//! for the predictive autoscaler, ROADMAP item 5). Division by zero
+//! evaluates to 0.0 — a missing denominator must never poison an alert
+//! with NaN. Durations are `30s`, `5m`, `1h`, or `500ms`.
+//!
+//! Recorded series are pushed back into the store under the rule's name,
+//! so later rules (and kernel-side consumers via
+//! [`super::monitor::MonitorState::query`]) can read them like any other
+//! metric.
+
+use std::collections::{BTreeMap, VecDeque};
+
+// ---------------------------------------------------------------------
+// sample store
+// ---------------------------------------------------------------------
+
+/// Fixed-interval ring buffers, one per metric, newest sample at the
+/// back. Window functions clamp to the available history (early in a run
+/// a `[10m]` window sees whatever has been scraped so far), which keeps
+/// every rule total — no "no data" states to thread through alerting.
+#[derive(Debug)]
+pub struct SampleStore {
+    interval_s: f64,
+    cap: usize,
+    index: BTreeMap<String, usize>,
+    bufs: Vec<VecDeque<f64>>,
+}
+
+impl SampleStore {
+    pub fn new(interval_s: f64, max_window_s: f64) -> Self {
+        let interval_s = if interval_s > 0.0 { interval_s } else { 1.0 };
+        SampleStore {
+            interval_s,
+            cap: Self::cap_for(interval_s, max_window_s),
+            index: BTreeMap::new(),
+            bufs: Vec::new(),
+        }
+    }
+
+    fn cap_for(interval_s: f64, max_window_s: f64) -> usize {
+        ((max_window_s.max(0.0) / interval_s).ceil() as usize + 2).max(4)
+    }
+
+    pub fn interval_s(&self) -> f64 {
+        self.interval_s
+    }
+
+    /// Widen the retention to cover `max_window_s` (rules appended after
+    /// construction, e.g. the per-tenant builtins, may look further back).
+    pub fn grow(&mut self, max_window_s: f64) {
+        self.cap = self.cap.max(Self::cap_for(self.interval_s, max_window_s));
+    }
+
+    /// Append the tick's sample for `name`. Non-finite values are
+    /// recorded as 0.0: the store is the alerting substrate and must
+    /// stay NaN-free.
+    pub fn push(&mut self, name: &str, v: f64) {
+        let i = match self.index.get(name) {
+            Some(&i) => i,
+            None => {
+                self.bufs.push(VecDeque::new());
+                let i = self.bufs.len() - 1;
+                self.index.insert(name.to_string(), i);
+                i
+            }
+        };
+        let buf = &mut self.bufs[i];
+        buf.push_back(if v.is_finite() { v } else { 0.0 });
+        while buf.len() > self.cap {
+            buf.pop_front();
+        }
+    }
+
+    /// Latest sample of `name`, if it has ever been scraped.
+    pub fn last(&self, name: &str) -> Option<f64> {
+        let buf = self.buf(name)?;
+        buf.back().copied()
+    }
+
+    fn buf(&self, name: &str) -> Option<&VecDeque<f64>> {
+        self.index.get(name).map(|&i| &self.bufs[i])
+    }
+
+    /// Lookback depth for a `window_s` range: at least one sample back,
+    /// clamped to the history actually present.
+    fn lookback(&self, buf: &VecDeque<f64>, window_s: f64) -> usize {
+        let k = ((window_s / self.interval_s).round() as usize).max(1);
+        k.min(buf.len().saturating_sub(1))
+    }
+
+    /// (newest − sample `window_s` ago, covered span in seconds).
+    /// `(0.0, 0.0)` until a second sample exists.
+    pub fn delta(&self, name: &str, window_s: f64) -> (f64, f64) {
+        let Some(buf) = self.buf(name) else {
+            return (0.0, 0.0);
+        };
+        let k = self.lookback(buf, window_s);
+        if k == 0 {
+            return (0.0, 0.0);
+        }
+        let newest = *buf.back().unwrap();
+        let oldest = buf[buf.len() - 1 - k];
+        (newest - oldest, k as f64 * self.interval_s)
+    }
+
+    /// Per-second increase over the window (counter `rate()`).
+    pub fn rate(&self, name: &str, window_s: f64) -> f64 {
+        let (d, span) = self.delta(name, window_s);
+        if span > 0.0 {
+            d / span
+        } else {
+            0.0
+        }
+    }
+
+    fn fold_window(&self, name: &str, window_s: f64, f: impl FnMut(f64, f64) -> f64, init: f64) -> f64 {
+        let Some(buf) = self.buf(name) else {
+            return 0.0;
+        };
+        if buf.is_empty() {
+            return 0.0;
+        }
+        let k = self.lookback(buf, window_s);
+        let start = buf.len() - 1 - k;
+        buf.iter().skip(start).copied().fold(init, f)
+    }
+
+    pub fn avg_over(&self, name: &str, window_s: f64) -> f64 {
+        let Some(buf) = self.buf(name) else {
+            return 0.0;
+        };
+        if buf.is_empty() {
+            return 0.0;
+        }
+        let k = self.lookback(buf, window_s);
+        let n = (k + 1) as f64;
+        self.fold_window(name, window_s, |acc, v| acc + v, 0.0) / n
+    }
+
+    pub fn max_over(&self, name: &str, window_s: f64) -> f64 {
+        let Some(buf) = self.buf(name) else {
+            return 0.0;
+        };
+        if buf.is_empty() {
+            return 0.0;
+        }
+        self.fold_window(name, window_s, f64::max, f64::NEG_INFINITY)
+    }
+
+    pub fn min_over(&self, name: &str, window_s: f64) -> f64 {
+        let Some(buf) = self.buf(name) else {
+            return 0.0;
+        };
+        if buf.is_empty() {
+            return 0.0;
+        }
+        self.fold_window(name, window_s, f64::min, f64::INFINITY)
+    }
+
+    /// Number of value changes between adjacent samples in the window.
+    pub fn changes(&self, name: &str, window_s: f64) -> f64 {
+        let Some(buf) = self.buf(name) else {
+            return 0.0;
+        };
+        if buf.len() < 2 {
+            return 0.0;
+        }
+        let k = self.lookback(buf, window_s);
+        let start = buf.len() - 1 - k;
+        let mut n = 0u64;
+        let mut prev = buf[start];
+        for i in start + 1..buf.len() {
+            if buf[i] != prev {
+                n += 1;
+            }
+            prev = buf[i];
+        }
+        n as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// expressions
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverFunc {
+    Rate,
+    Increase,
+    Avg,
+    Max,
+    Min,
+    Changes,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Const(f64),
+    /// Current sample of a metric (0.0 until first scraped).
+    Metric(String),
+    /// Window function over a range selector `m[DUR]`.
+    Over {
+        func: OverFunc,
+        metric: String,
+        window_s: f64,
+    },
+    /// Stateful smoother slot (index into [`RuleSet::smoothers`]).
+    Smooth(usize),
+    Neg(Box<Expr>),
+    Bin {
+        op: BinOp,
+        lhs: Box<Expr>,
+        rhs: Box<Expr>,
+    },
+}
+
+impl Expr {
+    fn max_window_s(&self) -> f64 {
+        match self {
+            Expr::Over { window_s, .. } => *window_s,
+            Expr::Neg(e) => e.max_window_s(),
+            Expr::Bin { lhs, rhs, .. } => lhs.max_window_s().max(rhs.max_window_s()),
+            _ => 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Gt,
+    Lt,
+    Ge,
+    Le,
+}
+
+impl Cmp {
+    /// NaN on either side compares false: a poisoned sample can never
+    /// activate an alert.
+    pub fn holds(self, l: f64, r: f64) -> bool {
+        match self {
+            Cmp::Gt => l > r,
+            Cmp::Lt => l < r,
+            Cmp::Ge => l >= r,
+            Cmp::Le => l <= r,
+        }
+    }
+
+    pub fn symbol(self) -> &'static str {
+        match self {
+            Cmp::Gt => ">",
+            Cmp::Lt => "<",
+            Cmp::Ge => ">=",
+            Cmp::Le => "<=",
+        }
+    }
+}
+
+/// Exponential smoothers with per-rule state, advanced exactly once per
+/// scrape tick (before rule evaluation) from the latest sample of their
+/// input metric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Smoother {
+    Ewma {
+        metric: String,
+        alpha: f64,
+        level: Option<f64>,
+    },
+    /// Double exponential smoothing; its value is the one-step-ahead
+    /// forecast `level + trend`.
+    HoltWinters {
+        metric: String,
+        alpha: f64,
+        beta: f64,
+        level: Option<f64>,
+        trend: f64,
+    },
+}
+
+impl Smoother {
+    pub fn metric(&self) -> &str {
+        match self {
+            Smoother::Ewma { metric, .. } | Smoother::HoltWinters { metric, .. } => metric,
+        }
+    }
+
+    pub fn update(&mut self, x: f64) {
+        let x = if x.is_finite() { x } else { 0.0 };
+        match self {
+            Smoother::Ewma { alpha, level, .. } => {
+                *level = Some(match *level {
+                    None => x,
+                    Some(prev) => *alpha * x + (1.0 - *alpha) * prev,
+                });
+            }
+            Smoother::HoltWinters {
+                alpha,
+                beta,
+                level,
+                trend,
+                ..
+            } => match *level {
+                None => {
+                    *level = Some(x);
+                    *trend = 0.0;
+                }
+                Some(prev) => {
+                    let new_level = *alpha * x + (1.0 - *alpha) * (prev + *trend);
+                    *trend = *beta * (new_level - prev) + (1.0 - *beta) * *trend;
+                    *level = Some(new_level);
+                }
+            },
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        match self {
+            Smoother::Ewma { level, .. } => level.unwrap_or(0.0),
+            Smoother::HoltWinters { level, trend, .. } => {
+                level.map(|l| l + trend).unwrap_or(0.0)
+            }
+        }
+    }
+}
+
+/// Evaluate an expression against the store and the smoother table.
+pub fn eval(expr: &Expr, store: &SampleStore, smoothers: &[Smoother]) -> f64 {
+    match expr {
+        Expr::Const(c) => *c,
+        Expr::Metric(m) => store.last(m).unwrap_or(0.0),
+        Expr::Over {
+            func,
+            metric,
+            window_s,
+        } => match func {
+            OverFunc::Rate => store.rate(metric, *window_s),
+            OverFunc::Increase => store.delta(metric, *window_s).0,
+            OverFunc::Avg => store.avg_over(metric, *window_s),
+            OverFunc::Max => store.max_over(metric, *window_s),
+            OverFunc::Min => store.min_over(metric, *window_s),
+            OverFunc::Changes => store.changes(metric, *window_s),
+        },
+        Expr::Smooth(i) => smoothers.get(*i).map(Smoother::value).unwrap_or(0.0),
+        Expr::Neg(e) => -eval(e, store, smoothers),
+        Expr::Bin { op, lhs, rhs } => {
+            let l = eval(lhs, store, smoothers);
+            let r = eval(rhs, store, smoothers);
+            match op {
+                BinOp::Add => l + r,
+                BinOp::Sub => l - r,
+                BinOp::Mul => l * r,
+                BinOp::Div => {
+                    if r == 0.0 || !r.is_finite() {
+                        0.0
+                    } else {
+                        l / r
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rules
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecordingRule {
+    pub name: String,
+    pub expr: Expr,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertRule {
+    pub name: String,
+    pub lhs: Expr,
+    pub cmp: Cmp,
+    pub rhs: Expr,
+    pub for_ms: u64,
+    pub severity: String,
+    pub tenant: Option<u16>,
+}
+
+/// Multi-window burn-rate alert (Google SRE style): fires while the
+/// error ratio `Δnumer/Δdenom` exceeds `factor × slo` over BOTH the fast
+/// and the slow window — the fast window catches the burn quickly, the
+/// slow window keeps a transient spike from paging.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BurnRateRule {
+    pub name: String,
+    pub numer: String,
+    pub denom: String,
+    pub slo: f64,
+    pub factor: f64,
+    pub fast_s: f64,
+    pub slow_s: f64,
+    pub severity: String,
+    pub tenant: Option<u16>,
+}
+
+impl BurnRateRule {
+    pub fn threshold(&self) -> f64 {
+        self.factor * self.slo
+    }
+
+    /// Error ratio over one window. An empty denominator with a live
+    /// numerator is an infinite burn — clamped to [`BURN_CLAMP`] so the
+    /// value stays JSON-serializable.
+    pub fn ratio(store: &SampleStore, numer: &str, denom: &str, window_s: f64) -> f64 {
+        let (dn, _) = store.delta(numer, window_s);
+        let (dd, _) = store.delta(denom, window_s);
+        if dd > 0.0 {
+            (dn / dd).min(BURN_CLAMP)
+        } else if dn > 0.0 {
+            BURN_CLAMP
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Upper clamp for burn-rate ratios (stand-in for +inf).
+pub const BURN_CLAMP: f64 = 1e9;
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RuleSet {
+    pub records: Vec<RecordingRule>,
+    pub alerts: Vec<AlertRule>,
+    pub burns: Vec<BurnRateRule>,
+    pub smoothers: Vec<Smoother>,
+}
+
+impl RuleSet {
+    pub fn parse(text: &str) -> Result<RuleSet, String> {
+        let mut rs = RuleSet::default();
+        rs.parse_append(text)?;
+        Ok(rs)
+    }
+
+    /// Parse `text` and append its rules (used for the per-tenant
+    /// builtins added once the fleet size is known). Smoother slots are
+    /// allocated in this set, so appended rules keep their own state.
+    pub fn parse_append(&mut self, text: &str) -> Result<(), String> {
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            self.parse_line(line)
+                .map_err(|e| format!("rules line {}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Widest range selector (or burn window) in the set: the retention
+    /// the sample store must keep.
+    pub fn max_window_s(&self) -> f64 {
+        let mut w: f64 = 0.0;
+        for r in &self.records {
+            w = w.max(r.expr.max_window_s());
+        }
+        for a in &self.alerts {
+            w = w.max(a.lhs.max_window_s()).max(a.rhs.max_window_s());
+        }
+        for b in &self.burns {
+            w = w.max(b.fast_s).max(b.slow_s);
+        }
+        w
+    }
+
+    fn parse_line(&mut self, line: &str) -> Result<(), String> {
+        let toks = lex(line)?;
+        let mut p = P {
+            toks: &toks,
+            i: 0,
+            smoothers: &mut self.smoothers,
+        };
+        match p.ident_keyword()? {
+            "record" => {
+                let name = p.ident("recording rule name")?;
+                p.expect(&Tok::Eq)?;
+                let expr = p.sum()?;
+                p.end()?;
+                self.records.push(RecordingRule { name, expr });
+            }
+            "alert" => {
+                let name = p.ident("alert name")?;
+                p.keyword("if")?;
+                let lhs = p.sum()?;
+                let cmp = p.cmp()?;
+                let rhs = p.sum()?;
+                p.keyword("for")?;
+                let for_ms = (p.duration()? * 1000.0).round() as u64;
+                let (severity, tenant) = p.trailer()?;
+                p.end()?;
+                self.alerts.push(AlertRule {
+                    name,
+                    lhs,
+                    cmp,
+                    rhs,
+                    for_ms,
+                    severity,
+                    tenant,
+                });
+            }
+            "burnrate" => {
+                let name = p.ident("burn-rate alert name")?;
+                p.keyword("on")?;
+                let numer = p.ident("numerator counter")?;
+                p.expect(&Tok::Slash)?;
+                let denom = p.ident("denominator counter")?;
+                p.keyword("slo")?;
+                let slo = p.number()?;
+                p.keyword("factor")?;
+                let factor = p.number()?;
+                p.keyword("fast")?;
+                let fast_s = p.duration()?;
+                p.keyword("slow")?;
+                let slow_s = p.duration()?;
+                let (severity, tenant) = p.trailer()?;
+                p.end()?;
+                if !(slo > 0.0) {
+                    return Err("slo must be > 0".to_string());
+                }
+                if slow_s < fast_s {
+                    return Err("slow window must be >= fast window".to_string());
+                }
+                self.burns.push(BurnRateRule {
+                    name,
+                    numer,
+                    denom,
+                    slo,
+                    factor,
+                    fast_s,
+                    slow_s,
+                    severity,
+                    tenant,
+                });
+            }
+            kw => return Err(format!("unknown statement '{kw}' (record/alert/burnrate)")),
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// lexer + parser
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Num(f64),
+    /// Duration literal, seconds.
+    Dur(f64),
+    LParen,
+    RParen,
+    LBrack,
+    RBrack,
+    Comma,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Eq,
+    Gt,
+    Lt,
+    Ge,
+    Le,
+}
+
+fn lex(line: &str) -> Result<Vec<Tok>, String> {
+    let b: Vec<char> = line.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ' ' | '\t' => i += 1,
+            '#' => break,
+            '(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            '[' => {
+                toks.push(Tok::LBrack);
+                i += 1;
+            }
+            ']' => {
+                toks.push(Tok::RBrack);
+                i += 1;
+            }
+            ',' => {
+                toks.push(Tok::Comma);
+                i += 1;
+            }
+            '+' => {
+                toks.push(Tok::Plus);
+                i += 1;
+            }
+            '-' => {
+                toks.push(Tok::Minus);
+                i += 1;
+            }
+            '*' => {
+                toks.push(Tok::Star);
+                i += 1;
+            }
+            '/' => {
+                toks.push(Tok::Slash);
+                i += 1;
+            }
+            '=' => {
+                toks.push(Tok::Eq);
+                i += 1;
+            }
+            '>' => {
+                if b.get(i + 1) == Some(&'=') {
+                    toks.push(Tok::Ge);
+                    i += 2;
+                } else {
+                    toks.push(Tok::Gt);
+                    i += 1;
+                }
+            }
+            '<' => {
+                if b.get(i + 1) == Some(&'=') {
+                    toks.push(Tok::Le);
+                    i += 2;
+                } else {
+                    toks.push(Tok::Lt);
+                    i += 1;
+                }
+            }
+            c if c.is_ascii_digit() || c == '.' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == '.') {
+                    i += 1;
+                }
+                let num: String = b[start..i].iter().collect();
+                let n: f64 = num
+                    .parse()
+                    .map_err(|_| format!("bad number '{num}'"))?;
+                // unit suffix glued to the number → duration literal
+                let sfx_start = i;
+                while i < b.len() && b[i].is_ascii_alphabetic() {
+                    i += 1;
+                }
+                let sfx: String = b[sfx_start..i].iter().collect();
+                match sfx.as_str() {
+                    "" => toks.push(Tok::Num(n)),
+                    "ms" => toks.push(Tok::Dur(n / 1000.0)),
+                    "s" => toks.push(Tok::Dur(n)),
+                    "m" => toks.push(Tok::Dur(n * 60.0)),
+                    "h" => toks.push(Tok::Dur(n * 3600.0)),
+                    other => return Err(format!("bad duration unit '{other}' (ms/s/m/h)")),
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == '_' || b[i] == ':')
+                {
+                    i += 1;
+                }
+                toks.push(Tok::Ident(b[start..i].iter().collect()));
+            }
+            other => return Err(format!("unexpected character '{other}'")),
+        }
+    }
+    Ok(toks)
+}
+
+struct P<'a> {
+    toks: &'a [Tok],
+    i: usize,
+    smoothers: &'a mut Vec<Smoother>,
+}
+
+impl<'a> P<'a> {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i)
+    }
+
+    fn next(&mut self) -> Result<&Tok, String> {
+        let t = self.toks.get(self.i).ok_or("unexpected end of line")?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, want: &Tok) -> Result<(), String> {
+        let got = self.next()?;
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("expected {want:?}, got {got:?}"))
+        }
+    }
+
+    fn end(&mut self) -> Result<(), String> {
+        match self.peek() {
+            None => Ok(()),
+            Some(t) => Err(format!("trailing token {t:?}")),
+        }
+    }
+
+    fn ident_keyword(&mut self) -> Result<&'a str, String> {
+        let t: &'a Tok = self.toks.get(self.i).ok_or("unexpected end of line")?;
+        self.i += 1;
+        match t {
+            Tok::Ident(s) => Ok(s.as_str()),
+            t => Err(format!("expected statement keyword, got {t:?}")),
+        }
+    }
+
+    fn ident(&mut self, what: &str) -> Result<String, String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s.clone()),
+            t => Err(format!("expected {what}, got {t:?}")),
+        }
+    }
+
+    fn keyword(&mut self, kw: &str) -> Result<(), String> {
+        match self.next()? {
+            Tok::Ident(s) if s == kw => Ok(()),
+            t => Err(format!("expected '{kw}', got {t:?}")),
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        match self.next()? {
+            Tok::Num(n) => Ok(*n),
+            t => Err(format!("expected number, got {t:?}")),
+        }
+    }
+
+    /// Duration in seconds; a bare number is taken as seconds.
+    fn duration(&mut self) -> Result<f64, String> {
+        match self.next()? {
+            Tok::Dur(s) => Ok(*s),
+            Tok::Num(n) => Ok(*n),
+            t => Err(format!("expected duration (e.g. 30s), got {t:?}")),
+        }
+    }
+
+    fn cmp(&mut self) -> Result<Cmp, String> {
+        match self.next()? {
+            Tok::Gt => Ok(Cmp::Gt),
+            Tok::Lt => Ok(Cmp::Lt),
+            Tok::Ge => Ok(Cmp::Ge),
+            Tok::Le => Ok(Cmp::Le),
+            t => Err(format!("expected comparison (> < >= <=), got {t:?}")),
+        }
+    }
+
+    /// Optional `severity WORD` and `tenant N` clauses, any order.
+    fn trailer(&mut self) -> Result<(String, Option<u16>), String> {
+        let mut severity = "warn".to_string();
+        let mut tenant = None;
+        loop {
+            let kw = match self.peek() {
+                Some(Tok::Ident(s)) => s.clone(),
+                _ => break,
+            };
+            match kw.as_str() {
+                "severity" => {
+                    self.i += 1;
+                    severity = self.ident("severity word")?;
+                }
+                "tenant" => {
+                    self.i += 1;
+                    tenant = Some(self.number()? as u16);
+                }
+                other => return Err(format!("unexpected clause '{other}'")),
+            }
+        }
+        Ok((severity, tenant))
+    }
+
+    // expression grammar: sum := term (('+'|'-') term)*
+    //                     term := atom (('*'|'/') atom)*
+    fn sum(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.term()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Plus) => BinOp::Add,
+                Some(Tok::Minus) => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            self.i += 1;
+            let rhs = self.term()?;
+            lhs = Expr::Bin {
+                op,
+                lhs: Box::new(lhs),
+                rhs: Box::new(rhs),
+            };
+        }
+    }
+
+    fn term(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.atom()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Star) => BinOp::Mul,
+                Some(Tok::Slash) => BinOp::Div,
+                _ => return Ok(lhs),
+            };
+            self.i += 1;
+            let rhs = self.atom()?;
+            lhs = Expr::Bin {
+                op,
+                lhs: Box::new(lhs),
+                rhs: Box::new(rhs),
+            };
+        }
+    }
+
+    fn atom(&mut self) -> Result<Expr, String> {
+        match self.next()? {
+            Tok::Num(n) => Ok(Expr::Const(*n)),
+            Tok::Minus => Ok(Expr::Neg(Box::new(self.atom()?))),
+            Tok::LParen => {
+                let e = self.sum()?;
+                self.expect(&Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                let name = name.clone();
+                if self.peek() == Some(&Tok::LParen) {
+                    self.i += 1;
+                    self.call(&name)
+                } else {
+                    Ok(Expr::Metric(name))
+                }
+            }
+            t => Err(format!("expected expression, got {t:?}")),
+        }
+    }
+
+    /// Function call; `(` already consumed.
+    fn call(&mut self, name: &str) -> Result<Expr, String> {
+        let func = match name {
+            "rate" => Some(OverFunc::Rate),
+            "increase" => Some(OverFunc::Increase),
+            "avg_over_time" => Some(OverFunc::Avg),
+            "max_over_time" => Some(OverFunc::Max),
+            "min_over_time" => Some(OverFunc::Min),
+            "changes" => Some(OverFunc::Changes),
+            _ => None,
+        };
+        if let Some(func) = func {
+            let metric = self.ident("metric name")?;
+            self.expect(&Tok::LBrack)?;
+            let window_s = self.duration()?;
+            self.expect(&Tok::RBrack)?;
+            self.expect(&Tok::RParen)?;
+            if !(window_s > 0.0) {
+                return Err("window must be > 0".to_string());
+            }
+            return Ok(Expr::Over {
+                func,
+                metric,
+                window_s,
+            });
+        }
+        match name {
+            "ewma" => {
+                let metric = self.ident("metric name")?;
+                self.expect(&Tok::Comma)?;
+                let alpha = self.number()?;
+                self.expect(&Tok::RParen)?;
+                check_unit("alpha", alpha)?;
+                self.smoothers.push(Smoother::Ewma {
+                    metric,
+                    alpha,
+                    level: None,
+                });
+                Ok(Expr::Smooth(self.smoothers.len() - 1))
+            }
+            "holt_winters" => {
+                let metric = self.ident("metric name")?;
+                self.expect(&Tok::Comma)?;
+                let alpha = self.number()?;
+                self.expect(&Tok::Comma)?;
+                let beta = self.number()?;
+                self.expect(&Tok::RParen)?;
+                check_unit("alpha", alpha)?;
+                check_unit("beta", beta)?;
+                self.smoothers.push(Smoother::HoltWinters {
+                    metric,
+                    alpha,
+                    beta,
+                    level: None,
+                    trend: 0.0,
+                });
+                Ok(Expr::Smooth(self.smoothers.len() - 1))
+            }
+            other => Err(format!(
+                "unknown function '{other}' (rate/increase/avg_over_time/max_over_time/\
+                 min_over_time/changes/ewma/holt_winters)"
+            )),
+        }
+    }
+}
+
+fn check_unit(what: &str, v: f64) -> Result<(), String> {
+    if v > 0.0 && v <= 1.0 {
+        Ok(())
+    } else {
+        Err(format!("{what} must be in (0, 1], got {v}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(interval_s: f64, samples: &[(&str, &[f64])]) -> SampleStore {
+        let mut s = SampleStore::new(interval_s, 3600.0);
+        let n = samples.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+        for i in 0..n {
+            for (name, vals) in samples {
+                if i < vals.len() {
+                    s.push(name, vals[i]);
+                }
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn window_functions_on_fixed_interval_samples() {
+        let s = store(10.0, &[("c", &[0.0, 10.0, 40.0, 100.0])]);
+        // rate over 30s: (100 - 0) / 30
+        assert!((s.rate("c", 30.0) - 100.0 / 30.0).abs() < 1e-12);
+        // increase over 10s: 100 - 40
+        assert_eq!(s.delta("c", 10.0).0, 60.0);
+        // clamped beyond history: full span
+        assert_eq!(s.delta("c", 1e6).0, 100.0);
+        assert_eq!(s.avg_over("c", 30.0), 37.5);
+        assert_eq!(s.max_over("c", 30.0), 100.0);
+        assert_eq!(s.min_over("c", 30.0), 0.0);
+        assert_eq!(s.changes("c", 30.0), 3.0);
+        // missing metric: every window function is 0
+        assert_eq!(s.rate("nope", 30.0), 0.0);
+        assert_eq!(s.avg_over("nope", 30.0), 0.0);
+    }
+
+    #[test]
+    fn single_sample_windows_are_zero_rate() {
+        let s = store(10.0, &[("c", &[5.0])]);
+        assert_eq!(s.delta("c", 30.0), (0.0, 0.0));
+        assert_eq!(s.rate("c", 30.0), 0.0);
+        assert_eq!(s.avg_over("c", 30.0), 5.0);
+        assert_eq!(s.changes("c", 30.0), 0.0);
+    }
+
+    #[test]
+    fn ring_buffer_evicts_beyond_capacity() {
+        let mut s = SampleStore::new(10.0, 20.0); // cap = 4
+        for i in 0..10 {
+            s.push("g", i as f64);
+        }
+        assert_eq!(s.last("g"), Some(9.0));
+        // full-history delta only spans the retained window
+        assert_eq!(s.delta("g", 1e6), (3.0, 30.0));
+    }
+
+    #[test]
+    fn non_finite_samples_are_sanitized() {
+        let mut s = SampleStore::new(10.0, 60.0);
+        s.push("g", f64::NAN);
+        s.push("g", f64::INFINITY);
+        assert_eq!(s.last("g"), Some(0.0));
+        assert_eq!(s.avg_over("g", 60.0), 0.0);
+    }
+
+    #[test]
+    fn parses_records_alerts_and_burnrates() {
+        let text = "
+            # builtin-style rules
+            record backlog_avg = avg_over_time(backlog_total[120s])
+            record forecast = holt_winters(backlog_total, 0.5, 0.1)
+            alert Saturated if avg_over_time(backlog_total[2m]) > 16 for 120s severity page
+            alert TenantSlow::1 if tenant_active_age_s::1 > 1800 for 5m severity page tenant 1
+            burnrate Budget on lost / done slo 0.001 factor 10 fast 120s slow 600s severity page
+        ";
+        let rs = RuleSet::parse(text).unwrap();
+        assert_eq!(rs.records.len(), 2);
+        assert_eq!(rs.alerts.len(), 2);
+        assert_eq!(rs.burns.len(), 1);
+        assert_eq!(rs.smoothers.len(), 1);
+        assert_eq!(rs.alerts[0].for_ms, 120_000);
+        assert_eq!(rs.alerts[0].cmp, Cmp::Gt);
+        assert_eq!(rs.alerts[1].tenant, Some(1));
+        assert_eq!(rs.alerts[1].for_ms, 300_000);
+        assert_eq!(rs.alerts[1].lhs, Expr::Metric("tenant_active_age_s::1".into()));
+        let b = &rs.burns[0];
+        assert_eq!((b.numer.as_str(), b.denom.as_str()), ("lost", "done"));
+        assert!((b.threshold() - 0.01).abs() < 1e-12);
+        assert_eq!(rs.max_window_s(), 600.0);
+    }
+
+    #[test]
+    fn parse_errors_name_the_line() {
+        let err = RuleSet::parse("record x = rate(c[0s])").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("window"), "{err}");
+        let err = RuleSet::parse("\nfrobnicate y").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(RuleSet::parse("alert A if x > 1 for 10s extra_junk 3").is_err());
+        assert!(RuleSet::parse("record z = ewma(m, 1.5)").is_err(), "alpha > 1");
+        assert!(
+            RuleSet::parse("burnrate B on a / b slo 0.1 factor 2 fast 10m slow 1m").is_err(),
+            "slow < fast"
+        );
+    }
+
+    #[test]
+    fn eval_arithmetic_and_division_guard() {
+        let s = store(10.0, &[("a", &[4.0]), ("b", &[0.0])]);
+        let rs = RuleSet::parse("record r = (a + 2) * 3 - a / b").unwrap();
+        // a/b = 4/0 → 0, so r = 18
+        assert_eq!(eval(&rs.records[0].expr, &s, &rs.smoothers), 18.0);
+        let rs = RuleSet::parse("record n = -a + 1").unwrap();
+        assert_eq!(eval(&rs.records[0].expr, &s, &rs.smoothers), -3.0);
+    }
+
+    #[test]
+    fn ewma_and_holt_winters_track_their_input() {
+        let mut e = Smoother::Ewma {
+            metric: "m".into(),
+            alpha: 0.5,
+            level: None,
+        };
+        e.update(10.0);
+        assert_eq!(e.value(), 10.0);
+        e.update(20.0);
+        assert_eq!(e.value(), 15.0);
+
+        let mut h = Smoother::HoltWinters {
+            metric: "m".into(),
+            alpha: 0.5,
+            beta: 0.5,
+            level: None,
+            trend: 0.0,
+        };
+        // a perfect linear ramp: the one-step forecast converges ahead
+        // of the input
+        for x in [10.0, 20.0, 30.0, 40.0, 50.0] {
+            h.update(x);
+        }
+        assert!(h.value() > 50.0, "forecast {} should lead the ramp", h.value());
+        // fresh smoothers are 0 until the first update
+        let cold = Smoother::Ewma {
+            metric: "m".into(),
+            alpha: 0.3,
+            level: None,
+        };
+        assert_eq!(cold.value(), 0.0);
+    }
+
+    #[test]
+    fn burn_ratio_handles_empty_denominator() {
+        let s = store(
+            10.0,
+            &[("err", &[0.0, 5.0]), ("tot", &[0.0, 0.0]), ("ok", &[0.0, 100.0])],
+        );
+        // denominator moved: plain ratio
+        assert_eq!(BurnRateRule::ratio(&s, "err", "ok", 10.0), 0.05);
+        // denominator flat but errors present: clamped infinity
+        assert_eq!(BurnRateRule::ratio(&s, "err", "tot", 10.0), BURN_CLAMP);
+        // nothing moved at all: clean zero
+        assert_eq!(BurnRateRule::ratio(&s, "tot", "tot", 10.0), 0.0);
+    }
+
+    #[test]
+    fn cmp_is_nan_safe() {
+        assert!(!Cmp::Gt.holds(f64::NAN, 0.0));
+        assert!(!Cmp::Le.holds(f64::NAN, 0.0));
+        assert!(Cmp::Ge.holds(1.0, 1.0));
+        assert_eq!(Cmp::Ge.symbol(), ">=");
+    }
+}

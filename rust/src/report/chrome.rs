@@ -11,6 +11,10 @@
 //!   (`ph: "C"`), rendered by Perfetto as stacked area charts;
 //! - pid 100+node: per-node pod lanes, one complete event per pod from
 //!   creation to termination.
+//!
+//! A `--monitor` run adds pid 4 "alerts": one lane per alert rule, with a
+//! complete event per episode spanning pending→resolved (still-open
+//! episodes extend to the makespan).
 
 use super::SimResult;
 use crate::obs::Actor;
@@ -75,7 +79,46 @@ pub fn to_chrome_trace(res: &SimResult) -> Json {
         push_counters(&mut events, res);
         push_node_lanes(&mut events, o);
     }
+    if let Some(m) = &res.monitor {
+        push_alert_track(&mut events, m);
+    }
     Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+/// pid 4: one lane per alert rule, one complete event per episode.
+fn push_alert_track(events: &mut Vec<Json>, m: &crate::obs::monitor::MonitorReport) {
+    events.push(process_name(4, "alerts"));
+    for (tid, a) in m.alerts.iter().enumerate() {
+        let tid = tid as u64;
+        events.push(thread_name(4, tid, &a.name));
+        for ep in &a.episodes {
+            let end = ep.resolved_ms.unwrap_or(m.makespan_ms);
+            events.push(Json::obj(vec![
+                ("name", Json::str(&a.name)),
+                ("cat", Json::str("alert")),
+                ("ph", Json::str("X")),
+                ("pid", 4u64.into()),
+                ("tid", tid.into()),
+                ("ts", (ep.pending_ms * 1000).into()),
+                ("dur", (end.saturating_sub(ep.pending_ms) * 1000).into()),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("severity", Json::str(&a.severity)),
+                        (
+                            "firing_ms",
+                            match ep.firing_ms {
+                                Some(t) => t.into(),
+                                None => Json::Null,
+                            },
+                        ),
+                        ("peak", ep.peak.into()),
+                        ("resolved", ep.resolved_ms.is_some().into()),
+                    ]),
+                ),
+            ]));
+        }
+    }
 }
 
 /// pid 2: one instant-event lane per control-plane actor.
@@ -223,12 +266,58 @@ mod tests {
         assert_eq!(events.len(), n + 1, "no task may be silently dropped");
         let lost: Vec<_> = events
             .iter()
-            .filter(|e| e.get("cat").and_then(|c| c.as_str()) == Some("lost"))
+            .filter(|e| e.get("cat").ok().and_then(|c| c.as_str().ok()) == Some("lost"))
             .collect();
         assert_eq!(lost.len(), 2);
         for e in &lost {
             assert_eq!(e.get("dur").unwrap().as_u64().unwrap(), 0);
         }
+    }
+
+    #[test]
+    fn monitor_run_gains_an_alert_track() {
+        let dag = dag3x3();
+        let mut res = driver::run(dag, ExecModel::JobBased, driver::SimConfig::with_nodes(3));
+        res.monitor = Some(crate::obs::monitor::MonitorReport {
+            interval_ms: 30_000,
+            ticks: 4,
+            makespan_ms: res.makespan.as_millis(),
+            alerts: vec![crate::obs::monitor::AlertReport {
+                name: "BacklogSaturation".into(),
+                kind: "threshold",
+                severity: "page".into(),
+                tenant: None,
+                expr: "backlog_total > 16".into(),
+                fired: 1,
+                firing_ms: 30_000,
+                final_state: crate::obs::alerts::AlertState::Firing,
+                episodes: vec![crate::obs::alerts::Episode {
+                    pending_ms: 30_000,
+                    firing_ms: Some(60_000),
+                    resolved_ms: None, // open: spans to makespan
+                    peak: 21.0,
+                }],
+            }],
+            records: Vec::new(),
+        });
+        let j = to_chrome_trace(&res);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let alert: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("cat").ok().and_then(|c| c.as_str().ok()) == Some("alert"))
+            .collect();
+        assert_eq!(alert.len(), 1);
+        let e = alert[0];
+        assert_eq!(e.get("pid").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(e.get("ts").unwrap().as_u64().unwrap(), 30_000_000);
+        let dur = e.get("dur").unwrap().as_u64().unwrap();
+        assert_eq!(dur, (res.makespan.as_millis() - 30_000) * 1000);
+        // lane metadata names the rule
+        assert!(events.iter().any(|m| {
+            m.get("name").ok().and_then(|n| n.as_str().ok()) == Some("thread_name")
+                && m.get("pid").ok().and_then(|p| p.as_u64().ok()) == Some(4)
+        }));
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 
     #[test]
@@ -249,7 +338,7 @@ mod tests {
             events
                 .iter()
                 .any(|e| pid_of(e) == 3
-                    && e.get("ph").and_then(|p| p.as_str()) == Some("C")),
+                    && e.get("ph").ok().and_then(|p| p.as_str().ok()) == Some("C")),
             "counter track missing"
         );
         assert!(events.iter().any(|e| pid_of(e) >= 100),

@@ -119,6 +119,52 @@ pub fn render(res: &SimResult) -> String {
         ));
     }
 
+    // alert timeline (monitor runs only)
+    if let Some(mon) = &res.monitor {
+        body.push_str(&format!(
+            "<h2>monitoring &amp; alerting</h2>\
+             <table class='kv'>\
+             <tr><td>scrapes</td><td>{} every {:.0} s</td></tr>\
+             <tr><td>alert rules</td><td>{}</td></tr>\
+             <tr><td>alerts fired</td><td>{}</td></tr>\
+             <tr><td>time firing</td><td>{:.1} s</td></tr>\
+             </table>",
+            mon.ticks,
+            mon.interval_ms as f64 / 1000.0,
+            mon.alerts.len(),
+            mon.fired_total(),
+            mon.firing_ms_total() as f64 / 1000.0,
+        ));
+        let mut rows = String::new();
+        for a in &mon.alerts {
+            for ep in &a.episodes {
+                rows.push_str(&format!(
+                    "<tr><td>{}</td><td>{}</td><td>{:.1}</td><td>{}</td><td>{}</td><td>{:.3}</td></tr>",
+                    a.name,
+                    a.severity,
+                    ep.pending_ms as f64 / 1000.0,
+                    match ep.firing_ms {
+                        Some(t) => format!("{:.1}", t as f64 / 1000.0),
+                        None => "&mdash;".into(),
+                    },
+                    match ep.resolved_ms {
+                        Some(t) => format!("{:.1}", t as f64 / 1000.0),
+                        None => "open".into(),
+                    },
+                    ep.peak,
+                ));
+            }
+        }
+        if !rows.is_empty() {
+            body.push_str(&format!(
+                "<h3>alert timeline</h3>\
+                 <table class='data'><tr><th>alert</th><th>severity</th>\
+                 <th>pending s</th><th>firing s</th><th>resolved s</th>\
+                 <th>peak</th></tr>{rows}</table>"
+            ));
+        }
+    }
+
     body.push_str(
         &AreaChart {
             title: "cluster utilization: workflow tasks executing in parallel".into(),
@@ -229,6 +275,47 @@ mod tests {
             !html.contains("critical-path attribution"),
             "obs-off runs carry no attribution section"
         );
+        assert!(
+            !html.contains("monitoring &amp; alerting"),
+            "monitor-off runs carry no alert section"
+        );
+    }
+
+    #[test]
+    fn monitor_run_renders_the_alert_timeline() {
+        // a real monitor run: builtin rules on a tightly packed cluster
+        let mut cfg = driver::SimConfig::with_nodes(3);
+        cfg.monitor = Some(crate::obs::monitor::MonitorConfig::default());
+        let mut res = driver::run(
+            generate(&MontageConfig {
+                grid_w: 3,
+                grid_h: 3,
+                diagonals: true,
+                seed: 1,
+            }),
+            ExecModel::paper_hybrid_pools(),
+            cfg,
+        );
+        assert!(res.monitor.is_some(), "monitor report attached");
+        // pin one episode so the timeline table renders regardless of
+        // whether the healthy run tripped any builtin alert
+        if let Some(mon) = res.monitor.as_mut() {
+            if let Some(a) = mon.alerts.first_mut() {
+                a.fired += 1;
+                a.episodes.push(crate::obs::alerts::Episode {
+                    pending_ms: 30_000,
+                    firing_ms: Some(60_000),
+                    resolved_ms: Some(90_000),
+                    peak: 17.0,
+                });
+            }
+        }
+        let html = super::render(&res);
+        assert!(html.contains("monitoring &amp; alerting"));
+        assert!(html.contains("alerts fired"));
+        assert!(html.contains("alert timeline"));
+        assert!(html.contains("<th>peak</th>"));
+        assert!(html.contains("<td>17.000</td>"));
     }
 
     #[test]

@@ -126,6 +126,9 @@ pub struct SimResult {
     /// critical-path attribution). `None` unless the run opted in via
     /// `SimConfig::obs` — recording never perturbs the simulation.
     pub obs: Option<crate::obs::ObsReport>,
+    /// Monitoring-stack report (alert lifecycles, final recording-rule
+    /// values). `None` unless the run opted in via `SimConfig::monitor`.
+    pub monitor: Option<crate::obs::monitor::MonitorReport>,
 }
 
 impl SimResult {
@@ -174,6 +177,13 @@ impl SimResult {
                 "obs",
                 match &self.obs {
                     Some(o) => o.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "monitor",
+                match &self.monitor {
+                    Some(m) => m.to_json(),
                     None => Json::Null,
                 },
             ),

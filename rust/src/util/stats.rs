@@ -116,8 +116,13 @@ pub struct PercentileRow {
 /// Integrate a step function given as (time, value) change points over
 /// [t0, t1], returning the time average. Used for average cluster
 /// utilization (the paper's headline metric for Figs. 3-6).
+///
+/// Degenerate windows return 0.0: an empty series, `t1 <= t0` (zero or
+/// negative span — e.g. a zero-makespan run), and non-finite bounds
+/// (`!(t1 > t0)` also catches NaN, which would otherwise slip past a
+/// `t1 <= t0` check and divide by NaN below).
 pub fn time_average(points: &[(f64, f64)], t0: f64, t1: f64) -> f64 {
-    if t1 <= t0 || points.is_empty() {
+    if !(t1 > t0) || !t0.is_finite() || !t1.is_finite() || points.is_empty() {
         return 0.0;
     }
     let mut acc = 0.0;
@@ -245,5 +250,12 @@ mod tests {
     fn time_average_degenerate() {
         assert_eq!(time_average(&[], 0.0, 1.0), 0.0);
         assert_eq!(time_average(&[(0.0, 5.0)], 1.0, 1.0), 0.0);
+        // inverted and non-finite windows must return 0.0, never NaN or
+        // a garbage negative average
+        assert_eq!(time_average(&[(0.0, 5.0)], 2.0, 1.0), 0.0);
+        assert_eq!(time_average(&[(0.0, 5.0)], f64::NAN, 1.0), 0.0);
+        assert_eq!(time_average(&[(0.0, 5.0)], 0.0, f64::NAN), 0.0);
+        assert_eq!(time_average(&[(0.0, 5.0)], 0.0, f64::INFINITY), 0.0);
+        assert_eq!(time_average(&[(0.0, 5.0)], f64::NEG_INFINITY, 1.0), 0.0);
     }
 }

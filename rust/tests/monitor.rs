@@ -1,0 +1,233 @@
+//! Monitoring-stack integration contract.
+//!
+//! Three properties pin the "scrape, never perturb" design:
+//!
+//! 1. the simulation fingerprint (makespan, pods, binds, back-offs, API
+//!    requests) is bit-identical with and without the monitor attached —
+//!    scrapes draw no RNG and read kernel state without mutating it
+//!    (`sim_events` is deliberately excluded: the scrape calendar adds
+//!    `MonitorTick` events, which is the one permitted difference);
+//! 2. a monitor-on rerun with the same seed reproduces the entire alert
+//!    report byte-for-byte — the "alerts file is part of the golden
+//!    trace" guarantee;
+//! 3. a resource-starved chaos fleet drives the builtin rules through
+//!    real alert lifecycles: `BacklogSaturation` (queue threshold with a
+//!    `for:` hold) and `TaskDisruptionBudget` (multi-window SLO
+//!    burn-rate) must both fire.
+
+use hyperflow_k8s::engine::clustering::ClusteringConfig;
+use hyperflow_k8s::exec::{run, run_fleet, ExecModel, SimConfig};
+use hyperflow_k8s::fleet::{FleetPlan, InstanceSpec};
+use hyperflow_k8s::report::SimResult;
+use hyperflow_k8s::obs::monitor::MonitorConfig;
+use hyperflow_k8s::workflow::dag::Dag;
+use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
+
+fn fixed_dag() -> Dag {
+    generate(&MontageConfig {
+        grid_w: 4,
+        grid_h: 4,
+        diagonals: true,
+        seed: 11,
+    })
+}
+
+fn all_models() -> Vec<ExecModel> {
+    vec![
+        ExecModel::JobBased,
+        ExecModel::Clustered(ClusteringConfig::paper_default()),
+        ExecModel::paper_hybrid_pools(),
+        ExecModel::GenericPool,
+    ]
+}
+
+/// The three run configurations exercised per model: healthy cluster,
+/// every chaos injector, and a constrained shared-NFS data plane (the
+/// data config also selects the cache-aware builtin rules).
+fn configs(monitor: bool) -> Vec<(&'static str, SimConfig)> {
+    let mut out = Vec::new();
+    let plain = SimConfig::with_nodes(4);
+    let mut chaos = SimConfig::with_nodes(4);
+    chaos.seed = 7;
+    chaos.chaos =
+        hyperflow_k8s::chaos::ChaosConfig::parse_spec("spot:2,crash:1,pod:0.1,straggler:0.5")
+            .unwrap();
+    let mut data = SimConfig::with_nodes(4);
+    data.data = Some(hyperflow_k8s::data::DataConfig::parse_spec("nfs:0.5,cache:4").unwrap());
+    for (tag, mut cfg) in [("plain", plain), ("chaos", chaos), ("data", data)] {
+        if monitor {
+            cfg.monitor = Some(MonitorConfig::default());
+        }
+        out.push((tag, cfg));
+    }
+    out
+}
+
+/// Ordering-sensitive simulation fingerprint. `sim_events` is excluded
+/// on purpose — `MonitorTick` calendar events are the monitor's only
+/// footprint — but every workload-visible counter is included, so any
+/// scrape-induced perturbation shifts at least one field.
+fn fingerprint(monitor: bool) -> String {
+    let mut out = String::new();
+    for model in all_models() {
+        for (tag, cfg) in configs(monitor) {
+            let res = run(fixed_dag(), model.clone(), cfg);
+            out.push_str(&format!(
+                "{tag}/{}: makespan_ms={} pods={} binds={} backoffs={} api={}\n",
+                model.name(),
+                res.makespan.as_millis(),
+                res.pods_created,
+                res.sched_binds,
+                res.sched_backoffs,
+                res.api_requests,
+            ));
+        }
+    }
+    out
+}
+
+/// Fingerprint plus the full serialized monitor report of every run —
+/// the rerun-identity check covers the alert payload itself, not just
+/// the simulation counters around it.
+fn monitor_fingerprint() -> String {
+    let mut out = fingerprint(true);
+    for model in all_models() {
+        for (tag, cfg) in configs(true) {
+            let res = run(fixed_dag(), model.clone(), cfg);
+            let m = res
+                .monitor
+                .as_ref()
+                .unwrap_or_else(|| panic!("{tag}/{}: monitor missing", model.name()));
+            assert!(m.ticks > 0, "{tag}/{}: no scrapes", model.name());
+            assert!(
+                !m.alerts.is_empty(),
+                "{tag}/{}: builtin rules produced no alert entries",
+                model.name()
+            );
+            out.push_str(&format!("{tag}/{}: {}\n", model.name(), m.to_json()));
+        }
+    }
+    out
+}
+
+#[test]
+fn monitoring_does_not_perturb_the_simulation() {
+    assert_eq!(
+        fingerprint(false),
+        fingerprint(true),
+        "attaching the monitor changed the simulated trace"
+    );
+}
+
+#[test]
+fn monitor_runs_are_bit_identical_on_rerun() {
+    assert_eq!(
+        monitor_fingerprint(),
+        monitor_fingerprint(),
+        "monitor-on rerun diverged (alerts file must be byte-identical)"
+    );
+}
+
+/// A deliberately starved chaos fleet: eight 4×4 Montage instances on a
+/// two-node cluster with aggressive spot reclaims and node crashes. The
+/// parallel stages pile well over 16 pods of backlog for minutes
+/// (BacklogSaturation: `avg_over_time(backlog_total[120s]) > 16 for
+/// 120s`), and the reclaim/crash kills burn the task-disruption error
+/// budget through both the fast and the slow window.
+fn starved_fleet() -> (SimResult, Vec<hyperflow_k8s::fleet::InstanceOutcome>) {
+    let dags: Vec<Dag> = (0..8).map(|_| fixed_dag()).collect();
+    let n = dags[0].len() as u32;
+    let union = Dag::disjoint_union(&dags);
+    let plan = FleetPlan {
+        instances: (0..8u32)
+            .map(|i| InstanceSpec {
+                tenant: (i % 2) as u16,
+                arrival_ms: i as u64 * 20_000,
+                first_task: i * n,
+                n_tasks: n,
+            })
+            .collect(),
+        tenant_weights: vec![1, 1],
+        max_in_flight: None,
+    };
+    let mut cfg = SimConfig::with_nodes(2);
+    cfg.seed = 7;
+    cfg.chaos = hyperflow_k8s::chaos::ChaosConfig::parse_spec("spot:8,crash:4,pod:0.2").unwrap();
+    cfg.monitor = Some(MonitorConfig {
+        interval_ms: 15_000,
+        ..Default::default()
+    });
+    run_fleet(union, ExecModel::paper_hybrid_pools(), cfg, &plan)
+}
+
+#[test]
+fn chaos_fleet_fires_the_builtin_alerts() {
+    let (res, outcomes) = starved_fleet();
+    assert_eq!(outcomes.len(), 8);
+    let m = res.monitor.as_ref().expect("monitor attached");
+    assert!(m.ticks > 10, "fleet run too short to scrape ({} ticks)", m.ticks);
+
+    let find = |name: &str| {
+        m.alerts
+            .iter()
+            .find(|a| a.name == name)
+            .unwrap_or_else(|| panic!("builtin alert {name} missing from report"))
+    };
+    let backlog = find("BacklogSaturation");
+    assert!(
+        backlog.fired > 0,
+        "BacklogSaturation never fired (episodes: {:?})",
+        backlog.episodes
+    );
+    assert!(backlog.firing_ms > 0);
+    let burn = find("TaskDisruptionBudget");
+    assert!(
+        burn.fired > 0,
+        "TaskDisruptionBudget burn-rate never fired (episodes: {:?})",
+        burn.episodes
+    );
+
+    // every episode is a well-ordered lifecycle: pending <= firing <= resolved
+    for a in &m.alerts {
+        for e in &a.episodes {
+            if let Some(f) = e.firing_ms {
+                assert!(f >= e.pending_ms, "{}: fired before pending", a.name);
+                if let Some(r) = e.resolved_ms {
+                    assert!(r >= f, "{}: resolved before firing", a.name);
+                }
+            }
+        }
+        for e in a.episodes.iter().take(a.episodes.len().saturating_sub(1)) {
+            assert!(
+                e.resolved_ms.is_some(),
+                "{}: only the last episode may be open at end of run",
+                a.name
+            );
+        }
+    }
+    assert!(!m.timeline().is_empty(), "firing alerts must produce a timeline");
+
+    // the smoothed recording rules (autoscaler forecast inputs) are in
+    // the report, and set_fleet installed the per-tenant SLO rules
+    assert!(
+        m.records.iter().any(|(n, _)| n == "backlog_forecast"),
+        "holt_winters recording rule missing: {:?}",
+        m.records
+    );
+    assert!(
+        m.alerts.iter().any(|a| a.tenant == Some(1)),
+        "per-tenant rules missing after set_fleet"
+    );
+}
+
+#[test]
+fn fleet_alert_reports_are_byte_identical_on_rerun() {
+    let (a, _) = starved_fleet();
+    let (b, _) = starved_fleet();
+    let (ja, jb) = (
+        a.monitor.expect("monitor attached").to_json().to_string(),
+        b.monitor.expect("monitor attached").to_json().to_string(),
+    );
+    assert!(!ja.is_empty());
+    assert_eq!(ja, jb, "same-seed fleet rerun must emit an identical alerts file");
+}
