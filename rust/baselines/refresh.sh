@@ -12,7 +12,28 @@ HF_CHAOS_GRID=4 HF_CHAOS_RATES=2,4,8 cargo bench --bench chaos_resilience
 HF_DATA_GRID=4 HF_DATA_RATES=0.5,2 cargo bench --bench data_locality
 HF_ISO_DURATION=1200 HF_ISO_RATE=12 HF_ISO_NODES=6 cargo bench --bench tenant_takeover
 
+# Validate each artifact before installing it as a baseline: valid JSON,
+# current schema, full provenance meta, and not a placeholder. A bench
+# that emits a malformed document must fail the refresh, not poison the
+# committed baselines.
 for f in BENCH_driver.json BENCH_fleet.json BENCH_chaos.json BENCH_data.json BENCH_isolation.json; do
-    [ -f "$f" ] && cp "$f" baselines/"$f"
+    if [ ! -f "$f" ]; then
+        echo "refresh: $f was not emitted" >&2
+        exit 1
+    fi
+    python3 - "$f" <<'EOF'
+import json, sys
+path = sys.argv[1]
+doc = json.load(open(path))
+assert not doc.get("placeholder"), f"{path}: bench emitted a placeholder"
+assert doc.get("schema_version") == 1, f"{path}: schema_version != 1"
+meta = doc.get("meta")
+assert isinstance(meta, dict), f"{path}: missing meta block"
+for key in ("model", "seed", "git", "config_fingerprint"):
+    assert key in meta, f"{path}: meta lacks '{key}'"
+print(f"{path}: schema ok")
+EOF
+    cp "$f" baselines/"$f"
 done
 echo "baselines refreshed — review the diff before committing"
+echo "gate check: cargo run --release -- diff --bench baselines/BENCH_driver.json BENCH_driver.json --tolerance baselines/tolerances.json"

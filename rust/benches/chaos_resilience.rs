@@ -113,6 +113,11 @@ fn main() {
 
     let out = Json::obj(vec![
         ("bench", Json::str("chaos_resilience")),
+        ("schema_version", hyperflow_k8s::util::meta::BENCH_SCHEMA_VERSION.into()),
+        (
+            "meta",
+            hyperflow_k8s::util::meta::bench_meta("all-models", seed, &mk_cfg(None).fingerprint()),
+        ),
         ("nodes", nodes.into()),
         ("grid", grid.into()),
         ("seed", seed.into()),

@@ -161,9 +161,18 @@ fn main() {
     }) - per_gen)
         .max(1e-9);
 
-    // persist the trajectory (read by humans and future-PR comparisons)
+    // persist the trajectory (read by humans and the `diff --bench` gate)
     let out = Json::obj(vec![
         ("bench", Json::str("coordinator_hotpath")),
+        ("schema_version", hyperflow_k8s::util::meta::BENCH_SCHEMA_VERSION.into()),
+        (
+            "meta",
+            hyperflow_k8s::util::meta::bench_meta(
+                "all-models",
+                wf.seed,
+                &driver::SimConfig::with_nodes(17).fingerprint(),
+            ),
+        ),
         ("grid", grid.into()),
         ("tasks", n.into()),
         ("models", Json::Arr(model_rows)),

@@ -106,8 +106,15 @@ fn main() {
         ]));
     }
 
+    let mut meta_cfg = driver::SimConfig::with_nodes(nodes);
+    meta_cfg.seed = seed;
     let out = Json::obj(vec![
         ("bench", Json::str("data_locality")),
+        ("schema_version", hyperflow_k8s::util::meta::BENCH_SCHEMA_VERSION.into()),
+        (
+            "meta",
+            hyperflow_k8s::util::meta::bench_meta("all-models", seed, &meta_cfg.fingerprint()),
+        ),
         ("nodes", nodes.into()),
         ("grid", grid.into()),
         ("cache_gb", cache_gb.into()),

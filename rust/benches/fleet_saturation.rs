@@ -69,6 +69,15 @@ fn main() {
 
     let out = Json::obj(vec![
         ("bench", Json::str("fleet_saturation")),
+        ("schema_version", hyperflow_k8s::util::meta::BENCH_SCHEMA_VERSION.into()),
+        (
+            "meta",
+            hyperflow_k8s::util::meta::bench_meta(
+                "worker-pools",
+                42,
+                &driver::SimConfig::with_nodes(nodes).fingerprint(),
+            ),
+        ),
         ("model", Json::str("worker-pools")),
         ("nodes", nodes.into()),
         ("duration_s", duration.into()),

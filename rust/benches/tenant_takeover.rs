@@ -141,6 +141,15 @@ fn main() {
 
     let out = Json::obj(vec![
         ("bench", Json::str("tenant_takeover")),
+        ("schema_version", hyperflow_k8s::util::meta::BENCH_SCHEMA_VERSION.into()),
+        (
+            "meta",
+            hyperflow_k8s::util::meta::bench_meta(
+                "all-models",
+                seed,
+                &mk_sim(None, None).fingerprint(),
+            ),
+        ),
         ("nodes", nodes.into()),
         ("tenants", tenants.into()),
         ("duration_s", duration.into()),

@@ -225,6 +225,19 @@ impl SimConfig {
         self
     }
 
+    /// Deterministic fingerprint of the simulation-relevant knobs, as a
+    /// 16-hex-digit FNV-1a hash. Observation attachments (`obs`,
+    /// `monitor`) are normalized out before hashing: by the determinism
+    /// contract they never perturb the simulated trace, so two runs that
+    /// differ only in observation carry the *same* fingerprint and
+    /// `hyperflow diff` will not flag them as differently configured.
+    pub fn fingerprint(&self) -> String {
+        let mut canon = self.clone();
+        canon.obs = false;
+        canon.monitor = None;
+        format!("{:016x}", crate::util::meta::fnv1a64(format!("{canon:?}").as_bytes()))
+    }
+
     /// Start a validating builder (CLI entry points use this so bad flag
     /// combinations exit with a named [`ConfigError`] instead of a panic
     /// halfway through a run).

@@ -486,12 +486,14 @@ fn summarize(
                 finished: p.finished_at,
             })
             .collect();
+        let phase_rows = crate::obs::phase_rows(rec.spans());
         ObsReport {
             attribution,
             critical_path,
             events: rec.events,
             pods,
             instance_attr: Vec::new(),
+            phase_rows,
         }
     });
 

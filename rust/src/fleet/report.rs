@@ -486,6 +486,7 @@ mod tests {
                 }),
                 None,
             ],
+            phase_rows: Vec::new(),
         });
         let t = render_table(&r);
         assert!(t.contains("crit-queue-s"));

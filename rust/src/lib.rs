@@ -40,6 +40,13 @@
 //!   full inactive→pending→firing→resolved lifecycle — plus
 //!   `ewma`/`holt_winters` forecasters queryable from kernel hooks
 //!   (`--monitor interval:30,rules:builtin,alerts:alerts.json`);
+//! * **differential run analysis** ([`obs::snapshot`], [`obs::diff`]):
+//!   byte-deterministic versioned run snapshots (`--snapshot out.json`)
+//!   and a diff engine that decomposes a makespan delta phase-by-phase
+//!   (integer-ms deltas summing exactly to the makespan delta), locates
+//!   the first critical-path divergence, and doubles as the CI
+//!   perf-regression gate (`hyperflow diff --bench` with per-metric
+//!   tolerances against `baselines/`);
 //! * the **Montage workflow generator** ([`workflow`]);
 //! * a **PJRT runtime** ([`runtime`]) executing the real Montage numerics
 //!   (JAX + Pallas, AOT-compiled to HLO) inside worker pods ([`compute`],

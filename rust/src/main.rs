@@ -17,6 +17,15 @@ fn usage() -> ! {
            info       --tasks N\n\
            trace      --model job|clustered|pools --tasks N --out trace.json\n\
                       (Chrome trace-event export for chrome://tracing / Perfetto)\n\
+           diff       A.json B.json [--json] [--html FILE]\n\
+                      (differential analysis of two --snapshot files: the\n\
+                      makespan delta decomposed phase-by-phase — deltas sum\n\
+                      exactly to the makespan delta — first critical-path\n\
+                      divergence, counter/gauge/alert/tenant changes)\n\
+           diff       --bench BASELINE.json CURRENT.json [--tolerance FILE]\n\
+                      (perf-regression gate over two BENCH_*.json artifacts;\n\
+                      exits 1 when a metric moves beyond its tolerance,\n\
+                      skips with a notice on placeholder baselines)\n\
          flags for run:\n\
            --cluster-size N --cluster-timeout MS   (clustered model)\n\
            --max-pending N                          (throttled job model, §5)\n\
@@ -27,6 +36,9 @@ fn usage() -> ! {
            --monitor SPEC                           in-sim monitoring stack (see below)\n\
            --json                                   print result as JSON\n\
            --html FILE                              write an HTML report\n\
+           --snapshot FILE                          write a versioned run snapshot\n\
+                      (deterministic: same seed => byte-identical file; feed a\n\
+                      pair of them to `hyperflow diff`; also on serve/trace)\n\
          obs SPEC (run/serve/trace): flight recorder, comma-separated\n\
            trace:FILE   extended Chrome trace: control-plane instant events,\n\
                         counter tracks, per-node pod lanes (Perfetto-ready)\n\
@@ -110,7 +122,9 @@ fn parse_sim(args: &Args, max_pending: bool) -> driver::SimConfig {
         .chaos(parse_chaos(args))
         .data(parse_data(args))
         .isolation(parse_isolation(args))
-        .obs(args.has("obs"))
+        // --snapshot needs the flight recorder for attribution and the
+        // critical path, so it implies recording (which never perturbs)
+        .obs(args.has("obs") || args.has("snapshot"))
         .monitor(parse_monitor(args));
     if max_pending && args.has("max-pending") {
         b = b.max_pending_pods(Some(args.get_usize("max-pending", 64)));
@@ -130,6 +144,7 @@ fn main() {
         Some("generate") => cmd_generate(&args),
         Some("info") => cmd_info(&args),
         Some("trace") => cmd_trace(&args),
+        Some("diff") => cmd_diff(&args),
         _ => usage(),
     }
 }
@@ -289,11 +304,20 @@ fn parse_model(args: &Args) -> ExecModel {
 
 /// `hyperflow trace --model pools --tasks 2000 --out trace.json` — export a
 /// Chrome trace-event file (open in chrome://tracing or Perfetto).
+/// Write the `--snapshot FILE` artifact: deterministic, versioned run
+/// snapshot JSON for `hyperflow diff`.
+fn write_snapshot(path: &str, snap: hyperflow_k8s::util::json::Json) {
+    std::fs::write(path, format!("{snap}\n")).expect("write snapshot");
+    eprintln!("wrote {path}");
+}
+
 fn cmd_trace(args: &Args) {
     let cfg = montage_cfg(args);
     let dag = generate(&cfg);
     let model = parse_model(args);
     let sim = parse_sim(args, false);
+    // keep the config for snapshot provenance (run() consumes it)
+    let snap_cfg = sim.clone();
     let res = driver::run(dag, model, sim);
     let out = args.get_or("out", "trace.json");
     std::fs::write(out, hyperflow_k8s::report::chrome::to_chrome_trace(&res).to_string())
@@ -309,6 +333,9 @@ fn cmd_trace(args: &Args) {
         write_obs_artifacts(&res, &spec);
     }
     write_monitor_artifacts(&res, args);
+    if let Some(path) = args.get("snapshot") {
+        write_snapshot(path, hyperflow_k8s::obs::snapshot::capture(&res, &snap_cfg));
+    }
 }
 
 fn montage_cfg(args: &Args) -> MontageConfig {
@@ -318,6 +345,8 @@ fn montage_cfg(args: &Args) -> MontageConfig {
 }
 
 fn cmd_run(args: &Args) {
+    // set in flag mode only: snapshots need the SimConfig for provenance
+    let mut snap_cfg: Option<driver::SimConfig> = None;
     // config-file mode: the whole experiment comes from JSON
     let res = if let Some(path) = args.get("config") {
         let exp = hyperflow_k8s::config::ExperimentConfig::load(path)
@@ -344,8 +373,15 @@ fn cmd_run(args: &Args) {
             n_tasks,
             sim.nodes
         );
+        snap_cfg = Some(sim.clone());
         driver::run(dag, model, sim)
     };
+    if let Some(path) = args.get("snapshot") {
+        match &snap_cfg {
+            Some(cfg) => write_snapshot(path, hyperflow_k8s::obs::snapshot::capture(&res, cfg)),
+            None => eprintln!("note: --snapshot is not supported with --config"),
+        }
+    }
     if let Some(path) = args.get("html") {
         let html = hyperflow_k8s::report::html::render(&res);
         std::fs::write(path, html).expect("write html report");
@@ -522,6 +558,7 @@ fn cmd_serve(args: &Args) {
         max_in_flight: (cap > 0).then_some(cap),
     };
     let sim = parse_sim(args, false);
+    let snap_cfg = sim.clone();
     eprintln!(
         "fleet: {} arrivals over {duration:.0}s, {n_tenants} tenants, {} on {nodes} nodes (seed {seed})",
         fleet_cfg.arrival.label(),
@@ -538,6 +575,12 @@ fn cmd_serve(args: &Args) {
         write_obs_artifacts(&res.sim, &spec);
     }
     write_monitor_artifacts(&res.sim, args);
+    if let Some(path) = args.get("snapshot") {
+        write_snapshot(
+            path,
+            hyperflow_k8s::obs::snapshot::capture_fleet(&res, &snap_cfg),
+        );
+    }
     if args.has("json") {
         println!("{}", fleet::report::to_json(&res));
     } else {
@@ -581,6 +624,74 @@ fn cmd_serve(args: &Args) {
         }
         println!();
         print!("{}", fleet::report::render_table(&res));
+    }
+}
+
+/// `hyperflow diff A.json B.json` — differential analysis of two run
+/// snapshots — and `hyperflow diff --bench BASE.json CUR.json` — the
+/// perf-regression gate over two `BENCH_*.json` artifacts.
+///
+/// Exit codes: 0 = compared (diff printed / gate passed or skipped),
+/// 1 = gate breached, 2 = unreadable or malformed input.
+fn cmd_diff(args: &Args) {
+    use hyperflow_k8s::obs::diff::{compare_bench, diff, Tolerances};
+    use hyperflow_k8s::report::diff::{render_bench_text, render_html, render_text};
+    use hyperflow_k8s::util::json::Json;
+
+    let mut files: Vec<String> = Vec::new();
+    if let Some(v) = args.get("bench") {
+        // the CLI parser consumes the token after `--bench` as the
+        // flag's value; recover it as the first input file
+        if v != "true" {
+            files.push(v.to_string());
+        }
+    }
+    files.extend(args.positional.iter().skip(1).cloned());
+    let [a_path, b_path] = files.as_slice() else {
+        eprintln!("diff: expected exactly two input files, got {}", files.len());
+        usage()
+    };
+    let read = |path: &str| -> Json {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("diff: cannot read '{path}': {e}");
+            std::process::exit(2)
+        });
+        Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("diff: '{path}' is not valid JSON: {e}");
+            std::process::exit(2)
+        })
+    };
+    let a = read(a_path);
+    let b = read(b_path);
+
+    if args.has("bench") {
+        let tol = match args.get("tolerance") {
+            Some(path) if path != "true" => Tolerances::parse(&read(path)).unwrap_or_else(|e| {
+                eprintln!("diff: --tolerance: {e}");
+                std::process::exit(2)
+            }),
+            _ => Tolerances::default(),
+        };
+        let outcome = compare_bench(&a, &b, &tol);
+        print!("{}", render_bench_text(a_path, b_path, &outcome));
+        if outcome.breached() {
+            std::process::exit(1);
+        }
+        return;
+    }
+
+    let d = diff(&a, &b).unwrap_or_else(|e| {
+        eprintln!("diff: {e}");
+        std::process::exit(2)
+    });
+    if let Some(path) = args.get("html") {
+        std::fs::write(path, render_html(&d)).expect("write diff html");
+        eprintln!("wrote {path}");
+    }
+    if args.has("json") {
+        println!("{}", d.to_json());
+    } else {
+        print!("{}", render_text(&d));
     }
 }
 

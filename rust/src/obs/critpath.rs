@@ -57,7 +57,36 @@ impl Attribution {
             + self.recovery_ms
     }
 
+    /// Milliseconds of one phase, by its snapshot-schema name.
+    pub fn phase_ms(&self, phase: &str) -> Option<u64> {
+        match phase {
+            "queueing" => Some(self.queueing_ms),
+            "scheduling" => Some(self.scheduling_ms),
+            "pod_start" => Some(self.pod_start_ms),
+            "stage_in" => Some(self.stage_in_ms),
+            "compute" => Some(self.compute_ms),
+            "stage_out" => Some(self.stage_out_ms),
+            "recovery" => Some(self.recovery_ms),
+            _ => None,
+        }
+    }
+
+    /// JSON view. Three families of fields:
+    /// * legacy float seconds (`*_s`, kept for existing consumers),
+    /// * exact integer milliseconds (`*_ms` plus `makespan_ms`, the
+    ///   attributed span `makespan − base`) — what `hyperflow diff`
+    ///   telescopes on,
+    /// * phase fractions of the attributed span (`*_frac`, 0.0 on an
+    ///   empty attribution).
     pub fn to_json(&self) -> Json {
+        let total = self.total_ms();
+        let frac = |ms: u64| {
+            if total == 0 {
+                0.0
+            } else {
+                ms as f64 / total as f64
+            }
+        };
         Json::obj(vec![
             ("path_tasks", (self.path_tasks as u64).into()),
             ("queueing_s", (self.queueing_ms as f64 / 1000.0).into()),
@@ -67,7 +96,22 @@ impl Attribution {
             ("compute_s", (self.compute_ms as f64 / 1000.0).into()),
             ("stage_out_s", (self.stage_out_ms as f64 / 1000.0).into()),
             ("recovery_s", (self.recovery_ms as f64 / 1000.0).into()),
-            ("total_s", (self.total_ms() as f64 / 1000.0).into()),
+            ("total_s", (total as f64 / 1000.0).into()),
+            ("queueing_ms", self.queueing_ms.into()),
+            ("scheduling_ms", self.scheduling_ms.into()),
+            ("pod_start_ms", self.pod_start_ms.into()),
+            ("stage_in_ms", self.stage_in_ms.into()),
+            ("compute_ms", self.compute_ms.into()),
+            ("stage_out_ms", self.stage_out_ms.into()),
+            ("recovery_ms", self.recovery_ms.into()),
+            ("makespan_ms", total.into()),
+            ("queueing_frac", frac(self.queueing_ms).into()),
+            ("scheduling_frac", frac(self.scheduling_ms).into()),
+            ("pod_start_frac", frac(self.pod_start_ms).into()),
+            ("stage_in_frac", frac(self.stage_in_ms).into()),
+            ("compute_frac", frac(self.compute_ms).into()),
+            ("stage_out_frac", frac(self.stage_out_ms).into()),
+            ("recovery_frac", frac(self.recovery_ms).into()),
         ])
     }
 
@@ -97,6 +141,18 @@ impl Attribution {
         out
     }
 }
+
+/// Snapshot-schema phase names, in telescoping order. The diff engine
+/// and the per-phase percentile rows index phases by these strings.
+pub const PHASES: [&str; 7] = [
+    "queueing",
+    "scheduling",
+    "pod_start",
+    "stage_in",
+    "compute",
+    "stage_out",
+    "recovery",
+];
 
 /// Predecessor lists for every task (the DAG only stores successors).
 pub fn predecessors(dag: &Dag) -> Vec<Vec<u32>> {
@@ -313,5 +369,45 @@ mod tests {
         let j = attr.to_json().to_string();
         assert!(j.contains("\"total_s\""));
         assert!(j.contains("\"pod_start_s\""));
+    }
+
+    #[test]
+    fn json_carries_exact_integer_ms_and_fractions() {
+        let (r, preds) = recorder();
+        let (attr, _) = attribute(&r, &preds, 0, 2, SimTime::ZERO).unwrap();
+        let j = attr.to_json();
+        assert_eq!(j.get("makespan_ms").unwrap().as_u64().unwrap(), 15_500);
+        let mut sum = 0;
+        for phase in PHASES {
+            let ms = j.get(&format!("{phase}_ms")).unwrap().as_u64().unwrap();
+            assert_eq!(Some(ms), attr.phase_ms(phase));
+            sum += ms;
+            let frac = j.get(&format!("{phase}_frac")).unwrap().as_f64().unwrap();
+            assert!((frac - ms as f64 / 15_500.0).abs() < 1e-12);
+        }
+        assert_eq!(sum, 15_500, "integer phase ms telescope in JSON too");
+        // empty attribution: fractions are 0.0, not NaN
+        let empty = Attribution::default().to_json();
+        assert_eq!(empty.get("compute_frac").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    /// `render()` is consumed as opaque text by scripts and compared in
+    /// PR diffs — pin the exact bytes so the `to_json` extension (and
+    /// future ones) cannot drift the human-facing report.
+    #[test]
+    fn render_output_is_byte_stable() {
+        let (r, preds) = recorder();
+        let (attr, _) = attribute(&r, &preds, 0, 2, SimTime::ZERO).unwrap();
+        let expected = concat!(
+            "critical path: 2 tasks, 15.5 s attributed of 15.5 s makespan\n",
+            "  queueing            0.8 s    5.2%\n",
+            "  scheduling          0.2 s    1.3%\n",
+            "  pod-start           2.0 s   12.9%\n",
+            "  stage-in            1.0 s    6.5%\n",
+            "  compute            11.0 s   71.0%\n",
+            "  stage-out           0.5 s    3.2%\n",
+            "  recovery            0.0 s    0.0%\n",
+        );
+        assert_eq!(attr.render(SimTime(15_500)), expected);
     }
 }

@@ -1,0 +1,961 @@
+//! Cross-run differential analysis: the engine behind `hyperflow diff`.
+//!
+//! Two layers:
+//!
+//! * [`diff`] compares two run snapshots ([`super::snapshot`]) and
+//!   decomposes the makespan delta phase-by-phase. Because attribution
+//!   telescopes in integer milliseconds on both sides (the seven phases
+//!   sum *exactly* to each run's makespan), the per-phase deltas sum
+//!   exactly to the makespan delta — no rounding residue, ever. On top
+//!   of that it locates the first critical-path divergence point and
+//!   diffs counter finals, gauge finals, alert lifecycles, per-tenant
+//!   SLO rows, and the population-wide phase tails.
+//! * [`compare_bench`] is the perf-regression gate: it walks two
+//!   `BENCH_*.json` documents leaf-by-leaf and flags every numeric
+//!   metric whose relative change exceeds its per-metric tolerance
+//!   ([`Tolerances`], loaded from `baselines/tolerances.json`).
+//!   Placeholder baselines (never measured — the committed state until
+//!   `baselines/refresh.sh` runs on a real toolchain) disarm the gate
+//!   with a notice instead of failing.
+//!
+//! Rendering lives in [`crate::report::diff`]; this module is pure data.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::critpath::PHASES;
+use super::snapshot::SNAPSHOT_SCHEMA_VERSION;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------
+// snapshot diff
+// ---------------------------------------------------------------------
+
+/// One critical-path phase on both sides. `delta_ms` is B − A: positive
+/// means run B spent longer in this phase.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseDelta {
+    pub phase: &'static str,
+    pub a_ms: u64,
+    pub b_ms: u64,
+}
+
+impl PhaseDelta {
+    pub fn delta_ms(&self) -> i64 {
+        self.b_ms as i64 - self.a_ms as i64
+    }
+}
+
+/// First index at which the two critical paths stop agreeing, with the
+/// task on each side (`None` where one path already ended).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Divergence {
+    pub index: usize,
+    pub a_task: Option<u64>,
+    pub a_type: String,
+    pub b_task: Option<u64>,
+    pub b_type: String,
+}
+
+/// A counter whose final value (or presence) changed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CounterDelta {
+    pub name: String,
+    pub a: u64,
+    pub b: u64,
+    pub in_a: bool,
+    pub in_b: bool,
+}
+
+impl CounterDelta {
+    pub fn delta(&self) -> i64 {
+        self.b as i64 - self.a as i64
+    }
+}
+
+/// A gauge whose final value changed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaugeDelta {
+    pub name: String,
+    pub a: f64,
+    pub b: f64,
+}
+
+/// An alert whose lifecycle changed between the runs (or that exists on
+/// one side only).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AlertDelta {
+    pub name: String,
+    pub in_a: bool,
+    pub in_b: bool,
+    pub fired_a: u64,
+    pub fired_b: u64,
+    pub firing_ms_a: u64,
+    pub firing_ms_b: u64,
+    pub episodes_a: u64,
+    pub episodes_b: u64,
+    pub state_a: String,
+    pub state_b: String,
+}
+
+/// A tenant whose SLO headline numbers changed (fleet snapshots only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantDelta {
+    pub tenant: u64,
+    pub instances_a: u64,
+    pub instances_b: u64,
+    pub queue_delay_mean_s_a: f64,
+    pub queue_delay_mean_s_b: f64,
+    pub makespan_mean_s_a: f64,
+    pub makespan_mean_s_b: f64,
+    pub slowdown_p99_a: f64,
+    pub slowdown_p99_b: f64,
+}
+
+/// A population-wide phase distribution that shifted (mean or p95) —
+/// distinguishes a critical-path-only change from a fleet-wide one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseTailDelta {
+    pub phase: String,
+    pub mean_a_ms: f64,
+    pub mean_b_ms: f64,
+    pub p95_a_ms: f64,
+    pub p95_b_ms: f64,
+}
+
+/// Complete structured diff of two run snapshots (A → B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotDiff {
+    pub model_a: String,
+    pub model_b: String,
+    pub seed_a: u64,
+    pub seed_b: u64,
+    pub makespan_a_ms: u64,
+    pub makespan_b_ms: u64,
+    /// The seven phases in [`PHASES`] order; empty when either snapshot
+    /// lacks an attribution block.
+    pub phases: Vec<PhaseDelta>,
+    pub path_len_a: usize,
+    pub path_len_b: usize,
+    pub divergence: Option<Divergence>,
+    /// Changed entries only — all four lists (and `phase_tails`) are
+    /// empty for a self-diff.
+    pub counters: Vec<CounterDelta>,
+    pub gauges: Vec<GaugeDelta>,
+    pub alerts: Vec<AlertDelta>,
+    pub tenants: Vec<TenantDelta>,
+    pub phase_tails: Vec<PhaseTailDelta>,
+    /// Provenance caveats (schema/config/kind mismatches, missing
+    /// attribution). Warnings never make a diff non-zero.
+    pub warnings: Vec<String>,
+}
+
+impl SnapshotDiff {
+    pub fn makespan_delta_ms(&self) -> i64 {
+        self.makespan_b_ms as i64 - self.makespan_a_ms as i64
+    }
+
+    /// Sum of the per-phase deltas. Equal to [`Self::makespan_delta_ms`]
+    /// *exactly* whenever both snapshots carry whole-run attribution —
+    /// the telescoping invariant, in difference form.
+    pub fn phase_delta_sum_ms(&self) -> i64 {
+        self.phases.iter().map(PhaseDelta::delta_ms).sum()
+    }
+
+    /// True iff the two runs are observationally identical: zero
+    /// makespan delta, zero in every phase, identical critical paths,
+    /// and no counter/gauge/alert/tenant/tail change.
+    pub fn is_zero(&self) -> bool {
+        self.makespan_delta_ms() == 0
+            && self.phases.iter().all(|p| p.delta_ms() == 0)
+            && self.divergence.is_none()
+            && self.path_len_a == self.path_len_b
+            && self.counters.is_empty()
+            && self.gauges.is_empty()
+            && self.alerts.is_empty()
+            && self.tenants.is_empty()
+            && self.phase_tails.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let phase_deltas = Json::Obj(
+            self.phases
+                .iter()
+                .map(|p| (p.phase.to_string(), Json::Num(p.delta_ms() as f64)))
+                .collect(),
+        );
+        let divergence = match &self.divergence {
+            Some(d) => Json::obj(vec![
+                ("index", d.index.into()),
+                ("a_task", d.a_task.map(Json::from).unwrap_or(Json::Null)),
+                ("a_type", Json::str(&d.a_type)),
+                ("b_task", d.b_task.map(Json::from).unwrap_or(Json::Null)),
+                ("b_type", Json::str(&d.b_type)),
+            ]),
+            None => Json::Null,
+        };
+        let counters = self
+            .counters
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("name", Json::str(&c.name)),
+                    ("a", c.a.into()),
+                    ("b", c.b.into()),
+                    ("delta", Json::Num(c.delta() as f64)),
+                ])
+            })
+            .collect();
+        let gauges = self
+            .gauges
+            .iter()
+            .map(|g| {
+                Json::obj(vec![
+                    ("name", Json::str(&g.name)),
+                    ("a", g.a.into()),
+                    ("b", g.b.into()),
+                ])
+            })
+            .collect();
+        let alerts = self
+            .alerts
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("name", Json::str(&a.name)),
+                    ("fired_a", a.fired_a.into()),
+                    ("fired_b", a.fired_b.into()),
+                    ("firing_ms_a", a.firing_ms_a.into()),
+                    ("firing_ms_b", a.firing_ms_b.into()),
+                    ("episodes_a", a.episodes_a.into()),
+                    ("episodes_b", a.episodes_b.into()),
+                    ("state_a", Json::str(&a.state_a)),
+                    ("state_b", Json::str(&a.state_b)),
+                ])
+            })
+            .collect();
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("tenant", t.tenant.into()),
+                    ("instances_a", t.instances_a.into()),
+                    ("instances_b", t.instances_b.into()),
+                    ("queue_delay_mean_s_a", t.queue_delay_mean_s_a.into()),
+                    ("queue_delay_mean_s_b", t.queue_delay_mean_s_b.into()),
+                    ("makespan_mean_s_a", t.makespan_mean_s_a.into()),
+                    ("makespan_mean_s_b", t.makespan_mean_s_b.into()),
+                    ("slowdown_p99_a", t.slowdown_p99_a.into()),
+                    ("slowdown_p99_b", t.slowdown_p99_b.into()),
+                ])
+            })
+            .collect();
+        let tails = self
+            .phase_tails
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("phase", Json::str(&t.phase)),
+                    ("mean_a_ms", t.mean_a_ms.into()),
+                    ("mean_b_ms", t.mean_b_ms.into()),
+                    ("p95_a_ms", t.p95_a_ms.into()),
+                    ("p95_b_ms", t.p95_b_ms.into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("model_a", Json::str(&self.model_a)),
+            ("model_b", Json::str(&self.model_b)),
+            ("seed_a", self.seed_a.into()),
+            ("seed_b", self.seed_b.into()),
+            ("makespan_a_ms", self.makespan_a_ms.into()),
+            ("makespan_b_ms", self.makespan_b_ms.into()),
+            ("makespan_delta_ms", Json::Num(self.makespan_delta_ms() as f64)),
+            ("zero", self.is_zero().into()),
+            ("phase_deltas", phase_deltas),
+            (
+                "phase_delta_sum_ms",
+                Json::Num(self.phase_delta_sum_ms() as f64),
+            ),
+            ("path_len_a", self.path_len_a.into()),
+            ("path_len_b", self.path_len_b.into()),
+            ("divergence", divergence),
+            ("counters", Json::Arr(counters)),
+            ("gauges", Json::Arr(gauges)),
+            ("alerts", Json::Arr(alerts)),
+            ("tenants", Json::Arr(tenants)),
+            ("phase_tails", Json::Arr(tails)),
+            (
+                "warnings",
+                Json::Arr(self.warnings.iter().map(|w| Json::str(w)).collect()),
+            ),
+        ])
+    }
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(|v| v.as_u64())
+        .map_err(|e| format!("snapshot: {e}"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .map_err(|e| format!("snapshot: {e}"))
+}
+
+/// `(task, type)` pairs of a snapshot's critical path.
+fn path_of(j: &Json) -> Vec<(u64, String)> {
+    j.opt("critical_path")
+        .and_then(|v| v.as_arr().ok())
+        .map(|arr| {
+            arr.iter()
+                .map(|e| {
+                    (
+                        e.opt("task").and_then(|t| t.as_u64().ok()).unwrap_or(0),
+                        e.opt("type")
+                            .and_then(|t| t.as_str().ok())
+                            .unwrap_or("")
+                            .to_string(),
+                    )
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Flat `name → number` view of an object-valued snapshot field.
+fn num_map(j: &Json, key: &str) -> BTreeMap<String, f64> {
+    j.opt(key)
+        .and_then(|v| v.as_obj().ok())
+        .map(|o| {
+            o.iter()
+                .filter_map(|(k, v)| v.as_f64().ok().map(|n| (k.clone(), n)))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// `name → (fired, firing_ms, episodes, final_state)` from the monitor
+/// block (empty when the run had no monitor attached).
+fn alert_map(j: &Json) -> BTreeMap<String, (u64, u64, u64, String)> {
+    let mut out = BTreeMap::new();
+    let Some(alerts) = j
+        .opt("monitor")
+        .and_then(|m| m.opt("alerts"))
+        .and_then(|a| a.as_arr().ok())
+    else {
+        return out;
+    };
+    for a in alerts {
+        let Ok(name) = a.get("name").and_then(|n| n.as_str()) else {
+            continue;
+        };
+        out.insert(
+            name.to_string(),
+            (
+                a.opt("fired").and_then(|v| v.as_u64().ok()).unwrap_or(0),
+                a.opt("firing_ms")
+                    .and_then(|v| v.as_u64().ok())
+                    .unwrap_or(0),
+                a.opt("episodes")
+                    .and_then(|v| v.as_arr().ok())
+                    .map(|e| e.len() as u64)
+                    .unwrap_or(0),
+                a.opt("final_state")
+                    .and_then(|v| v.as_str().ok())
+                    .unwrap_or("")
+                    .to_string(),
+            ),
+        );
+    }
+    out
+}
+
+/// `tenant → row` view of a fleet snapshot's tenant table.
+fn tenant_map(j: &Json) -> BTreeMap<u64, &Json> {
+    let mut out = BTreeMap::new();
+    let Some(rows) = j.opt("tenants").and_then(|t| t.as_arr().ok()) else {
+        return out;
+    };
+    for row in rows {
+        if let Some(id) = row.opt("tenant").and_then(|t| t.as_u64().ok()) {
+            out.insert(id, row);
+        }
+    }
+    out
+}
+
+fn field_f64(row: &Json, key: &str) -> f64 {
+    row.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+}
+
+/// Diff two parsed snapshots (A → B). Errors only on documents that are
+/// not snapshots at all; provenance mismatches become warnings.
+pub fn diff(a: &Json, b: &Json) -> Result<SnapshotDiff, String> {
+    let mut warnings = Vec::new();
+    let sv_a = req_u64(a, "schema_version")?;
+    let sv_b = req_u64(b, "schema_version")?;
+    if sv_a != SNAPSHOT_SCHEMA_VERSION || sv_b != SNAPSHOT_SCHEMA_VERSION {
+        warnings.push(format!(
+            "schema version mismatch: A v{sv_a}, B v{sv_b} \
+             (this build speaks v{SNAPSHOT_SCHEMA_VERSION})"
+        ));
+    }
+    let kind_a = req_str(a, "kind")?;
+    let kind_b = req_str(b, "kind")?;
+    if kind_a != kind_b {
+        warnings.push(format!("comparing a '{kind_a}' run against a '{kind_b}' run"));
+    }
+    let fp_a = req_str(a, "config_fingerprint")?;
+    let fp_b = req_str(b, "config_fingerprint")?;
+    if fp_a != fp_b {
+        warnings.push(format!(
+            "configs differ (fingerprint {fp_a} vs {fp_b}): \
+             deltas mix config and model effects"
+        ));
+    }
+
+    // phase decomposition from the integer-ms attribution fields
+    let phases = match (a.opt("attribution"), b.opt("attribution")) {
+        (Some(at_a), Some(at_b)) => {
+            let mut rows = Vec::with_capacity(PHASES.len());
+            for &p in &PHASES {
+                rows.push(PhaseDelta {
+                    phase: p,
+                    a_ms: req_u64(at_a, &format!("{p}_ms"))?,
+                    b_ms: req_u64(at_b, &format!("{p}_ms"))?,
+                });
+            }
+            rows
+        }
+        _ => {
+            warnings.push(
+                "attribution missing in at least one snapshot; \
+                 phase decomposition skipped"
+                    .to_string(),
+            );
+            Vec::new()
+        }
+    };
+
+    // first critical-path divergence point
+    let path_a = path_of(a);
+    let path_b = path_of(b);
+    let mut divergence = None;
+    for i in 0..path_a.len().max(path_b.len()) {
+        let ta = path_a.get(i);
+        let tb = path_b.get(i);
+        if let (Some(x), Some(y)) = (ta, tb) {
+            if x.0 == y.0 {
+                continue;
+            }
+        }
+        divergence = Some(Divergence {
+            index: i,
+            a_task: ta.map(|t| t.0),
+            a_type: ta.map(|t| t.1.clone()).unwrap_or_default(),
+            b_task: tb.map(|t| t.0),
+            b_type: tb.map(|t| t.1.clone()).unwrap_or_default(),
+        });
+        break;
+    }
+
+    // counter finals (changed / added / removed only)
+    let ca = num_map(a, "counters");
+    let cb = num_map(b, "counters");
+    let names: BTreeSet<String> = ca.keys().chain(cb.keys()).cloned().collect();
+    let mut counters = Vec::new();
+    for name in &names {
+        let (in_a, in_b) = (ca.contains_key(name), cb.contains_key(name));
+        let va = ca.get(name).copied().unwrap_or(0.0) as u64;
+        let vb = cb.get(name).copied().unwrap_or(0.0) as u64;
+        if va != vb || in_a != in_b {
+            counters.push(CounterDelta {
+                name: name.clone(),
+                a: va,
+                b: vb,
+                in_a,
+                in_b,
+            });
+        }
+    }
+
+    // gauge finals (changed only; exact compare — same-seed runs agree
+    // bit-for-bit, so any difference is real)
+    let ga = num_map(a, "gauges");
+    let gb = num_map(b, "gauges");
+    let names: BTreeSet<String> = ga.keys().chain(gb.keys()).cloned().collect();
+    let mut gauges = Vec::new();
+    for name in &names {
+        let va = ga.get(name).copied().unwrap_or(0.0);
+        let vb = gb.get(name).copied().unwrap_or(0.0);
+        if va != vb {
+            gauges.push(GaugeDelta {
+                name: name.clone(),
+                a: va,
+                b: vb,
+            });
+        }
+    }
+
+    // alert lifecycles (changed / added / removed only)
+    let aa = alert_map(a);
+    let ab = alert_map(b);
+    let names: BTreeSet<String> = aa.keys().chain(ab.keys()).cloned().collect();
+    let mut alerts = Vec::new();
+    for name in &names {
+        let (in_a, in_b) = (aa.contains_key(name), ab.contains_key(name));
+        let va = aa.get(name).cloned().unwrap_or((0, 0, 0, String::new()));
+        let vb = ab.get(name).cloned().unwrap_or((0, 0, 0, String::new()));
+        if va != vb || in_a != in_b {
+            alerts.push(AlertDelta {
+                name: name.clone(),
+                in_a,
+                in_b,
+                fired_a: va.0,
+                fired_b: vb.0,
+                firing_ms_a: va.1,
+                firing_ms_b: vb.1,
+                episodes_a: va.2,
+                episodes_b: vb.2,
+                state_a: va.3,
+                state_b: vb.3,
+            });
+        }
+    }
+
+    // per-tenant SLO rows (fleet snapshots; changed only)
+    let ta = tenant_map(a);
+    let tb = tenant_map(b);
+    let ids: BTreeSet<u64> = ta.keys().chain(tb.keys()).copied().collect();
+    let mut tenants = Vec::new();
+    for id in ids {
+        let empty = Json::Null;
+        let ra = ta.get(&id).copied().unwrap_or(&empty);
+        let rb = tb.get(&id).copied().unwrap_or(&empty);
+        let row = TenantDelta {
+            tenant: id,
+            instances_a: field_f64(ra, "instances") as u64,
+            instances_b: field_f64(rb, "instances") as u64,
+            queue_delay_mean_s_a: field_f64(ra, "queue_delay_mean_s"),
+            queue_delay_mean_s_b: field_f64(rb, "queue_delay_mean_s"),
+            makespan_mean_s_a: field_f64(ra, "makespan_mean_s"),
+            makespan_mean_s_b: field_f64(rb, "makespan_mean_s"),
+            slowdown_p99_a: field_f64(ra, "slowdown_p99"),
+            slowdown_p99_b: field_f64(rb, "slowdown_p99"),
+        };
+        let changed = row.instances_a != row.instances_b
+            || row.queue_delay_mean_s_a != row.queue_delay_mean_s_b
+            || row.makespan_mean_s_a != row.makespan_mean_s_b
+            || row.slowdown_p99_a != row.slowdown_p99_b;
+        if changed {
+            tenants.push(row);
+        }
+    }
+
+    // population-wide phase tails (changed only)
+    let rows_of = |j: &Json| -> BTreeMap<String, (f64, f64)> {
+        let mut out = BTreeMap::new();
+        if let Some(rows) = j.opt("phases").and_then(|p| p.as_arr().ok()) {
+            for r in rows {
+                if let Some(name) = r.opt("phase").and_then(|p| p.as_str().ok()) {
+                    out.insert(
+                        name.to_string(),
+                        (field_f64(r, "mean_ms"), field_f64(r, "p95_ms")),
+                    );
+                }
+            }
+        }
+        out
+    };
+    let pa = rows_of(a);
+    let pb = rows_of(b);
+    let names: BTreeSet<String> = pa.keys().chain(pb.keys()).cloned().collect();
+    let mut phase_tails = Vec::new();
+    for name in &names {
+        let va = pa.get(name).copied().unwrap_or((0.0, 0.0));
+        let vb = pb.get(name).copied().unwrap_or((0.0, 0.0));
+        if va != vb {
+            phase_tails.push(PhaseTailDelta {
+                phase: name.clone(),
+                mean_a_ms: va.0,
+                mean_b_ms: vb.0,
+                p95_a_ms: va.1,
+                p95_b_ms: vb.1,
+            });
+        }
+    }
+
+    Ok(SnapshotDiff {
+        model_a: req_str(a, "model")?,
+        model_b: req_str(b, "model")?,
+        seed_a: req_u64(a, "seed")?,
+        seed_b: req_u64(b, "seed")?,
+        makespan_a_ms: req_u64(a, "makespan_ms")?,
+        makespan_b_ms: req_u64(b, "makespan_ms")?,
+        phases,
+        path_len_a: path_a.len(),
+        path_len_b: path_b.len(),
+        divergence,
+        counters,
+        gauges,
+        alerts,
+        tenants,
+        phase_tails,
+        warnings,
+    })
+}
+
+// ---------------------------------------------------------------------
+// bench regression gate
+// ---------------------------------------------------------------------
+
+/// Per-metric relative tolerances for the bench gate, parsed from
+/// `baselines/tolerances.json`: `{"default": 0.0, "ms_per_iter": 0.30}`.
+/// The lookup key is the metric's *leaf* key name (`models[2].ms_per_iter`
+/// → `ms_per_iter`), so one entry covers a metric across every model and
+/// sweep point. Protocol: simulation-deterministic metrics keep the
+/// exact default, wall-clock metrics get explicit slack.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Tolerances {
+    /// Applied to every metric without an entry; `0.0` = exact match.
+    pub default_rel: f64,
+    pub per_metric: BTreeMap<String, f64>,
+}
+
+impl Tolerances {
+    pub fn parse(j: &Json) -> Result<Tolerances, String> {
+        let obj = j
+            .as_obj()
+            .map_err(|_| "tolerance file must be a JSON object".to_string())?;
+        let mut t = Tolerances::default();
+        for (key, v) in obj {
+            let rel = v
+                .as_f64()
+                .map_err(|_| format!("tolerance '{key}' must be a number"))?;
+            if !rel.is_finite() || rel < 0.0 {
+                return Err(format!("tolerance '{key}' must be >= 0, got {rel}"));
+            }
+            if key == "default" {
+                t.default_rel = rel;
+            } else {
+                t.per_metric.insert(key.clone(), rel);
+            }
+        }
+        Ok(t)
+    }
+
+    pub fn for_key(&self, key: &str) -> f64 {
+        self.per_metric.get(key).copied().unwrap_or(self.default_rel)
+    }
+}
+
+/// One metric outside its tolerance band.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchBreach {
+    /// Dotted leaf path, e.g. `models[1].events_per_sec`.
+    pub path: String,
+    pub base: f64,
+    pub cur: f64,
+    /// Relative change `|cur − base| / max(|base|, ε)`.
+    pub rel: f64,
+    pub tol: f64,
+}
+
+/// Outcome of one baseline-vs-current comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BenchOutcome {
+    /// Gate disarmed (placeholder baseline) — CI passes with a notice.
+    Skipped(String),
+    Compared {
+        /// Numeric leaves compared.
+        checked: usize,
+        breaches: Vec<BenchBreach>,
+        /// Structural drift (added/removed fields, length mismatches) —
+        /// reported but non-fatal, so bench schema growth does not brick
+        /// the gate.
+        warnings: Vec<String>,
+    },
+}
+
+impl BenchOutcome {
+    /// True iff CI must fail.
+    pub fn breached(&self) -> bool {
+        matches!(self, BenchOutcome::Compared { breaches, .. } if !breaches.is_empty())
+    }
+}
+
+/// Compare a current `BENCH_*.json` against its committed baseline.
+pub fn compare_bench(base: &Json, cur: &Json, tol: &Tolerances) -> BenchOutcome {
+    for (doc, which) in [(base, "baseline"), (cur, "current")] {
+        if doc.opt("placeholder").and_then(|p| p.as_bool().ok()) == Some(true) {
+            return BenchOutcome::Skipped(format!(
+                "{which} document is a placeholder (never measured); \
+                 gate disarmed until baselines/refresh.sh runs on a real toolchain"
+            ));
+        }
+    }
+    let mut w = Walk {
+        checked: 0,
+        breaches: Vec::new(),
+        warnings: Vec::new(),
+        tol,
+    };
+    w.walk(base, cur, "", "");
+    BenchOutcome::Compared {
+        checked: w.checked,
+        breaches: w.breaches,
+        warnings: w.warnings,
+    }
+}
+
+struct Walk<'a> {
+    checked: usize,
+    breaches: Vec<BenchBreach>,
+    warnings: Vec<String>,
+    tol: &'a Tolerances,
+}
+
+impl Walk<'_> {
+    /// Recursive leaf-wise comparison. `key` is the nearest object key —
+    /// array elements inherit it, so `points[3].makespan_s` resolves the
+    /// `makespan_s` tolerance.
+    fn walk(&mut self, base: &Json, cur: &Json, path: &str, key: &str) {
+        match (base, cur) {
+            (Json::Obj(ob), Json::Obj(oc)) => {
+                let keys: BTreeSet<&String> = ob.keys().chain(oc.keys()).collect();
+                for k in keys {
+                    // provenance, not performance: the meta block differs
+                    // between any two commits by construction
+                    if k == "meta" {
+                        continue;
+                    }
+                    let p = if path.is_empty() {
+                        k.to_string()
+                    } else {
+                        format!("{path}.{k}")
+                    };
+                    match (ob.get(k), oc.get(k)) {
+                        (Some(b), Some(c)) => self.walk(b, c, &p, k),
+                        (Some(_), None) => {
+                            self.warnings.push(format!("{p}: in baseline only"));
+                        }
+                        (None, Some(_)) => {
+                            self.warnings.push(format!("{p}: in current only"));
+                        }
+                        (None, None) => unreachable!("key from union"),
+                    }
+                }
+            }
+            (Json::Arr(ab), Json::Arr(ac)) => {
+                if ab.len() != ac.len() {
+                    self.warnings.push(format!(
+                        "{path}: length {} vs {}",
+                        ab.len(),
+                        ac.len()
+                    ));
+                }
+                for (i, (b, c)) in ab.iter().zip(ac).enumerate() {
+                    self.walk(b, c, &format!("{path}[{i}]"), key);
+                }
+            }
+            (Json::Num(nb), Json::Num(nc)) => {
+                self.checked += 1;
+                let tol = self.tol.for_key(key);
+                let rel = if nb == nc {
+                    0.0
+                } else {
+                    (nc - nb).abs() / nb.abs().max(1e-12)
+                };
+                if rel > tol + 1e-12 {
+                    self.breaches.push(BenchBreach {
+                        path: path.to_string(),
+                        base: *nb,
+                        cur: *nc,
+                        rel,
+                        tol,
+                    });
+                }
+            }
+            (b, c) => {
+                if b != c {
+                    self.warnings.push(format!("{path}: value mismatch"));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(makespan: u64, compute: u64, pods: u64) -> Json {
+        // minimal but schema-complete snapshot: all phases zero except
+        // compute + queueing, telescoping to `makespan`
+        Json::parse(&format!(
+            r#"{{
+              "schema_version": 1, "kind": "run", "model": "m",
+              "seed": 7, "nodes": 4, "config_fingerprint": "f",
+              "makespan_ms": {makespan},
+              "attribution": {{
+                "queueing_ms": {q}, "scheduling_ms": 0, "pod_start_ms": 0,
+                "stage_in_ms": 0, "compute_ms": {compute},
+                "stage_out_ms": 0, "recovery_ms": 0, "makespan_ms": {makespan}
+              }},
+              "critical_path": [{{"task": 0, "type": "mProject"}},
+                                {{"task": 2, "type": "mAdd"}}],
+              "phases": [],
+              "counters": {{"pods_created": {pods}}},
+              "gauges": {{}},
+              "monitor": null
+            }}"#,
+            q = makespan - compute,
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn self_diff_is_zero() {
+        let a = snap(10_000, 8_000, 16);
+        let d = diff(&a, &a).unwrap();
+        assert!(d.is_zero());
+        assert_eq!(d.makespan_delta_ms(), 0);
+        assert_eq!(d.phase_delta_sum_ms(), 0);
+        assert!(d.divergence.is_none());
+        assert!(d.counters.is_empty() && d.gauges.is_empty());
+        assert!(d.to_json().get("zero").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn phase_deltas_telescope_to_the_makespan_delta() {
+        let a = snap(10_000, 8_000, 16);
+        let b = snap(13_500, 9_000, 40);
+        let d = diff(&a, &b).unwrap();
+        assert!(!d.is_zero());
+        assert_eq!(d.makespan_delta_ms(), 3_500);
+        assert_eq!(d.phase_delta_sum_ms(), 3_500, "exact, integer ms");
+        assert_eq!(d.counters.len(), 1);
+        assert_eq!(d.counters[0].delta(), 24);
+    }
+
+    #[test]
+    fn divergence_finds_the_first_mismatch() {
+        let a = snap(10_000, 8_000, 16);
+        let mut b = snap(10_000, 8_000, 16);
+        if let Json::Obj(o) = &mut b {
+            o.insert(
+                "critical_path".into(),
+                Json::parse(r#"[{"task": 0, "type": "mProject"}, {"task": 5, "type": "mDiffFit"}]"#)
+                    .unwrap(),
+            );
+        }
+        let d = diff(&a, &b).unwrap();
+        let div = d.divergence.expect("paths differ at index 1");
+        assert_eq!(div.index, 1);
+        assert_eq!(div.a_task, Some(2));
+        assert_eq!(div.b_task, Some(5));
+        assert_eq!(div.b_type, "mDiffFit");
+        assert!(!d.is_zero());
+    }
+
+    #[test]
+    fn shorter_path_diverges_at_its_end() {
+        let a = snap(10_000, 8_000, 16);
+        let mut b = snap(10_000, 8_000, 16);
+        if let Json::Obj(o) = &mut b {
+            o.insert(
+                "critical_path".into(),
+                Json::parse(r#"[{"task": 0, "type": "mProject"}]"#).unwrap(),
+            );
+        }
+        let d = diff(&a, &b).unwrap();
+        let div = d.divergence.expect("length mismatch is a divergence");
+        assert_eq!(div.index, 1);
+        assert_eq!(div.b_task, None);
+    }
+
+    #[test]
+    fn provenance_mismatches_warn_but_do_not_fail() {
+        let a = snap(10_000, 8_000, 16);
+        let mut b = snap(10_000, 8_000, 16);
+        if let Json::Obj(o) = &mut b {
+            o.insert("config_fingerprint".into(), Json::str("other"));
+            o.insert("schema_version".into(), Json::from(99u64));
+        }
+        let d = diff(&a, &b).unwrap();
+        assert_eq!(d.warnings.len(), 2);
+        assert!(d.is_zero(), "warnings never make a diff non-zero");
+    }
+
+    #[test]
+    fn non_snapshot_documents_error() {
+        let junk = Json::parse(r#"{"bench": "driver"}"#).unwrap();
+        assert!(diff(&junk, &junk).is_err());
+    }
+
+    fn bench_doc(eps: f64, iter_ms: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"bench": "coordinator_hotpath", "schema_version": 1,
+                 "meta": {{"git": "abc", "model": "all", "seed": 42}},
+                 "models": [{{"model": "job", "events_per_sec": {eps},
+                              "ms_per_iter": {iter_ms}}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn bench_gate_flags_out_of_tolerance_metrics() {
+        let tol = Tolerances::parse(
+            &Json::parse(r#"{"default": 0.0, "ms_per_iter": 0.5}"#).unwrap(),
+        )
+        .unwrap();
+        // within tolerance: ms_per_iter +40% < 50%, events identical
+        let ok = compare_bench(&bench_doc(1e6, 100.0), &bench_doc(1e6, 140.0), &tol);
+        assert!(!ok.breached());
+        // breach: events_per_sec has the exact default, any drift fails
+        let bad = compare_bench(&bench_doc(1e6, 100.0), &bench_doc(9e5, 100.0), &tol);
+        assert!(bad.breached());
+        let BenchOutcome::Compared { breaches, checked, .. } = bad else {
+            panic!("not skipped");
+        };
+        assert!(checked >= 3);
+        assert_eq!(breaches.len(), 1);
+        assert_eq!(breaches[0].path, "models[0].events_per_sec");
+        assert!((breaches[0].rel - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_gate_skips_placeholders_and_ignores_meta() {
+        let tol = Tolerances::default();
+        let placeholder =
+            Json::parse(r#"{"bench": "driver", "placeholder": true}"#).unwrap();
+        let real = bench_doc(1e6, 100.0);
+        assert!(matches!(
+            compare_bench(&placeholder, &real, &tol),
+            BenchOutcome::Skipped(_)
+        ));
+        // differing git hashes under meta must not trip the exact default
+        let mut other = bench_doc(1e6, 100.0);
+        if let Json::Obj(o) = &mut other {
+            o.insert(
+                "meta".into(),
+                Json::parse(r#"{"git": "def-dirty", "model": "all", "seed": 42}"#).unwrap(),
+            );
+        }
+        assert!(!compare_bench(&bench_doc(1e6, 100.0), &other, &tol).breached());
+    }
+
+    #[test]
+    fn tolerances_reject_negative_and_non_numeric() {
+        assert!(Tolerances::parse(&Json::parse(r#"{"x": -0.1}"#).unwrap()).is_err());
+        assert!(Tolerances::parse(&Json::parse(r#"{"x": "lots"}"#).unwrap()).is_err());
+        let t = Tolerances::parse(&Json::parse(r#"{"default": 0.2, "y": 0.5}"#).unwrap())
+            .unwrap();
+        assert_eq!(t.for_key("y"), 0.5);
+        assert_eq!(t.for_key("unlisted"), 0.2);
+    }
+}

@@ -38,9 +38,11 @@
 
 pub mod alerts;
 pub mod critpath;
+pub mod diff;
 pub mod monitor;
 pub mod prom;
 pub mod rules;
+pub mod snapshot;
 
 use crate::k8s::pod::PodId;
 use crate::sim::SimTime;
@@ -393,6 +395,92 @@ pub struct PodRow {
     pub finished: Option<SimTime>,
 }
 
+/// Latency distribution of one lifecycle phase across every finished
+/// task (not just the critical path): how long *typical* tasks spent
+/// queueing, scheduling, staging, computing. Snapshots carry these rows
+/// so `hyperflow diff` can tell a critical-path shift from a
+/// distribution-wide one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseRow {
+    /// Phase name, one of [`critpath::PHASES`].
+    pub phase: &'static str,
+    /// Finished tasks contributing a sample.
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl PhaseRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("phase", self.phase.into()),
+            ("count", self.count.into()),
+            ("mean_ms", self.mean_ms.into()),
+            ("p50_ms", self.p50_ms.into()),
+            ("p95_ms", self.p95_ms.into()),
+            ("p99_ms", self.p99_ms.into()),
+        ])
+    }
+}
+
+/// Per-phase latency distributions over every *finished* span, one row
+/// per phase in [`critpath::PHASES`] order. The same clamped-monotone
+/// decomposition as [`critpath::attribute`], but per task relative to
+/// its own ready time, so the rows cover the whole population instead of
+/// the single makespan-gating chain.
+pub fn phase_rows(spans: &[TaskSpan]) -> Vec<PhaseRow> {
+    use crate::util::stats::Summary;
+    let mut acc: [Summary; 7] = std::array::from_fn(|_| Summary::new());
+    for s in spans {
+        let (Some(ready), Some(fin)) = (s.ready, s.finished) else {
+            continue;
+        };
+        let fin = fin.as_millis();
+        let ready = ready.as_millis().min(fin);
+        let clamp = |v: SimTime, lo: u64| v.as_millis().clamp(lo, fin);
+        let (a, b, c, e, f) = if s.pod.is_some() {
+            let a = clamp(s.pod_created, ready);
+            let b = clamp(s.bound, a);
+            let c = clamp(s.running, b);
+            let e = clamp(s.exec_start, c);
+            let f = clamp(s.compute_end, e);
+            (a, b, c, e, f)
+        } else {
+            (fin, fin, fin, fin, fin)
+        };
+        let recovery = s.recovery_ms.min(a - ready);
+        let phases = [
+            (a - ready) - recovery,
+            b - a,
+            c - b,
+            e - c,
+            f - e,
+            fin - f,
+            recovery,
+        ];
+        for (sum, ms) in acc.iter_mut().zip(phases) {
+            sum.add(ms as f64);
+        }
+    }
+    critpath::PHASES
+        .iter()
+        .zip(acc)
+        .map(|(&phase, sum)| {
+            let row = sum.percentile_row();
+            PhaseRow {
+                phase,
+                count: sum.len() as u64,
+                mean_ms: sum.mean(),
+                p50_ms: row.p50,
+                p95_ms: row.p95,
+                p99_ms: row.p99,
+            }
+        })
+        .collect()
+}
+
 /// Everything the recorder distills into the run result
 /// (`SimResult::obs`, present only when `--obs` / `SimConfig::obs` is
 /// set).
@@ -409,6 +497,8 @@ pub struct ObsReport {
     /// Fleet runs: per-instance attribution, aligned with the outcome
     /// vector (`None` for instances that never finished).
     pub instance_attr: Vec<Option<critpath::Attribution>>,
+    /// Population-wide per-phase latency distributions ([`phase_rows`]).
+    pub phase_rows: Vec<PhaseRow>,
 }
 
 impl ObsReport {
@@ -427,6 +517,12 @@ impl ObsReport {
             ),
         ));
         fields.push(("events", Json::from(self.events.len() as u64)));
+        if !self.phase_rows.is_empty() {
+            fields.push((
+                "phases",
+                Json::Arr(self.phase_rows.iter().map(|p| p.to_json()).collect()),
+            ));
+        }
         if !self.instance_attr.is_empty() {
             fields.push((
                 "instance_attribution",

@@ -1,0 +1,153 @@
+//! Versioned, deterministic run snapshots (`--snapshot FILE`).
+//!
+//! A snapshot is the serialized observable surface of one run: makespan,
+//! critical-path [`super::critpath::Attribution`], population-wide
+//! per-phase percentile rows, the metrics registry's final counter and
+//! gauge values, the monitoring stack's alert lifecycles, and (for fleet
+//! runs) the per-tenant SLO rows. Two same-seed runs produce
+//! **byte-identical** snapshot JSON — the property `tests/diff.rs` pins
+//! for all four execution models — which is what makes
+//! [`super::diff`] exact: every delta it reports is a real behavioral
+//! difference, never serialization noise.
+//!
+//! Determinism sources: [`crate::util::json::Json`] objects are
+//! `BTreeMap`s (sorted keys), the simulation itself is bit-deterministic
+//! per seed, and the schema deliberately excludes volatile provenance
+//! (git revision, wall-clock stamps — those live in the `BENCH_*.json`
+//! meta block instead, see [`crate::util::meta`]).
+
+use crate::exec::SimConfig;
+use crate::fleet::report::TenantRow;
+use crate::fleet::FleetResult;
+use crate::report::SimResult;
+use crate::util::json::Json;
+use crate::workflow::task::TaskId;
+
+/// Version of the snapshot schema. `hyperflow diff` warns on a version
+/// mismatch instead of guessing at missing fields.
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+
+/// Snapshot of a single-workflow run (`hyperflow run` / `trace`).
+pub fn capture(res: &SimResult, cfg: &SimConfig) -> Json {
+    Json::Obj(base_fields(res, cfg, "run").into_iter().collect())
+}
+
+/// Snapshot of a fleet run (`hyperflow serve`): the single-run surface
+/// plus one row per tenant.
+pub fn capture_fleet(res: &FleetResult, cfg: &SimConfig) -> Json {
+    let mut fields = base_fields(&res.sim, cfg, "fleet");
+    let tenants = crate::fleet::report::per_tenant(res)
+        .iter()
+        .map(tenant_json)
+        .collect();
+    fields.push(("tenants".to_string(), Json::Arr(tenants)));
+    Json::Obj(fields.into_iter().collect())
+}
+
+fn base_fields(res: &SimResult, cfg: &SimConfig, kind: &str) -> Vec<(String, Json)> {
+    let attribution = match res.obs.as_ref().and_then(|o| o.attribution.as_ref()) {
+        Some(a) => a.to_json(),
+        None => Json::Null,
+    };
+    let critical_path = res
+        .obs
+        .as_ref()
+        .map(|o| {
+            o.critical_path
+                .iter()
+                .map(|&t| {
+                    let mut entry = vec![("task", Json::from(t as u64))];
+                    if let Some(r) = res.trace.record(TaskId(t)) {
+                        entry.push(("type", Json::str(&r.type_name)));
+                        if let Some(f) = r.finished_at {
+                            entry.push(("finished_ms", f.as_millis().into()));
+                        }
+                    }
+                    Json::obj(entry)
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let phases = res
+        .obs
+        .as_ref()
+        .map(|o| o.phase_rows.iter().map(|p| p.to_json()).collect())
+        .unwrap_or_default();
+    let counters = Json::Obj(
+        res.metrics
+            .counters_sorted()
+            .map(|(n, v)| (n.to_string(), Json::from(v)))
+            .collect(),
+    );
+    let gauges = Json::Obj(
+        res.metrics
+            .gauge_names()
+            .map(|n| (n.to_string(), Json::from(res.metrics.gauge_value(n))))
+            .collect(),
+    );
+    let monitor = match &res.monitor {
+        Some(m) => m.to_json(),
+        None => Json::Null,
+    };
+    vec![
+        ("schema_version".to_string(), SNAPSHOT_SCHEMA_VERSION.into()),
+        ("kind".to_string(), Json::str(kind)),
+        ("model".to_string(), Json::str(&res.model_name)),
+        ("seed".to_string(), cfg.seed.into()),
+        ("nodes".to_string(), cfg.nodes.into()),
+        (
+            "config_fingerprint".to_string(),
+            Json::str(cfg.fingerprint()),
+        ),
+        ("makespan_ms".to_string(), res.makespan.as_millis().into()),
+        (
+            "totals".to_string(),
+            Json::obj(vec![
+                ("pods_created", res.pods_created.into()),
+                ("api_requests", res.api_requests.into()),
+                ("sched_backoffs", res.sched_backoffs.into()),
+                ("sched_binds", res.sched_binds.into()),
+                ("sim_events", res.sim_events.into()),
+                ("avg_running_tasks", res.avg_running_tasks.into()),
+                ("avg_cpu_utilization", res.avg_cpu_utilization.into()),
+            ]),
+        ),
+        ("attribution".to_string(), attribution),
+        ("critical_path".to_string(), Json::Arr(critical_path)),
+        ("phases".to_string(), Json::Arr(phases)),
+        ("counters".to_string(), counters),
+        ("gauges".to_string(), gauges),
+        ("monitor".to_string(), monitor),
+    ]
+}
+
+/// Full (unconditional) JSON row for one tenant — snapshots keep every
+/// column so two runs always diff field-by-field, even when one of them
+/// ran without the chaos/data/isolation/obs subsystems attached.
+fn tenant_json(r: &TenantRow) -> Json {
+    Json::obj(vec![
+        ("tenant", (r.tenant as u64).into()),
+        ("instances", r.instances.into()),
+        ("queue_delay_mean_s", r.queue_delay_mean_s.into()),
+        ("makespan_mean_s", r.makespan_mean_s.into()),
+        ("slowdown_mean", r.slowdown_mean.into()),
+        ("slowdown_p50", r.slowdown_p50.into()),
+        ("slowdown_p95", r.slowdown_p95.into()),
+        ("slowdown_p99", r.slowdown_p99.into()),
+        ("wasted_s", r.wasted_s.into()),
+        ("retries", r.retries.into()),
+        ("gb_moved", r.gb_moved.into()),
+        ("quota_throttles", r.quota_throttles.into()),
+        ("violations", r.violations.into()),
+        ("takeover_exposed_s", r.takeover_exposed_s.into()),
+        ("crit_queue_s", r.crit_queue_s.into()),
+        ("crit_sched_s", r.crit_sched_s.into()),
+        ("crit_pod_start_s", r.crit_pod_start_s.into()),
+        ("crit_stage_in_s", r.crit_stage_in_s.into()),
+        ("crit_compute_s", r.crit_compute_s.into()),
+        ("crit_stage_out_s", r.crit_stage_out_s.into()),
+        ("crit_recovery_s", r.crit_recovery_s.into()),
+        ("alerts_fired", r.alerts_fired.into()),
+        ("alert_firing_s", r.alert_firing_s.into()),
+    ])
+}

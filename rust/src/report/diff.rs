@@ -1,0 +1,486 @@
+//! Rendering for `hyperflow diff`: fixed-width terminal text, a
+//! self-contained HTML page, and the bench-gate verdict line. The data
+//! layer lives in [`crate::obs::diff`]; nothing here recomputes a delta.
+
+use crate::obs::diff::{BenchOutcome, SnapshotDiff};
+
+fn signed_ms(v: i64) -> String {
+    format!("{v:+} ms")
+}
+
+fn endpoint(task: Option<u64>, ty: &str) -> String {
+    match task {
+        Some(t) if !ty.is_empty() => format!("task {t} ({ty})"),
+        Some(t) => format!("task {t}"),
+        None => "path end".to_string(),
+    }
+}
+
+fn or_dash(s: &str) -> &str {
+    if s.is_empty() {
+        "-"
+    } else {
+        s
+    }
+}
+
+/// Terminal rendering, mirroring the fixed-width style of
+/// `Attribution::render`.
+pub fn render_text(d: &SnapshotDiff) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "snapshot diff: {} (seed {}) -> {} (seed {})\n",
+        d.model_a, d.seed_a, d.model_b, d.seed_b
+    ));
+    for w in &d.warnings {
+        out.push_str(&format!("  warning: {w}\n"));
+    }
+    out.push_str(&format!(
+        "  makespan    {:>10} ms -> {:>10} ms   {}\n",
+        d.makespan_a_ms,
+        d.makespan_b_ms,
+        signed_ms(d.makespan_delta_ms())
+    ));
+    if d.is_zero() {
+        out.push_str("  runs are observationally identical: zero deltas everywhere\n");
+        return out;
+    }
+    if !d.phases.is_empty() {
+        out.push_str(
+            "\nphase decomposition (B - A; deltas sum exactly to the makespan delta):\n",
+        );
+        for p in &d.phases {
+            out.push_str(&format!(
+                "  {:<12}{:>10} ms -> {:>10} ms   {}\n",
+                p.phase,
+                p.a_ms,
+                p.b_ms,
+                signed_ms(p.delta_ms())
+            ));
+        }
+        out.push_str(&format!(
+            "  {:<12}{:>29}   {}\n",
+            "sum",
+            "",
+            signed_ms(d.phase_delta_sum_ms())
+        ));
+    }
+    out.push_str(&format!(
+        "\ncritical path: {} tasks -> {} tasks",
+        d.path_len_a, d.path_len_b
+    ));
+    match &d.divergence {
+        Some(v) => out.push_str(&format!(
+            "; first divergence at index {}: {} vs {}\n",
+            v.index,
+            endpoint(v.a_task, &v.a_type),
+            endpoint(v.b_task, &v.b_type)
+        )),
+        None => out.push_str("; identical\n"),
+    }
+    if !d.counters.is_empty() {
+        out.push_str(&format!("\ncounters ({} changed):\n", d.counters.len()));
+        for c in &d.counters {
+            out.push_str(&format!(
+                "  {:<28}{:>12} -> {:>12}   ({:+})\n",
+                c.name,
+                c.a,
+                c.b,
+                c.delta()
+            ));
+        }
+    }
+    if !d.gauges.is_empty() {
+        out.push_str(&format!("\ngauges ({} changed):\n", d.gauges.len()));
+        for g in &d.gauges {
+            out.push_str(&format!(
+                "  {:<28}{:>12.3} -> {:>12.3}\n",
+                g.name, g.a, g.b
+            ));
+        }
+    }
+    if !d.alerts.is_empty() {
+        out.push_str(&format!("\nalerts ({} changed):\n", d.alerts.len()));
+        for a in &d.alerts {
+            out.push_str(&format!(
+                "  {:<28}fired {} -> {}, firing {} ms -> {} ms, \
+                 episodes {} -> {}, state {} -> {}\n",
+                a.name,
+                a.fired_a,
+                a.fired_b,
+                a.firing_ms_a,
+                a.firing_ms_b,
+                a.episodes_a,
+                a.episodes_b,
+                or_dash(&a.state_a),
+                or_dash(&a.state_b)
+            ));
+        }
+    }
+    if !d.tenants.is_empty() {
+        out.push_str(&format!("\ntenants ({} changed):\n", d.tenants.len()));
+        for t in &d.tenants {
+            out.push_str(&format!(
+                "  tenant {:<4}instances {} -> {}, queue-delay {:.2} s -> {:.2} s, \
+                 makespan {:.2} s -> {:.2} s, slowdown p99 {:.2} -> {:.2}\n",
+                t.tenant,
+                t.instances_a,
+                t.instances_b,
+                t.queue_delay_mean_s_a,
+                t.queue_delay_mean_s_b,
+                t.makespan_mean_s_a,
+                t.makespan_mean_s_b,
+                t.slowdown_p99_a,
+                t.slowdown_p99_b
+            ));
+        }
+    }
+    if !d.phase_tails.is_empty() {
+        out.push_str(&format!(
+            "\nphase tails ({} shifted, all tasks not just the critical path):\n",
+            d.phase_tails.len()
+        ));
+        for t in &d.phase_tails {
+            out.push_str(&format!(
+                "  {:<12}mean {:.1} ms -> {:.1} ms, p95 {:.1} ms -> {:.1} ms\n",
+                t.phase, t.mean_a_ms, t.mean_b_ms, t.p95_a_ms, t.p95_b_ms
+            ));
+        }
+    }
+    out
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// Self-contained HTML page for `hyperflow diff --html out.html` — the
+/// artifact CI uploads for cross-model comparisons.
+pub fn render_html(d: &SnapshotDiff) -> String {
+    let mut body = String::new();
+    body.push_str(&format!(
+        "<h1>hyperflow-k8s run diff</h1>\
+         <table class='kv'>\
+         <tr><td>run A</td><td><b>{}</b> (seed {})</td></tr>\
+         <tr><td>run B</td><td><b>{}</b> (seed {})</td></tr>\
+         <tr><td>makespan</td><td>{} ms &rarr; {} ms ({})</td></tr>\
+         <tr><td>verdict</td><td><b>{}</b></td></tr>\
+         </table>",
+        esc(&d.model_a),
+        d.seed_a,
+        esc(&d.model_b),
+        d.seed_b,
+        d.makespan_a_ms,
+        d.makespan_b_ms,
+        signed_ms(d.makespan_delta_ms()),
+        if d.is_zero() {
+            "runs are observationally identical"
+        } else {
+            "runs differ"
+        }
+    ));
+    if !d.warnings.is_empty() {
+        body.push_str("<ul>");
+        for w in &d.warnings {
+            body.push_str(&format!("<li>warning: {}</li>", esc(w)));
+        }
+        body.push_str("</ul>");
+    }
+    if !d.phases.is_empty() {
+        body.push_str(
+            "<h2>phase decomposition</h2>\
+             <p>B &minus; A per critical-path phase; integer deltas sum \
+             exactly to the makespan delta.</p>\
+             <table class='data'>\
+             <tr><th>phase</th><th>A (ms)</th><th>B (ms)</th><th>&Delta; (ms)</th></tr>",
+        );
+        for p in &d.phases {
+            body.push_str(&format!(
+                "<tr><td>{}</td><td>{}</td><td>{}</td><td>{:+}</td></tr>",
+                p.phase,
+                p.a_ms,
+                p.b_ms,
+                p.delta_ms()
+            ));
+        }
+        body.push_str(&format!(
+            "<tr><th>sum</th><th>{}</th><th>{}</th><th>{:+}</th></tr></table>",
+            d.makespan_a_ms,
+            d.makespan_b_ms,
+            d.phase_delta_sum_ms()
+        ));
+    }
+    body.push_str(&format!(
+        "<h2>critical path</h2><p>{} tasks &rarr; {} tasks; {}</p>",
+        d.path_len_a,
+        d.path_len_b,
+        match &d.divergence {
+            Some(v) => format!(
+                "first divergence at index {}: {} vs {}",
+                v.index,
+                esc(&endpoint(v.a_task, &v.a_type)),
+                esc(&endpoint(v.b_task, &v.b_type))
+            ),
+            None => "identical".to_string(),
+        }
+    ));
+    if !d.counters.is_empty() {
+        body.push_str(
+            "<h2>counters</h2><table class='data'>\
+             <tr><th>counter</th><th>A</th><th>B</th><th>&Delta;</th></tr>",
+        );
+        for c in &d.counters {
+            body.push_str(&format!(
+                "<tr><td>{}</td><td>{}</td><td>{}</td><td>{:+}</td></tr>",
+                esc(&c.name),
+                c.a,
+                c.b,
+                c.delta()
+            ));
+        }
+        body.push_str("</table>");
+    }
+    if !d.gauges.is_empty() {
+        body.push_str(
+            "<h2>gauges</h2><table class='data'>\
+             <tr><th>gauge</th><th>A</th><th>B</th></tr>",
+        );
+        for g in &d.gauges {
+            body.push_str(&format!(
+                "<tr><td>{}</td><td>{:.3}</td><td>{:.3}</td></tr>",
+                esc(&g.name),
+                g.a,
+                g.b
+            ));
+        }
+        body.push_str("</table>");
+    }
+    if !d.alerts.is_empty() {
+        body.push_str(
+            "<h2>alerts</h2><table class='data'>\
+             <tr><th>alert</th><th>fired</th><th>firing (ms)</th>\
+             <th>episodes</th><th>final state</th></tr>",
+        );
+        for a in &d.alerts {
+            body.push_str(&format!(
+                "<tr><td>{}</td><td>{} &rarr; {}</td><td>{} &rarr; {}</td>\
+                 <td>{} &rarr; {}</td><td>{} &rarr; {}</td></tr>",
+                esc(&a.name),
+                a.fired_a,
+                a.fired_b,
+                a.firing_ms_a,
+                a.firing_ms_b,
+                a.episodes_a,
+                a.episodes_b,
+                esc(or_dash(&a.state_a)),
+                esc(or_dash(&a.state_b))
+            ));
+        }
+        body.push_str("</table>");
+    }
+    if !d.tenants.is_empty() {
+        body.push_str(
+            "<h2>tenants</h2><table class='data'>\
+             <tr><th>tenant</th><th>instances</th><th>queue delay (s)</th>\
+             <th>makespan (s)</th><th>slowdown p99</th></tr>",
+        );
+        for t in &d.tenants {
+            body.push_str(&format!(
+                "<tr><td>{}</td><td>{} &rarr; {}</td><td>{:.2} &rarr; {:.2}</td>\
+                 <td>{:.2} &rarr; {:.2}</td><td>{:.2} &rarr; {:.2}</td></tr>",
+                t.tenant,
+                t.instances_a,
+                t.instances_b,
+                t.queue_delay_mean_s_a,
+                t.queue_delay_mean_s_b,
+                t.makespan_mean_s_a,
+                t.makespan_mean_s_b,
+                t.slowdown_p99_a,
+                t.slowdown_p99_b
+            ));
+        }
+        body.push_str("</table>");
+    }
+    if !d.phase_tails.is_empty() {
+        body.push_str(
+            "<h2>phase tails (all tasks)</h2><table class='data'>\
+             <tr><th>phase</th><th>mean (ms)</th><th>p95 (ms)</th></tr>",
+        );
+        for t in &d.phase_tails {
+            body.push_str(&format!(
+                "<tr><td>{}</td><td>{:.1} &rarr; {:.1}</td><td>{:.1} &rarr; {:.1}</td></tr>",
+                esc(&t.phase),
+                t.mean_a_ms,
+                t.mean_b_ms,
+                t.p95_a_ms,
+                t.p95_b_ms
+            ));
+        }
+        body.push_str("</table>");
+    }
+    format!(
+        "<!DOCTYPE html><html><head><meta charset='utf-8'>\
+         <title>hyperflow-k8s diff</title><style>\
+         body{{font-family:sans-serif;max-width:900px;margin:24px auto}}\
+         table.kv td{{padding:2px 10px}}\
+         table.data{{border-collapse:collapse}}\
+         table.data td,table.data th{{border:1px solid #999;padding:3px 10px;text-align:right}}\
+         </style></head><body>{body}</body></html>"
+    )
+}
+
+/// Verdict line(s) for `hyperflow diff --bench` — what CI logs before
+/// deciding the exit code.
+pub fn render_bench_text(base_path: &str, cur_path: &str, out: &BenchOutcome) -> String {
+    match out {
+        BenchOutcome::Skipped(why) => {
+            format!("bench gate: SKIPPED ({base_path} vs {cur_path}): {why}\n")
+        }
+        BenchOutcome::Compared {
+            checked,
+            breaches,
+            warnings,
+        } => {
+            let mut s = format!(
+                "bench gate: {base_path} vs {cur_path}: {checked} metrics checked\n"
+            );
+            for w in warnings {
+                s.push_str(&format!("  warning: {w}\n"));
+            }
+            if breaches.is_empty() {
+                s.push_str("  PASS: all metrics within tolerance\n");
+            } else {
+                s.push_str(&format!(
+                    "  FAIL: {} metric(s) out of tolerance\n",
+                    breaches.len()
+                ));
+                for b in breaches {
+                    let sign = if b.cur >= b.base { "+" } else { "-" };
+                    s.push_str(&format!(
+                        "    {:<40}{:>14.4} -> {:>14.4}   {sign}{:.1}% (tolerance {:.1}%)\n",
+                        b.path,
+                        b.base,
+                        b.cur,
+                        b.rel * 100.0,
+                        b.tol * 100.0
+                    ));
+                }
+            }
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::diff::{BenchBreach, CounterDelta, Divergence, PhaseDelta};
+
+    fn sample(zero: bool) -> SnapshotDiff {
+        let (b_compute, b_makespan, counters, divergence) = if zero {
+            (8_000, 10_000, Vec::new(), None)
+        } else {
+            (
+                9_500,
+                11_500,
+                vec![CounterDelta {
+                    name: "pods_created".into(),
+                    a: 16,
+                    b: 40,
+                    in_a: true,
+                    in_b: true,
+                }],
+                Some(Divergence {
+                    index: 1,
+                    a_task: Some(2),
+                    a_type: "mAdd".into(),
+                    b_task: Some(5),
+                    b_type: "mDiffFit".into(),
+                }),
+            )
+        };
+        SnapshotDiff {
+            model_a: "worker-pools".into(),
+            model_b: "job".into(),
+            seed_a: 7,
+            seed_b: 7,
+            makespan_a_ms: 10_000,
+            makespan_b_ms: b_makespan,
+            phases: vec![
+                PhaseDelta {
+                    phase: "queueing",
+                    a_ms: 2_000,
+                    b_ms: 2_000,
+                },
+                PhaseDelta {
+                    phase: "compute",
+                    a_ms: 8_000,
+                    b_ms: b_compute,
+                },
+            ],
+            path_len_a: 2,
+            path_len_b: 2,
+            divergence,
+            counters,
+            gauges: Vec::new(),
+            alerts: Vec::new(),
+            tenants: Vec::new(),
+            phase_tails: Vec::new(),
+            warnings: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn zero_diff_renders_the_identical_verdict() {
+        let txt = render_text(&sample(true));
+        assert!(txt.contains("observationally identical"));
+        assert!(!txt.contains("phase decomposition"));
+    }
+
+    #[test]
+    fn nonzero_diff_renders_phases_path_and_counters() {
+        let txt = render_text(&sample(false));
+        assert!(txt.contains("+1500 ms"), "makespan and sum delta:\n{txt}");
+        assert!(txt.contains("phase decomposition"));
+        assert!(txt.contains("first divergence at index 1"));
+        assert!(txt.contains("task 5 (mDiffFit)"));
+        assert!(txt.contains("pods_created"));
+    }
+
+    #[test]
+    fn html_is_a_complete_escaped_page() {
+        let mut d = sample(false);
+        d.model_b = "job<xl>".into();
+        let html = render_html(&d);
+        assert!(html.starts_with("<!DOCTYPE html>"));
+        assert!(html.ends_with("</html>"));
+        assert!(html.contains("job&lt;xl&gt;"));
+        assert!(html.contains("phase decomposition"));
+    }
+
+    #[test]
+    fn bench_text_covers_all_three_verdicts() {
+        let skip = BenchOutcome::Skipped("placeholder".into());
+        assert!(render_bench_text("a.json", "b.json", &skip).contains("SKIPPED"));
+        let pass = BenchOutcome::Compared {
+            checked: 12,
+            breaches: Vec::new(),
+            warnings: vec!["models[3]: in current only".into()],
+        };
+        let txt = render_bench_text("a.json", "b.json", &pass);
+        assert!(txt.contains("PASS") && txt.contains("warning"));
+        let fail = BenchOutcome::Compared {
+            checked: 12,
+            breaches: vec![BenchBreach {
+                path: "models[0].ms_per_iter".into(),
+                base: 100.0,
+                cur: 160.0,
+                rel: 0.6,
+                tol: 0.3,
+            }],
+            warnings: Vec::new(),
+        };
+        let txt = render_bench_text("a.json", "b.json", &fail);
+        assert!(txt.contains("FAIL") && txt.contains("+60.0% (tolerance 30.0%)"));
+    }
+}

@@ -1,6 +1,7 @@
 //! Execution traces and report generation (the data behind Figs. 3-6).
 
 pub mod chrome;
+pub mod diff;
 pub mod figures;
 pub mod html;
 

@@ -1,0 +1,88 @@
+//! Run/bench metadata: schema versioning, the git revision, and the
+//! FNV-1a hash behind config fingerprints.
+//!
+//! Every `BENCH_*.json` emitter embeds a [`bench_meta`] block so the
+//! regression gate (`hyperflow diff --bench`) can refuse to compare
+//! apples to oranges: a baseline measured under a different config
+//! fingerprint, seed, or schema version is a provenance mismatch, not a
+//! performance regression. Run *snapshots* deliberately do **not**
+//! include the git revision or any wall-clock stamp — they must be
+//! byte-identical across same-seed reruns (`tests/diff.rs` pins this) —
+//! so volatile provenance lives only in the bench artifacts.
+
+use crate::util::json::Json;
+
+/// Version of the `BENCH_*.json` schema. Bump on any breaking change to
+/// a bench emitter's output shape; `baselines/refresh.sh` refuses to
+/// install a baseline whose version does not match.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// 64-bit FNV-1a over raw bytes. Tiny, dependency-free, and stable
+/// across platforms — exactly enough for config fingerprints (this is a
+/// provenance check, not a cryptographic one).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// `git describe --tags --always --dirty` of the working tree, or
+/// `"unknown"` when git (or the repository) is unavailable — bench
+/// artifacts must still be emitted from a tarball checkout.
+pub fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--tags", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// The shared provenance block every bench emitter writes under the
+/// `"meta"` key: model (or sweep-family label), RNG seed, git revision,
+/// and the [`crate::exec::SimConfig::fingerprint`] of the swept config.
+pub fn bench_meta(model: &str, seed: u64, config_fingerprint: &str) -> Json {
+    Json::obj(vec![
+        ("model", model.into()),
+        ("seed", seed.into()),
+        ("git", Json::str(git_describe())),
+        ("config_fingerprint", config_fingerprint.into()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // published FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn bench_meta_carries_all_provenance_fields() {
+        let m = bench_meta("worker-pools", 42, "deadbeef00000000");
+        assert_eq!(m.get("model").unwrap().as_str().unwrap(), "worker-pools");
+        assert_eq!(m.get("seed").unwrap().as_u64().unwrap(), 42);
+        assert!(!m.get("git").unwrap().as_str().unwrap().is_empty());
+        assert_eq!(
+            m.get("config_fingerprint").unwrap().as_str().unwrap(),
+            "deadbeef00000000"
+        );
+    }
+
+    #[test]
+    fn git_describe_never_panics() {
+        // value depends on the environment; the contract is non-empty
+        assert!(!git_describe().is_empty());
+    }
+}

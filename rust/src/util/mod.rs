@@ -8,6 +8,7 @@ pub mod env;
 pub mod svg;
 pub mod json;
 pub mod logger;
+pub mod meta;
 pub mod ptest;
 pub mod rng;
 pub mod stats;
