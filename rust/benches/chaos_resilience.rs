@@ -24,6 +24,7 @@ use hyperflow_k8s::engine::clustering::ClusteringConfig;
 use hyperflow_k8s::models::{driver, ExecModel};
 use hyperflow_k8s::util::env::{env_f64_list, env_usize};
 use hyperflow_k8s::util::json::Json;
+use hyperflow_k8s::util::sweep;
 use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
 
 fn main() {
@@ -64,18 +65,33 @@ fn main() {
         "== chaos resilience sweep == ({nodes} nodes, montage {grid}x{grid}, \
          reclaim rates {rates:?}/node/h, seed {seed})\n"
     );
+    // flatten the model x (baseline + rates) grid into independent sweep
+    // points; each is a self-contained seeded run, so the fan-out leaves
+    // output and BENCH_chaos.json byte-identical to the serial loop
+    let mut grid_pts: Vec<(usize, Option<f64>)> = Vec::new();
+    for m in 0..models.len() {
+        grid_pts.push((m, None));
+        for &rate in &rates {
+            grid_pts.push((m, Some(rate)));
+        }
+    }
+    let results = sweep::run(grid_pts, |_, (m, rate)| {
+        let spec =
+            rate.map(|r| format!("spot:{r},crash:{},pod:0.03,straggler:0.25", r / 2.0));
+        let res = driver::run(mk_dag(), models[m].1.clone(), mk_cfg(spec.as_deref()));
+        (res.makespan.as_secs_f64(), res.chaos)
+    });
+    let stride = 1 + rates.len();
     let mut model_rows: Vec<Json> = Vec::new();
-    for (name, model) in &models {
-        let baseline = driver::run(mk_dag(), model.clone(), mk_cfg(None));
-        let base_s = baseline.makespan.as_secs_f64();
+    for (m, (name, _)) in models.iter().enumerate() {
+        let base_s = results[m * stride].0;
         println!("{name}: healthy makespan {base_s:.0}s");
         let mut points: Vec<Json> = Vec::new();
-        for &rate in &rates {
+        for (ri, &rate) in rates.iter().enumerate() {
             let spec = format!("spot:{rate},crash:{},pod:0.03,straggler:0.25", rate / 2.0);
-            let res = driver::run(mk_dag(), model.clone(), mk_cfg(Some(&spec)));
-            let makespan_s = res.makespan.as_secs_f64();
+            let (makespan_s, c) = &results[m * stride + 1 + ri];
+            let makespan_s = *makespan_s;
             let inflation = makespan_s / base_s;
-            let c = &res.chaos;
             println!(
                 "  reclaim {rate:>5.1}/h: makespan {makespan_s:>7.0}s (x{inflation:>5.2})  \
                  wasted {:>6.1}% goodput {:>5.1}%  faults {:>4} retries {:>4} spec {:>3}",

@@ -21,7 +21,7 @@ use hyperflow_k8s::engine::clustering::ClusteringConfig;
 use hyperflow_k8s::engine::Engine;
 use hyperflow_k8s::models::{driver, ExecModel};
 use hyperflow_k8s::runtime::{Runtime, Tensor};
-use hyperflow_k8s::util::env::env_usize;
+use hyperflow_k8s::util::env::{bench_threads, env_usize};
 use hyperflow_k8s::util::json::Json;
 use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -118,6 +118,7 @@ fn main() {
         let res = driver::run(dag, m2.clone(), driver::SimConfig::with_nodes(17));
         let allocs_per_task = (allocs_now() - a0) as f64 / n as f64;
         let sim_events = res.sim_events;
+        let arena = res.event_arena;
         std::hint::black_box(res.makespan);
         // timed runs; subtract the known generation cost so the recorded
         // rates denominate simulation time only (matching allocs_per_task,
@@ -134,8 +135,13 @@ fn main() {
         let tasks_per_sec = n as f64 / per;
         let events_per_sec = sim_events as f64 / per;
         println!(
-            "{:>44}  -> {:.0} tasks/sec, {:.0} events/sec, {:.1} allocs/task",
-            "", tasks_per_sec, events_per_sec, allocs_per_task
+            "{:>44}  -> {:.0} tasks/sec, {:.0} events/sec, {:.1} allocs/task, \
+             arena reuse {:.1}%",
+            "",
+            tasks_per_sec,
+            events_per_sec,
+            allocs_per_task,
+            arena.reuse_ratio() * 100.0
         );
         model_rows.push(Json::obj(vec![
             ("model", Json::str(model.name())),
@@ -144,6 +150,9 @@ fn main() {
             ("events_per_sec", events_per_sec.into()),
             ("sim_events", sim_events.into()),
             ("allocs_per_task", allocs_per_task.into()),
+            ("event_arena_allocs", arena.allocs.into()),
+            ("event_arena_reuses", arena.reuses.into()),
+            ("event_arena_reuse_ratio", arena.reuse_ratio().into()),
         ]));
     }
 
@@ -175,6 +184,11 @@ fn main() {
         ),
         ("grid", grid.into()),
         ("tasks", n.into()),
+        // timing benches are serial; this records the harness knob so a
+        // perf regression can be correlated with the thread setting (the
+        // sweep benches are thread-invariant by construction and do not
+        // record it — see EXPERIMENTS.md §"Raw speed")
+        ("bench_threads", bench_threads().into()),
         ("models", Json::Arr(model_rows)),
         ("engine_drain_ms", (per_engine * 1000.0).into()),
         ("dag_generation_ms", (per_gen * 1000.0).into()),

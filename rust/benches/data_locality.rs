@@ -20,6 +20,7 @@ use hyperflow_k8s::data::DataConfig;
 use hyperflow_k8s::models::{driver, ExecModel};
 use hyperflow_k8s::util::env::{env_f64, env_f64_list, env_usize};
 use hyperflow_k8s::util::json::Json;
+use hyperflow_k8s::util::sweep;
 use hyperflow_k8s::workflow::montage::{generate, MontageConfig};
 
 fn main() {
@@ -54,22 +55,36 @@ fn main() {
         "== data locality sweep == ({nodes} nodes, montage {grid}x{grid}, \
          NFS rates {rates:?} Gbit/s + s3, cache {cache_gb} GB/node, seed {seed})\n"
     );
-    let mut model_rows: Vec<Json> = Vec::new();
-    for (name, model) in &models {
+    // flatten the model x (baseline + backends) grid into independent
+    // sweep points (each a self-contained seeded run) and fan out across
+    // HF_BENCH_THREADS; collection order is point order, so the printed
+    // report and BENCH_data.json stay byte-identical to the serial loop
+    let mut grid_pts: Vec<(usize, Option<usize>)> = Vec::new();
+    for m in 0..models.len() {
+        grid_pts.push((m, None));
+        for b in 0..backends.len() {
+            grid_pts.push((m, Some(b)));
+        }
+    }
+    let results = sweep::run(grid_pts, |_, (m, backend)| {
         let mut cfg = driver::SimConfig::with_nodes(nodes);
         cfg.seed = seed;
-        let baseline = driver::run(mk_dag(), model.clone(), cfg);
-        let base_s = baseline.makespan.as_secs_f64();
+        if let Some(b) = backend {
+            cfg.max_sim_s = 24.0 * 3600.0; // starved links stretch runs
+            cfg.data = Some(DataConfig::parse_spec(&backends[b].1).expect("bench data spec"));
+        }
+        let res = driver::run(mk_dag(), models[m].1.clone(), cfg);
+        (res.makespan.as_secs_f64(), res.data)
+    });
+    let stride = 1 + backends.len();
+    let mut model_rows: Vec<Json> = Vec::new();
+    for (m, (name, _)) in models.iter().enumerate() {
+        let base_s = results[m * stride].0;
         println!("{name}: no-data makespan {base_s:.0}s");
         let mut points: Vec<Json> = Vec::new();
-        for (label, spec) in &backends {
-            let mut cfg = driver::SimConfig::with_nodes(nodes);
-            cfg.seed = seed;
-            cfg.max_sim_s = 24.0 * 3600.0; // starved links stretch runs
-            cfg.data = Some(DataConfig::parse_spec(spec).expect("bench data spec"));
-            let res = driver::run(mk_dag(), model.clone(), cfg);
-            let d = &res.data;
-            let makespan_s = res.makespan.as_secs_f64();
+        for (b, (label, spec)) in backends.iter().enumerate() {
+            let (makespan_s, d) = &results[m * stride + 1 + b];
+            let makespan_s = *makespan_s;
             println!(
                 "  {label:>10}: makespan {makespan_s:>7.0}s (x{:>5.2})  moved {:>6.2} GB  \
                  hits {:>5.1}%  stage-in p50/p95/p99 {:>5.2}/{:>5.2}/{:>6.2}s  io {:>4.1}%",

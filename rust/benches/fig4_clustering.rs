@@ -23,7 +23,7 @@ fn main() {
         .trace
         .records
         .iter()
-        .filter(|r| r.type_name == "mDiffFit")
+        .filter(|r| res.trace.type_name(r) == "mDiffFit")
         .filter_map(|r| r.finished_at)
         .max()
         .map(|t| t.as_secs_f64())

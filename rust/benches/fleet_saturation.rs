@@ -19,6 +19,7 @@ use hyperflow_k8s::fleet::{self, ArrivalProcess, FleetConfig};
 use hyperflow_k8s::models::{driver, ExecModel};
 use hyperflow_k8s::util::env::{env_f64, env_f64_list, env_usize};
 use hyperflow_k8s::util::json::Json;
+use hyperflow_k8s::util::sweep;
 
 fn main() {
     let nodes = env_usize("HF_FLEET_NODES", 4);
@@ -30,8 +31,10 @@ fn main() {
         "== fleet saturation sweep == ({nodes} nodes, {duration:.0}s arrival window, \
          {tenants} tenants, worker-pools)\n"
     );
-    let mut points: Vec<Json> = Vec::new();
-    for &rate in &rates {
+    // each rate is an independent seeded simulation: fan out across
+    // HF_BENCH_THREADS workers, print from the collected results so the
+    // output (and BENCH_fleet.json) is byte-identical to the serial run
+    let aggs = sweep::run(rates.clone(), |_, rate| {
         let cfg = FleetConfig {
             arrival: ArrivalProcess::Poisson { per_hour: rate },
             duration_s: duration,
@@ -44,7 +47,10 @@ fn main() {
             driver::SimConfig::with_nodes(nodes),
             &cfg,
         );
-        let agg = fleet::report::aggregate(&res);
+        fleet::report::aggregate(&res)
+    });
+    let mut points: Vec<Json> = Vec::new();
+    for (&rate, agg) in rates.iter().zip(&aggs) {
         println!(
             "rate {rate:>6.1}/h: {:>4} instances  throughput {:>6.1}/h  util {:>5.1}%  \
              slowdown mean {:>7.2} p99 {:>8.2}  qdelay {:>6.1}s",

@@ -23,6 +23,7 @@ use hyperflow_k8s::k8s::isolation::IsolationConfig;
 use hyperflow_k8s::models::{driver, ExecModel};
 use hyperflow_k8s::util::env::{env_f64, env_usize};
 use hyperflow_k8s::util::json::Json;
+use hyperflow_k8s::util::sweep;
 
 fn main() {
     let nodes = env_usize("HF_ISO_NODES", 12);
@@ -72,24 +73,38 @@ fn main() {
          {rate}/h over {duration:.0}s, takeover of tenant 0 at {takeover_s:.0}s, seed {seed})\n"
     );
     let chaos_spec = format!("takeover:0@{takeover_s}");
+    // flatten the model x (baseline + policies) grid into independent
+    // sweep points; each is a self-contained seeded fleet run, so the
+    // fan-out leaves output and BENCH_isolation.json byte-identical to
+    // the serial loop
+    let mut grid_pts: Vec<(usize, Option<usize>)> = Vec::new();
+    for m in 0..models.len() {
+        grid_pts.push((m, None));
+        for p in 0..policies.len() {
+            grid_pts.push((m, Some(p)));
+        }
+    }
+    let results = sweep::run(grid_pts, |_, (m, policy)| {
+        let sim = match policy {
+            None => mk_sim(None, None), // healthy baseline: isolation off
+            Some(p) => mk_sim(Some(&policies[p].1), Some(&chaos_spec)),
+        };
+        let res = fleet::run(models[m].1.clone(), sim, &fleet_cfg);
+        let agg = fleet::report::aggregate(&res);
+        let rows = fleet::report::per_tenant(&res);
+        (agg, rows, res.sim.isolation)
+    });
+    let stride = 1 + policies.len();
     let mut model_rows: Vec<Json> = Vec::new();
-    for (name, model) in &models {
-        // healthy baseline: isolation off, no takeover
-        let base = fleet::run(model.clone(), mk_sim(None, None), &fleet_cfg);
-        let base_agg = fleet::report::aggregate(&base);
+    for (m, (name, _)) in models.iter().enumerate() {
+        let base_agg = &results[m * stride].0;
         println!(
             "{name}: healthy span {:.0}s, mean slowdown {:.2}",
             base_agg.span_s, base_agg.mean_slowdown
         );
         let mut points: Vec<Json> = Vec::new();
-        for (policy, iso_spec) in &policies {
-            let res = fleet::run(
-                model.clone(),
-                mk_sim(Some(iso_spec), Some(&chaos_spec)),
-                &fleet_cfg,
-            );
-            let agg = fleet::report::aggregate(&res);
-            let rows = fleet::report::per_tenant(&res);
+        for (p, (policy, iso_spec)) in policies.iter().enumerate() {
+            let (agg, rows, iso) = &results[m * stride + 1 + p];
             let victim = &rows[0];
             let innocents: Vec<_> = rows.iter().skip(1).collect();
             let n_i = innocents.len().max(1) as f64;
@@ -97,7 +112,6 @@ fn main() {
                 innocents.iter().map(|r| r.slowdown_mean).sum::<f64>() / n_i;
             let innocent_exposed_s =
                 innocents.iter().map(|r| r.takeover_exposed_s).sum::<f64>();
-            let iso = &res.sim.isolation;
             println!(
                 "  {policy:>9}: victim slowdown {:>6.2}  innocent slowdown {:>6.2} \
                  (healthy {:>5.2})  blast {:>2} nodes / {:>3} pods ({:>3} innocent)  \

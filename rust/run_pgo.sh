@@ -1,0 +1,81 @@
+#!/bin/sh
+# Profile-guided-optimization build for the bench harnesses.
+#
+# Three phases, standard rustc PGO recipe (see baselines/README.md
+# §"PGO builds" for when to use this):
+#
+#   1. instrument: rebuild the crate with -Cprofile-generate and run a
+#      smoke test plus one reduced sweep per bench harness so the
+#      profile covers every hot path the benches exercise (event loop,
+#      scheduler, fleet driver, chaos/data/isolation planes);
+#   2. merge: llvm-profdata merges the raw per-process profiles into
+#      one .profdata;
+#   3. rebuild: -Cprofile-use recompiles with the merged profile.
+#
+# The training runs use the same reduced knobs as CI/refresh.sh — the
+# sweep points are seeded and deterministic, so the profile is
+# reproducible run-to-run modulo thread interleaving (which only moves
+# counter magnitudes, not which paths are hot). HF_BENCH_THREADS=2
+# during training also exercises the parallel sweep path itself.
+#
+# Usage, from rust/:
+#
+#   ./run_pgo.sh                # instrument + train + merge + rebuild
+#   PGO_DIR=/tmp/pgo ./run_pgo.sh   # override the profile scratch dir
+#
+# After it finishes, `target/release/` holds PGO-optimized binaries;
+# re-run the benches and compare against baselines/ before committing a
+# refresh (perf deltas from PGO are wall-clock only — BENCH JSON
+# simulation metrics must not move at all, same seed = same numbers).
+set -eu
+
+cd "$(dirname "$0")"
+
+PGO_DIR="${PGO_DIR:-target/pgo-profiles}"
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+# rustc wants an absolute path for -Cprofile-generate
+case "$PGO_DIR" in
+    /*) : ;;
+    *) PGO_DIR="$(pwd)/$PGO_DIR" ;;
+esac
+
+# llvm-profdata ships with the llvm-tools rustup component; fall back
+# to the sysroot copy when it is not on PATH.
+if command -v llvm-profdata >/dev/null 2>&1; then
+    PROFDATA=llvm-profdata
+else
+    PROFDATA="$(find "$(rustc --print sysroot)/lib/rustlib" \
+        -name llvm-profdata -type f 2>/dev/null | head -n 1 || true)"
+    if [ -z "$PROFDATA" ]; then
+        echo "run_pgo: llvm-profdata not found (install the llvm-tools" >&2
+        echo "rustup component: rustup component add llvm-tools)" >&2
+        exit 1
+    fi
+fi
+
+echo "== phase 1: instrumented build + training runs =="
+export RUSTFLAGS="-Cprofile-generate=$PGO_DIR"
+cargo build --release
+# smoke: the tier-1 test suite doubles as broad-coverage training input
+cargo test --release -q
+# one reduced sweep per harness, same knobs as CI/refresh.sh; two
+# threads so the parallel sweep runner itself lands in the profile
+export HF_BENCH_THREADS=2
+HF_BENCH_GRID=4 HF_BENCH_ITERS=1 cargo bench --bench coordinator_hotpath
+HF_FLEET_DURATION=400 HF_FLEET_NODES=4 cargo bench --bench fleet_saturation
+HF_CHAOS_GRID=4 HF_CHAOS_RATES=2,4,8 cargo bench --bench chaos_resilience
+HF_DATA_GRID=4 HF_DATA_RATES=0.5,2 cargo bench --bench data_locality
+HF_ISO_DURATION=1200 HF_ISO_RATE=12 HF_ISO_NODES=6 cargo bench --bench tenant_takeover
+unset HF_BENCH_THREADS
+
+echo "== phase 2: merge profiles =="
+"$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"
+
+echo "== phase 3: optimized rebuild =="
+export RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata"
+cargo build --release
+
+echo "PGO build done — benches in target/release are profile-optimized."
+echo "Re-run the harnesses and diff against baselines/ before refreshing:"
+echo "  simulation metrics must be bit-identical; only wall-clock moves."

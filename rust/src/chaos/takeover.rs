@@ -29,7 +29,7 @@
 
 use crate::k8s::isolation::IsolationPolicy;
 use crate::k8s::node::NodeId;
-use crate::k8s::pod::Pod;
+use crate::k8s::pod::PodTable;
 
 /// Cordon-and-drain window granted to blast-radius nodes before they are
 /// reclaimed for re-imaging (mirrors the spot-reclaim warning shape).
@@ -85,27 +85,29 @@ pub struct BlastRadius {
 
 /// Compute the blast radius of `victim` from live placement.
 ///
-/// `effective_tenant` maps a pod to the tenant whose work it currently
-/// embodies (`None` for idle infrastructure) — see
-/// [`crate::k8s::isolation::IsolationState::effective_tenant`].
+/// `effective_tenant` maps a pod *index* to the tenant whose work it
+/// currently embodies (`None` for idle infrastructure) — see
+/// [`crate::k8s::isolation::IsolationState::effective_tenant`]. Indices
+/// keep the two scans below on the SoA [`PodTable`] columns (`phase`,
+/// `node`) without materializing pod rows.
 pub fn compute_blast_radius(
     victim: u16,
     privilege: &PrivilegeModel,
-    pods: &[Pod],
+    pods: &PodTable,
     n_nodes: usize,
     node_failed: impl Fn(NodeId) -> bool,
-    effective_tenant: impl Fn(&Pod) -> Option<u16>,
+    effective_tenant: impl Fn(usize) -> Option<u16>,
     data_plane_on: bool,
 ) -> BlastRadius {
     let mut br = BlastRadius::default();
     let mut on_node = vec![false; n_nodes];
     let mut victim_pods = 0u64;
-    for pod in pods {
-        if pod.is_terminal() || effective_tenant(pod) != Some(victim) {
+    for i in 0..pods.len() {
+        if pods.is_terminal(i) || effective_tenant(i) != Some(victim) {
             continue;
         }
         victim_pods += 1;
-        if let Some(nid) = pod.node {
+        if let Some(nid) = pods.node[i] {
             if !node_failed(nid) {
                 on_node[nid.0] = true;
             }
@@ -116,14 +118,14 @@ pub fn compute_blast_radius(
             .filter(|&i| on_node[i])
             .map(NodeId)
             .collect();
-        for pod in pods {
-            let Some(nid) = pod.node else { continue };
-            if pod.is_terminal() || !on_node[nid.0] {
+        for i in 0..pods.len() {
+            let Some(nid) = pods.node[i] else { continue };
+            if pods.is_terminal(i) || !on_node[nid.0] {
                 continue;
             }
             br.pods += 1;
             if privilege.can_reach_co_resident {
-                if let Some(t) = effective_tenant(pod) {
+                if let Some(t) = effective_tenant(i) {
                     if t != victim {
                         br.innocent_pods += 1;
                     }
@@ -147,14 +149,14 @@ pub fn compute_blast_radius(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::k8s::pod::{Payload, PodId, PodPhase};
+    use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
     use crate::k8s::resources::Resources;
     use crate::sim::SimTime;
     use crate::workflow::task::TaskId;
 
     /// pods: (id, node, effective tenant, running?)
-    fn mkpods(spec: &[(u64, Option<usize>, Option<u16>, bool)]) -> (Vec<Pod>, Vec<Option<u16>>) {
-        let mut pods = Vec::new();
+    fn mkpods(spec: &[(u64, Option<usize>, Option<u16>, bool)]) -> (PodTable, Vec<Option<u16>>) {
+        let mut pods = PodTable::new();
         let mut eff = Vec::new();
         for &(id, node, tenant, running) in spec {
             let mut p = Pod::new(
@@ -184,7 +186,7 @@ mod tests {
             &pods,
             4,
             |_| false,
-            |p: &Pod| eff[p.id.0 as usize],
+            |i: usize| eff[i],
             data_on,
         )
     }
@@ -245,7 +247,7 @@ mod tests {
             &pods,
             4,
             |n| n == NodeId(0),
-            |p: &Pod| eff[p.id.0 as usize],
+            |i: usize| eff[i],
             false,
         );
         assert_eq!(br.nodes, vec![NodeId(2)]);

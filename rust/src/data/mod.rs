@@ -42,7 +42,7 @@ pub mod report;
 pub use report::{DataReport, DataStats};
 
 use crate::k8s::node::Node;
-use crate::k8s::pod::{Payload, Pod, PodId};
+use crate::k8s::pod::{Payload, PodId};
 use crate::k8s::scheduler::DataLocality;
 use crate::sim::SimTime;
 use crate::workflow::dag::Dag;
@@ -744,8 +744,8 @@ impl DataPlane {
 }
 
 impl DataLocality for DataPlane {
-    fn cached_input_bytes(&self, pod: &Pod, node: &Node) -> u64 {
-        match &pod.payload {
+    fn cached_input_bytes(&self, payload: &Payload, node: &Node) -> u64 {
+        match payload {
             Payload::JobBatch { tasks } => tasks
                 .iter()
                 .map(|&t| self.cached_input_bytes_of(t, node.id.0))

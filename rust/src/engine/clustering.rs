@@ -14,8 +14,7 @@
 
 use crate::sim::SimTime;
 use crate::util::json::{Json, JsonError};
-use crate::workflow::task::TaskId;
-use std::collections::BTreeMap;
+use crate::workflow::task::{TaskId, TypeId};
 
 /// One clustering rule.
 #[derive(Debug, Clone, PartialEq)]
@@ -115,10 +114,17 @@ pub enum BatchAction {
 }
 
 /// Per-type batch buffers with deadline bookkeeping.
+///
+/// Buffers are a dense `Vec` indexed by [`TypeId`] — the per-push
+/// `BTreeMap<String, _>` lookup (plus a rule clone with its `match_task`
+/// strings) showed up in the 16k-sim profile (EXPERIMENTS.md §Perf). Name
+/// matching against the rule list happens once per type, on the first
+/// push of that type, and is cached as a copyable `(size, timeout)` pair.
 #[derive(Debug)]
 pub struct Batcher {
     cfg: ClusteringConfig,
-    buffers: BTreeMap<String, Buffer>,
+    buffers: Vec<Buffer>,
+    rule_cache: Vec<CachedRule>,
     pub batches_emitted: u64,
     pub partial_flushes: u64,
 }
@@ -129,11 +135,20 @@ struct Buffer {
     deadline: Option<SimTime>,
 }
 
+/// Result of matching one task type against the rule list.
+#[derive(Debug, Clone, Copy)]
+enum CachedRule {
+    Unresolved,
+    NoRule,
+    Rule { size: usize, timeout_ms: u64 },
+}
+
 impl Batcher {
     pub fn new(cfg: ClusteringConfig) -> Self {
         Batcher {
             cfg,
-            buffers: BTreeMap::new(),
+            buffers: Vec::new(),
+            rule_cache: Vec::new(),
             batches_emitted: 0,
             partial_flushes: 0,
         }
@@ -144,28 +159,45 @@ impl Batcher {
     }
 
     /// Offer a ready task. Tasks of types without a rule flush immediately
-    /// as singleton batches.
-    pub fn push(&mut self, now: SimTime, type_name: &str, task: TaskId) -> BatchAction {
-        let rule = match self.cfg.rule_for(type_name) {
-            None => {
+    /// as singleton batches. `type_name` is only consulted the first time
+    /// a type id is seen, to resolve its rule.
+    pub fn push(
+        &mut self,
+        now: SimTime,
+        ttype: TypeId,
+        type_name: &str,
+        task: TaskId,
+    ) -> BatchAction {
+        let i = ttype.0 as usize;
+        if i >= self.buffers.len() {
+            self.buffers.resize_with(i + 1, Buffer::default);
+            self.rule_cache.resize(i + 1, CachedRule::Unresolved);
+        }
+        if matches!(self.rule_cache[i], CachedRule::Unresolved) {
+            self.rule_cache[i] = match self.cfg.rule_for(type_name) {
+                None => CachedRule::NoRule,
+                Some(r) => CachedRule::Rule {
+                    size: r.size,
+                    timeout_ms: r.timeout_ms,
+                },
+            };
+        }
+        let (size, timeout_ms) = match self.rule_cache[i] {
+            CachedRule::Rule { size, timeout_ms } if size > 1 => (size, timeout_ms),
+            _ => {
                 self.batches_emitted += 1;
                 return BatchAction::Flush(vec![task]);
             }
-            Some(r) => r.clone(),
         };
-        if rule.size <= 1 {
-            self.batches_emitted += 1;
-            return BatchAction::Flush(vec![task]);
-        }
-        let buf = self.buffers.entry(type_name.to_string()).or_default();
+        let buf = &mut self.buffers[i];
         buf.tasks.push(task);
-        if buf.tasks.len() >= rule.size {
+        if buf.tasks.len() >= size {
             buf.deadline = None;
             self.batches_emitted += 1;
             return BatchAction::Flush(std::mem::take(&mut buf.tasks));
         }
         if buf.deadline.is_none() {
-            let dl = now + SimTime::from_millis(rule.timeout_ms);
+            let dl = now + SimTime::from_millis(timeout_ms);
             buf.deadline = Some(dl);
             BatchAction::ArmTimer(dl)
         } else {
@@ -173,11 +205,11 @@ impl Batcher {
         }
     }
 
-    /// Timer fired for `type_name` with deadline `dl`. Returns the partial
+    /// Timer fired for `ttype` with deadline `dl`. Returns the partial
     /// batch if the deadline is still current (it is cleared when a full
     /// batch flushed in the meantime).
-    pub fn timer_fired(&mut self, type_name: &str, dl: SimTime) -> Option<Vec<TaskId>> {
-        let buf = self.buffers.get_mut(type_name)?;
+    pub fn timer_fired(&mut self, ttype: TypeId, dl: SimTime) -> Option<Vec<TaskId>> {
+        let buf = self.buffers.get_mut(ttype.0 as usize)?;
         if buf.deadline != Some(dl) || buf.tasks.is_empty() {
             return None;
         }
@@ -187,21 +219,24 @@ impl Batcher {
         Some(std::mem::take(&mut buf.tasks))
     }
 
-    /// Flush everything (end-of-workflow drain).
-    pub fn drain(&mut self) -> Vec<(String, Vec<TaskId>)> {
+    /// Flush everything (end-of-workflow drain), in type-id order.
+    pub fn drain(&mut self) -> Vec<(TypeId, Vec<TaskId>)> {
         let mut out = Vec::new();
-        for (name, buf) in self.buffers.iter_mut() {
+        for (i, buf) in self.buffers.iter_mut().enumerate() {
             if !buf.tasks.is_empty() {
                 buf.deadline = None;
                 self.batches_emitted += 1;
-                out.push((name.clone(), std::mem::take(&mut buf.tasks)));
+                out.push((TypeId(i as u16), std::mem::take(&mut buf.tasks)));
             }
         }
         out
     }
 
-    pub fn buffered(&self, type_name: &str) -> usize {
-        self.buffers.get(type_name).map(|b| b.tasks.len()).unwrap_or(0)
+    pub fn buffered(&self, ttype: TypeId) -> usize {
+        self.buffers
+            .get(ttype.0 as usize)
+            .map(|b| b.tasks.len())
+            .unwrap_or(0)
     }
 }
 
@@ -232,6 +267,8 @@ mod tests {
         assert_eq!(cfg.rule_for("mDiffFit").unwrap().timeout_ms, 3000);
     }
 
+    const TX: TypeId = TypeId(0);
+
     #[test]
     fn full_batch_flushes_immediately() {
         let mut b = Batcher::new(ClusteringConfig {
@@ -242,15 +279,15 @@ mod tests {
             }],
         });
         assert_eq!(
-            b.push(SimTime(0), "X", t(0)),
+            b.push(SimTime(0), TX, "X", t(0)),
             BatchAction::ArmTimer(SimTime(1000))
         );
-        assert_eq!(b.push(SimTime(10), "X", t(1)), BatchAction::Buffered);
+        assert_eq!(b.push(SimTime(10), TX, "X", t(1)), BatchAction::Buffered);
         assert_eq!(
-            b.push(SimTime(20), "X", t(2)),
+            b.push(SimTime(20), TX, "X", t(2)),
             BatchAction::Flush(vec![t(0), t(1), t(2)])
         );
-        assert_eq!(b.buffered("X"), 0);
+        assert_eq!(b.buffered(TX), 0);
     }
 
     #[test]
@@ -262,12 +299,12 @@ mod tests {
                 timeout_ms: 3000,
             }],
         });
-        let dl = match b.push(SimTime(0), "X", t(0)) {
+        let dl = match b.push(SimTime(0), TX, "X", t(0)) {
             BatchAction::ArmTimer(dl) => dl,
             o => panic!("{o:?}"),
         };
-        b.push(SimTime(100), "X", t(1));
-        assert_eq!(b.timer_fired("X", dl), Some(vec![t(0), t(1)]));
+        b.push(SimTime(100), TX, "X", t(1));
+        assert_eq!(b.timer_fired(TX, dl), Some(vec![t(0), t(1)]));
         assert_eq!(b.partial_flushes, 1);
     }
 
@@ -280,12 +317,18 @@ mod tests {
                 timeout_ms: 3000,
             }],
         });
-        let dl = match b.push(SimTime(0), "X", t(0)) {
+        let dl = match b.push(SimTime(0), TX, "X", t(0)) {
             BatchAction::ArmTimer(dl) => dl,
             o => panic!("{o:?}"),
         };
-        b.push(SimTime(1), "X", t(1)); // full flush
-        assert_eq!(b.timer_fired("X", dl), None);
+        b.push(SimTime(1), TX, "X", t(1)); // full flush
+        assert_eq!(b.timer_fired(TX, dl), None);
+    }
+
+    #[test]
+    fn timer_for_unseen_type_is_ignored() {
+        let mut b = Batcher::new(ClusteringConfig::paper_default());
+        assert_eq!(b.timer_fired(TypeId(40), SimTime(1000)), None);
     }
 
     #[test]
@@ -297,9 +340,9 @@ mod tests {
                 timeout_ms: 1000,
             }],
         });
-        b.push(SimTime(0), "X", t(0));
-        b.push(SimTime(5), "X", t(1)); // flush
-        match b.push(SimTime(50), "X", t(2)) {
+        b.push(SimTime(0), TX, "X", t(0));
+        b.push(SimTime(5), TX, "X", t(1)); // flush
+        match b.push(SimTime(50), TX, "X", t(2)) {
             BatchAction::ArmTimer(dl) => assert_eq!(dl, SimTime(1050)),
             o => panic!("{o:?}"),
         }
@@ -309,7 +352,7 @@ mod tests {
     fn unmatched_type_is_singleton() {
         let mut b = Batcher::new(ClusteringConfig::paper_default());
         assert_eq!(
-            b.push(SimTime(0), "mAdd", t(7)),
+            b.push(SimTime(0), TypeId(7), "mAdd", t(7)),
             BatchAction::Flush(vec![t(7)])
         );
     }
@@ -318,20 +361,34 @@ mod tests {
     fn size_one_rule_is_singleton() {
         let mut b = Batcher::new(ClusteringConfig::uniform(1, 3000));
         assert_eq!(
-            b.push(SimTime(0), "mProject", t(1)),
+            b.push(SimTime(0), TX, "mProject", t(1)),
             BatchAction::Flush(vec![t(1)])
         );
     }
 
     #[test]
-    fn drain_flushes_all_buffers() {
+    fn drain_flushes_all_buffers_in_type_id_order() {
         let mut b = Batcher::new(ClusteringConfig::paper_default());
-        b.push(SimTime(0), "mProject", t(0));
-        b.push(SimTime(0), "mDiffFit", t(1));
+        // push in reverse type-id order; drain must come back dense/sorted
+        b.push(SimTime(0), TypeId(1), "mDiffFit", t(1));
+        b.push(SimTime(0), TypeId(0), "mProject", t(0));
         let drained = b.drain();
         assert_eq!(drained.len(), 2);
-        let total: usize = drained.iter().map(|(_, v)| v.len()).sum();
-        assert_eq!(total, 2);
+        assert_eq!(drained[0], (TypeId(0), vec![t(0)]));
+        assert_eq!(drained[1], (TypeId(1), vec![t(1)]));
+    }
+
+    #[test]
+    fn rule_is_resolved_once_per_type() {
+        // the cached resolution must win even if a later push lies about
+        // the name — the TypeId is the identity, the name a resolution key
+        let mut b = Batcher::new(ClusteringConfig::paper_default());
+        assert!(matches!(
+            b.push(SimTime(0), TX, "mProject", t(0)),
+            BatchAction::ArmTimer(_)
+        ));
+        assert_eq!(b.push(SimTime(1), TX, "mAdd", t(1)), BatchAction::Buffered);
+        assert_eq!(b.buffered(TX), 2);
     }
 
     #[test]
@@ -355,7 +412,7 @@ mod tests {
                 // fire due timers first
                 timers.retain(|&dl| {
                     if dl <= now {
-                        if let Some(batch) = b.timer_fired("X", dl) {
+                        if let Some(batch) = b.timer_fired(TX, dl) {
                             out += batch.len();
                         }
                         false
@@ -363,7 +420,7 @@ mod tests {
                         true
                     }
                 });
-                match b.push(now, "X", t(i as u32)) {
+                match b.push(now, TX, "X", t(i as u32)) {
                     BatchAction::Flush(v) => out += v.len(),
                     BatchAction::ArmTimer(dl) => timers.push(dl),
                     BatchAction::Buffered => {}

@@ -198,7 +198,7 @@ impl StrategyState {
             k.start_task(pod, task);
             return;
         }
-        let node = k.pods[pod.0 as usize].node.expect("running pod is bound").0;
+        let node = k.pods.node[pod.0 as usize].expect("running pod is bound").0;
         let tenant = k.tenant_of(task).idx();
         k.current_task[pod.0 as usize] = Some(task);
         k.pod_io[pod.0 as usize] = IoPhase::StageIn;
@@ -220,7 +220,7 @@ impl StrategyState {
     /// shared storage, like the paper's NFS volume).
     pub fn begin_stage_out_for(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
         let now = k.now();
-        let node = k.pods[pod.0 as usize].node.expect("running pod is bound").0;
+        let node = k.pods.node[pod.0 as usize].expect("running pod is bound").0;
         let tenant = k.tenant_of(task).idx();
         k.pod_io[pod.0 as usize] = IoPhase::StageOut;
         k.task_out_pending[task.0 as usize] = true;
@@ -270,7 +270,7 @@ impl StrategyState {
                 self.instance_task_done(k, task);
             }
         }
-        match k.pods[pod.0 as usize].pool_id() {
+        match k.pods.pool_id(pod.0 as usize) {
             None => {
                 k.batch_queue[pod.0 as usize].pop_front();
                 if let Some(&next) = k.batch_queue[pod.0 as usize].front() {
@@ -311,7 +311,7 @@ impl StrategyState {
         }
         // a completing flow implies a live pod (kills cancel their flows
         // synchronously) — but stay defensive
-        if k.pods[d.pod.0 as usize].is_terminal()
+        if k.pods.is_terminal(d.pod.0 as usize)
             || k.current_task[d.pod.0 as usize] != Some(d.task)
         {
             return;
@@ -407,14 +407,14 @@ impl StrategyState {
         if drain {
             let victims = k.take_node_victims(node, true);
             for &pid in &victims {
-                match k.pods[pid.0 as usize].phase {
+                match k.pods.phase[pid.0 as usize] {
                     PodPhase::Running if k.current_task[pid.0 as usize].is_none() => {
                         // idle worker: release it now so the deployment
                         // re-creates it on a surviving node
                         self.terminate_pod(k, pid, PodPhase::Succeeded);
                     }
                     PodPhase::Running => {
-                        k.pods[pid.0 as usize].phase = PodPhase::Draining;
+                        k.pods.phase[pid.0 as usize] = PodPhase::Draining;
                     }
                     // Starting workers are abandoned before doing work
                     PodPhase::Starting => self.terminate_pod(k, pid, PodPhase::Deleted),
@@ -450,15 +450,16 @@ impl StrategyState {
         let br = {
             let current_task = &k.current_task;
             let task_tenant = &k.task_tenant;
-            let eff = |p: &crate::k8s::pod::Pod| {
-                let tt = current_task[p.id.0 as usize]
-                    .map(|t| task_tenant.get(t.0 as usize).copied().unwrap_or(0));
-                iso.effective_tenant(p, tt)
+            let pods = &k.pods;
+            let eff = |i: usize| {
+                let tt =
+                    current_task[i].map(|t| task_tenant.get(t.0 as usize).copied().unwrap_or(0));
+                iso.effective_tenant(PodId(i as u64), &pods.payload[i], tt)
             };
             compute_blast_radius(
                 tenant,
                 &privilege,
-                &k.pods,
+                pods,
                 k.nodes.len(),
                 |n| k.nodes[n.0].failed,
                 eff,
@@ -473,13 +474,14 @@ impl StrategyState {
         // innocent SLO impact: compute time innocent tenants had in flight
         // on blast nodes at takeover time (it drains or dies below)
         for &nid in &br.nodes {
-            for p in k.pods.iter().filter(|p| p.node == Some(nid) && !p.is_terminal()) {
-                if let Some(t) = k.current_task[p.id.0 as usize] {
+            for i in 0..k.pods.len() {
+                if k.pods.node[i] != Some(nid) || k.pods.is_terminal(i) {
+                    continue;
+                }
+                if let Some(t) = k.current_task[i] {
                     let tt = k.task_tenant.get(t.0 as usize).copied().unwrap_or(0);
                     if tt != tenant {
-                        let exposed = now
-                            .saturating_sub(k.pod_task_started_at[p.id.0 as usize])
-                            .as_millis();
+                        let exposed = now.saturating_sub(k.pod_task_started_at[i]).as_millis();
                         iso.stats.add_exposure(tt, exposed);
                     }
                 }
@@ -509,19 +511,17 @@ impl StrategyState {
             }
         } else {
             // contained: kill only the compromised tenant's own pods
-            let victims: Vec<PodId> = k
-                .pods
-                .iter()
-                .filter(|p| !p.is_terminal())
-                .filter(|p| {
-                    let tt = k.current_task[p.id.0 as usize]
+            let victims: Vec<PodId> = (0..k.pods.len())
+                .filter(|&i| !k.pods.is_terminal(i))
+                .filter(|&i| {
+                    let tt = k.current_task[i]
                         .map(|t| k.task_tenant.get(t.0 as usize).copied().unwrap_or(0));
                     k.isolation
                         .as_ref()
-                        .and_then(|i| i.effective_tenant(p, tt))
+                        .and_then(|is| is.effective_tenant(PodId(i as u64), &k.pods.payload[i], tt))
                         == Some(tenant)
                 })
-                .map(|p| p.id)
+                .map(|i| PodId(i as u64))
                 .collect();
             for pid in victims {
                 self.takeover_kill_pod(k, pid);
@@ -534,14 +534,14 @@ impl StrategyState {
     /// back-off) — the per-pod slice of [`StrategyState::fail_node_inner`]
     /// without the node going down.
     fn takeover_kill_pod(&mut self, k: &mut Kernel, pid: PodId) {
-        if k.pods[pid.0 as usize].is_terminal() {
+        if k.pods.is_terminal(pid.0 as usize) {
             return;
         }
         if let Some(o) = k.obs.as_mut() {
             let now = k.q.now();
             o.attempt_lost(pid, now);
         }
-        let node = k.pods[pid.0 as usize].node;
+        let node = k.pods.node[pid.0 as usize];
         let in_flight = k.current_task[pid.0 as usize].take();
         let phase = k.pod_io[pid.0 as usize];
         if let Some(task) = in_flight {
@@ -565,7 +565,7 @@ impl StrategyState {
                 }
             }
         }
-        let work = match &k.pods[pid.0 as usize].payload {
+        let work = match &k.pods.payload[pid.0 as usize] {
             Payload::JobBatch { tasks } => {
                 let remaining: Vec<TaskId> = if k.batch_queue[pid.0 as usize].is_empty() {
                     tasks.clone()
@@ -667,7 +667,7 @@ impl StrategyState {
                     }
                 }
             }
-            let work = match &k.pods[pid.0 as usize].payload {
+            let work = match &k.pods.payload[pid.0 as usize] {
                 Payload::JobBatch { tasks } => {
                     // job controller recreates the pod with the unfinished
                     // remainder of the batch (current task included)
@@ -740,7 +740,7 @@ impl StrategyState {
         // the container-start latency was burned for nothing; a batch pod
         // charges its owning tenant, a shared pool worker charges no lane
         // (it serves every tenant)
-        match &k.pods[pod.0 as usize].payload {
+        match &k.pods.payload[pod.0 as usize] {
             Payload::JobBatch { tasks } => {
                 let tenant = k.tenant_of(tasks[0]).idx();
                 k.chaos_stats.add_waste(tenant, k.cfg.pod_start_ms);
@@ -749,10 +749,10 @@ impl StrategyState {
                 k.chaos_stats.add_waste_shared(k.cfg.pod_start_ms);
             }
         }
-        if let Some(nid) = k.pods[pod.0 as usize].node {
+        if let Some(nid) = k.pods.node[pod.0 as usize] {
             k.note_node_fault(nid.0);
         }
-        let retry = match &mut k.pods[pod.0 as usize].payload {
+        let retry = match &mut k.pods.payload[pod.0 as usize] {
             Payload::JobBatch { tasks } => Some(std::mem::take(tasks)),
             Payload::Worker { .. } => None,
         };

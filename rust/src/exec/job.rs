@@ -24,7 +24,7 @@ use crate::exec::pools::PoolPath;
 use crate::exec::strategy::{ExecStrategy, StrategyState};
 use crate::k8s::pod::Payload;
 use crate::sim::SimTime;
-use crate::workflow::task::TaskId;
+use crate::workflow::task::{TaskId, TypeId};
 use std::collections::VecDeque;
 
 /// Job-submission machinery: clustering buffers and the pending-pod
@@ -88,9 +88,7 @@ impl JobPath {
     /// A clustering partial-batch timeout fired: flush the partial batch
     /// if the deadline is still current.
     pub fn flush_timer(&mut self, k: &mut Kernel, type_idx: u16, deadline: SimTime) {
-        let batch = self
-            .batcher
-            .timer_fired(&k.engine.dag().types[type_idx as usize].name, deadline);
+        let batch = self.batcher.timer_fired(TypeId(type_idx), deadline);
         if let Some(batch) = batch {
             self.create_job(k, batch);
         }

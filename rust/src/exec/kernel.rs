@@ -24,7 +24,7 @@ use crate::exec::hooks::{ChaosRuntime, FleetState};
 use crate::k8s::api_server::ApiServer;
 use crate::k8s::isolation::{IsolationState, SHARED_TENANT};
 use crate::k8s::node::{Node, NodeId};
-use crate::k8s::pod::{Payload, Pod, PodId, PodPhase};
+use crate::k8s::pod::{Payload, Pod, PodId, PodPhase, PodTable};
 use crate::k8s::resources::Resources;
 use crate::k8s::scheduler::{SchedulePass, Scheduler};
 use crate::metrics::{CounterId, GaugeId, Registry};
@@ -163,7 +163,11 @@ impl Counters {
 pub struct Kernel {
     pub cfg: SimConfig,
     pub q: EventQueue<Ev>,
-    pub pods: Vec<Pod>,
+    /// Pod lifecycle state, SoA: one dense column per field, indexed by
+    /// `PodId` (see [`PodTable`]). The event loop touches one or two
+    /// columns of many pods per event; `Pod` rows only exist transiently
+    /// at creation.
+    pub pods: PodTable,
     pub nodes: Vec<Node>,
     pub sched: Scheduler,
     pub api: ApiServer,
@@ -313,33 +317,33 @@ impl Kernel {
     /// post-release scheduler pass ([`crate::exec::strategy::StrategyState::terminate_pod`]).
     pub fn release_pod(&mut self, pid: PodId, phase: PodPhase) {
         let now = self.now();
-        if self.pods[pid.0 as usize].phase == PodPhase::Pending {
+        let i = pid.0 as usize;
+        if self.pods.phase[i] == PodPhase::Pending {
             self.pending_count -= 1;
         }
         // data plane: the pod's in-flight transfer is torn down and its
         // ephemeral cache entries die with it (crash-loses-cache)
         if self.data.is_some() {
-            let node = self.pods[pid.0 as usize].node.map(|n| n.0);
+            let node = self.pods.node[i].map(|n| n.0);
             let mut buf = std::mem::take(&mut self.flow_buf);
             self.data
                 .as_mut()
                 .expect("data plane")
                 .cancel_pod(now, pid, node, &mut buf);
             self.schedule_flow_events(buf);
-            self.pod_io[pid.0 as usize] = IoPhase::Idle;
+            self.pod_io[i] = IoPhase::Idle;
         }
         // namespace quota frees with the pod (idempotent: only ever
         // charged once, at bind)
         if let Some(iso) = &mut self.isolation {
             iso.release(pid);
         }
-        let pod = &mut self.pods[pid.0 as usize];
-        debug_assert!(!pod.is_terminal());
-        let had_node = pod.node;
-        pod.phase = phase;
-        pod.finished_at = Some(now);
+        debug_assert!(!self.pods.is_terminal(i));
+        let had_node = self.pods.node[i];
+        self.pods.phase[i] = phase;
+        self.pods.finished_at[i] = Some(now);
         if let Some(nid) = had_node {
-            let req = pod.requests;
+            let req = self.pods.requests[i];
             self.nodes[nid.0].release(req);
             self.record_cpu();
         }
@@ -393,8 +397,8 @@ impl Kernel {
         if self.obs.is_none() {
             return;
         }
-        let p = &self.pods[pod.0 as usize];
-        let (a, b, c) = if p.pool_id().is_some() {
+        let i = pod.0 as usize;
+        let (a, b, c) = if self.pods.pool_id(i).is_some() {
             let d = self
                 .obs
                 .as_ref()
@@ -403,9 +407,9 @@ impl Kernel {
             (d, d, d)
         } else {
             (
-                p.created_at,
-                p.scheduled_at.unwrap_or(p.created_at),
-                p.running_at.unwrap_or(now),
+                self.pods.created_at[i],
+                self.pods.scheduled_at[i].unwrap_or(self.pods.created_at[i]),
+                self.pods.running_at[i].unwrap_or(now),
             )
         };
         if let Some(o) = self.obs.as_mut() {
@@ -432,14 +436,13 @@ impl Kernel {
         let mut victims = std::mem::take(&mut self.members_buf);
         victims.clear();
         victims.extend(
-            self.pods
-                .iter()
-                .filter(|p| {
-                    p.node == Some(NodeId(node))
-                        && !p.is_terminal()
-                        && (!workers_only || p.pool_id().is_some())
+            (0..self.pods.len())
+                .filter(|&i| {
+                    self.pods.node[i] == Some(NodeId(node))
+                        && !self.pods.is_terminal(i)
+                        && (!workers_only || self.pods.pool_id(i).is_some())
                 })
-                .map(|p| p.id),
+                .map(|i| PodId(i as u64)),
         );
         victims
     }
@@ -454,7 +457,7 @@ impl Kernel {
     /// die with their node — but any completion that slips through must
     /// not be credited against the new hardware.
     pub fn stale_node_event(&mut self, pod: PodId) -> bool {
-        let Some(nid) = self.pods[pod.0 as usize].node else {
+        let Some(nid) = self.pods.node[pod.0 as usize] else {
             return false;
         };
         if self.pod_bound_inc[pod.0 as usize] != self.node_incarnation[nid.0] {
@@ -515,7 +518,7 @@ impl Kernel {
         let now = self.now();
         let nominal = self.task_work_left[task.0 as usize];
         let ttype = self.engine.dag().tasks[task.0 as usize].ttype;
-        let slow = match self.pods[pod.0 as usize].node {
+        let slow = match self.pods.node[pod.0 as usize] {
             Some(nid) => self.node_slow[nid.0],
             None => 1.0,
         };
@@ -534,14 +537,14 @@ impl Kernel {
         }
         self.task_running[task.0 as usize] += 1;
         self.record_running(ttype, 1);
-        self.pods[pod.0 as usize].executed += 1;
+        self.pods.executed[pod.0 as usize] += 1;
         self.current_task[pod.0 as usize] = Some(task);
         self.pod_io[pod.0 as usize] = IoPhase::Compute;
         self.pod_task_started_at[pod.0 as usize] = now;
         // isolation audit: a task starting on capacity owned by another
         // tenant is a pool-isolation violation (e.g. a mixed clustered
         // batch riding a foreign namespace's pod)
-        if let (Some(iso), Some(nid)) = (&mut self.isolation, self.pods[pod.0 as usize].node) {
+        if let (Some(iso), Some(nid)) = (&mut self.isolation, self.pods.node[pod.0 as usize]) {
             let tt = self.task_tenant.get(task.0 as usize).copied().unwrap_or(0);
             iso.note_task_start(tt, nid);
         }
@@ -564,7 +567,7 @@ impl Kernel {
             if ch.policy.speculative
                 && ch.straggler.is_some()
                 && !self.spec_launched[task.0 as usize]
-                && self.pods[pod.0 as usize].pool_id().is_some()
+                && self.pods.pool_id(pod.0 as usize).is_some()
             {
                 let watch = SimTime::from_millis(
                     self.cfg.exec_overhead_ms

@@ -82,7 +82,7 @@ use crate::fleet::{FleetPlan, InstanceOutcome};
 use crate::k8s::api_server::ApiServer;
 use crate::k8s::isolation::{IsolationConfig, IsolationPolicy, IsolationState};
 use crate::k8s::node::paper_cluster;
-use crate::k8s::pod::PodPhase;
+use crate::k8s::pod::{PodPhase, PodTable};
 use crate::k8s::scheduler::{SchedulePass, Scheduler};
 use crate::metrics::{GaugeId, Registry};
 use crate::obs::monitor::MonitorState;
@@ -114,13 +114,13 @@ impl World {
                 self.k.q.schedule_at(done, Ev::PodCreated { pod });
             }
             Ev::PodCreated { pod } => {
-                if self.k.pods[pod.0 as usize].phase == PodPhase::Pending {
+                if self.k.pods.phase[pod.0 as usize] == PodPhase::Pending {
                     self.k.sched.enqueue(pod);
                     self.strat.on_capacity_changed(&mut self.k);
                 }
             }
             Ev::BackoffExpire { pod } => {
-                if self.k.pods[pod.0 as usize].phase == PodPhase::Pending
+                if self.k.pods.phase[pod.0 as usize] == PodPhase::Pending
                     && self.k.sched.is_sleeping(pod)
                 {
                     self.k.sched.enqueue(pod);
@@ -270,6 +270,8 @@ impl World {
 fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
     let (engine, initial_ready) = Engine::new(dag);
     let n_types = engine.dag().types.len();
+    // type names cloned once here; trace records carry only the TypeId
+    let type_names: Vec<String> = engine.dag().types.iter().map(|t| t.name.clone()).collect();
 
     // pre-resolve the hot gauges and counters (see §Perf)
     let mut metrics = Registry::new();
@@ -346,7 +348,7 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
         engine,
         metrics,
         c,
-        trace: Trace::new(),
+        trace: Trace::with_type_names(type_names),
         obs: cfg.obs.then(|| FlightRecorder::new(n_tasks)),
         monitor: None,
         running_tasks: 0,
@@ -364,7 +366,7 @@ fn build(dag: Dag, model: &ExecModel, cfg: SimConfig) -> (World, Vec<TaskId>) {
         g_pending,
         g_by_type,
         q: EventQueue::new(),
-        pods: Vec::new(),
+        pods: PodTable::new(),
         batch_queue: Vec::new(),
         current_task: Vec::new(),
         pod_bound_inc: Vec::new(),
@@ -472,18 +474,15 @@ fn summarize(
                 None => (None, Vec::new()),
             };
         let broker = &strat.state_ref().pools.broker;
-        let pods = k
-            .pods
-            .iter()
-            .enumerate()
-            .map(|(i, p)| PodRow {
+        let pods = (0..k.pods.len())
+            .map(|i| PodRow {
                 pod: i as u64,
-                node: p.node.map(|n| n.0 as u32),
-                pool: p.pool_id().map(|pid| broker.name(pid).to_string()),
-                created: p.created_at,
-                scheduled: p.scheduled_at,
-                running: p.running_at,
-                finished: p.finished_at,
+                node: k.pods.node[i].map(|n| n.0 as u32),
+                pool: k.pods.pool_id(i).map(|pid| broker.name(pid).to_string()),
+                created: k.pods.created_at[i],
+                scheduled: k.pods.scheduled_at[i],
+                running: k.pods.running_at[i],
+                finished: k.pods.finished_at[i],
             })
             .collect();
         let phase_rows = crate::obs::phase_rows(rec.spans());
@@ -523,6 +522,7 @@ fn summarize(
         sched_backoffs: k.sched.backoffs_total,
         sched_binds: k.sched.binds_total,
         sim_events,
+        event_arena: k.q.arena_stats(),
         avg_running_tasks: avg_running,
         avg_cpu_utilization: avg_cpu,
         isolation: k

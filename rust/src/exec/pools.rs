@@ -158,7 +158,7 @@ impl PoolPath {
     /// fetch, bit-identical to the pre-isolation path.
     fn fetch_for_worker(&mut self, k: &Kernel, pod: PodId, pool: PoolId) -> Option<TaskId> {
         let constrained = k.isolation.as_ref().filter(|i| i.constrains_fetch());
-        match (constrained, k.pods[pod.0 as usize].node) {
+        match (constrained, k.pods.node[pod.0 as usize]) {
             (Some(iso), Some(node)) => match iso.node_owner(node) {
                 Some(t) => self.broker.fetch_from(pool, TenantId(t)),
                 None => self.broker.fetch(pool),
@@ -175,7 +175,7 @@ impl PoolPath {
         }
         while let Some(&pid) = self.idle_workers[pool.idx()].front() {
             // skip workers that were deleted while idle
-            if k.pods[pid.0 as usize].phase != PodPhase::Running {
+            if k.pods.phase[pid.0 as usize] != PodPhase::Running {
                 self.idle_workers[pool.idx()].pop_front();
                 continue;
             }
@@ -200,7 +200,7 @@ impl PoolPath {
         // same lazy cleanup as the unconstrained path: deleted workers at
         // the front are dropped for good
         while let Some(&pid) = self.idle_workers[pool.idx()].front() {
-            if k.pods[pid.0 as usize].phase != PodPhase::Running {
+            if k.pods.phase[pid.0 as usize] != PodPhase::Running {
                 self.idle_workers[pool.idx()].pop_front();
             } else {
                 break;
@@ -208,7 +208,7 @@ impl PoolPath {
         }
         for i in 0..self.idle_workers[pool.idx()].len() {
             let pid = self.idle_workers[pool.idx()][i];
-            if k.pods[pid.0 as usize].phase != PodPhase::Running {
+            if k.pods.phase[pid.0 as usize] != PodPhase::Running {
                 continue;
             }
             if let Some(task) = self.fetch_for_worker(k, pid, pool) {
@@ -308,7 +308,7 @@ impl StrategyState {
     pub fn advance_worker(&mut self, k: &mut Kernel, pod: PodId, pool: PoolId) {
         self.pools.broker.ack(pool);
         self.pools.record_queue_depth(k, pool);
-        if k.pods[pod.0 as usize].phase == PodPhase::Draining {
+        if k.pods.phase[pod.0 as usize] == PodPhase::Draining {
             self.terminate_pod(k, pod, PodPhase::Succeeded);
         } else {
             self.pools.fetch_or_idle(k, pod, pool);
@@ -420,7 +420,7 @@ impl StrategyState {
             if remaining == 0 {
                 return;
             }
-            if k.pods[pid.0 as usize].phase == PodPhase::Pending {
+            if k.pods.phase[pid.0 as usize] == PodPhase::Pending {
                 self.terminate_pod(k, pid, PodPhase::Deleted);
                 remaining -= 1;
             }
@@ -430,7 +430,7 @@ impl StrategyState {
             if remaining == 0 {
                 return;
             }
-            if k.pods[pid.0 as usize].phase == PodPhase::Starting {
+            if k.pods.phase[pid.0 as usize] == PodPhase::Starting {
                 self.terminate_pod(k, pid, PodPhase::Deleted);
                 remaining -= 1;
             }
@@ -440,7 +440,7 @@ impl StrategyState {
             if remaining == 0 {
                 return;
             }
-            if k.pods[pid.0 as usize].phase == PodPhase::Running {
+            if k.pods.phase[pid.0 as usize] == PodPhase::Running {
                 self.pools.idle_workers[pool.idx()].retain(|&p| p != pid);
                 self.terminate_pod(k, pid, PodPhase::Deleted);
                 remaining -= 1;
@@ -451,9 +451,9 @@ impl StrategyState {
             if remaining == 0 {
                 return;
             }
-            let pod = &mut k.pods[pid.0 as usize];
-            if pod.phase == PodPhase::Running {
-                pod.phase = PodPhase::Draining;
+            let phase = &mut k.pods.phase[pid.0 as usize];
+            if *phase == PodPhase::Running {
+                *phase = PodPhase::Draining;
                 remaining -= 1;
             }
         }

@@ -147,7 +147,7 @@ impl StrategyState {
         let now = k.now();
         for &t in ready {
             let ttype = k.engine.dag().tasks[t.0 as usize].ttype;
-            k.trace.ready(t, k.engine.dag().type_name(t), now);
+            k.trace.ready(t, ttype, now);
             if let Some(o) = k.obs.as_mut() {
                 o.ready(t, now);
             }
@@ -160,6 +160,7 @@ impl StrategyState {
                     // job path (with or without clustering)
                     let action = self.jobs.batcher.push(
                         now,
+                        ttype,
                         &k.engine.dag().types[ttype.0 as usize].name,
                         t,
                     );
@@ -212,7 +213,7 @@ impl StrategyState {
         for &(pid, node, bind_done) in &pass.bound {
             k.pending_count -= 1;
             k.pod_bound_inc[pid.0 as usize] = k.node_incarnation[node.0];
-            if matches!(k.pods[pid.0 as usize].payload, Payload::JobBatch { .. }) {
+            if matches!(k.pods.payload[pid.0 as usize], Payload::JobBatch { .. }) {
                 self.jobs.job_unblocked(k);
             }
             k.q.schedule_at(
@@ -258,7 +259,7 @@ impl StrategyState {
     /// pathology).
     pub fn terminate_pod(&mut self, k: &mut Kernel, pid: PodId, phase: PodPhase) {
         k.release_pod(pid, phase);
-        if let Some(pool) = k.pods[pid.0 as usize].pool_id() {
+        if let Some(pool) = k.pods.pool_id(pid.0 as usize) {
             self.pools.forget_worker(pool, pid);
         }
         k.sched.forget(pid);
@@ -275,7 +276,7 @@ impl StrategyState {
     /// a batch starts its first task, a worker fetches or goes idle.
     pub fn pod_started(&mut self, k: &mut Kernel, pod: PodId) {
         let now = k.now();
-        if k.pods[pod.0 as usize].is_terminal() {
+        if k.pods.is_terminal(pod.0 as usize) {
             return; // deleted while starting
         }
         if k.stale_node_event(pod) {
@@ -292,10 +293,10 @@ impl StrategyState {
             return;
         }
         let work = {
-            let p = &mut k.pods[pod.0 as usize];
-            p.phase = PodPhase::Running;
-            p.running_at = Some(now);
-            match &mut p.payload {
+            let i = pod.0 as usize;
+            k.pods.phase[i] = PodPhase::Running;
+            k.pods.running_at[i] = Some(now);
+            match &mut k.pods.payload[i] {
                 // move the batch into the execution queue — the
                 // remainder lives in `batch_queue` from here on
                 Payload::JobBatch { tasks } => PodWork::Batch(std::mem::take(tasks)),
@@ -318,10 +319,10 @@ impl StrategyState {
     /// A worker's queue fetch completed: drop stale deliveries, requeue if
     /// the worker died in the meantime, otherwise begin the task.
     pub fn worker_fetched(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
-        if k.pods[pod.0 as usize].is_terminal() {
+        if k.pods.is_terminal(pod.0 as usize) {
             // worker deleted between fetch and start: requeue on the
             // pod's own pool (its payload outlives deletion)
-            if let Some(pool) = k.pods[pod.0 as usize].pool_id() {
+            if let Some(pool) = k.pods.pool_id(pod.0 as usize) {
                 self.pools.broker.nack_requeue(pool, task, k.tenant_of(task));
                 self.pools.wake_idle_worker(k, pool);
             }
@@ -331,7 +332,7 @@ impl StrategyState {
         // other copy won, or it was requeued after a fault and then
         // finished) — drop the stale delivery
         if k.engine.state(task) == TaskState::Done {
-            if let Some(pool) = k.pods[pod.0 as usize].pool_id() {
+            if let Some(pool) = k.pods.pool_id(pod.0 as usize) {
                 self.advance_worker(k, pod, pool);
             }
             return;
@@ -343,7 +344,7 @@ impl StrategyState {
     /// readiness (or hand off to the stage-out cycle), and advance the
     /// pod to its next unit of work.
     pub fn task_done(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
-        if k.pods[pod.0 as usize].is_terminal() || k.current_task[pod.0 as usize] != Some(task) {
+        if k.pods.is_terminal(pod.0 as usize) || k.current_task[pod.0 as usize] != Some(task) {
             return; // pod was killed; the task was requeued/recreated
         }
         if k.stale_node_event(pod) {
@@ -378,7 +379,7 @@ impl StrategyState {
                     exec_ms as f64 / 1000.0,
                 );
             }
-            if let Some(pool) = k.pods[pod.0 as usize].pool_id() {
+            if let Some(pool) = k.pods.pool_id(pod.0 as usize) {
                 self.advance_worker(k, pod, pool);
             }
             return;
@@ -423,7 +424,7 @@ impl StrategyState {
             self.instance_task_done(k, task);
         }
         // advance the pod
-        match k.pods[pod.0 as usize].pool_id() {
+        match k.pods.pool_id(pod.0 as usize) {
             None => {
                 k.batch_queue[pod.0 as usize].pop_front();
                 if let Some(&next) = k.batch_queue[pod.0 as usize].front() {
@@ -460,7 +461,7 @@ impl StrategyState {
     /// Straggler watch fired: if the task is still running in this pod,
     /// launch its speculative copy (at most one per task).
     pub fn speculate(&mut self, k: &mut Kernel, pod: PodId, task: TaskId) {
-        if k.pods[pod.0 as usize].is_terminal()
+        if k.pods.is_terminal(pod.0 as usize)
             || k.current_task[pod.0 as usize] != Some(task)
             || k.engine.state(task) == TaskState::Done
             || k.spec_launched[task.0 as usize]

@@ -186,6 +186,7 @@ pub fn run(model: ExecModel, mut sim_cfg: SimConfig, cfg: &FleetConfig) -> Fleet
                 sched_backoffs: 0,
                 sched_binds: 0,
                 sim_events: 0,
+                event_arena: crate::sim::ArenaStats::default(),
                 avg_running_tasks: 0.0,
                 avg_cpu_utilization: 0.0,
                 chaos: crate::chaos::ChaosReport::default(),

@@ -346,6 +346,7 @@ mod tests {
             sched_backoffs: 0,
             sched_binds: 0,
             sim_events: 0,
+            event_arena: crate::sim::ArenaStats::default(),
             avg_running_tasks: 0.0,
             avg_cpu_utilization: 0.5,
             chaos: crate::chaos::ChaosReport::default(),

@@ -37,7 +37,7 @@
 //! every run is bit-identical to an isolation-unaware build.
 
 use super::node::NodeId;
-use super::pod::{Payload, Pod, PodId};
+use super::pod::{Payload, PodId};
 use super::resources::{LimitRange, Resources};
 use crate::util::json::Json;
 
@@ -367,10 +367,17 @@ impl IsolationState {
 
     /// The tenant whose *work* a pod currently embodies: the namespace
     /// for tenant-owned pods, the running task's tenant for pool
-    /// workers, `None` for idle infrastructure.
-    pub fn effective_tenant(&self, pod: &Pod, current_task_tenant: Option<u16>) -> Option<u16> {
-        match &pod.payload {
-            Payload::JobBatch { .. } => Some(self.tenant_of_pod(pod.id)),
+    /// workers, `None` for idle infrastructure. Takes the pod's id and
+    /// payload column rather than a whole row so the SoA
+    /// [`super::pod::PodTable`] callers avoid materializing a `Pod`.
+    pub fn effective_tenant(
+        &self,
+        pod: PodId,
+        payload: &Payload,
+        current_task_tenant: Option<u16>,
+    ) -> Option<u16> {
+        match payload {
+            Payload::JobBatch { .. } => Some(self.tenant_of_pod(pod)),
             Payload::Worker { .. } => current_task_tenant,
         }
     }

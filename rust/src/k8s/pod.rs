@@ -92,6 +92,79 @@ impl Pod {
     }
 }
 
+/// SoA pod lifecycle table: one parallel `Vec` per [`Pod`] field, keyed
+/// by the dense `PodId` index (matching the `PoolId(u16)` interning
+/// pattern — EXPERIMENTS.md §Perf). The exec kernel's hot paths touch
+/// one or two fields of many pods per event (phase checks in the
+/// scheduler pass, node lookups on task start), so splitting the struct
+/// keeps those scans on dense homogeneous arrays instead of striding
+/// over whole `Pod` rows.
+///
+/// [`Pod`] itself survives as the *row/builder* value type: callers and
+/// tests still construct a `Pod` and [`PodTable::push`] decomposes it.
+/// `PodId` is implicit — row `i` is pod `i`.
+#[derive(Debug, Default)]
+pub struct PodTable {
+    pub payload: Vec<Payload>,
+    pub requests: Vec<Resources>,
+    pub phase: Vec<PodPhase>,
+    pub node: Vec<Option<NodeId>>,
+    /// Scheduling back-off bookkeeping (attempt count).
+    pub sched_attempts: Vec<u32>,
+    /// When each pod may next be retried by the scheduler.
+    pub backoff_until: Vec<SimTime>,
+    // -- trace timestamps ------------------------------------------------
+    pub created_at: Vec<SimTime>,
+    pub scheduled_at: Vec<Option<SimTime>>,
+    pub running_at: Vec<Option<SimTime>>,
+    pub finished_at: Vec<Option<SimTime>>,
+    /// Tasks executed in each pod (for trace/pod-churn accounting).
+    pub executed: Vec<u32>,
+}
+
+impl PodTable {
+    pub fn new() -> Self {
+        PodTable::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.phase.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phase.is_empty()
+    }
+
+    /// Append a pod row. The row's `id` must equal the next index — pods
+    /// are append-only and dense, exactly like the old `Vec<Pod>`.
+    pub fn push(&mut self, pod: Pod) {
+        debug_assert_eq!(pod.id.0 as usize, self.len(), "pod ids must be dense");
+        self.payload.push(pod.payload);
+        self.requests.push(pod.requests);
+        self.phase.push(pod.phase);
+        self.node.push(pod.node);
+        self.sched_attempts.push(pod.sched_attempts);
+        self.backoff_until.push(pod.backoff_until);
+        self.created_at.push(pod.created_at);
+        self.scheduled_at.push(pod.scheduled_at);
+        self.running_at.push(pod.running_at);
+        self.finished_at.push(pod.finished_at);
+        self.executed.push(pod.executed);
+    }
+
+    pub fn is_terminal(&self, i: usize) -> bool {
+        matches!(self.phase[i], PodPhase::Succeeded | PodPhase::Deleted)
+    }
+
+    /// The pool a worker pod belongs to (`None` for job pods).
+    pub fn pool_id(&self, i: usize) -> Option<PoolId> {
+        match &self.payload[i] {
+            Payload::Worker { pool } => Some(*pool),
+            Payload::JobBatch { .. } => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +208,46 @@ mod tests {
         assert!(p.is_terminal());
         p.phase = PodPhase::Draining;
         assert!(!p.is_terminal());
+    }
+
+    #[test]
+    fn table_push_decomposes_rows_and_mirrors_row_queries() {
+        let mut t = PodTable::new();
+        assert!(t.is_empty());
+        t.push(Pod::new(
+            PodId(0),
+            Payload::JobBatch { tasks: vec![TaskId(4)] },
+            Resources::new(500, 512),
+            SimTime(10),
+        ));
+        t.push(Pod::new(
+            PodId(1),
+            Payload::Worker { pool: PoolId(3) },
+            Resources::new(1000, 1024),
+            SimTime(20),
+        ));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.phase[0], PodPhase::Pending);
+        assert_eq!(t.created_at[1], SimTime(20));
+        assert_eq!(t.pool_id(0), None);
+        assert_eq!(t.pool_id(1), Some(PoolId(3)));
+        assert!(!t.is_terminal(0));
+        t.phase[0] = PodPhase::Succeeded;
+        assert!(t.is_terminal(0));
+        t.phase[1] = PodPhase::Draining;
+        assert!(!t.is_terminal(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "pod ids must be dense")]
+    #[cfg(debug_assertions)]
+    fn table_rejects_sparse_ids() {
+        let mut t = PodTable::new();
+        t.push(Pod::new(
+            PodId(7),
+            Payload::JobBatch { tasks: vec![] },
+            Resources::ZERO,
+            SimTime::ZERO,
+        ));
     }
 }

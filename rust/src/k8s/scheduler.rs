@@ -10,7 +10,7 @@
 
 use super::isolation::IsolationState;
 use super::node::{Node, NodeId};
-use super::pod::{Pod, PodId, PodPhase};
+use super::pod::{Payload, PodId, PodPhase, PodTable};
 use crate::sim::SimTime;
 use std::collections::VecDeque;
 
@@ -43,8 +43,11 @@ impl Default for SchedulerConfig {
 /// Data-locality oracle for placement scoring: how many of the pod's
 /// input bytes are already cached on a node. Implemented by
 /// [`crate::data::DataPlane`]; the scheduler itself stays storage-agnostic.
+/// Takes the pod's [`Payload`] rather than a whole pod row — the oracle
+/// only ever inspects the task batch, and the SoA [`PodTable`] hands out
+/// one column without materializing a `Pod`.
 pub trait DataLocality {
-    fn cached_input_bytes(&self, pod: &Pod, node: &Node) -> u64;
+    fn cached_input_bytes(&self, payload: &Payload, node: &Node) -> u64;
 }
 
 /// Why a pod failed a scheduling attempt (flight-recorder annotation on
@@ -165,7 +168,7 @@ impl Scheduler {
     /// allocated immediately (bind) and a bind-completion timestamp spaced
     /// by `bind_ms` (throughput limit). Unschedulable pods go to sleep with
     /// exponential back-off.
-    pub fn pass(&mut self, now: SimTime, pods: &mut [Pod], nodes: &mut [Node]) -> SchedulePass {
+    pub fn pass(&mut self, now: SimTime, pods: &mut PodTable, nodes: &mut [Node]) -> SchedulePass {
         let mut out = SchedulePass::default();
         self.pass_into(now, pods, nodes, &mut out, None, None);
         out
@@ -189,7 +192,7 @@ impl Scheduler {
     pub fn pass_into(
         &mut self,
         now: SimTime,
-        pods: &mut [Pod],
+        pods: &mut PodTable,
         nodes: &mut [Node],
         out: &mut SchedulePass,
         locality: Option<&dyn DataLocality>,
@@ -212,16 +215,17 @@ impl Scheduler {
             }
             self.in_active[pid.0 as usize] = false;
             self.active_count -= 1;
-            let pod = &mut pods[pid.0 as usize];
-            if pod.phase != PodPhase::Pending {
+            let i = pid.0 as usize;
+            if pods.phase[i] != PodPhase::Pending {
                 continue; // deleted while queued
             }
+            let req = pods.requests[i];
             // Namespace quota admission first: a throttled pod never
             // reaches the node search.
             let tenant = isolation.as_deref().map(|iso| iso.tenant_of_pod(pid));
             let admitted = match (isolation.as_deref_mut(), tenant) {
                 (Some(iso), Some(t)) => {
-                    if iso.admits(t, pod.requests) {
+                    if iso.admits(t, req) {
                         true
                     } else {
                         iso.stats.add_throttle(t);
@@ -243,9 +247,9 @@ impl Scheduler {
             } else {
                 let iso = isolation.as_deref();
                 let ok = |n: &Node| {
-                    n.fits(&pod.requests)
+                    n.fits(&req)
                         && match (iso, tenant) {
-                            (Some(i), Some(t)) => i.allows(t, n.id),
+                            (Some(is), Some(t)) => is.allows(t, n.id),
                             _ => true,
                         }
                 };
@@ -255,23 +259,26 @@ impl Scheduler {
                         .filter(|n| ok(n))
                         .min_by_key(|n| n.free().cpu_m)
                         .map(|n| n.id),
-                    Some(h) => nodes
-                        .iter()
-                        .filter(|n| ok(n))
-                        .min_by_key(|n| {
-                            (std::cmp::Reverse(h.cached_input_bytes(pod, n)), n.free().cpu_m)
-                        })
-                        .map(|n| n.id),
+                    Some(h) => {
+                        let payload = &pods.payload[i];
+                        nodes
+                            .iter()
+                            .filter(|n| ok(n))
+                            .min_by_key(|n| {
+                                (std::cmp::Reverse(h.cached_input_bytes(payload, n)), n.free().cpu_m)
+                            })
+                            .map(|n| n.id)
+                    }
                 }
             };
             match fit {
                 Some(nid) => {
-                    nodes[nid.0].alloc(pod.requests);
-                    pod.phase = PodPhase::Starting;
-                    pod.node = Some(nid);
-                    pod.scheduled_at = Some(now);
+                    nodes[nid.0].alloc(req);
+                    pods.phase[i] = PodPhase::Starting;
+                    pods.node[i] = Some(nid);
+                    pods.scheduled_at[i] = Some(now);
                     if let (Some(iso), Some(t)) = (isolation.as_deref_mut(), tenant) {
-                        iso.charge(pid, t, pod.requests);
+                        iso.charge(pid, t, req);
                     }
                     // pipeline the binds to model scheduler throughput
                     self.busy_until =
@@ -280,7 +287,6 @@ impl Scheduler {
                     out.bound.push((pid, nid, self.busy_until));
                 }
                 None => {
-                    let req = pod.requests;
                     let reason = if !admitted {
                         BackoffReason::Quota
                     } else if any_cordoned
@@ -294,17 +300,17 @@ impl Scheduler {
                         BackoffReason::NoFit
                     };
                     let exp = (self.cfg.backoff_initial_ms as f64
-                        * self.cfg.backoff_factor.powi(pod.sched_attempts as i32))
+                        * self.cfg.backoff_factor.powi(pods.sched_attempts[i] as i32))
                         as u64;
                     let delay = exp.min(self.cfg.backoff_max_ms);
-                    pod.sched_attempts += 1;
-                    pod.backoff_until = now + SimTime::from_millis(delay);
+                    pods.sched_attempts[i] += 1;
+                    pods.backoff_until[i] = now + SimTime::from_millis(delay);
                     if !self.sleeping[pid.0 as usize] {
                         self.sleeping[pid.0 as usize] = true;
                         self.sleeping_count += 1;
                     }
                     self.backoffs_total += 1;
-                    out.backed_off.push((pid, pod.backoff_until));
+                    out.backed_off.push((pid, pods.backoff_until[i]));
                     out.backoff_reasons.push(reason);
                 }
             }
@@ -331,7 +337,7 @@ impl Scheduler {
 mod tests {
     use super::*;
     use crate::k8s::node::paper_cluster;
-    use crate::k8s::pod::Payload;
+    use crate::k8s::pod::{Payload, Pod};
     use crate::k8s::resources::Resources;
     use crate::workflow::task::TaskId;
 
@@ -344,10 +350,19 @@ mod tests {
         )
     }
 
+    /// Decompose row-built pods into the SoA table the scheduler scans.
+    fn table(rows: Vec<Pod>) -> PodTable {
+        let mut t = PodTable::new();
+        for p in rows {
+            t.push(p);
+        }
+        t
+    }
+
     fn run_pass(
         sched: &mut Scheduler,
         now: SimTime,
-        pods: &mut Vec<Pod>,
+        pods: &mut PodTable,
         nodes: &mut Vec<Node>,
     ) -> SchedulePass {
         sched.pass(now, pods, nodes)
@@ -357,7 +372,7 @@ mod tests {
     fn binds_until_cluster_full_then_backs_off() {
         let mut sched = Scheduler::new(SchedulerConfig::default());
         let mut nodes = paper_cluster(1); // 4000m
-        let mut pods: Vec<Pod> = (0..6).map(|i| mkpod(i, 1000)).collect();
+        let mut pods = table((0..6).map(|i| mkpod(i, 1000)).collect());
         for i in 0..6 {
             sched.enqueue(PodId(i));
         }
@@ -378,7 +393,7 @@ mod tests {
             ..Default::default()
         });
         let mut nodes = vec![Node::new(NodeId(0), Resources::new(100, 100))];
-        let mut pods = vec![mkpod(0, 1000)]; // never fits
+        let mut pods = table(vec![mkpod(0, 1000)]); // never fits
         let mut now = SimTime::ZERO;
         let mut delays = Vec::new();
         for _ in 0..6 {
@@ -398,7 +413,7 @@ mod tests {
             ..Default::default()
         });
         let mut nodes = paper_cluster(2);
-        let mut pods: Vec<Pod> = (0..3).map(|i| mkpod(i, 1000)).collect();
+        let mut pods = table((0..3).map(|i| mkpod(i, 1000)).collect());
         for i in 0..3 {
             sched.enqueue(PodId(i));
         }
@@ -412,7 +427,7 @@ mod tests {
         let mut sched = Scheduler::new(SchedulerConfig::default());
         let mut nodes = paper_cluster(2);
         nodes[0].alloc(Resources::new(3000, 1024)); // node 0 has 1000m free
-        let mut pods = vec![mkpod(0, 1000)];
+        let mut pods = table(vec![mkpod(0, 1000)]);
         sched.enqueue(PodId(0));
         let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
         assert_eq!(pass.bound[0].1, NodeId(0)); // tighter fit preferred
@@ -422,8 +437,8 @@ mod tests {
     fn deleted_pod_skipped() {
         let mut sched = Scheduler::new(SchedulerConfig::default());
         let mut nodes = paper_cluster(1);
-        let mut pods = vec![mkpod(0, 1000)];
-        pods[0].phase = PodPhase::Deleted;
+        let mut pods = table(vec![mkpod(0, 1000)]);
+        pods.phase[0] = PodPhase::Deleted;
         sched.enqueue(PodId(0));
         let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
         assert!(pass.bound.is_empty());
@@ -451,7 +466,7 @@ mod tests {
     fn pass_into_reuses_buffer() {
         let mut sched = Scheduler::new(SchedulerConfig::default());
         let mut nodes = paper_cluster(1);
-        let mut pods: Vec<Pod> = (0..2).map(|i| mkpod(i, 1000)).collect();
+        let mut pods = table((0..2).map(|i| mkpod(i, 1000)).collect());
         sched.enqueue(PodId(0));
         let mut out = SchedulePass::default();
         sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, None, None);
@@ -473,7 +488,7 @@ mod tests {
         // ids arrive out of order and far apart: `ensure` must grow the
         // dense flag vectors without disturbing earlier entries
         let n = 70;
-        let mut pods: Vec<Pod> = (0..n).map(|i| mkpod(i, 500)).collect();
+        let mut pods = table((0..n).map(|i| mkpod(i, 500)).collect());
         sched.enqueue(PodId(65)); // crosses the first 64-slot growth
         sched.enqueue(PodId(3));
         sched.enqueue(PodId(64));
@@ -489,7 +504,7 @@ mod tests {
     fn reenqueue_after_backoff_expire_clears_sleeping() {
         let mut sched = Scheduler::new(SchedulerConfig::default());
         let mut nodes = paper_cluster(1); // 4000m
-        let mut pods: Vec<Pod> = (0..5).map(|i| mkpod(i, 1000)).collect();
+        let mut pods = table((0..5).map(|i| mkpod(i, 1000)).collect());
         for i in 0..5 {
             sched.enqueue(PodId(i));
         }
@@ -500,8 +515,8 @@ mod tests {
         assert_eq!(sched.sleeping_len(), 1);
         // free a slot, then deliver the BackoffExpire: re-enqueue must move
         // the pod from sleeping back to active exactly once
-        pods[0].phase = PodPhase::Deleted;
-        nodes[0].release(pods[0].requests);
+        pods.phase[0] = PodPhase::Deleted;
+        nodes[0].release(pods.requests[0]);
         sched.forget(PodId(0));
         sched.enqueue(pid);
         assert!(!sched.is_sleeping(pid));
@@ -516,7 +531,7 @@ mod tests {
     fn repeated_backoff_keeps_single_sleeping_entry() {
         let mut sched = Scheduler::new(SchedulerConfig::default());
         let mut nodes = vec![Node::new(NodeId(0), Resources::new(100, 100))];
-        let mut pods = vec![mkpod(0, 1000)]; // never fits
+        let mut pods = table(vec![mkpod(0, 1000)]); // never fits
         let mut now = SimTime::ZERO;
         for _ in 0..4 {
             sched.enqueue(PodId(0));
@@ -525,7 +540,7 @@ mod tests {
             assert_eq!(sched.sleeping_len(), 1, "sleeping count must not drift");
             assert_eq!(sched.queue_len(), 0);
         }
-        assert_eq!(pods[0].sched_attempts, 4);
+        assert_eq!(pods.sched_attempts[0], 4);
     }
 
     #[test]
@@ -538,7 +553,7 @@ mod tests {
         assert_eq!(sched.sleeping_len(), 0);
         // a sleeping pod that gets deleted is fully forgotten
         let mut nodes = vec![Node::new(NodeId(0), Resources::new(100, 100))];
-        let mut pods = vec![mkpod(0, 1000)];
+        let mut pods = table(vec![mkpod(0, 1000)]);
         sched.enqueue(PodId(0));
         run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
         assert!(sched.is_sleeping(PodId(0)));
@@ -556,7 +571,7 @@ mod tests {
         let mut nodes = paper_cluster(2);
         nodes[0].cordoned = true;
         // one free slot worth of work on each node; node 0 is draining
-        let mut pods: Vec<Pod> = (0..2).map(|i| mkpod(i, 4000)).collect();
+        let mut pods = table((0..2).map(|i| mkpod(i, 4000)).collect());
         sched.enqueue(PodId(0));
         sched.enqueue(PodId(1));
         let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
@@ -580,7 +595,7 @@ mod tests {
         let mut sched = Scheduler::new(SchedulerConfig::default());
         let mut nodes = paper_cluster(1);
         nodes[0].cordoned = true;
-        let mut pods = vec![mkpod(0, 8000)]; // would not fit even uncordoned
+        let mut pods = table(vec![mkpod(0, 8000)]); // would not fit even uncordoned
         sched.enqueue(PodId(0));
         let pass = run_pass(&mut sched, SimTime::ZERO, &mut pods, &mut nodes);
         assert_eq!(pass.backed_off.len(), 1);
@@ -593,7 +608,7 @@ mod tests {
     }
 
     impl DataLocality for FakeLocality {
-        fn cached_input_bytes(&self, _pod: &Pod, node: &Node) -> u64 {
+        fn cached_input_bytes(&self, _payload: &Payload, node: &Node) -> u64 {
             self.bytes[node.id.0]
         }
     }
@@ -604,7 +619,7 @@ mod tests {
         let mut nodes = paper_cluster(3);
         // node 0 is the best-fit choice (tightest), node 2 caches the data
         nodes[0].alloc(Resources::new(3000, 1024));
-        let mut pods = vec![mkpod(0, 1000), mkpod(1, 1000)];
+        let mut pods = table(vec![mkpod(0, 1000), mkpod(1, 1000)]);
         let hint = FakeLocality {
             bytes: vec![0, 0, 4096],
         };
@@ -630,9 +645,9 @@ mod tests {
             let mut sched = Scheduler::new(SchedulerConfig::default());
             let mut nodes = paper_cluster(3);
             let n = 30 + rng.below(40);
-            let mut pods: Vec<Pod> = (0..n)
-                .map(|i| mkpod(i, 250 + rng.below(16) * 250))
-                .collect();
+            let mut pods = table(
+                (0..n).map(|i| mkpod(i, 250 + rng.below(16) * 250)).collect(),
+            );
             for i in 0..n {
                 sched.enqueue(PodId(i));
             }
@@ -656,9 +671,9 @@ mod tests {
         let mut iso = IsolationState::new(cfg, 1);
         let mut sched = Scheduler::new(SchedulerConfig::default());
         let mut nodes = paper_cluster(1); // 4000m — plenty; only quota binds
-        let mut pods: Vec<Pod> = (0..2).map(|i| mkpod(i, 1000)).collect();
+        let mut pods = table((0..2).map(|i| mkpod(i, 1000)).collect());
         for i in 0..2 {
-            iso.on_pod_created(PodId(i), 0, pods[i as usize].requests);
+            iso.on_pod_created(PodId(i), 0, pods.requests[i as usize]);
             sched.enqueue(PodId(i));
         }
         let mut out = SchedulePass::default();
@@ -689,8 +704,8 @@ mod tests {
         // make the foreign node 0 the best-fit winner: only the pool
         // constraint can steer the pod to node 1
         nodes[0].alloc(Resources::new(3000, 1024));
-        let mut pods = vec![mkpod(0, 1000)];
-        iso.on_pod_created(PodId(0), 1, pods[0].requests);
+        let mut pods = table(vec![mkpod(0, 1000)]);
+        iso.on_pod_created(PodId(0), 1, pods.requests[0]);
         sched.enqueue(PodId(0));
         let mut out = SchedulePass::default();
         sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, None, Some(&mut iso));
@@ -709,9 +724,9 @@ mod tests {
         let mut sched = Scheduler::new(SchedulerConfig::default());
         let mut nodes = paper_cluster(2);
         nodes[0].alloc(Resources::new(3000, 1024)); // node 0 is best-fit
-        let mut pods = vec![mkpod(0, 1000)];
+        let mut pods = table(vec![mkpod(0, 1000)]);
         // infra/worker pods carry the shared sentinel and ignore pools
-        iso.on_pod_created(PodId(0), SHARED_TENANT, pods[0].requests);
+        iso.on_pod_created(PodId(0), SHARED_TENANT, pods.requests[0]);
         sched.enqueue(PodId(0));
         let mut out = SchedulePass::default();
         sched.pass_into(SimTime::ZERO, &mut pods, &mut nodes, &mut out, None, Some(&mut iso));

@@ -58,7 +58,7 @@ fn base_fields(res: &SimResult, cfg: &SimConfig, kind: &str) -> Vec<(String, Jso
                 .map(|&t| {
                     let mut entry = vec![("task", Json::from(t as u64))];
                     if let Some(r) = res.trace.record(TaskId(t)) {
-                        entry.push(("type", Json::str(&r.type_name)));
+                        entry.push(("type", Json::str(res.trace.type_name(r))));
                         if let Some(f) = r.finished_at {
                             entry.push(("finished_ms", f.as_millis().into()));
                         }

@@ -57,7 +57,7 @@ pub fn to_chrome_trace(res: &SimResult) -> Json {
         let end = r.finished_at.unwrap_or(start);
         let lost = r.finished_at.is_none() || r.pod.is_none();
         events.push(Json::obj(vec![
-            ("name", Json::str(&r.type_name)),
+            ("name", Json::str(res.trace.type_name(r))),
             ("cat", Json::str(if lost { "lost" } else { "task" })),
             ("ph", Json::str("X")),
             ("pid", 1u64.into()),

@@ -83,6 +83,11 @@ pub fn fig4_clustering() -> (SimResult, MontageConfig, String) {
 
 /// Fig. 5 — clustering parameter sweep ("multiple combinations ... none
 /// entirely satisfactory").
+///
+/// Points run in parallel via [`crate::util::sweep::run`] — each point is
+/// an independent seeded simulation, and results come back in point order,
+/// so the output is byte-identical to the serial loop
+/// (`HF_BENCH_THREADS=1` forces the serial path).
 pub fn fig5_sweep() -> Vec<(String, SimResult)> {
     let wf = MontageConfig::paper_16k();
     let configs: Vec<(String, ClusteringConfig)> = vec![
@@ -94,17 +99,14 @@ pub fn fig5_sweep() -> Vec<(String, SimResult)> {
         ("uniform 20/1s".into(), ClusteringConfig::uniform(20, 1000)),
         ("uniform 20/10s".into(), ClusteringConfig::uniform(20, 10_000)),
     ];
-    configs
-        .into_iter()
-        .map(|(label, c)| {
-            let res = driver::run(
-                generate(&wf),
-                ExecModel::Clustered(c),
-                paper_sim_config(),
-            );
-            (label, res)
-        })
-        .collect()
+    crate::util::sweep::run(configs, |_, (label, c)| {
+        let res = driver::run(
+            generate(&wf),
+            ExecModel::Clustered(c),
+            paper_sim_config(),
+        );
+        (label, res)
+    })
 }
 
 /// Fig. 6 — the hybrid worker-pools model on the 16k workflow: utilization

@@ -9,14 +9,17 @@ use crate::metrics::Registry;
 use crate::sim::SimTime;
 use crate::util::json::Json;
 use crate::workflow::dag::Dag;
-use crate::workflow::task::TaskId;
+use crate::workflow::task::{TaskId, TypeId};
 use std::collections::BTreeMap;
 
 /// Per-task lifecycle record.
 #[derive(Debug, Clone)]
 pub struct TaskRecord {
     pub task: TaskId,
-    pub type_name: String,
+    /// Dense index into the owning [`Trace`]'s type-name table — resolve
+    /// with [`Trace::type_name`]. Storing the id instead of a `String`
+    /// keeps the per-ready hot path allocation-free (EXPERIMENTS.md §Perf).
+    pub ttype: TypeId,
     /// Dependencies satisfied; handed to the execution model.
     pub ready_at: SimTime,
     /// Execution began in a pod.
@@ -34,6 +37,9 @@ pub struct TaskRecord {
 pub struct Trace {
     pub records: Vec<TaskRecord>,
     index: Vec<u32>,
+    /// Task-type names, cloned once from the DAG at kernel build; records
+    /// carry only the dense [`TypeId`].
+    type_names: Vec<String>,
 }
 
 const NO_RECORD: u32 = u32::MAX;
@@ -43,7 +49,24 @@ impl Trace {
         Trace::default()
     }
 
-    pub fn ready(&mut self, task: TaskId, type_name: &str, now: SimTime) {
+    /// A trace whose records resolve type names against `names` (one entry
+    /// per DAG task type, in type-id order).
+    pub fn with_type_names(names: Vec<String>) -> Self {
+        Trace {
+            type_names: names,
+            ..Trace::default()
+        }
+    }
+
+    /// Resolve a record's task-type name.
+    pub fn type_name(&self, r: &TaskRecord) -> &str {
+        self.type_names
+            .get(r.ttype.0 as usize)
+            .map(String::as_str)
+            .unwrap_or("?")
+    }
+
+    pub fn ready(&mut self, task: TaskId, ttype: TypeId, now: SimTime) {
         let slot = task.0 as usize;
         if slot >= self.index.len() {
             self.index.resize(slot + 1, NO_RECORD);
@@ -51,7 +74,7 @@ impl Trace {
         self.index[slot] = self.records.len() as u32;
         self.records.push(TaskRecord {
             task,
-            type_name: type_name.to_string(),
+            ttype,
             ready_at: now,
             started_at: None,
             finished_at: None,
@@ -79,16 +102,37 @@ impl Trace {
     }
 
     /// Queueing delay (ready -> started) summary per type.
+    ///
+    /// Accumulates into a dense per-TypeId table first; each type's name
+    /// is cloned exactly once when the map is assembled, instead of once
+    /// per record.
     pub fn wait_times_by_type(&self) -> BTreeMap<String, crate::util::stats::Summary> {
-        let mut m: BTreeMap<String, crate::util::stats::Summary> = BTreeMap::new();
+        let n = self
+            .records
+            .iter()
+            .map(|r| r.ttype.0 as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(self.type_names.len());
+        let mut per_type: Vec<crate::util::stats::Summary> = vec![Default::default(); n];
         for r in &self.records {
             if let Some(s) = r.started_at {
-                m.entry(r.type_name.clone())
-                    .or_default()
-                    .add((s - r.ready_at).as_secs_f64());
+                per_type[r.ttype.0 as usize].add((s - r.ready_at).as_secs_f64());
             }
         }
-        m
+        per_type
+            .into_iter()
+            .enumerate()
+            .filter(|(_, s)| s.len() > 0)
+            .map(|(i, s)| {
+                let name = self
+                    .type_names
+                    .get(i)
+                    .cloned()
+                    .unwrap_or_else(|| format!("type{i}"));
+                (name, s)
+            })
+            .collect()
     }
 }
 
@@ -108,6 +152,10 @@ pub struct SimResult {
     /// Discrete events processed by the driver loop — the denominator for
     /// the events/sec throughput reported by `coordinator_hotpath`.
     pub sim_events: u64,
+    /// Calendar-event arena counters (fresh slab growth vs free-list
+    /// reuse); `coordinator_hotpath` reports the reuse ratio in
+    /// `BENCH_driver.json`. Not part of the snapshot surface.
+    pub event_arena: crate::sim::ArenaStats,
     /// Average number of concurrently running tasks over the makespan —
     /// the paper's cluster-utilization subplot metric.
     pub avg_running_tasks: f64,
@@ -219,24 +267,28 @@ mod tests {
 
     #[test]
     fn trace_lifecycle() {
-        let mut tr = Trace::new();
-        tr.ready(TaskId(0), "mProject", SimTime(100));
+        let mut tr = Trace::with_type_names(vec!["mProject".to_string()]);
+        tr.ready(TaskId(0), TypeId(0), SimTime(100));
         tr.started(TaskId(0), 7, SimTime(2_000));
         tr.finished(TaskId(0), SimTime(14_000));
         let r = tr.record(TaskId(0)).unwrap();
         assert_eq!(r.ready_at, SimTime(100));
         assert_eq!(r.pod, Some(7));
         assert_eq!(r.finished_at, Some(SimTime(14_000)));
+        assert_eq!(tr.type_name(r), "mProject");
     }
 
     #[test]
     fn wait_times_grouped_by_type() {
-        let mut tr = Trace::new();
-        tr.ready(TaskId(0), "A", SimTime(0));
+        let mut tr = Trace::with_type_names(vec!["A".to_string(), "B".to_string()]);
+        tr.ready(TaskId(0), TypeId(0), SimTime(0));
         tr.started(TaskId(0), 1, SimTime(1_000));
-        tr.ready(TaskId(1), "A", SimTime(0));
+        tr.ready(TaskId(1), TypeId(0), SimTime(0));
         tr.started(TaskId(1), 2, SimTime(3_000));
+        // type B never started: it must not appear in the map at all
+        tr.ready(TaskId(2), TypeId(1), SimTime(0));
         let w = tr.wait_times_by_type();
+        assert_eq!(w.len(), 1);
         assert_eq!(w["A"].len(), 2);
         assert!((w["A"].mean() - 2.0).abs() < 1e-9);
     }

@@ -12,21 +12,38 @@
 //! O(log n) per operation was the top simulator cost after the allocation
 //! fixes; EXPERIMENTS.md §Perf).
 //!
+//! Storage is a **slab arena**: every event lives in a slot of one grown
+//! `Vec`, and buckets are intrusive FIFO linked lists threaded through
+//! the slots (`head`/`tail` per bucket, `next` per slot). Popped slots go
+//! onto a free list and are recycled, so the steady-state loop allocates
+//! nothing per event — the old per-bucket `VecDeque`s paid a buffer
+//! allocation per overflow key and per warmup bucket. A rebase moves
+//! whole lists by retargeting two indices per timestamp, never touching
+//! the events themselves. [`EventQueue::arena_stats`] reports fresh
+//! slot allocations vs free-list reuses; `BENCH_driver.json` records the
+//! reuse ratio.
+//!
 //! Determinism contract (unchanged from the heap version, which used a
 //! monotone sequence number): events pop in (time, schedule order). Every
 //! bucket holds exactly one timestamp, past events clamp to `now`, and
-//! overflow sweeps preserve per-timestamp deque order — so plain FIFO
+//! overflow sweeps preserve per-timestamp list order — so plain FIFO
 //! insertion order within a bucket IS schedule order, and runs are
-//! bit-reproducible without storing a per-event counter.
+//! bit-reproducible without storing a per-event counter. Slot *indices*
+//! carry no ordering: FIFO order lives in the list links alone, so
+//! free-list recycling cannot reorder same-timestamp ties (pinned by the
+//! `free_list_reuse_*` tests below and `tests/sweep.rs`).
 
 use super::time::SimTime;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 
 /// log2 of the wheel size: 2^16 one-millisecond buckets ≈ 65 s horizon.
 const WHEEL_BITS: u32 = 16;
 const WHEEL: usize = 1 << WHEEL_BITS;
 const L0_WORDS: usize = WHEEL / 64;
 const L1_WORDS: usize = L0_WORDS / 64;
+
+/// Null link for the intrusive lists (slot indices are dense u32s).
+const NIL: u32 = u32::MAX;
 
 /// `word` with all bits below `bit` cleared (0 when `bit >= 64`).
 #[inline]
@@ -38,12 +55,46 @@ fn bits_from(word: u64, bit: u32) -> u64 {
     }
 }
 
-/// Priority queue of scheduled events (calendar queue).
+/// One arena slot: the event payload (`None` while on the free list) and
+/// the intrusive link to the next slot in the same bucket / free list.
+#[derive(Debug)]
+struct Slot<E> {
+    ev: Option<E>,
+    next: u32,
+}
+
+/// Fresh-allocation vs free-list-reuse counters of the event arena.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Slots created by growing the slab.
+    pub allocs: u64,
+    /// Slots recycled from the free list.
+    pub reuses: u64,
+}
+
+impl ArenaStats {
+    /// Fraction of event schedules served from the free list.
+    pub fn reuse_ratio(&self) -> f64 {
+        let total = self.allocs + self.reuses;
+        if total == 0 {
+            0.0
+        } else {
+            self.reuses as f64 / total as f64
+        }
+    }
+}
+
+/// Priority queue of scheduled events (calendar queue over a slab arena).
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    /// One-ms buckets covering `[base_ms, base_ms + WHEEL)`; each holds
-    /// its events in schedule (FIFO) order — one timestamp per bucket.
-    wheel: Vec<VecDeque<E>>,
+    /// The arena. Grows to the peak concurrent event count, then stops.
+    slots: Vec<Slot<E>>,
+    /// Head of the LIFO free list of recycled slots.
+    free: u32,
+    /// Per-bucket FIFO list heads/tails covering `[base_ms, base_ms +
+    /// WHEEL)`; each bucket holds exactly one timestamp.
+    head: Vec<u32>,
+    tail: Vec<u32>,
     /// Occupancy bitmaps: one bit per bucket / per l0 word / per l1 word.
     occ_l0: Vec<u64>,
     occ_l1: Vec<u64>,
@@ -52,11 +103,12 @@ pub struct EventQueue<E> {
     base_ms: u64,
     /// Lowest bucket index that may still be occupied.
     cursor: usize,
-    /// Events beyond the wheel horizon, keyed by absolute ms; per-key
-    /// deques preserve schedule order for the FIFO tie-break.
-    overflow: BTreeMap<u64, VecDeque<E>>,
+    /// Events beyond the wheel horizon: absolute ms -> (head, tail) of a
+    /// FIFO slot list, preserving schedule order for the tie-break.
+    overflow: BTreeMap<u64, (u32, u32)>,
     len: usize,
     now: SimTime,
+    stats: ArenaStats,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -67,10 +119,11 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        let mut wheel = Vec::with_capacity(WHEEL);
-        wheel.resize_with(WHEEL, VecDeque::new);
         EventQueue {
-            wheel,
+            slots: Vec::new(),
+            free: NIL,
+            head: vec![NIL; WHEEL],
+            tail: vec![NIL; WHEEL],
             occ_l0: vec![0; L0_WORDS],
             occ_l1: vec![0; L1_WORDS],
             occ_l2: 0,
@@ -79,12 +132,61 @@ impl<E> EventQueue<E> {
             overflow: BTreeMap::new(),
             len: 0,
             now: SimTime::ZERO,
+            stats: ArenaStats::default(),
         }
     }
 
     /// Current simulated time (time of the last popped event).
     pub fn now(&self) -> SimTime {
         self.now
+    }
+
+    /// Arena counters: fresh slab growth vs free-list reuse.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Take a slot for `event`: recycle from the free list, else grow.
+    #[inline]
+    fn alloc_slot(&mut self, event: E) -> u32 {
+        if self.free != NIL {
+            let i = self.free;
+            let slot = &mut self.slots[i as usize];
+            self.free = slot.next;
+            slot.ev = Some(event);
+            slot.next = NIL;
+            self.stats.reuses += 1;
+            i
+        } else {
+            let i = self.slots.len() as u32;
+            debug_assert!(i < NIL, "event arena exhausted u32 index space");
+            self.slots.push(Slot {
+                ev: Some(event),
+                next: NIL,
+            });
+            self.stats.allocs += 1;
+            i
+        }
+    }
+
+    /// Return a drained slot to the free list (LIFO: warm slots first).
+    #[inline]
+    fn free_slot(&mut self, i: u32) {
+        let slot = &mut self.slots[i as usize];
+        debug_assert!(slot.ev.is_none(), "freeing an occupied slot");
+        slot.next = self.free;
+        self.free = i;
+    }
+
+    /// Append slot `i` to a bucket's FIFO list.
+    #[inline]
+    fn list_push(head: &mut u32, tail: &mut u32, slots: &mut [Slot<E>], i: u32) {
+        if *head == NIL {
+            *head = i;
+        } else {
+            slots[*tail as usize].next = i;
+        }
+        *tail = i;
     }
 
     #[inline]
@@ -133,7 +235,9 @@ impl<E> EventQueue<E> {
     }
 
     /// The wheel drained: slide the window to the earliest overflow event
-    /// and sweep everything inside the new horizon into buckets.
+    /// and sweep everything inside the new horizon into buckets. With
+    /// intrusive lists a sweep retargets two indices per timestamp — the
+    /// events themselves never move.
     fn rebase(&mut self) {
         let &new_base = self
             .overflow
@@ -144,10 +248,11 @@ impl<E> EventQueue<E> {
         let window = std::mem::replace(&mut self.overflow, beyond);
         self.base_ms = new_base;
         self.cursor = 0;
-        for (ms, entries) in window {
+        for (ms, (h, t)) in window {
             let idx = (ms - new_base) as usize;
-            debug_assert!(self.wheel[idx].is_empty());
-            self.wheel[idx] = entries;
+            debug_assert_eq!(self.head[idx], NIL);
+            self.head[idx] = h;
+            self.tail[idx] = t;
             self.mark(idx);
         }
     }
@@ -159,12 +264,15 @@ impl<E> EventQueue<E> {
         self.len += 1;
         let ms = at.as_millis();
         debug_assert!(ms >= self.base_ms);
+        let i = self.alloc_slot(event);
         if ms - self.base_ms < WHEEL as u64 {
             let idx = (ms - self.base_ms) as usize;
-            self.wheel[idx].push_back(event);
+            let (head, tail) = (&mut self.head[idx], &mut self.tail[idx]);
+            Self::list_push(head, tail, &mut self.slots, i);
             self.mark(idx);
         } else {
-            self.overflow.entry(ms).or_default().push_back(event);
+            let (head, tail) = self.overflow.entry(ms).or_insert((NIL, NIL));
+            Self::list_push(head, tail, &mut self.slots, i);
         }
     }
 
@@ -181,11 +289,16 @@ impl<E> EventQueue<E> {
         loop {
             if let Some(idx) = self.next_occupied(self.cursor) {
                 self.cursor = idx;
-                let bucket = &mut self.wheel[idx];
-                let event = bucket.pop_front().expect("occupied bucket is empty");
-                if bucket.is_empty() {
+                let i = self.head[idx];
+                debug_assert_ne!(i, NIL, "occupied bucket is empty");
+                let slot = &mut self.slots[i as usize];
+                let event = slot.ev.take().expect("bucket slot is empty");
+                self.head[idx] = slot.next;
+                if self.head[idx] == NIL {
+                    self.tail[idx] = NIL;
                     self.unmark(idx);
                 }
+                self.free_slot(i);
                 self.len -= 1;
                 let at = SimTime::from_millis(self.base_ms + idx as u64);
                 debug_assert!(at >= self.now, "time went backwards");
@@ -444,6 +557,89 @@ mod tests {
                 assert_eq!(got, (SimTime(t), e));
             }
             assert!(reference.is_empty());
+        }
+    }
+
+    // -- slab-arena coverage (free-list reuse, FIFO under recycling) ------
+
+    #[test]
+    fn arena_reuses_slots_in_steady_state() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        // ping-pong one event: 1 fresh slot, then pure reuse
+        q.schedule_at(SimTime(0), 0);
+        for i in 1..1_000u32 {
+            let (_, e) = q.pop().unwrap();
+            q.schedule_in(SimTime(7), e + i);
+        }
+        let s = q.arena_stats();
+        assert_eq!(s.allocs, 1, "steady state must not grow the slab");
+        assert_eq!(s.reuses, 999);
+        assert!(s.reuse_ratio() > 0.99);
+    }
+
+    #[test]
+    fn free_list_reuse_never_reorders_fifo_ties() {
+        // Recycled slot indices arrive LIFO — lower indices can be handed
+        // out *after* higher ones. Schedule ties at one timestamp through
+        // a heavily recycled arena and require pure schedule order back.
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..64 {
+            q.schedule_at(SimTime(1), i);
+        }
+        while q.pop().is_some() {}
+        // the free list now holds 64 slots in LIFO order; these ties all
+        // recycle slots whose indices are NOT in schedule order
+        for i in 0..64 {
+            q.schedule_at(SimTime(2), 100 + i);
+        }
+        assert_eq!(q.arena_stats().allocs, 64);
+        assert_eq!(q.arena_stats().reuses, 64);
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (100..164).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn free_list_reuse_property_random_interleave() {
+        // Property: under random schedule/pop interleaving with many
+        // same-timestamp ties (maximizing recycling), pop order matches a
+        // (time, seq) reference heap exactly.
+        use crate::util::rng::Rng;
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let mut rng = Rng::new(0x51AB);
+        for _ in 0..10 {
+            let mut q: EventQueue<u32> = EventQueue::new();
+            let mut reference: BinaryHeap<Reverse<(u64, u64, u32)>> = BinaryHeap::new();
+            let mut ref_now = 0u64;
+            let mut seq = 0u64;
+            let mut pending = 0usize;
+            for step in 0..3_000u32 {
+                if pending == 0 || rng.below(3) > 0 {
+                    // only 4 distinct delays -> dense timestamp collisions
+                    let delay = 10 * rng.below(4);
+                    let at = ref_now + delay;
+                    q.schedule_at(SimTime(at), step);
+                    seq += 1;
+                    reference.push(Reverse((at.max(ref_now), seq, step)));
+                    pending += 1;
+                } else {
+                    let got = q.pop().unwrap();
+                    let Reverse((t, _, e)) = reference.pop().unwrap();
+                    ref_now = t;
+                    assert_eq!(got, (SimTime(t), e));
+                    pending -= 1;
+                }
+            }
+            while let Some(got) = q.pop() {
+                let Reverse((t, _, e)) = reference.pop().unwrap();
+                assert_eq!(got, (SimTime(t), e));
+            }
+            let s = q.arena_stats();
+            assert!(
+                s.reuses > s.allocs,
+                "interleaved workload must recycle: {s:?}"
+            );
         }
     }
 }

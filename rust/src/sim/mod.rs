@@ -3,5 +3,5 @@
 pub mod event;
 pub mod time;
 
-pub use event::EventQueue;
+pub use event::{ArenaStats, EventQueue};
 pub use time::SimTime;

@@ -39,6 +39,21 @@ pub fn env_f64_list(key: &str, default: &[f64]) -> Vec<f64> {
     }
 }
 
+/// Worker-thread count for the parallel sweep runner
+/// ([`crate::util::sweep`]): `HF_BENCH_THREADS`, defaulting to the
+/// machine's available parallelism. `1` selects the legacy serial path
+/// (the sweep runner then executes points in place, spawning nothing).
+/// `0` or a malformed value falls back to the default.
+pub fn bench_threads() -> usize {
+    let default = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    match env_usize("HF_BENCH_THREADS", default) {
+        0 => default,
+        n => n,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,5 +78,11 @@ mod tests {
         std::env::set_var("HF_TEST_LIST", "0.5, 2,4.25,");
         assert_eq!(env_f64_list("HF_TEST_LIST", &[]), vec![0.5, 2.0, 4.25]);
         std::env::remove_var("HF_TEST_LIST");
+    }
+
+    #[test]
+    fn bench_threads_is_positive() {
+        // whatever the environment, the sweep runner must get >= 1 worker
+        assert!(bench_threads() >= 1);
     }
 }

@@ -12,3 +12,4 @@ pub mod meta;
 pub mod ptest;
 pub mod rng;
 pub mod stats;
+pub mod sweep;

@@ -1,0 +1,141 @@
+//! Parallel sweep runner for the bench harnesses.
+//!
+//! Every sweep bench runs a list of *embarrassingly parallel* seeded
+//! points: each point is a full, self-contained simulation whose result
+//! depends only on its own config and seed, never on which worker ran it
+//! or in what order. [`run`] fans those points across OS threads
+//! (`std::thread::scope`, no work queue beyond an atomic cursor) and
+//! returns the results **in point order**, so a bench that formats its
+//! output after collection emits bytes identical to the serial run —
+//! `tests/sweep.rs` and the CI `cmp` step pin exactly that.
+//!
+//! The contract the closure must honor: no printing, no shared mutable
+//! state, no wall-clock-dependent output. Print from the collected
+//! results afterwards instead. Thread count comes from
+//! [`crate::util::env::bench_threads`] (`HF_BENCH_THREADS`; `1` = legacy
+//! serial path, which runs the points in place without spawning).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f` over every point with `HF_BENCH_THREADS` workers, returning
+/// results in point order. See [`run_on`].
+pub fn run<I, O, F>(points: Vec<I>, f: F) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(usize, I) -> O + Sync,
+{
+    run_on(crate::util::env::bench_threads(), points, f)
+}
+
+/// Run `f(index, point)` over every point on `threads` workers.
+///
+/// Results come back ordered by point index regardless of completion
+/// order. `threads <= 1` (or a single point) short-circuits to a plain
+/// serial loop on the calling thread — no spawn, no locks — which is the
+/// reference behavior the parallel path must reproduce byte-for-byte.
+///
+/// Work is claimed by an atomic cursor (striding would pin the slowest
+/// points to one worker; stealing by cursor keeps the load even). Each
+/// point is moved out of its slot exactly once; a worker panic
+/// propagates to the caller after the remaining workers finish their
+/// current points.
+pub fn run_on<I, O, F>(threads: usize, points: Vec<I>, f: F) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(usize, I) -> O + Sync,
+{
+    let n = points.len();
+    if threads <= 1 || n <= 1 {
+        return points
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| f(i, p))
+            .collect();
+    }
+    // One slot per point; each mutex is locked exactly once, by the
+    // worker that claimed the index (the lock is how an owned `I` moves
+    // across the thread boundary without `unsafe`).
+    let slots: Vec<Mutex<Option<I>>> =
+        points.into_iter().map(|p| Mutex::new(Some(p))).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(n);
+    let mut collected: Vec<(usize, O)> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let (slots, next, f) = (&slots, &next, &f);
+                s.spawn(move || {
+                    let mut local: Vec<(usize, O)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let item = slots[i]
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .expect("sweep point claimed twice");
+                        local.push((i, f(i, item)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            collected.extend(h.join().expect("sweep worker panicked"));
+        }
+    });
+    collected.sort_by_key(|&(i, _)| i);
+    debug_assert_eq!(collected.len(), n, "sweep lost or duplicated points");
+    collected.into_iter().map(|(_, o)| o).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_point_order() {
+        // later points finish first: ordering must still hold
+        let points: Vec<u64> = (0..16).collect();
+        let out = run_on(4, points, |i, p| {
+            std::thread::sleep(std::time::Duration::from_millis(16 - p));
+            i as u64 * 100 + p
+        });
+        assert_eq!(out, (0..16).map(|p| p * 100 + p).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let f = |i: usize, p: u64| -> u64 { (i as u64) ^ p.wrapping_mul(0x9E37) };
+        let serial = run_on(1, (0..33).collect(), f);
+        for threads in [2, 3, 8, 64] {
+            assert_eq!(run_on(threads, (0..33).collect(), f), serial);
+        }
+    }
+
+    #[test]
+    fn edge_cases_empty_and_single() {
+        let out: Vec<u32> = run_on(8, Vec::<u32>::new(), |_, p| p);
+        assert!(out.is_empty());
+        assert_eq!(run_on(8, vec![41u32], |_, p| p + 1), vec![42]);
+    }
+
+    #[test]
+    fn more_threads_than_points() {
+        assert_eq!(run_on(32, vec![1u32, 2, 3], |_, p| p * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn owned_non_clone_points_move_into_workers() {
+        // the runner must hand each owned point to exactly one worker
+        struct NoClone(String);
+        let points = vec![NoClone("a".into()), NoClone("b".into())];
+        let out = run_on(2, points, |_, p| p.0);
+        assert_eq!(out, vec!["a", "b"]);
+    }
+}

@@ -135,23 +135,38 @@ impl Dag {
     }
 
     /// Count of tasks per type name (the paper quotes stage sizes this way).
+    ///
+    /// Accumulates into a dense per-type table first so each name is
+    /// cloned once per type, not once per task (the per-task clone showed
+    /// up in the 16k-sim profile, EXPERIMENTS.md §Perf).
     pub fn count_by_type(&self) -> BTreeMap<String, usize> {
-        let mut m = BTreeMap::new();
+        let mut per_type = vec![0usize; self.types.len()];
         for t in &self.tasks {
-            *m.entry(self.types[t.ttype.0 as usize].name.clone())
-                .or_insert(0) += 1;
+            per_type[t.ttype.0 as usize] += 1;
         }
-        m
+        per_type
+            .into_iter()
+            .enumerate()
+            .filter(|&(_, n)| n > 0)
+            .map(|(i, n)| (self.types[i].name.clone(), n))
+            .collect()
     }
 
-    /// Total work (sum of durations) per type, in seconds.
+    /// Total work (sum of durations) per type, in seconds. Same dense
+    /// accumulation as [`Dag::count_by_type`]: one name clone per type.
     pub fn work_by_type(&self) -> BTreeMap<String, f64> {
-        let mut m = BTreeMap::new();
+        let mut per_type = vec![(0.0f64, 0usize); self.types.len()];
         for t in &self.tasks {
-            *m.entry(self.types[t.ttype.0 as usize].name.clone())
-                .or_insert(0.0) += t.duration.as_secs_f64();
+            let e = &mut per_type[t.ttype.0 as usize];
+            e.0 += t.duration.as_secs_f64();
+            e.1 += 1;
         }
-        m
+        per_type
+            .into_iter()
+            .enumerate()
+            .filter(|&(_, (_, n))| n > 0)
+            .map(|(i, (w, _))| (self.types[i].name.clone(), w))
+            .collect()
     }
 
     /// Critical-path length in seconds (longest dependency chain by
